@@ -1,0 +1,98 @@
+//! Embedded-engine demo: f32 vs int8, time-batching sweep, device
+//! projections — the paper's §4 story on one utterance set.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example embedded_demo
+//! ```
+
+use tracenorm::data::{Batcher, CorpusSpec, Dataset};
+use tracenorm::devicesim;
+use tracenorm::error::Result;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::GemmCounts;
+use tracenorm::runtime::Runtime;
+use tracenorm::train::{TrainOpts, Trainer};
+
+fn main() -> Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let data = Dataset::generate(CorpusSpec::standard(9), 96, 16, 24);
+
+    // quick low-rank model (the deployment-grade shape)
+    let artifact = "train_mini_partial_r250";
+    let spec = rt.manifest().artifact(artifact)?.clone();
+    let mut batcher = Batcher::new(&data.train, spec.batch.unwrap(), data.spec.feat_dim, 0);
+    let opts = TrainOpts { seed: 3, lr: 2e-3, lr_decay: 0.94, epochs: 6, quiet: false, ..Default::default() };
+    println!("training a rank-0.25 model for the demo...");
+    let mut t = Trainer::new(&rt, artifact, opts)?;
+    t.run(&mut batcher, None, None)?;
+
+    let dims = rt.manifest().dims("wsj_mini")?.clone();
+    println!("\n== precision comparison ==");
+    println!(
+        "{:>6} {:>10} {:>8} {:>10} {:>12}",
+        "mode", "model KB", "CER", "host RT-x", "ms/utt (AM)"
+    );
+    let mut int8_bd = Breakdown::default();
+    for precision in [Precision::F32, Precision::Int8] {
+        let engine = Engine::from_params(&dims, "partial", &t.params, precision, 4)?;
+        let mut bd = Breakdown::default();
+        let mut stats = tracenorm::decoder::ErrorStats::default();
+        for u in &data.test {
+            let (hyp, _) = engine.transcribe(&u.feats, &mut bd)?;
+            stats.push(&hyp, &u.text);
+        }
+        println!(
+            "{:>6} {:>10} {:>8.3} {:>10.1} {:>12.2}",
+            format!("{precision:?}"),
+            engine.model_bytes() / 1024,
+            stats.cer(),
+            bd.speedup_over_realtime(0.01),
+            bd.acoustic_total() * 1e3 / data.test.len() as f64,
+        );
+        if precision == Precision::Int8 {
+            int8_bd = bd;
+        }
+    }
+
+    println!("\n== time-batching sweep (non-recurrent GEMM batches across time) ==");
+    println!("{:>12} {:>12} {:>12}", "time_batch", "ms/utt (AM)", "1st-chunk ms");
+    for tb in [1usize, 2, 4, 8] {
+        let engine = Engine::from_params(&dims, "partial", &t.params, Precision::Int8, tb)?;
+        let mut bd = Breakdown::default();
+        let mut first_chunk = 0.0;
+        for u in &data.test {
+            let mut state = engine.new_state();
+            let t0 = std::time::Instant::now();
+            // feed exactly one block to measure first-output latency
+            let need = tb * dims.total_stride * dims.feat_dim;
+            let take = need.min(u.feats.len());
+            let _ = engine.stream(&mut state, &u.feats.data()[..take], &mut bd)?;
+            first_chunk += t0.elapsed().as_secs_f64();
+            let _ = engine.stream(&mut state, &u.feats.data()[take..], &mut bd)?;
+            let _ = engine.flush(&mut state, &mut bd)?;
+        }
+        println!(
+            "{:>12} {:>12.2} {:>12.3}",
+            tb,
+            bd.acoustic_total() * 1e3 / data.test.len() as f64,
+            first_chunk * 1e3 / data.test.len() as f64
+        );
+    }
+
+    println!("\n== device projections (int8, time_batch 4) ==");
+    let engine = Engine::from_params(&dims, "partial", &t.params, Precision::Int8, 4)?;
+    let counts = GemmCounts {
+        macs: int8_bd.macs,
+        bytes_read: engine.model_bytes() as u64 * int8_bd.frames / dims.total_stride as u64 / 4,
+        bytes_written: 0,
+    };
+    let host = devicesim::host_device(50.0, 10.0);
+    println!("{:>16} {:>10} {:>12}", "device", "RT-x", "bound");
+    for dev in devicesim::ALL_EMBEDDED {
+        let secs = dev.project_from_host(&counts, &host, int8_bd.acoustic_total());
+        let rtx = int8_bd.frames as f64 * 0.01 / secs;
+        let bound = if dev.memory_bound(&counts) { "memory" } else { "compute" };
+        println!("{:>16} {:>10.2} {:>12}", dev.name, rtx, bound);
+    }
+    Ok(())
+}

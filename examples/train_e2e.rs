@@ -1,0 +1,135 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer system on a real small workload:
+//! * stage 1 — trace-norm-regularized factored training via the AOT PJRT
+//!   train step (L1 Pallas kernels inside);
+//! * transition — Rust-side SVD rank selection + balanced warmstart;
+//! * stage 2 — low-rank training to convergence, loss/CER logged per epoch;
+//! * deployment — int8 quantization + the farm-kernel embedded engine,
+//!   verified against the PJRT eval path, with device projections.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_e2e
+//! ```
+
+use std::io::Write;
+
+use tracenorm::data::{Batcher, CorpusSpec, Dataset};
+use tracenorm::devicesim;
+use tracenorm::error::Result;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::GemmCounts;
+use tracenorm::runtime::Runtime;
+use tracenorm::train::{
+    eval_name, frac_tag, two_stage, Evaluator, Stage2Lr, TrainOpts,
+};
+
+fn main() -> Result<()> {
+    let t_start = std::time::Instant::now();
+    let rt = Runtime::open("artifacts")?;
+    let data = Dataset::generate(CorpusSpec::standard(2026), 192, 48, 48);
+    println!(
+        "e2e: corpus {}+{}+{} utts, model wsj_mini (DS2-style, 3 GRUs)",
+        data.train.len(),
+        data.dev.len(),
+        data.test.len()
+    );
+
+    let stage1_artifact = "train_mini_partial_full";
+    let spec = rt.manifest().artifact(stage1_artifact)?.clone();
+    let mut batcher = Batcher::new(&data.train, spec.batch.unwrap(), data.spec.feat_dim, 1);
+    let opts = TrainOpts {
+        seed: 7,
+        lr: 2e-3,
+        lr_decay: 0.94,
+        epochs: 5, // stage 1 (overridden by two_stage transition)
+        lam_rec: 3e-4,
+        lam_nonrec: 3e-4,
+        quiet: false,
+    };
+
+    println!("\n== two-stage training (transition at epoch 5 of 10) ==");
+    let result = two_stage(
+        &rt,
+        &mut batcher,
+        &data.dev,
+        stage1_artifact,
+        "train_mini_partial",
+        0.9,
+        5,
+        10,
+        opts,
+        Stage2Lr::Continuation,
+    )?;
+    println!(
+        "\nselected rank fraction {} -> {} params (stage 1 had {})",
+        result.rank_frac,
+        result.stage2.params.num_scalars(),
+        result.stage1_params.num_scalars()
+    );
+
+    // loss/CER curve -> results/e2e_curve.csv
+    std::fs::create_dir_all("results")?;
+    let mut csv = std::fs::File::create("results/e2e_curve.csv")?;
+    writeln!(csv, "epoch,stage,mean_loss,dev_cer")?;
+    for log in result.stage1_history.iter() {
+        writeln!(
+            csv,
+            "{},stage1,{:.5},{}",
+            log.epoch,
+            log.mean_loss,
+            log.dev_cer.map(|c| format!("{c:.4}")).unwrap_or_default()
+        )?;
+    }
+    for log in result.stage2.history.iter() {
+        writeln!(
+            csv,
+            "{},stage2,{:.5},{}",
+            log.epoch + result.stage1_history.len(),
+            log.mean_loss,
+            log.dev_cer.map(|c| format!("{c:.4}")).unwrap_or_default()
+        )?;
+    }
+    println!("wrote results/e2e_curve.csv");
+
+    // final test-set accuracy through the PJRT path
+    let eval = Evaluator::new(
+        &rt,
+        &eval_name(&format!("train_mini_partial_{}", frac_tag(result.rank_frac))),
+    )?;
+    let stats = eval.greedy_cer(&result.stage2.params, &data.test)?;
+    println!("\ntest CER {:.3}  WER {:.3}", stats.cer(), stats.wer());
+
+    // deployment: int8 embedded engine with farm kernels
+    println!("\n== embedded deployment (int8, farm kernels) ==");
+    let dims = rt.manifest().dims("wsj_mini")?.clone();
+    let engine =
+        Engine::from_params(&dims, "partial", &result.stage2.params, Precision::Int8, 4)?;
+    let mut bd = Breakdown::default();
+    let mut stats8 = tracenorm::decoder::ErrorStats::default();
+    for u in &data.test {
+        let (hyp, _) = engine.transcribe(&u.feats, &mut bd)?;
+        stats8.push(&hyp, &u.text);
+    }
+    println!(
+        "int8 engine: model {} KB, test CER {:.3} (f32 path {:.3}), host {:.1}x realtime",
+        engine.model_bytes() / 1024,
+        stats8.cer(),
+        stats.cer(),
+        bd.speedup_over_realtime(0.01)
+    );
+    let counts = GemmCounts {
+        macs: bd.macs,
+        bytes_read: engine.model_bytes() as u64 * bd.frames / dims.total_stride as u64 / 4,
+        bytes_written: 0,
+    };
+    let host = devicesim::host_device(50.0, 10.0);
+    for dev in devicesim::ALL_EMBEDDED {
+        let secs = dev.project_from_host(&counts, &host, bd.acoustic_total());
+        let rtx = bd.frames as f64 * 0.01 / secs;
+        println!("  projected {:<16} {:>6.2}x realtime", dev.name, rtx);
+    }
+
+    println!("\ne2e driver completed in {:.0}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

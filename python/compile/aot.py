@@ -1,0 +1,398 @@
+"""AOT lowering driver: every model variant -> artifacts/*.hlo.txt + manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+Rust request path.  Interchange is **HLO text** — the image's
+xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction
+ids), while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.json) is the L2<->L3 contract: for every
+artifact it records the exact input/output ordering (flat, name-sorted
+parameters first), shapes and dtypes, so the Rust runtime can marshal
+literals without any knowledge of JAX pytrees.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (
+    ALPHABET,
+    BASE_CONFIGS,
+    EVAL_BATCH,
+    RANK_LADDER,
+    SCHEME_JOINT,
+    SCHEME_PARTIAL,
+    SCHEME_SPLIT,
+    SCHEME_UNFACTORED,
+    STREAM_CHUNKS,
+    TRAIN_BATCH,
+    BatchSpec,
+    ModelConfig,
+)
+
+F32 = jnp.float32
+S32 = jnp.int32
+S8 = jnp.int8
+
+_DTYPE_NAMES = {F32: "f32", S32: "s32", S8: "s8"}
+
+
+def _spec(shape: Sequence[int], dt=F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class IoSpec:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+
+    def as_json(self) -> Dict:
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: List[Dict] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(
+        self,
+        name: str,
+        kind: str,
+        cfg: ModelConfig,
+        fn,
+        in_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+        out_specs: List[IoSpec],
+        extra: Optional[Dict] = None,
+    ) -> None:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "config": cfg.name,
+            "scheme": cfg.scheme,
+            "rank_frac": cfg.rank_frac,
+            "use_masks": cfg.use_masks,
+            "inputs": [
+                IoSpec(n, tuple(s.shape), _dt_name(s.dtype)).as_json()
+                for n, s in in_specs
+            ],
+            "outputs": [o.as_json() for o in out_specs],
+        }
+        if extra:
+            entry.update(extra)
+        self.entries.append(entry)
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s", flush=True)
+
+
+def _dt_name(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "int8": "s8"}[jnp.dtype(dt).name]
+
+
+# --------------------------------------------------------------------------
+# Per-kind artifact builders.
+# --------------------------------------------------------------------------
+
+
+def build_train(w: ArtifactWriter, cfg: ModelConfig, bs: BatchSpec, name: str) -> None:
+    shapes = M.param_shapes(cfg)
+    pnames = sorted(shapes)
+    mnames = M.mask_names(cfg)
+
+    in_specs: List[Tuple[str, jax.ShapeDtypeStruct]] = []
+    in_specs += [(n, _spec(shapes[n])) for n in pnames]
+    in_specs += [(f"mom:{n}", _spec(shapes[n])) for n in pnames]
+    in_specs += [
+        (mn, _spec(shapes[mn.removesuffix("_mask") + "_w"])) for mn in mnames
+    ]
+    in_specs += [
+        ("feats", _spec((bs.batch, bs.max_frames, cfg.feat_dim))),
+        ("frame_lens", _spec((bs.batch,), S32)),
+        ("labels", _spec((bs.batch, bs.max_label), S32)),
+        ("label_lens", _spec((bs.batch,), S32)),
+        ("lr", _spec(())),
+        ("lam_rec", _spec(())),
+        ("lam_nonrec", _spec(())),
+    ]
+
+    np_, nm = len(pnames), len(mnames)
+
+    def fn(*args):
+        params = dict(zip(pnames, args[:np_]))
+        mom = dict(zip(pnames, args[np_ : 2 * np_]))
+        params.update(dict(zip(mnames, args[2 * np_ : 2 * np_ + nm])))
+        feats, fl, labels, ll, lr, lrec, lnon = args[2 * np_ + nm :]
+        p2, m2, met = M.train_step(cfg, params, mom, feats, fl, labels, ll, lr, lrec, lnon)
+        return (
+            tuple(p2[n] for n in pnames)
+            + tuple(m2[n] for n in pnames)
+            + (met["loss"], met["ctc"], met["penalty"], met["grad_norm"])
+        )
+
+    out_specs = (
+        [IoSpec(n, shapes[n], "f32") for n in pnames]
+        + [IoSpec(f"mom:{n}", shapes[n], "f32") for n in pnames]
+        + [
+            IoSpec("loss", (), "f32"),
+            IoSpec("ctc", (), "f32"),
+            IoSpec("penalty", (), "f32"),
+            IoSpec("grad_norm", (), "f32"),
+        ]
+    )
+    w.add(
+        name,
+        "train",
+        cfg,
+        fn,
+        in_specs,
+        out_specs,
+        extra={
+            "param_names": pnames,
+            "mask_names": mnames,
+            "batch": dataclasses.asdict(bs),
+        },
+    )
+
+
+def build_eval(w: ArtifactWriter, cfg: ModelConfig, bs: BatchSpec, name: str) -> None:
+    shapes = M.param_shapes(cfg)
+    pnames = sorted(shapes)
+    tout = bs.max_frames // cfg.total_stride
+    in_specs = [(n, _spec(shapes[n])) for n in pnames] + [
+        ("feats", _spec((bs.batch, bs.max_frames, cfg.feat_dim))),
+        ("frame_lens", _spec((bs.batch,), S32)),
+    ]
+
+    def fn(*args):
+        params = dict(zip(pnames, args[: len(pnames)]))
+        feats, fl = args[len(pnames) :]
+        logp, out_lens = M.forward(cfg, params, feats, fl)
+        return (logp, out_lens)
+
+    out_specs = [
+        IoSpec("logprobs", (bs.batch, tout, cfg.vocab), "f32"),
+        IoSpec("out_lens", (bs.batch,), "s32"),
+    ]
+    w.add(
+        name,
+        "eval",
+        cfg,
+        fn,
+        in_specs,
+        out_specs,
+        extra={"param_names": pnames, "batch": dataclasses.asdict(bs)},
+    )
+
+
+def build_stream(
+    w: ArtifactWriter, cfg: ModelConfig, chunk: int, name: str, int8: bool = False
+) -> None:
+    tout = chunk // cfg.total_stride
+    assert tout >= 1, (chunk, cfg.total_stride)
+    if int8:
+        shapes = dict(M.param_shapes(cfg))
+        qnames = M.quantized_param_names(cfg)
+        wire: Dict[str, Tuple[Tuple[int, ...], object]] = {}
+        for n, s in shapes.items():
+            if n in qnames:
+                wire[f"{n}_q"] = (s, S8)
+                wire[f"{n}_scale"] = ((), F32)
+            else:
+                wire[n] = (s, F32)
+        pnames = sorted(wire)
+        in_specs = [(n, _spec(*wire[n])) for n in pnames]
+    else:
+        shapes = M.param_shapes(cfg)
+        pnames = sorted(shapes)
+        in_specs = [(n, _spec(shapes[n])) for n in pnames]
+    in_specs += [(f"h{i}", _spec((1, h))) for i, h in enumerate(cfg.gru_dims)]
+    in_specs += [("chunk", _spec((1, chunk, cfg.feat_dim)))]
+    ngru = len(cfg.gru_dims)
+
+    def fn(*args):
+        params = dict(zip(pnames, args[: len(pnames)]))
+        hs = list(args[len(pnames) : len(pnames) + ngru])
+        chunk_x = args[len(pnames) + ngru]
+        step = M.stream_step_int8 if int8 else M.stream_step
+        new_hs, logp = step(cfg, params, hs, chunk_x)
+        return tuple(new_hs) + (logp,)
+
+    out_specs = [
+        IoSpec(f"h{i}", (1, h), "f32") for i, h in enumerate(cfg.gru_dims)
+    ] + [IoSpec("logprobs", (1, tout, cfg.vocab), "f32")]
+    w.add(
+        name,
+        "stream_int8" if int8 else "stream",
+        cfg,
+        fn,
+        in_specs,
+        out_specs,
+        extra={"param_names": pnames, "chunk": chunk},
+    )
+
+
+# --------------------------------------------------------------------------
+# The artifact set.
+# --------------------------------------------------------------------------
+
+
+def variant(cfg: ModelConfig, scheme: str, frac: Optional[float] = None, masks=False) -> ModelConfig:
+    return dataclasses.replace(cfg, scheme=scheme, rank_frac=frac, use_masks=masks)
+
+
+def frac_tag(frac: Optional[float]) -> str:
+    return "full" if frac is None else f"r{int(round(frac * 1000)):03d}"
+
+
+def build_all(out_dir: str, include_paper: bool) -> None:
+    w = ArtifactWriter(out_dir)
+    mini = BASE_CONFIGS["wsj_mini"]
+    fast = BASE_CONFIGS["wsj_mini_fast"]
+
+    print("[aot] train artifacts")
+    build_train(w, variant(mini, SCHEME_UNFACTORED), TRAIN_BATCH, "train_mini_unfact")
+    build_train(
+        w, variant(mini, SCHEME_UNFACTORED, masks=True), TRAIN_BATCH, "train_mini_unfact_masked"
+    )
+    build_train(w, variant(mini, SCHEME_PARTIAL), TRAIN_BATCH, "train_mini_partial_full")
+    for frac in RANK_LADDER:
+        build_train(
+            w,
+            variant(mini, SCHEME_PARTIAL, frac),
+            TRAIN_BATCH,
+            f"train_mini_partial_{frac_tag(frac)}",
+        )
+    build_train(w, variant(mini, SCHEME_SPLIT), TRAIN_BATCH, "train_mini_split_full")
+    for frac in (0.25, 0.5):
+        build_train(
+            w,
+            variant(mini, SCHEME_SPLIT, frac),
+            TRAIN_BATCH,
+            f"train_mini_split_{frac_tag(frac)}",
+        )
+    build_train(w, variant(mini, SCHEME_JOINT), TRAIN_BATCH, "train_mini_joint_full")
+    build_train(w, variant(fast, SCHEME_PARTIAL), TRAIN_BATCH, "train_fast_partial_full")
+    for frac in (0.25, 0.5):
+        build_train(
+            w,
+            variant(fast, SCHEME_PARTIAL, frac),
+            TRAIN_BATCH,
+            f"train_fast_partial_{frac_tag(frac)}",
+        )
+    # width-scaled dense baselines (Fig. 8)
+    for scaled_name in ("wsj_mini_s75", "wsj_mini_s50"):
+        scaled = BASE_CONFIGS[scaled_name]
+        tag = scaled_name.rsplit("_", 1)[1]
+        build_train(
+            w, variant(scaled, SCHEME_UNFACTORED), TRAIN_BATCH, f"train_{tag}_unfact"
+        )
+
+    print("[aot] eval artifacts")
+    build_eval(w, variant(mini, SCHEME_UNFACTORED), EVAL_BATCH, "eval_mini_unfact")
+    build_eval(w, variant(mini, SCHEME_PARTIAL), EVAL_BATCH, "eval_mini_partial_full")
+    for frac in RANK_LADDER:
+        build_eval(
+            w,
+            variant(mini, SCHEME_PARTIAL, frac),
+            EVAL_BATCH,
+            f"eval_mini_partial_{frac_tag(frac)}",
+        )
+    build_eval(w, variant(mini, SCHEME_SPLIT), EVAL_BATCH, "eval_mini_split_full")
+    for frac in (0.25, 0.5):
+        build_eval(
+            w,
+            variant(mini, SCHEME_SPLIT, frac),
+            EVAL_BATCH,
+            f"eval_mini_split_{frac_tag(frac)}",
+        )
+    build_eval(w, variant(mini, SCHEME_JOINT), EVAL_BATCH, "eval_mini_joint_full")
+    build_eval(w, variant(fast, SCHEME_PARTIAL), EVAL_BATCH, "eval_fast_partial_full")
+    for frac in (0.25, 0.5):
+        build_eval(
+            w,
+            variant(fast, SCHEME_PARTIAL, frac),
+            EVAL_BATCH,
+            f"eval_fast_partial_{frac_tag(frac)}",
+        )
+    for scaled_name in ("wsj_mini_s75", "wsj_mini_s50"):
+        scaled = BASE_CONFIGS[scaled_name]
+        tag = scaled_name.rsplit("_", 1)[1]
+        build_eval(
+            w, variant(scaled, SCHEME_UNFACTORED), EVAL_BATCH, f"eval_{tag}_unfact"
+        )
+
+    print("[aot] stream artifacts")
+    for chunk in STREAM_CHUNKS:
+        build_stream(
+            w, variant(mini, SCHEME_PARTIAL, 0.25), chunk, f"stream_mini_partial_r250_c{chunk}"
+        )
+    build_stream(w, variant(mini, SCHEME_UNFACTORED), 8, "stream_mini_unfact_c8")
+    build_stream(
+        w, variant(mini, SCHEME_PARTIAL, 0.25), 8, "stream_mini_partial_r250_c8_int8", int8=True
+    )
+
+    if include_paper:
+        print("[aot] paper-dimension shape check (eval only)")
+        build_eval(
+            w, variant(BASE_CONFIGS["paper"], SCHEME_PARTIAL, 0.25), EVAL_BATCH, "eval_paper_partial_r250"
+        )
+
+    manifest = {
+        "version": 1,
+        "alphabet": ALPHABET,
+        "configs": {
+            name: {
+                "feat_dim": c.feat_dim,
+                "conv": [{"context": s.context, "dim": s.dim} for s in c.conv],
+                "gru_dims": list(c.gru_dims),
+                "fc_dim": c.fc_dim,
+                "vocab": c.vocab,
+                "total_stride": c.total_stride,
+            }
+            for name, c in BASE_CONFIGS.items()
+        },
+        "rank_ladder": list(RANK_LADDER),
+        "artifacts": w.entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(w.entries)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--paper", action="store_true", help="also lower paper-dim eval")
+    args = ap.parse_args()
+    build_all(args.out, args.paper)
+
+
+if __name__ == "__main__":
+    main()

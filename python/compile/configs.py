@@ -1,0 +1,144 @@
+"""Model configurations shared by the L2 graph and (via manifest.json) L3.
+
+The paper's baseline is a forward-only Deep Speech 2: conv frontend, three
+forward GRU layers with *growing* dimensions (App. B.1: 768/1024/1280, FC
+1536), CTC loss over characters.  ``wsj_mini`` scales every dimension by
+1/8 so the whole experiment suite runs on a single CPU core; ``paper``
+keeps the published dimensions (used for shape checks and kernel-schedule
+estimates, not for training on this box).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+# CTC alphabet: blank + space + apostrophe + a..z  (29 symbols).
+BLANK = 0
+ALPHABET = ["<b>", " ", "'"] + [chr(ord("a") + i) for i in range(26)]
+VOCAB = len(ALPHABET)
+
+# Weight-group names.  The paper's partially-joint factorization (App. B.2)
+# concatenates the 3 recurrent matrices of each GRU into one ``rec`` matrix
+# (3H, H) and the 3 non-recurrent ones into one ``nonrec`` matrix (3H, Din).
+REC = "rec"
+NONREC = "nonrec"
+
+SCHEME_UNFACTORED = "unfactored"
+SCHEME_JOINT = "joint"  # completely joint: one (3H, Din+H) matrix per GRU
+SCHEME_PARTIAL = "partial"  # paper's choice: rec and nonrec factored separately
+SCHEME_SPLIT = "split"  # completely split: 6 matrices per GRU factored alone
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One frontend layer: stack ``context`` consecutive frames (stride =
+    context, non-overlapping) and project to ``dim`` with ReLU.
+
+    Non-overlapping stacking keeps streaming chunk-exact: a chunk whose
+    length is a multiple of the total stride needs no cross-chunk context.
+    """
+
+    context: int
+    dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    feat_dim: int
+    conv: Tuple[ConvSpec, ...]
+    gru_dims: Tuple[int, ...]
+    fc_dim: int
+    vocab: int = VOCAB
+    # Low-rank scheme + per-group ranks. rank None => full min(m, n).
+    scheme: str = SCHEME_UNFACTORED
+    # rank fraction of min(m, n), quantized to a multiple of 4 per group.
+    rank_frac: Optional[float] = None
+    use_masks: bool = False  # weight-mask inputs (sparsity baseline, Fig 8)
+
+    @property
+    def total_stride(self) -> int:
+        s = 1
+        for c in self.conv:
+            s *= c.context
+        return s
+
+    def gru_input_dim(self, layer: int) -> int:
+        return self.conv[-1].dim if layer == 0 else self.gru_dims[layer - 1]
+
+    def group_shape(self, name: str) -> Tuple[int, int]:
+        """Full (unfactored) shape of a named weight group."""
+        kind, idx = name.rsplit("_", 1)
+        if kind in ("rec", "nonrec", "grujoint"):
+            i = int(idx)
+            h = self.gru_dims[i]
+            din = self.gru_input_dim(i)
+            if kind == "rec":
+                return (3 * h, h)
+            if kind == "nonrec":
+                return (3 * h, din)
+            return (3 * h, din + h)
+        raise ValueError(name)
+
+    def rank_of(self, full: Tuple[int, int]) -> int:
+        m, n = full
+        r_full = min(m, n)
+        if self.rank_frac is None:
+            return r_full
+        r = max(4, int(round(self.rank_frac * r_full / 4)) * 4)
+        return min(r, r_full)
+
+
+def _mk(name, feat, conv_dims, gru_dims, fc_dim, **kw) -> ModelConfig:
+    conv = tuple(ConvSpec(context=2, dim=d) for d in conv_dims)
+    return ModelConfig(
+        name=name, feat_dim=feat, conv=conv, gru_dims=tuple(gru_dims), fc_dim=fc_dim, **kw
+    )
+
+
+# --- the two base configs -------------------------------------------------
+
+# 1/8-scale analog of the paper's WSJ model (App. B.1 dims / 8).
+WSJ_MINI = _mk("wsj_mini", 40, (64, 96), (96, 128, 160), 192)
+
+# "fast" variant = tier-3 / Gram-CTC analog (App. B.4): one extra stride-2
+# stage (wider to compensate), halving GRU sequence length.
+WSJ_MINI_FAST = _mk("wsj_mini_fast", 40, (64, 96, 128), (96, 128, 160), 192)
+
+# Width-scaled dense baselines for Fig. 8 (the paper compares low-rank
+# factorization against simply shrinking the GRU dimension).
+WSJ_MINI_S75 = _mk("wsj_mini_s75", 40, (64, 96), (72, 96, 120), 144)
+WSJ_MINI_S50 = _mk("wsj_mini_s50", 40, (64, 96), (48, 64, 80), 96)
+
+# Published dimensions (shape-check / schedule-estimate only on this box).
+PAPER = _mk("paper", 161, (512, 512), (768, 1024, 1280), 1536)
+
+BASE_CONFIGS = {
+    c.name: c for c in [WSJ_MINI, WSJ_MINI_FAST, WSJ_MINI_S75, WSJ_MINI_S50, PAPER]
+}
+
+# --- training batch geometry (static shapes for AOT) ----------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    batch: int
+    max_frames: int  # raw feature frames (pre-frontend)
+    max_label: int
+
+    def out_frames(self, cfg: ModelConfig) -> int:
+        return self.max_frames // cfg.total_stride
+
+
+# max_label is bounded by the post-frontend sequence length: stride 4 =>
+# 32 GRU steps for 128 raw frames, and CTC needs >= label_len + repeats
+# steps (stride-8 "fast" config: 16 steps), so 12 is the safe ceiling.
+TRAIN_BATCH = BatchSpec(batch=8, max_frames=128, max_label=12)
+EVAL_BATCH = BatchSpec(batch=8, max_frames=128, max_label=12)
+STREAM_CHUNKS = (4, 8, 16)  # raw frames per streaming chunk (multiples of stride)
+
+# Stage-2 rank ladder (fractions of full rank per group). aot.py lowers one
+# train+eval artifact per rung; the Rust warmstart picks the smallest rung
+# whose rank >= the explained-variance rank (DESIGN.md §8).
+RANK_LADDER = (0.125, 0.25, 0.375, 0.5, 0.75)

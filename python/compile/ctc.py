@@ -1,0 +1,114 @@
+"""Connectionist Temporal Classification loss (log domain, lax.scan).
+
+Stand-alone, mask-correct implementation supporting padded batches with
+variable frame and label lengths — the substrate the paper's training
+pipeline depends on (Deep Speech 2 is a CTC model).
+
+Conventions: blank index 0; ``labels`` padded with 0 beyond
+``label_lens``; extended label sequence ext = [b, l1, b, l2, ..., lL, b] of
+static length S = 2·Lmax + 1.
+
+Tested against brute-force alignment enumeration in
+python/tests/test_ctc.py.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1.0e30
+
+
+def extend_labels(labels: jnp.ndarray) -> jnp.ndarray:
+    """(B, L) -> (B, 2L+1) blank-interleaved extended labels."""
+    b, l = labels.shape
+    ext = jnp.zeros((b, 2 * l + 1), dtype=labels.dtype)
+    return ext.at[:, 1::2].set(labels)
+
+
+def ctc_loss(
+    logprobs: jnp.ndarray,
+    frame_lens: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_lens: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-utterance negative log likelihood.
+
+    logprobs: (B, T, V) log-softmax outputs; frame_lens: (B,) valid frame
+    counts; labels: (B, L) with 0-padding; label_lens: (B,).
+    Returns nll: (B,).
+    """
+    b, t, v = logprobs.shape
+    l = labels.shape[1]
+    s = 2 * l + 1
+
+    ext = extend_labels(labels)  # (B, S)
+    # Positions where a skip transition (s-2 -> s) is allowed: ext[s] is a
+    # real label and differs from ext[s-2].
+    ext_shift2 = jnp.concatenate(
+        [jnp.full((b, 2), -1, dtype=ext.dtype), ext[:, :-2]], axis=1
+    )
+    can_skip = (ext != 0) & (ext != ext_shift2)  # (B, S)
+
+    # alpha_0
+    lp0 = logprobs[:, 0, :]  # (B, V)
+    alpha0 = jnp.full((b, s), NEG_INF)
+    alpha0 = alpha0.at[:, 0].set(jnp.take_along_axis(lp0, ext[:, 0:1], axis=1)[:, 0])
+    alpha0 = alpha0.at[:, 1].set(
+        jnp.where(
+            label_lens > 0,
+            jnp.take_along_axis(lp0, ext[:, 1:2], axis=1)[:, 0],
+            NEG_INF,
+        )
+    )
+
+    def step(alpha, inputs):
+        lp_t, t_idx = inputs  # lp_t: (B, V)
+        prev1 = jnp.concatenate([jnp.full((b, 1), NEG_INF), alpha[:, :-1]], axis=1)
+        prev2 = jnp.concatenate([jnp.full((b, 2), NEG_INF), alpha[:, :-2]], axis=1)
+        prev2 = jnp.where(can_skip, prev2, NEG_INF)
+        stacked = jnp.stack([alpha, prev1, prev2], axis=0)
+        merged = jax.scipy.special.logsumexp(stacked, axis=0)
+        lp_ext = jnp.take_along_axis(lp_t, ext, axis=1)  # (B, S)
+        new_alpha = merged + lp_ext
+        # Frames at/after frame_lens are padding: carry alpha unchanged.
+        active = (t_idx < frame_lens)[:, None]
+        new_alpha = jnp.where(active, new_alpha, alpha)
+        return new_alpha, None
+
+    lps = logprobs.transpose(1, 0, 2)[1:]  # (T-1, B, V)
+    t_ids = jnp.arange(1, t)
+    alpha_last, _ = lax.scan(step, alpha0, (lps, t_ids))
+
+    # Likelihood mass ends at ext positions 2*label_len (final blank) and
+    # 2*label_len - 1 (final label).
+    end = 2 * label_lens  # (B,)
+    a_end = jnp.take_along_axis(alpha_last, end[:, None], axis=1)[:, 0]
+    end_m1 = jnp.maximum(end - 1, 0)
+    a_end_m1 = jnp.where(
+        label_lens > 0,
+        jnp.take_along_axis(alpha_last, end_m1[:, None], axis=1)[:, 0],
+        NEG_INF,
+    )
+    ll = jnp.logaddexp(a_end, a_end_m1)
+    return -ll
+
+
+def ctc_loss_mean(
+    logprobs: jnp.ndarray,
+    frame_lens: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_lens: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(mean per-character nll, per-utterance nll) — the training loss.
+
+    Normalizing by label length keeps the loss scale comparable across the
+    synthetic corpus's variable utterance lengths (cf. DS2 §3).
+    """
+    nll = ctc_loss(logprobs, frame_lens, labels, label_lens)
+    denom = jnp.maximum(label_lens.astype(jnp.float32), 1.0)
+    return jnp.mean(nll / denom), nll

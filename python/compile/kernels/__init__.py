@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+Public surface:
+  matmul_t       y = x @ W.T                (tiled Pallas GEMM)
+  lowrank_apply  y = x @ (U V).T            (factored GEMM, the paper's §3 op)
+  gru_gates      fused GRU gate nonlinearity (paper eq. (10))
+  int8_gemm      quantized GEMM              (TPU model of the §4 farm kernel)
+  ref            pure-jnp oracles for all of the above
+"""
+
+from .matmul import matmul_t, lowrank_apply
+from .gru_gates import gru_gates
+from .int8_gemm import int8_gemm
+from . import ref
+
+__all__ = ["matmul_t", "lowrank_apply", "gru_gates", "int8_gemm", "ref"]

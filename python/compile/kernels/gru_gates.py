@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused GRU gate nonlinearity (paper eq. (10)).
+
+After the two GEMMs of a GRU step (non-recurrent ``gx`` — batchable across
+time — and recurrent ``gh`` — strictly sequential), the remaining work is
+elementwise: two sigmoids, a tanh and the convex combination.  Fusing them
+into one kernel means the (B, 3H) gate pre-activations are read from VMEM
+exactly once and ``h`` is updated in a single pass — on a real TPU this is
+a VPU-only kernel with zero HBM round-trips for intermediates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gru_gates_kernel(gx_ref, gh_ref, h_ref, o_ref):
+    """Single-block fused gate computation.
+
+    Blocks are (bm, 3H) / (bm, H): the hidden dimension is kept whole so
+    the z/r/h~ split is static slicing inside the kernel.
+    """
+    h = h_ref[...]
+    hdim = h.shape[-1]
+    gx = gx_ref[...]
+    gh = gh_ref[...]
+    z = jax.nn.sigmoid(gx[:, :hdim] + gh[:, :hdim])
+    r = jax.nn.sigmoid(gx[:, hdim : 2 * hdim] + gh[:, hdim : 2 * hdim])
+    htl = jnp.tanh(gx[:, 2 * hdim :] + r * gh[:, 2 * hdim :])
+    o_ref[...] = (1.0 - z) * h + z * htl
+
+
+def _gru_gates_raw(
+    gx: jnp.ndarray, gh: jnp.ndarray, h: jnp.ndarray, *, bm: int = 8
+) -> jnp.ndarray:
+    """Fused ``h' = GRUGates(gx, gh, h)``.
+
+    gx, gh: (B, 3H); h: (B, H) -> h': (B, H).  The batch dimension is
+    gridded in blocks of ``bm`` rows; H stays whole (it is ≤ 1280 even at
+    paper scale, i.e. ≤ 15 KB of VMEM per operand row block).
+    """
+    b, hdim = h.shape
+    assert gx.shape == (b, 3 * hdim) and gh.shape == (b, 3 * hdim), (
+        gx.shape,
+        gh.shape,
+        h.shape,
+    )
+    bm = min(bm, b)
+    if b % bm != 0:
+        pad = (-b) % bm
+        gx = jnp.pad(gx, ((0, pad), (0, 0)))
+        gh = jnp.pad(gh, ((0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+    bp = h.shape[0]
+    out = pl.pallas_call(
+        _gru_gates_kernel,
+        grid=(bp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, 3 * hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 3 * hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, hdim), jnp.float32),
+        interpret=True,
+    )(gx, gh, h)
+    return out[:b]
+
+
+# pallas_call lacks an AD rule for this kernel shape, so the backward pass
+# is derived from the pure-jnp oracle (mathematically identical, and the
+# gate residuals are recomputed rather than stored — rematerialization is
+# the right trade for a (B, 3H) elementwise op).
+@jax.custom_vjp
+def gru_gates(gx: jnp.ndarray, gh: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Fused ``h' = GRUGates(gx, gh, h)`` (Pallas kernel, differentiable)."""
+    return _gru_gates_raw(gx, gh, h)
+
+
+def _gru_gates_fwd(gx, gh, h):
+    return _gru_gates_raw(gx, gh, h), (gx, gh, h)
+
+
+def _gru_gates_bwd(res, dh_out):
+    from . import ref
+
+    _, vjp = jax.vjp(ref.gru_gates_ref, *res)
+    return vjp(dh_out)
+
+
+gru_gates.defvjp(_gru_gates_fwd, _gru_gates_bwd)

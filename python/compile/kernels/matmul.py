@@ -1,0 +1,149 @@
+"""L1 Pallas kernels: tiled transposed matmul and the fused low-rank apply.
+
+These are the GEMM hot spots of the paper's acoustic model.  The paper's
+farm kernels solve the *small-batch* GEMM problem on ARM NEON; the TPU
+rethink here (see DESIGN.md §Hardware-Adaptation) expresses the same
+HBM↔VMEM data movement with Pallas BlockSpecs:
+
+  * the activation panel ``x`` (batch ≤ 8 rows in the streaming regime) is
+    small enough to stay resident in VMEM across the whole grid — the
+    analog of farm keeping the batch panel pinned in NEON registers;
+  * the weight matrix streams through VMEM in (bn, bk) blocks, and each
+    block is fully consumed against the resident activations — the MXU is
+    fed from a stationary narrow operand.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode (which traces to plain HLO)
+is the correctness path; TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf from the block shapes chosen here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. On a real TPU these would be multiples of the
+# (8, 128) f32 tile; interpret mode has no such constraint but we keep
+# MXU-friendly shapes so the §Perf VMEM/MXU estimates reflect the real
+# schedule.
+DEF_BM = 8
+DEF_BN = 128
+DEF_BK = 128
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``mult``."""
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_t_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; grid = (m/bm, n/bn, k/bk), k innermost.
+
+    The output tile is revisited across the k grid dimension (its index_map
+    ignores ``kk``), so we initialize it on the first k step and accumulate
+    partial products in place — the revolving-accumulator matmul schedule.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _matmul_t_raw(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = DEF_BM,
+    bn: int = DEF_BN,
+    bk: int = DEF_BK,
+) -> jnp.ndarray:
+    """``y = x @ w.T`` via the tiled Pallas kernel (no AD rule).
+
+    x: (m, k), w: (n, k) -> y: (m, n), f32.  Inputs are zero-padded up to
+    block multiples (zero rows/cols contribute nothing) and the result is
+    sliced back, so arbitrary shapes are accepted.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} vs {w.shape}"
+    bm = min(bm, _ceil_mult(m, 8))
+    bn = min(bn, _ceil_mult(n, 8))
+    bk = min(bk, _ceil_mult(k, 8))
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, bk)
+    mp, kp = xp.shape
+    np_, _ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ``pallas_call`` has no JVP rule for the revolving-accumulator schedule
+# (program_id inside the kernel), so we attach the analytic GEMM gradients
+# ourselves — expressed through the same Pallas kernel, so the *backward*
+# pass of the lowered training HLO also runs the L1 schedule:
+#   y = x @ W.T   =>   dx = dy @ W = matmul_t(dy, W.T)
+#                      dW = dy.T @ x = matmul_t(dy.T, x.T)
+@jax.custom_vjp
+def matmul_t(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """``y = x @ w.T`` (Pallas kernel, differentiable)."""
+    return _matmul_t_raw(x, w)
+
+
+def _matmul_t_fwd(x, w):
+    return _matmul_t_raw(x, w), (x, w)
+
+
+def _matmul_t_bwd(res, dy):
+    x, w = res
+    dx = _matmul_t_raw(dy, w.T)
+    dw = _matmul_t_raw(dy.T, x.T)
+    return dx, dw
+
+
+matmul_t.defvjp(_matmul_t_fwd, _matmul_t_bwd)
+
+
+def lowrank_apply(x: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """``y = x @ (U V).T`` as two chained Pallas GEMMs.
+
+    x: (m, k), v: (r, k), u: (n, r) -> (m, n).
+
+    The rank-r bottleneck ``t = x @ V.T`` is (m, r) — for the paper's
+    streaming regime m ≤ 8 this is a few KB and stays in VMEM between the
+    two kernels (XLA fuses the pad/slice glue); total FLOPs drop from
+    ``2·m·n·k`` to ``2·m·r·(n + k)``, the factored-GEMM saving that the
+    whole paper is built around.
+    """
+    t = matmul_t(x, v)
+    return matmul_t(t, u)

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between the Pallas (interpret=True) output and these
+oracles over shape/dtype sweeps (see python/tests/test_kernels.py).
+
+Conventions (shared with layers.py and the Rust engine):
+  * activations are row-major ``(batch, features)``
+  * weight matrices are ``(n_out, n_in)`` and applied as ``y = x @ W.T``
+  * a low-rank factored weight is ``W = U @ V`` with ``U: (n_out, r)``,
+    ``V: (r, n_in)``, so ``y = (x @ V.T) @ U.T``
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import nn
+
+
+def matmul_t_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ W.T  with x: (m, k), w: (n, k) -> (m, n), f32 accumulate."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32).T,
+        precision="highest",
+    )
+
+
+def lowrank_apply_ref(x: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ (U V).T = (x @ V.T) @ U.T.
+
+    x: (m, k), v: (r, k), u: (n, r) -> (m, n).
+    """
+    return matmul_t_ref(matmul_t_ref(x, v), u)
+
+
+def gru_gates_ref(
+    gx: jnp.ndarray, gh: jnp.ndarray, h: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused GRU gate nonlinearity (paper eq. (10)).
+
+    gx = x_t @ [W_z; W_r; W_h].T + b   -- shape (B, 3H)
+    gh = h_{t-1} @ [U_z; U_r; U_h].T   -- shape (B, 3H)
+    h  = h_{t-1}                       -- shape (B, H)
+
+    z   = sigmoid(gx_z + gh_z)
+    r   = sigmoid(gx_r + gh_r)
+    htl = tanh(gx_h + r * gh_h)
+    h'  = (1 - z) * h + z * htl
+    """
+    hdim = h.shape[-1]
+    z = nn.sigmoid(gx[..., :hdim] + gh[..., :hdim])
+    r = nn.sigmoid(gx[..., hdim : 2 * hdim] + gh[..., hdim : 2 * hdim])
+    htl = jnp.tanh(gx[..., 2 * hdim :] + r * gh[..., 2 * hdim :])
+    return (1.0 - z) * h + z * htl
+
+
+def int8_gemm_ref(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+) -> jnp.ndarray:
+    """Quantized GEMM oracle: int8 x int8 -> int32 accumulate -> f32 dequant.
+
+    xq: (m, k) int8, wq: (n, k) int8; symmetric per-tensor scales.
+    y[i, j] = x_scale * w_scale * sum_k xq[i, k] * wq[j, k]
+    """
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * (x_scale * w_scale)

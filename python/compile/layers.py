@@ -1,0 +1,216 @@
+"""L2 building blocks: frontend, factored weight application, GRU layers.
+
+Every dense application goes through the L1 Pallas kernels
+(``kernels.matmul_t`` / ``kernels.lowrank_apply`` / ``kernels.gru_gates`` /
+``kernels.int8_gemm``) so that the lowered HLO contains exactly the
+schedules described in DESIGN.md §Hardware-Adaptation.
+
+Weight-group schemes (paper App. B.2):
+  * ``unfactored``: one dense (3H, ·) matrix per group.
+  * ``partial`` (the paper's choice): the 3 recurrent matrices of a GRU are
+    concatenated into one ``rec`` group (3H, H) and factored as U·V; same
+    for the 3 non-recurrent matrices (3H, Din).
+  * ``split``: each of the 6 matrices factored separately.
+  * ``joint``: one (3H, Din+H) matrix over [x; h] factored as a whole —
+    maximal sharing, but the non-recurrent half can no longer be batched
+    across time (exactly the efficiency argument of App. B.2).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+from .configs import (
+    SCHEME_JOINT,
+    SCHEME_PARTIAL,
+    SCHEME_SPLIT,
+    SCHEME_UNFACTORED,
+    ModelConfig,
+)
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# Frontend: non-overlapping frame stacking + linear + ReLU ("conv" layers).
+# Stride == context keeps streaming chunk-exact (configs.ConvSpec).
+# --------------------------------------------------------------------------
+
+
+def stack_frames(x: jnp.ndarray, context: int) -> jnp.ndarray:
+    """(B, T, F) -> (B, T // context, context * F); truncates ragged tail."""
+    b, t, f = x.shape
+    t2 = t // context
+    return x[:, : t2 * context].reshape(b, t2, context * f)
+
+
+def conv_frontend(cfg: ModelConfig, params: Params, feats: jnp.ndarray) -> jnp.ndarray:
+    """Apply the stacked-frame projection stack. (B, T, F) -> (B, T', D)."""
+    x = feats
+    for i, spec in enumerate(cfg.conv):
+        x = stack_frames(x, spec.context)
+        b, t, d = x.shape
+        w = params[f"conv{i}_w"]  # (dim, context * prev)
+        y = kernels.matmul_t(x.reshape(b * t, d), w) + params[f"conv{i}_b"]
+        x = jax.nn.relu(y).reshape(b, t, spec.dim)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Weight application by scheme.
+# --------------------------------------------------------------------------
+
+
+def group_names(cfg: ModelConfig) -> List[str]:
+    """Names of the compressible weight groups (3 GRUs + FC — paper §3.2)."""
+    names: List[str] = []
+    for i in range(len(cfg.gru_dims)):
+        if cfg.scheme == SCHEME_JOINT:
+            names.append(f"grujoint{i}")
+        elif cfg.scheme == SCHEME_SPLIT:
+            for gate in "zrh":
+                names.append(f"rec{i}_{gate}")
+                names.append(f"nonrec{i}_{gate}")
+        else:
+            names.append(f"rec{i}")
+            names.append(f"nonrec{i}")
+    names.append("fc")
+    return names
+
+
+def group_full_shape(cfg: ModelConfig, name: str) -> Tuple[int, int]:
+    """Unfactored shape of a named group."""
+    if name == "fc":
+        return (cfg.fc_dim, cfg.gru_dims[-1])
+    base = name.rstrip("zrh").rstrip("_")
+    if base.startswith("grujoint"):
+        i = int(base[len("grujoint") :])
+        h = cfg.gru_dims[i]
+        return (3 * h, cfg.gru_input_dim(i) + h)
+    # rec{i} / nonrec{i} / rec{i}_g / nonrec{i}_g
+    parts = name.split("_")
+    kind_i = parts[0]
+    per_gate = len(parts) == 2
+    if kind_i.startswith("nonrec"):
+        i = int(kind_i[len("nonrec") :])
+        rows = cfg.gru_dims[i] if per_gate else 3 * cfg.gru_dims[i]
+        return (rows, cfg.gru_input_dim(i))
+    i = int(kind_i[len("rec") :])
+    rows = cfg.gru_dims[i] if per_gate else 3 * cfg.gru_dims[i]
+    return (rows, cfg.gru_dims[i])
+
+
+def is_recurrent_group(name: str) -> bool:
+    """Groups regularized with lambda_rec (vs lambda_nonrec).
+
+    Per the paper, reset/update gate weights are grouped with the recurrent
+    matrix; the completely-joint matrix acts on [x; h] and is treated as
+    recurrent.  fc and nonrec groups take lambda_nonrec.
+    """
+    return name.startswith("rec") or name.startswith("grujoint")
+
+
+def apply_group(
+    cfg: ModelConfig, params: Params, name: str, x: jnp.ndarray
+) -> jnp.ndarray:
+    """y = x @ W_name.T under the config's scheme (full or factored)."""
+    if cfg.scheme == SCHEME_UNFACTORED or name.startswith("conv") or name == "out":
+        w = params[f"{name}_w"]
+        if cfg.use_masks and f"{name}_mask" in params:
+            w = w * params[f"{name}_mask"]
+        return kernels.matmul_t(x, w)
+    u = params[f"{name}_u"]
+    v = params[f"{name}_v"]
+    return kernels.lowrank_apply(x, u, v)
+
+
+# --------------------------------------------------------------------------
+# GRU layers.
+# --------------------------------------------------------------------------
+
+
+def _rec_nonrec_names(cfg: ModelConfig, i: int) -> Tuple[List[str], List[str]]:
+    if cfg.scheme == SCHEME_SPLIT:
+        return (
+            [f"rec{i}_{g}" for g in "zrh"],
+            [f"nonrec{i}_{g}" for g in "zrh"],
+        )
+    return ([f"rec{i}"], [f"nonrec{i}"])
+
+
+def _apply_many(
+    cfg: ModelConfig, params: Params, names: Sequence[str], x: jnp.ndarray
+) -> jnp.ndarray:
+    """Apply one or three (split-scheme) groups, concatenating gate outputs."""
+    outs = [apply_group(cfg, params, n, x) for n in names]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
+
+
+def gru_layer(
+    cfg: ModelConfig,
+    params: Params,
+    i: int,
+    x: jnp.ndarray,
+    h0: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward GRU layer i. x: (B, T, Din), h0: (B, H) -> ((B, T, H), h_T).
+
+    For all schemes except ``joint``, the non-recurrent GEMM is hoisted out
+    of the scan and batched across time — the paper's §4 observation that
+    ``W x_t`` admits time-batching while ``U h_{t-1}`` is sequential.
+    """
+    b, t, din = x.shape
+    h = cfg.gru_dims[i]
+    bias = params[f"gru{i}_b"]  # (3H,)
+
+    if cfg.scheme == SCHEME_JOINT:
+        # The joint scheme factors the single (3H, Din+H) matrix over
+        # [x; h], but eq. (10) still needs the gx/gh separation for the
+        # r * (U_h h) candidate term — so we split V's columns into the x-
+        # and h- halves and share U.  The x-half can then still be batched
+        # across time.
+        name = f"grujoint{i}"
+        u = params[f"{name}_u"]
+        v = params[f"{name}_v"]
+        vx, vh = v[:, :din], v[:, din:]
+
+        gx_all = kernels.lowrank_apply(x.reshape(b * t, din), u, vx) + bias
+        gx_all = gx_all.reshape(b, t, 3 * h)
+
+        def step(hprev, gx_t):
+            gh = kernels.lowrank_apply(hprev, u, vh)
+            hnew = kernels.gru_gates(gx_t, gh, hprev)
+            return hnew, hnew
+
+        h_last, hs = lax.scan(step, h0, gx_all.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2), h_last
+
+    rec_names, nonrec_names = _rec_nonrec_names(cfg, i)
+    gx_all = _apply_many(cfg, params, nonrec_names, x.reshape(b * t, din)) + bias
+    gx_all = gx_all.reshape(b, t, 3 * h)
+
+    def step(hprev, gx_t):
+        gh = _apply_many(cfg, params, rec_names, hprev)
+        hnew = kernels.gru_gates(gx_t, gh, hprev)
+        return hnew, hnew
+
+    h_last, hs = lax.scan(step, h0, gx_all.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), h_last
+
+
+def fc_softmax(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """FC (compressible) + ReLU, then output projection + log-softmax.
+
+    x: (B, T, H_last) -> logprobs (B, T, V).
+    """
+    b, t, d = x.shape
+    y = apply_group(cfg, params, "fc", x.reshape(b * t, d)) + params["fc_b"]
+    y = jax.nn.relu(y)
+    logits = kernels.matmul_t(y, params["out_w"]) + params["out_b"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return logp.reshape(b, t, cfg.vocab)

@@ -1,0 +1,337 @@
+"""L2: the Deep Speech 2–style acoustic model, loss and train step.
+
+This module defines every function that gets AOT-lowered to HLO text for
+the Rust coordinator (aot.py):
+
+  * ``forward``       — full-utterance eval: feats -> logprobs
+  * ``train_step``    — SGD-with-momentum step with the paper's losses:
+        - factored schemes: trace-norm surrogate
+          ``l(UV) + λ/2 (||U||_F² + ||V||_F²)``   (paper eq. (3)/(5))
+        - unfactored: ℓ² penalty ``λ/2 ||W||_F²`` (the paper's baseline)
+        - optional weight masks (magnitude-pruning baseline, Fig. 8)
+      λ_rec / λ_nonrec are *runtime inputs*, so a single artifact serves
+      the whole Figure-1 grid sweep.
+  * ``stream_step``   — chunked streaming inference with carried GRU state
+      (f32, or int8 via the L1 quantized kernel).
+
+Parameters cross the Rust boundary as a flat, name-sorted tuple; the
+ordering and shapes are recorded in artifacts/manifest.json by aot.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import (
+    SCHEME_PARTIAL,
+    SCHEME_SPLIT,
+    SCHEME_UNFACTORED,
+    BatchSpec,
+    ModelConfig,
+)
+from .ctc import ctc_loss_mean
+from .layers import (
+    Params,
+    apply_group,
+    conv_frontend,
+    fc_softmax,
+    group_full_shape,
+    group_names,
+    gru_layer,
+    is_recurrent_group,
+)
+
+# Optimizer: RMSProp with gradient-norm clipping.  (The paper trains with
+# SGD+momentum over 40 WSJ epochs; on this single-core testbed RMSProp
+# reaches the same qualitative regime in ~10 synthetic epochs, and the
+# optimizer state stays a single buffer so the Rust wire format is
+# unchanged.  DESIGN.md §3 records the substitution.)
+RMS_DECAY = 0.9
+RMS_EPS = 1e-6
+GRAD_CLIP = 5.0
+
+
+# --------------------------------------------------------------------------
+# Parameter schema + init.
+# --------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    """Flat name -> shape map. Sorted(name) is the wire order to Rust."""
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    prev = cfg.feat_dim
+    for i, spec in enumerate(cfg.conv):
+        shapes[f"conv{i}_w"] = (spec.dim, spec.context * prev)
+        shapes[f"conv{i}_b"] = (spec.dim,)
+        prev = spec.dim
+    for i, h in enumerate(cfg.gru_dims):
+        shapes[f"gru{i}_b"] = (3 * h,)
+    for name in group_names(cfg):
+        m, n = group_full_shape(cfg, name)
+        if cfg.scheme == SCHEME_UNFACTORED:
+            shapes[f"{name}_w"] = (m, n)
+        else:
+            r = cfg.rank_of((m, n))
+            shapes[f"{name}_u"] = (m, r)
+            shapes[f"{name}_v"] = (r, n)
+    shapes["fc_b"] = (cfg.fc_dim,)
+    shapes["out_w"] = (cfg.vocab, cfg.fc_dim)
+    shapes["out_b"] = (cfg.vocab,)
+    return shapes
+
+
+def mask_names(cfg: ModelConfig) -> List[str]:
+    """Weight-mask input names (unfactored + use_masks only)."""
+    if not cfg.use_masks:
+        return []
+    assert cfg.scheme == SCHEME_UNFACTORED, "masks model unstructured sparsity"
+    return [f"{g}_mask" for g in group_names(cfg)]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Glorot-uniform weights, zero biases (matches the Rust-side init)."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name in sorted(shapes):
+        shape = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            fan_out = shape[0]
+            lim = math.sqrt(6.0 / (fan_in + fan_out))
+            params[name] = jax.random.uniform(
+                sub, shape, jnp.float32, minval=-lim, maxval=lim
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward + loss.
+# --------------------------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    feats: jnp.ndarray,
+    frame_lens: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """feats: (B, T, F) raw frames -> (logprobs (B, T', V), out_lens (B,))."""
+    x = conv_frontend(cfg, params, feats)
+    b, t, _ = x.shape
+    for i, h in enumerate(cfg.gru_dims):
+        h0 = jnp.zeros((b, h), jnp.float32)
+        x, _ = gru_layer(cfg, params, i, x, h0)
+    logp = fc_softmax(cfg, params, x)
+    out_lens = frame_lens // cfg.total_stride
+    return logp, out_lens
+
+
+def regularization_penalty(
+    cfg: ModelConfig,
+    params: Params,
+    lam_rec: jnp.ndarray,
+    lam_nonrec: jnp.ndarray,
+) -> jnp.ndarray:
+    """The paper's penalties over the four compressible layers.
+
+    Factored schemes: λ_g/2 (||U||_F² + ||V||_F²)  — trace-norm surrogate.
+    Unfactored:       λ_g/2 ||W||_F²               — the ℓ² baseline.
+    (Conv, output projection and biases are not compressed in the paper and
+    are left unregularized so the comparison targets the same weights.)
+    """
+    pen = jnp.zeros((), jnp.float32)
+    for name in group_names(cfg):
+        lam = lam_rec if is_recurrent_group(name) else lam_nonrec
+        if cfg.scheme == SCHEME_UNFACTORED:
+            w = params[f"{name}_w"]
+            pen = pen + 0.5 * lam * jnp.sum(w * w)
+        else:
+            u = params[f"{name}_u"]
+            v = params[f"{name}_v"]
+            pen = pen + 0.5 * lam * (jnp.sum(u * u) + jnp.sum(v * v))
+    return pen
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    feats: jnp.ndarray,
+    frame_lens: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_lens: jnp.ndarray,
+    lam_rec: jnp.ndarray,
+    lam_nonrec: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logp, out_lens = forward(cfg, params, feats, frame_lens)
+    ctc, _ = ctc_loss_mean(logp, out_lens, labels, label_lens)
+    pen = regularization_penalty(cfg, params, lam_rec, lam_nonrec)
+    return ctc + pen, {"ctc": ctc, "penalty": pen}
+
+
+# --------------------------------------------------------------------------
+# SGD-with-momentum train step (grad-norm clipped), as one jittable fn.
+# --------------------------------------------------------------------------
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(v.astype(jnp.float32) ** 2) for v in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def train_step(
+    cfg: ModelConfig,
+    params: Params,
+    momentum: Params,
+    feats: jnp.ndarray,
+    frame_lens: jnp.ndarray,
+    labels: jnp.ndarray,
+    label_lens: jnp.ndarray,
+    lr: jnp.ndarray,
+    lam_rec: jnp.ndarray,
+    lam_nonrec: jnp.ndarray,
+) -> Tuple[Params, Params, Dict[str, jnp.ndarray]]:
+    """One clipped SGD-momentum step.  Masked weights (if any) stay masked:
+    the mask multiplies the weight in the forward pass, so pruned entries
+    receive gradient only through the mask product (zero), and the Rust
+    coordinator additionally re-projects after each step."""
+    (loss, aux), grads = jax.value_and_grad(
+        lambda p: loss_fn(
+            cfg, p, feats, frame_lens, labels, label_lens, lam_rec, lam_nonrec
+        ),
+        has_aux=True,
+    )(params)
+    # Masks are inputs, not trainables: drop their grads if present.
+    grads = {k: g for k, g in grads.items() if not k.endswith("_mask")}
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    new_m: Params = {}
+    new_p: Params = {}
+    for k in sorted(grads):
+        g = scale * grads[k]
+        v = RMS_DECAY * momentum[k] + (1.0 - RMS_DECAY) * g * g
+        new_m[k] = v
+        new_p[k] = params[k] - lr * g / (jnp.sqrt(v) + RMS_EPS)
+    metrics = {
+        "loss": loss,
+        "ctc": aux["ctc"],
+        "penalty": aux["penalty"],
+        "grad_norm": gnorm,
+    }
+    return new_p, new_m, metrics
+
+
+# --------------------------------------------------------------------------
+# Streaming chunk step (server-path latency experiments).
+# --------------------------------------------------------------------------
+
+
+def stream_step(
+    cfg: ModelConfig,
+    params: Params,
+    hs: Sequence[jnp.ndarray],
+    chunk: jnp.ndarray,
+) -> Tuple[List[jnp.ndarray], jnp.ndarray]:
+    """One streaming chunk: (carried GRU states, (1, Tc, F)) ->
+    (new states, logprobs (1, Tc', V)).
+
+    The chunk length (a multiple of the total stride) is the paper's §4
+    time-batching knob: the non-recurrent GEMMs inside gru_layer batch
+    across Tc' timesteps while the recurrent GEMM stays batch-1.
+    """
+    x = conv_frontend(cfg, params, chunk)
+    new_hs: List[jnp.ndarray] = []
+    for i, _h in enumerate(cfg.gru_dims):
+        x, h_last = gru_layer(cfg, params, i, x, hs[i])
+        new_hs.append(h_last)
+    logp = fc_softmax(cfg, params, x)
+    return new_hs, logp
+
+
+# --------------------------------------------------------------------------
+# Int8 streaming variant: weights arrive pre-quantized (int8 + scale per
+# group factor); the dense applications go through the L1 int8 kernel.
+# Models the paper's §4 embedded path at the HLO level.
+# --------------------------------------------------------------------------
+
+
+def quantized_param_names(cfg: ModelConfig) -> List[str]:
+    """Names of dense weights that get int8-quantized in the int8 stream
+    artifact. Biases and the tiny output projection stay f32."""
+    names: List[str] = []
+    for i in range(len(cfg.conv)):
+        names.append(f"conv{i}_w")
+    for g in group_names(cfg):
+        if cfg.scheme == SCHEME_UNFACTORED:
+            names.append(f"{g}_w")
+        else:
+            names.append(f"{g}_u")
+            names.append(f"{g}_v")
+    names.append("out_w")
+    return names
+
+
+def _q_apply(params: Params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """x @ W.T with W given as (int8 q, f32 scale). Activations are
+    quantized symmetrically per call (dynamic quantization, as the paper's
+    runtime does per GEMM)."""
+    q = params[f"{name}_q"]
+    w_scale = params[f"{name}_scale"]
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    x_scale = amax / 127.0
+    xq = jnp.clip(jnp.round(x / x_scale), -127, 127).astype(jnp.int8)
+    return kernels.int8_gemm(xq, q, x_scale.reshape(1), w_scale.reshape(1))
+
+
+def stream_step_int8(
+    cfg: ModelConfig,
+    params: Params,
+    hs: Sequence[jnp.ndarray],
+    chunk: jnp.ndarray,
+) -> Tuple[List[jnp.ndarray], jnp.ndarray]:
+    """Int8 analog of stream_step (factored schemes only)."""
+    assert cfg.scheme != SCHEME_UNFACTORED
+
+    def apply2(name: str, x: jnp.ndarray) -> jnp.ndarray:
+        t = _q_apply(params, f"{name}_v", x)
+        return _q_apply(params, f"{name}_u", t)
+
+    x = chunk
+    from .layers import stack_frames  # local import to avoid cycle noise
+
+    for i, spec in enumerate(cfg.conv):
+        x = stack_frames(x, spec.context)
+        b, t, d = x.shape
+        y = _q_apply(params, f"conv{i}_w", x.reshape(b * t, d)) + params[f"conv{i}_b"]
+        x = jax.nn.relu(y).reshape(b, t, spec.dim)
+
+    new_hs: List[jnp.ndarray] = []
+    for i, h in enumerate(cfg.gru_dims):
+        b, t, din = x.shape
+        bias = params[f"gru{i}_b"]
+        gx = (apply2(f"nonrec{i}", x.reshape(b * t, din)) + bias).reshape(b, t, 3 * h)
+
+        def step(hprev, gx_t):
+            gh = apply2(f"rec{i}", hprev)
+            hnew = kernels.gru_gates(gx_t, gh, hprev)
+            return hnew, hnew
+
+        h_last, xs = jax.lax.scan(step, hs[i], gx.transpose(1, 0, 2))
+        x = xs.transpose(1, 0, 2)
+        new_hs.append(h_last)
+
+    b, t, d = x.shape
+    y = apply2("fc", x.reshape(b * t, d)) + params["fc_b"]
+    y = jax.nn.relu(y)
+    logits = _q_apply(params, "out_w", y) + params["out_b"]
+    logp = jax.nn.log_softmax(logits, axis=-1).reshape(b, t, cfg.vocab)
+    return new_hs, logp

@@ -1,0 +1,153 @@
+"""CTC loss against brute-force alignment enumeration.
+
+For tiny (T, L) we enumerate every length-T path over the vocab, keep the
+paths that collapse (remove repeats, then blanks) to the label, and sum
+their probabilities — the definition of the CTC likelihood.  The scan
+implementation must match to near machine precision.
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.ctc import ctc_loss, ctc_loss_mean, extend_labels
+
+
+def collapse(path):
+    out = []
+    prev = None
+    for p in path:
+        if p != prev:
+            if p != 0:
+                out.append(p)
+        prev = p
+    return tuple(out)
+
+
+def brute_force_nll(logprobs, label):
+    """-log sum_{paths collapsing to label} prod_t p[t, path_t]."""
+    t, v = logprobs.shape
+    total = -np.inf
+    for path in itertools.product(range(v), repeat=t):
+        if collapse(path) == tuple(label):
+            lp = sum(logprobs[i, c] for i, c in enumerate(path))
+            total = np.logaddexp(total, lp)
+    return -total
+
+
+def make_logprobs(rng, t, v):
+    x = rng.standard_normal((t, v)).astype(np.float32)
+    x = x - np.log(np.exp(x).sum(axis=1, keepdims=True))
+    return x
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(2, 5),
+    v=st.integers(2, 4),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_ctc_matches_brute_force(t, v, seed, data):
+    rng = np.random.RandomState(seed)
+    lmax = min(t, 3)
+    llen = data.draw(st.integers(1, lmax))
+    label = data.draw(
+        st.lists(st.integers(1, v - 1), min_size=llen, max_size=llen)
+    )
+    # skip labels that need more frames than available (repeats need blanks)
+    need = llen + sum(1 for a, b in zip(label, label[1:]) if a == b)
+    if need > t:
+        return
+    lp = make_logprobs(rng, t, v)
+    want = brute_force_nll(lp, label)
+
+    pad_l = 4
+    labels = np.zeros((1, pad_l), np.int32)
+    labels[0, :llen] = label
+    got = ctc_loss(
+        jnp.asarray(lp)[None],
+        jnp.asarray([t], jnp.int32),
+        jnp.asarray(labels),
+        jnp.asarray([llen], jnp.int32),
+    )
+    np.testing.assert_allclose(float(got[0]), want, rtol=1e-4, atol=1e-4)
+
+
+def test_ctc_frame_padding_is_ignored():
+    """Loss must be identical whether pad frames carry junk or zeros."""
+    rng = np.random.RandomState(0)
+    t_valid, t_pad, v = 4, 3, 5
+    lp_valid = make_logprobs(rng, t_valid, v)
+    junk = make_logprobs(rng, t_pad, v)
+    zeros = np.full((t_pad, v), -np.log(v), np.float32)
+
+    labels = np.array([[1, 2, 0, 0]], np.int32)
+    args = lambda pad: (
+        jnp.asarray(np.concatenate([lp_valid, pad])[None]),
+        jnp.asarray([t_valid], jnp.int32),
+        jnp.asarray(labels),
+        jnp.asarray([2], jnp.int32),
+    )
+    a = float(ctc_loss(*args(junk))[0])
+    b = float(ctc_loss(*args(zeros))[0])
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_ctc_batch_matches_individual():
+    rng = np.random.RandomState(1)
+    t, v, l = 6, 5, 3
+    lps = [make_logprobs(rng, t, v) for _ in range(3)]
+    labels = np.array([[1, 0, 0], [2, 3, 0], [4, 4, 1]], np.int32)
+    lens = np.array([1, 2, 3], np.int32)
+    batched = ctc_loss(
+        jnp.asarray(np.stack(lps)),
+        jnp.asarray([t, t, t], jnp.int32),
+        jnp.asarray(labels),
+        jnp.asarray(lens),
+    )
+    for i in range(3):
+        single = ctc_loss(
+            jnp.asarray(lps[i])[None],
+            jnp.asarray([t], jnp.int32),
+            jnp.asarray(labels[i : i + 1]),
+            jnp.asarray(lens[i : i + 1]),
+        )
+        np.testing.assert_allclose(float(batched[i]), float(single[0]), rtol=1e-5)
+
+
+def test_extend_labels():
+    labels = jnp.asarray([[3, 5, 0]], jnp.int32)
+    ext = np.asarray(extend_labels(labels))
+    np.testing.assert_array_equal(ext[0], [0, 3, 0, 5, 0, 0, 0])
+
+
+def test_ctc_perfect_prediction_low_loss():
+    """Near-one-hot correct logprobs => tiny nll."""
+    v = 4
+    seq = [1, 0, 2, 0, 3]  # label 1,2,3 with blanks
+    lp = np.full((len(seq), v), -20.0, np.float32)
+    for t, c in enumerate(seq):
+        lp[t, c] = -1e-4
+    got = ctc_loss(
+        jnp.asarray(lp)[None],
+        jnp.asarray([len(seq)], jnp.int32),
+        jnp.asarray([[1, 2, 3]], jnp.int32),
+        jnp.asarray([3], jnp.int32),
+    )
+    assert float(got[0]) < 0.1
+
+
+def test_ctc_mean_normalizes_by_label_len():
+    rng = np.random.RandomState(2)
+    lp = make_logprobs(rng, 6, 5)
+    mean, nll = ctc_loss_mean(
+        jnp.asarray(lp)[None],
+        jnp.asarray([6], jnp.int32),
+        jnp.asarray([[1, 2, 3]], jnp.int32),
+        jnp.asarray([3], jnp.int32),
+    )
+    np.testing.assert_allclose(float(mean), float(nll[0]) / 3.0, rtol=1e-6)

@@ -1,0 +1,161 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-block-multiple raggedness) and
+value ranges; this is the CORE correctness signal for the kernels that end
+up inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=67)
+small_dims = st.integers(min_value=1, max_value=33)
+
+
+def rng_array(seed, shape, scale=1.0, dtype=np.float32):
+    r = np.random.RandomState(seed)
+    return (r.standard_normal(shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# matmul_t
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, k=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_t_matches_ref(m, n, k, seed):
+    x = rng_array(seed, (m, k))
+    w = rng_array(seed + 1, (n, k))
+    got = kernels.matmul_t(jnp.asarray(x), jnp.asarray(w))
+    want = ref.matmul_t_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_t_block_multiple_shapes():
+    x = rng_array(0, (16, 256))
+    w = rng_array(1, (256, 256))
+    got = kernels.matmul_t(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(
+        np.asarray(got), x @ w.T, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_t_gradients_match_dense():
+    """The custom VJP must agree with jnp.dot's gradients."""
+    x = jnp.asarray(rng_array(2, (4, 12)))
+    w = jnp.asarray(rng_array(3, (9, 12)))
+
+    def f_kernel(x, w):
+        return jnp.sum(jnp.sin(kernels.matmul_t(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(x @ w.T))
+
+    gx1, gw1 = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2), rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# lowrank_apply
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=small_dims, n=dims, k=dims, r=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_lowrank_apply_matches_ref(m, n, k, r, seed):
+    x = jnp.asarray(rng_array(seed, (m, k)))
+    u = jnp.asarray(rng_array(seed + 1, (n, r)))
+    v = jnp.asarray(rng_array(seed + 2, (r, k)))
+    got = kernels.lowrank_apply(x, u, v)
+    want = ref.lowrank_apply_ref(x, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_lowrank_apply_equals_full_product():
+    """x @ (UV).T computed factored == computed via the materialized W."""
+    x = jnp.asarray(rng_array(0, (5, 20)))
+    u = jnp.asarray(rng_array(1, (17, 6)))
+    v = jnp.asarray(rng_array(2, (6, 20)))
+    w_full = np.asarray(u) @ np.asarray(v)
+    got = kernels.lowrank_apply(x, u, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ w_full.T, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# gru_gates
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 9), h=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_gru_gates_matches_ref(b, h, seed):
+    gx = jnp.asarray(rng_array(seed, (b, 3 * h), scale=2.0))
+    gh = jnp.asarray(rng_array(seed + 1, (b, 3 * h), scale=2.0))
+    hprev = jnp.asarray(rng_array(seed + 2, (b, h)))
+    got = kernels.gru_gates(gx, gh, hprev)
+    want = ref.gru_gates_ref(gx, gh, hprev)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_gru_gates_is_convex_combination():
+    """|h'| is bounded by max(|h|, 1): h' is a convex combo of h and tanh."""
+    gx = jnp.asarray(rng_array(0, (4, 24), scale=5.0))
+    gh = jnp.asarray(rng_array(1, (4, 24), scale=5.0))
+    h = jnp.asarray(rng_array(2, (4, 8), scale=0.5))
+    out = np.asarray(kernels.gru_gates(gx, gh, h))
+    bound = np.maximum(np.abs(np.asarray(h)), 1.0) + 1e-6
+    assert (np.abs(out) <= bound).all()
+
+def test_gru_gates_gradients_match_ref():
+    gx = jnp.asarray(rng_array(3, (3, 12)))
+    gh = jnp.asarray(rng_array(4, (3, 12)))
+    h = jnp.asarray(rng_array(5, (3, 4)))
+
+    g1 = jax.grad(lambda *a: jnp.sum(kernels.gru_gates(*a) ** 2), argnums=(0, 1, 2))(gx, gh, h)
+    g2 = jax.grad(lambda *a: jnp.sum(ref.gru_gates_ref(*a) ** 2), argnums=(0, 1, 2))(gx, gh, h)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# int8_gemm
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=dims,
+    k=dims,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int8_gemm_matches_ref(m, n, k, seed):
+    r = np.random.RandomState(seed)
+    xq = r.randint(-127, 128, size=(m, k)).astype(np.int8)
+    wq = r.randint(-127, 128, size=(n, k)).astype(np.int8)
+    sx = jnp.asarray([abs(r.standard_normal()) * 0.01 + 1e-4], jnp.float32)
+    sw = jnp.asarray([abs(r.standard_normal()) * 0.01 + 1e-4], jnp.float32)
+    got = kernels.int8_gemm(jnp.asarray(xq), jnp.asarray(wq), sx, sw)
+    want = ref.int8_gemm_ref(jnp.asarray(xq), jnp.asarray(wq), sx[0], sw[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_gemm_exact_small():
+    """Small integer products must be *exact* after dequant by 1.0."""
+    xq = jnp.asarray([[1, 2, 3], [-4, 5, -6]], jnp.int8)
+    wq = jnp.asarray([[1, 1, 1], [2, 0, -2]], jnp.int8)
+    one = jnp.asarray([1.0], jnp.float32)
+    got = np.asarray(kernels.int8_gemm(xq, wq, one, one))
+    want = np.array([[6, -4], [-5, 4]], np.float32)
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,110 @@
+"""Layer-level tests: frame stacking, group shapes, scheme algebra."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, layers, model
+from compile.configs import (
+    SCHEME_JOINT,
+    SCHEME_PARTIAL,
+    SCHEME_SPLIT,
+    SCHEME_UNFACTORED,
+    WSJ_MINI,
+)
+
+
+def test_stack_frames_values():
+    x = jnp.arange(2 * 6 * 3, dtype=jnp.float32).reshape(2, 6, 3)
+    y = layers.stack_frames(x, 2)
+    assert y.shape == (2, 3, 6)
+    # first stacked frame = concat of frames 0 and 1
+    np.testing.assert_array_equal(
+        np.asarray(y[0, 0]), np.concatenate([np.asarray(x[0, 0]), np.asarray(x[0, 1])])
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 20), c=st.integers(1, 4))
+def test_stack_frames_truncates_ragged(t, c):
+    x = jnp.ones((1, t, 2))
+    y = layers.stack_frames(x, c)
+    assert y.shape == (1, t // c, c * 2)
+
+
+@pytest.mark.parametrize("scheme", [SCHEME_UNFACTORED, SCHEME_PARTIAL, SCHEME_SPLIT, SCHEME_JOINT])
+def test_group_names_cover_four_layers(scheme):
+    cfg = dataclasses.replace(WSJ_MINI, scheme=scheme)
+    names = layers.group_names(cfg)
+    assert "fc" in names
+    n_gru_groups = len(names) - 1
+    if scheme == SCHEME_JOINT:
+        assert n_gru_groups == 3  # one joint group per GRU
+    elif scheme == SCHEME_SPLIT:
+        assert n_gru_groups == 18  # 6 per GRU
+    else:
+        assert n_gru_groups == 6  # rec + nonrec per GRU
+
+
+def test_group_full_shapes_consistent():
+    cfg = dataclasses.replace(WSJ_MINI, scheme=SCHEME_PARTIAL)
+    assert layers.group_full_shape(cfg, "rec0") == (3 * 96, 96)
+    assert layers.group_full_shape(cfg, "nonrec0") == (3 * 96, 96)  # conv out = 96
+    assert layers.group_full_shape(cfg, "nonrec1") == (3 * 128, 96)
+    assert layers.group_full_shape(cfg, "fc") == (192, 160)
+    joint = dataclasses.replace(WSJ_MINI, scheme=SCHEME_JOINT)
+    assert layers.group_full_shape(joint, "grujoint1") == (3 * 128, 96 + 128)
+    split = dataclasses.replace(WSJ_MINI, scheme=SCHEME_SPLIT)
+    assert layers.group_full_shape(split, "rec1_z") == (128, 128)
+    assert layers.group_full_shape(split, "nonrec1_h") == (128, 96)
+
+
+def test_recurrent_group_classification():
+    assert layers.is_recurrent_group("rec2")
+    assert layers.is_recurrent_group("grujoint0")
+    assert not layers.is_recurrent_group("nonrec2")
+    assert not layers.is_recurrent_group("fc")
+
+
+def test_split_matches_partial_when_factors_agree():
+    """If split per-gate factors are row-blocks of the partial factors'
+    product, both schemes compute the same GRU layer output."""
+    cfg_p = dataclasses.replace(
+        WSJ_MINI, conv=(configs.ConvSpec(2, 10),), gru_dims=(8,), fc_dim=12,
+        feat_dim=6, scheme=SCHEME_PARTIAL,
+    )
+    cfg_s = dataclasses.replace(cfg_p, scheme=SCHEME_SPLIT)
+    pp = model.init_params(cfg_p, 0)
+    ps = model.init_params(cfg_s, 0)
+    # overwrite split factors so each gate's product equals the partial
+    # product's corresponding row block, via full-rank identity trick
+    rng = np.random.RandomState(0)
+    for kind, k_in in [("rec0", 8), ("nonrec0", 10)]:
+        w = np.asarray(pp[f"{kind}_u"]) @ np.asarray(pp[f"{kind}_v"])  # (24, k)
+        blocks = np.split(w, 3, axis=0)
+        for gate, blk in zip("zrh", blocks):
+            h = blk.shape[0]
+            r = min(h, k_in)
+            u, s, vt = np.linalg.svd(blk, full_matrices=False)
+            ps[f"{kind}_{gate}_u"] = jnp.asarray((u * s)[:, :r].astype(np.float32))
+            ps[f"{kind}_{gate}_v"] = jnp.asarray(vt[:r].astype(np.float32))
+    for shared in ["conv0_w", "conv0_b", "gru0_b", "fc_b", "out_w", "out_b"]:
+        ps[shared] = pp[shared]
+    ps["fc_u"], ps["fc_v"] = pp["fc_u"], pp["fc_v"]
+
+    feats = jnp.asarray(rng.standard_normal((1, 8, 6)).astype(np.float32))
+    fl = jnp.asarray([8], jnp.int32)
+    lp_p, _ = model.forward(cfg_p, pp, feats, fl)
+    lp_s, _ = model.forward(cfg_s, ps, feats, fl)
+    np.testing.assert_allclose(np.asarray(lp_p), np.asarray(lp_s), rtol=2e-3, atol=2e-4)
+
+
+def test_quantized_param_names_cover_dense_ops():
+    cfg = dataclasses.replace(WSJ_MINI, scheme=SCHEME_PARTIAL, rank_frac=0.25)
+    names = model.quantized_param_names(cfg)
+    assert "conv0_w" in names and "out_w" in names
+    assert "rec0_u" in names and "rec0_v" in names
+    assert not any(n.endswith("_b") for n in names)

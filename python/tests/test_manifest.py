@@ -1,0 +1,110 @@
+"""Contract tests for the AOT manifest (the L2<->L3 boundary).
+
+These validate the *existing* artifacts directory when present (fast; no
+lowering).  The Rust side re-validates every call at runtime, but catching
+a drifted contract here gives a much better error message.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, configs, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_alphabet_matches_configs(manifest):
+    assert manifest["alphabet"] == configs.ALPHABET
+    assert manifest["alphabet"][0] == "<b>"  # CTC blank at index 0
+
+
+def test_artifact_files_exist(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert os.path.getsize(path) > 1000
+
+
+def test_train_artifact_io_contract(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    a = arts["train_mini_partial_full"]
+    pnames = a["param_names"]
+    assert pnames == sorted(pnames), "params must be name-sorted"
+    ins = [io["name"] for io in a["inputs"]]
+    n = len(pnames)
+    # wire order: params, momentum, (masks,) batch, scalars
+    assert ins[:n] == pnames
+    assert ins[n : 2 * n] == [f"mom:{p}" for p in pnames]
+    assert ins[-7:] == [
+        "feats", "frame_lens", "labels", "label_lens", "lr", "lam_rec", "lam_nonrec",
+    ]
+    outs = [io["name"] for io in a["outputs"]]
+    assert outs[:n] == pnames
+    assert outs[-4:] == ["loss", "ctc", "penalty", "grad_norm"]
+
+
+def test_param_shapes_match_python_schema(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    a = arts["train_mini_partial_full"]
+    cfg = aot.variant(configs.BASE_CONFIGS["wsj_mini"], configs.SCHEME_PARTIAL)
+    want = model.param_shapes(cfg)
+    got = {io["name"]: tuple(io["shape"]) for io in a["inputs"]}
+    for name, shape in want.items():
+        assert got[name] == tuple(shape), name
+
+
+def test_masked_artifact_lists_masks(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    a = arts["train_mini_unfact_masked"]
+    assert a["use_masks"]
+    assert len(a["mask_names"]) == 7  # 3 rec + 3 nonrec + fc
+    for mn in a["mask_names"]:
+        assert mn.endswith("_mask")
+
+
+def test_rank_ladder_artifacts_exist(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    for frac in manifest["rank_ladder"]:
+        tag = aot.frac_tag(frac)
+        assert f"train_mini_partial_{tag}" in names
+        assert f"eval_mini_partial_{tag}" in names
+
+
+def test_stream_artifacts_declare_chunk(manifest):
+    for a in manifest["artifacts"]:
+        if a["kind"].startswith("stream"):
+            assert a["chunk"] is not None
+            stride = manifest["configs"][a["config"]]["total_stride"]
+            assert a["chunk"] % stride == 0, "chunks must be stride-aligned"
+
+
+def test_int8_stream_wire_format(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    a = arts["stream_mini_partial_r250_c8_int8"]
+    dtypes = {io["name"]: io["dtype"] for io in a["inputs"]}
+    assert dtypes["rec0_u_q"] == "s8"
+    assert dtypes["rec0_u_scale"] == "f32"
+    assert dtypes["gru0_b"] == "f32"  # biases stay f32
+
+
+def test_rank_fractions_shrink_factors(manifest):
+    arts = {a["name"]: a for a in manifest["artifacts"]}
+    full = arts["train_mini_partial_full"]
+    low = arts["train_mini_partial_r250"]
+    shapes_full = {io["name"]: io["shape"] for io in full["inputs"]}
+    shapes_low = {io["name"]: io["shape"] for io in low["inputs"]}
+    assert shapes_low["rec2_u"][1] < shapes_full["rec2_u"][1]
+    assert shapes_low["rec2_u"][0] == shapes_full["rec2_u"][0]

@@ -1,0 +1,275 @@
+"""L2 model-level tests: shapes, schemes, the trace-norm surrogate math
+(paper Lemma 1), training dynamics, and streaming-vs-full consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.configs import (
+    SCHEME_JOINT,
+    SCHEME_PARTIAL,
+    SCHEME_SPLIT,
+    SCHEME_UNFACTORED,
+    TRAIN_BATCH,
+    WSJ_MINI,
+)
+
+ALL_SCHEMES = [SCHEME_UNFACTORED, SCHEME_PARTIAL, SCHEME_SPLIT, SCHEME_JOINT]
+
+
+def cfg_for(scheme, frac=None, masks=False):
+    return dataclasses.replace(
+        WSJ_MINI, scheme=scheme, rank_frac=frac, use_masks=masks
+    )
+
+
+def tiny_cfg(scheme, frac=None):
+    """A very small config for fast exact tests."""
+    return dataclasses.replace(
+        WSJ_MINI,
+        conv=(configs.ConvSpec(2, 16),),
+        gru_dims=(12, 16),
+        fc_dim=20,
+        feat_dim=8,
+        scheme=scheme,
+        rank_frac=frac,
+    )
+
+
+def fake_batch(cfg, b=2, t=16, seed=0):
+    r = np.random.RandomState(seed)
+    feats = jnp.asarray(r.standard_normal((b, t, cfg.feat_dim)).astype(np.float32))
+    fl = jnp.full((b,), t, jnp.int32)
+    labels = jnp.asarray(r.randint(1, cfg.vocab, size=(b, 4)).astype(np.int32))
+    ll = jnp.full((b,), 3, jnp.int32)
+    return feats, fl, labels, ll
+
+
+# --------------------------------------------------------------------------
+# Shapes and schemes.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_forward_shapes(scheme):
+    cfg = tiny_cfg(scheme, frac=0.5 if scheme != SCHEME_UNFACTORED else None)
+    p = model.init_params(cfg, 0)
+    feats, fl, _, _ = fake_batch(cfg)
+    logp, out_lens = model.forward(cfg, p, feats, fl)
+    t_out = 16 // cfg.total_stride
+    assert logp.shape == (2, t_out, cfg.vocab)
+    assert int(out_lens[0]) == t_out
+    # log-softmax rows must normalize
+    np.testing.assert_allclose(
+        np.exp(np.asarray(logp)).sum(-1), 1.0, rtol=1e-4
+    )
+
+
+def test_factored_full_rank_matches_dense_product():
+    """A factored model with U V = W must produce identical logprobs to the
+    unfactored model with weight W."""
+    cfg_f = tiny_cfg(SCHEME_PARTIAL)
+    cfg_d = tiny_cfg(SCHEME_UNFACTORED)
+    pf = model.init_params(cfg_f, 0)
+    pd = {}
+    for k, v in pf.items():
+        if k.endswith("_u"):
+            base = k[:-2]
+            pd[f"{base}_w"] = jnp.asarray(
+                np.asarray(pf[f"{base}_u"]) @ np.asarray(pf[f"{base}_v"])
+            )
+        elif k.endswith("_v"):
+            continue
+        else:
+            pd[k] = v
+    feats, fl, _, _ = fake_batch(cfg_f)
+    lf, _ = model.forward(cfg_f, pf, feats, fl)
+    ld, _ = model.forward(cfg_d, pd, feats, fl)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(ld), rtol=2e-3, atol=2e-4)
+
+
+def test_param_counts_shrink_with_rank():
+    full = sum(
+        np.prod(s) for s in model.param_shapes(cfg_for(SCHEME_PARTIAL)).values()
+    )
+    low = sum(
+        np.prod(s) for s in model.param_shapes(cfg_for(SCHEME_PARTIAL, 0.125)).values()
+    )
+    dense = sum(
+        np.prod(s) for s in model.param_shapes(cfg_for(SCHEME_UNFACTORED)).values()
+    )
+    assert low < dense < full
+
+
+# --------------------------------------------------------------------------
+# Lemma 1: the Frobenius surrogate upper-bounds the trace norm, with
+# equality at the SVD split U = Ũ√Σ, V = √ΣṼ*.
+# --------------------------------------------------------------------------
+
+
+def test_lemma1_surrogate_bounds_trace_norm():
+    r = np.random.RandomState(0)
+    w = r.standard_normal((12, 8)).astype(np.float32)
+    trace_norm = np.linalg.svd(w, compute_uv=False).sum()
+    for seed in range(5):
+        rr = np.random.RandomState(seed + 1)
+        # random factorization with U V = W via invertible mixing
+        m = rr.standard_normal((8, 8)).astype(np.float32)
+        u = w @ np.linalg.inv(m)
+        v = m
+        assert np.allclose(u @ v, w, atol=1e-4)
+        surrogate = 0.5 * ((u**2).sum() + (v**2).sum())
+        assert surrogate >= trace_norm - 1e-3
+
+    # equality at the balanced SVD split
+    uu, ss, vv = np.linalg.svd(w, full_matrices=False)
+    u_bal = uu * np.sqrt(ss)
+    v_bal = (np.sqrt(ss)[:, None]) * vv
+    surrogate = 0.5 * ((u_bal**2).sum() + (v_bal**2).sum())
+    np.testing.assert_allclose(surrogate, trace_norm, rtol=1e-5)
+
+
+def test_penalty_uses_lambda_split():
+    """lam_rec only touches recurrent groups; lam_nonrec the rest."""
+    cfg = tiny_cfg(SCHEME_PARTIAL)
+    p = model.init_params(cfg, 0)
+    pen_rec = float(model.regularization_penalty(cfg, p, jnp.float32(1.0), jnp.float32(0.0)))
+    pen_non = float(model.regularization_penalty(cfg, p, jnp.float32(0.0), jnp.float32(1.0)))
+    pen_both = float(model.regularization_penalty(cfg, p, jnp.float32(1.0), jnp.float32(1.0)))
+    assert pen_rec > 0 and pen_non > 0
+    np.testing.assert_allclose(pen_rec + pen_non, pen_both, rtol=1e-5)
+
+    rec_sum = 0.5 * sum(
+        float(jnp.sum(p[k] * p[k]))
+        for k in p
+        if (k.startswith("rec") and (k.endswith("_u") or k.endswith("_v")))
+    )
+    np.testing.assert_allclose(pen_rec, rec_sum, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Training dynamics.
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", [SCHEME_UNFACTORED, SCHEME_PARTIAL])
+def test_train_step_reduces_loss(scheme):
+    cfg = tiny_cfg(scheme)
+    p = model.init_params(cfg, 0)
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+    batch = fake_batch(cfg, b=2, t=16)
+    step = jax.jit(lambda p, m: model.train_step(
+        cfg, p, m, *batch, jnp.float32(5e-3), jnp.float32(0.0), jnp.float32(0.0)
+    ))
+    _, _, met0 = step(p, mom)
+    for _ in range(12):
+        p, mom, met = step(p, mom)
+    assert float(met["loss"]) < float(met0["loss"])
+
+
+def test_train_step_rmsprop_and_clip():
+    """First-step RMSProp algebra: v = (1-decay) g², update = lr·g/(√v+eps),
+    with g the clipped gradient."""
+    cfg = tiny_cfg(SCHEME_PARTIAL)
+    p = model.init_params(cfg, 0)
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+    batch = fake_batch(cfg)
+    p2, m2, met = model.train_step(
+        cfg, p, mom, *batch, jnp.float32(1e-2), jnp.float32(0.0), jnp.float32(0.0)
+    )
+    some = "fc_u"
+    v = np.asarray(m2[some])
+    # recover g from v (first step: v = (1-decay) g², sign from update dir)
+    g_mag = np.sqrt(v / (1.0 - model.RMS_DECAY))
+    expected_step = 1e-2 * g_mag / (np.sqrt(v) + model.RMS_EPS)
+    actual_step = np.abs(np.asarray(p2[some]) - np.asarray(p[some]))
+    np.testing.assert_allclose(actual_step, expected_step, rtol=1e-3, atol=1e-7)
+    # clipped gradient norm is bounded
+    gnorm = float(met["grad_norm"])
+    total_g2 = sum(
+        float(jnp.sum(m2[k] / (1.0 - model.RMS_DECAY))) for k in m2
+    )
+    clipped = min(gnorm, model.GRAD_CLIP)
+    np.testing.assert_allclose(np.sqrt(total_g2), clipped, rtol=1e-3)
+
+
+def test_masked_weights_receive_no_update():
+    cfg = dataclasses.replace(tiny_cfg(SCHEME_UNFACTORED), use_masks=True)
+    p = model.init_params(cfg, 0)
+    masks = {}
+    r = np.random.RandomState(0)
+    from compile.layers import group_names
+
+    for g in group_names(cfg):
+        shape = p[f"{g}_w"].shape
+        masks[f"{g}_mask"] = jnp.asarray(
+            (r.uniform(size=shape) > 0.5).astype(np.float32)
+        )
+    p_all = dict(p)
+    p_all.update(masks)
+    mom = {k: jnp.zeros_like(v) for k, v in p.items()}
+    batch = fake_batch(cfg)
+    p2, _, _ = model.train_step(
+        cfg, p_all, mom, *batch, jnp.float32(1e-2), jnp.float32(0.0), jnp.float32(0.0)
+    )
+    g = group_names(cfg)[0]
+    w_before = np.asarray(p[f"{g}_w"])
+    w_after = np.asarray(p2[f"{g}_w"])
+    mask = np.asarray(masks[f"{g}_mask"])
+    # masked-out entries get zero gradient through the forward product
+    np.testing.assert_allclose(
+        w_after[mask == 0], w_before[mask == 0], atol=1e-7
+    )
+    assert np.abs(w_after[mask == 1] - w_before[mask == 1]).max() > 0
+
+
+# --------------------------------------------------------------------------
+# Streaming consistency: chunked stream_step == full forward.
+# --------------------------------------------------------------------------
+
+
+def test_stream_matches_forward():
+    cfg = tiny_cfg(SCHEME_PARTIAL, frac=0.5)
+    p = model.init_params(cfg, 0)
+    t = 16
+    feats, fl, _, _ = fake_batch(cfg, b=1, t=t)
+    full, _ = model.forward(cfg, p, feats, fl)
+
+    chunk = 4
+    hs = [jnp.zeros((1, h), jnp.float32) for h in cfg.gru_dims]
+    outs = []
+    for c0 in range(0, t, chunk):
+        hs, logp = model.stream_step(cfg, p, hs, feats[:, c0 : c0 + chunk])
+        outs.append(np.asarray(logp))
+    streamed = np.concatenate(outs, axis=1)
+    np.testing.assert_allclose(streamed, np.asarray(full), rtol=1e-3, atol=1e-4)
+
+
+def test_stream_int8_close_to_f32():
+    """Int8 streaming tracks the f32 path within quantization error."""
+    cfg = tiny_cfg(SCHEME_PARTIAL, frac=0.5)
+    p = model.init_params(cfg, 0)
+    qnames = set(model.quantized_param_names(cfg))
+    qp = {}
+    for k, v in p.items():
+        if k in qnames:
+            a = np.asarray(v)
+            scale = max(np.abs(a).max(), 1e-8) / 127.0
+            qp[f"{k}_q"] = jnp.asarray(
+                np.clip(np.round(a / scale), -127, 127).astype(np.int8)
+            )
+            qp[f"{k}_scale"] = jnp.float32(scale)
+        else:
+            qp[k] = v
+    feats, _, _, _ = fake_batch(cfg, b=1, t=8)
+    hs = [jnp.zeros((1, h), jnp.float32) for h in cfg.gru_dims]
+    hs_q = list(hs)
+    _, lp_f32 = model.stream_step(cfg, p, hs, feats)
+    _, lp_int8 = model.stream_step_int8(cfg, qp, hs_q, feats)
+    # logprob agreement within quantization noise
+    diff = np.abs(np.asarray(lp_f32) - np.asarray(lp_int8)).mean()
+    assert diff < 0.15, diff

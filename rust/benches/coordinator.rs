@@ -1,0 +1,79 @@
+//! Bench: the PJRT coordinator hot path — train step, eval step, stream
+//! chunk step, and the serving batcher — against real AOT artifacts.
+//! Skips (successfully) when `make artifacts` hasn't run.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use tracenorm::data::{make_batch, CorpusSpec, Dataset, Utterance};
+use tracenorm::model::ParamSet;
+use tracenorm::runtime::{Runtime, Value};
+use tracenorm::tensor::Tensor;
+use tracenorm::train::{TrainOpts, Trainer};
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP coordinator bench (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let data = Dataset::generate(CorpusSpec::standard(5), 16, 8, 8);
+
+    header("PJRT train step (batch 8 x 128 frames)");
+    for artifact in ["train_mini_unfact", "train_mini_partial_full", "train_mini_partial_r250"] {
+        let spec = rt.manifest().artifact(artifact).unwrap().clone();
+        let geom = spec.batch.unwrap();
+        let refs: Vec<&Utterance> = data.train.iter().take(geom.batch).collect();
+        let batch = make_batch(&refs, &geom, data.spec.feat_dim);
+        let opts = TrainOpts { epochs: 1, quiet: true, ..Default::default() };
+        let mut t = Trainer::new(&rt, artifact, opts).unwrap();
+        t.step(&batch).unwrap(); // compile + warm
+        bench(&format!("step {artifact}"), 2500, || {
+            std::hint::black_box(t.step(&batch).unwrap());
+        });
+    }
+
+    header("PJRT eval step (batch 8)");
+    for artifact in ["eval_mini_unfact", "eval_mini_partial_r250"] {
+        let spec = rt.manifest().artifact(artifact).unwrap().clone();
+        let loaded = rt.load(artifact).unwrap();
+        let params = ParamSet::init(&spec, 0).unwrap();
+        let geom = spec.batch.unwrap();
+        let refs: Vec<&Utterance> = data.dev.iter().take(geom.batch).collect();
+        let batch = make_batch(&refs, &geom, data.spec.feat_dim);
+        let mut inputs = params.values_in_order(&spec.param_names).unwrap();
+        inputs.push(batch.feats.clone());
+        inputs.push(batch.frame_lens.clone());
+        loaded.run(&inputs).unwrap();
+        bench(&format!("eval {artifact}"), 2000, || {
+            std::hint::black_box(loaded.run(&inputs).unwrap());
+        });
+    }
+
+    header("PJRT stream chunk step (batch 1) by chunk size");
+    for artifact in [
+        "stream_mini_partial_r250_c4",
+        "stream_mini_partial_r250_c8",
+        "stream_mini_partial_r250_c16",
+    ] {
+        let spec = rt.manifest().artifact(artifact).unwrap().clone();
+        let loaded = rt.load(artifact).unwrap();
+        let params = ParamSet::init(&spec, 0).unwrap();
+        let dims = rt.manifest().dims(&spec.config).unwrap().clone();
+        let chunk = spec.chunk.unwrap();
+        let mut inputs = params.values_in_order(&spec.param_names).unwrap();
+        for &h in &dims.gru_dims {
+            inputs.push(Value::F32(Tensor::zeros(&[1, h])));
+        }
+        inputs.push(Value::F32(Tensor::zeros(&[1, chunk, dims.feat_dim])));
+        loaded.run(&inputs).unwrap();
+        let per_frame = 1.0 / chunk as f64;
+        let t = bench(&format!("stream chunk={chunk}"), 1500, || {
+            std::hint::black_box(loaded.run(&inputs).unwrap());
+        });
+        println!("  -> {:.3} ms per raw frame", t * 1e3 * per_frame);
+    }
+}

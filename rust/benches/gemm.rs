@@ -1,0 +1,47 @@
+//! Bench: the Figure-6 GEMM comparison (farm vs gemmlowp-style vs f32)
+//! across batch sizes, plus GOP/s and the farm/lowp speedup factor.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use tracenorm::kernels::{farm_counts, gemm_f32, qgemm_farm, qgemm_lowp};
+use tracenorm::prng::Pcg64;
+use tracenorm::tensor::{Tensor, TensorI8};
+
+const N: usize = 6144;
+const K: usize = 320;
+
+fn rand_i8(shape: &[usize], rng: &mut Pcg64) -> TensorI8 {
+    let n: usize = shape.iter().product();
+    TensorI8::new(shape, (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()).unwrap()
+}
+
+fn main() {
+    header(&format!("Fig 6 benchmark: A = {N}x{K} int8, batch sweep"));
+    let mut rng = Pcg64::seeded(0);
+    let w = rand_i8(&[N, K], &mut rng);
+    let wf = Tensor::randn(&[N, K], 0.05, &mut rng);
+
+    for m in [1usize, 2, 4, 8, 16] {
+        let x = rand_i8(&[m, K], &mut rng);
+        let xf = Tensor::randn(&[m, K], 1.0, &mut rng);
+        let ops = farm_counts(m, N, K).ops() as f64;
+
+        let tf = bench(&format!("qgemm_farm   m={m}"), 300, || {
+            std::hint::black_box(qgemm_farm(&x, &w, 0.01, 0.01));
+        });
+        let tl = bench(&format!("qgemm_lowp   m={m}"), 300, || {
+            std::hint::black_box(qgemm_lowp(&x, &w, 0.01, 0.01));
+        });
+        bench(&format!("gemm_f32     m={m}"), 300, || {
+            std::hint::black_box(gemm_f32(&xf, &wf, None));
+        });
+        println!(
+            "  -> farm {:.2} GOP/s, lowp {:.2} GOP/s, farm/lowp speedup {:.2}x\n",
+            ops / tf / 1e9,
+            ops / tl / 1e9,
+            tl / tf
+        );
+    }
+}

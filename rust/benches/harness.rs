@@ -1,0 +1,51 @@
+//! Shared hand-rolled bench harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain binary (`harness = false`) that
+//! includes this file via `#[path]`/`include!` and reports
+//! min/mean/p50 over adaptive iteration counts.
+
+use std::time::Instant;
+
+/// Run `f` repeatedly for ~`budget_ms`, reporting per-call stats.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> f64 {
+    // warmup
+    f();
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_ms as f64 / 1e3 / once).ceil() as usize).clamp(3, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    println!(
+        "{name:<44} min {:>10} p50 {:>10} mean {:>10} ({iters} iters)",
+        fmt(min),
+        fmt(p50),
+        fmt(mean)
+    );
+    min
+}
+
+pub fn fmt(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n==== {title} ====");
+}

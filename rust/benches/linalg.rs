@@ -1,0 +1,37 @@
+//! Bench: the SVD / warmstart path (the stage-1→2 transition cost) and
+//! the ν diagnostic.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use tracenorm::linalg::{nu_coefficient, svd};
+use tracenorm::prng::Pcg64;
+use tracenorm::tensor::Tensor;
+
+fn main() {
+    header("Jacobi SVD by matrix size (wsj_mini group shapes)");
+    let mut rng = Pcg64::seeded(0);
+    for &(m, n) in &[(288usize, 96usize), (384, 128), (480, 160), (192, 160), (480, 480)] {
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        bench(&format!("svd {m}x{n}"), 600, || {
+            std::hint::black_box(svd(&w).unwrap());
+        });
+    }
+
+    header("nu coefficient");
+    let w = Tensor::randn(&[480, 160], 1.0, &mut rng);
+    bench("nu 480x160", 400, || {
+        std::hint::black_box(nu_coefficient(&w).unwrap());
+    });
+
+    header("truncated reconstruction (rank 40 of 480x160)");
+    let w = Tensor::randn(&[480, 160], 1.0, &mut rng);
+    let s = svd(&w).unwrap();
+    bench("balanced_factors r=40", 300, || {
+        std::hint::black_box(s.balanced_factors(40));
+    });
+    bench("reconstruct r=40", 300, || {
+        std::hint::black_box(s.reconstruct(40));
+    });
+}

@@ -1,0 +1,96 @@
+//! Bench: embedded streaming engine — per-step latency by precision and
+//! time-batch, and the per-component split (rec vs nonrec vs gates).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, fmt, header};
+
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::model::ParamSet;
+use tracenorm::prng::Pcg64;
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::tensor::Tensor;
+
+/// wsj_mini dimensions (keep in sync with python configs).
+fn dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 40,
+        conv: vec![ConvDims { context: 2, dim: 64 }, ConvDims { context: 2, dim: 96 }],
+        gru_dims: vec![96, 128, 160],
+        fc_dim: 192,
+        vocab: 29,
+        total_stride: 4,
+    }
+}
+
+fn params(dims: &ModelDims, rank_frac: f64, seed: u64) -> ParamSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut p = ParamSet::new();
+    let mut prev = dims.feat_dim;
+    for (i, c) in dims.conv.iter().enumerate() {
+        p.set(format!("conv{i}_w"), Tensor::glorot(c.dim, c.context * prev, &mut rng));
+        p.set(format!("conv{i}_b"), Tensor::zeros(&[c.dim]));
+        prev = c.dim;
+    }
+    for (i, &h) in dims.gru_dims.iter().enumerate() {
+        let din = if i == 0 { dims.conv.last().unwrap().dim } else { dims.gru_dims[i - 1] };
+        let r = ((h.min(din) as f64 * rank_frac) as usize).max(4);
+        p.set(format!("rec{i}_u"), Tensor::glorot(3 * h, r, &mut rng));
+        p.set(format!("rec{i}_v"), Tensor::glorot(r, h, &mut rng));
+        p.set(format!("nonrec{i}_u"), Tensor::glorot(3 * h, r, &mut rng));
+        p.set(format!("nonrec{i}_v"), Tensor::glorot(r, din, &mut rng));
+        p.set(format!("gru{i}_b"), Tensor::zeros(&[3 * h]));
+    }
+    let last = *dims.gru_dims.last().unwrap();
+    let r = ((dims.fc_dim.min(last) as f64 * rank_frac) as usize).max(4);
+    p.set("fc_u", Tensor::glorot(dims.fc_dim, r, &mut rng));
+    p.set("fc_v", Tensor::glorot(r, last, &mut rng));
+    p.set("fc_b", Tensor::zeros(&[dims.fc_dim]));
+    p.set("out_w", Tensor::glorot(dims.vocab, dims.fc_dim, &mut rng));
+    p.set("out_b", Tensor::zeros(&[dims.vocab]));
+    p
+}
+
+fn main() {
+    let d = dims();
+    let mut rng = Pcg64::seeded(3);
+    let utter = Tensor::randn(&[96, d.feat_dim], 0.7, &mut rng);
+
+    header("streaming engine: utterance latency by precision / rank");
+    for (label, frac) in [("rank 1.00", 1.0), ("rank 0.25", 0.25)] {
+        let p = params(&d, frac, 1);
+        for prec in [Precision::F32, Precision::Int8] {
+            let engine = Engine::from_params(&d, "partial", &p, prec, 4).unwrap();
+            bench(&format!("{label} {prec:?} transcribe 96 frames"), 400, || {
+                let mut bd = Breakdown::default();
+                std::hint::black_box(engine.transcribe(&utter, &mut bd).unwrap());
+            });
+        }
+    }
+
+    header("time-batch sweep (int8, rank 0.25)");
+    let p = params(&d, 0.25, 1);
+    for tb in [1usize, 2, 4, 8] {
+        let engine = Engine::from_params(&d, "partial", &p, Precision::Int8, tb).unwrap();
+        bench(&format!("time_batch={tb} transcribe"), 400, || {
+            let mut bd = Breakdown::default();
+            std::hint::black_box(engine.transcribe(&utter, &mut bd).unwrap());
+        });
+    }
+
+    header("per-component split (int8, rank 0.25, time_batch 4)");
+    let engine = Engine::from_params(&d, "partial", &p, Precision::Int8, 4).unwrap();
+    let mut bd = Breakdown::default();
+    for _ in 0..50 {
+        let _ = engine.transcribe(&utter, &mut bd).unwrap();
+    }
+    let total = bd.acoustic_total();
+    println!(
+        "frontend {:>9} ({:4.1}%)  nonrec {:>9} ({:4.1}%)  rec {:>9} ({:4.1}%)  gates {:>9} ({:4.1}%)  fc/out {:>9} ({:4.1}%)",
+        fmt(bd.frontend / 50.0), bd.frontend / total * 100.0,
+        fmt(bd.nonrec / 50.0), bd.nonrec / total * 100.0,
+        fmt(bd.rec / 50.0), bd.rec / total * 100.0,
+        fmt(bd.gates / 50.0), bd.gates / total * 100.0,
+        fmt(bd.fc_out / 50.0), bd.fc_out / total * 100.0,
+    );
+}

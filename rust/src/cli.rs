@@ -1,0 +1,124 @@
+//! Hand-rolled CLI (no clap in the offline environment).
+//!
+//! ```text
+//! repro <subcommand> [--key value]...
+//!
+//! subcommands:
+//!   info                         list artifacts + configs from the manifest
+//!   experiment <id|all>          regenerate a paper table/figure (fig1..fig8,
+//!                                table1..table3)
+//!   train                        single training run
+//!                                  --artifact train_mini_partial_full
+//!                                  --epochs 5 --lr 0.003
+//!                                  --lam-rec 0 --lam-nonrec 0
+//!   two-stage                    full §3 pipeline
+//!                                  --stage1 train_mini_partial_full
+//!                                  --family train_mini_partial
+//!                                  --threshold 0.9 --transition 3 --total 8
+//!   transcribe                   train briefly, then transcribe test
+//!                                utterances with the embedded engine
+//!                                  --precision int8|f32
+//!   bench-gemm                   quick farm-vs-lowp timing sweep
+//! ```
+//!
+//! Every flag becomes a config key (`--lam-rec 0.1` → `cli.lam-rec`), and
+//! experiment knobs may be set the same way (`--exp.epochs1 3`).
+
+use crate::configx::Config;
+use crate::error::{Error, Result};
+
+/// A parsed invocation.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub cfg: Config,
+}
+
+pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm> [args]
+  repro experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all>
+  repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
+  repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
+  repro transcribe [--precision int8|f32] [--utts N]
+  repro bench-gemm [--reps N]
+common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";
+
+/// Parse argv (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        return Err(Error::Config(USAGE.into()));
+    }
+    let subcommand = args[0].clone();
+    let mut positional = Vec::new();
+    let mut cfg = Config::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string() // bare flag
+            };
+            // flags with dots address config sections directly; plain
+            // flags live under their own name
+            cfg.set(key, value);
+            i += 1;
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Cli { subcommand, positional, cfg })
+}
+
+impl Cli {
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.cfg.f64_or(name, default)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.cfg.usize_or(name, default)
+    }
+
+    pub fn flag_str(&self, name: &str, default: &str) -> String {
+        self.cfg.str_or(name, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let cli = parse(&s(&["train", "--artifact", "a", "--epochs", "7", "--quiet"])).unwrap();
+        assert_eq!(cli.subcommand, "train");
+        assert_eq!(cli.flag_str("artifact", ""), "a");
+        assert_eq!(cli.flag_usize("epochs", 0), 7);
+        assert!(cli.cfg.bool_or("quiet", false));
+    }
+
+    #[test]
+    fn parses_positional() {
+        let cli = parse(&s(&["experiment", "fig1", "--seed", "3"])).unwrap();
+        assert_eq!(cli.positional, vec!["fig1"]);
+        assert_eq!(cli.flag_usize("seed", 0), 3);
+    }
+
+    #[test]
+    fn empty_args_error() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn dotted_flags_hit_sections() {
+        let cli = parse(&s(&["experiment", "all", "--exp.epochs1", "2"])).unwrap();
+        assert_eq!(cli.cfg.usize_or("exp.epochs1", 0), 2);
+    }
+}

@@ -1,0 +1,187 @@
+//! Config system: a TOML-subset parser + typed access.
+//!
+//! Supports the subset the launcher needs: `[section]` headers, `key =
+//! value` with string/number/bool/array values, `#` comments.  CLI
+//! `--key value` flags overlay file values, so every experiment knob is
+//! settable from either place (see `repro --help`).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Flat "section.key" -> raw value string map with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {}: bad section", lineno + 1)))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            cfg.values.insert(full_key, unquote(value.trim()));
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overlay (e.g. CLI flags over file): other wins.
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.raw(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.raw(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.raw(key)
+            .and_then(|s| match s {
+                "true" | "1" | "yes" => Some(true),
+                "false" | "0" | "no" => Some(false),
+                _ => None,
+            })
+            .unwrap_or(default)
+    }
+
+    /// Comma- or TOML-array-valued key as f64 list.
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        let raw = self.raw(key)?;
+        let inner = raw.trim().trim_start_matches('[').trim_end_matches(']');
+        let vals: Option<Vec<f64>> = inner
+            .split(',')
+            .map(|p| p.trim())
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse().ok())
+            .collect();
+        vals
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' outside quotes
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+seed = 7
+
+[train]
+lr = 0.002            # base LR
+epochs = 40
+scheme = "partial"
+lambdas = [0.0001, 0.0003, 0.001]
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("seed", 0), 7);
+        assert_eq!(c.f64_or("train.lr", 0.0), 0.002);
+        assert_eq!(c.usize_or("train.epochs", 0), 40);
+        assert_eq!(c.str_or("train.scheme", ""), "partial");
+        assert!(c.bool_or("train.verbose", false));
+        assert_eq!(c.f64_list("train.lambdas").unwrap(), vec![1e-4, 3e-4, 1e-3]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.f64_or("nope", 1.5), 1.5);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 3").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.usize_or("a", 0), 1);
+        assert_eq!(base.usize_or("b", 0), 3);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+}

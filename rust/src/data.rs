@@ -1,0 +1,402 @@
+//! Synthetic speech corpus (the WSJ stand-in — see DESIGN.md §3).
+//!
+//! Every utterance is a short word sequence rendered to mel-like feature
+//! frames: each character has a deterministic spectral template (a few
+//! active bands), rendered for a random 6–10 frame duration with
+//! coarticulation blending at boundaries plus white noise.  The mapping
+//! frames→characters is therefore *learnable but non-trivial* (durations
+//! vary, boundaries are blurred, noise corrupts), exercising the identical
+//! CTC + GEMM training machinery as real filterbanks.
+//!
+//! Determinism: the corpus is a pure function of (seed, size); train/dev/
+//! test splits never overlap utterance seeds.
+
+use crate::prng::Pcg64;
+use crate::runtime::{BatchGeom, Value};
+use crate::tensor::Tensor;
+
+/// Built-in word list (small vocabulary, letters only — the alphabet also
+/// carries space and apostrophe; "don't" exercises the apostrophe).
+pub const WORDS: &[&str] = &[
+    "the", "and", "cat", "dog", "run", "sun", "sky", "red", "blue", "green",
+    "fast", "slow", "big", "small", "one", "two", "ten", "go", "stop", "yes",
+    "no", "up", "down", "left", "right", "play", "work", "home", "road", "tree",
+    "bird", "fish", "hand", "eye", "ear", "day", "night", "rain", "snow", "wind",
+    "don't", "it's", "time", "word", "talk", "ask", "call", "deep", "speech", "model",
+];
+
+/// Character alphabet, identical to python configs.ALPHABET:
+/// index 0 = CTC blank, 1 = space, 2 = apostrophe, 3.. = 'a'..'z'.
+pub fn char_to_index(c: char) -> Option<i32> {
+    match c {
+        ' ' => Some(1),
+        '\'' => Some(2),
+        'a'..='z' => Some(3 + (c as u8 - b'a') as i32),
+        _ => None,
+    }
+}
+
+pub fn index_to_char(i: i32) -> Option<char> {
+    match i {
+        1 => Some(' '),
+        2 => Some('\''),
+        3..=28 => Some((b'a' + (i - 3) as u8) as char),
+        _ => None,
+    }
+}
+
+pub fn text_to_labels(text: &str) -> Vec<i32> {
+    text.chars().filter_map(char_to_index).collect()
+}
+
+pub fn labels_to_text(labels: &[i32]) -> String {
+    labels.iter().filter_map(|&i| index_to_char(i)).collect()
+}
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub seed: u64,
+    pub feat_dim: usize,
+    pub max_frames: usize,
+    pub max_label: usize,
+    /// character duration range in frames (inclusive)
+    pub dur_min: usize,
+    pub dur_max: usize,
+    /// white-noise std added to every frame
+    pub noise: f32,
+    /// number of active spectral bands per character template
+    pub bands: usize,
+    /// frontend stride the corpus must stay CTC-feasible for: rendered
+    /// utterances satisfy frames/stride >= labels + repeats + 1 (repeated
+    /// characters need an interposed blank), else they are resampled
+    pub feasibility_stride: usize,
+}
+
+impl CorpusSpec {
+    pub fn standard(seed: u64) -> CorpusSpec {
+        // Difficulty is tuned so that a few epochs of the wsj_mini model
+        // land in the high-single-digit CER range (the paper's WSJ regime):
+        // heavy frame noise + overlapping 3-band templates + duration
+        // jitter keep the mapping learnable but leave headroom for the
+        // regularization and rank trade-offs to be visible.
+        CorpusSpec {
+            seed,
+            feat_dim: 40,
+            max_frames: 128,
+            max_label: 12,
+            dur_min: 4,
+            dur_max: 9,
+            noise: 0.55,
+            bands: 3,
+            feasibility_stride: 4,
+        }
+    }
+}
+
+/// One rendered utterance.
+#[derive(Clone, Debug)]
+pub struct Utterance {
+    pub text: String,
+    pub labels: Vec<i32>,
+    /// (frames, feat_dim)
+    pub feats: Tensor,
+}
+
+/// Deterministic per-character spectral template.
+fn char_template(spec: &CorpusSpec, c: i32) -> Vec<f32> {
+    let mut rng = Pcg64::new(spec.seed ^ 0xc0de, 1000 + c as u64);
+    let mut t = vec![-0.5f32; spec.feat_dim];
+    for _ in 0..spec.bands {
+        let center = rng.below(spec.feat_dim);
+        let amp = rng.uniform_in(0.8, 2.0) as f32;
+        // triangular band of width 3
+        for (off, w) in [(0isize, 1.0f32), (-1, 0.5), (1, 0.5)] {
+            let idx = center as isize + off;
+            if idx >= 0 && (idx as usize) < spec.feat_dim {
+                t[idx as usize] += amp * w;
+            }
+        }
+    }
+    t
+}
+
+/// Render one utterance from text. Returns None if it would exceed the
+/// frame budget.
+pub fn render(spec: &CorpusSpec, text: &str, rng: &mut Pcg64) -> Option<Utterance> {
+    let labels = text_to_labels(text);
+    if labels.is_empty() || labels.len() > spec.max_label {
+        return None;
+    }
+    let mut frames: Vec<Vec<f32>> = Vec::new();
+    let mut prev_t: Option<Vec<f32>> = None;
+    for &c in &labels {
+        let t = char_template(spec, c);
+        let dur = spec.dur_min + rng.below(spec.dur_max - spec.dur_min + 1);
+        for k in 0..dur {
+            let mut f = t.clone();
+            // coarticulation: first frame of a char blends with the
+            // previous char's template
+            if k == 0 {
+                if let Some(p) = &prev_t {
+                    for (fi, pi) in f.iter_mut().zip(p) {
+                        *fi = 0.5 * *fi + 0.5 * pi;
+                    }
+                }
+            }
+            for v in f.iter_mut() {
+                *v += rng.normal_f32(0.0, spec.noise);
+            }
+            frames.push(f);
+        }
+        prev_t = Some(t);
+    }
+    if frames.len() > spec.max_frames {
+        return None;
+    }
+    // CTC feasibility at the frontend stride (repeated labels need an
+    // interposed blank step); infeasible draws are resampled by callers.
+    let repeats = labels.windows(2).filter(|w| w[0] == w[1]).count();
+    if frames.len() / spec.feasibility_stride < labels.len() + repeats + 1 {
+        return None;
+    }
+    let n = frames.len();
+    let data: Vec<f32> = frames.into_iter().flatten().collect();
+    Some(Utterance {
+        text: text.to_string(),
+        labels,
+        feats: Tensor::new(&[n, spec.feat_dim], data).ok()?,
+    })
+}
+
+/// Sample a random utterance text (1–3 words within the label budget).
+pub fn sample_text(spec: &CorpusSpec, rng: &mut Pcg64) -> String {
+    loop {
+        let n_words = 1 + rng.below(3);
+        let mut parts = Vec::new();
+        for _ in 0..n_words {
+            parts.push(WORDS[rng.below(WORDS.len())]);
+        }
+        let text = parts.join(" ");
+        if text.chars().count() <= spec.max_label {
+            return text;
+        }
+    }
+}
+
+/// A split dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: CorpusSpec,
+    pub train: Vec<Utterance>,
+    pub dev: Vec<Utterance>,
+    pub test: Vec<Utterance>,
+}
+
+impl Dataset {
+    /// Generate a corpus of the given split sizes.
+    pub fn generate(spec: CorpusSpec, n_train: usize, n_dev: usize, n_test: usize) -> Dataset {
+        let mut rng = Pcg64::new(spec.seed, 7);
+        let mut make = |n: usize, stream: u64| {
+            let mut out = Vec::with_capacity(n);
+            let mut r = rng.fork(stream);
+            while out.len() < n {
+                let text = sample_text(&spec, &mut r);
+                if let Some(u) = render(&spec, &text, &mut r) {
+                    out.push(u);
+                }
+            }
+            out
+        };
+        let train = make(n_train, 1);
+        let dev = make(n_dev, 2);
+        let test = make(n_test, 3);
+        Dataset { spec, train, dev, test }
+    }
+
+    /// All training transcripts (LM training data).
+    pub fn train_texts(&self) -> Vec<&str> {
+        self.train.iter().map(|u| u.text.as_str()).collect()
+    }
+}
+
+/// A padded batch in artifact wire format.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub feats: Value,
+    pub frame_lens: Value,
+    pub labels: Value,
+    pub label_lens: Value,
+    /// reference texts (for CER)
+    pub texts: Vec<String>,
+}
+
+/// Assemble utterances into the static-shape batch an artifact expects.
+/// Fewer utterances than `geom.batch` are padded with empty (zero-length)
+/// rows whose CTC loss contribution is masked by `label_lens = 0`... the
+/// AOT loss averages over batch rows, so callers should fill full batches
+/// during training (the batcher below does).
+pub fn make_batch(utts: &[&Utterance], geom: &BatchGeom, feat_dim: usize) -> Batch {
+    let b = geom.batch;
+    let mut feats = Tensor::zeros(&[b, geom.max_frames, feat_dim]);
+    let mut frame_lens = vec![0i32; b];
+    let mut labels = vec![0i32; b * geom.max_label];
+    let mut label_lens = vec![0i32; b];
+    let mut texts = Vec::with_capacity(b);
+    for (i, u) in utts.iter().take(b).enumerate() {
+        let t = u.feats.shape()[0];
+        let f = u.feats.shape()[1];
+        let dst = feats.data_mut();
+        for (ti, row) in u.feats.data().chunks(f).enumerate() {
+            let off = (i * geom.max_frames + ti) * feat_dim;
+            dst[off..off + f].copy_from_slice(row);
+        }
+        frame_lens[i] = t as i32;
+        for (j, &l) in u.labels.iter().take(geom.max_label).enumerate() {
+            labels[i * geom.max_label + j] = l;
+        }
+        label_lens[i] = u.labels.len().min(geom.max_label) as i32;
+        texts.push(u.text.clone());
+    }
+    // pad rows replicate the last real utterance to keep the loss finite
+    for i in utts.len()..b {
+        if let Some(u) = utts.last() {
+            let t = u.feats.shape()[0];
+            let f = u.feats.shape()[1];
+            let dst = feats.data_mut();
+            for (ti, row) in u.feats.data().chunks(f).enumerate() {
+                let off = (i * geom.max_frames + ti) * feat_dim;
+                dst[off..off + f].copy_from_slice(row);
+            }
+            frame_lens[i] = t as i32;
+            for (j, &l) in u.labels.iter().take(geom.max_label).enumerate() {
+                labels[i * geom.max_label + j] = l;
+            }
+            label_lens[i] = u.labels.len().min(geom.max_label) as i32;
+            texts.push(u.text.clone());
+        }
+    }
+    Batch {
+        feats: Value::F32(feats),
+        frame_lens: Value::I32(frame_lens, vec![b]),
+        labels: Value::I32(labels, vec![b, geom.max_label]),
+        label_lens: Value::I32(label_lens, vec![b]),
+        texts,
+    }
+}
+
+/// Epoch batcher: shuffles utterance order each epoch (seeded).
+pub struct Batcher<'a> {
+    utts: Vec<&'a Utterance>,
+    geom: BatchGeom,
+    feat_dim: usize,
+    rng: Pcg64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(utts: &'a [Utterance], geom: BatchGeom, feat_dim: usize, seed: u64) -> Self {
+        Batcher {
+            utts: utts.iter().collect(),
+            geom,
+            feat_dim,
+            rng: Pcg64::seeded(seed),
+        }
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.utts.len() / self.geom.batch
+    }
+
+    /// One shuffled epoch of full batches.
+    pub fn epoch(&mut self) -> Vec<Batch> {
+        self.rng.shuffle(&mut self.utts);
+        self.utts
+            .chunks(self.geom.batch)
+            .filter(|c| c.len() == self.geom.batch)
+            .map(|c| make_batch(c, &self.geom, self.feat_dim))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> BatchGeom {
+        BatchGeom { batch: 4, max_frames: 128, max_label: 12 }
+    }
+
+    #[test]
+    fn char_index_roundtrip() {
+        for c in "abcz' ".chars() {
+            let i = char_to_index(c).unwrap();
+            assert_eq!(index_to_char(i), Some(c));
+        }
+        assert_eq!(char_to_index('!'), None);
+        assert_eq!(index_to_char(0), None); // blank is not a character
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = Dataset::generate(CorpusSpec::standard(5), 10, 4, 4);
+        let b = Dataset::generate(CorpusSpec::standard(5), 10, 4, 4);
+        assert_eq!(a.train[3].text, b.train[3].text);
+        assert_eq!(a.train[3].feats, b.train[3].feats);
+        let c = Dataset::generate(CorpusSpec::standard(6), 10, 4, 4);
+        assert!(a.train.iter().zip(&c.train).any(|(x, y)| x.text != y.text));
+    }
+
+    #[test]
+    fn utterances_fit_budgets() {
+        let d = Dataset::generate(CorpusSpec::standard(1), 50, 10, 10);
+        for u in d.train.iter().chain(&d.dev).chain(&d.test) {
+            assert!(u.labels.len() <= 12);
+            assert!(u.feats.shape()[0] <= 128);
+            assert!(u.feats.shape()[0] >= u.labels.len()); // CTC feasibility
+            assert_eq!(u.labels, text_to_labels(&u.text));
+        }
+    }
+
+    #[test]
+    fn same_char_renders_similarly_different_chars_differ() {
+        let spec = CorpusSpec::standard(2);
+        let ta = char_template(&spec, char_to_index('a').unwrap());
+        let ta2 = char_template(&spec, char_to_index('a').unwrap());
+        let tb = char_template(&spec, char_to_index('b').unwrap());
+        assert_eq!(ta, ta2);
+        let diff: f32 = ta.iter().zip(&tb).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "templates too similar: {diff}");
+    }
+
+    #[test]
+    fn batch_shapes_and_padding() {
+        let d = Dataset::generate(CorpusSpec::standard(3), 6, 2, 2);
+        let refs: Vec<&Utterance> = d.train.iter().take(4).collect();
+        let b = make_batch(&refs, &geom(), 40);
+        assert_eq!(b.feats.shape(), vec![4, 128, 40]);
+        assert_eq!(b.labels.shape(), vec![4, 12]);
+        let lens = b.frame_lens.as_i32().unwrap();
+        assert!(lens.iter().all(|&l| l > 0 && l <= 128));
+        // padding beyond frame_lens is zero
+        let feats = b.feats.as_f32().unwrap();
+        let l0 = lens[0] as usize;
+        if l0 < 128 {
+            let row = &feats.data()[(l0 * 40)..(l0 * 40 + 40)];
+            assert!(row.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn batcher_covers_epoch() {
+        let d = Dataset::generate(CorpusSpec::standard(4), 17, 2, 2);
+        let mut b = Batcher::new(&d.train, geom(), 40, 0);
+        let e = b.epoch();
+        assert_eq!(e.len(), 4); // 17 / 4
+        let e2 = b.epoch();
+        // shuffling changes batch composition across epochs (overwhelmingly)
+        let t1: Vec<_> = e.iter().flat_map(|x| x.texts.clone()).collect();
+        let t2: Vec<_> = e2.iter().flat_map(|x| x.texts.clone()).collect();
+        assert_ne!(t1, t2);
+    }
+}

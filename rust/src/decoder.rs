@@ -1,0 +1,351 @@
+//! CTC decoding (greedy + beam search with LM fusion) and error rates.
+//!
+//! Greedy decoding is the fast path the embedded engine uses; beam search
+//! with character-LM fusion is the server/table path (Tables 1–2 report
+//! WER under an external LM).  CER/WER are Levenshtein distances over
+//! characters/words, matching the paper's metrics (§3.2: CER for WSJ
+//! experiments, WER for the production tables).
+
+use std::collections::BTreeMap;
+
+use crate::data::{index_to_char, labels_to_text};
+use crate::lm::CharLm;
+use crate::tensor::Tensor;
+
+pub const BLANK: i32 = 0;
+
+/// Greedy (best-path) decode of one utterance.
+/// `logprobs`: (T, V) log-softmax rows; `len`: valid frames.
+pub fn greedy_decode(logprobs: &Tensor, len: usize) -> Vec<i32> {
+    let v = logprobs.cols();
+    let mut out = Vec::new();
+    let mut prev = -1i32;
+    for t in 0..len.min(logprobs.rows()) {
+        let row = logprobs.row(t);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for j in 0..v {
+            if row[j] > best_v {
+                best_v = row[j];
+                best = j;
+            }
+        }
+        let c = best as i32;
+        if c != prev && c != BLANK {
+            out.push(c);
+        }
+        prev = c;
+    }
+    out
+}
+
+/// Prefix beam search with optional character-LM shallow fusion.
+///
+/// Standard CTC prefix beam search (Hannun et al.): beams are label
+/// prefixes carrying (log p_blank, log p_nonblank); extending by character
+/// `c` adds `lm_weight · logP_lm(c | prefix)`.
+pub fn beam_decode(
+    logprobs: &Tensor,
+    len: usize,
+    beam_width: usize,
+    lm: Option<&CharLm>,
+    lm_weight: f64,
+) -> Vec<i32> {
+    let v = logprobs.cols();
+    // prefix -> (p_b, p_nb) in log space
+    let mut beams: BTreeMap<Vec<i32>, (f64, f64)> = BTreeMap::new();
+    beams.insert(vec![], (0.0, f64::NEG_INFINITY));
+
+    for t in 0..len.min(logprobs.rows()) {
+        let row = logprobs.row(t);
+        let mut next: BTreeMap<Vec<i32>, (f64, f64)> = BTreeMap::new();
+        for (prefix, &(pb, pnb)) in &beams {
+            let p_total = logaddexp(pb, pnb);
+            // extend with blank: prefix unchanged
+            {
+                let e = next.entry(prefix.clone()).or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
+                e.0 = logaddexp(e.0, p_total + row[BLANK as usize] as f64);
+            }
+            // repeat last char: stays same prefix (non-blank path)
+            if let Some(&last) = prefix.last() {
+                let e = next.entry(prefix.clone()).or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
+                e.1 = logaddexp(e.1, pnb + row[last as usize] as f64);
+            }
+            // extend with a new character
+            for c in 1..v as i32 {
+                let p_c = row[c as usize] as f64;
+                if p_c < -14.0 {
+                    continue; // prune improbable symbols
+                }
+                let mut ext = prefix.clone();
+                ext.push(c);
+                // repeated char requires the blank path; different char any
+                let base = if Some(&c) == prefix.last() { pb } else { p_total };
+                if base == f64::NEG_INFINITY {
+                    continue;
+                }
+                let lm_bonus = match lm {
+                    Some(model) => lm_weight * model.logp(prefix, c),
+                    None => 0.0,
+                };
+                let e = next.entry(ext).or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
+                e.1 = logaddexp(e.1, base + p_c + lm_bonus);
+            }
+        }
+        // keep top beams
+        let mut scored: Vec<(Vec<i32>, (f64, f64))> = next.into_iter().collect();
+        scored.sort_by(|a, b| {
+            logaddexp(b.1 .0, b.1 .1)
+                .partial_cmp(&logaddexp(a.1 .0, a.1 .1))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        scored.truncate(beam_width);
+        beams = scored.into_iter().collect();
+    }
+
+    beams
+        .into_iter()
+        .max_by(|a, b| {
+            logaddexp(a.1 .0, a.1 .1)
+                .partial_cmp(&logaddexp(b.1 .0, b.1 .1))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .map(|(prefix, _)| prefix)
+        .unwrap_or_default()
+}
+
+fn logaddexp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+// ---------------------------------------------------------------------------
+// Error rates.
+// ---------------------------------------------------------------------------
+
+/// Levenshtein edit distance between two sequences.
+pub fn levenshtein<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let cost = if a[i - 1] == b[j - 1] { 0 } else { 1 };
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Character error rate of hypothesis vs reference text.
+pub fn cer(hyp: &str, reference: &str) -> f64 {
+    let h: Vec<char> = hyp.chars().collect();
+    let r: Vec<char> = reference.chars().collect();
+    if r.is_empty() {
+        return if h.is_empty() { 0.0 } else { 1.0 };
+    }
+    levenshtein(&h, &r) as f64 / r.len() as f64
+}
+
+/// Word error rate.
+pub fn wer(hyp: &str, reference: &str) -> f64 {
+    let h: Vec<&str> = hyp.split_whitespace().collect();
+    let r: Vec<&str> = reference.split_whitespace().collect();
+    if r.is_empty() {
+        return if h.is_empty() { 0.0 } else { 1.0 };
+    }
+    levenshtein(&h, &r) as f64 / r.len() as f64
+}
+
+/// Aggregate error rates over a corpus (edit-distance-weighted, the
+/// standard corpus-level definition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    pub char_edits: usize,
+    pub char_total: usize,
+    pub word_edits: usize,
+    pub word_total: usize,
+    pub utterances: usize,
+}
+
+impl ErrorStats {
+    pub fn push(&mut self, hyp: &str, reference: &str) {
+        let h: Vec<char> = hyp.chars().collect();
+        let r: Vec<char> = reference.chars().collect();
+        self.char_edits += levenshtein(&h, &r);
+        self.char_total += r.len();
+        let hw: Vec<&str> = hyp.split_whitespace().collect();
+        let rw: Vec<&str> = reference.split_whitespace().collect();
+        self.word_edits += levenshtein(&hw, &rw);
+        self.word_total += rw.len();
+        self.utterances += 1;
+    }
+
+    pub fn cer(&self) -> f64 {
+        if self.char_total == 0 {
+            0.0
+        } else {
+            self.char_edits as f64 / self.char_total as f64
+        }
+    }
+
+    pub fn wer(&self) -> f64 {
+        if self.word_total == 0 {
+            0.0
+        } else {
+            self.word_edits as f64 / self.word_total as f64
+        }
+    }
+}
+
+/// Decode a batch of logprob tensors to text via greedy decoding.
+pub fn transcript_greedy(logprobs: &Tensor, len: usize) -> String {
+    labels_to_text(&greedy_decode(logprobs, len))
+}
+
+/// Decode to text via beam search.
+pub fn transcript_beam(
+    logprobs: &Tensor,
+    len: usize,
+    beam: usize,
+    lm: Option<&CharLm>,
+    lm_weight: f64,
+) -> String {
+    beam_decode(logprobs, len, beam, lm, lm_weight)
+        .iter()
+        .filter_map(|&l| index_to_char(l))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proplite;
+
+    /// Build (T, V) logprobs that put mass `p` on the path and spread the
+    /// rest.
+    fn path_logprobs(path: &[i32], v: usize, p: f32) -> Tensor {
+        let t = path.len();
+        let rest = ((1.0 - p) / (v as f32 - 1.0)).ln();
+        let mut m = Tensor::full(&[t, v], rest);
+        for (ti, &c) in path.iter().enumerate() {
+            m.set2(ti, c as usize, p.ln());
+        }
+        m
+    }
+
+    #[test]
+    fn greedy_collapses_repeats_and_blanks() {
+        // path: a a <b> a b b  => "aab" in label space
+        let a = 3i32;
+        let b = 4i32;
+        let lp = path_logprobs(&[a, a, BLANK, a, b, b], 6, 0.9);
+        assert_eq!(greedy_decode(&lp, 6), vec![a, a, b]);
+    }
+
+    #[test]
+    fn greedy_respects_length() {
+        let a = 3i32;
+        let lp = path_logprobs(&[a, BLANK, a, a], 6, 0.9);
+        assert_eq!(greedy_decode(&lp, 1), vec![a]);
+    }
+
+    #[test]
+    fn beam_equals_greedy_on_peaky_distributions() {
+        let path = [5i32, 5, BLANK, 7, BLANK, 9, 9];
+        let lp = path_logprobs(&path, 12, 0.98);
+        let g = greedy_decode(&lp, path.len());
+        let b = beam_decode(&lp, path.len(), 8, None, 0.0);
+        assert_eq!(g, b);
+    }
+
+    #[test]
+    fn beam_sums_paths_greedy_misses() {
+        // classic case: two frames, p(a)=0.4, p(blank)=0.6 each frame.
+        // greedy gives blank path => ""; beam sums a-paths:
+        // P("a") = 0.4*0.4 + 0.4*0.6 + 0.6*0.4 = 0.64 > P("") = 0.36.
+        let v = 4;
+        let mut lp = Tensor::full(&[2, v], (0.001f32 / 2.0).ln());
+        for t in 0..2 {
+            lp.set2(t, 0, 0.599f32.ln());
+            lp.set2(t, 3, 0.4f32.ln());
+        }
+        assert_eq!(greedy_decode(&lp, 2), Vec::<i32>::new());
+        assert_eq!(beam_decode(&lp, 2, 8, None, 0.0), vec![3]);
+    }
+
+    #[test]
+    fn lm_fusion_steers_ties() {
+        let lm = CharLm::train(&["aa aa aa"], 2, 0);
+        // ambiguous frame: 'a' vs 'b' nearly equal
+        let a = crate::data::char_to_index('a').unwrap();
+        let b = crate::data::char_to_index('b').unwrap();
+        let v = 29;
+        let mut lp = Tensor::full(&[1, v], (0.02f32 / 26.0).ln());
+        lp.set2(0, a as usize, 0.49f32.ln());
+        lp.set2(0, b as usize, 0.494f32.ln());
+        // without LM: 'b' wins; with LM trained on 'a's: 'a' wins
+        assert_eq!(beam_decode(&lp, 1, 4, None, 0.0), vec![b]);
+        assert_eq!(beam_decode(&lp, 1, 4, Some(&lm), 1.0), vec![a]);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
+        assert_eq!(levenshtein(b"", b"abc"), 3);
+        assert_eq!(levenshtein(b"abc", b"abc"), 0);
+    }
+
+    #[test]
+    fn levenshtein_properties() {
+        proplite::check(
+            "levenshtein-triangle",
+            60,
+            |rng, size| {
+                let mk = |rng: &mut crate::prng::Pcg64| -> Vec<u8> {
+                    (0..rng.below(size + 2)).map(|_| rng.below(3) as u8).collect()
+                };
+                (mk(rng), mk(rng), mk(rng))
+            },
+            |(a, b, c)| {
+                let ab = levenshtein(a, b);
+                let bc = levenshtein(b, c);
+                let ac = levenshtein(a, c);
+                // symmetry, identity, triangle inequality
+                ab == levenshtein(b, a)
+                    && levenshtein(a, a) == 0
+                    && ac <= ab + bc
+                    && ab <= a.len().max(b.len())
+            },
+        );
+    }
+
+    #[test]
+    fn error_stats_aggregate() {
+        let mut s = ErrorStats::default();
+        s.push("the cat", "the cat");
+        s.push("the bat", "the cat");
+        assert_eq!(s.utterances, 2);
+        assert!(s.cer() > 0.0 && s.cer() < 0.2);
+        assert!((s.wer() - 1.0 / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cer_wer_edge_cases() {
+        assert_eq!(cer("", ""), 0.0);
+        assert_eq!(cer("a", ""), 1.0);
+        assert_eq!(wer("", "a b"), 1.0);
+        assert_eq!(wer("a b", "a b"), 0.0);
+    }
+}

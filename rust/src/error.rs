@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("json parse error at byte {pos}: {msg}")]
+    Json { pos: usize, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("linalg error: {0}")]
+    Linalg(String),
+
+    #[error("train error: {0}")]
+    Train(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

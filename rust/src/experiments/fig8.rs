@@ -1,0 +1,144 @@
+//! Figure 8: CER vs parameters — low-rank factorization vs learned
+//! (magnitude) sparsity vs width-scaled dense baselines.
+//!
+//! * low-rank points: stage-2 models from the best trace-norm stage-1 run
+//!   at several SVD thresholds (partially-joint scheme, growing dims);
+//! * sparse points: dense warmup → magnitude pruning (masks) → finetune,
+//!   plotted at *effective* (surviving) parameter counts — the Narang et
+//!   al. baseline;
+//! * dense points: the same architecture with GRU widths scaled to 1.0 /
+//!   0.75 / 0.5.
+
+use crate::data::Batcher;
+use crate::error::Result;
+use crate::model::{
+    effective_params, magnitude_masks, pick_rank_frac, warmstart, ParamSet,
+};
+use crate::train::{eval_name, frac_tag, Evaluator, TrainOpts, Trainer};
+
+use super::stage1::{self, TRACE};
+use super::{f, Csv, Ctx};
+
+pub fn fig8(ctx: &mut Ctx) -> Result<()> {
+    stage1::sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap().clone();
+    let best_trace = stage1::best_run(&runs, TRACE).unwrap().clone();
+    let epochs = ctx.epochs2();
+
+    let mut csv = Csv::create(&ctx.out, "fig8", &["technique", "params", "cer"])?;
+    println!("\nFig 8 — CER vs parameters by reduction technique");
+    println!("{:>12} {:>12} {:>8}", "technique", "params", "CER");
+    let mut emit = |csv: &mut Csv, tech: &str, params: usize, cer: f64| -> Result<()> {
+        println!("{tech:>12} {params:>12} {cer:>8.3}");
+        csv.row(&[tech.into(), params.to_string(), f(cer)])
+    };
+
+    // ---- low-rank series (reuses the fig4 machinery)
+    for th in [0.5, 0.7, 0.9] {
+        let frac = pick_rank_frac(&best_trace.params, th, &ctx.rt.manifest().rank_ladder)?;
+        let artifact = format!("train_mini_partial_{}", frac_tag(frac));
+        let spec = ctx.rt.manifest().artifact(&artifact)?.clone();
+        let p0 = warmstart(&best_trace.params, &spec, ctx.seed() + 8)?;
+        let opts = TrainOpts {
+            seed: ctx.seed(),
+            lr: (best_trace.final_lr * 3.0).min(ctx.lr()),
+            lr_decay: 0.92,
+            epochs,
+            quiet: true,
+            ..Default::default()
+        };
+        let mut batcher = Batcher::new(
+            &ctx.data.train,
+            spec.batch.unwrap(),
+            ctx.data.spec.feat_dim,
+            ctx.seed() ^ 0x81,
+        );
+        let mut t = Trainer::with_params(&ctx.rt, &artifact, p0, opts)?;
+        t.run(&mut batcher, None, None)?;
+        let cer = Evaluator::new(&ctx.rt, &eval_name(&artifact))?
+            .greedy_cer(&t.params, &ctx.data.dev)?
+            .cer();
+        emit(&mut csv, "low-rank", t.params.num_scalars(), cer)?;
+    }
+
+    // ---- sparsity series: dense warmup -> magnitude prune -> finetune
+    {
+        let artifact = "train_mini_unfact_masked";
+        let spec = ctx.rt.manifest().artifact(artifact)?.clone();
+        for sparsity in [0.6, 0.8, 0.9] {
+            let warm_opts = TrainOpts {
+                seed: ctx.seed(),
+                lr: ctx.lr(),
+                lr_decay: 0.92,
+                epochs: (ctx.epochs1() / 2).max(1),
+                quiet: true,
+                ..Default::default()
+            };
+            let mut batcher = Batcher::new(
+                &ctx.data.train,
+                spec.batch.unwrap(),
+                ctx.data.spec.feat_dim,
+                ctx.seed() ^ 0x82,
+            );
+            let mut t = Trainer::new(&ctx.rt, artifact, warm_opts)?;
+            // warmup with all-ones masks
+            let ones = all_ones_masks(&spec, &t.params)?;
+            t.set_masks(ones)?;
+            t.run(&mut batcher, None, None)?;
+            // prune + finetune
+            let masks = magnitude_masks(&t.params, sparsity)?;
+            t.set_masks(masks.clone())?;
+            t.opts.epochs = epochs;
+            t.run(&mut batcher, None, None)?;
+            let cer = Evaluator::new(&ctx.rt, "eval_mini_unfact")?
+                .greedy_cer(&t.params, &ctx.data.dev)?
+                .cer();
+            emit(&mut csv, "sparse", effective_params(&t.params, &masks), cer)?;
+        }
+    }
+
+    // ---- width-scaled dense baselines
+    for (tech, artifact) in [
+        ("dense-1.0x", "train_mini_unfact"),
+        ("dense-0.75x", "train_s75_unfact"),
+        ("dense-0.5x", "train_s50_unfact"),
+    ] {
+        let spec = ctx.rt.manifest().artifact(artifact)?.clone();
+        let opts = TrainOpts {
+            seed: ctx.seed(),
+            lr: ctx.lr(),
+            lr_decay: 0.92,
+            epochs: ctx.epochs1() + epochs,
+            quiet: true,
+            ..Default::default()
+        };
+        let mut batcher = Batcher::new(
+            &ctx.data.train,
+            spec.batch.unwrap(),
+            ctx.data.spec.feat_dim,
+            ctx.seed() ^ 0x83,
+        );
+        let mut t = Trainer::new(&ctx.rt, artifact, opts)?;
+        t.run(&mut batcher, None, None)?;
+        let cer = Evaluator::new(&ctx.rt, &eval_name(artifact))?
+            .greedy_cer(&t.params, &ctx.data.dev)?
+            .cer();
+        emit(&mut csv, tech, t.params.num_scalars(), cer)?;
+    }
+
+    csv.done();
+    Ok(())
+}
+
+/// All-ones masks matching an artifact's mask inputs.
+fn all_ones_masks(
+    spec: &crate::runtime::ArtifactSpec,
+    _params: &ParamSet,
+) -> Result<ParamSet> {
+    let mut masks = ParamSet::new();
+    for mn in &spec.mask_names {
+        let shape = spec.input_shape(mn)?;
+        masks.set(mn.clone(), crate::tensor::Tensor::full(shape, 1.0));
+    }
+    Ok(masks)
+}

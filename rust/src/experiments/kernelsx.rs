@@ -1,0 +1,129 @@
+//! Figure 6 (farm vs gemmlowp GEMM benchmark) and Figure 7 (ν geometry).
+
+use crate::devicesim::{self, Device};
+use crate::error::Result;
+use crate::kernels::{farm_counts, lowp_counts, qgemm_farm, qgemm_lowp};
+use crate::linalg::nu_from_singular_values;
+use crate::prng::Pcg64;
+use crate::tensor::TensorI8;
+
+use super::{f, Csv, Ctx};
+
+/// The paper's Figure-6 benchmark shape: A is 6144 × 320, batch 1..16.
+pub const FIG6_N: usize = 6144;
+pub const FIG6_K: usize = 320;
+pub const FIG6_BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+fn rand_i8(shape: &[usize], rng: &mut Pcg64) -> TensorI8 {
+    let n: usize = shape.iter().product();
+    let data: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    TensorI8::new(shape, data).unwrap()
+}
+
+/// Measure a kernel's wall-clock (seconds/call, best of `reps`).
+pub fn time_kernel(
+    kernel: impl Fn(&TensorI8, &TensorI8) -> crate::tensor::Tensor,
+    m: usize,
+    reps: usize,
+) -> f64 {
+    let mut rng = Pcg64::seeded(42 + m as u64);
+    let x = rand_i8(&[m, FIG6_K], &mut rng);
+    let w = rand_i8(&[FIG6_N, FIG6_K], &mut rng);
+    let _ = kernel(&x, &w); // warm
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let out = kernel(&x, &w);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&out);
+        best = best.min(dt);
+    }
+    best
+}
+
+/// Fig 6: farm vs gemmlowp-style GEMM across batch sizes; host-measured,
+/// then roofline-projected onto the paper's three devices.
+pub fn fig6(ctx: &mut Ctx) -> Result<()> {
+    let reps = ctx.cfg.usize_or("exp.fig6_reps", 5);
+    let host = devicesim::host_device(50.0, 10.0);
+    let devices: [&Device; 3] =
+        [&devicesim::IPHONE7, &devicesim::IPHONE6, &devicesim::RPI3];
+
+    let mut csv = Csv::create(
+        &ctx.out,
+        "fig6",
+        &["batch", "kernel", "host_secs", "host_gops", "iphone7_gops", "iphone6_gops", "rpi3_gops", "speedup_farm_over_lowp"],
+    )?;
+    println!("\nFig 6 — farm vs gemmlowp, A = {FIG6_N}x{FIG6_K} int8");
+    println!(
+        "{:>6} {:>8} {:>10} {:>9} | {:>8} {:>8} {:>8}",
+        "batch", "kernel", "host(ms)", "GOP/s", "iPh7", "iPh6", "RPi3"
+    );
+
+    for &m in &FIG6_BATCHES {
+        let tf = time_kernel(|x, w| qgemm_farm(x, w, 0.01, 0.01), m, reps);
+        let tl = time_kernel(|x, w| qgemm_lowp(x, w, 0.01, 0.01), m, reps);
+        let speedup = tl / tf;
+        // GOP/s is *useful* ops (m·n·k MACs) regardless of internal
+        // tile padding — the paper plots effective GEMM throughput.
+        let useful = farm_counts(m, FIG6_N, FIG6_K).ops();
+        for (name, secs, counts) in [
+            ("farm", tf, farm_counts(m, FIG6_N, FIG6_K)),
+            ("lowp", tl, lowp_counts(m, FIG6_N, FIG6_K)),
+        ] {
+            let gops = useful as f64 / secs / 1e9;
+            let dev_gops: Vec<f64> = devices
+                .iter()
+                .map(|d| {
+                    let t = d.project_from_host(&counts, &host, secs);
+                    useful as f64 / t / 1e9
+                })
+                .collect();
+            println!(
+                "{:>6} {:>8} {:>10.3} {:>9.2} | {:>8.2} {:>8.2} {:>8.2}",
+                m,
+                name,
+                secs * 1e3,
+                gops,
+                dev_gops[0],
+                dev_gops[1],
+                dev_gops[2]
+            );
+            csv.row(&[
+                m.to_string(),
+                name.into(),
+                f(secs),
+                f(gops),
+                f(dev_gops[0]),
+                f(dev_gops[1]),
+                f(dev_gops[2]),
+                f(speedup),
+            ])?;
+        }
+        println!("{:>6} {:>8} farm/lowp speedup: {:.2}x", m, "", speedup);
+    }
+    csv.done();
+    Ok(())
+}
+
+/// Fig 7: the ℓ¹/ℓ² geometry of ν in 2-D — sweep the angle of a fixed-ℓ²
+/// singular-value vector and report ‖σ‖₁ and ν.
+pub fn fig7(ctx: &mut Ctx) -> Result<()> {
+    let mut csv = Csv::create(&ctx.out, "fig7", &["theta", "sigma1", "sigma2", "l1", "nu"])?;
+    println!("\nFig 7 — contours of the nondimensional trace norm (2-D)");
+    println!("{:>8} {:>8} {:>8} {:>8} {:>8}", "theta", "s1", "s2", "l1", "nu");
+    let steps = 9;
+    for i in 0..=steps {
+        let theta = std::f64::consts::FRAC_PI_2 * i as f64 / steps as f64;
+        let (s1, s2) = (theta.cos() as f32, theta.sin() as f32);
+        // fold into descending order (singular values are sorted)
+        let (a, b) = if s1 >= s2 { (s1, s2) } else { (s2, s1) };
+        let l1 = a + b;
+        let nu = nu_from_singular_values(&[a.max(1e-9), b.max(0.0)])?;
+        println!("{:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3}", theta, a, b, l1, nu);
+        csv.row(&[f(theta), f(a as f64), f(b as f64), f(l1 as f64), f(nu as f64)])?;
+    }
+    println!("  (l1 ranges from 1 at rank-1 to sqrt(2) at equal singular values; nu from 0 to 1)");
+    csv.done();
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! Every experiment prints rows mirroring the paper's table/series and
+//! writes `results/<id>.csv`.  The mapping from paper artifact to module
+//! is in DESIGN.md §5; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod extras;
+pub mod fig8;
+pub mod kernelsx;
+pub mod stage1;
+pub mod stage2;
+pub mod tables;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::configx::Config;
+use crate::data::{CorpusSpec, Dataset};
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub data: Dataset,
+    pub out: PathBuf,
+    pub cfg: Config,
+    /// stage-1 λ-sweep cache shared by figs 1–4 (populated on first use)
+    pub stage1_sweep: Option<Vec<stage1::SweepRun>>,
+    /// trained deployment tiers shared by Tables 1–2
+    pub tiers: Option<Vec<tables::Tier>>,
+}
+
+impl Ctx {
+    pub fn new(cfg: Config) -> Result<Ctx> {
+        let artifacts = cfg.str_or("artifacts", "artifacts");
+        let rt = Runtime::open(&artifacts)?;
+        let seed = cfg.usize_or("seed", 17) as u64;
+        let n_train = cfg.usize_or("exp.n_train", 192);
+        let n_dev = cfg.usize_or("exp.n_dev", 48);
+        let n_test = cfg.usize_or("exp.n_test", 48);
+        let data = Dataset::generate(CorpusSpec::standard(seed), n_train, n_dev, n_test);
+        let out = PathBuf::from(cfg.str_or("results", "results"));
+        std::fs::create_dir_all(&out)?;
+        Ok(Ctx { rt, data, out, cfg, stage1_sweep: None, tiers: None })
+    }
+
+    /// Default stage-1 training epochs.
+    pub fn epochs1(&self) -> usize {
+        self.cfg.usize_or("exp.epochs1", 4)
+    }
+
+    /// Default stage-2 training epochs.
+    pub fn epochs2(&self) -> usize {
+        self.cfg.usize_or("exp.epochs2", 4)
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.cfg.f64_or("exp.lr", 2e-3) as f32
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.cfg.usize_or("seed", 17) as u64
+    }
+}
+
+/// Tiny CSV writer.
+pub struct Csv {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl Csv {
+    pub fn create(dir: &Path, name: &str, header: &[&str]) -> Result<Csv> {
+        let path = dir.join(format!("{name}.csv"));
+        let mut file = std::fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Csv { path, file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn done(self) -> PathBuf {
+        println!("  -> wrote {}", self.path.display());
+        self.path
+    }
+}
+
+/// Format helper for CSV fields.
+pub fn f(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+/// Experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "table1", "table2", "fig6", "fig7",
+    "fig8", "table3",
+];
+
+/// Extension experiments beyond the paper's numbered artifacts.
+pub const EXTRAS: &[&str] = &["ablation-schemes", "latency", "paper-dims"];
+
+/// Dispatch experiments by id: "all", "extras", a single id, or a
+/// comma-separated list (which shares one sweep/tier cache).
+pub fn run(id: &str, cfg: Config) -> Result<()> {
+    let mut ctx = Ctx::new(cfg)?;
+    let ids: Vec<&str> = match id {
+        "all" => ALL.to_vec(),
+        "extras" => EXTRAS.to_vec(),
+        other => other.split(',').map(|s| s.trim()).collect(),
+    };
+    for x in &ids {
+        if ids.len() > 1 {
+            println!("\n=== experiment {x} ===");
+        }
+        run_in(&mut ctx, x)?;
+    }
+    Ok(())
+}
+
+fn run_in(ctx: &mut Ctx, id: &str) -> Result<()> {
+    match id {
+        // figs 1-3 share the stage-1 sweep; each re-renders its view
+        "fig1" => stage1::fig1(ctx),
+        "fig2" => stage1::fig2(ctx),
+        "fig3" => stage1::fig3(ctx),
+        "fig4" => stage2::fig4(ctx),
+        "fig5" => stage2::fig5(ctx),
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "fig6" => kernelsx::fig6(ctx),
+        "fig7" => kernelsx::fig7(ctx),
+        "fig8" => fig8::fig8(ctx),
+        "ablation-schemes" => extras::ablation_schemes(ctx),
+        "latency" => extras::latency(ctx),
+        "paper-dims" => extras::paper_dims(ctx),
+        other => Err(Error::other(format!(
+            "unknown experiment '{other}' (known: {}, {})",
+            ALL.join(", "),
+            EXTRAS.join(", ")
+        ))),
+    }
+}

@@ -1,0 +1,246 @@
+//! Figures 1–3: the stage-1 regularization sweep.
+//!
+//! One λ grid is trained per regularization type (trace-norm surrogate on
+//! the factored model vs ℓ² on the dense model, plus the λ=0 baselines);
+//! the three figures are views over the same runs:
+//!
+//! * **Fig 1** — final dev CER as a function of (λ_rec, λ_nonrec);
+//! * **Fig 2** — ν(W) of the 3rd GRU's nonrec weight vs λ_nonrec (λ_rec=0)
+//!   and of its rec weight vs λ_rec (λ_nonrec=0);
+//! * **Fig 3** — rank needed for 90 % variance vs CER, per run.
+
+use crate::data::Batcher;
+use crate::error::Result;
+use crate::model::{diagnose_groups, ParamSet};
+use crate::train::{eval_name, Evaluator, TrainOpts, Trainer};
+
+use super::{f, Csv, Ctx};
+
+/// Stage-1 regularization kind.
+pub const TRACE: &str = "trace_norm";
+pub const L2: &str = "l2";
+
+#[derive(Clone, Debug)]
+pub struct GroupDiagLite {
+    pub base: String,
+    pub nu: f32,
+    pub rank90: usize,
+    pub full: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepRun {
+    pub reg: &'static str,
+    pub lam_rec: f32,
+    pub lam_nonrec: f32,
+    pub cer: f64,
+    pub diags: Vec<GroupDiagLite>,
+    pub params: ParamSet,
+    pub final_lr: f32,
+}
+
+pub fn artifact_for(reg: &str) -> &'static str {
+    match reg {
+        TRACE => "train_mini_partial_full",
+        _ => "train_mini_unfact",
+    }
+}
+
+/// Train one stage-1 model and collect diagnostics.
+pub fn train_one(
+    ctx: &Ctx,
+    reg: &'static str,
+    lam_rec: f32,
+    lam_nonrec: f32,
+    epochs: usize,
+) -> Result<SweepRun> {
+    let artifact = artifact_for(reg);
+    let opts = TrainOpts {
+        seed: ctx.seed(),
+        lr: ctx.lr(),
+        lr_decay: 0.92,
+        epochs,
+        lam_rec,
+        lam_nonrec,
+        quiet: true,
+    };
+    let mut batcher = Batcher::new(
+        &ctx.data.train,
+        ctx.rt.manifest().artifact(artifact)?.batch.unwrap(),
+        ctx.data.spec.feat_dim,
+        ctx.seed() ^ 0xb,
+    );
+    let eval = Evaluator::new(&ctx.rt, &eval_name(artifact))?;
+    let mut t = Trainer::new(&ctx.rt, artifact, opts)?;
+    t.run(&mut batcher, None, None)?;
+    let cer = eval.greedy_cer(&t.params, &ctx.data.dev)?.cer();
+    let diags = diagnose_groups(&t.params)?
+        .into_iter()
+        .map(|d| GroupDiagLite { base: d.base, nu: d.nu, rank90: d.rank90, full: d.full_rank })
+        .collect();
+    Ok(SweepRun {
+        reg,
+        lam_rec,
+        lam_nonrec,
+        cer,
+        diags,
+        params: t.params,
+        final_lr: t.lr,
+    })
+}
+
+/// The shared λ sweep (cached on the context).
+pub fn sweep(ctx: &mut Ctx) -> Result<()> {
+    if ctx.stage1_sweep.is_some() {
+        return Ok(());
+    }
+    let lams: Vec<f32> = ctx
+        .cfg
+        .f64_list("exp.lambdas")
+        .unwrap_or_else(|| vec![3e-4, 3e-3])
+        .into_iter()
+        .map(|v| v as f32)
+        .collect();
+    let mults: [f32; 3] = [0.0, 1.0, 3.0];
+    let epochs = ctx.epochs1();
+
+    let mut grid: Vec<(f32, f32)> = vec![(0.0, 0.0)];
+    for &ln in &lams {
+        for &m in &mults {
+            grid.push((m * ln, ln)); // (λ_rec, λ_nonrec)
+        }
+        grid.push((ln, 0.0)); // λ_nonrec = 0 column (Fig 2 right panel)
+    }
+
+    let mut runs = Vec::new();
+    for reg in [TRACE, L2] {
+        for &(lr_, ln) in &grid {
+            let t0 = std::time::Instant::now();
+            let run = train_one(ctx, reg, lr_, ln, epochs)?;
+            println!(
+                "  [{reg:>10}] lam_rec={lr_:<8.0e} lam_nonrec={ln:<8.0e} CER {:.3}  ({:.0}s)",
+                run.cer,
+                t0.elapsed().as_secs_f64()
+            );
+            runs.push(run);
+        }
+    }
+    ctx.stage1_sweep = Some(runs);
+    Ok(())
+}
+
+/// Fig 1: CER vs (λ_rec, λ_nonrec) per regularization type.
+pub fn fig1(ctx: &mut Ctx) -> Result<()> {
+    sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap();
+    let mut csv = Csv::create(&ctx.out, "fig1", &["reg", "lam_rec", "lam_nonrec", "cer"])?;
+    println!("\nFig 1 — CER by regularization strength");
+    println!("{:>12} {:>10} {:>10} {:>8}", "reg", "lam_rec", "lam_nonrec", "CER");
+    for r in runs.iter() {
+        println!(
+            "{:>12} {:>10.1e} {:>10.1e} {:>8.3}",
+            r.reg, r.lam_rec, r.lam_nonrec, r.cer
+        );
+        csv.row(&[
+            r.reg.to_string(),
+            format!("{:e}", r.lam_rec),
+            format!("{:e}", r.lam_nonrec),
+            f(r.cer),
+        ])?;
+    }
+    csv.done();
+    Ok(())
+}
+
+/// Fig 2: ν of the 3rd GRU's weights vs regularization strength.
+pub fn fig2(ctx: &mut Ctx) -> Result<()> {
+    sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap();
+    let mut csv = Csv::create(
+        &ctx.out,
+        "fig2",
+        &["panel", "reg", "lambda", "nu"],
+    )?;
+    println!("\nFig 2 — nondimensional trace norm coefficient nu(W), GRU-3");
+    println!("  left panel: nonrec2 weight, lam_rec = 0, sweep lam_nonrec");
+    for r in runs.iter().filter(|r| r.lam_rec == 0.0) {
+        if let Some(d) = r.diags.iter().find(|d| d.base == "nonrec2") {
+            println!("   [{:>10}] lambda={:<9.1e} nu={:.3}", r.reg, r.lam_nonrec, d.nu);
+            csv.row(&[
+                "nonrec".into(),
+                r.reg.to_string(),
+                format!("{:e}", r.lam_nonrec),
+                f(d.nu as f64),
+            ])?;
+        }
+    }
+    println!("  right panel: rec2 weight, lam_nonrec = 0, sweep lam_rec");
+    for r in runs.iter().filter(|r| r.lam_nonrec == 0.0) {
+        if let Some(d) = r.diags.iter().find(|d| d.base == "rec2") {
+            println!("   [{:>10}] lambda={:<9.1e} nu={:.3}", r.reg, r.lam_rec, d.nu);
+            csv.row(&[
+                "rec".into(),
+                r.reg.to_string(),
+                format!("{:e}", r.lam_rec),
+                f(d.nu as f64),
+            ])?;
+        }
+    }
+    csv.done();
+    Ok(())
+}
+
+/// Fig 3: rank@90 % variance vs CER (3rd GRU weights), colored by reg.
+pub fn fig3(ctx: &mut Ctx) -> Result<()> {
+    sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap();
+    let mut csv = Csv::create(
+        &ctx.out,
+        "fig3",
+        &["weight", "reg", "lam_rec", "lam_nonrec", "cer", "rank90", "full_rank"],
+    )?;
+    println!("\nFig 3 — SVD rank for 90% variance vs CER (GRU-3)");
+    println!(
+        "{:>8} {:>12} {:>8} {:>8} {:>6}",
+        "weight", "reg", "CER", "rank90", "full"
+    );
+    for r in runs.iter() {
+        for base in ["nonrec2", "rec2"] {
+            if let Some(d) = r.diags.iter().find(|d| d.base == base) {
+                let reg_label = if r.lam_rec == 0.0 && r.lam_nonrec == 0.0 {
+                    "unregularized"
+                } else {
+                    r.reg
+                };
+                println!(
+                    "{:>8} {:>12} {:>8.3} {:>8} {:>6}",
+                    base, reg_label, r.cer, d.rank90, d.full
+                );
+                csv.row(&[
+                    base.into(),
+                    reg_label.into(),
+                    format!("{:e}", r.lam_rec),
+                    format!("{:e}", r.lam_nonrec),
+                    f(r.cer),
+                    d.rank90.to_string(),
+                    d.full.to_string(),
+                ])?;
+            }
+        }
+    }
+    csv.done();
+    Ok(())
+}
+
+/// Best run of a given reg type (lowest CER among regularized runs).
+pub fn best_run<'a>(runs: &'a [SweepRun], reg: &str) -> Option<&'a SweepRun> {
+    runs.iter()
+        .filter(|r| r.reg == reg && (r.lam_rec != 0.0 || r.lam_nonrec != 0.0))
+        .min_by(|a, b| a.cer.partial_cmp(&b.cer).unwrap())
+}
+
+/// The unregularized baseline of a given reg family.
+pub fn unreg_run<'a>(runs: &'a [SweepRun], reg: &str) -> Option<&'a SweepRun> {
+    runs.iter()
+        .find(|r| r.reg == reg && r.lam_rec == 0.0 && r.lam_nonrec == 0.0)
+}

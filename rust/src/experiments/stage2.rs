@@ -1,0 +1,202 @@
+//! Figures 4–5: stage-2 (low-rank) experiments.
+//!
+//! * **Fig 4** — params vs CER of stage-2 models warmstarted from the best
+//!   trace-norm / ℓ² / unregularized stage-1 models at several SVD
+//!   explained-variance thresholds.
+//! * **Fig 5** — fixed parameter target and fixed total epoch budget;
+//!   sweep the stage-1→2 transition epoch (left panel) and record the CER
+//!   trajectory across the transition (right panel).
+
+use crate::data::Batcher;
+use crate::error::Result;
+use crate::model::{pick_rank_frac, warmstart};
+use crate::train::{eval_name, frac_tag, Evaluator, Stage2Lr, TrainOpts, Trainer};
+
+use super::{f, Csv, Ctx};
+use super::stage1::{self, SweepRun, L2, TRACE};
+
+/// Train a stage-2 model warmstarted from `run` at `threshold`; returns
+/// (params count, dev CER, rank_frac).
+fn stage2_from(
+    ctx: &Ctx,
+    run: &SweepRun,
+    threshold: f64,
+    epochs: usize,
+) -> Result<(usize, f64, f64)> {
+    let frac = pick_rank_frac(&run.params, threshold, &ctx.rt.manifest().rank_ladder)?;
+    let artifact = format!("train_mini_partial_{}", frac_tag(frac));
+    let spec = ctx.rt.manifest().artifact(&artifact)?.clone();
+    let params = warmstart(&run.params, &spec, ctx.seed() + 1)?;
+    let opts = TrainOpts {
+        seed: ctx.seed(),
+        // §3.2.2: stage-2 initial LR = 3x the final stage-1 LR
+        lr: (run.final_lr * 3.0).min(ctx.lr()),
+        lr_decay: 0.92,
+        epochs,
+        lam_rec: 0.0,
+        lam_nonrec: 0.0,
+        quiet: true,
+    };
+    let mut batcher = Batcher::new(
+        &ctx.data.train,
+        spec.batch.unwrap(),
+        ctx.data.spec.feat_dim,
+        ctx.seed() ^ 0x52,
+    );
+    let eval = Evaluator::new(&ctx.rt, &eval_name(&artifact))?;
+    let mut t = Trainer::with_params(&ctx.rt, &artifact, params, opts)?;
+    t.run(&mut batcher, None, None)?;
+    let cer = eval.greedy_cer(&t.params, &ctx.data.dev)?.cer();
+    Ok((t.params.num_scalars(), cer, frac))
+}
+
+/// Fig 4: number of parameters vs CER by stage-1 regularization type.
+pub fn fig4(ctx: &mut Ctx) -> Result<()> {
+    stage1::sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap().clone();
+    let thresholds = [0.5, 0.7, 0.85, 0.95];
+    let epochs = ctx.epochs2();
+
+    let mut csv = Csv::create(
+        &ctx.out,
+        "fig4",
+        &["stage1_reg", "threshold", "rank_frac", "params", "cer"],
+    )?;
+    println!("\nFig 4 — stage-2 params vs CER by stage-1 regularization");
+    println!(
+        "{:>14} {:>10} {:>10} {:>10} {:>8}",
+        "stage1", "threshold", "rank_frac", "params", "CER"
+    );
+    let sources: Vec<(&str, &SweepRun)> = [
+        stage1::best_run(&runs, TRACE).map(|r| (TRACE, r)),
+        stage1::best_run(&runs, L2).map(|r| (L2, r)),
+        stage1::unreg_run(&runs, L2).map(|r| ("unregularized", r)),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+
+    for (label, run) in sources {
+        for &th in &thresholds {
+            let (params, cer, frac) = stage2_from(ctx, run, th, epochs)?;
+            println!(
+                "{label:>14} {th:>10.2} {frac:>10.3} {params:>10} {cer:>8.3}"
+            );
+            csv.row(&[
+                label.into(),
+                f(th),
+                f(frac),
+                params.to_string(),
+                f(cer),
+            ])?;
+        }
+    }
+    csv.done();
+    Ok(())
+}
+
+/// Fig 5: transition-epoch sweep under a fixed total budget, plus the
+/// convergence trace across the transition.
+pub fn fig5(ctx: &mut Ctx) -> Result<()> {
+    stage1::sweep(ctx)?;
+    let runs = ctx.stage1_sweep.as_ref().unwrap().clone();
+    let total = ctx.cfg.usize_or("exp.fig5_total", ctx.epochs1() + ctx.epochs2());
+    let transitions: Vec<usize> = (1..total).step_by(2.max(total / 4)).collect();
+    let target_frac = 0.25; // the fixed "3M-parameter" analog
+
+    let mut csv = Csv::create(
+        &ctx.out,
+        "fig5",
+        &["reg", "transition_epoch", "final_cer"],
+    )?;
+    let mut curve_csv = Csv::create(
+        &ctx.out,
+        "fig5_curve",
+        &["reg", "epoch", "stage", "dev_cer"],
+    )?;
+
+    println!("\nFig 5 (left) — final CER vs transition epoch (budget {total} epochs)");
+    for reg in [TRACE, L2] {
+        let best = stage1::best_run(&runs, reg).expect("sweep has regularized runs");
+        let (lam_rec, lam_nonrec) = (best.lam_rec, best.lam_nonrec);
+        for &te in &transitions {
+            let (final_cer, curve) =
+                transition_run(ctx, reg, lam_rec, lam_nonrec, te, total, target_frac)?;
+            println!("  [{reg:>10}] transition {te:>2}  final CER {final_cer:.3}");
+            csv.row(&[reg.into(), te.to_string(), f(final_cer)])?;
+            // record the curve for the middle transition (right panel)
+            if te == transitions[transitions.len() / 2] {
+                for (epoch, stage, cer) in curve {
+                    curve_csv.row(&[reg.into(), epoch.to_string(), stage, f(cer)])?;
+                }
+            }
+        }
+    }
+    csv.done();
+    curve_csv.done();
+    Ok(())
+}
+
+/// One fixed-budget run with transition at `te`; returns final CER and the
+/// per-epoch (epoch, stage, dev CER) curve.
+fn transition_run(
+    ctx: &Ctx,
+    reg: &'static str,
+    lam_rec: f32,
+    lam_nonrec: f32,
+    te: usize,
+    total: usize,
+    target_frac: f64,
+) -> Result<(f64, Vec<(usize, String, f64)>)> {
+    let stage1_art = stage1::artifact_for(reg);
+    let spec1 = ctx.rt.manifest().artifact(stage1_art)?.clone();
+    let mut batcher = Batcher::new(
+        &ctx.data.train,
+        spec1.batch.unwrap(),
+        ctx.data.spec.feat_dim,
+        ctx.seed() ^ 0x55,
+    );
+    let eval1 = Evaluator::new(&ctx.rt, &eval_name(stage1_art))?;
+    let opts1 = TrainOpts {
+        seed: ctx.seed(),
+        lr: ctx.lr(),
+        lr_decay: 0.92,
+        epochs: te,
+        lam_rec,
+        lam_nonrec,
+        quiet: true,
+    };
+    let mut t1 = Trainer::new(&ctx.rt, stage1_art, opts1)?;
+    let mut curve = Vec::new();
+    for e in 0..te {
+        t1.run_one_epoch(&mut batcher, None, None)?;
+        let cer = eval1.greedy_cer(&t1.params, &ctx.data.dev)?.cer();
+        curve.push((e, "stage1".to_string(), cer));
+    }
+
+    // transition at the fixed target rank (Fig 5 keeps the size fixed)
+    let artifact2 = format!("train_mini_partial_{}", frac_tag(target_frac));
+    let spec2 = ctx.rt.manifest().artifact(&artifact2)?.clone();
+    let params2 = warmstart(&t1.params, &spec2, ctx.seed() + 1)?;
+    let eval2 = Evaluator::new(&ctx.rt, &eval_name(&artifact2))?;
+    let opts2 = TrainOpts {
+        seed: ctx.seed(),
+        // §3.2.3: LR continues the stage-1 schedule
+        lr: t1.lr,
+        lr_decay: 0.92,
+        epochs: total - te,
+        lam_rec: 0.0,
+        lam_nonrec: 0.0,
+        quiet: true,
+    };
+    let mut t2 = Trainer::with_params(&ctx.rt, &artifact2, params2, opts2)?;
+    let mut final_cer = f64::NAN;
+    for e in te..total {
+        t2.run_one_epoch(&mut batcher, None, None)?;
+        let cer = eval2.greedy_cer(&t2.params, &ctx.data.dev)?.cer();
+        curve.push((e, "stage2".to_string(), cer));
+        final_cer = cer;
+    }
+    let _ = Stage2Lr::Continuation; // documented choice above
+    Ok((final_cer, curve))
+}

@@ -1,0 +1,43 @@
+//! # tracenorm
+//!
+//! Reproduction of *"Trace norm regularization and faster inference for
+//! embedded speech recognition RNNs"* (Kliegl, Goyal, Zhao, Srinet,
+//! Shoeybi; Baidu SVAIL, 2017) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see DESIGN.md):
+//! * **L3 (this crate)** — training orchestrator (two-stage trace-norm
+//!   scheme, SVD warmstart), streaming server, and the pure-Rust embedded
+//!   int8 inference engine with the reproduced "farm" low-batch GEMM
+//!   kernels.
+//! * **L2/L1 (python/, build-time only)** — the DS2-style GRU acoustic
+//!   model and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
+//!   and executed here through the PJRT CPU client ([`runtime`]).
+//!
+//! Substrate modules ([`tensor`], [`linalg`], [`jsonx`], [`prng`], …) are
+//! implemented in-repo: the build environment is offline, so everything
+//! beyond the `xla` crate closure is first-party code.
+
+pub mod checkpoint;
+pub mod cli;
+pub mod configx;
+pub mod data;
+pub mod decoder;
+pub mod devicesim;
+pub mod error;
+pub mod experiments;
+pub mod infer;
+pub mod jsonx;
+pub mod kernels;
+pub mod linalg;
+pub mod lm;
+pub mod metricsx;
+pub mod model;
+pub mod prng;
+pub mod proplite;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+
+pub use error::{Error, Result};

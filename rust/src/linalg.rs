@@ -1,0 +1,367 @@
+//! Dense linear algebra: one-sided Jacobi SVD, truncated SVD, matrix
+//! norms, and the paper's nondimensional trace norm coefficient ν(W).
+//!
+//! The SVD is the heart of the paper's stage-1 → stage-2 transition
+//! (truncated-SVD warmstart, §3) and of the Figure 2/3 diagnostics.  A
+//! one-sided Jacobi iteration is used: it is simple, numerically robust
+//! (singular values to near machine precision), and fast enough for the
+//! weight matrices involved (≤ ~1.5k × 1.5k).
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Full singular value decomposition `W = U diag(s) Vt`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// (m, r) left singular vectors, r = min(m, n).
+    pub u: Tensor,
+    /// r singular values, descending.
+    pub s: Vec<f32>,
+    /// (r, n) right singular vectors (transposed).
+    pub vt: Tensor,
+}
+
+/// One-sided Jacobi SVD of an (m, n) matrix.
+///
+/// Works on A (or Aᵀ if m < n) by orthogonalizing column pairs with Jacobi
+/// rotations until convergence; singular values are the resulting column
+/// norms. Complexity O(min(m,n)² · max(m,n) · sweeps) with typically
+/// < 20 sweeps.
+pub fn svd(w: &Tensor) -> Result<Svd> {
+    let (m, n) = (w.rows(), w.cols());
+    if m == 0 || n == 0 {
+        return Err(Error::Linalg("svd of empty matrix".into()));
+    }
+    // Jacobi operates column-wise on the tall orientation.
+    let transposed = m < n;
+    let a = if transposed { w.transpose() } else { w.clone() };
+    let (rows, cols) = (a.rows(), a.cols()); // rows >= cols
+
+    // Column-major copy for cache-friendly column ops.
+    let mut colmaj = vec![0.0f64; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            colmaj[j * rows + i] = a.at2(i, j) as f64;
+        }
+    }
+    // V accumulates the right rotations (cols x cols), column-major.
+    let mut v = vec![0.0f64; cols * cols];
+    for j in 0..cols {
+        v[j * cols + j] = 1.0;
+    }
+
+    let eps = 1e-14_f64;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                let (cp, cq) = (p * rows, q * rows);
+                for i in 0..rows {
+                    let x = colmaj[cp + i];
+                    let y = colmaj[cq + i];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p, q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..rows {
+                    let x = colmaj[cp + i];
+                    let y = colmaj[cq + i];
+                    colmaj[cp + i] = c * x - s * y;
+                    colmaj[cq + i] = s * x + c * y;
+                }
+                for i in 0..cols {
+                    let x = v[p * cols + i];
+                    let y = v[q * cols + i];
+                    v[p * cols + i] = c * x - s * y;
+                    v[q * cols + i] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut sv: Vec<(f64, usize)> = (0..cols)
+        .map(|j| {
+            let norm = (0..rows)
+                .map(|i| colmaj[j * rows + i] * colmaj[j * rows + i])
+                .sum::<f64>()
+                .sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let r = cols;
+    let mut u = Tensor::zeros(&[rows, r]);
+    let mut vt = Tensor::zeros(&[r, cols]);
+    let mut s = Vec::with_capacity(r);
+    for (k, (norm, j)) in sv.iter().enumerate() {
+        s.push(*norm as f32);
+        if *norm > 1e-30 {
+            for i in 0..rows {
+                u.set2(i, k, (colmaj[j * rows + i] / norm) as f32);
+            }
+        } else {
+            // Null direction: leave U column zero (not used downstream —
+            // truncation drops it, and reconstruction multiplies by s=0).
+        }
+        for i in 0..cols {
+            vt.set2(k, i, v[j * cols + i] as f32);
+        }
+    }
+
+    if transposed {
+        // W = (A)ᵀ = (U S Vᵀ)ᵀ = V S Uᵀ: swap roles.
+        Ok(Svd { u: vt.transpose(), s, vt: u.transpose() })
+    } else {
+        Ok(Svd { u, s, vt })
+    }
+}
+
+impl Svd {
+    /// Reconstruct `U[:, :r] diag(s[:r]) Vt[:r, :]`.
+    pub fn reconstruct(&self, r: usize) -> Tensor {
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let r = r.min(self.s.len());
+        let mut out = Tensor::zeros(&[m, n]);
+        for k in 0..r {
+            let sk = self.s[k];
+            if sk == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                let uik = self.u.at2(i, k) * sk;
+                if uik == 0.0 {
+                    continue;
+                }
+                let orow = out.row_mut(i);
+                let vrow = self.vt.row(k);
+                for j in 0..n {
+                    orow[j] += uik * vrow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Balanced factor split at rank r: `U_bal = U √Σ`, `V_bal = √Σ Vt`
+    /// — the split for which Lemma 1 attains equality, used to warmstart
+    /// stage-2 factors from a stage-1 matrix.
+    pub fn balanced_factors(&self, r: usize) -> (Tensor, Tensor) {
+        let m = self.u.rows();
+        let n = self.vt.cols();
+        let r = r.min(self.s.len());
+        let mut uf = Tensor::zeros(&[m, r]);
+        let mut vf = Tensor::zeros(&[r, n]);
+        for k in 0..r {
+            let sq = self.s[k].max(0.0).sqrt();
+            for i in 0..m {
+                uf.set2(i, k, self.u.at2(i, k) * sq);
+            }
+            for j in 0..n {
+                vf.set2(k, j, self.vt.at2(k, j) * sq);
+            }
+        }
+        (uf, vf)
+    }
+
+    /// Smallest rank whose leading singular values explain `threshold`
+    /// (e.g. 0.9) of the squared-singular-value mass — the paper's
+    /// "percentage of variance explained" truncation rule (§3, Fig. 3).
+    pub fn rank_for_variance(&self, threshold: f64) -> usize {
+        let total: f64 = self.s.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if total <= 0.0 {
+            return 1;
+        }
+        let mut acc = 0.0;
+        for (k, &x) in self.s.iter().enumerate() {
+            acc += (x as f64) * (x as f64);
+            if acc >= threshold * total {
+                return k + 1;
+            }
+        }
+        self.s.len()
+    }
+}
+
+/// Trace norm (nuclear norm): sum of singular values.
+pub fn trace_norm(w: &Tensor) -> Result<f32> {
+    Ok(svd(w)?.s.iter().sum())
+}
+
+/// The paper's Definition 1: nondimensional trace norm coefficient
+/// ν(W) = (‖σ‖₁/‖σ‖₂ − 1) / (√d − 1), d = min(m, n) ≥ 2.
+///
+/// Scale-invariant; 0 iff rank 1, 1 iff maximal rank with equal singular
+/// values (Proposition 1 / Appendix A).
+pub fn nu_coefficient(w: &Tensor) -> Result<f32> {
+    let d = w.rows().min(w.cols());
+    if d < 2 {
+        return Err(Error::Linalg("nu needs min(m,n) >= 2".into()));
+    }
+    let s = svd(w)?.s;
+    nu_from_singular_values(&s)
+}
+
+/// ν computed directly from a singular value vector.
+pub fn nu_from_singular_values(s: &[f32]) -> Result<f32> {
+    let d = s.len();
+    if d < 2 {
+        return Err(Error::Linalg("nu needs d >= 2".into()));
+    }
+    let l1: f64 = s.iter().map(|&x| x as f64).sum();
+    let l2: f64 = s.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if l2 == 0.0 {
+        return Err(Error::Linalg("nu of zero matrix".into()));
+    }
+    Ok(((l1 / l2 - 1.0) / ((d as f64).sqrt() - 1.0)) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    fn reconstruction_error(w: &Tensor) -> f32 {
+        let s = svd(w).unwrap();
+        let rec = s.reconstruct(s.s.len());
+        w.max_abs_diff(&rec)
+    }
+
+    #[test]
+    fn svd_diagonal() {
+        let w = Tensor::new(&[3, 3], vec![3., 0., 0., 0., 1., 0., 0., 0., 2.]).unwrap();
+        let s = svd(&w).unwrap();
+        assert_close(s.s[0], 3.0, 1e-5);
+        assert_close(s.s[1], 2.0, 1e-5);
+        assert_close(s.s[2], 1.0, 1e-5);
+        assert!(reconstruction_error(&w) < 1e-4);
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Pcg64::seeded(5);
+        for &(m, n) in &[(10, 10), (17, 5), (5, 17), (33, 8), (1, 7), (7, 1)] {
+            let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let err = reconstruction_error(&w);
+            assert!(err < 1e-3, "({m},{n}) err {err}");
+        }
+    }
+
+    #[test]
+    fn svd_orthonormal_u() {
+        let mut rng = Pcg64::seeded(6);
+        let w = Tensor::randn(&[12, 6], 1.0, &mut rng);
+        let s = svd(&w).unwrap();
+        // Uᵀ U = I
+        let gram = s.u.transpose().matmul(&s.u).unwrap();
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_close(gram.at2(i, j), want, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_low_rank_detects_rank() {
+        // rank-2 matrix: outer products
+        let mut rng = Pcg64::seeded(7);
+        let a = Tensor::randn(&[9, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 7], 1.0, &mut rng);
+        let w = a.matmul(&b).unwrap();
+        let s = svd(&w).unwrap();
+        assert!(s.s[1] > 1e-3);
+        assert!(s.s[2] < 1e-4, "s2 = {}", s.s[2]);
+        assert_eq!(s.rank_for_variance(0.999), 2);
+    }
+
+    #[test]
+    fn truncated_svd_is_best_approx() {
+        let mut rng = Pcg64::seeded(8);
+        let w = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        let s = svd(&w).unwrap();
+        // Eckart-Young: residual Frobenius² = sum of dropped s².
+        for r in 1..8 {
+            let rec = s.reconstruct(r);
+            let mut diff = w.clone();
+            for (d, v) in diff.data_mut().iter_mut().zip(rec.data()) {
+                *d -= v;
+            }
+            let resid = diff.frob_norm();
+            let expect: f32 = s.s[r..].iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert_close(resid, expect, 1e-3);
+        }
+    }
+
+    #[test]
+    fn balanced_factors_multiply_back() {
+        let mut rng = Pcg64::seeded(9);
+        let w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        let s = svd(&w).unwrap();
+        let (u, v) = s.balanced_factors(6);
+        let rec = u.matmul(&v).unwrap();
+        assert!(w.max_abs_diff(&rec) < 1e-3);
+        // Lemma 1 equality: ½(‖U‖² + ‖V‖²) == trace norm at the balanced split
+        let surrogate = 0.5 * (u.frob_norm().powi(2) + v.frob_norm().powi(2));
+        let tn: f32 = s.s.iter().sum();
+        assert_close(surrogate, tn, 1e-3 * tn.max(1.0));
+    }
+
+    #[test]
+    fn nu_properties() {
+        // rank 1 => 0
+        let mut w = Tensor::zeros(&[4, 4]);
+        for j in 0..4 {
+            w.set2(0, j, 2.0);
+        }
+        assert_close(nu_coefficient(&w).unwrap(), 0.0, 1e-5);
+        // identity => 1
+        let mut id = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            id.set2(i, i, 3.0);
+        }
+        assert_close(nu_coefficient(&id).unwrap(), 1.0, 1e-5);
+        // scale invariance
+        let mut rng = Pcg64::seeded(10);
+        let w = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let n1 = nu_coefficient(&w).unwrap();
+        let mut w2 = w.clone();
+        w2.scale(17.0);
+        let n2 = nu_coefficient(&w2).unwrap();
+        assert_close(n1, n2, 1e-4);
+        assert!(n1 > 0.0 && n1 < 1.0);
+    }
+
+    #[test]
+    fn rank_for_variance_monotone_in_threshold() {
+        let mut rng = Pcg64::seeded(11);
+        let w = Tensor::randn(&[12, 12], 1.0, &mut rng);
+        let s = svd(&w).unwrap();
+        let mut prev = 0;
+        for t in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let r = s.rank_for_variance(t);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Character n-gram language model with interpolated backoff.
+//!
+//! The paper's Table 2 pairs each device tier with a different LM size
+//! (13.7 GB server / 56 MB / 32 MB / 14 MB).  The size knob here is
+//! (order, count-pruning threshold): higher order + no pruning = the
+//! "server" LM, low order + aggressive pruning = the embedded ones.  The
+//! decoder fuses LM scores during beam search ([`crate::decoder`]).
+
+use std::collections::BTreeMap;
+
+use crate::data::{char_to_index, index_to_char};
+
+/// Interpolated add-smoothing char n-gram model over label indices
+/// (1 = space, 2 = ', 3.. = letters; blank never appears in text).
+#[derive(Clone, Debug)]
+pub struct CharLm {
+    pub order: usize,
+    /// context (len < order) -> next-char counts
+    counts: BTreeMap<Vec<i32>, BTreeMap<i32, u32>>,
+    /// interpolation weight toward lower orders
+    lambda: f64,
+    vocab: usize,
+}
+
+impl CharLm {
+    /// Train from transcripts. `prune_min` drops n-gram contexts whose
+    /// total count is below the threshold (the size knob).
+    pub fn train(texts: &[&str], order: usize, prune_min: u32) -> CharLm {
+        assert!(order >= 1);
+        let mut counts: BTreeMap<Vec<i32>, BTreeMap<i32, u32>> = BTreeMap::new();
+        for text in texts {
+            let labels: Vec<i32> = text.chars().filter_map(char_to_index).collect();
+            for i in 0..labels.len() {
+                // all context lengths 0..order-1
+                for ctx_len in 0..order.min(i + 1) {
+                    let ctx: Vec<i32> = labels[i - ctx_len..i].to_vec();
+                    *counts.entry(ctx).or_default().entry(labels[i]).or_insert(0) += 1;
+                }
+            }
+        }
+        if prune_min > 1 {
+            counts.retain(|ctx, m| {
+                // never prune the unigram table
+                ctx.is_empty() || m.values().sum::<u32>() >= prune_min
+            });
+        }
+        CharLm { order, counts, lambda: 0.4, vocab: 28 }
+    }
+
+    /// log P(next | history) with interpolated backoff across orders.
+    pub fn logp(&self, history: &[i32], next: i32) -> f64 {
+        let mut p = 1.0 / self.vocab as f64; // uniform floor
+        // interpolate from unigram up to the longest available context
+        for ctx_len in 0..self.order {
+            if ctx_len > history.len() {
+                break;
+            }
+            let ctx = &history[history.len() - ctx_len..];
+            if let Some(m) = self.counts.get(ctx) {
+                let total: u32 = m.values().sum();
+                if total > 0 {
+                    let c = m.get(&next).copied().unwrap_or(0);
+                    let p_here = (c as f64 + 0.1) / (total as f64 + 0.1 * self.vocab as f64);
+                    p = (1.0 - self.lambda) * p + self.lambda * p_here;
+                }
+            }
+        }
+        p.max(1e-12).ln()
+    }
+
+    /// Sequence log probability.
+    pub fn score(&self, labels: &[i32]) -> f64 {
+        let mut lp = 0.0;
+        for i in 0..labels.len() {
+            lp += self.logp(&labels[..i], labels[i]);
+        }
+        lp
+    }
+
+    /// Number of stored n-gram entries.
+    pub fn entries(&self) -> usize {
+        self.counts.values().map(|m| m.len()).sum()
+    }
+
+    /// Approximate serialized size (the Table-2 "language model size"):
+    /// each entry ≈ context bytes + 1 char + 4-byte count.
+    pub fn size_bytes(&self) -> usize {
+        self.counts
+            .iter()
+            .map(|(ctx, m)| m.len() * (ctx.len() + 5))
+            .sum()
+    }
+
+    /// Perplexity over held-out texts.
+    pub fn perplexity(&self, texts: &[&str]) -> f64 {
+        let (mut lp, mut n) = (0.0, 0usize);
+        for t in texts {
+            let labels: Vec<i32> = t.chars().filter_map(char_to_index).collect();
+            lp += self.score(&labels);
+            n += labels.len();
+        }
+        (-lp / n.max(1) as f64).exp()
+    }
+}
+
+/// Pretty-print a label sequence (debugging aid).
+pub fn labels_string(labels: &[i32]) -> String {
+    labels.iter().filter_map(|&l| index_to_char(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TRAIN: &[&str] = &["the cat", "the dog", "the cat ran", "a cat sat"];
+
+    #[test]
+    fn predicts_seen_continuations() {
+        let lm = CharLm::train(TRAIN, 3, 0);
+        // after "th", 'e' is far more likely than 'q'
+        let hist: Vec<i32> = "th".chars().map(|c| char_to_index(c).unwrap()).collect();
+        let e = lm.logp(&hist, char_to_index('e').unwrap());
+        let q = lm.logp(&hist, char_to_index('q').unwrap());
+        assert!(e > q + 1.0, "e={e} q={q}");
+    }
+
+    #[test]
+    fn score_prefers_training_like_text() {
+        let lm = CharLm::train(TRAIN, 3, 0);
+        let good = lm.score(&"the cat".chars().filter_map(char_to_index).collect::<Vec<_>>());
+        let bad = lm.score(&"zxq vvk".chars().filter_map(char_to_index).collect::<Vec<_>>());
+        assert!(good > bad);
+    }
+
+    #[test]
+    fn pruning_shrinks_model() {
+        let texts: Vec<&str> = TRAIN.iter().copied().cycle().take(40).collect();
+        let full = CharLm::train(&texts, 4, 0);
+        let pruned = CharLm::train(&texts, 2, 50);
+        assert!(pruned.size_bytes() < full.size_bytes());
+        assert!(pruned.entries() > 0);
+    }
+
+    #[test]
+    fn perplexity_lower_on_in_domain() {
+        let lm = CharLm::train(TRAIN, 3, 0);
+        let in_d = lm.perplexity(&["the cat"]);
+        let out_d = lm.perplexity(&["qzx jvw"]);
+        assert!(in_d < out_d);
+        assert!(in_d > 1.0);
+    }
+
+    #[test]
+    fn logp_is_normalized_enough() {
+        // sum over vocab of exp(logp) should be ~1 (smoothed distribution)
+        let lm = CharLm::train(TRAIN, 3, 0);
+        let hist: Vec<i32> = "ca".chars().map(|c| char_to_index(c).unwrap()).collect();
+        let mut total = 0.0;
+        for next in 1..=28 {
+            total += lm.logp(&hist, next).exp();
+        }
+        assert!((total - 1.0).abs() < 0.15, "total {total}");
+    }
+}

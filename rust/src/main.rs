@@ -1,0 +1,228 @@
+//! `repro` — launcher for the trace-norm reproduction.
+//!
+//! See `cli::USAGE` (or run with no args) for subcommands.  The heavy
+//! lifting lives in the library crate; this binary wires config + CLI into
+//! the experiment harness, trainers and the embedded engine.
+
+use tracenorm::cli::{self, Cli, USAGE};
+use tracenorm::data::Batcher;
+use tracenorm::error::Result;
+use tracenorm::experiments;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::runtime::Runtime;
+use tracenorm::train::{
+    eval_name, two_stage, Evaluator, Stage2Lr, TrainOpts, Trainer,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = cli::parse(args)?;
+    match cli.subcommand.as_str() {
+        "info" => info(&cli),
+        "experiment" => {
+            let id = cli
+                .positional
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            experiments::run(&id, cli.cfg.clone())
+        }
+        "train" => train_cmd(&cli),
+        "two-stage" => two_stage_cmd(&cli),
+        "transcribe" => transcribe_cmd(&cli),
+        "bench-gemm" => {
+            let mut ctx = experiments::Ctx::new(cli.cfg.clone())?;
+            experiments::kernelsx::fig6(&mut ctx)
+        }
+        other => Err(tracenorm::Error::Config(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn open_runtime(cli: &Cli) -> Result<Runtime> {
+    Runtime::open(cli.flag_str("artifacts", "artifacts"))
+}
+
+fn info(cli: &Cli) -> Result<()> {
+    let rt = open_runtime(cli)?;
+    let m = rt.manifest();
+    println!("alphabet: {} symbols", m.alphabet.len());
+    println!("rank ladder: {:?}", m.rank_ladder);
+    println!("\nconfigs:");
+    for (name, d) in &m.configs {
+        println!(
+            "  {name}: feat {} conv {:?} gru {:?} fc {} vocab {} stride {}",
+            d.feat_dim,
+            d.conv.iter().map(|c| c.dim).collect::<Vec<_>>(),
+            d.gru_dims,
+            d.fc_dim,
+            d.vocab,
+            d.total_stride
+        );
+    }
+    println!("\nartifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<36} kind={:<12} scheme={:<10} rank_frac={:?}",
+            a.kind, a.scheme, a.rank_frac
+        );
+    }
+    Ok(())
+}
+
+fn default_ctx(cli: &Cli) -> Result<experiments::Ctx> {
+    experiments::Ctx::new(cli.cfg.clone())
+}
+
+fn train_cmd(cli: &Cli) -> Result<()> {
+    let ctx = default_ctx(cli)?;
+    let artifact = cli.flag_str("artifact", "train_mini_partial_full");
+    let opts = TrainOpts {
+        seed: cli.flag_usize("seed", 17) as u64,
+        lr: cli.flag_f64("lr", 3e-3) as f32,
+        lr_decay: cli.flag_f64("lr-decay", 0.92) as f32,
+        epochs: cli.flag_usize("epochs", 5),
+        lam_rec: cli.flag_f64("lam-rec", 0.0) as f32,
+        lam_nonrec: cli.flag_f64("lam-nonrec", 0.0) as f32,
+        quiet: false,
+    };
+    let spec = ctx.rt.manifest().artifact(&artifact)?.clone();
+    let mut batcher = Batcher::new(
+        &ctx.data.train,
+        spec.batch
+            .ok_or_else(|| tracenorm::Error::Config("not a train artifact".into()))?,
+        ctx.data.spec.feat_dim,
+        opts.seed,
+    );
+    let eval = Evaluator::new(&ctx.rt, &eval_name(&artifact))?;
+    println!("training {artifact} for {} epochs", opts.epochs);
+    let mut t = match cli.cfg.raw("load") {
+        Some(path) => {
+            println!("warmstarting from checkpoint {path}");
+            Trainer::with_params(&ctx.rt, &artifact, tracenorm::checkpoint::load(path)?, opts)?
+        }
+        None => Trainer::new(&ctx.rt, &artifact, opts)?,
+    };
+    t.run(&mut batcher, Some(&eval), Some(&ctx.data.dev))?;
+    let stats = eval.greedy_cer(&t.params, &ctx.data.test)?;
+    println!(
+        "final: params {}  test CER {:.3}  WER {:.3}",
+        t.params.num_scalars(),
+        stats.cer(),
+        stats.wer()
+    );
+    if let Some(path) = cli.cfg.raw("save") {
+        tracenorm::checkpoint::save(&t.params, path)?;
+        println!("saved checkpoint to {path}");
+    }
+    Ok(())
+}
+
+fn two_stage_cmd(cli: &Cli) -> Result<()> {
+    let ctx = default_ctx(cli)?;
+    let stage1 = cli.flag_str("stage1", "train_mini_partial_full");
+    let family = cli.flag_str("family", "train_mini_partial");
+    let threshold = cli.flag_f64("threshold", 0.9);
+    let transition = cli.flag_usize("transition", 3);
+    let total = cli.flag_usize("total", 8);
+    let opts = TrainOpts {
+        seed: cli.flag_usize("seed", 17) as u64,
+        lr: cli.flag_f64("lr", 3e-3) as f32,
+        lr_decay: cli.flag_f64("lr-decay", 0.92) as f32,
+        epochs: transition,
+        lam_rec: cli.flag_f64("lam-rec", 1e-3) as f32,
+        lam_nonrec: cli.flag_f64("lam-nonrec", 1e-3) as f32,
+        quiet: false,
+    };
+    let spec = ctx.rt.manifest().artifact(&stage1)?.clone();
+    let mut batcher = Batcher::new(
+        &ctx.data.train,
+        spec.batch.unwrap(),
+        ctx.data.spec.feat_dim,
+        opts.seed,
+    );
+    println!(
+        "two-stage: {stage1} -> {family}_r*, threshold {threshold}, transition {transition}/{total}"
+    );
+    let result = two_stage(
+        &ctx.rt,
+        &mut batcher,
+        &ctx.data.dev,
+        &stage1,
+        &family,
+        threshold,
+        transition,
+        total,
+        opts,
+        Stage2Lr::Continuation,
+    )?;
+    let eval = Evaluator::new(
+        &ctx.rt,
+        &eval_name(&format!("{family}_{}", tracenorm::train::frac_tag(result.rank_frac))),
+    )?;
+    let stats = eval.greedy_cer(&result.stage2.params, &ctx.data.test)?;
+    println!(
+        "picked rank_frac {}  stage-2 params {}  test CER {:.3}",
+        result.rank_frac,
+        result.stage2.params.num_scalars(),
+        stats.cer()
+    );
+    Ok(())
+}
+
+fn transcribe_cmd(cli: &Cli) -> Result<()> {
+    let ctx = default_ctx(cli)?;
+    let precision = match cli.flag_str("precision", "int8").as_str() {
+        "f32" => Precision::F32,
+        _ => Precision::Int8,
+    };
+    let n = cli.flag_usize("utts", 5);
+    // quick train so the transcription is meaningful
+    let artifact = "train_mini_partial_full";
+    let opts = TrainOpts {
+        seed: cli.flag_usize("seed", 17) as u64,
+        lr: cli.flag_f64("lr", 3e-3) as f32,
+        lr_decay: 0.92,
+        epochs: cli.flag_usize("epochs", 4),
+        lam_rec: 1e-4,
+        lam_nonrec: 1e-4,
+        quiet: false,
+    };
+    let spec = ctx.rt.manifest().artifact(artifact)?.clone();
+    let mut batcher =
+        Batcher::new(&ctx.data.train, spec.batch.unwrap(), ctx.data.spec.feat_dim, 1);
+    println!("training a quick model ({} epochs)...", opts.epochs);
+    let mut t = Trainer::new(&ctx.rt, artifact, opts)?;
+    t.run(&mut batcher, None, None)?;
+
+    let dims = ctx.rt.manifest().dims("wsj_mini")?.clone();
+    let engine = Engine::from_params(&dims, "partial", &t.params, precision, 4)?;
+    println!(
+        "\nembedded engine: {:?}, model {} KB, {} MACs/step",
+        precision,
+        engine.model_bytes() / 1024,
+        engine.macs_per_step()
+    );
+    let mut bd = Breakdown::default();
+    for u in ctx.data.test.iter().take(n) {
+        let (hyp, _) = engine.transcribe(&u.feats, &mut bd)?;
+        println!("  ref: {:<16} hyp: {}", u.text, hyp);
+    }
+    println!(
+        "\nacoustic time {:.1} ms for {:.2} s audio -> {:.1}x realtime (host)",
+        bd.acoustic_total() * 1e3,
+        bd.frames as f64 * 0.01,
+        bd.speedup_over_realtime(0.01)
+    );
+    Ok(())
+}

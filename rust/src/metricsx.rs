@@ -1,0 +1,183 @@
+//! Timers, counters and latency histograms for the coordinator and the
+//! serving/inference paths.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic named counters, shareable across threads.
+#[derive(Default, Debug)]
+pub struct Counters {
+    inner: std::sync::Mutex<BTreeMap<String, u64>>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+/// Lock-free accumulating timer: total nanoseconds + call count.
+#[derive(Default, Debug)]
+pub struct TimerCell {
+    nanos: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl TimerCell {
+    pub fn record(&self, dt: std::time::Duration) {
+        self.nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.calls();
+        if c == 0 {
+            0.0
+        } else {
+            self.total_secs() / c as f64
+        }
+    }
+
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+        self.calls.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Latency histogram with exact percentiles (stores samples; fine for the
+/// request volumes of the serving sim).
+#[derive(Default, Debug, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// q in [0, 1]; nearest-rank percentile.
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Simple stopwatch for phase reporting.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::new();
+        c.add("x", 2);
+        c.add("x", 3);
+        c.add("y", 1);
+        assert_eq!(c.get("x"), 5);
+        assert_eq!(c.get("y"), 1);
+        assert_eq!(c.get("z"), 0);
+    }
+
+    #[test]
+    fn timer_counts_calls() {
+        let t = TimerCell::default();
+        let v = t.time(|| 42);
+        assert_eq!(v, 42);
+        t.time(|| ());
+        assert_eq!(t.calls(), 2);
+        assert!(t.total_secs() >= 0.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(0.0), 1.0);
+        assert_eq!(h.percentile(1.0), 100.0);
+        assert!((h.percentile(0.5) - 50.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+}

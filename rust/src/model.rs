@@ -1,0 +1,478 @@
+//! Model parameter management on the Rust side.
+//!
+//! The coordinator owns the training state: parameters are plain
+//! [`Tensor`]s keyed by the names in the artifact manifest, fed to the
+//! AOT train/eval executables in name-sorted order and read back the same
+//! way.  This module implements:
+//!
+//! * initialization (Glorot weights / zero biases), matching the L2 init
+//!   family;
+//! * the paper's **stage-1 → stage-2 SVD warmstart** (§3): materialize
+//!   each compressible group `W = U·V` (or take the dense `W`), truncate
+//!   its SVD by explained variance, and split into balanced factors
+//!   `U√Σ, √Σ Vᵀ` at the target rank;
+//! * rank selection against the AOT rank ladder;
+//! * magnitude-pruning masks (the Fig. 8 sparsity baseline);
+//! * ν(W) diagnostics per group (Figs. 2/3).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::linalg::{self, Svd};
+use crate::prng::Pcg64;
+use crate::runtime::{ArtifactSpec, Value};
+use crate::tensor::Tensor;
+
+/// Named parameter set (flat, name-sorted wire order).
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Initialize parameters for an artifact: Glorot-uniform for weight
+    /// matrices, zeros for biases (`*_b`).
+    pub fn init(spec: &ArtifactSpec, seed: u64) -> Result<ParamSet> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut map = BTreeMap::new();
+        for name in &spec.param_names {
+            let shape = spec.input_shape(name)?;
+            let t = if name.ends_with("_b") {
+                Tensor::zeros(shape)
+            } else if shape.len() == 2 {
+                Tensor::glorot(shape[0], shape[1], &mut rng)
+            } else {
+                let mut t = Tensor::zeros(shape);
+                rng.fill_normal(t.data_mut(), 0.01);
+                t
+            };
+            map.insert(name.clone(), t);
+        }
+        Ok(ParamSet { map })
+    }
+
+    pub fn zeros_like(other: &ParamSet) -> ParamSet {
+        ParamSet {
+            map: other
+                .map
+                .iter()
+                .map(|(k, v)| (k.clone(), Tensor::zeros(v.shape())))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| Error::other(format!("no param '{name}'")))
+    }
+
+    pub fn set(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total scalar parameter count (the paper's x-axis in Figs. 4/8).
+    pub fn num_scalars(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Values in the order of `names` (artifact wire order).
+    pub fn values_in_order(&self, names: &[String]) -> Result<Vec<Value>> {
+        names
+            .iter()
+            .map(|n| Ok(Value::F32(self.get(n)?.clone())))
+            .collect()
+    }
+
+    /// Rebuild from artifact outputs (first `names.len()` outputs).
+    pub fn from_values(names: &[String], values: &[Value]) -> Result<ParamSet> {
+        if values.len() < names.len() {
+            return Err(Error::other("not enough output values for params"));
+        }
+        let mut map = BTreeMap::new();
+        for (n, v) in names.iter().zip(values) {
+            map.insert(n.clone(), v.as_f32()?.clone());
+        }
+        Ok(ParamSet { map })
+    }
+
+    /// Elementwise multiply masked weights (`g_w *= g_mask`) — keeps pruned
+    /// entries at exactly zero between steps.
+    pub fn apply_masks(&mut self, masks: &ParamSet) -> Result<()> {
+        for (mname, m) in masks.iter() {
+            let wname = mname
+                .strip_suffix("_mask")
+                .map(|b| format!("{b}_w"))
+                .ok_or_else(|| Error::other("mask name must end in _mask"))?;
+            if let Some(w) = self.map.get_mut(&wname) {
+                w.mul_assign(m)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compressible groups.
+// ---------------------------------------------------------------------------
+
+/// Compressible weight-group base names present in a parameter set:
+/// factored groups appear as `{base}_u`/`{base}_v`; dense compressible
+/// groups are `rec*/nonrec*/grujoint*/fc` `_w` matrices (conv and the
+/// output projection are not compressed — paper §3.2).
+pub fn group_bases(params: &ParamSet) -> Vec<String> {
+    let mut bases = Vec::new();
+    for name in params.names() {
+        if let Some(base) = name.strip_suffix("_u") {
+            bases.push(base.to_string());
+        } else if let Some(base) = name.strip_suffix("_w") {
+            if base.starts_with("rec")
+                || base.starts_with("nonrec")
+                || base.starts_with("grujoint")
+                || base == "fc"
+            {
+                bases.push(base.to_string());
+            }
+        }
+    }
+    bases.sort();
+    bases.dedup();
+    bases
+}
+
+/// Is this group regularized by λ_rec (vs λ_nonrec)?  Mirrors the L2 rule.
+pub fn is_recurrent_group(base: &str) -> bool {
+    base.starts_with("rec") || base.starts_with("grujoint")
+}
+
+/// Materialize the dense matrix of a group (`U·V` if factored).
+pub fn group_matrix(params: &ParamSet, base: &str) -> Result<Tensor> {
+    if params.contains(&format!("{base}_u")) {
+        let u = params.get(&format!("{base}_u"))?;
+        let v = params.get(&format!("{base}_v"))?;
+        u.matmul(v)
+    } else {
+        Ok(params.get(&format!("{base}_w"))?.clone())
+    }
+}
+
+/// Per-group SVD diagnostics for a parameter set (Figs. 2/3).
+pub struct GroupDiag {
+    pub base: String,
+    pub nu: f32,
+    pub rank90: usize,
+    pub full_rank: usize,
+    pub svd: Svd,
+}
+
+pub fn diagnose_groups(params: &ParamSet) -> Result<Vec<GroupDiag>> {
+    group_bases(params)
+        .into_iter()
+        .map(|base| {
+            let w = group_matrix(params, &base)?;
+            let svd = linalg::svd(&w)?;
+            let nu = linalg::nu_from_singular_values(&svd.s)?;
+            let rank90 = svd.rank_for_variance(0.90);
+            let full_rank = w.rows().min(w.cols());
+            Ok(GroupDiag { base, nu, rank90, full_rank, svd })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Stage-1 → stage-2 warmstart.
+// ---------------------------------------------------------------------------
+
+/// Warmstart a stage-2 parameter set from stage-1 parameters (§3):
+/// for each factored group in the target artifact, take the stage-1 dense
+/// matrix (materializing U·V if stage 1 was factored), truncate its SVD at
+/// the target rank, and install balanced factors.  Everything else is
+/// copied (shapes must match).
+pub fn warmstart(stage1: &ParamSet, target: &ArtifactSpec, seed: u64) -> Result<ParamSet> {
+    let mut out = ParamSet::init(target, seed)?; // placeholder init for safety
+    for name in &target.param_names {
+        if let Some(base) = name.strip_suffix("_u") {
+            let w = group_matrix(stage1, base)?;
+            let shape_u = target.input_shape(name)?;
+            let r = shape_u[1];
+            let svd = linalg::svd(&w)?;
+            let (u, v) = svd.balanced_factors(r);
+            if u.shape() != shape_u {
+                return Err(Error::Shape(format!(
+                    "warmstart {base}: U {:?} vs target {:?}",
+                    u.shape(),
+                    shape_u
+                )));
+            }
+            out.set(format!("{base}_u"), u);
+            out.set(format!("{base}_v"), v);
+        } else if name.ends_with("_v") {
+            // handled with _u
+        } else if stage1.contains(name) {
+            let src = stage1.get(name)?;
+            if src.shape() != target.input_shape(name)? {
+                return Err(Error::Shape(format!("warmstart copy {name}: shape mismatch")));
+            }
+            out.set(name.clone(), src.clone());
+        }
+        // params absent from stage 1 (scheme change) keep their fresh init
+    }
+    Ok(out)
+}
+
+/// Choose the smallest ladder rung whose rank fraction is ≥ the fraction
+/// needed to explain `threshold` variance in the *worst* group (so every
+/// group meets the paper's explained-variance criterion).
+pub fn pick_rank_frac(stage1: &ParamSet, threshold: f64, ladder: &[f64]) -> Result<f64> {
+    let mut needed: f64 = 0.0;
+    for base in group_bases(stage1) {
+        let w = group_matrix(stage1, &base)?;
+        let svd = linalg::svd(&w)?;
+        let r = svd.rank_for_variance(threshold);
+        let full = w.rows().min(w.cols());
+        needed = needed.max(r as f64 / full as f64);
+    }
+    let mut rungs: Vec<f64> = ladder.to_vec();
+    rungs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for rung in &rungs {
+        if *rung + 1e-9 >= needed {
+            return Ok(*rung);
+        }
+    }
+    Ok(*rungs.last().ok_or_else(|| Error::other("empty rank ladder"))?)
+}
+
+// ---------------------------------------------------------------------------
+// Magnitude pruning (Fig. 8 sparsity baseline).
+// ---------------------------------------------------------------------------
+
+/// Build masks zeroing the smallest-magnitude `sparsity` fraction of each
+/// compressible group's weights.
+pub fn magnitude_masks(params: &ParamSet, sparsity: f64) -> Result<ParamSet> {
+    let mut masks = ParamSet::new();
+    for base in group_bases(params) {
+        let w = params.get(&format!("{base}_w"))?;
+        let mut mags: Vec<f32> = w.data().iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut_idx = ((mags.len() as f64) * sparsity) as usize;
+        let cut = if cut_idx == 0 { -1.0 } else { mags[cut_idx.min(mags.len() - 1)] };
+        let data: Vec<f32> = w
+            .data()
+            .iter()
+            .map(|v| if v.abs() > cut { 1.0 } else { 0.0 })
+            .collect();
+        masks.set(format!("{base}_mask"), Tensor::new(w.shape(), data)?);
+    }
+    Ok(masks)
+}
+
+/// Fraction of nonzero entries across all masked groups.
+pub fn mask_density(masks: &ParamSet) -> f64 {
+    let (mut nz, mut total) = (0usize, 0usize);
+    for (_, m) in masks.iter() {
+        nz += m.data().iter().filter(|v| **v != 0.0).count();
+        total += m.len();
+    }
+    if total == 0 {
+        1.0
+    } else {
+        nz as f64 / total as f64
+    }
+}
+
+/// Effective (post-mask) nonzero parameter count: masked groups count
+/// their surviving weights; everything else counts fully.
+pub fn effective_params(params: &ParamSet, masks: &ParamSet) -> usize {
+    let mut count = 0usize;
+    for (name, t) in params.iter() {
+        if let Some(base) = name.strip_suffix("_w") {
+            if let Ok(m) = masks.get(&format!("{base}_mask")) {
+                count += m.data().iter().filter(|v| **v != 0.0).count();
+                continue;
+            }
+        }
+        count += t.len();
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Dtype, IoSpec};
+
+    fn fake_spec(params: &[(&str, &[usize])]) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            kind: "train".into(),
+            config: "c".into(),
+            scheme: "partial".into(),
+            rank_frac: None,
+            use_masks: false,
+            param_names: params.iter().map(|(n, _)| n.to_string()).collect(),
+            mask_names: vec![],
+            inputs: params
+                .iter()
+                .map(|(n, s)| IoSpec { name: n.to_string(), shape: s.to_vec(), dtype: Dtype::F32 })
+                .collect(),
+            outputs: vec![],
+            batch: None,
+            chunk: None,
+        }
+    }
+
+    #[test]
+    fn init_zero_bias_glorot_weights() {
+        let spec = fake_spec(&[("fc_u", &[8, 4]), ("fc_v", &[4, 6]), ("fc_b", &[8])]);
+        let p = ParamSet::init(&spec, 0).unwrap();
+        assert!(p.get("fc_b").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(p.get("fc_u").unwrap().abs_max() > 0.0);
+        assert_eq!(p.num_scalars(), 8 * 4 + 4 * 6 + 8);
+    }
+
+    #[test]
+    fn group_bases_found() {
+        let spec = fake_spec(&[
+            ("rec0_u", &[6, 2]),
+            ("rec0_v", &[2, 2]),
+            ("fc_w", &[4, 4]),
+            ("conv0_w", &[4, 4]),
+            ("out_w", &[4, 4]),
+        ]);
+        let p = ParamSet::init(&spec, 0).unwrap();
+        assert_eq!(group_bases(&p), vec!["fc".to_string(), "rec0".to_string()]);
+        assert!(is_recurrent_group("rec0"));
+        assert!(!is_recurrent_group("fc"));
+        assert!(!is_recurrent_group("nonrec1"));
+    }
+
+    #[test]
+    fn warmstart_full_rank_reproduces_group() {
+        // stage 1: dense fc_w; target: factored at full rank
+        let mut stage1 = ParamSet::new();
+        let mut rng = Pcg64::seeded(3);
+        let w = Tensor::randn(&[8, 6], 1.0, &mut rng);
+        stage1.set("fc_w", w.clone());
+        stage1.set("fc_b", Tensor::zeros(&[8]));
+        let target = fake_spec(&[("fc_u", &[8, 6]), ("fc_v", &[6, 6]), ("fc_b", &[8])]);
+        let p2 = warmstart(&stage1, &target, 0).unwrap();
+        let rec = p2.get("fc_u").unwrap().matmul(p2.get("fc_v").unwrap()).unwrap();
+        assert!(w.max_abs_diff(&rec) < 1e-3);
+        assert!(p2.get("fc_b").unwrap().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn warmstart_truncates_to_target_rank() {
+        let mut stage1 = ParamSet::new();
+        let mut rng = Pcg64::seeded(4);
+        // near-rank-2 matrix
+        let a = Tensor::randn(&[8, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 6], 1.0, &mut rng);
+        let w = a.matmul(&b).unwrap();
+        stage1.set("fc_w", w.clone());
+        let target = fake_spec(&[("fc_u", &[8, 2]), ("fc_v", &[2, 6])]);
+        let p2 = warmstart(&stage1, &target, 0).unwrap();
+        let rec = p2.get("fc_u").unwrap().matmul(p2.get("fc_v").unwrap()).unwrap();
+        assert!(w.max_abs_diff(&rec) < 1e-3); // rank-2 source: exact at rank 2
+    }
+
+    #[test]
+    fn warmstart_from_factored_stage1() {
+        let mut stage1 = ParamSet::new();
+        let mut rng = Pcg64::seeded(8);
+        let u = Tensor::randn(&[8, 8], 0.5, &mut rng);
+        let v = Tensor::randn(&[8, 6], 0.5, &mut rng);
+        stage1.set("rec0_u", u.clone());
+        stage1.set("rec0_v", v.clone());
+        let target = fake_spec(&[("rec0_u", &[8, 6]), ("rec0_v", &[6, 6])]);
+        let p2 = warmstart(&stage1, &target, 0).unwrap();
+        let w = u.matmul(&v).unwrap();
+        let rec = p2.get("rec0_u").unwrap().matmul(p2.get("rec0_v").unwrap()).unwrap();
+        // full min(m,n) rank retained => exact reconstruction
+        assert!(w.max_abs_diff(&rec) < 1e-3);
+    }
+
+    #[test]
+    fn pick_rank_frac_prefers_small_rungs_for_low_rank() {
+        let mut p = ParamSet::new();
+        let mut rng = Pcg64::seeded(5);
+        let a = Tensor::randn(&[16, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 16], 1.0, &mut rng);
+        p.set("fc_w", a.matmul(&b).unwrap());
+        let frac = pick_rank_frac(&p, 0.9, &[0.125, 0.25, 0.5, 0.75]).unwrap();
+        assert_eq!(frac, 0.125); // rank 2 of 16 = 0.125
+        let mut hi = ParamSet::new();
+        hi.set("fc_w", Tensor::randn(&[16, 16], 1.0, &mut rng));
+        let frac_hi = pick_rank_frac(&hi, 0.95, &[0.125, 0.25, 0.5, 0.75]).unwrap();
+        assert!(frac_hi >= 0.5);
+    }
+
+    #[test]
+    fn magnitude_masks_hit_target_sparsity() {
+        let mut p = ParamSet::new();
+        let mut rng = Pcg64::seeded(6);
+        p.set("fc_w", Tensor::randn(&[32, 32], 1.0, &mut rng));
+        let masks = magnitude_masks(&p, 0.75).unwrap();
+        let density = mask_density(&masks);
+        assert!((density - 0.25).abs() < 0.02, "density {density}");
+        // masked weights are the small ones
+        let mut p2 = p.clone();
+        p2.apply_masks(&masks).unwrap();
+        let kept_min = p2
+            .get("fc_w")
+            .unwrap()
+            .data()
+            .iter()
+            .filter(|v| **v != 0.0)
+            .fold(f32::MAX, |m, v| m.min(v.abs()));
+        let dropped_max = p
+            .get("fc_w")
+            .unwrap()
+            .data()
+            .iter()
+            .zip(masks.get("fc_mask").unwrap().data())
+            .filter(|(_, m)| **m == 0.0)
+            .fold(0.0f32, |mx, (v, _)| mx.max(v.abs()));
+        assert!(kept_min >= dropped_max);
+        assert_eq!(
+            effective_params(&p2, &masks),
+            masks.get("fc_mask").unwrap().data().iter().filter(|v| **v != 0.0).count()
+        );
+    }
+
+    #[test]
+    fn diagnose_groups_reports_nu() {
+        let mut p = ParamSet::new();
+        let mut rng = Pcg64::seeded(7);
+        p.set("rec0_w", Tensor::randn(&[12, 12], 1.0, &mut rng));
+        let d = diagnose_groups(&p).unwrap();
+        assert_eq!(d.len(), 1);
+        assert!(d[0].nu > 0.0 && d[0].nu < 1.0);
+        assert!(d[0].rank90 <= 12);
+    }
+}

@@ -1,0 +1,65 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! A deliberately small harness: generate `n` random cases from a seeded
+//! [`Pcg64`], run the property, and on failure re-run a crude shrinking
+//! pass (halving sizes) to report a smaller counterexample.  Used by the
+//! invariant tests across the coordinator, decoder and linalg modules.
+
+use crate::prng::Pcg64;
+
+/// Run `prop` over `n` random cases drawn by `gen`.
+///
+/// `gen` receives a seeded RNG and a "size" hint that grows with the case
+/// index, so early cases are small. On failure, retries with progressively
+/// smaller size hints to find a smaller witness, then panics with both.
+pub fn check<T: std::fmt::Debug, G, P>(name: &str, n: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64, usize) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Pcg64::seeded(fnv1a(name));
+    for case in 0..n {
+        let size = 1 + case * 4 / n.max(1) * 8 + case % 8; // ragged growth
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // shrink: try smaller sizes with fresh draws
+            let mut witness = format!("{input:?}");
+            for s in (0..size).rev() {
+                for _ in 0..20 {
+                    let cand = gen(&mut rng, s);
+                    if !prop(&cand) {
+                        witness = format!("{cand:?}");
+                        break;
+                    }
+                }
+            }
+            panic!("property '{name}' failed (case {case}, size {size}).\nwitness: {witness}");
+        }
+    }
+}
+
+/// Stable 64-bit hash of the property name for seeding (FNV-1a).
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("commutative-add", 200, |rng, _| (rng.below(1000) as i64, rng.below(1000) as i64), |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_witness() {
+        check("always-false", 10, |rng, s| rng.below(s + 1), |_| false);
+    }
+}

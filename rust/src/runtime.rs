@@ -1,0 +1,471 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the coordinator's hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo/ for the reference wiring):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`.  HLO **text** is the
+//! interchange format — serialized jax≥0.5 protos are rejected by
+//! xla_extension 0.5.1 (64-bit instruction ids).
+//!
+//! The manifest is the L2↔L3 contract: input/output ordering, shapes and
+//! dtypes per artifact.  [`LoadedArtifact::run`] validates every call
+//! against it, so marshalling bugs surface as errors instead of garbage
+//! numerics.  Compiled executables are cached per artifact name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+use crate::tensor::{Tensor, TensorI8};
+
+// ---------------------------------------------------------------------------
+// Manifest model.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    S8,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "s32" => Ok(Dtype::S32),
+            "s8" => Ok(Dtype::S8),
+            other => Err(Error::Manifest(format!("unknown dtype {other}"))),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchGeom {
+    pub batch: usize,
+    pub max_frames: usize,
+    pub max_label: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ConvDims {
+    pub context: usize,
+    pub dim: usize,
+}
+
+/// Static dimensions of a model config (mirrors python configs.ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub feat_dim: usize,
+    pub conv: Vec<ConvDims>,
+    pub gru_dims: Vec<usize>,
+    pub fc_dim: usize,
+    pub vocab: usize,
+    pub total_stride: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// "train" | "eval" | "stream" | "stream_int8"
+    pub kind: String,
+    pub config: String,
+    pub scheme: String,
+    pub rank_frac: Option<f64>,
+    pub use_masks: bool,
+    pub param_names: Vec<String>,
+    pub mask_names: Vec<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub batch: Option<BatchGeom>,
+    pub chunk: Option<usize>,
+}
+
+impl ArtifactSpec {
+    /// Shape of a named input (parameters are inputs).
+    pub fn input_shape(&self, name: &str) -> Result<&[usize]> {
+        self.inputs
+            .iter()
+            .find(|io| io.name == name)
+            .map(|io| io.shape.as_slice())
+            .ok_or_else(|| Error::Manifest(format!("{}: no input '{name}'", self.name)))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub alphabet: Vec<String>,
+    pub configs: BTreeMap<String, ModelDims>,
+    pub rank_ladder: Vec<f64>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(v: &Json) -> Result<Vec<IoSpec>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Manifest("inputs/outputs not an array".into()))?
+        .iter()
+        .map(|io| {
+            Ok(IoSpec {
+                name: io.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: io
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: Dtype::parse(io.req("dtype")?.as_str().unwrap_or(""))?,
+            })
+        })
+        .collect()
+}
+
+fn str_list(v: Option<&Json>) -> Vec<String> {
+    v.and_then(|a| a.as_arr())
+        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let alphabet = str_list(root.get("alphabet"));
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = root.get("configs").and_then(|c| c.as_obj()) {
+            for (name, c) in cfgs {
+                let conv = c
+                    .req("conv")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| ConvDims {
+                        context: s.get("context").and_then(|v| v.as_usize()).unwrap_or(2),
+                        dim: s.get("dim").and_then(|v| v.as_usize()).unwrap_or(0),
+                    })
+                    .collect();
+                configs.insert(
+                    name.clone(),
+                    ModelDims {
+                        feat_dim: c.req("feat_dim")?.as_usize().unwrap_or(0),
+                        conv,
+                        gru_dims: c
+                            .req("gru_dims")?
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        fc_dim: c.req("fc_dim")?.as_usize().unwrap_or(0),
+                        vocab: c.req("vocab")?.as_usize().unwrap_or(0),
+                        total_stride: c.req("total_stride")?.as_usize().unwrap_or(1),
+                    },
+                );
+            }
+        }
+        let rank_ladder = root
+            .get("rank_ladder")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let batch = a.get("batch").and_then(|b| {
+                Some(BatchGeom {
+                    batch: b.get("batch")?.as_usize()?,
+                    max_frames: b.get("max_frames")?.as_usize()?,
+                    max_label: b.get("max_label")?.as_usize()?,
+                })
+            });
+            let spec = ArtifactSpec {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                kind: a.req("kind")?.as_str().unwrap_or_default().to_string(),
+                config: a.req("config")?.as_str().unwrap_or_default().to_string(),
+                scheme: a.req("scheme")?.as_str().unwrap_or_default().to_string(),
+                rank_frac: a.get("rank_frac").and_then(|v| v.as_f64()),
+                use_masks: a.get("use_masks").and_then(|v| v.as_bool()).unwrap_or(false),
+                param_names: str_list(a.get("param_names")),
+                mask_names: str_list(a.get("mask_names")),
+                inputs: io_specs(a.req("inputs")?)?,
+                outputs: io_specs(a.req("outputs")?)?,
+                batch,
+                chunk: a.get("chunk").and_then(|v| v.as_usize()),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { alphabet, configs, rank_ladder, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))
+    }
+
+    pub fn dims(&self, config: &str) -> Result<&ModelDims> {
+        self.configs
+            .get(config)
+            .ok_or_else(|| Error::Manifest(format!("no config '{config}'")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Values crossing the boundary.
+// ---------------------------------------------------------------------------
+
+/// A host value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+    I8(TensorI8),
+}
+
+impl Value {
+    pub fn scalar(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32(t) => t.shape().to_vec(),
+            Value::I32(_, s) => s.clone(),
+            Value::I8(t) => t.shape().to_vec(),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(_) => Dtype::F32,
+            Value::I32(..) => Dtype::S32,
+            Value::I8(_) => Dtype::S8,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => Err(Error::other("value is not f32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            _ => Err(Error::other("value is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(v, _) => Ok(v),
+            _ => Err(Error::other("value is not i32")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            Value::F32(t) if t.len() == 1 => Ok(t.data()[0]),
+            _ => Err(Error::other("value is not a scalar")),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => xla::Literal::vec1(t.data()).reshape(&dims)?,
+            Value::I32(v, _) => xla::Literal::vec1(v).reshape(&dims)?,
+            Value::I8(t) => {
+                // i8 lacks the crate's NativeType constructor path; build
+                // the literal from raw bytes instead.
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len()) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    &self.shape(),
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                Ok(Value::F32(Tensor::new(&spec.shape, data)?))
+            }
+            Dtype::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(Value::I32(data, spec.shape.clone()))
+            }
+            Dtype::S8 => {
+                let data = lit.to_vec::<i8>()?;
+                Ok(Value::I8(TensorI8::new(&spec.shape, data)?))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime.
+// ---------------------------------------------------------------------------
+
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with host values; validates shapes/dtypes against the spec.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Manifest(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (v, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if v.shape() != spec.shape || v.dtype() != spec.dtype {
+                return Err(Error::Manifest(format!(
+                    "{}: input '{}' expects {:?}/{:?}, got {:?}/{:?}",
+                    self.spec.name,
+                    spec.name,
+                    spec.shape,
+                    spec.dtype,
+                    v.shape(),
+                    v.dtype()
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != self.spec.outputs.len() {
+            return Err(Error::Manifest(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tuple.len()
+            )));
+        }
+        tuple
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<BTreeMap<String, Arc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain manifest.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, dir, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Default artifact dir: $REPRO_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Runtime> {
+        let dir =
+            std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (compile) an artifact; cached per name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::other("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Arc::new(LoadedArtifact { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_MANIFEST: &str = r#"{
+      "alphabet": ["<b>", " ", "a"],
+      "configs": {"c": {"feat_dim": 4, "conv": [{"context": 2, "dim": 8}],
+                         "gru_dims": [8], "fc_dim": 8, "vocab": 3,
+                         "total_stride": 2}},
+      "rank_ladder": [0.25, 0.5],
+      "artifacts": [{
+        "name": "a", "file": "a.hlo.txt", "kind": "eval", "config": "c",
+        "scheme": "partial", "rank_frac": 0.25, "use_masks": false,
+        "param_names": ["w"],
+        "inputs": [{"name": "w", "shape": [2, 3], "dtype": "f32"}],
+        "outputs": [{"name": "y", "shape": [2], "dtype": "s32"}],
+        "batch": {"batch": 1, "max_frames": 8, "max_label": 2}
+      }]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MINI_MANIFEST).unwrap();
+        assert_eq!(m.alphabet.len(), 3);
+        assert_eq!(m.rank_ladder, vec![0.25, 0.5]);
+        let a = m.artifact("a").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.outputs[0].dtype, Dtype::S32);
+        assert_eq!(a.batch.unwrap().max_frames, 8);
+        assert_eq!(m.dims("c").unwrap().gru_dims, vec![8]);
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(a.input_shape("w").unwrap(), &[2, 3]);
+        assert!(a.input_shape("nope").is_err());
+    }
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), vec![2, 3]);
+        assert_eq!(v.dtype(), Dtype::F32);
+        let s = Value::scalar(1.5);
+        assert_eq!(s.scalar_f32().unwrap(), 1.5);
+        assert!(s.as_i32().is_err());
+    }
+}

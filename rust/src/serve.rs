@@ -1,0 +1,146 @@
+//! Server-path serving simulator (the Table-2 "GPU server" row and the
+//! batching-vs-latency trade-off of §4).
+//!
+//! A discrete-event simulation driven by *measured* execution times: batch
+//! arrivals follow a seeded Poisson process, a dynamic batcher groups up
+//! to `max_batch` queued requests (or whatever arrived within the batching
+//! window), and each batch is actually executed through the PJRT eval
+//! artifact — so service times are real, only the arrival clock is
+//! simulated.  This mirrors how the paper's server deployment batches
+//! independent user streams, in contrast to the single-user embedded path
+//! ([`crate::infer`]).
+
+use crate::data::Utterance;
+use crate::error::{Error, Result};
+use crate::metricsx::Histogram;
+use crate::model::ParamSet;
+use crate::runtime::Runtime;
+use crate::train::Evaluator;
+use crate::prng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// mean request arrival rate (utterances / second)
+    pub arrival_rate: f64,
+    /// maximum dynamic batch size (the eval artifact's batch is the cap)
+    pub max_batch: usize,
+    /// batching window: wait at most this long to fill a batch (seconds)
+    pub window: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { arrival_rate: 20.0, max_batch: 8, window: 0.05, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub throughput: f64,
+    pub mean_batch: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    pub mean_service: f64,
+    /// wall-clock seconds actually spent executing batches
+    pub busy_secs: f64,
+    /// simulated span from first arrival to last completion
+    pub span_secs: f64,
+}
+
+/// Run the serving simulation over `utts` (one request per utterance).
+pub fn simulate(
+    rt: &Runtime,
+    eval_artifact: &str,
+    params: &ParamSet,
+    utts: &[Utterance],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    if utts.is_empty() {
+        return Err(Error::other("no requests"));
+    }
+    let eval = Evaluator::new(rt, eval_artifact)?;
+    let mut rng = Pcg64::seeded(cfg.seed);
+
+    // Poisson arrivals: exponential inter-arrival gaps.
+    let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
+    let mut t = 0.0;
+    for _ in 0..utts.len() {
+        t += -rng.uniform().max(1e-12).ln() / cfg.arrival_rate;
+        arrivals.push(t);
+    }
+
+    let mut lat = Histogram::new();
+    let mut clock = 0.0f64; // simulated time
+    let mut busy = 0.0f64;
+    let mut served = 0usize;
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    let mut i = 0usize;
+
+    while i < utts.len() {
+        // server idle: jump to next arrival if queue empty
+        if clock < arrivals[i] {
+            clock = arrivals[i];
+        }
+        // collect the batch: everything that has arrived, plus anything
+        // arriving within the window, up to max_batch
+        let deadline = clock + cfg.window;
+        let mut j = i;
+        while j < utts.len() && j - i < cfg.max_batch && arrivals[j] <= deadline {
+            j += 1;
+        }
+        // if we waited for the window, the clock advances to the last
+        // arrival we accepted (or the full window if the batch is full)
+        let batch: Vec<&Utterance> = utts[i..j].iter().collect();
+        if j - i == cfg.max_batch {
+            clock = clock.max(arrivals[j - 1]);
+        } else if j < utts.len() {
+            clock = deadline;
+        } else {
+            clock = clock.max(arrivals[j - 1]);
+        }
+
+        // execute for real
+        let owned: Vec<Utterance> = batch.iter().map(|u| (*u).clone()).collect();
+        let t0 = std::time::Instant::now();
+        let _ = eval.logprobs(params, &owned)?;
+        let service = t0.elapsed().as_secs_f64();
+        busy += service;
+        clock += service;
+        for k in i..j {
+            lat.record(clock - arrivals[k]);
+        }
+        batch_sizes.push(j - i);
+        served += j - i;
+        i = j;
+    }
+
+    let span = clock - arrivals[0];
+    Ok(ServeReport {
+        requests: served,
+        throughput: served as f64 / span.max(1e-9),
+        mean_batch: batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64,
+        p50_latency: lat.percentile(0.5),
+        p95_latency: lat.percentile(0.95),
+        p99_latency: lat.percentile(0.99),
+        mean_service: busy / batch_sizes.len().max(1) as f64,
+        busy_secs: busy,
+        span_secs: span,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServeConfig::default();
+        assert!(c.arrival_rate > 0.0 && c.max_batch >= 1 && c.window >= 0.0);
+    }
+
+    // end-to-end serving tests live in rust/tests/integration.rs (they
+    // need compiled artifacts).
+}

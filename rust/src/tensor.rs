@@ -1,0 +1,362 @@
+//! Dense row-major tensors — the crate's numeric substrate.
+//!
+//! Deliberately small: shapes are `Vec<usize>`, storage is a flat
+//! `Vec<f32>` (or `Vec<i8>` for [`TensorI8`]). Heavy GEMMs live in
+//! [`crate::kernels`]; this module provides construction, views, reshapes
+//! and the light element-wise operations used by the trainer, decoder and
+//! linalg.
+
+use crate::error::{Error, Result};
+use crate::prng::Pcg64;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// Glorot-uniform init for a (fan_out, fan_in) weight matrix.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let mut t = Tensor::zeros(&[rows, cols]);
+        rng.fill_glorot(&mut t.data, cols, rows);
+        t
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg64) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessors (most weights are matrices).
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2, "rows() on rank-{} tensor", self.rank());
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2, "cols() on rank-{} tensor", self.rank());
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {:?} ({} elems) to {:?}",
+                self.shape,
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Matrix transpose (rank 2).
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Plain triple-loop matmul: `self (m,k) @ other (k,n)`. Reference
+    /// implementation — the optimized path is `kernels::gemm_f32`.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        if k != k2 {
+            return Err(Error::Shape(format!(
+                "matmul {:?} x {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Concatenate rank-2 tensors along axis 0 (rows).
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        let cols = parts[0].cols();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.cols() != cols {
+                return Err(Error::Shape("concat_rows: col mismatch".into()));
+            }
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(&[rows, cols], data)
+    }
+
+    /// Split a rank-2 tensor into equal row blocks.
+    pub fn split_rows(&self, parts: usize) -> Result<Vec<Tensor>> {
+        let m = self.rows();
+        if m % parts != 0 {
+            return Err(Error::Shape(format!("split_rows: {m} rows into {parts}")));
+        }
+        let rows = m / parts;
+        let c = self.cols();
+        Ok((0..parts)
+            .map(|p| {
+                Tensor::new(
+                    &[rows, c],
+                    self.data[p * rows * c..(p + 1) * rows * c].to_vec(),
+                )
+                .unwrap()
+            })
+            .collect())
+    }
+
+    pub fn scale(&mut self, s: f32) -> &mut Self {
+        for v in &mut self.data {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape("add_assign shape mismatch".into()));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    pub fn mul_assign(&mut self, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape("mul_assign shape mismatch".into()));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+        Ok(())
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// Dense row-major int8 tensor (quantized weights/activations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    shape: Vec<usize>,
+    data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn new(shape: &[usize], data: Vec<i8>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "i8 shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(TensorI8 { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorI8 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i8] {
+        &mut self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[i8] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(0);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let c = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[8, 3]);
+        let parts = c.split_rows(2).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+    }
+
+    #[test]
+    fn reshape_checks_elements() {
+        let t = Tensor::zeros(&[2, 6]);
+        assert!(t.clone().reshape(&[3, 4]).is_ok());
+        assert!(t.reshape(&[5, 2]).is_err());
+    }
+
+    #[test]
+    fn frob_norm() {
+        let t = Tensor::new(&[2, 2], vec![3., 0., 0., 4.]).unwrap();
+        assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

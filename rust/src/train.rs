@@ -1,0 +1,434 @@
+//! Training orchestrator — the L3 coordination layer for the paper's §3.
+//!
+//! The Rust side owns the loop: it feeds the AOT `train_*` executable the
+//! full optimizer state every step (params + momentum + batch + the
+//! runtime hyperparameters λ_rec, λ_nonrec, lr), reads the updated state
+//! back, applies pruning masks, runs dev evaluation through the matching
+//! `eval_*` executable, and implements the paper's **two-stage scheme**:
+//!
+//! 1. *Stage 1*: full-rank factored training with the trace-norm
+//!    surrogate (or dense training with ℓ², or unregularized).
+//! 2. *Transition*: per-group SVD of the stage-1 weights, rank chosen by
+//!    explained variance against the AOT rank ladder, balanced-factor
+//!    warmstart ([`crate::model::warmstart`]).
+//! 3. *Stage 2*: low-rank training, no regularization, LR carried over
+//!    per the §3.2.3 schedule (continuation or 3× final stage-1 LR).
+
+use std::sync::Arc;
+
+use crate::data::{Batch, Batcher, Utterance, make_batch};
+use crate::decoder::{self, ErrorStats};
+use crate::error::{Error, Result};
+use crate::model::{self, ParamSet};
+use crate::runtime::{LoadedArtifact, Runtime, Value};
+use crate::tensor::Tensor;
+
+/// Scalar metrics returned by one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub ctc: f32,
+    pub penalty: f32,
+    pub grad_norm: f32,
+}
+
+/// Options for one training stage.
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub seed: u64,
+    pub lr: f32,
+    /// multiplicative LR decay applied after each epoch
+    pub lr_decay: f32,
+    pub epochs: usize,
+    pub lam_rec: f32,
+    pub lam_nonrec: f32,
+    pub quiet: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            seed: 0,
+            lr: 2e-3,
+            lr_decay: 0.95,
+            epochs: 10,
+            lam_rec: 0.0,
+            lam_nonrec: 0.0,
+            quiet: true,
+        }
+    }
+}
+
+/// Per-epoch log entry.
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub mean_ctc: f64,
+    pub lr: f32,
+    pub dev_cer: Option<f64>,
+}
+
+/// Single-stage trainer bound to one train artifact.
+pub struct Trainer {
+    artifact: Arc<LoadedArtifact>,
+    pub params: ParamSet,
+    pub momentum: ParamSet,
+    pub masks: Option<ParamSet>,
+    pub lr: f32,
+    pub opts: TrainOpts,
+    pub history: Vec<EpochLog>,
+}
+
+impl Trainer {
+    /// Fresh-initialized trainer for a named train artifact.
+    pub fn new(rt: &Runtime, artifact: &str, opts: TrainOpts) -> Result<Trainer> {
+        let loaded = rt.load(artifact)?;
+        let params = ParamSet::init(&loaded.spec, opts.seed)?;
+        let momentum = ParamSet::zeros_like(&params);
+        Ok(Trainer {
+            artifact: loaded,
+            params,
+            momentum,
+            masks: None,
+            lr: opts.lr,
+            opts,
+            history: Vec::new(),
+        })
+    }
+
+    /// Warmstarted trainer (stage 2): params given, momentum zeroed.
+    pub fn with_params(
+        rt: &Runtime,
+        artifact: &str,
+        params: ParamSet,
+        opts: TrainOpts,
+    ) -> Result<Trainer> {
+        let loaded = rt.load(artifact)?;
+        for n in &loaded.spec.param_names {
+            if params.get(n)?.shape() != loaded.spec.input_shape(n)? {
+                return Err(Error::Train(format!("param '{n}' shape mismatch vs {artifact}")));
+            }
+        }
+        let momentum = ParamSet::zeros_like(&params);
+        Ok(Trainer {
+            artifact: loaded,
+            params,
+            momentum,
+            masks: None,
+            lr: opts.lr,
+            opts,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn spec_name(&self) -> &str {
+        &self.artifact.spec.name
+    }
+
+    /// Install pruning masks (the artifact must have been lowered with
+    /// `use_masks`); weights are re-projected after every step.
+    pub fn set_masks(&mut self, masks: ParamSet) -> Result<()> {
+        if !self.artifact.spec.use_masks {
+            return Err(Error::Train(format!(
+                "{} was not lowered with mask inputs",
+                self.artifact.spec.name
+            )));
+        }
+        self.params.apply_masks(&masks)?;
+        self.masks = Some(masks);
+        Ok(())
+    }
+
+    /// One optimizer step on a batch.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        let spec = &self.artifact.spec;
+        let names = &spec.param_names;
+        let mut inputs = self.params.values_in_order(names)?;
+        inputs.extend(self.momentum.values_in_order(names)?);
+        if spec.use_masks {
+            let masks = self
+                .masks
+                .as_ref()
+                .ok_or_else(|| Error::Train("masked artifact without masks set".into()))?;
+            for mn in &spec.mask_names {
+                inputs.push(Value::F32(masks.get(mn)?.clone()));
+            }
+        }
+        inputs.push(batch.feats.clone());
+        inputs.push(batch.frame_lens.clone());
+        inputs.push(batch.labels.clone());
+        inputs.push(batch.label_lens.clone());
+        inputs.push(Value::scalar(self.lr));
+        inputs.push(Value::scalar(self.opts.lam_rec));
+        inputs.push(Value::scalar(self.opts.lam_nonrec));
+
+        let outputs = self.artifact.run(&inputs)?;
+        let np = names.len();
+        self.params = ParamSet::from_values(names, &outputs[..np])?;
+        self.momentum = ParamSet::from_values(names, &outputs[np..2 * np])?;
+        if let Some(masks) = &self.masks {
+            self.params.apply_masks(masks)?;
+        }
+        let scalar = |i: usize| -> Result<f32> { outputs[2 * np + i].scalar_f32() };
+        Ok(StepMetrics {
+            loss: scalar(0)?,
+            ctc: scalar(1)?,
+            penalty: scalar(2)?,
+            grad_norm: scalar(3)?,
+        })
+    }
+
+    /// Train for `opts.epochs` epochs over the batcher, decaying LR per
+    /// epoch and logging dev CER through `eval` when provided.
+    pub fn run(&mut self, batcher: &mut Batcher, eval: Option<&Evaluator>, dev: Option<&[Utterance]>) -> Result<()> {
+        let epochs = self.opts.epochs;
+        for _ in 0..epochs {
+            self.run_one_epoch(batcher, eval, dev)?;
+        }
+        Ok(())
+    }
+
+    /// One epoch (all batches once); appends to history.
+    pub fn run_one_epoch(
+        &mut self,
+        batcher: &mut Batcher,
+        eval: Option<&Evaluator>,
+        dev: Option<&[Utterance]>,
+    ) -> Result<()> {
+        let epoch = self.history.len();
+        let mut sum_loss = 0.0f64;
+        let mut sum_ctc = 0.0f64;
+        let batches = batcher.epoch();
+        let n = batches.len().max(1);
+        for b in &batches {
+            let m = self.step(b)?;
+            if !m.loss.is_finite() {
+                return Err(Error::Train(format!(
+                    "non-finite loss at epoch {epoch} ({})",
+                    self.artifact.spec.name
+                )));
+            }
+            sum_loss += m.loss as f64;
+            sum_ctc += m.ctc as f64;
+        }
+        let dev_cer = match (eval, dev) {
+            (Some(e), Some(d)) => Some(e.greedy_cer(&self.params, d)?.cer()),
+            _ => None,
+        };
+        let log = EpochLog {
+            epoch,
+            mean_loss: sum_loss / n as f64,
+            mean_ctc: sum_ctc / n as f64,
+            lr: self.lr,
+            dev_cer,
+        };
+        if !self.opts.quiet {
+            match dev_cer {
+                Some(c) => println!(
+                    "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}  dev CER {:.3}",
+                    log.mean_loss, log.mean_ctc, log.lr, c
+                ),
+                None => println!(
+                    "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}",
+                    log.mean_loss, log.mean_ctc, log.lr
+                ),
+            }
+        }
+        self.history.push(log);
+        self.lr *= self.opts.lr_decay;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluation through the eval_* artifacts.
+// ---------------------------------------------------------------------------
+
+/// Evaluator bound to one eval artifact.
+pub struct Evaluator {
+    artifact: Arc<LoadedArtifact>,
+    feat_dim: usize,
+}
+
+impl Evaluator {
+    pub fn new(rt: &Runtime, artifact: &str) -> Result<Evaluator> {
+        let loaded = rt.load(artifact)?;
+        let dims = rt.manifest().dims(&loaded.spec.config)?;
+        Ok(Evaluator { artifact: loaded, feat_dim: dims.feat_dim })
+    }
+
+    /// Run the model over utterances, returning per-utterance (logprobs,
+    /// out_len, reference text).
+    pub fn logprobs(
+        &self,
+        params: &ParamSet,
+        utts: &[Utterance],
+    ) -> Result<Vec<(Tensor, usize, String)>> {
+        let spec = &self.artifact.spec;
+        let geom = spec
+            .batch
+            .ok_or_else(|| Error::Manifest(format!("{}: eval without batch geom", spec.name)))?;
+        let pvals = params.values_in_order(&spec.param_names)?;
+        let mut out = Vec::with_capacity(utts.len());
+        for chunk in utts.chunks(geom.batch) {
+            let refs: Vec<&Utterance> = chunk.iter().collect();
+            let batch = make_batch(&refs, &geom, self.feat_dim);
+            let mut inputs = pvals.clone();
+            inputs.push(batch.feats.clone());
+            inputs.push(batch.frame_lens.clone());
+            let res = self.artifact.run(&inputs)?;
+            let logp = res[0].as_f32()?;
+            let lens = res[1].as_i32()?;
+            let (b, t, v) = (logp.shape()[0], logp.shape()[1], logp.shape()[2]);
+            debug_assert_eq!(b, geom.batch);
+            for (i, u) in chunk.iter().enumerate() {
+                let rows =
+                    Tensor::new(&[t, v], logp.data()[i * t * v..(i + 1) * t * v].to_vec())?;
+                out.push((rows, lens[i] as usize, u.text.clone()));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Greedy-decoded corpus error rates.
+    pub fn greedy_cer(&self, params: &ParamSet, utts: &[Utterance]) -> Result<ErrorStats> {
+        let mut stats = ErrorStats::default();
+        for (logp, len, reference) in self.logprobs(params, utts)? {
+            let hyp = decoder::transcript_greedy(&logp, len);
+            stats.push(&hyp, &reference);
+        }
+        Ok(stats)
+    }
+
+    /// Beam-decoded error rates with optional LM fusion.
+    pub fn beam_cer(
+        &self,
+        params: &ParamSet,
+        utts: &[Utterance],
+        beam: usize,
+        lm: Option<&crate::lm::CharLm>,
+        lm_weight: f64,
+    ) -> Result<ErrorStats> {
+        let mut stats = ErrorStats::default();
+        for (logp, len, reference) in self.logprobs(params, utts)? {
+            let hyp = decoder::transcript_beam(&logp, len, beam, lm, lm_weight);
+            stats.push(&hyp, &reference);
+        }
+        Ok(stats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-stage pipeline (§3 + §3.2.3).
+// ---------------------------------------------------------------------------
+
+/// How stage 2 sets its initial LR.
+#[derive(Clone, Copy, Debug)]
+pub enum Stage2Lr {
+    /// 3× the final stage-1 LR (§3.2.2 protocol)
+    TripleFinal,
+    /// continue the stage-1 schedule as if one model trained throughout
+    /// (§3.2.3 protocol)
+    Continuation,
+}
+
+/// Result of a full two-stage run.
+pub struct TwoStageResult {
+    pub stage1_params: ParamSet,
+    pub stage2: Trainer,
+    pub rank_frac: f64,
+    pub stage1_history: Vec<EpochLog>,
+}
+
+/// Derive the eval-artifact name for a train artifact.
+pub fn eval_name(train_artifact: &str) -> String {
+    train_artifact.replacen("train_", "eval_", 1)
+}
+
+/// Name tag for a rank fraction, matching aot.py's `frac_tag`.
+pub fn frac_tag(frac: f64) -> String {
+    format!("r{:03}", (frac * 1000.0).round() as usize)
+}
+
+/// Run the two-stage scheme.
+///
+/// * `stage1_artifact` — e.g. "train_mini_partial_full" (trace norm) or
+///   "train_mini_unfact" (ℓ²/unregularized).
+/// * `stage2_family` — e.g. "train_mini_partial": the rank tag is appended.
+/// * `svd_threshold` — explained-variance threshold for rank selection.
+/// * `transition_epoch` — epochs spent in stage 1; the remaining budget
+///   (`total_epochs - transition_epoch`) goes to stage 2.
+#[allow(clippy::too_many_arguments)]
+pub fn two_stage(
+    rt: &Runtime,
+    batcher: &mut Batcher,
+    dev: &[Utterance],
+    stage1_artifact: &str,
+    stage2_family: &str,
+    svd_threshold: f64,
+    transition_epoch: usize,
+    total_epochs: usize,
+    stage1_opts: TrainOpts,
+    stage2_lr: Stage2Lr,
+) -> Result<TwoStageResult> {
+    // ---- stage 1
+    let mut opts1 = stage1_opts.clone();
+    opts1.epochs = transition_epoch;
+    let eval1 = Evaluator::new(rt, &eval_name(stage1_artifact))?;
+    let mut t1 = Trainer::new(rt, stage1_artifact, opts1)?;
+    t1.run(batcher, Some(&eval1), Some(dev))?;
+
+    // ---- transition: rank selection + warmstart
+    let ladder = rt.manifest().rank_ladder.clone();
+    let frac = model::pick_rank_frac(&t1.params, svd_threshold, &ladder)?;
+    let stage2_artifact = format!("{stage2_family}_{}", frac_tag(frac));
+    let spec2 = rt.manifest().artifact(&stage2_artifact)?.clone();
+    let params2 = model::warmstart(&t1.params, &spec2, stage1_opts.seed + 1)?;
+
+    // ---- stage 2 (no regularization; §3.2.2/§3.2.3 LR rules)
+    let mut opts2 = stage1_opts.clone();
+    opts2.lam_rec = 0.0;
+    opts2.lam_nonrec = 0.0;
+    opts2.epochs = total_epochs.saturating_sub(transition_epoch);
+    opts2.lr = match stage2_lr {
+        Stage2Lr::TripleFinal => t1.lr * 3.0,
+        Stage2Lr::Continuation => t1.lr,
+    };
+    let eval2 = Evaluator::new(rt, &eval_name(&stage2_artifact))?;
+    let mut t2 = Trainer::with_params(rt, &stage2_artifact, params2, opts2)?;
+    t2.run(batcher, Some(&eval2), Some(dev))?;
+
+    Ok(TwoStageResult {
+        stage1_params: t1.params,
+        stage2: t2,
+        rank_frac: frac,
+        stage1_history: t1.history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_name_mapping() {
+        assert_eq!(eval_name("train_mini_partial_full"), "eval_mini_partial_full");
+        assert_eq!(eval_name("train_mini_unfact"), "eval_mini_unfact");
+    }
+
+    #[test]
+    fn frac_tags_match_aot() {
+        assert_eq!(frac_tag(0.125), "r125");
+        assert_eq!(frac_tag(0.25), "r250");
+        assert_eq!(frac_tag(0.375), "r375");
+        assert_eq!(frac_tag(0.5), "r500");
+        assert_eq!(frac_tag(0.75), "r750");
+    }
+
+    #[test]
+    fn default_opts_sane() {
+        let o = TrainOpts::default();
+        assert!(o.lr > 0.0 && o.lr_decay <= 1.0 && o.epochs > 0);
+    }
+}

@@ -1,0 +1,368 @@
+//! Integration tests over the full stack: PJRT runtime + AOT artifacts +
+//! coordinator + embedded engine.
+//!
+//! These need `make artifacts` to have run; if the manifest is missing the
+//! tests succeed vacuously with a loud message (CI convention for
+//! build-step dependencies).
+
+use std::sync::OnceLock;
+
+use tracenorm::data::{make_batch, CorpusSpec, Dataset, Utterance};
+use tracenorm::decoder;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::model::{magnitude_masks, warmstart, ParamSet};
+use tracenorm::runtime::{Runtime, Value};
+use tracenorm::serve::{simulate, ServeConfig};
+use tracenorm::tensor::Tensor;
+use tracenorm::train::{eval_name, Evaluator, TrainOpts, Trainer};
+
+/// The xla crate's PJRT handles are `Rc`-based (not `Send`/`Sync`).  The
+/// test binary pins `RUST_TEST_THREADS=1` via `.cargo/config.toml`, so
+/// tests execute strictly sequentially and each test thread's accesses are
+/// ordered by libtest's thread joins (happens-before) — sharing the cached
+/// runtime across those threads is sound even though `Rc` refcounts are
+/// non-atomic.
+struct SharedRt(Option<Runtime>);
+unsafe impl Send for SharedRt {}
+unsafe impl Sync for SharedRt {}
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<SharedRt> = OnceLock::new();
+    RT.get_or_init(|| {
+        assert_eq!(
+            std::env::var("RUST_TEST_THREADS").as_deref(),
+            Ok("1"),
+            "integration tests must run with RUST_TEST_THREADS=1 (set in .cargo/config.toml)"
+        );
+        match Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+            Ok(rt) => SharedRt(Some(rt)),
+            Err(e) => {
+                eprintln!("SKIPPING integration tests (run `make artifacts`): {e}");
+                SharedRt(None)
+            }
+        }
+    })
+    .0
+    .as_ref()
+}
+
+fn dataset() -> &'static Dataset {
+    static DS: OnceLock<Dataset> = OnceLock::new();
+    DS.get_or_init(|| Dataset::generate(CorpusSpec::standard(11), 48, 16, 16))
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for name in [
+        "train_mini_unfact",
+        "train_mini_unfact_masked",
+        "train_mini_partial_full",
+        "train_mini_partial_r250",
+        "train_mini_split_full",
+        "train_mini_joint_full",
+        "eval_mini_unfact",
+        "eval_mini_partial_r250",
+        "stream_mini_partial_r250_c8",
+        "stream_mini_partial_r250_c8_int8",
+        "train_s50_unfact",
+    ] {
+        assert!(m.artifacts.contains_key(name), "missing artifact {name}");
+    }
+    assert_eq!(m.alphabet.len(), 29);
+    assert!(m.rank_ladder.len() >= 4);
+}
+
+#[test]
+fn eval_artifact_produces_normalized_logprobs() {
+    let Some(rt) = runtime() else { return };
+    let eval = Evaluator::new(rt, "eval_mini_unfact").unwrap();
+    let spec = rt.manifest().artifact("eval_mini_unfact").unwrap().clone();
+    let params = ParamSet::init(&spec, 3).unwrap();
+    let utts = &dataset().dev[..4];
+    let rows = eval.logprobs(&params, utts).unwrap();
+    assert_eq!(rows.len(), 4);
+    for (logp, len, _) in rows {
+        assert!(len > 0 && len <= logp.rows());
+        for t in 0..len {
+            let total: f32 = logp.row(t).iter().map(|v| v.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-3, "row {t} sums to {total}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_training_reduces_loss_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let ds = dataset();
+    let spec = rt.manifest().artifact("train_mini_partial_full").unwrap().clone();
+    let mut batcher = tracenorm::data::Batcher::new(
+        &ds.train,
+        spec.batch.unwrap(),
+        ds.spec.feat_dim,
+        0,
+    );
+    let opts = TrainOpts {
+        seed: 5,
+        lr: 2e-3,
+        lr_decay: 1.0,
+        epochs: 1,
+        lam_rec: 1e-4,
+        lam_nonrec: 1e-4,
+        quiet: true,
+    };
+    let mut t = Trainer::new(rt, "train_mini_partial_full", opts).unwrap();
+    let batches = batcher.epoch();
+    let first = t.step(&batches[0]).unwrap();
+    assert!(first.loss.is_finite() && first.penalty > 0.0);
+    let mut last = first;
+    for _ in 0..4 {
+        for b in &batches {
+            last = t.step(b).unwrap();
+        }
+    }
+    assert!(
+        last.loss < first.loss,
+        "loss did not decrease: {} -> {}",
+        first.loss,
+        last.loss
+    );
+}
+
+#[test]
+fn embedded_engine_matches_pjrt_eval() {
+    let Some(rt) = runtime() else { return };
+    let ds = dataset();
+    let spec = rt.manifest().artifact("eval_mini_partial_r250").unwrap().clone();
+    let params = ParamSet::init(&spec, 7).unwrap();
+    let eval = Evaluator::new(rt, "eval_mini_partial_r250").unwrap();
+    let utt = &ds.dev[0];
+    let pjrt = &eval.logprobs(&params, std::slice::from_ref(utt)).unwrap()[0];
+
+    let dims = rt.manifest().dims("wsj_mini").unwrap().clone();
+    let engine = Engine::from_params(&dims, "partial", &params, Precision::F32, 4).unwrap();
+    let mut bd = Breakdown::default();
+    let (_, rows) = engine.transcribe(&utt.feats, &mut bd).unwrap();
+
+    let out_len = pjrt.1;
+    assert!(rows.len() >= out_len, "{} vs {}", rows.len(), out_len);
+    for t in 0..out_len {
+        for (a, b) in pjrt.0.row(t).iter().zip(&rows[t]) {
+            assert!(
+                (a - b).abs() < 2e-2,
+                "t={t}: PJRT {a} vs engine {b} (diff {})",
+                (a - b).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn stream_artifact_matches_eval_artifact() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest().artifact("stream_mini_partial_r250_c8").unwrap().clone();
+    let params = ParamSet::init(&spec, 9).unwrap();
+    let loaded = rt.load("stream_mini_partial_r250_c8").unwrap();
+    let dims = rt.manifest().dims("wsj_mini").unwrap().clone();
+
+    // stream 16 raw frames as two chunks of 8 through the HLO stream step
+    let mut rng = tracenorm::prng::Pcg64::seeded(4);
+    let feats = Tensor::randn(&[16, dims.feat_dim], 0.5, &mut rng);
+    let mut hs: Vec<Value> = dims
+        .gru_dims
+        .iter()
+        .map(|&h| Value::F32(Tensor::zeros(&[1, h])))
+        .collect();
+    let mut streamed: Vec<f32> = Vec::new();
+    for c in 0..2 {
+        let chunk = Tensor::new(
+            &[1, 8, dims.feat_dim],
+            feats.data()[c * 8 * dims.feat_dim..(c + 1) * 8 * dims.feat_dim].to_vec(),
+        )
+        .unwrap();
+        let mut inputs = params.values_in_order(&loaded.spec.param_names).unwrap();
+        inputs.extend(hs.iter().cloned());
+        inputs.push(Value::F32(chunk));
+        let out = loaded.run(&inputs).unwrap();
+        let ngru = dims.gru_dims.len();
+        hs = out[..ngru].to_vec();
+        streamed.extend(out[ngru].as_f32().unwrap().data());
+    }
+
+    // same params through the eval artifact (pad to max_frames)
+    let eval_spec = rt.manifest().artifact("eval_mini_partial_r250").unwrap().clone();
+    let eval = rt.load("eval_mini_partial_r250").unwrap();
+    let geom = eval_spec.batch.unwrap();
+    let mut padded = Tensor::zeros(&[geom.batch, geom.max_frames, dims.feat_dim]);
+    padded.data_mut()[..16 * dims.feat_dim].copy_from_slice(feats.data());
+    let mut inputs = params.values_in_order(&eval_spec.param_names).unwrap();
+    inputs.push(Value::F32(padded));
+    inputs.push(Value::I32(vec![16, 0, 0, 0, 0, 0, 0, 0], vec![geom.batch]));
+    let out = eval.run(&inputs).unwrap();
+    let logp = out[0].as_f32().unwrap();
+    let t_out = 16 / dims.total_stride;
+    let v = dims.vocab;
+    for t in 0..t_out {
+        for j in 0..v {
+            let a = logp.data()[t * v + j];
+            let b = streamed[t * v + j];
+            assert!((a - b).abs() < 1e-3, "t={t} j={j}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn int8_stream_artifact_runs_and_tracks_f32() {
+    let Some(rt) = runtime() else { return };
+    let loaded = rt.load("stream_mini_partial_r250_c8_int8").unwrap();
+    let dims = rt.manifest().dims("wsj_mini").unwrap().clone();
+    // f32 params for the f32 stream artifact, quantized wire for int8
+    let f32_spec = rt.manifest().artifact("stream_mini_partial_r250_c8").unwrap().clone();
+    let params = ParamSet::init(&f32_spec, 13).unwrap();
+
+    let mut inputs = Vec::new();
+    for name in &loaded.spec.param_names {
+        if let Some(base) = name.strip_suffix("_q") {
+            let w = params.get(base).unwrap();
+            let q = tracenorm::quant::quantize(w);
+            inputs.push(Value::I8(q.q.clone()));
+        } else if let Some(base) = name.strip_suffix("_scale") {
+            let w = params.get(base).unwrap();
+            let q = tracenorm::quant::quantize(w);
+            inputs.push(Value::scalar(q.scale));
+        } else {
+            inputs.push(Value::F32(params.get(name).unwrap().clone()));
+        }
+    }
+    for &h in &dims.gru_dims {
+        inputs.push(Value::F32(Tensor::zeros(&[1, h])));
+    }
+    let mut rng = tracenorm::prng::Pcg64::seeded(6);
+    let chunk = Tensor::randn(&[1, 8, dims.feat_dim], 0.5, &mut rng);
+    inputs.push(Value::F32(chunk.clone()));
+    let out_q = loaded.run(&inputs).unwrap();
+    let logp_q = out_q[dims.gru_dims.len()].as_f32().unwrap().clone();
+
+    // f32 reference
+    let f32_loaded = rt.load("stream_mini_partial_r250_c8").unwrap();
+    let mut inputs_f = params.values_in_order(&f32_spec.param_names).unwrap();
+    for &h in &dims.gru_dims {
+        inputs_f.push(Value::F32(Tensor::zeros(&[1, h])));
+    }
+    inputs_f.push(Value::F32(chunk));
+    let out_f = f32_loaded.run(&inputs_f).unwrap();
+    let logp_f = out_f[dims.gru_dims.len()].as_f32().unwrap();
+
+    let mean_diff: f32 = logp_q
+        .data()
+        .iter()
+        .zip(logp_f.data())
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>()
+        / logp_q.len() as f32;
+    assert!(mean_diff < 0.3, "int8 HLO diverges from f32: mean diff {mean_diff}");
+}
+
+#[test]
+fn warmstart_roundtrip_through_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let s1_spec = rt.manifest().artifact("train_mini_partial_full").unwrap().clone();
+    let stage1 = ParamSet::init(&s1_spec, 21).unwrap();
+    let s2_spec = rt.manifest().artifact("train_mini_partial_r500").unwrap().clone();
+    let p2 = warmstart(&stage1, &s2_spec, 22).unwrap();
+    // every param has the target shape; runs through the stage-2 trainer
+    for n in &s2_spec.param_names {
+        assert_eq!(p2.get(n).unwrap().shape(), s2_spec.input_shape(n).unwrap());
+    }
+    assert!(p2.num_scalars() < stage1.num_scalars());
+    let ds = dataset();
+    let geom = s2_spec.batch.unwrap();
+    let refs: Vec<&Utterance> = ds.train.iter().take(geom.batch).collect();
+    let batch = make_batch(&refs, &geom, ds.spec.feat_dim);
+    let opts = TrainOpts { epochs: 1, quiet: true, ..Default::default() };
+    let mut t = Trainer::with_params(rt, "train_mini_partial_r500", p2, opts).unwrap();
+    let m = t.step(&batch).unwrap();
+    assert!(m.loss.is_finite());
+}
+
+#[test]
+fn masked_training_keeps_pruned_weights_zero() {
+    let Some(rt) = runtime() else { return };
+    let ds = dataset();
+    let spec = rt.manifest().artifact("train_mini_unfact_masked").unwrap().clone();
+    let opts = TrainOpts { epochs: 1, lr: 2e-3, quiet: true, ..Default::default() };
+    let mut t = Trainer::new(rt, "train_mini_unfact_masked", opts).unwrap();
+    let masks = magnitude_masks(&t.params, 0.5).unwrap();
+    t.set_masks(masks.clone()).unwrap();
+    let geom = spec.batch.unwrap();
+    let refs: Vec<&Utterance> = ds.train.iter().take(geom.batch).collect();
+    let batch = make_batch(&refs, &geom, ds.spec.feat_dim);
+    for _ in 0..3 {
+        t.step(&batch).unwrap();
+    }
+    for (mname, m) in masks.iter() {
+        let wname = format!("{}_w", mname.strip_suffix("_mask").unwrap());
+        let w = t.params.get(&wname).unwrap();
+        for (wv, mv) in w.data().iter().zip(m.data()) {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0, "pruned weight drifted in {wname}");
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_simulation_reports_sane_numbers() {
+    let Some(rt) = runtime() else { return };
+    let ds = dataset();
+    let spec = rt.manifest().artifact("eval_mini_unfact").unwrap().clone();
+    let params = ParamSet::init(&spec, 31).unwrap();
+    let report = simulate(
+        rt,
+        "eval_mini_unfact",
+        &params,
+        &ds.dev,
+        &ServeConfig { arrival_rate: 50.0, max_batch: 8, window: 0.02, seed: 1 },
+    )
+    .unwrap();
+    assert_eq!(report.requests, ds.dev.len());
+    assert!(report.throughput > 0.0);
+    assert!(report.p50_latency <= report.p95_latency);
+    assert!(report.p95_latency <= report.p99_latency);
+    assert!(report.mean_batch >= 1.0 && report.mean_batch <= 8.0);
+    // batching should actually happen at this arrival rate
+    assert!(report.mean_batch > 1.5, "mean batch {}", report.mean_batch);
+}
+
+#[test]
+fn greedy_decode_of_trained_model_beats_chance() {
+    // quick end-to-end learn check through the PJRT path
+    let Some(rt) = runtime() else { return };
+    let ds = dataset();
+    let spec = rt.manifest().artifact("train_mini_unfact").unwrap().clone();
+    let mut batcher = tracenorm::data::Batcher::new(
+        &ds.train,
+        spec.batch.unwrap(),
+        ds.spec.feat_dim,
+        3,
+    );
+    let opts = TrainOpts {
+        seed: 1,
+        lr: 2e-3,
+        lr_decay: 1.0,
+        epochs: 8,
+        quiet: true,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(rt, "train_mini_unfact", opts).unwrap();
+    let eval = Evaluator::new(rt, &eval_name("train_mini_unfact")).unwrap();
+    t.run(&mut batcher, None, None).unwrap();
+    let stats = eval.greedy_cer(&t.params, &ds.dev).unwrap();
+    assert!(
+        stats.cer() < 0.9,
+        "model failed to learn anything: CER {}",
+        stats.cer()
+    );
+    let _ = decoder::BLANK;
+}

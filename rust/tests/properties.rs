@@ -1,0 +1,198 @@
+//! Cross-module property tests (proplite harness; no artifacts needed).
+
+use tracenorm::data::{labels_to_text, text_to_labels, CorpusSpec, Dataset};
+use tracenorm::jsonx::Json;
+use tracenorm::kernels::{qgemm_farm, qgemm_lowp, qgemm_ref};
+use tracenorm::linalg::{nu_from_singular_values, svd};
+use tracenorm::model::{magnitude_masks, mask_density, ParamSet};
+use tracenorm::prng::Pcg64;
+use tracenorm::proplite::check;
+use tracenorm::quant::{dequantize, quantize};
+use tracenorm::tensor::{Tensor, TensorI8};
+
+fn rand_tensor(rng: &mut Pcg64, m: usize, n: usize, scale: f32) -> Tensor {
+    Tensor::randn(&[m.max(1), n.max(1)], scale, rng)
+}
+
+#[test]
+fn prop_svd_reconstructs_any_matrix() {
+    check(
+        "svd-reconstruct",
+        40,
+        |rng, size| {
+            let m = 1 + rng.below(size + 2);
+            let n = 1 + rng.below(size + 2);
+            let scale = 1.0 + rng.uniform() as f32 * 10.0;
+            rand_tensor(rng, m, n, scale)
+        },
+        |w| {
+            let s = svd(w).unwrap();
+            let rec = s.reconstruct(s.s.len());
+            w.max_abs_diff(&rec) < 1e-2 * (1.0 + w.abs_max())
+        },
+    );
+}
+
+#[test]
+fn prop_svd_values_sorted_nonnegative() {
+    check(
+        "svd-sorted",
+        30,
+        |rng, size| {
+            let (m, n) = (1 + rng.below(size + 3), 1 + rng.below(size + 3));
+            rand_tensor(rng, m, n, 1.0)
+        },
+        |w| {
+            let s = svd(w).unwrap();
+            s.s.windows(2).all(|p| p[0] >= p[1] - 1e-5) && s.s.iter().all(|&x| x >= 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_nu_in_unit_interval() {
+    check(
+        "nu-bounds",
+        50,
+        |rng, size| {
+            let d = 2 + rng.below(size + 2);
+            let mut s: Vec<f32> = (0..d).map(|_| rng.uniform() as f32 + 1e-4).collect();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            s
+        },
+        |s| {
+            let nu = nu_from_singular_values(s).unwrap();
+            (-1e-5..=1.0 + 1e-5).contains(&nu)
+        },
+    );
+}
+
+#[test]
+fn prop_quantize_roundtrip_within_half_step() {
+    check(
+        "quant-halfstep",
+        50,
+        |rng, size| {
+            let (m, n) = (1 + rng.below(size + 4), 1 + rng.below(size + 4));
+            rand_tensor(rng, m, n, 0.5)
+        },
+        |w| {
+            let q = quantize(w);
+            let deq = dequantize(&q);
+            w.max_abs_diff(&deq) <= q.scale * 0.5 + 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_farm_lowp_ref_identical() {
+    check(
+        "qgemm-agreement",
+        25,
+        |rng, size| {
+            let m = 1 + rng.below(8);
+            let n = 1 + rng.below(size * 8 + 8);
+            let k = 1 + rng.below(size * 16 + 8);
+            let mk =
+                |rng: &mut Pcg64, r: usize, c: usize| {
+                    TensorI8::new(
+                        &[r, c],
+                        (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect(),
+                    )
+                    .unwrap()
+                };
+            let x = mk(rng, m, k);
+            let w = mk(rng, n, k);
+            (x, w)
+        },
+        |(x, w)| {
+            let a = qgemm_farm(x, w, 0.013, 0.027);
+            let b = qgemm_lowp(x, w, 0.013, 0.027);
+            let c = qgemm_ref(x, w, 0.013, 0.027);
+            a == b && b == c
+        },
+    );
+}
+
+#[test]
+fn prop_text_labels_roundtrip() {
+    check(
+        "labels-roundtrip",
+        60,
+        |rng, size| {
+            let n = rng.below(size + 3);
+            let chars: Vec<char> = (0..n)
+                .map(|_| match rng.below(28) {
+                    0 => ' ',
+                    1 => '\'',
+                    k => (b'a' + (k - 2) as u8) as char,
+                })
+                .collect();
+            chars.into_iter().collect::<String>()
+        },
+        |text| labels_to_text(&text_to_labels(text)) == *text,
+    );
+}
+
+#[test]
+fn prop_mask_density_matches_requested_sparsity() {
+    check(
+        "mask-density",
+        20,
+        |rng, size| {
+            let mut p = ParamSet::new();
+            p.set(
+                "fc_w",
+                rand_tensor(rng, 8 + size * 4, 8 + size * 2, 1.0),
+            );
+            let sparsity = 0.1 + 0.8 * rng.uniform();
+            (p, sparsity)
+        },
+        |(p, sparsity)| {
+            let masks = magnitude_masks(p, *sparsity).unwrap();
+            (mask_density(&masks) - (1.0 - sparsity)).abs() < 0.05
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numbers_strings() {
+    check(
+        "json-roundtrip",
+        60,
+        |rng, size| {
+            let n = rng.below(size + 2) + 1;
+            let vals: Vec<Json> = (0..n)
+                .map(|i| match i % 3 {
+                    0 => Json::Num((rng.normal() * 1e3).round()),
+                    1 => Json::Str(format!("s{}", rng.below(1000))),
+                    _ => Json::Bool(rng.below(2) == 0),
+                })
+                .collect();
+            Json::Arr(vals)
+        },
+        |v| Json::parse(&v.to_string_pretty()).unwrap() == *v,
+    );
+}
+
+#[test]
+fn prop_corpus_ctc_feasible() {
+    // every generated utterance must satisfy the CTC feasibility bound
+    // after the frontend stride: T' >= L + repeats
+    check(
+        "corpus-ctc-feasible",
+        6,
+        |rng, _| Dataset::generate(CorpusSpec::standard(rng.next_u64()), 12, 0, 0),
+        |ds| {
+            ds.train.iter().all(|u| {
+                let t_out = u.feats.shape()[0] / 4; // wsj_mini stride
+                let repeats = u
+                    .labels
+                    .windows(2)
+                    .filter(|w| w[0] == w[1])
+                    .count();
+                t_out >= u.labels.len() + repeats
+            })
+        },
+    );
+}
