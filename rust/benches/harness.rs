@@ -4,9 +4,16 @@
 //! includes this file via `#[path]`/`include!` and reports
 //! min/mean/p50 over adaptive iteration counts.
 
+// not every bench uses every helper
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Run `f` repeatedly for ~`budget_ms`, reporting per-call stats.
+///
+/// With `BENCH_SMOKE` set in the environment, runs exactly one timed
+/// iteration per case — CI uses this to keep every bench compiling and
+/// executing without paying the measurement budget.
 pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> f64 {
     // warmup
     f();
@@ -14,7 +21,11 @@ pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> f64 {
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((budget_ms as f64 / 1e3 / once).ceil() as usize).clamp(3, 10_000);
+    let iters = if std::env::var_os("BENCH_SMOKE").is_some() {
+        1
+    } else {
+        ((budget_ms as f64 / 1e3 / once).ceil() as usize).clamp(3, 10_000)
+    };
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters {
         let t = Instant::now();

@@ -1,0 +1,89 @@
+//! Bench: the multi-stream pool (DESIGN.md §6) — the repo's first
+//! trajectory bench for the concurrency architecture.
+//!
+//! Two views:
+//! 1. **kernel**: the pooled batch-m recurrent GEMM
+//!    (`qgemm_farm_rows`) against m sequential batch-1 `qgemm_farm`
+//!    calls on a paper-scale recurrent layer.  The acceptance target is
+//!    pooled m=4 ≥ 2× the 4-sequential baseline — the weight matrix
+//!    streams through cache once instead of four times.
+//! 2. **end-to-end**: throughput and per-stream latency of a
+//!    `StreamPool` at pool sizes 1/2/4/8 vs decoding the same streams
+//!    one after another.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use std::sync::Arc;
+
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::{qgemm_farm, qgemm_farm_rows};
+use tracenorm::prng::Pcg64;
+use tracenorm::stream::{demo_dims, synthetic_params, StreamPool};
+use tracenorm::tensor::{Tensor, TensorI8};
+
+fn rand_i8(shape: &[usize], rng: &mut Pcg64) -> TensorI8 {
+    let n: usize = shape.iter().product();
+    TensorI8::new(shape, (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect()).unwrap()
+}
+
+fn main() {
+    // paper-scale GRU recurrent weight: 3·768 × 768 int8 (~1.7 MB, well
+    // past L2, so the weight stream dominates)
+    const N: usize = 3 * 768;
+    const K: usize = 768;
+    header(&format!("pooled recurrent GEMM: batch-m vs m sequential batch-1 ({N}x{K} int8)"));
+    let mut rng = Pcg64::seeded(0);
+    let w = rand_i8(&[N, K], &mut rng);
+    for m in [1usize, 2, 4, 8] {
+        let x = rand_i8(&[m, K], &mut rng);
+        let rows: Vec<TensorI8> =
+            (0..m).map(|i| TensorI8::new(&[1, K], x.row(i).to_vec()).unwrap()).collect();
+        let scales: Vec<f32> = (0..m).map(|i| 0.008 + 0.001 * i as f32).collect();
+        let tp = bench(&format!("pooled     m={m}"), 300, || {
+            std::hint::black_box(qgemm_farm_rows(&x, &w, &scales, 0.02));
+        });
+        let ts = bench(&format!("sequential {m} x m=1"), 300, || {
+            for (r, s) in rows.iter().zip(&scales) {
+                std::hint::black_box(qgemm_farm(r, &w, *s, 0.02));
+            }
+        });
+        println!("  -> pooled speedup {:.2}x (acceptance: >= 2x at m=4)", ts / tp);
+    }
+
+    header("stream pool end-to-end (int8 wsj_mini, 96-frame utterances)");
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.25, 1);
+    let engine =
+        Arc::new(Engine::from_params(&dims, "partial", &params, Precision::Int8, 4).unwrap());
+    let utter = Tensor::randn(&[96, dims.feat_dim], 0.7, &mut rng);
+    let audio_secs = 96.0 * 0.01;
+
+    for m in [1usize, 2, 4, 8] {
+        let tseq = bench(&format!("sequential {m} streams"), 400, || {
+            for _ in 0..m {
+                let mut bd = Breakdown::default();
+                std::hint::black_box(engine.transcribe(&utter, &mut bd).unwrap());
+            }
+        });
+        let mut pool = StreamPool::new(engine.clone(), m);
+        let tpool = bench(&format!("pooled     {m} streams"), 400, || {
+            let mut bd = Breakdown::default();
+            let ids: Vec<_> = (0..m).map(|_| pool.open().unwrap()).collect();
+            for &id in &ids {
+                pool.push_frames(id, utter.data()).unwrap();
+            }
+            pool.pump(&mut bd).unwrap();
+            for &id in &ids {
+                std::hint::black_box(pool.close(id, &mut bd).unwrap());
+            }
+        });
+        println!(
+            "  per-stream {:.3} ms (vs {:.3} ms sequential)  |  {:.1}x realtime aggregate",
+            tpool * 1e3 / m as f64,
+            tseq * 1e3 / m as f64,
+            m as f64 * audio_secs / tpool
+        );
+    }
+}

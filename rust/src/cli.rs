@@ -19,6 +19,10 @@
 //!                                utterances with the embedded engine
 //!                                  --precision int8|f32
 //!   bench-gemm                   quick farm-vs-lowp timing sweep
+//!   stream-serve                 multi-stream pool serving demo: Poisson
+//!                                arrivals over concurrent decode sessions
+//!                                  --pool 4 --rate 8 --utts 32 --chunk 16
+//!                                  --precision int8|f32 [--load ckpt]
 //! ```
 //!
 //! Every flag becomes a config key (`--lam-rec 0.1` → `cli.lam-rec`), and
@@ -35,12 +39,14 @@ pub struct Cli {
     pub cfg: Config,
 }
 
-pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm> [args]
+pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm|stream-serve> [args]
   repro experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all>
   repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N]
   repro bench-gemm [--reps N]
+  repro stream-serve [--pool N] [--rate F] [--utts N] [--chunk N] [--precision int8|f32]
+                     [--rank-frac F] [--time-batch N] [--scheme S] [--load CKPT] [--seed N]
 common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";
 
 /// Parse argv (excluding argv[0]).

@@ -14,23 +14,30 @@ use crate::tensor::Tensor;
 
 pub const BLANK: i32 = 0;
 
+/// One greedy (best-path) step: argmax of a log-prob row (strict `>`, so
+/// ties go to the lowest index).  Shared by [`greedy_decode`] and the
+/// incremental decoder of [`crate::stream`], which must collapse
+/// identically.
+#[inline]
+pub fn greedy_step(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (j, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = j;
+        }
+    }
+    best as i32
+}
+
 /// Greedy (best-path) decode of one utterance.
 /// `logprobs`: (T, V) log-softmax rows; `len`: valid frames.
 pub fn greedy_decode(logprobs: &Tensor, len: usize) -> Vec<i32> {
-    let v = logprobs.cols();
     let mut out = Vec::new();
     let mut prev = -1i32;
     for t in 0..len.min(logprobs.rows()) {
-        let row = logprobs.row(t);
-        let mut best = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for j in 0..v {
-            if row[j] > best_v {
-                best_v = row[j];
-                best = j;
-            }
-        }
-        let c = best as i32;
+        let c = greedy_step(logprobs.row(t));
         if c != prev && c != BLANK {
             out.push(c);
         }

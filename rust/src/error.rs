@@ -1,35 +1,72 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`From` impls (no `thiserror` in the offline
+//! build); the `Error::Xla` variant only exists when the `xla` feature
+//! is enabled, so the default build carries no XLA surface at all.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "xla")]
+    Xla(xla::Error),
 
-    #[error("json parse error at byte {pos}: {msg}")]
     Json { pos: usize, msg: String },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    #[error("shape error: {0}")]
     Shape(String),
 
-    #[error("linalg error: {0}")]
     Linalg(String),
 
-    #[error("train error: {0}")]
     Train(String),
 
-    #[error("{0}")]
     Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => write!(f, "xla error: {e}"),
+            Error::Json { pos, msg } => write!(f, "json parse error at byte {pos}: {msg}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Linalg(m) => write!(f, "linalg error: {m}"),
+            Error::Train(m) => write!(f, "train error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            #[cfg(feature = "xla")]
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -37,5 +74,18 @@ pub type Result<T> = std::result::Result<T, Error>;
 impl Error {
     pub fn other(msg: impl Into<String>) -> Self {
         Error::Other(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_variants() {
+        assert_eq!(Error::other("boom").to_string(), "boom");
+        assert_eq!(Error::Config("bad flag".into()).to_string(), "config error: bad flag");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(io.to_string().starts_with("io error:"));
     }
 }

@@ -5,12 +5,22 @@
 //! training, streaming with low latency.  Structure mirrors the paper's
 //! runtime exactly:
 //!
-//! * the **recurrent** GEMM runs at batch 1 (strictly sequential);
+//! * the **recurrent** GEMM runs at the stream batch (1 for a single
+//!   session; m for a lock-stepped [`crate::stream::StreamPool`]),
+//!   strictly sequential in time;
 //! * the **non-recurrent** GEMM batches across time, up to
 //!   [`Engine::time_batch`] output steps (the paper found > ~4 hurts
 //!   latency — §4);
-//! * activations are quantized dynamically per GEMM, weights once at
-//!   load; biases and gate math stay f32.
+//! * activations are quantized dynamically per GEMM — per *row* on the
+//!   recurrent path, so pooled and single-stream decoding are
+//!   bit-identical; weights once at load; biases and gate math stay f32.
+//!
+//! The [`Engine`] owns only **shared immutable weights**; everything a
+//! live utterance needs (GRU hidden vectors, the raw-frame buffer) lives
+//! in [`StreamState`], so one engine can serve many concurrent sessions.
+//! The block computation is decomposed into staged primitives
+//! (`frontend` → per-layer `nonrec_block` + stepwise `rec_gates`/
+//! `gru_cell` → `head`) that the stream pool re-drives at batch m.
 //!
 //! Per-component timing feeds Table 2's "% time spent in acoustic model"
 //! and the latency experiments.
@@ -18,7 +28,7 @@
 use crate::data::labels_to_text;
 use crate::decoder;
 use crate::error::{Error, Result};
-use crate::kernels::{gemm_f32, qgemm_farm};
+use crate::kernels::{gemm_f32, qgemm_farm, qgemm_farm_rows};
 use crate::model::ParamSet;
 use crate::quant::{quantize, quantize_into, QMatrix};
 use crate::runtime::ModelDims;
@@ -76,6 +86,26 @@ impl QDense {
         }
     }
 
+    /// Apply to (m, k) activations where each row belongs to an
+    /// *independent stream*: dynamic quantization runs per row, so the
+    /// result is bit-identical to m separate batch-1 [`QDense::apply`]
+    /// calls while the weight matrix streams through cache once.
+    fn apply_rows(&self, x: &Tensor) -> Tensor {
+        match self {
+            QDense::F32(w) => gemm_f32(x, w, None),
+            QDense::I8(qw) => {
+                let (m, k) = (x.rows(), x.cols());
+                let mut xq = vec![0i8; m * k];
+                let mut sx = vec![0f32; m];
+                for i in 0..m {
+                    sx[i] = quantize_into(x.row(i), &mut xq[i * k..(i + 1) * k]);
+                }
+                let xq = TensorI8::new(&[m, k], xq).unwrap();
+                qgemm_farm_rows(&xq, &qw.q, &sx, qw.scale)
+            }
+        }
+    }
+
     /// Weight bytes on "device".
     fn bytes(&self) -> usize {
         match self {
@@ -109,6 +139,15 @@ impl Op {
         match self {
             Op::Dense(w) => w.apply(x),
             Op::LowRank { u, v } => u.apply(&v.apply(x)),
+        }
+    }
+
+    /// Per-row-quantized apply (the pooled recurrent path); see
+    /// [`QDense::apply_rows`].
+    fn apply_rows(&self, x: &Tensor) -> Tensor {
+        match self {
+            Op::Dense(w) => w.apply_rows(x),
+            Op::LowRank { u, v } => u.apply_rows(&v.apply_rows(x)),
         }
     }
 
@@ -198,10 +237,20 @@ pub struct Engine {
     split_scheme: bool,
 }
 
-/// Streaming state: carried GRU hidden vectors + a raw-frame buffer.
+/// Per-stream session state, split from the shared [`Engine`] weights:
+/// carried GRU hidden vectors + the raw-frame ring buffer.  One of these
+/// exists per live utterance; the stream pool lock-steps many of them
+/// against a single engine.
 pub struct StreamState {
-    h: Vec<Tensor>,
-    buf: Vec<f32>,
+    pub(crate) h: Vec<Tensor>,
+    pub(crate) buf: Vec<f32>,
+}
+
+impl StreamState {
+    /// Raw feature values currently buffered (not yet processed).
+    pub fn buffered_len(&self) -> usize {
+        self.buf.len()
+    }
 }
 
 impl Engine {
@@ -343,16 +392,17 @@ impl Engine {
         self.process_block(state, &chunk, bd)
     }
 
-    fn process_block(
-        &self,
-        state: &mut StreamState,
-        chunk: &[f32],
-        bd: &mut Breakdown,
-    ) -> Result<Vec<Vec<f32>>> {
+    // -- staged primitives -------------------------------------------------
+    //
+    // `process_block` (single stream) and `StreamPool::pump` (m streams,
+    // lock-stepped) are both built from these, which is what makes pooled
+    // decoding bit-identical to sequential decoding by construction.
+
+    /// Frontend: stack-and-project conv layers over one raw chunk
+    /// (time-batched by nature).  Returns `(T, d)` activations.
+    pub(crate) fn frontend(&self, chunk: &[f32], bd: &mut Breakdown) -> Result<Tensor> {
         let t_raw = chunk.len() / self.feat_dim;
         let mut x = Tensor::new(&[t_raw, self.feat_dim], chunk.to_vec())?;
-
-        // frontend: stack-and-project layers (time-batched by nature)
         let t0 = std::time::Instant::now();
         for c in &self.conv {
             let (t, f) = (x.rows(), x.cols());
@@ -369,52 +419,44 @@ impl Engine {
             x = y;
         }
         bd.frontend += t0.elapsed().as_secs_f64();
+        Ok(x)
+    }
 
-        // GRU stack
-        for (li, g) in self.grus.iter().enumerate() {
-            let t = x.rows();
-            // non-recurrent GEMM batched across the whole block (§4):
-            let t0 = std::time::Instant::now();
-            let mut gx = g.nonrec.apply(&x);
-            bd.macs += g.nonrec.macs(t);
-            for row in 0..t {
-                let r = gx.row_mut(row);
-                for (v, b) in r.iter_mut().zip(&g.bias) {
-                    *v += b;
-                }
+    /// Non-recurrent GEMM + bias for GRU layer `li`, batched across the
+    /// whole block (§4).
+    pub(crate) fn nonrec_block(&self, li: usize, x: &Tensor, bd: &mut Breakdown) -> Tensor {
+        let g = &self.grus[li];
+        let t = x.rows();
+        let t0 = std::time::Instant::now();
+        let mut gx = g.nonrec.apply(x);
+        bd.macs += g.nonrec.macs(t);
+        for row in 0..t {
+            let r = gx.row_mut(row);
+            for (v, b) in r.iter_mut().zip(&g.bias) {
+                *v += b;
             }
-            bd.nonrec += t0.elapsed().as_secs_f64();
-
-            // sequential recurrent steps at batch 1
-            let h_dim = g.hidden;
-            let mut outputs = Tensor::zeros(&[t, h_dim]);
-            for step in 0..t {
-                let t1 = std::time::Instant::now();
-                let gh = g.rec.apply(&state.h[li]);
-                bd.macs += g.rec.macs(1);
-                bd.rec += t1.elapsed().as_secs_f64();
-
-                let t2 = std::time::Instant::now();
-                let h_prev = state.h[li].data();
-                let gx_row = gx.row(step);
-                let gh_row = gh.row(0);
-                let out_row = outputs.row_mut(step);
-                for j in 0..h_dim {
-                    let z = sigmoid(gx_row[j] + gh_row[j]);
-                    let r = sigmoid(gx_row[h_dim + j] + gh_row[h_dim + j]);
-                    let cand = (gx_row[2 * h_dim + j] + r * gh_row[2 * h_dim + j]).tanh();
-                    out_row[j] = (1.0 - z) * h_prev[j] + z * cand;
-                }
-                state.h[li] = Tensor::new(&[1, h_dim], out_row.to_vec())?;
-                bd.gates += t2.elapsed().as_secs_f64();
-            }
-            x = outputs;
         }
+        bd.nonrec += t0.elapsed().as_secs_f64();
+        gx
+    }
 
-        // FC + output projection + log-softmax
+    /// One recurrent GEMM for layer `li` over `h` = (m, H) — the m rows
+    /// are independent streams' hidden states, lock-stepped into a single
+    /// batch-m farm call with per-row activation scales.
+    pub(crate) fn rec_gates(&self, li: usize, h: &Tensor, bd: &mut Breakdown) -> Tensor {
+        let g = &self.grus[li];
+        let t1 = std::time::Instant::now();
+        let gh = g.rec.apply_rows(h);
+        bd.macs += g.rec.macs(h.rows());
+        bd.rec += t1.elapsed().as_secs_f64();
+        gh
+    }
+
+    /// FC + output projection + log-softmax over the block's GRU outputs.
+    pub(crate) fn head(&self, x: &Tensor, bd: &mut Breakdown) -> Vec<Vec<f32>> {
         let t3 = std::time::Instant::now();
         let t = x.rows();
-        let mut y = self.fc.apply(&x);
+        let mut y = self.fc.apply(x);
         bd.macs += self.fc.macs(t);
         for row in 0..t {
             let r = y.row_mut(row);
@@ -433,7 +475,35 @@ impl Engine {
             out_rows.push(log_softmax(r));
         }
         bd.fc_out += t3.elapsed().as_secs_f64();
-        Ok(out_rows)
+        out_rows
+    }
+
+    fn process_block(
+        &self,
+        state: &mut StreamState,
+        chunk: &[f32],
+        bd: &mut Breakdown,
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut x = self.frontend(chunk, bd)?;
+
+        // GRU stack: time-batched nonrec, then sequential recurrent steps
+        // at stream-batch 1
+        for (li, g) in self.grus.iter().enumerate() {
+            let gx = self.nonrec_block(li, &x, bd);
+            let t = gx.rows();
+            let h_dim = g.hidden;
+            let mut outputs = Tensor::zeros(&[t, h_dim]);
+            for step in 0..t {
+                let gh = self.rec_gates(li, &state.h[li], bd);
+                let t2 = std::time::Instant::now();
+                gru_cell(gx.row(step), gh.row(0), state.h[li].data(), outputs.row_mut(step));
+                state.h[li] = Tensor::new(&[1, h_dim], outputs.row(step).to_vec())?;
+                bd.gates += t2.elapsed().as_secs_f64();
+            }
+            x = outputs;
+        }
+
+        Ok(self.head(&x, bd))
     }
 
     /// Transcribe a whole utterance (streaming internally); returns
@@ -455,6 +525,58 @@ impl Engine {
 
     pub fn is_split(&self) -> bool {
         self.split_scheme
+    }
+
+    // -- shared-dimension accessors (used by the stream pool and CLI) ------
+
+    /// Number of stacked GRU layers.
+    pub fn num_gru_layers(&self) -> usize {
+        self.grus.len()
+    }
+
+    /// Hidden width of GRU layer `li`.
+    pub fn gru_hidden(&self, li: usize) -> usize {
+        self.grus[li].hidden
+    }
+
+    /// Feature dimension of raw input frames.
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    /// Output vocabulary size (CTC symbols incl. blank).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Raw frames consumed per output step.
+    pub fn total_stride(&self) -> usize {
+        self.total_stride
+    }
+
+    /// Raw f32 values per output step (`total_stride × feat_dim`).
+    pub fn step_raw_len(&self) -> usize {
+        self.total_stride * self.feat_dim
+    }
+
+    /// Raw f32 values per full time-batched block.
+    pub fn block_raw_len(&self) -> usize {
+        self.time_batch * self.step_raw_len()
+    }
+}
+
+/// One GRU cell update (elementwise gate math), writing the new hidden
+/// state into `out`.  `gx`/`gh` are the non-recurrent/recurrent gate
+/// pre-activations laid out `[z | r | h̃]`; identical op order on every
+/// path (single-stream and pooled), which the bit-identity tests rely on.
+#[inline]
+pub(crate) fn gru_cell(gx: &[f32], gh: &[f32], h_prev: &[f32], out: &mut [f32]) {
+    let h_dim = out.len();
+    for j in 0..h_dim {
+        let z = sigmoid(gx[j] + gh[j]);
+        let r = sigmoid(gx[h_dim + j] + gh[h_dim + j]);
+        let cand = (gx[2 * h_dim + j] + r * gh[2 * h_dim + j]).tanh();
+        out[j] = (1.0 - z) * h_prev[j] + z * cand;
     }
 }
 

@@ -20,6 +20,13 @@
 //! Both produce bit-identical i32 accumulations (tested), so Figure 6 is a
 //! pure scheduling comparison.  [`gemm_f32`] is the f32 path of the
 //! embedded engine.
+//!
+//! [`qgemm_farm_rows`] is the batch-m **pooled** entry point: the
+//! [`crate::stream`] pool lock-steps the recurrent GEMMs of m concurrent
+//! utterance streams into one call, with per-row activation scales so the
+//! result stays bit-identical to m independent batch-1 calls.
+//! [`pooled_rec_counts`]/[`sequential_rec_counts`] expose the op/byte
+//! contrast for the roofline projection.
 
 use crate::tensor::{Tensor, TensorI8};
 
@@ -59,6 +66,27 @@ pub fn lowp_counts(m: usize, n: usize, k: usize) -> GemmCounts {
         macs: (mp * n * k) as u64,
         bytes_read: (2 * (n * k + mp * k)) as u64, // stream + packed re-read
         bytes_written: (n * k + mp * k + 4 * m * n) as u64, // packed copies + output
+    }
+}
+
+/// Counts for one **pooled** recurrent step: `m` concurrent streams'
+/// hidden vectors lock-stepped into a single batch-m farm call
+/// ([`qgemm_farm_rows`]).  The weight matrix streams from memory once
+/// for all `m` streams — this is the whole point of cross-stream
+/// batching (DESIGN.md §6).
+pub fn pooled_rec_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    farm_counts(m, n, k)
+}
+
+/// Counts for the same work done the pre-pool way: `m` independent
+/// batch-1 recurrent GEMMs, each streaming the weight matrix separately.
+/// MACs match [`pooled_rec_counts`]; weight traffic is `m×`.
+pub fn sequential_rec_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    let one = farm_counts(1, n, k);
+    GemmCounts {
+        macs: one.macs * m as u64,
+        bytes_read: one.bytes_read * m as u64,
+        bytes_written: one.bytes_written * m as u64,
     }
 }
 
@@ -167,6 +195,54 @@ pub fn qgemm_farm(xq: &TensorI8, wq: &TensorI8, sx: f32, sw: f32) -> Tensor {
         let wj = wq.row(j);
         for i in 0..m {
             out.row_mut(i)[j] = dot_i8(xq.row(i), wj) as f32 * scale;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// Batch-m farm GEMM with **per-row activation scales** — the pooled
+/// recurrent step of the multi-stream engine ([`crate::stream`]).
+///
+/// Each activation row belongs to a different utterance stream and was
+/// quantized independently (`sx[i]` is stream *i*'s dynamic scale), so
+/// row *i* dequantizes as `acc · sx[i] · sw`.  The i32 accumulation and
+/// the per-row scale product are exactly what `m` separate
+/// [`qgemm_farm`] calls at batch 1 would compute, which is what makes
+/// pooled decoding bit-identical to sequential decoding while the big
+/// weight matrix streams through cache only **once** for all `m`
+/// streams (the §4 small-batch sweet spot).
+pub fn qgemm_farm_rows(xq: &TensorI8, wq: &TensorI8, sx: &[f32], sw: f32) -> Tensor {
+    let (m, k) = (xq.rows(), xq.cols());
+    let (n, k2) = (wq.rows(), wq.cols());
+    assert_eq!(k, k2, "qgemm_farm_rows contraction mismatch");
+    assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
+    let scales: Vec<f32> = sx.iter().map(|&s| s * sw).collect();
+    let mut out = Tensor::zeros(&[m, n]);
+
+    let mut j = 0;
+    while j + 4 <= n {
+        let w0 = wq.row(j);
+        let w1 = wq.row(j + 1);
+        let w2 = wq.row(j + 2);
+        let w3 = wq.row(j + 3);
+        for i in 0..m {
+            let xi = xq.row(i);
+            let scale = scales[i];
+            let (a0, a1, a2, a3) =
+                (dot_i8(xi, w0), dot_i8(xi, w1), dot_i8(xi, w2), dot_i8(xi, w3));
+            let orow = out.row_mut(i);
+            orow[j] = a0 as f32 * scale;
+            orow[j + 1] = a1 as f32 * scale;
+            orow[j + 2] = a2 as f32 * scale;
+            orow[j + 3] = a3 as f32 * scale;
+        }
+        j += 4;
+    }
+    while j < n {
+        let wj = wq.row(j);
+        for i in 0..m {
+            out.row_mut(i)[j] = dot_i8(xq.row(i), wj) as f32 * scales[i];
         }
         j += 1;
     }
@@ -361,6 +437,47 @@ mod tests {
         // relative error bounded by accumulated quantization noise
         let scale = want.abs_max().max(1e-6);
         assert!(got.max_abs_diff(&want) / scale < 0.02);
+    }
+
+    #[test]
+    fn farm_rows_matches_independent_batch1_calls() {
+        // the pooled-step contract: one batch-m call with per-row scales
+        // is bit-identical to m separate batch-1 farm calls
+        let mut rng = Pcg64::seeded(5);
+        for &(m, n, k) in &[(2usize, 48usize, 32usize), (4, 96, 128), (3, 33, 100), (8, 64, 320)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w = rand_i8(&[n, k], &mut rng);
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let pooled = qgemm_farm_rows(&x, &w, &sx, 0.02);
+            for i in 0..m {
+                let xi = TensorI8::new(&[1, k], x.row(i).to_vec()).unwrap();
+                let solo = qgemm_farm(&xi, &w, sx[i], 0.02);
+                assert_eq!(pooled.row(i), solo.row(0), "row {i} of ({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn farm_rows_with_uniform_scale_equals_farm() {
+        let mut rng = Pcg64::seeded(6);
+        let x = rand_i8(&[4, 160], &mut rng);
+        let w = rand_i8(&[96, 160], &mut rng);
+        let a = qgemm_farm(&x, &w, 0.011, 0.017);
+        let b = qgemm_farm_rows(&x, &w, &[0.011; 4], 0.017);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooled_counts_save_weight_traffic() {
+        let (m, n, k) = (4usize, 384usize, 128usize);
+        let pooled = pooled_rec_counts(m, n, k);
+        let seq = sequential_rec_counts(m, n, k);
+        assert_eq!(pooled.macs, seq.macs); // same useful work
+        assert!(pooled.bytes_read < seq.bytes_read);
+        // weight stream dominates: pooled reads ~1/m of the sequential bytes
+        let ratio = seq.bytes_read as f64 / pooled.bytes_read as f64;
+        assert!(ratio > m as f64 * 0.8, "ratio {ratio}");
+        assert_eq!(pooled_rec_counts(1, n, k).bytes_read, sequential_rec_counts(1, n, k).bytes_read);
     }
 
     #[test]

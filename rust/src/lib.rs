@@ -6,9 +6,9 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** — training orchestrator (two-stage trace-norm
-//!   scheme, SVD warmstart), streaming server, and the pure-Rust embedded
-//!   int8 inference engine with the reproduced "farm" low-batch GEMM
-//!   kernels.
+//!   scheme, SVD warmstart), the multi-stream serving engine
+//!   ([`stream`]/[`serve`]), and the pure-Rust embedded int8 inference
+//!   engine with the reproduced "farm" low-batch GEMM kernels.
 //! * **L2/L1 (python/, build-time only)** — the DS2-style GRU acoustic
 //!   model and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed here through the PJRT CPU client ([`runtime`]).
@@ -37,6 +37,7 @@ pub mod proplite;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod stream;
 pub mod tensor;
 pub mod train;
 

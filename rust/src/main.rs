@@ -4,12 +4,16 @@
 //! lifting lives in the library crate; this binary wires config + CLI into
 //! the experiment harness, trainers and the embedded engine.
 
+use std::sync::Arc;
+
 use tracenorm::cli::{self, Cli, USAGE};
-use tracenorm::data::Batcher;
+use tracenorm::data::{Batcher, CorpusSpec, Dataset};
 use tracenorm::error::Result;
 use tracenorm::experiments;
 use tracenorm::infer::{Breakdown, Engine, Precision};
 use tracenorm::runtime::Runtime;
+use tracenorm::serve::{stream_serve, StreamServeConfig};
+use tracenorm::stream::{demo_dims, synthetic_params};
 use tracenorm::train::{
     eval_name, two_stage, Evaluator, Stage2Lr, TrainOpts, Trainer,
 };
@@ -45,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
             let mut ctx = experiments::Ctx::new(cli.cfg.clone())?;
             experiments::kernelsx::fig6(&mut ctx)
         }
+        "stream-serve" => stream_serve_cmd(&cli),
         other => Err(tracenorm::Error::Config(format!("unknown subcommand '{other}'"))),
     }
 }
@@ -224,5 +229,86 @@ fn transcribe_cmd(cli: &Cli) -> Result<()> {
         bd.frames as f64 * 0.01,
         bd.speedup_over_realtime(0.01)
     );
+    Ok(())
+}
+
+/// `stream-serve`: the multi-stream pool serving demo — runs fully
+/// offline (synthetic corpus + synthetic or checkpointed weights).
+fn stream_serve_cmd(cli: &Cli) -> Result<()> {
+    let precision = match cli.flag_str("precision", "int8").as_str() {
+        "f32" => Precision::F32,
+        _ => Precision::Int8,
+    };
+    let pool = cli.flag_usize("pool", 4);
+    let n = cli.flag_usize("utts", 32);
+    let rate = cli.flag_f64("rate", 8.0);
+    let chunk = cli.flag_usize("chunk", 16);
+    let seed = cli.flag_usize("seed", 17) as u64;
+    let time_batch = cli.flag_usize("time-batch", 4);
+    let scheme = cli.flag_str("scheme", "partial");
+
+    let dims = demo_dims();
+    let params = match cli.cfg.raw("load") {
+        Some(path) => {
+            println!("loading weights from checkpoint {path}");
+            tracenorm::checkpoint::load(path)?
+        }
+        None => {
+            if scheme != "partial" {
+                return Err(tracenorm::Error::Config(
+                    "--scheme other than 'partial' requires --load (synthetic weights are partial-factored)".into(),
+                ));
+            }
+            println!("using synthetic (untrained) weights — timing is real, transcripts are not");
+            synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed)
+        }
+    };
+    let engine =
+        Arc::new(Engine::from_params(&dims, &scheme, &params, precision, time_batch)?);
+    println!(
+        "engine: {:?}, model {} KB, pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
+        precision,
+        engine.model_bytes() / 1024
+    );
+
+    let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
+    let cfg = StreamServeConfig {
+        arrival_rate: rate,
+        pool_size: pool,
+        chunk_frames: chunk,
+        seed,
+    };
+    let r = stream_serve(engine, &data.test, &cfg)?;
+
+    println!(
+        "\n{} sessions in {:.2} s simulated span ({:.2} s engine-busy) -> {:.1} sessions/s",
+        r.sessions, r.span_secs, r.busy_secs, r.throughput
+    );
+    let l = r.session_latency;
+    println!(
+        "session latency  p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms  max {:.1} ms",
+        l.p50 * 1e3,
+        l.p95 * 1e3,
+        l.p99 * 1e3,
+        l.max * 1e3
+    );
+    println!(
+        "pool occupancy   mean {:.2} (max {})  |  pooled recurrent GEMM batch mean {:.2}",
+        r.occupancy.mean(),
+        r.occupancy.max_occupancy(),
+        r.mean_rec_batch
+    );
+    for (k, frac) in r.occupancy.buckets() {
+        println!("  occ {k}: {:5.1}% of time", frac * 100.0);
+    }
+    println!(
+        "audio {:.2} s -> {:.1}x realtime aggregate",
+        r.breakdown.frames as f64 * 0.01,
+        r.breakdown.speedup_over_realtime(0.01)
+    );
+    println!("\nsample transcripts (hyp vs ref):");
+    for (reference, hyp) in r.transcripts.iter().take(5) {
+        println!("  ref: {reference:<20} hyp: {hyp}");
+    }
     Ok(())
 }

@@ -1,5 +1,8 @@
-//! Timers, counters and latency histograms for the coordinator and the
-//! serving/inference paths.
+//! Timers, counters, latency histograms and pool-occupancy tracking for
+//! the coordinator and the serving/inference paths.  The stream-pool
+//! serving report ([`crate::serve::stream_serve`]) is built from
+//! [`LatencySummary`] (per-stream p50/p95/p99) and [`OccupancyTracker`]
+//! (time-weighted pool occupancy).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -123,6 +126,100 @@ impl Histogram {
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(0.0, f64::max)
     }
+
+    /// One-shot percentile summary (the serving-report shape).
+    pub fn summary(&mut self) -> LatencySummary {
+        LatencySummary {
+            count: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(0.5),
+            p95: self.percentile(0.95),
+            p99: self.percentile(0.99),
+            max: self.max(),
+        }
+    }
+}
+
+/// Percentile snapshot of a latency [`Histogram`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Time-weighted occupancy histogram for a fixed-capacity pool: how much
+/// wall-clock the pool spent with exactly k live sessions.  Mean
+/// occupancy is the effective stream-batch the pooled recurrent GEMMs
+/// ran at, which is what links serving load to kernel efficiency
+/// (DESIGN.md §6).
+#[derive(Clone, Debug, Default)]
+pub struct OccupancyTracker {
+    /// secs_at[k] = seconds spent with occupancy exactly k
+    secs_at: Vec<f64>,
+}
+
+impl OccupancyTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `secs` spent at `occupancy` live sessions.
+    pub fn record(&mut self, occupancy: usize, secs: f64) {
+        if self.secs_at.len() <= occupancy {
+            self.secs_at.resize(occupancy + 1, 0.0);
+        }
+        self.secs_at[occupancy] += secs;
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.secs_at.iter().sum()
+    }
+
+    /// Time-weighted mean occupancy.
+    pub fn mean(&self) -> f64 {
+        let total = self.total_secs();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.secs_at
+            .iter()
+            .enumerate()
+            .map(|(k, &s)| k as f64 * s)
+            .sum::<f64>()
+            / total
+    }
+
+    /// Fraction of tracked time spent at exactly `k` sessions.
+    pub fn frac_at(&self, k: usize) -> f64 {
+        let total = self.total_secs();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.secs_at.get(k).copied().unwrap_or(0.0) / total
+    }
+
+    /// Highest occupancy ever recorded with nonzero time.
+    pub fn max_occupancy(&self) -> usize {
+        self.secs_at
+            .iter()
+            .rposition(|&s| s > 0.0)
+            .unwrap_or(0)
+    }
+
+    /// `(k, fraction)` rows for report printing, skipping empty buckets.
+    pub fn buckets(&self) -> Vec<(usize, f64)> {
+        let total = self.total_secs();
+        self.secs_at
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s > 0.0)
+            .map(|(k, &s)| (k, s / total))
+            .collect()
+    }
 }
 
 /// Simple stopwatch for phase reporting.
@@ -179,5 +276,30 @@ mod tests {
         assert_eq!(h.percentile(1.0), 100.0);
         assert!((h.percentile(0.5) - 50.0).abs() <= 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn occupancy_tracker_weights_by_time() {
+        let mut o = OccupancyTracker::new();
+        o.record(0, 1.0);
+        o.record(2, 1.0);
+        o.record(4, 2.0);
+        assert!((o.total_secs() - 4.0).abs() < 1e-12);
+        assert!((o.mean() - (0.0 + 2.0 + 8.0) / 4.0).abs() < 1e-12);
+        assert!((o.frac_at(4) - 0.5).abs() < 1e-12);
+        assert_eq!(o.frac_at(1), 0.0);
+        assert_eq!(o.max_occupancy(), 4);
+        assert_eq!(o.buckets().len(), 3);
+    }
+
+    #[test]
+    fn empty_occupancy_is_zero() {
+        let o = OccupancyTracker::new();
+        assert_eq!(o.mean(), 0.0);
+        assert_eq!(o.max_occupancy(), 0);
+        assert!(o.buckets().is_empty());
     }
 }

@@ -11,6 +11,11 @@
 //! dtypes per artifact.  [`LoadedArtifact::run`] validates every call
 //! against it, so marshalling bugs surface as errors instead of garbage
 //! numerics.  Compiled executables are cached per artifact name.
+//!
+//! Everything that touches PJRT sits behind the `xla` cargo feature: the
+//! default (offline) build still parses manifests and serves [`ModelDims`]
+//! to the embedded engine and [`crate::stream`] pool, but
+//! [`Runtime::load`] reports that execution needs the feature.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -281,6 +286,7 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -301,6 +307,7 @@ impl Value {
         Ok(lit)
     }
 
+    #[cfg(feature = "xla")]
     fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
         match spec.dtype {
             Dtype::F32 => {
@@ -325,6 +332,7 @@ impl Value {
 
 pub struct LoadedArtifact {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -352,27 +360,36 @@ impl LoadedArtifact {
                 )));
             }
         }
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
-        if tuple.len() != self.spec.outputs.len() {
-            return Err(Error::Manifest(format!(
-                "{}: expected {} outputs, got {}",
-                self.spec.name,
-                self.spec.outputs.len(),
-                tuple.len()
-            )));
+        #[cfg(feature = "xla")]
+        {
+            let literals: Vec<xla::Literal> =
+                inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+            if tuple.len() != self.spec.outputs.len() {
+                return Err(Error::Manifest(format!(
+                    "{}: expected {} outputs, got {}",
+                    self.spec.name,
+                    self.spec.outputs.len(),
+                    tuple.len()
+                )));
+            }
+            tuple
+                .iter()
+                .zip(&self.spec.outputs)
+                .map(|(lit, spec)| Value::from_literal(lit, spec))
+                .collect()
         }
-        tuple
-            .iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, spec)| Value::from_literal(lit, spec))
-            .collect()
+        #[cfg(not(feature = "xla"))]
+        Err(Error::other(format!(
+            "{}: executing artifacts requires the `xla` feature",
+            self.spec.name
+        )))
     }
 }
 
 pub struct Runtime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     manifest: Manifest,
     dir: PathBuf,
@@ -391,8 +408,15 @@ impl Runtime {
             ))
         })?;
         let manifest = Manifest::parse(&text)?;
+        #[cfg(feature = "xla")]
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, dir, cache: Mutex::new(BTreeMap::new()) })
+        Ok(Runtime {
+            #[cfg(feature = "xla")]
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(BTreeMap::new()),
+        })
     }
 
     /// Default artifact dir: $REPRO_ARTIFACTS or ./artifacts.
@@ -413,14 +437,23 @@ impl Runtime {
         }
         let spec = self.manifest.artifact(name)?.clone();
         let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::other("bad path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let loaded = Arc::new(LoadedArtifact { spec, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
-        Ok(loaded)
+        #[cfg(feature = "xla")]
+        {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::other("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let loaded = Arc::new(LoadedArtifact { spec, exe });
+            self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+            Ok(loaded)
+        }
+        #[cfg(not(feature = "xla"))]
+        Err(Error::other(format!(
+            "cannot load artifact '{}' ({}): built without the `xla` feature",
+            name,
+            path.display()
+        )))
     }
 }
 

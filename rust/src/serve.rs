@@ -1,22 +1,197 @@
-//! Server-path serving simulator (the Table-2 "GPU server" row and the
-//! batching-vs-latency trade-off of §4).
+//! Serving: concurrent utterance streams over the embedded engine, plus
+//! the PJRT whole-utterance batcher for the Table-2 "GPU server" row.
 //!
-//! A discrete-event simulation driven by *measured* execution times: batch
-//! arrivals follow a seeded Poisson process, a dynamic batcher groups up
-//! to `max_batch` queued requests (or whatever arrived within the batching
-//! window), and each batch is actually executed through the PJRT eval
-//! artifact — so service times are real, only the arrival clock is
-//! simulated.  This mirrors how the paper's server deployment batches
-//! independent user streams, in contrast to the single-user embedded path
-//! ([`crate::infer`]).
+//! The primary path is [`stream_serve`]: a Poisson arrival process opens
+//! **real concurrent decode sessions** on a [`StreamPool`] and streams
+//! each utterance in client-sized chunks, so the pool's lock-stepped
+//! recurrent GEMMs run at the batch the load actually produces (m = 1–4
+//! is the paper's §4 sweet spot).  Arrival clocks are simulated; every
+//! service interval is measured wall-clock on the real kernels, and the
+//! report carries per-stream latency percentiles and a time-weighted
+//! pool-occupancy histogram (DESIGN.md §6).
+//!
+//! [`simulate`] keeps the earlier discrete-event *whole-utterance*
+//! batcher: requests are padded into a static PJRT eval batch (the
+//! server-side deployment of Prabhavalkar et al.), the contrast case to
+//! per-frame stream pooling.  It needs the `xla` feature + artifacts.
+
+use std::sync::Arc;
 
 use crate::data::Utterance;
 use crate::error::{Error, Result};
-use crate::metricsx::Histogram;
+use crate::infer::{Breakdown, Engine};
+use crate::metricsx::{Histogram, LatencySummary, OccupancyTracker};
 use crate::model::ParamSet;
-use crate::runtime::Runtime;
-use crate::train::Evaluator;
 use crate::prng::Pcg64;
+use crate::runtime::Runtime;
+use crate::stream::StreamPool;
+use crate::train::Evaluator;
+
+// ---------------------------------------------------------------------------
+// Stream-pool serving (embedded path, pure Rust).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct StreamServeConfig {
+    /// mean session arrival rate (utterances / second)
+    pub arrival_rate: f64,
+    /// concurrent session slots (the lock-step batch ceiling)
+    pub pool_size: usize,
+    /// raw feature frames a client delivers per engine tick
+    pub chunk_frames: usize,
+    pub seed: u64,
+}
+
+impl Default for StreamServeConfig {
+    fn default() -> Self {
+        StreamServeConfig { arrival_rate: 8.0, pool_size: 4, chunk_frames: 16, seed: 0 }
+    }
+}
+
+/// Report from a [`stream_serve`] run.
+#[derive(Clone, Debug)]
+pub struct StreamServeReport {
+    pub sessions: usize,
+    pub pool_size: usize,
+    /// completed sessions per simulated second
+    pub throughput: f64,
+    /// arrival → final-transcript latency across sessions
+    pub session_latency: LatencySummary,
+    /// time-weighted pool occupancy over the run
+    pub occupancy: OccupancyTracker,
+    /// mean stream-batch the pooled recurrent GEMMs actually ran at
+    pub mean_rec_batch: f64,
+    /// wall-clock actually spent in the engine
+    pub busy_secs: f64,
+    /// simulated span from first arrival to last completion
+    pub span_secs: f64,
+    /// accumulated engine component timing
+    pub breakdown: Breakdown,
+    /// (reference, hypothesis) per completed session, arrival order
+    pub transcripts: Vec<(String, String)>,
+}
+
+/// One in-flight session: which utterance it is streaming and how far the
+/// "client" has gotten.
+struct InFlight {
+    id: crate::stream::StreamId,
+    utt: usize,
+    off: usize,
+    arrived: f64,
+}
+
+/// Serve `utts` as concurrent streaming sessions over a [`StreamPool`].
+///
+/// Arrivals follow a seeded Poisson process.  Each engine tick, every
+/// live session receives its next `chunk_frames` frames, the pool pumps
+/// (one lock-stepped batch-m advance over all runnable streams), and
+/// sessions whose audio is exhausted are closed (tail flush + transcript).
+/// The simulated clock advances by the *measured* tick time, so latency
+/// and occupancy numbers reflect the real kernels under the offered load.
+pub fn stream_serve(
+    engine: Arc<Engine>,
+    utts: &[Utterance],
+    cfg: &StreamServeConfig,
+) -> Result<StreamServeReport> {
+    if utts.is_empty() {
+        return Err(Error::other("no sessions"));
+    }
+    if cfg.pool_size == 0 || cfg.chunk_frames == 0 {
+        return Err(Error::Config("pool_size and chunk_frames must be >= 1".into()));
+    }
+    let feat = engine.feat_dim();
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
+    let mut t = 0.0;
+    for _ in 0..utts.len() {
+        t += -rng.uniform().max(1e-12).ln() / cfg.arrival_rate;
+        arrivals.push(t);
+    }
+
+    let mut pool = StreamPool::new(engine, cfg.pool_size);
+    let mut active: Vec<InFlight> = Vec::new();
+    let mut next = 0usize;
+    let mut clock = 0.0f64;
+    let mut busy = 0.0f64;
+    let mut bd = Breakdown::default();
+    let mut lat = Histogram::new();
+    let mut occupancy = OccupancyTracker::new();
+    let mut transcripts: Vec<(usize, String, String)> = Vec::new();
+
+    while next < utts.len() || !active.is_empty() {
+        // admit queued arrivals while slots are free
+        while next < utts.len() && arrivals[next] <= clock && !pool.is_full() {
+            let id = pool.open()?;
+            active.push(InFlight { id, utt: next, off: 0, arrived: arrivals[next] });
+            next += 1;
+        }
+        if active.is_empty() {
+            // idle server: record the empty-pool gap, jump to the arrival
+            let target = clock.max(arrivals[next]);
+            if target > clock {
+                occupancy.record(0, target - clock);
+            }
+            clock = target;
+            continue;
+        }
+
+        // one engine tick: clients deliver a chunk each, the pool pumps,
+        // finished sessions close — all measured as one service interval
+        let occ_now = active.len();
+        let t0 = std::time::Instant::now();
+        for a in &mut active {
+            let data = utts[a.utt].feats.data();
+            let end = (a.off + cfg.chunk_frames * feat).min(data.len());
+            if a.off < end {
+                pool.push_frames(a.id, &data[a.off..end])?;
+                a.off = end;
+            }
+        }
+        pool.pump(&mut bd)?;
+        let mut finished: Vec<(InFlight, String)> = Vec::new();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].off >= utts[active[i].utt].feats.data().len() {
+                let a = active.swap_remove(i);
+                let closed = pool.close(a.id, &mut bd)?;
+                finished.push((a, closed.transcript));
+            } else {
+                i += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        busy += dt;
+        clock += dt;
+        occupancy.record(occ_now, dt);
+        for (a, hyp) in finished {
+            lat.record(clock - a.arrived);
+            transcripts.push((a.utt, utts[a.utt].text.clone(), hyp));
+        }
+    }
+
+    // sessions complete out of order under churn; report in arrival order
+    transcripts.sort_by_key(|(utt, _, _)| *utt);
+    let transcripts: Vec<(String, String)> =
+        transcripts.into_iter().map(|(_, reference, hyp)| (reference, hyp)).collect();
+
+    let span = clock - arrivals[0];
+    Ok(StreamServeReport {
+        sessions: utts.len(),
+        pool_size: cfg.pool_size,
+        throughput: utts.len() as f64 / span.max(1e-9),
+        session_latency: lat.summary(),
+        occupancy,
+        mean_rec_batch: pool.stats.mean_rec_batch(),
+        busy_secs: busy,
+        span_secs: span,
+        breakdown: bd,
+        transcripts,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Whole-utterance PJRT batcher (the server-row baseline; `xla` feature).
+// ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -50,7 +225,9 @@ pub struct ServeReport {
     pub span_secs: f64,
 }
 
-/// Run the serving simulation over `utts` (one request per utterance).
+/// Run the whole-utterance serving simulation over `utts` (one request
+/// per utterance) — batch arrivals are simulated, service times are real
+/// PJRT executions.
 pub fn simulate(
     rt: &Runtime,
     eval_artifact: &str,
@@ -134,13 +311,63 @@ pub fn simulate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::{CorpusSpec, Dataset};
+    use crate::infer::Precision;
+    use crate::stream::{demo_dims, synthetic_params};
 
     #[test]
-    fn default_config_sane() {
+    fn default_configs_sane() {
         let c = ServeConfig::default();
         assert!(c.arrival_rate > 0.0 && c.max_batch >= 1 && c.window >= 0.0);
+        let s = StreamServeConfig::default();
+        assert!(s.arrival_rate > 0.0 && s.pool_size >= 1 && s.chunk_frames >= 1);
     }
 
-    // end-to-end serving tests live in rust/tests/integration.rs (they
-    // need compiled artifacts).
+    #[test]
+    fn stream_serve_reports_concurrent_sessions() {
+        let dims = demo_dims();
+        let p = synthetic_params(&dims, 0.25, 3);
+        let engine =
+            Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap());
+        let data = Dataset::generate(CorpusSpec::standard(21), 0, 0, 6);
+        let cfg = StreamServeConfig {
+            arrival_rate: 1e6, // everyone arrives at once -> pool saturates
+            pool_size: 3,
+            chunk_frames: 16,
+            seed: 1,
+        };
+        let r = stream_serve(engine, &data.test, &cfg).unwrap();
+        assert_eq!(r.sessions, 6);
+        assert_eq!(r.transcripts.len(), 6);
+        assert!(r.throughput > 0.0);
+        assert!(r.session_latency.p50 <= r.session_latency.p95);
+        assert!(r.session_latency.p95 <= r.session_latency.p99);
+        // at instant arrivals the pool must actually fill
+        assert!(r.occupancy.max_occupancy() == 3, "max occ {}", r.occupancy.max_occupancy());
+        assert!(r.mean_rec_batch > 1.5, "mean rec batch {}", r.mean_rec_batch);
+        assert!(r.breakdown.frames > 0);
+    }
+
+    #[test]
+    fn stream_serve_low_rate_stays_mostly_solo() {
+        let dims = demo_dims();
+        let p = synthetic_params(&dims, 0.25, 4);
+        let engine =
+            Arc::new(Engine::from_params(&dims, "partial", &p, Precision::F32, 4).unwrap());
+        let data = Dataset::generate(CorpusSpec::standard(22), 0, 0, 4);
+        // arrivals far apart relative to service time: occupancy ~1
+        let cfg = StreamServeConfig {
+            arrival_rate: 0.001,
+            pool_size: 4,
+            chunk_frames: 32,
+            seed: 2,
+        };
+        let r = stream_serve(engine, &data.test, &cfg).unwrap();
+        assert_eq!(r.sessions, 4);
+        assert!(r.mean_rec_batch <= 1.0 + 1e-9);
+        assert!(r.occupancy.mean() <= 1.0 + 1e-9);
+    }
+
+    // end-to-end PJRT serving tests live in rust/tests/integration.rs
+    // (they need compiled artifacts + the `xla` feature).
 }

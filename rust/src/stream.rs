@@ -1,0 +1,473 @@
+//! Multi-stream batched streaming engine (DESIGN.md §6).
+//!
+//! The paper's §4 "farm" kernels are built for the batch 1–4 regime, but a
+//! single utterance only ever exercises batch 1 on the recurrent path.
+//! This module recovers the missing batch dimension from **concurrency**:
+//! a [`StreamPool`] owns up to N live decode sessions and lock-steps their
+//! GRU recurrent steps into one batch-m [`crate::kernels::qgemm_farm_rows`]
+//! (or [`crate::kernels::gemm_f32`]) call per layer per timestep, so the
+//! big recurrent weight matrix streams through cache once for all m
+//! streams instead of once per stream.
+//!
+//! Correctness contract: pooled decoding is **bit-identical** to running
+//! each session alone through [`Engine::transcribe`].  This holds because
+//! the pool re-drives the same staged engine primitives (`frontend` →
+//! `nonrec_block` → `rec_gates` + `gru_cell` → `head`) and because the
+//! int8 recurrent path quantizes activations *per row*, so stream i's
+//! dynamic scale never depends on its pool neighbours (see
+//! `rust/tests/stream_pool.rs`).
+//!
+//! Session lifecycle: [`StreamPool::open`] claims a slot,
+//! [`StreamPool::push_frames`] buffers raw feature frames,
+//! [`StreamPool::pump`] advances every stream that has a full time-batched
+//! block (padding the batch down as streams starve and retiring them as
+//! utterances end), [`StreamPool::poll`] drains finished log-prob rows,
+//! and [`StreamPool::close`] flushes the tail and frees the slot for the
+//! next utterance.  [`crate::serve::stream_serve`] drives this API under a
+//! Poisson arrival process; `benches/stream_pool.rs` measures it.
+
+use std::sync::Arc;
+
+use crate::data::labels_to_text;
+use crate::decoder::{greedy_step, BLANK};
+use crate::error::{Error, Result};
+use crate::infer::{gru_cell, Breakdown, Engine, StreamState};
+use crate::model::ParamSet;
+use crate::prng::Pcg64;
+use crate::runtime::ModelDims;
+use crate::tensor::Tensor;
+
+/// Opaque handle to a live decode session in a [`StreamPool`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct StreamId(u64);
+
+/// Lifetime counters for a pool (feeds the serving report and benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// lock-stepped blocks processed by [`StreamPool::pump`]
+    pub blocks: u64,
+    /// pooled recurrent GEMM calls (one per layer per timestep per block)
+    pub pooled_gemms: u64,
+    /// total stream-rows carried by those GEMMs
+    pub pooled_rows: u64,
+    pub opened: u64,
+    pub closed: u64,
+}
+
+impl PoolStats {
+    /// Mean stream-batch of the pooled recurrent GEMMs — the m that the
+    /// farm kernels actually saw.
+    pub fn mean_rec_batch(&self) -> f64 {
+        if self.pooled_gemms == 0 {
+            0.0
+        } else {
+            self.pooled_rows as f64 / self.pooled_gemms as f64
+        }
+    }
+}
+
+/// Result of closing a session: final greedy transcript plus any log-prob
+/// rows not yet drained by [`StreamPool::poll`].
+#[derive(Clone, Debug)]
+pub struct ClosedSession {
+    pub id: StreamId,
+    pub transcript: String,
+    pub logprob_rows: Vec<Vec<f32>>,
+    /// total output steps this session produced over its lifetime
+    pub steps: u64,
+}
+
+/// One live session: per-stream state split from the shared engine
+/// weights, plus incremental greedy-decode state.
+struct Session {
+    id: u64,
+    state: StreamState,
+    /// produced log-prob rows not yet drained by `poll`
+    ready: Vec<Vec<f32>>,
+    /// incremental best-path decode (matches `decoder::greedy_decode`)
+    prev_label: i32,
+    labels: Vec<i32>,
+    steps: u64,
+}
+
+impl Session {
+    /// Incremental greedy CTC step: shares the argmax with
+    /// [`crate::decoder::greedy_decode`] and applies the same
+    /// collapse-repeats / drop-blanks rule, so live and one-shot decoding
+    /// can never drift apart.
+    fn decode_row(&mut self, row: &[f32]) {
+        let c = greedy_step(row);
+        if c != self.prev_label && c != BLANK {
+            self.labels.push(c);
+        }
+        self.prev_label = c;
+    }
+
+    fn absorb(&mut self, rows: Vec<Vec<f32>>) {
+        self.steps += rows.len() as u64;
+        for r in &rows {
+            self.decode_row(r);
+        }
+        self.ready.extend(rows);
+    }
+}
+
+/// N concurrent decode sessions sharing one [`Engine`], with the
+/// recurrent GEMMs of all runnable sessions executed as a single batch-m
+/// call per layer per timestep.
+pub struct StreamPool {
+    engine: Arc<Engine>,
+    slots: Vec<Option<Session>>,
+    next_id: u64,
+    pub stats: PoolStats,
+}
+
+impl StreamPool {
+    /// Create a pool with `capacity` session slots over a shared engine.
+    pub fn new(engine: Arc<Engine>, capacity: usize) -> StreamPool {
+        assert!(capacity >= 1, "StreamPool needs at least one slot");
+        StreamPool {
+            engine,
+            slots: (0..capacity).map(|_| None).collect(),
+            next_id: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Live sessions currently occupying slots.
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.active() == self.capacity()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Claim a free slot for a new utterance stream.
+    pub fn open(&mut self) -> Result<StreamId> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| Error::other("stream pool full"))?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.slots[slot] = Some(Session {
+            id,
+            state: self.engine.new_state(),
+            ready: Vec::new(),
+            prev_label: -1,
+            labels: Vec::new(),
+            steps: 0,
+        });
+        self.stats.opened += 1;
+        Ok(StreamId(id))
+    }
+
+    fn index_of(&self, id: StreamId) -> Result<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|s| s.id == id.0))
+            .ok_or_else(|| Error::other(format!("no such stream session {:?}", id)))
+    }
+
+    /// Buffer raw feature frames for one session (any chunk size; must be
+    /// whole frames).
+    pub fn push_frames(&mut self, id: StreamId, frames: &[f32]) -> Result<()> {
+        if frames.len() % self.engine.feat_dim() != 0 {
+            return Err(Error::Shape(format!(
+                "push_frames: {} values is not a whole number of {}-dim frames",
+                frames.len(),
+                self.engine.feat_dim()
+            )));
+        }
+        let idx = self.index_of(id)?;
+        let sess = self.slots[idx].as_mut().unwrap();
+        sess.state.buf.extend_from_slice(frames);
+        Ok(())
+    }
+
+    /// Drain log-prob rows produced since the last poll.
+    pub fn poll(&mut self, id: StreamId) -> Result<Vec<Vec<f32>>> {
+        let idx = self.index_of(id)?;
+        Ok(std::mem::take(&mut self.slots[idx].as_mut().unwrap().ready))
+    }
+
+    /// Current greedy transcript (partial while the session is live).
+    pub fn transcript(&self, id: StreamId) -> Result<String> {
+        let idx = self.index_of(id)?;
+        Ok(labels_to_text(&self.slots[idx].as_ref().unwrap().labels))
+    }
+
+    /// Advance every session that has at least one full time-batched block
+    /// buffered, lock-stepping their recurrent steps into batch-m GEMMs.
+    /// Repeats until no session has a full block; returns the total number
+    /// of output steps produced.  Sessions without a full block simply sit
+    /// out the round (the batch pads down), and closed sessions have
+    /// already retired — this is the pad/retire behaviour of §4's dynamic
+    /// batching, applied to the embedded path.
+    pub fn pump(&mut self, bd: &mut Breakdown) -> Result<usize> {
+        let mut produced = 0;
+        loop {
+            let n = self.pump_block(bd)?;
+            if n == 0 {
+                return Ok(produced);
+            }
+            produced += n;
+        }
+    }
+
+    /// One lock-stepped block across all runnable sessions.
+    fn pump_block(&mut self, bd: &mut Breakdown) -> Result<usize> {
+        let block_raw = self.engine.block_raw_len();
+        let ready: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.as_ref().is_some_and(|s| s.state.buf.len() >= block_raw))
+            .map(|(i, _)| i)
+            .collect();
+        if ready.is_empty() {
+            return Ok(0);
+        }
+        let m = ready.len();
+        let t = self.engine.time_batch;
+        let feat = self.engine.feat_dim();
+
+        // frontend runs per stream (it is non-recurrent and time-batched
+        // by nature); this also accounts the raw frames like `stream` does
+        let mut xs: Vec<Tensor> = Vec::with_capacity(m);
+        for &si in &ready {
+            let sess = self.slots[si].as_mut().unwrap();
+            let chunk: Vec<f32> = sess.state.buf.drain(..block_raw).collect();
+            bd.frames += (chunk.len() / feat) as u64;
+            xs.push(self.engine.frontend(&chunk, bd)?);
+        }
+
+        // GRU stack: per-stream time-batched nonrec, then the pooled
+        // recurrent steps — ONE batch-m GEMM per layer per timestep.
+        // The gather matrix and hidden states are written in place so the
+        // hot loop performs no per-step allocations.
+        for li in 0..self.engine.num_gru_layers() {
+            let h_dim = self.engine.gru_hidden(li);
+            let gxs: Vec<Tensor> =
+                xs.iter().map(|x| self.engine.nonrec_block(li, x, bd)).collect();
+            let mut outs: Vec<Tensor> = (0..m).map(|_| Tensor::zeros(&[t, h_dim])).collect();
+            let mut hmat = Tensor::zeros(&[m, h_dim]);
+            for step in 0..t {
+                for (row, &si) in ready.iter().enumerate() {
+                    hmat.row_mut(row)
+                        .copy_from_slice(self.slots[si].as_ref().unwrap().state.h[li].data());
+                }
+                let gh = self.engine.rec_gates(li, &hmat, bd);
+                self.stats.pooled_gemms += 1;
+                self.stats.pooled_rows += m as u64;
+
+                let t2 = std::time::Instant::now();
+                for (row, &si) in ready.iter().enumerate() {
+                    let sess = self.slots[si].as_mut().unwrap();
+                    gru_cell(
+                        gxs[row].row(step),
+                        gh.row(row),
+                        sess.state.h[li].data(),
+                        outs[row].row_mut(step),
+                    );
+                    sess.state.h[li].data_mut().copy_from_slice(outs[row].row(step));
+                }
+                bd.gates += t2.elapsed().as_secs_f64();
+            }
+            xs = outs;
+        }
+
+        // head + incremental decode, per stream
+        let mut produced = 0;
+        for (row, &si) in ready.iter().enumerate() {
+            let rows = self.engine.head(&xs[row], bd);
+            produced += rows.len();
+            self.slots[si].as_mut().unwrap().absorb(rows);
+        }
+        self.stats.blocks += 1;
+        Ok(produced)
+    }
+
+    /// End a session: drain its remaining full blocks, flush the padded
+    /// tail (exactly like [`Engine::flush`] on a lone stream), free the
+    /// slot, and return the final transcript + undrained rows.
+    pub fn close(&mut self, id: StreamId, bd: &mut Breakdown) -> Result<ClosedSession> {
+        let idx = self.index_of(id)?;
+        let mut sess = self.slots[idx].take().unwrap();
+        // frames still buffered were never counted by `pump` (it accounts
+        // per drained block); count them here so Breakdown::frames matches
+        // the sequential engine exactly
+        bd.frames += (sess.state.buf.len() / self.engine.feat_dim()) as u64;
+        let mut rows = self.engine.stream(&mut sess.state, &[], bd)?;
+        rows.extend(self.engine.flush(&mut sess.state, bd)?);
+        sess.absorb(rows);
+        self.stats.closed += 1;
+        Ok(ClosedSession {
+            id,
+            transcript: labels_to_text(&sess.labels),
+            logprob_rows: sess.ready,
+            steps: sess.steps,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Demo/bench scaffolding: deterministic model dims + synthetic parameters.
+// ---------------------------------------------------------------------------
+
+/// The `wsj_mini` dimensions, constructible without an artifact manifest
+/// (kept in sync with `python/compile/configs.py`); used by the
+/// `stream-serve` CLI demo, the stream benches and the pool tests.
+pub fn demo_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 40,
+        conv: vec![
+            crate::runtime::ConvDims { context: 2, dim: 64 },
+            crate::runtime::ConvDims { context: 2, dim: 96 },
+        ],
+        gru_dims: vec![96, 128, 160],
+        fc_dim: 192,
+        vocab: 29,
+        total_stride: 4,
+    }
+}
+
+/// Deterministic Glorot-initialized parameters in the partial-factored
+/// scheme at the given rank fraction — an untrained but structurally
+/// faithful model for latency/throughput work where weights don't matter.
+pub fn synthetic_params(dims: &ModelDims, rank_frac: f64, seed: u64) -> ParamSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut p = ParamSet::new();
+    let mut prev = dims.feat_dim;
+    for (i, c) in dims.conv.iter().enumerate() {
+        p.set(format!("conv{i}_w"), Tensor::glorot(c.dim, c.context * prev, &mut rng));
+        p.set(format!("conv{i}_b"), Tensor::zeros(&[c.dim]));
+        prev = c.dim;
+    }
+    for (i, &h) in dims.gru_dims.iter().enumerate() {
+        let din = if i == 0 { dims.conv.last().unwrap().dim } else { dims.gru_dims[i - 1] };
+        let r = ((h.min(din) as f64 * rank_frac) as usize).max(4);
+        p.set(format!("rec{i}_u"), Tensor::glorot(3 * h, r, &mut rng));
+        p.set(format!("rec{i}_v"), Tensor::glorot(r, h, &mut rng));
+        p.set(format!("nonrec{i}_u"), Tensor::glorot(3 * h, r, &mut rng));
+        p.set(format!("nonrec{i}_v"), Tensor::glorot(r, din, &mut rng));
+        p.set(format!("gru{i}_b"), Tensor::zeros(&[3 * h]));
+    }
+    let last = *dims.gru_dims.last().unwrap();
+    let r = ((dims.fc_dim.min(last) as f64 * rank_frac) as usize).max(4);
+    p.set("fc_u", Tensor::glorot(dims.fc_dim, r, &mut rng));
+    p.set("fc_v", Tensor::glorot(r, last, &mut rng));
+    p.set("fc_b", Tensor::zeros(&[dims.fc_dim]));
+    p.set("out_w", Tensor::glorot(dims.vocab, dims.fc_dim, &mut rng));
+    p.set("out_b", Tensor::zeros(&[dims.vocab]));
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Precision;
+
+    fn engine(precision: Precision) -> Arc<Engine> {
+        let dims = demo_dims();
+        let p = synthetic_params(&dims, 0.5, 7);
+        Arc::new(Engine::from_params(&dims, "partial", &p, precision, 4).unwrap())
+    }
+
+    #[test]
+    fn pool_of_one_matches_plain_engine() {
+        let eng = engine(Precision::F32);
+        let mut rng = Pcg64::seeded(1);
+        let feats = Tensor::randn(&[48, 40], 0.7, &mut rng);
+
+        let mut bd = Breakdown::default();
+        let (text, rows) = eng.transcribe(&feats, &mut bd).unwrap();
+
+        let mut pool = StreamPool::new(eng.clone(), 1);
+        let id = pool.open().unwrap();
+        pool.push_frames(id, feats.data()).unwrap();
+        let mut bd2 = Breakdown::default();
+        pool.pump(&mut bd2).unwrap();
+        let closed = pool.close(id, &mut bd2).unwrap();
+
+        assert_eq!(closed.transcript, text);
+        assert_eq!(closed.logprob_rows.len(), rows.len());
+        for (a, b) in closed.logprob_rows.iter().zip(&rows) {
+            assert_eq!(a, b, "pool-of-1 must be bit-identical");
+        }
+        assert_eq!(bd2.frames, bd.frames);
+    }
+
+    #[test]
+    fn open_close_recycles_slots() {
+        let eng = engine(Precision::Int8);
+        let mut pool = StreamPool::new(eng, 2);
+        let a = pool.open().unwrap();
+        let b = pool.open().unwrap();
+        assert!(pool.is_full());
+        assert!(pool.open().is_err(), "third open must fail at capacity 2");
+        let mut bd = Breakdown::default();
+        pool.close(a, &mut bd).unwrap();
+        assert_eq!(pool.active(), 1);
+        let c = pool.open().unwrap();
+        assert_ne!(a, c, "ids are never reused");
+        assert_ne!(b, c);
+        assert!(pool.poll(a).is_err(), "closed session is gone");
+        assert_eq!(pool.stats.opened, 3);
+        assert_eq!(pool.stats.closed, 1);
+    }
+
+    #[test]
+    fn pooled_gemm_batch_tracks_occupancy() {
+        let eng = engine(Precision::Int8);
+        let block = eng.block_raw_len();
+        let mut pool = StreamPool::new(eng, 4);
+        let ids: Vec<StreamId> = (0..3).map(|_| pool.open().unwrap()).collect();
+        let mut rng = Pcg64::seeded(2);
+        let frames = Tensor::randn(&[block / 40, 40], 0.5, &mut rng);
+        for &id in &ids {
+            pool.push_frames(id, frames.data()).unwrap();
+        }
+        let mut bd = Breakdown::default();
+        let produced = pool.pump(&mut bd).unwrap();
+        assert_eq!(produced, 3 * 4, "3 streams x time_batch=4 output steps");
+        assert!((pool.stats.mean_rec_batch() - 3.0).abs() < 1e-9);
+        // polled rows arrive and drain exactly once
+        let rows = pool.poll(ids[0]).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(pool.poll(ids[0]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn partial_block_waits_for_more_frames() {
+        let eng = engine(Precision::F32);
+        let step = eng.step_raw_len();
+        let mut pool = StreamPool::new(eng, 2);
+        let id = pool.open().unwrap();
+        // one output step of frames < a full time_batch=4 block
+        pool.push_frames(id, &vec![0.1; step]).unwrap();
+        let mut bd = Breakdown::default();
+        assert_eq!(pool.pump(&mut bd).unwrap(), 0);
+        // close flushes the zero-padded tail instead
+        let closed = pool.close(id, &mut bd).unwrap();
+        assert_eq!(closed.logprob_rows.len(), 1);
+    }
+
+    #[test]
+    fn push_rejects_ragged_frames() {
+        let eng = engine(Precision::F32);
+        let mut pool = StreamPool::new(eng, 1);
+        let id = pool.open().unwrap();
+        assert!(pool.push_frames(id, &[0.0; 41]).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Property tests for the multi-stream pool (no artifacts needed):
+//! pooled decoding must be **bit-identical** to sequential single-stream
+//! decoding in both precisions, for arbitrary utterance lengths and
+//! client chunkings, and the pool must survive retire-and-replace churn.
+
+use std::sync::Arc;
+
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::prng::Pcg64;
+use tracenorm::proplite::check;
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::stream::{synthetic_params, StreamId, StreamPool};
+use tracenorm::tensor::Tensor;
+
+/// Small dims so property cases stay fast in debug builds; two GRU
+/// layers + two conv layers still exercise every pooled stage.
+fn tiny_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 8,
+        conv: vec![ConvDims { context: 2, dim: 12 }],
+        gru_dims: vec![10, 12],
+        fc_dim: 14,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn engine(precision: Precision, seed: u64) -> Arc<Engine> {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 0.5, seed);
+    Arc::new(Engine::from_params(&dims, "partial", &params, precision, 4).unwrap())
+}
+
+/// Reference: each utterance decoded alone through the plain engine.
+fn solo(eng: &Engine, u: &Tensor) -> (String, Vec<Vec<f32>>) {
+    let mut bd = Breakdown::default();
+    eng.transcribe(u, &mut bd).unwrap()
+}
+
+#[test]
+fn prop_pool_of_4_bit_identical_to_sequential() {
+    for precision in [Precision::F32, Precision::Int8] {
+        check(
+            &format!("pool4-bit-identical-{precision:?}"),
+            6,
+            |rng, size| {
+                // four utterances of ragged lengths, each with its own
+                // client chunk size (in frames)
+                let utts: Vec<Tensor> = (0..4)
+                    .map(|_| Tensor::randn(&[2 + rng.below(10 + size), 8], 0.7, rng))
+                    .collect();
+                let chunks: Vec<usize> = (0..4).map(|_| 1 + rng.below(5)).collect();
+                (utts, chunks)
+            },
+            |(utts, chunks)| {
+                let eng = engine(precision, 9);
+                let refs: Vec<(String, Vec<Vec<f32>>)> =
+                    utts.iter().map(|u| solo(&eng, u)).collect();
+
+                let mut pool = StreamPool::new(eng.clone(), 4);
+                let ids: Vec<StreamId> = (0..4).map(|_| pool.open().unwrap()).collect();
+                let mut off = [0usize; 4];
+                let mut got: Vec<Option<(String, Vec<Vec<f32>>)>> = vec![None, None, None, None];
+                let mut bd = Breakdown::default();
+                let mut done = 0;
+                while done < 4 {
+                    // round-robin interleaved pushes with per-stream
+                    // chunking, pumping between rounds so streams advance
+                    // at genuinely mixed batch sizes
+                    for i in 0..4 {
+                        if got[i].is_some() {
+                            continue;
+                        }
+                        let data = utts[i].data();
+                        let end = (off[i] + chunks[i] * 8).min(data.len());
+                        if off[i] < end {
+                            pool.push_frames(ids[i], &data[off[i]..end]).unwrap();
+                            off[i] = end;
+                        }
+                        if off[i] >= data.len() {
+                            let closed = pool.close(ids[i], &mut bd).unwrap();
+                            got[i] = Some((closed.transcript, closed.logprob_rows));
+                            done += 1;
+                        }
+                    }
+                    pool.pump(&mut bd).unwrap();
+                }
+
+                refs.iter().zip(&got).all(|(r, g)| {
+                    let g = g.as_ref().unwrap();
+                    r.0 == g.0
+                        && r.1.len() == g.1.len()
+                        && r.1.iter().zip(&g.1).all(|(a, b)| a == b) // bit-exact f32
+                })
+            },
+        );
+    }
+}
+
+#[test]
+fn churn_retire_and_replace_keeps_streams_independent() {
+    for precision in [Precision::F32, Precision::Int8] {
+        let eng = engine(precision, 11);
+        let mut rng = Pcg64::seeded(5);
+        let utts: Vec<Tensor> =
+            (0..10).map(|_| Tensor::randn(&[4 + rng.below(14), 8], 0.6, &mut rng)).collect();
+        let refs: Vec<String> = utts.iter().map(|u| solo(&eng, u).0).collect();
+
+        let mut pool = StreamPool::new(eng.clone(), 4);
+        let mut active: Vec<(StreamId, usize, usize)> = Vec::new(); // (id, utt, offset)
+        let mut next = 0usize;
+        let mut bd = Breakdown::default();
+        let mut finished = 0usize;
+        while finished < utts.len() {
+            // replace retired streams immediately — the churn under test
+            while next < utts.len() && !pool.is_full() {
+                active.push((pool.open().unwrap(), next, 0));
+                next += 1;
+            }
+            for (id, utt, off) in &mut active {
+                let data = utts[*utt].data();
+                let end = (*off + 3 * 8).min(data.len());
+                if *off < end {
+                    pool.push_frames(*id, &data[*off..end]).unwrap();
+                    *off = end;
+                }
+            }
+            pool.pump(&mut bd).unwrap();
+            let mut i = 0;
+            while i < active.len() {
+                let (id, utt, off) = active[i];
+                if off >= utts[utt].data().len() {
+                    // partial transcript is always a prefix of the final
+                    let partial = pool.transcript(id).unwrap();
+                    let closed = pool.close(id, &mut bd).unwrap();
+                    assert!(
+                        closed.transcript.starts_with(&partial),
+                        "partial {partial:?} not a prefix of {:?}",
+                        closed.transcript
+                    );
+                    assert_eq!(
+                        closed.transcript, refs[utt],
+                        "utterance {utt} transcript diverged under churn ({precision:?})"
+                    );
+                    active.swap_remove(i);
+                    finished += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        assert_eq!(pool.stats.opened, 10);
+        assert_eq!(pool.stats.closed, 10);
+        assert!(pool.stats.mean_rec_batch() > 1.0, "churn should still pool streams");
+        assert_eq!(pool.active(), 0);
+    }
+}

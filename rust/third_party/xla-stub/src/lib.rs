@@ -1,0 +1,154 @@
+//! Offline stub of the `xla` crate (xla-rs over xla_extension 0.5.1).
+//!
+//! The build environment has no network and no XLA toolchain, so this
+//! crate mirrors the subset of the xla-rs API that `tracenorm::runtime`
+//! consumes: literals, the PJRT CPU client, and HLO-text loading.  Type
+//! signatures match the real bindings; anything that would touch the
+//! PJRT runtime returns [`Error`] at runtime instead.
+//!
+//! To execute real artifacts, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings — no source change in
+//! `tracenorm` is required.
+
+use std::fmt;
+
+/// Error type matching `xla::Error`'s public face (Display + std::error).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT unavailable (offline xla-stub build; swap \
+         rust/third_party/xla-stub for the real xla bindings)"
+    ))
+}
+
+/// Element types used by the tracenorm artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Scalar types that can cross the literal boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal (tensor value).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready to compile.
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer returned by execution.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.  `cpu()` succeeds so manifest-only flows work;
+/// compilation is where the stub reports itself.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailability() {
+        assert!(PjRtClient::cpu().is_ok());
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("xla-stub"));
+    }
+}

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI entry point: format, lint, tier-1 verify, bench smoke.
+#
+# Everything runs offline against the default feature set (no xla); the
+# bench smoke sets BENCH_SMOKE=1 so each bench binary executes exactly
+# one timed iteration per case (see rust/benches/harness.rs).
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> tier-1 verify: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+
+echo "==> rustdoc (no warnings allowed)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> bench smoke (1 iteration each)"
+for b in gemm linalg streaming stream_pool coordinator; do
+  echo "--- bench $b"
+  BENCH_SMOKE=1 cargo bench --bench "$b"
+done
+
+echo "CI OK"
