@@ -1,0 +1,85 @@
+//! Bench: the rank-ladder registry (DESIGN.md §8) — offline build cost,
+//! registry load (checksum + engine construction from stored int8
+//! factors, no SVD), the per-rung decode latency that makes the ladder a
+//! serving knob (the paper's Figure-1 tradeoff at runtime), and the
+//! controller's per-tick overhead (which must be noise next to a GEMM).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use tracenorm::controller::{ControllerConfig, FidelityController};
+use tracenorm::infer::Breakdown;
+use tracenorm::prng::Pcg64;
+use tracenorm::registry::{ladder_build, Registry};
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::stream::{demo_dims, synthetic_params};
+use tracenorm::tensor::Tensor;
+
+/// Mid-size dims for the build bench: big enough that the SVDs are real
+/// work, small enough that BENCH_SMOKE stays quick.
+fn build_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 40,
+        conv: vec![ConvDims { context: 2, dim: 48 }],
+        gru_dims: vec![48, 64],
+        fc_dim: 64,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn main() {
+    let tmp = std::env::temp_dir().join(format!("tnladder-bench-{}", std::process::id()));
+
+    header("ladder-build: per-group truncated SVD + int8 quantize (mid dims)");
+    let bdims = build_dims();
+    let bparams = synthetic_params(&bdims, 1.0, 0);
+    let build_dir = tmp.join("mid");
+    bench("ladder_build 2 rungs (0.5, 0.25)", 2000, || {
+        ladder_build(&bparams, &bdims, &[0.5, 0.25], &build_dir).unwrap();
+    });
+
+    // serve-side benches run on the full demo dims; build once outside
+    // the timed region (the offline pass is not the serving hot path)
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 1.0, 1);
+    let serve_dir = tmp.join("demo");
+    ladder_build(&params, &dims, &[0.5, 0.125], &serve_dir).unwrap();
+
+    header("registry load: checksum-verify + engines from stored int8 factors");
+    bench("Registry::load 2 rungs", 1000, || {
+        std::hint::black_box(Registry::load(&serve_dir, 4).unwrap());
+    });
+
+    header("per-rung decode latency (96-frame utterance, int8)");
+    let reg = Registry::load(&serve_dir, 4).unwrap();
+    let mut rng = Pcg64::seeded(2);
+    let utter = Tensor::randn(&[96, dims.feat_dim], 0.7, &mut rng);
+    for tier in 0..reg.num_tiers() {
+        let v = reg.tier(tier);
+        let name = format!(
+            "tier {tier} {} (rank {:.3}, {} KB)",
+            v.info.tag,
+            v.info.rank_frac,
+            v.info.bytes / 1024
+        );
+        bench(&name, 400, || {
+            let mut bd = Breakdown::default();
+            std::hint::black_box(v.engine.transcribe(&utter, &mut bd).unwrap());
+        });
+    }
+
+    header("controller overhead (1e4 observe+record ticks)");
+    let mut ctl = FidelityController::new(3, ControllerConfig::default()).unwrap();
+    let mut i = 0u64;
+    bench("10k control ticks", 300, || {
+        for _ in 0..10_000 {
+            i = i.wrapping_add(1);
+            ctl.record_latency((i % 3) as usize, 0.01 + (i % 7) as f64 * 1e-3);
+            std::hint::black_box(ctl.observe(i as f64, ((i % 10) as f64) / 10.0));
+        }
+    });
+
+    let _ = std::fs::remove_dir_all(&tmp);
+}

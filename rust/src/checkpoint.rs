@@ -1,25 +1,49 @@
 //! Checkpointing: save/load [`ParamSet`]s (and whole training states) to a
 //! self-describing binary format.
 //!
-//! Format (little-endian):
+//! Two on-disk versions share the `TNCK` magic and fnv1a trailer:
+//!
+//! v1 — flat f32 parameter sets (training checkpoints):
 //! ```text
-//! magic "TNCK" | u32 version | u32 n_entries
+//! magic "TNCK" | u32 version=1 | u32 n_entries
 //! per entry: u32 name_len | name bytes | u32 rank | u64 dims... | f32 data...
 //! trailer: u64 fnv1a-64 of everything before the trailer
 //! ```
+//!
+//! v2 — typed entries + a JSON metadata block (the rank-ladder serving
+//! artifacts built by [`crate::registry`], DESIGN.md §8):
+//! ```text
+//! magic "TNCK" | u32 version=2 | u32 meta_len | meta JSON bytes | u32 n_entries
+//! per entry: u32 name_len | name bytes | u8 dtype | u32 rank | u64 dims...
+//!            | dtype 0 (f32): f32 data...
+//!            | dtype 1 (int8): f32 scale | i8 data...
+//! trailer: u64 fnv1a-64 of everything before the trailer
+//! ```
+//!
+//! [`artifact_from_bytes`] reads both versions (a v1 file loads as an
+//! all-f32 [`Artifact`] with null metadata); [`from_bytes`] stays
+//! v1-only because a [`ParamSet`] cannot represent int8 entries.
 //! No serde/npy available offline; this is the crate's own format, with a
 //! checksum so a torn write fails loudly instead of producing garbage
-//! weights.
+//! weights, and a save-time finiteness guard so NaN/Inf weights are
+//! rejected instead of silently persisted.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::jsonx::Json;
 use crate::model::ParamSet;
-use crate::tensor::Tensor;
+use crate::quant::QMatrix;
+use crate::tensor::{Tensor, TensorI8};
 
 const MAGIC: &[u8; 4] = b"TNCK";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I8: u8 = 1;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -30,13 +54,33 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Serialize a parameter set to bytes.
-pub fn to_bytes(params: &ParamSet) -> Vec<u8> {
+fn err(msg: impl Into<String>) -> Error {
+    Error::Checkpoint(msg.into())
+}
+
+/// Save-time poison guard: NaN/Inf weights decode to garbage transcripts
+/// much later and much less debuggably than failing here.
+fn ensure_finite(name: &str, data: &[f32]) -> Result<()> {
+    if let Some(v) = data.iter().find(|v| !v.is_finite()) {
+        return Err(err(format!(
+            "refusing to save non-finite value {v} in tensor '{name}'"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// v1: flat f32 parameter sets.
+// ---------------------------------------------------------------------------
+
+/// Serialize a parameter set to v1 bytes.  Fails on NaN/Inf tensor data.
+pub fn to_bytes(params: &ParamSet) -> Result<Vec<u8>> {
     let mut buf = Vec::new();
     buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&VERSION_V1.to_le_bytes());
     buf.extend_from_slice(&(params.len() as u32).to_le_bytes());
     for (name, t) in params.iter() {
+        ensure_finite(name, t.data())?;
         buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
         buf.extend_from_slice(name.as_bytes());
         buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
@@ -49,81 +93,327 @@ pub fn to_bytes(params: &ParamSet) -> Vec<u8> {
     }
     let check = fnv1a(&buf);
     buf.extend_from_slice(&check.to_le_bytes());
-    buf
+    Ok(buf)
 }
 
-/// Parse a parameter set from bytes.
-pub fn from_bytes(bytes: &[u8]) -> Result<ParamSet> {
-    if bytes.len() < 20 {
-        return Err(Error::other("checkpoint too short"));
-    }
-    let (body, trailer) = bytes.split_at(bytes.len() - 8);
-    let want = u64::from_le_bytes(trailer.try_into().unwrap());
-    if fnv1a(body) != want {
-        return Err(Error::other("checkpoint checksum mismatch (torn write?)"));
-    }
-    let mut r = body;
-    let mut take = |n: usize| -> Result<&[u8]> {
-        if r.len() < n {
-            return Err(Error::other("checkpoint truncated"));
-        }
-        let (a, b) = r.split_at(n);
-        r = b;
-        Ok(a)
-    };
-    if take(4)? != MAGIC {
-        return Err(Error::other("not a TNCK checkpoint"));
-    }
-    let version = u32::from_le_bytes(take(4)?.try_into().unwrap());
-    if version != VERSION {
-        return Err(Error::other(format!("unsupported checkpoint version {version}")));
-    }
-    let n = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-    let mut params = ParamSet::new();
+/// Parse the v1 entry list from a reader positioned past the version.
+fn v1_tensors(r: &mut Reader) -> Result<Vec<(String, Tensor)>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
     for _ in 0..n {
-        let name_len = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-        let name = String::from_utf8(take(name_len)?.to_vec())
-            .map_err(|_| Error::other("bad checkpoint name"))?;
-        let rank = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(u64::from_le_bytes(take(8)?.try_into().unwrap()) as usize);
-        }
+        let name = r.name()?;
+        let shape = r.shape()?;
         let count: usize = shape.iter().product();
-        let raw = take(count * 4)?;
-        let data: Vec<f32> = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        params.set(name, Tensor::new(&shape, data)?);
+        out.push((name, Tensor::new(&shape, r.f32_vec(count)?)?));
+    }
+    Ok(out)
+}
+
+/// Parse a v1 parameter set from bytes.  v2 artifacts (typed entries)
+/// must go through [`artifact_from_bytes`] instead.
+pub fn from_bytes(bytes: &[u8]) -> Result<ParamSet> {
+    let mut r = Reader::open(bytes)?;
+    match r.version {
+        VERSION_V1 => {}
+        VERSION_V2 => {
+            return Err(err(
+                "version 2 checkpoint holds typed ladder entries; load it with \
+                 checkpoint::load_artifact",
+            ))
+        }
+        v => return Err(err(format!("unsupported checkpoint version {v}"))),
+    }
+    let mut params = ParamSet::new();
+    for (name, t) in v1_tensors(&mut r)? {
+        params.set(name, t);
     }
     Ok(params)
 }
 
 /// Save to a file (atomic: write to `.tmp`, then rename).
 pub fn save(params: &ParamSet, path: impl AsRef<Path>) -> Result<()> {
-    let path = path.as_ref();
+    write_atomic(&to_bytes(params)?, path.as_ref())
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<ParamSet> {
+    from_bytes(&read_all(path.as_ref())?)
+}
+
+// ---------------------------------------------------------------------------
+// v2: typed entries + metadata (ladder serving artifacts).
+// ---------------------------------------------------------------------------
+
+/// One typed tensor in a v2 artifact.
+#[derive(Clone, Debug)]
+pub enum Entry {
+    F32(Tensor),
+    /// Int8 weights with their quantization scale, installed verbatim by
+    /// [`crate::infer::Engine::from_entries`] — no re-quantization at load.
+    I8(QMatrix),
+}
+
+impl Entry {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Entry::F32(t) => t.shape(),
+            Entry::I8(q) => q.q.shape(),
+        }
+    }
+
+    /// Scalar element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Entry::F32(t) => t.len(),
+            Entry::I8(q) => q.q.data().len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// On-device payload bytes (f32 = 4/elem; int8 = 1/elem + the scale).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Entry::F32(t) => t.len() * 4,
+            Entry::I8(q) => q.q.data().len() + 4,
+        }
+    }
+}
+
+/// A v2 checkpoint: named typed entries plus a free-form JSON metadata
+/// block (the rank-ladder artifacts store scheme, rank fraction, model
+/// dims and per-group ν(W) diagnostics there, making each file
+/// self-describing).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub meta: Json,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Artifact {
+    pub fn new(meta: Json) -> Artifact {
+        Artifact { meta, entries: BTreeMap::new() }
+    }
+
+    pub fn set(&mut self, name: impl Into<String>, e: Entry) {
+        self.entries.insert(name.into(), e);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| err(format!("artifact has no entry '{name}'")))
+    }
+
+    /// Total on-device weight bytes across entries.
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.payload_bytes()).sum()
+    }
+}
+
+/// Serialize a v2 artifact.  Fails on NaN/Inf f32 data or a non-finite
+/// int8 scale.
+pub fn artifact_to_bytes(a: &Artifact) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION_V2.to_le_bytes());
+    let meta = a.meta.to_string_pretty();
+    buf.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    buf.extend_from_slice(meta.as_bytes());
+    buf.extend_from_slice(&(a.entries.len() as u32).to_le_bytes());
+    for (name, e) in &a.entries {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        match e {
+            Entry::F32(t) => {
+                ensure_finite(name, t.data())?;
+                buf.push(DTYPE_F32);
+                push_shape(&mut buf, t.shape());
+                for v in t.data() {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Entry::I8(q) => {
+                ensure_finite(name, &[q.scale])?;
+                buf.push(DTYPE_I8);
+                push_shape(&mut buf, q.q.shape());
+                buf.extend_from_slice(&q.scale.to_le_bytes());
+                buf.extend_from_slice(bytes_of_i8(q.q.data()));
+            }
+        }
+    }
+    let check = fnv1a(&buf);
+    buf.extend_from_slice(&check.to_le_bytes());
+    Ok(buf)
+}
+
+/// Parse an artifact from bytes — v2 natively, v1 as a backward-compatible
+/// all-f32 artifact with null metadata.
+pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Artifact> {
+    let mut r = Reader::open(bytes)?;
+    match r.version {
+        VERSION_V1 => {
+            let mut a = Artifact::new(Json::Null);
+            for (name, t) in v1_tensors(&mut r)? {
+                a.set(name, Entry::F32(t));
+            }
+            Ok(a)
+        }
+        VERSION_V2 => {
+            let meta_len = r.u32()? as usize;
+            let meta_bytes = r.take(meta_len)?;
+            let meta_text = std::str::from_utf8(meta_bytes)
+                .map_err(|_| err("artifact metadata is not UTF-8"))?;
+            let meta = if meta_text.is_empty() { Json::Null } else { Json::parse(meta_text)? };
+            let n = r.u32()? as usize;
+            let mut a = Artifact::new(meta);
+            for _ in 0..n {
+                let name = r.name()?;
+                let dtype = r.u8()?;
+                let shape = r.shape()?;
+                let count: usize = shape.iter().product();
+                let entry = match dtype {
+                    DTYPE_F32 => Entry::F32(Tensor::new(&shape, r.f32_vec(count)?)?),
+                    DTYPE_I8 => {
+                        let scale = r.f32()?;
+                        let data: Vec<i8> =
+                            r.take(count)?.iter().map(|&b| b as i8).collect();
+                        Entry::I8(QMatrix { q: TensorI8::new(&shape, data)?, scale })
+                    }
+                    d => return Err(err(format!("unknown entry dtype {d} for '{name}'"))),
+                };
+                a.set(name, entry);
+            }
+            Ok(a)
+        }
+        v => Err(err(format!("unsupported checkpoint version {v}"))),
+    }
+}
+
+/// Save a v2 artifact to a file (atomic: write to `.tmp`, then rename).
+pub fn save_artifact(a: &Artifact, path: impl AsRef<Path>) -> Result<()> {
+    write_atomic(&artifact_to_bytes(a)?, path.as_ref())
+}
+
+/// Load a v1 or v2 artifact from a file, verifying the checksum.
+pub fn load_artifact(path: impl AsRef<Path>) -> Result<Artifact> {
+    artifact_from_bytes(&read_all(path.as_ref())?)
+}
+
+// ---------------------------------------------------------------------------
+// Shared low-level plumbing.
+// ---------------------------------------------------------------------------
+
+fn push_shape(buf: &mut Vec<u8>, shape: &[usize]) {
+    buf.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+    for &d in shape {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+}
+
+fn bytes_of_i8(data: &[i8]) -> &[u8] {
+    // i8 and u8 have identical layout; a byte-level reinterpretation is
+    // the only sound way to bulk-copy without a per-element loop.
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) }
+}
+
+fn write_atomic(bytes: &[u8], path: &Path) -> Result<()> {
     let tmp = path.with_extension("tmp");
     {
         let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&to_bytes(params))?;
+        f.write_all(bytes)?;
         f.sync_all()?;
     }
     std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
-/// Load from a file.
-pub fn load(path: impl AsRef<Path>) -> Result<ParamSet> {
+fn read_all(path: &Path) -> Result<Vec<u8>> {
     let mut bytes = Vec::new();
-    std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
-    from_bytes(&bytes)
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    Ok(bytes)
+}
+
+/// Checksum-verified sequential reader over a checkpoint body (the bytes
+/// between the magic and the trailer), positioned just past the version.
+struct Reader<'a> {
+    body: &'a [u8],
+    version: u32,
+}
+
+impl<'a> Reader<'a> {
+    fn open(bytes: &'a [u8]) -> Result<Reader<'a>> {
+        if bytes.len() < 20 {
+            return Err(err("checkpoint too short"));
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        if fnv1a(body) != want {
+            return Err(err("checkpoint checksum mismatch (torn write?)"));
+        }
+        let mut r = Reader { body, version: 0 };
+        if r.take(4)? != MAGIC {
+            return Err(err("not a TNCK checkpoint"));
+        }
+        r.version = r.u32()?;
+        Ok(r)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.body.len() < n {
+            return Err(err("checkpoint truncated"));
+        }
+        let (a, b) = self.body.split_at(n);
+        self.body = b;
+        Ok(a)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        String::from_utf8(self.take(len)?.to_vec()).map_err(|_| err("bad checkpoint name"))
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let rank = self.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u64()? as usize);
+        }
+        Ok(shape)
+    }
+
+    fn f32_vec(&mut self, count: usize) -> Result<Vec<f32>> {
+        Ok(self
+            .take(count * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::prng::Pcg64;
+    use crate::quant::quantize;
 
     fn sample() -> ParamSet {
         let mut rng = Pcg64::seeded(0);
@@ -137,7 +427,7 @@ mod tests {
     #[test]
     fn roundtrip_bytes() {
         let p = sample();
-        let q = from_bytes(&to_bytes(&p)).unwrap();
+        let q = from_bytes(&to_bytes(&p).unwrap()).unwrap();
         assert_eq!(p.len(), q.len());
         for (name, t) in p.iter() {
             assert_eq!(q.get(name).unwrap(), t);
@@ -158,7 +448,7 @@ mod tests {
 
     #[test]
     fn corruption_detected() {
-        let mut bytes = to_bytes(&sample());
+        let mut bytes = to_bytes(&sample()).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xff;
         assert!(from_bytes(&bytes).is_err());
@@ -166,17 +456,115 @@ mod tests {
 
     #[test]
     fn truncation_detected() {
-        let bytes = to_bytes(&sample());
+        let bytes = to_bytes(&sample()).unwrap();
         assert!(from_bytes(&bytes[..bytes.len() - 9]).is_err());
         assert!(from_bytes(&bytes[..10]).is_err());
     }
 
     #[test]
     fn rejects_wrong_magic() {
-        let mut bytes = to_bytes(&sample());
+        let mut bytes = to_bytes(&sample()).unwrap();
         bytes[0] = b'X';
         // checksum still matches if we recompute; easiest corruption path is
         // magic change which breaks the checksum too
         assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn non_finite_rejected_at_save() {
+        for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut p = sample();
+            p.set("fc_b", Tensor::new(&[2], vec![0.0, poison]).unwrap());
+            let e = to_bytes(&p).unwrap_err();
+            assert!(
+                matches!(e, Error::Checkpoint(_)),
+                "expected Error::Checkpoint, got {e:?}"
+            );
+            assert!(e.to_string().contains("fc_b"), "message should name the tensor: {e}");
+            let dir = std::env::temp_dir().join(format!("tnck-nan-{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            assert!(save(&p, dir.join("poisoned.tnck")).is_err());
+            assert!(!dir.join("poisoned.tnck").exists(), "no partial file left behind");
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+
+    fn sample_artifact() -> Artifact {
+        let mut rng = Pcg64::seeded(3);
+        let meta = Json::obj(vec![
+            ("kind", Json::str("ladder-rung")),
+            ("rank_frac", Json::num(0.25)),
+        ]);
+        let mut a = Artifact::new(meta);
+        a.set("rec0_u", Entry::I8(quantize(&Tensor::randn(&[9, 4], 0.7, &mut rng))));
+        a.set("rec0_v", Entry::I8(quantize(&Tensor::randn(&[4, 6], 0.7, &mut rng))));
+        a.set("gru0_b", Entry::F32(Tensor::randn(&[9], 0.1, &mut rng)));
+        a
+    }
+
+    #[test]
+    fn v2_roundtrip_preserves_types_scales_and_meta() {
+        let a = sample_artifact();
+        let b = artifact_from_bytes(&artifact_to_bytes(&a).unwrap()).unwrap();
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.entries.len(), b.entries.len());
+        for (name, e) in &a.entries {
+            match (e, b.get(name).unwrap()) {
+                (Entry::F32(x), Entry::F32(y)) => assert_eq!(x, y),
+                (Entry::I8(x), Entry::I8(y)) => {
+                    assert_eq!(x.q.shape(), y.q.shape());
+                    assert_eq!(x.q.data(), y.q.data());
+                    assert_eq!(x.scale.to_bits(), y.scale.to_bits(), "scale must be bit-exact");
+                }
+                _ => panic!("entry '{name}' changed dtype through the roundtrip"),
+            }
+        }
+        assert_eq!(a.payload_bytes(), b.payload_bytes());
+    }
+
+    #[test]
+    fn v2_file_roundtrip_and_corruption() {
+        let a = sample_artifact();
+        let dir = std::env::temp_dir().join(format!("tnck-v2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rung.tnck");
+        save_artifact(&a, &path).unwrap();
+        assert!(load_artifact(&path).is_ok());
+        let mut bytes = artifact_to_bytes(&a).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        assert!(artifact_from_bytes(&bytes).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn v1_bytes_read_back_as_artifact() {
+        let p = sample();
+        let a = artifact_from_bytes(&to_bytes(&p).unwrap()).unwrap();
+        assert!(a.meta.is_null());
+        assert_eq!(a.entries.len(), p.len());
+        for (name, t) in p.iter() {
+            match a.get(name).unwrap() {
+                Entry::F32(x) => assert_eq!(x, t),
+                Entry::I8(_) => panic!("v1 entries must read back as f32"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rejected_by_paramset_loader() {
+        let bytes = artifact_to_bytes(&sample_artifact()).unwrap();
+        let e = from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("load_artifact"), "should point at the right API: {e}");
+    }
+
+    #[test]
+    fn non_finite_scale_rejected() {
+        let mut a = sample_artifact();
+        a.set(
+            "bad_w",
+            Entry::I8(QMatrix { q: TensorI8::new(&[1, 1], vec![1]).unwrap(), scale: f32::NAN }),
+        );
+        assert!(artifact_to_bytes(&a).is_err());
     }
 }

@@ -23,6 +23,18 @@
 //!                                arrivals over concurrent decode sessions
 //!                                  --pool 4 --rate 8 --utts 32 --chunk 16
 //!                                  --precision int8|f32 [--load ckpt]
+//!                                with --ladder DIR: adaptive-fidelity
+//!                                serving over a built rank ladder, with a
+//!                                synthetic load ramp and a per-tier
+//!                                latency/occupancy report
+//!                                  --ladder DIR --ramp-utts N --ramp-rate F
+//!                                  --target-p99-ms F
+//!   ladder-build                 offline rank-ladder build: truncated SVD
+//!                                per group at each rank fraction, int8
+//!                                quantization, one TNCK-v2 artifact per
+//!                                rung + ladder.json
+//!                                  --out DIR --fracs 0.75,0.5,0.25
+//!                                  [--load ckpt]
 //! ```
 //!
 //! Every flag becomes a config key (`--lam-rec 0.1` → `cli.lam-rec`), and
@@ -39,14 +51,21 @@ pub struct Cli {
     pub cfg: Config,
 }
 
-pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm|stream-serve> [args]
+pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm|stream-serve|ladder-build> [args]
+  repro info                      list artifacts + configs from the manifest
   repro experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all>
   repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
+              [--load CKPT] [--save CKPT]
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N]
   repro bench-gemm [--reps N]
   repro stream-serve [--pool N] [--rate F] [--utts N] [--chunk N] [--precision int8|f32]
                      [--rank-frac F] [--time-batch N] [--scheme S] [--load CKPT] [--seed N]
+  repro stream-serve --ladder DIR [--pool N] [--utts N] [--chunk N] [--rate F]
+                     [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N]
+                     (adaptive-fidelity serving over a built rank ladder)
+  repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]
+                     (offline SVD-truncate + int8-quantize, one artifact per rung)
 common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";
 
 /// Parse argv (excluding argv[0]).

@@ -1,0 +1,326 @@
+//! Admission/fidelity controller for adaptive-fidelity serving
+//! (DESIGN.md §8).
+//!
+//! The rank ladder turns the paper's Figure-1 accuracy-vs-parameters
+//! curve into a runtime knob: tier 0 is the highest-rank (highest
+//! fidelity) variant, higher tiers are progressively cheaper SVD
+//! truncations.  The [`FidelityController`] maps live serving telemetry
+//! to the tier **new** streams are admitted at — already-open sessions
+//! are never migrated (a mid-utterance hidden state is meaningless under
+//! different weights).
+//!
+//! Control rule (hysteresis; see the DESIGN.md §8 table):
+//!
+//! * **downshift pressure** — the currently-routed tier's windowed p99
+//!   session latency breaches `target_p99`, *or* its pool occupancy is at
+//!   or above `high_water`.  After `breach_ticks` consecutive pressured
+//!   observations the controller routes new streams one tier down the
+//!   ladder.
+//! * **upshift clearance** — occupancy at or below `low_water` (the load
+//!   has drained) and no latency breach.  After `clear_ticks` consecutive
+//!   clear observations the controller moves one tier back up.
+//! * anything in between is the dead band: both dwell counters reset, the
+//!   tier holds.  `low_water < high_water` plus the two dwell counts is
+//!   what prevents flapping when load sits near a threshold.
+//!
+//! The controller is deliberately pure state-machine — latencies and
+//! occupancy are *injected* ([`FidelityController::record_latency`] /
+//! [`FidelityController::observe`]), so unit tests drive it without a
+//! clock and [`crate::serve::ladder_serve`] drives it from measured
+//! wall-clock serving.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+
+/// Tuning for the [`FidelityController`].
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// windowed-p99 session latency (seconds) above which the routed
+    /// tier counts as pressured
+    pub target_p99: f64,
+    /// pool occupancy fraction at/above which the routed tier counts as
+    /// pressured (a leading indicator: a full pool queues admissions)
+    pub high_water: f64,
+    /// occupancy fraction at/below which the load counts as drained
+    pub low_water: f64,
+    /// consecutive pressured observations before a downshift
+    pub breach_ticks: usize,
+    /// consecutive clear observations before an upshift
+    pub clear_ticks: usize,
+    /// rolling latency samples kept per tier for the p99 estimate
+    pub window: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            target_p99: 0.25,
+            high_water: 0.95,
+            low_water: 0.5,
+            breach_ticks: 3,
+            clear_ticks: 6,
+            window: 64,
+        }
+    }
+}
+
+/// One fidelity shift, for the serving report.
+#[derive(Clone, Copy, Debug)]
+pub struct ShiftEvent {
+    /// simulated clock at the shift
+    pub clock: f64,
+    /// tier new streams are routed to from now on
+    pub tier: usize,
+    /// true = downshift (lower fidelity), false = upshift
+    pub down: bool,
+}
+
+/// Routes new streams to a fidelity tier based on injected telemetry.
+#[derive(Debug)]
+pub struct FidelityController {
+    cfg: ControllerConfig,
+    tiers: usize,
+    current: usize,
+    /// rolling latency window per tier
+    windows: Vec<VecDeque<f64>>,
+    pressure: usize,
+    clear: usize,
+    pub downshifts: u64,
+    pub upshifts: u64,
+    shifts: Vec<ShiftEvent>,
+}
+
+impl FidelityController {
+    /// `tiers` is the ladder depth (tier 0 = highest fidelity).
+    pub fn new(tiers: usize, cfg: ControllerConfig) -> Result<FidelityController> {
+        if tiers == 0 {
+            return Err(Error::Config("controller needs at least one tier".into()));
+        }
+        if !(cfg.low_water < cfg.high_water && cfg.high_water <= 1.0 && cfg.low_water >= 0.0) {
+            return Err(Error::Config(format!(
+                "controller water marks must satisfy 0 <= low {} < high {} <= 1",
+                cfg.low_water, cfg.high_water
+            )));
+        }
+        if cfg.target_p99 <= 0.0 || cfg.breach_ticks == 0 || cfg.clear_ticks == 0 || cfg.window == 0
+        {
+            return Err(Error::Config(
+                "controller target_p99, dwell ticks and window must be positive".into(),
+            ));
+        }
+        Ok(FidelityController {
+            windows: (0..tiers).map(|_| VecDeque::with_capacity(cfg.window)).collect(),
+            cfg,
+            tiers,
+            current: 0,
+            pressure: 0,
+            clear: 0,
+            downshifts: 0,
+            upshifts: 0,
+            shifts: Vec::new(),
+        })
+    }
+
+    /// Tier new streams should be admitted at right now.
+    pub fn tier(&self) -> usize {
+        self.current
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.tiers
+    }
+
+    /// Record one completed session's latency at the tier that served it.
+    pub fn record_latency(&mut self, tier: usize, secs: f64) {
+        let w = &mut self.windows[tier];
+        if w.len() == self.cfg.window {
+            w.pop_front();
+        }
+        w.push_back(secs);
+    }
+
+    /// Nearest-rank p99 over the tier's rolling window (None if empty).
+    pub fn windowed_p99(&self, tier: usize) -> Option<f64> {
+        let w = &self.windows[tier];
+        if w.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = w.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((v.len() as f64 - 1.0) * 0.99).round() as usize;
+        Some(v[idx.min(v.len() - 1)])
+    }
+
+    /// One control tick: evaluate the routed tier against the latency
+    /// target and the water marks, advance the hysteresis counters, and
+    /// shift at most one rung.  `occupancy_frac` is the routed tier's
+    /// pool occupancy (0 when the server is idle).  Returns the shift if
+    /// one happened.
+    pub fn observe(&mut self, clock: f64, occupancy_frac: f64) -> Option<ShiftEvent> {
+        let p99 = self.windowed_p99(self.current);
+        let breached = p99.is_some_and(|p| p > self.cfg.target_p99);
+        let pressured = breached || occupancy_frac >= self.cfg.high_water;
+        let drained = occupancy_frac <= self.cfg.low_water;
+        if pressured {
+            self.clear = 0;
+            self.pressure = self.pressure.saturating_add(1);
+            if self.pressure >= self.cfg.breach_ticks && self.current + 1 < self.tiers {
+                self.pressure = 0;
+                self.current += 1;
+                self.downshifts += 1;
+                // the lower tier's history predates this overload; let it
+                // earn fresh samples instead of inheriting stale ones
+                self.windows[self.current].clear();
+                let ev = ShiftEvent { clock, tier: self.current, down: true };
+                self.shifts.push(ev);
+                return Some(ev);
+            }
+        } else if drained {
+            self.pressure = 0;
+            self.clear = self.clear.saturating_add(1);
+            if self.clear >= self.cfg.clear_ticks && self.current > 0 {
+                self.clear = 0;
+                self.current -= 1;
+                self.upshifts += 1;
+                // stale breached samples from the overload era must not
+                // immediately re-trigger a downshift
+                self.windows[self.current].clear();
+                let ev = ShiftEvent { clock, tier: self.current, down: false };
+                self.shifts.push(ev);
+                return Some(ev);
+            }
+        } else {
+            // dead band: hold, reset both dwell counters
+            self.pressure = 0;
+            self.clear = 0;
+        }
+        None
+    }
+
+    /// All shifts so far, in order.
+    pub fn shifts(&self) -> &[ShiftEvent] {
+        &self.shifts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            target_p99: 0.1,
+            high_water: 0.9,
+            low_water: 0.4,
+            breach_ticks: 3,
+            clear_ticks: 4,
+            window: 16,
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(FidelityController::new(0, cfg()).is_err());
+        let mut c = cfg();
+        c.low_water = 0.95; // >= high_water
+        assert!(FidelityController::new(2, c).is_err());
+        let mut c = cfg();
+        c.breach_ticks = 0;
+        assert!(FidelityController::new(2, c).is_err());
+    }
+
+    #[test]
+    fn occupancy_breach_downshifts_after_dwell() {
+        let mut ctl = FidelityController::new(3, cfg()).unwrap();
+        assert_eq!(ctl.tier(), 0);
+        assert!(ctl.observe(0.0, 1.0).is_none());
+        assert!(ctl.observe(0.1, 1.0).is_none());
+        let ev = ctl.observe(0.2, 1.0).expect("third pressured tick shifts");
+        assert!(ev.down);
+        assert_eq!(ctl.tier(), 1);
+        // sustained pressure cascades one rung at a time
+        for _ in 0..3 {
+            ctl.observe(0.3, 1.0);
+        }
+        assert_eq!(ctl.tier(), 2);
+        // bottom of the ladder: pressure can't shift further
+        for _ in 0..10 {
+            ctl.observe(0.4, 1.0);
+        }
+        assert_eq!(ctl.tier(), 2);
+        assert_eq!(ctl.downshifts, 2);
+    }
+
+    #[test]
+    fn latency_breach_downshifts_even_at_low_occupancy() {
+        let mut ctl = FidelityController::new(2, cfg()).unwrap();
+        for _ in 0..8 {
+            ctl.record_latency(0, 0.5); // 5x over target
+        }
+        // mid-band occupancy so only the p99 breach applies
+        for _ in 0..3 {
+            ctl.observe(0.0, 0.6);
+        }
+        assert_eq!(ctl.tier(), 1);
+        assert_eq!(ctl.downshifts, 1);
+    }
+
+    #[test]
+    fn upshifts_when_load_drains_and_clears_stale_window() {
+        let mut ctl = FidelityController::new(2, cfg()).unwrap();
+        // overload: breached latencies on tier 0, full pool -> downshift
+        for _ in 0..8 {
+            ctl.record_latency(0, 1.0);
+        }
+        for _ in 0..3 {
+            ctl.observe(0.0, 1.0);
+        }
+        assert_eq!(ctl.tier(), 1);
+        // drain: clear ticks accumulate, then upshift
+        for i in 0..3 {
+            assert!(ctl.observe(1.0 + i as f64, 0.2).is_none());
+        }
+        let ev = ctl.observe(5.0, 0.2).expect("fourth clear tick upshifts");
+        assert!(!ev.down);
+        assert_eq!(ctl.tier(), 0);
+        assert_eq!(ctl.upshifts, 1);
+        // tier 0's stale breached window was cleared on the way up, so
+        // calm traffic does not immediately re-downshift
+        for _ in 0..10 {
+            assert!(ctl.observe(6.0, 0.2).is_none());
+        }
+        assert_eq!(ctl.tier(), 0);
+        assert_eq!(ctl.shifts().len(), 2);
+    }
+
+    #[test]
+    fn dead_band_and_alternation_never_shift() {
+        let mut ctl = FidelityController::new(2, cfg()).unwrap();
+        // mid-band occupancy: neither pressured nor drained
+        for _ in 0..50 {
+            assert!(ctl.observe(0.0, 0.6).is_none());
+        }
+        // alternating pressure/drain: dwell counters reset each flip
+        for i in 0..50 {
+            let occ = if i % 2 == 0 { 1.0 } else { 0.0 };
+            assert!(ctl.observe(0.0, occ).is_none(), "alternation must not flap");
+        }
+        assert_eq!(ctl.tier(), 0);
+        assert_eq!(ctl.downshifts + ctl.upshifts, 0);
+    }
+
+    #[test]
+    fn rolling_window_evicts_old_samples() {
+        let mut ctl = FidelityController::new(1, cfg()).unwrap();
+        for _ in 0..16 {
+            ctl.record_latency(0, 1.0);
+        }
+        assert!(ctl.windowed_p99(0).unwrap() > 0.9);
+        // refill with fast samples; old breached ones age out
+        for _ in 0..16 {
+            ctl.record_latency(0, 0.01);
+        }
+        assert!(ctl.windowed_p99(0).unwrap() < 0.1);
+    }
+}

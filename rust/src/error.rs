@@ -19,6 +19,8 @@ pub enum Error {
 
     Manifest(String),
 
+    Checkpoint(String),
+
     Shape(String),
 
     Linalg(String),
@@ -37,6 +39,7 @@ impl fmt::Display for Error {
             Error::Json { pos, msg } => write!(f, "json parse error at byte {pos}: {msg}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Shape(m) => write!(f, "shape error: {m}"),
             Error::Linalg(m) => write!(f, "linalg error: {m}"),
             Error::Train(m) => write!(f, "train error: {m}"),
@@ -85,6 +88,10 @@ mod tests {
     fn display_formats_variants() {
         assert_eq!(Error::other("boom").to_string(), "boom");
         assert_eq!(Error::Config("bad flag".into()).to_string(), "config error: bad flag");
+        assert_eq!(
+            Error::Checkpoint("poisoned".into()).to_string(),
+            "checkpoint error: poisoned"
+        );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
         assert!(io.to_string().starts_with("io error:"));
     }

@@ -25,6 +25,9 @@
 //! Per-component timing feeds Table 2's "% time spent in acoustic model"
 //! and the latency experiments.
 
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::checkpoint::Entry;
 use crate::data::labels_to_text;
 use crate::decoder;
 use crate::error::{Error, Result};
@@ -53,6 +56,15 @@ impl QDense {
         match p {
             Precision::F32 => QDense::F32(w.clone()),
             Precision::Int8 => QDense::I8(quantize(w)),
+        }
+    }
+
+    /// From a typed ladder-artifact entry: int8 entries install their
+    /// stored `QMatrix` verbatim (scale included), f32 entries stay f32.
+    fn from_entry(e: &Entry) -> QDense {
+        match e {
+            Entry::F32(t) => QDense::F32(t.clone()),
+            Entry::I8(q) => QDense::I8(q.clone()),
         }
     }
 
@@ -135,6 +147,17 @@ impl Op {
         }
     }
 
+    fn from_entries(entries: &BTreeMap<String, Entry>, base: &str) -> Result<Op> {
+        if entries.contains_key(&format!("{base}_u")) {
+            Ok(Op::LowRank {
+                u: QDense::from_entry(entry(entries, &format!("{base}_u"))?),
+                v: QDense::from_entry(entry(entries, &format!("{base}_v"))?),
+            })
+        } else {
+            Ok(Op::Dense(QDense::from_entry(entry(entries, &format!("{base}_w"))?)))
+        }
+    }
+
     fn apply(&self, x: &Tensor) -> Tensor {
         match self {
             Op::Dense(w) => w.apply(x),
@@ -181,6 +204,32 @@ impl Op {
             }
         }
     }
+}
+
+fn entry<'a>(entries: &'a BTreeMap<String, Entry>, name: &str) -> Result<&'a Entry> {
+    entries
+        .get(name)
+        .ok_or_else(|| Error::Checkpoint(format!("ladder artifact missing entry '{name}'")))
+}
+
+fn bias_entry(entries: &BTreeMap<String, Entry>, name: &str) -> Result<Vec<f32>> {
+    match entry(entries, name)? {
+        Entry::F32(t) => Ok(t.data().to_vec()),
+        Entry::I8(_) => Err(Error::Checkpoint(format!(
+            "bias '{name}' must be stored f32 (biases and gate math stay f32 on the embedded path)"
+        ))),
+    }
+}
+
+/// Does `op` map an `inp`-dim input to an `out`-dim output (with
+/// consistent inner rank if factored)?  Shape gate for untrusted
+/// artifact entries.
+fn op_matches(op: &Op, out: usize, inp: usize) -> bool {
+    let inner_ok = match op {
+        Op::Dense(_) => true,
+        Op::LowRank { u, v } => u.in_dim() == v.out_dim(),
+    };
+    inner_ok && op.out_dim() == out && op.in_dim() == inp
 }
 
 struct ConvLayer {
@@ -317,6 +366,131 @@ impl Engine {
             feat_dim: dims.feat_dim,
             total_stride: dims.total_stride,
             split_scheme: split,
+        })
+    }
+
+    /// Build directly from a ladder artifact's typed entries
+    /// ([`crate::registry`], DESIGN.md §8): int8 weight entries install
+    /// their stored quantized matrices verbatim — **no SVD and no
+    /// re-quantization at load** — while biases stay f32.
+    ///
+    /// Decoding is bit-identical to an engine built by
+    /// [`Engine::from_params`] at [`Precision::Int8`] from the same
+    /// factored f32 weights, because `ladder-build` quantized those exact
+    /// tensors with the same [`crate::quant::quantize`] call that
+    /// `from_params` uses, and the artifact round-trips the int8 data and
+    /// f32 scales exactly (`rust/tests/ladder.rs`).
+    pub fn from_entries(
+        dims: &ModelDims,
+        entries: &BTreeMap<String, Entry>,
+        time_batch: usize,
+    ) -> Result<Engine> {
+        // every artifact entry must be consumed by the dims-derived layer
+        // map — an entry `dims` doesn't name means the checkpoint holds
+        // more network than these dims describe, and building anyway
+        // would silently drop layers and decode garbage
+        let mut expected: BTreeSet<String> = BTreeSet::new();
+        {
+            // rec/nonrec/fc may be factored (u, v) or dense (w); conv and
+            // the output projection are always dense (paper §3.2)
+            let mut expect_op = |base: &str| {
+                if entries.contains_key(&format!("{base}_u")) {
+                    expected.insert(format!("{base}_u"));
+                    expected.insert(format!("{base}_v"));
+                } else {
+                    expected.insert(format!("{base}_w"));
+                }
+            };
+            for i in 0..dims.gru_dims.len() {
+                expect_op(&format!("rec{i}"));
+                expect_op(&format!("nonrec{i}"));
+            }
+            expect_op("fc");
+        }
+        for i in 0..dims.conv.len() {
+            expected.insert(format!("conv{i}_w"));
+            expected.insert(format!("conv{i}_b"));
+        }
+        for i in 0..dims.gru_dims.len() {
+            expected.insert(format!("gru{i}_b"));
+        }
+        expected.insert("fc_b".into());
+        expected.insert("out_w".into());
+        expected.insert("out_b".into());
+        if let Some(extra) = entries.keys().find(|k| !expected.contains(*k)) {
+            return Err(Error::Checkpoint(format!(
+                "artifact entry '{extra}' is not named by the given model dims \
+                 (layer-count mismatch between checkpoint and dims?)"
+            )));
+        }
+
+        let any_i8 = entries.values().any(|e| matches!(e, Entry::I8(_)));
+        let mut conv = Vec::new();
+        for (i, c) in dims.conv.iter().enumerate() {
+            conv.push(ConvLayer {
+                context: c.context,
+                op: Op::Dense(QDense::from_entry(entry(entries, &format!("conv{i}_w"))?)),
+                bias: bias_entry(entries, &format!("conv{i}_b"))?,
+            });
+        }
+        let mut grus = Vec::new();
+        for (i, &h) in dims.gru_dims.iter().enumerate() {
+            grus.push(GruLayer {
+                hidden: h,
+                rec: Op::from_entries(entries, &format!("rec{i}"))?,
+                nonrec: Op::from_entries(entries, &format!("nonrec{i}"))?,
+                bias: bias_entry(entries, &format!("gru{i}_b"))?,
+            });
+        }
+        let fc = Op::from_entries(entries, "fc")?;
+        let fc_bias = bias_entry(entries, "fc_b")?;
+        let out = Op::Dense(QDense::from_entry(entry(entries, "out_w")?));
+        let out_bias = bias_entry(entries, "out_b")?;
+
+        // shape validation: artifacts are untrusted input — a
+        // mis-dimensioned entry must fail here with a clean error, not
+        // panic inside a GEMM contraction mid-serve
+        let shape_err = |what: &str| {
+            Err(Error::Checkpoint(format!(
+                "artifact entry shapes for {what} do not match the given model dims"
+            )))
+        };
+        let mut prev = dims.feat_dim;
+        for (i, (c, layer)) in dims.conv.iter().zip(&conv).enumerate() {
+            if !op_matches(&layer.op, c.dim, c.context * prev) || layer.bias.len() != c.dim {
+                return shape_err(&format!("conv{i}"));
+            }
+            prev = c.dim;
+        }
+        for (i, (&h, g)) in dims.gru_dims.iter().zip(&grus).enumerate() {
+            if !op_matches(&g.rec, 3 * h, h)
+                || !op_matches(&g.nonrec, 3 * h, prev)
+                || g.bias.len() != 3 * h
+            {
+                return shape_err(&format!("gru layer {i}"));
+            }
+            prev = h;
+        }
+        if !op_matches(&fc, dims.fc_dim, prev) || fc_bias.len() != dims.fc_dim {
+            return shape_err("fc");
+        }
+        if !op_matches(&out, dims.vocab, dims.fc_dim) || out_bias.len() != dims.vocab {
+            return shape_err("the output projection");
+        }
+
+        Ok(Engine {
+            precision: if any_i8 { Precision::Int8 } else { Precision::F32 },
+            time_batch: time_batch.max(1),
+            conv,
+            grus,
+            fc,
+            fc_bias,
+            out,
+            out_bias,
+            vocab: dims.vocab,
+            feat_dim: dims.feat_dim,
+            total_stride: dims.total_stride,
+            split_scheme: false,
         })
     }
 
@@ -768,6 +942,80 @@ mod tests {
         // factored model does fewer MACs per step iff rank < min(m,n)/2;
         // here rank = min => more MACs, but bytes reflect the factors
         assert!(ef.macs_per_step() > 0 && ed.macs_per_step() > 0);
+    }
+
+    #[test]
+    fn engine_from_entries_bit_identical_to_from_params() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 12);
+        // artifact-style entries: weights quantized once at build, biases f32
+        let mut entries = BTreeMap::new();
+        for (name, t) in p.iter() {
+            if name.ends_with("_b") {
+                entries.insert(name.clone(), Entry::F32(t.clone()));
+            } else {
+                entries.insert(name.clone(), Entry::I8(quantize(t)));
+            }
+        }
+        let ea = Engine::from_entries(&dims, &entries, 4).unwrap();
+        let ep = Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap();
+        assert_eq!(ea.precision, Precision::Int8);
+        assert_eq!(ea.model_bytes(), ep.model_bytes());
+        assert_eq!(ea.macs_per_step(), ep.macs_per_step());
+        let mut rng = Pcg64::seeded(13);
+        let feats = Tensor::randn(&[24, 8], 0.7, &mut rng);
+        let mut b1 = Breakdown::default();
+        let mut b2 = Breakdown::default();
+        let (ta, ra) = ea.transcribe(&feats, &mut b1).unwrap();
+        let (tb, rb) = ep.transcribe(&feats, &mut b2).unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(ra, rb, "entry-built engine must decode bit-identically");
+    }
+
+    #[test]
+    fn from_entries_rejects_missing_and_i8_bias() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 14);
+        let mut entries = BTreeMap::new();
+        for (name, t) in p.iter() {
+            entries.insert(name.clone(), Entry::F32(t.clone()));
+        }
+        entries.remove("fc_b");
+        assert!(Engine::from_entries(&dims, &entries, 4).is_err());
+        entries.insert("fc_b".into(), Entry::I8(quantize(&Tensor::zeros(&[dims.fc_dim]))));
+        assert!(Engine::from_entries(&dims, &entries, 4).is_err());
+    }
+
+    #[test]
+    fn from_entries_rejects_mis_dimensioned_entries() {
+        // same layer *counts* but different widths than dims: must be a
+        // clean Error::Checkpoint at construction, not a GEMM panic later
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 17);
+        let mut wide = tiny_dims();
+        wide.fc_dim = dims.fc_dim + 2;
+        let mut entries = BTreeMap::new();
+        for (name, t) in p.iter() {
+            entries.insert(name.clone(), Entry::F32(t.clone()));
+        }
+        let e = Engine::from_entries(&wide, &entries, 4).unwrap_err();
+        assert!(matches!(e, Error::Checkpoint(_)), "expected checkpoint error, got {e:?}");
+    }
+
+    #[test]
+    fn from_entries_rejects_layers_beyond_dims() {
+        // a checkpoint with one more GRU layer than `dims` describes must
+        // fail loudly instead of silently dropping the extra layer
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 15);
+        let mut entries = BTreeMap::new();
+        for (name, t) in p.iter() {
+            entries.insert(name.clone(), Entry::F32(t.clone()));
+        }
+        let mut rng = Pcg64::seeded(16);
+        entries.insert("rec2_w".into(), Entry::F32(Tensor::glorot(9, 3, &mut rng)));
+        let e = Engine::from_entries(&dims, &entries, 4).unwrap_err();
+        assert!(e.to_string().contains("rec2_w"), "should name the orphan entry: {e}");
     }
 
     #[test]

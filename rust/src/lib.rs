@@ -7,8 +7,10 @@
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** — training orchestrator (two-stage trace-norm
 //!   scheme, SVD warmstart), the multi-stream serving engine
-//!   ([`stream`]/[`serve`]), and the pure-Rust embedded int8 inference
-//!   engine with the reproduced "farm" low-batch GEMM kernels.
+//!   ([`stream`]/[`serve`]) with its rank-ladder model registry and
+//!   adaptive-fidelity controller ([`registry`]/[`controller`]), and the
+//!   pure-Rust embedded int8 inference engine with the reproduced "farm"
+//!   low-batch GEMM kernels.
 //! * **L2/L1 (python/, build-time only)** — the DS2-style GRU acoustic
 //!   model and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed here through the PJRT CPU client ([`runtime`]).
@@ -20,6 +22,7 @@
 pub mod checkpoint;
 pub mod cli;
 pub mod configx;
+pub mod controller;
 pub mod data;
 pub mod decoder;
 pub mod devicesim;
@@ -35,6 +38,7 @@ pub mod model;
 pub mod prng;
 pub mod proplite;
 pub mod quant;
+pub mod registry;
 pub mod runtime;
 pub mod serve;
 pub mod stream;

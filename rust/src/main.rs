@@ -4,15 +4,18 @@
 //! lifting lives in the library crate; this binary wires config + CLI into
 //! the experiment harness, trainers and the embedded engine.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use tracenorm::cli::{self, Cli, USAGE};
+use tracenorm::controller::ControllerConfig;
 use tracenorm::data::{Batcher, CorpusSpec, Dataset};
 use tracenorm::error::Result;
 use tracenorm::experiments;
 use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::registry::{ladder_build, Registry};
 use tracenorm::runtime::Runtime;
-use tracenorm::serve::{stream_serve, StreamServeConfig};
+use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
 use tracenorm::stream::{demo_dims, synthetic_params};
 use tracenorm::train::{
     eval_name, two_stage, Evaluator, Stage2Lr, TrainOpts, Trainer,
@@ -50,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
             experiments::kernelsx::fig6(&mut ctx)
         }
         "stream-serve" => stream_serve_cmd(&cli),
+        "ladder-build" => ladder_build_cmd(&cli),
         other => Err(tracenorm::Error::Config(format!("unknown subcommand '{other}'"))),
     }
 }
@@ -232,9 +236,135 @@ fn transcribe_cmd(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `ladder-build`: the offline rank-ladder pass — per-group truncated
+/// SVD at each rank fraction, int8 quantization, one self-describing
+/// TNCK-v2 artifact per rung plus `ladder.json` (DESIGN.md §8).  Runs
+/// fully offline: weights come from `--load` or, for demos and CI
+/// smoke, a synthetic full-rank model on the `wsj_mini` demo dims.
+fn ladder_build_cmd(cli: &Cli) -> Result<()> {
+    let out = cli.flag_str("out", "ladder");
+    let seed = cli.flag_usize("seed", 17) as u64;
+    let fracs_flag = cli.flag_str("fracs", "0.75,0.5,0.25");
+    let fracs = fracs_flag
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<f64>().map_err(|_| {
+                tracenorm::Error::Config(format!("bad --fracs entry '{s}' (want e.g. 0.5,0.25)"))
+            })
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    let dims = demo_dims();
+    let params = match cli.cfg.raw("load") {
+        Some(path) => {
+            println!("loading trained weights from checkpoint {path} (wsj_mini dims assumed)");
+            tracenorm::checkpoint::load(path)?
+        }
+        None => {
+            println!("using synthetic full-rank weights — structure is real, accuracy is not");
+            synthetic_params(&dims, 1.0, seed)
+        }
+    };
+    let rungs = ladder_build(&params, &dims, &fracs, Path::new(&out))?;
+    println!("ladder written to {out}/ ({} rungs):", rungs.len());
+    for (tier, r) in rungs.iter().enumerate() {
+        println!(
+            "  tier {tier}  {}  rank_frac {:.3}  params {}  weights {} KB",
+            r.tag,
+            r.rank_frac,
+            r.params,
+            r.bytes / 1024
+        );
+        for (base, nu) in &r.nu {
+            println!("      nu({base}) = {nu:.3}");
+        }
+    }
+    println!("serve it with: repro stream-serve --ladder {out}");
+    Ok(())
+}
+
+/// `stream-serve --ladder DIR`: adaptive-fidelity serving over a built
+/// rank ladder.  A synthetic load ramp (the first `--ramp-utts` sessions
+/// arrive at `--ramp-rate`) drives the controller down the ladder and
+/// back up; the report is per-tier.
+fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
+    // precision, weights and scheme are baked into the ladder artifacts;
+    // silently ignoring these flags would serve something other than
+    // what the command line claims
+    for flag in ["precision", "load", "rank-frac", "scheme"] {
+        if cli.cfg.raw(flag).is_some() {
+            return Err(tracenorm::Error::Config(format!(
+                "--{flag} does not apply with --ladder (the ladder artifacts fix it); \
+                 rebuild the ladder instead"
+            )));
+        }
+    }
+    let seed = cli.flag_usize("seed", 17) as u64;
+    let n = cli.flag_usize("utts", 32);
+    let ramp_utts = cli.flag_usize("ramp-utts", n / 2).min(n);
+    let reg = Registry::load(Path::new(dir), cli.flag_usize("time-batch", 4))?;
+    println!("registry {dir}: {} tiers", reg.num_tiers());
+    for v in reg.variants() {
+        println!(
+            "  {}  rank_frac {:.3}  params {}  weights {} KB",
+            v.info.tag,
+            v.info.rank_frac,
+            v.info.params,
+            v.info.bytes / 1024
+        );
+    }
+    let cfg = LadderServeConfig {
+        base_rate: cli.flag_f64("rate", 4.0),
+        ramp_rate: cli.flag_f64("ramp-rate", 1e5),
+        ramp_range: (0, ramp_utts),
+        pool_size: cli.flag_usize("pool", 4),
+        chunk_frames: cli.flag_usize("chunk", 16),
+        seed,
+        controller: ControllerConfig {
+            target_p99: cli.flag_f64("target-p99-ms", 250.0) / 1e3,
+            ..ControllerConfig::default()
+        },
+    };
+    let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
+    let r = ladder_serve(&reg, &data.test, &cfg)?;
+
+    println!(
+        "\n{} sessions ({} ramped) in {:.2} s simulated span ({:.2} s engine-busy) -> {:.1} sessions/s",
+        r.sessions, ramp_utts, r.span_secs, r.busy_secs, r.throughput
+    );
+    println!("per-tier report:");
+    for t in &r.tiers {
+        println!(
+            "  tier {}  {}  rank {:.3}  sessions {:>3}  p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
+            t.tier,
+            t.tag,
+            t.rank_frac,
+            t.sessions,
+            t.latency.p50 * 1e3,
+            t.latency.p95 * 1e3,
+            t.latency.p99 * 1e3,
+            t.occupancy.mean()
+        );
+    }
+    println!("fidelity shifts: {} down, {} up", r.downshifts, r.upshifts);
+    for s in &r.shifts {
+        println!(
+            "  t={:8.3} s  -> tier {} ({})",
+            s.clock,
+            s.tier,
+            if s.down { "downshift" } else { "upshift" }
+        );
+    }
+    Ok(())
+}
+
 /// `stream-serve`: the multi-stream pool serving demo — runs fully
 /// offline (synthetic corpus + synthetic or checkpointed weights).
+/// With `--ladder DIR` it becomes the adaptive-fidelity path instead.
 fn stream_serve_cmd(cli: &Cli) -> Result<()> {
+    if let Some(dir) = cli.cfg.raw("ladder") {
+        let dir = dir.to_string();
+        return ladder_serve_cmd(cli, &dir);
+    }
     let precision = match cli.flag_str("precision", "int8").as_str() {
         "f32" => Precision::F32,
         _ => Precision::Int8,

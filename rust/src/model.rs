@@ -244,6 +244,58 @@ pub fn warmstart(stage1: &ParamSet, target: &ArtifactSpec, seed: u64) -> Result<
     Ok(out)
 }
 
+/// Truncated-SVD factorization of every compressible group at a fixed
+/// fraction of full rank: each group's dense matrix (materializing
+/// `U·V` if the source is already factored) is truncated at
+/// `r = clamp(ceil(rank_frac · min(m,n)), 1, min(m,n))` and replaced by
+/// balanced factors `{base}_u`/`{base}_v`; everything else is copied
+/// verbatim.  This is the per-rung transform of the offline
+/// `ladder-build` pass ([`crate::registry`], DESIGN.md §8) — the same
+/// truncate-and-balance rule [`warmstart`] applies, but driven by an
+/// explicit rank fraction instead of a target artifact's shapes.
+pub fn truncate_groups(params: &ParamSet, rank_frac: f64) -> Result<ParamSet> {
+    Ok(truncate_groups_diag(params, rank_frac)?.0)
+}
+
+/// [`truncate_groups`] plus per-group ν(W) of the *truncated* matrices,
+/// computed from the singular values the truncation already holds (the
+/// truncated spectrum is exactly `s[..r]` padded with zeros) — no second
+/// SVD.  The ladder build stores these ν values in each rung's metadata.
+pub fn truncate_groups_diag(
+    params: &ParamSet,
+    rank_frac: f64,
+) -> Result<(ParamSet, Vec<(String, f32)>)> {
+    if !(rank_frac > 0.0 && rank_frac <= 1.0) {
+        return Err(Error::Config(format!("rank_frac {rank_frac} not in (0, 1]")));
+    }
+    let bases = group_bases(params);
+    let mut out = ParamSet::new();
+    for (name, t) in params.iter() {
+        let in_group = bases.iter().any(|b| {
+            name == &format!("{b}_u") || name == &format!("{b}_v") || name == &format!("{b}_w")
+        });
+        if !in_group {
+            out.set(name.clone(), t.clone());
+        }
+    }
+    let mut nu = Vec::with_capacity(bases.len());
+    for base in &bases {
+        let w = group_matrix(params, base)?;
+        let full = w.rows().min(w.cols());
+        let r = ((full as f64 * rank_frac).ceil() as usize).clamp(1, full);
+        let svd = linalg::svd(&w)?;
+        let mut truncated_s = svd.s.clone();
+        for s in truncated_s.iter_mut().skip(r) {
+            *s = 0.0;
+        }
+        nu.push((base.clone(), linalg::nu_from_singular_values(&truncated_s)?));
+        let (u, v) = svd.balanced_factors(r);
+        out.set(format!("{base}_u"), u);
+        out.set(format!("{base}_v"), v);
+    }
+    Ok((out, nu))
+}
+
 /// Choose the smallest ladder rung whose rank fraction is ≥ the fraction
 /// needed to explain `threshold` variance in the *worst* group (so every
 /// group meets the paper's explained-variance criterion).
@@ -415,6 +467,31 @@ mod tests {
         let rec = p2.get("rec0_u").unwrap().matmul(p2.get("rec0_v").unwrap()).unwrap();
         // full min(m,n) rank retained => exact reconstruction
         assert!(w.max_abs_diff(&rec) < 1e-3);
+    }
+
+    #[test]
+    fn truncate_groups_full_rank_reproduces_and_low_rank_shrinks() {
+        let mut p = ParamSet::new();
+        let mut rng = Pcg64::seeded(9);
+        let w = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        p.set("fc_w", w.clone());
+        p.set("fc_b", Tensor::zeros(&[10]));
+        p.set("out_w", Tensor::randn(&[5, 10], 1.0, &mut rng)); // not a group
+
+        let full = truncate_groups(&p, 1.0).unwrap();
+        let rec = full.get("fc_u").unwrap().matmul(full.get("fc_v").unwrap()).unwrap();
+        assert!(w.max_abs_diff(&rec) < 1e-3);
+        assert!(!full.contains("fc_w"), "group weight replaced by factors");
+        assert_eq!(full.get("out_w").unwrap(), p.get("out_w").unwrap());
+        assert!(full.get("fc_b").unwrap().data().iter().all(|&v| v == 0.0));
+
+        let quarter = truncate_groups(&p, 0.25).unwrap();
+        assert_eq!(quarter.get("fc_u").unwrap().shape(), &[10, 2]); // ceil(0.25*8)
+        assert_eq!(quarter.get("fc_v").unwrap().shape(), &[2, 8]);
+        assert!(quarter.num_scalars() < full.num_scalars());
+
+        assert!(truncate_groups(&p, 0.0).is_err());
+        assert!(truncate_groups(&p, 1.5).is_err());
     }
 
     #[test]

@@ -43,6 +43,23 @@ pub fn quantize_into(x: &[f32], out: &mut [i8]) -> f32 {
     scale
 }
 
+/// Analytic worst-case absolute error of an int8 GEMM output element
+/// against the f32 reference, for a `k`-length contraction with
+/// activation scale `sx` and weight scale `sw`.
+///
+/// With symmetric round-to-nearest quantization each operand carries at
+/// most half a step of error (`|eₓ| ≤ sx/2`, `|e_w| ≤ sw/2`) and the
+/// quantized magnitudes are bounded by 127, so per product term
+/// `|x·w − sx·sw·x_q·w_q| ≤ sx·127·(sw/2) + sw·127·(sx/2) + (sx/2)(sw/2)`,
+/// giving `k · sx · sw · 127.25` over the contraction.  A small slack
+/// covers f32 accumulation rounding on both sides (negligible next to
+/// the quantization term for the k used here).  `tests/properties.rs`
+/// asserts every qgemm kernel stays inside this bound.
+pub fn qgemm_abs_error_bound(k: usize, sx: f32, sw: f32) -> f32 {
+    let quant = k as f32 * sx * sw * 127.25;
+    quant * 1.01 + 1e-6
+}
+
 pub fn dequantize(q: &QMatrix) -> Tensor {
     let data: Vec<f32> = q.q.data().iter().map(|&v| v as f32 * q.scale).collect();
     Tensor::new(q.q.shape(), data).unwrap()

@@ -1,0 +1,390 @@
+//! Rank-ladder model registry (DESIGN.md §8): the offline `ladder-build`
+//! pass and the serve-time variant registry.
+//!
+//! The paper's central artifact is a *family* of models along the
+//! accuracy-vs-parameters curve — trace-norm-trained, SVD-truncated at a
+//! ladder of ranks, then int8-quantized (§3–§4).  [`ladder_build`] makes
+//! that family a deployable unit: for each requested rank fraction it
+//! runs the per-group truncated SVD ([`crate::model::truncate_groups`],
+//! the same balanced-factor rule as the stage-2 warmstart), quantizes
+//! every weight to int8 ([`crate::quant::quantize`]), and writes one
+//! self-describing TNCK-v2 artifact per rung plus a `ladder.json`
+//! manifest:
+//!
+//! ```text
+//! <dir>/ladder.json        rung index: tag, file, rank_frac, params, bytes
+//! <dir>/rung_r0500.tnck    v2 artifact: int8 factors + f32 biases + meta
+//! <dir>/rung_r0250.tnck    (meta: scheme, rank_frac, model dims, ν(W) per group)
+//! ...
+//! ```
+//!
+//! [`Registry::load`] re-reads the ladder, verifies every artifact's
+//! checksum, rebuilds an [`Engine`] per rung **directly from the stored
+//! int8 factors** ([`Engine::from_entries`] — no SVD, no re-quantization
+//! at load), and exposes the variants as fidelity tiers: tier 0 is the
+//! highest-rank rung, deeper tiers are progressively cheaper.  The
+//! admission controller ([`crate::controller`]) walks those tiers at
+//! serve time.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::checkpoint::{self, Artifact, Entry};
+use crate::error::{Error, Result};
+use crate::infer::Engine;
+use crate::jsonx::Json;
+use crate::model::{self, ParamSet};
+use crate::quant::quantize;
+use crate::runtime::{ConvDims, ModelDims};
+
+/// File name of the rung index inside a ladder directory.
+pub const LADDER_MANIFEST: &str = "ladder.json";
+
+/// Stable rung tag for a rank fraction: `r1000`, `r0500`, `r0250`, ...
+pub fn rung_tag(rank_frac: f64) -> String {
+    format!("r{:04}", (rank_frac * 1000.0).round() as u32)
+}
+
+/// Build-time facts about one rung, persisted in `ladder.json` and in
+/// each artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct RungInfo {
+    pub tag: String,
+    pub rank_frac: f64,
+    /// artifact file name, relative to the ladder directory
+    pub file: String,
+    /// scalar parameter count of the factored model (the Fig-4 x-axis)
+    pub params: usize,
+    /// on-device weight bytes of the int8 artifact
+    pub bytes: usize,
+    /// per-group nondimensional trace norm ν(W) after truncation
+    pub nu: Vec<(String, f32)>,
+}
+
+/// Build a rank ladder from trained parameters: one int8 TNCK-v2
+/// artifact per rank fraction, plus the `ladder.json` index.  Fractions
+/// are deduplicated and sorted descending so rung order matches tier
+/// order.  Returns the rung index in tier order.
+pub fn ladder_build(
+    params: &ParamSet,
+    dims: &ModelDims,
+    rank_fracs: &[f64],
+    dir: &Path,
+) -> Result<Vec<RungInfo>> {
+    if rank_fracs.is_empty() {
+        return Err(Error::Config("ladder_build needs at least one rank fraction".into()));
+    }
+    let mut fracs: Vec<f64> = rank_fracs.to_vec();
+    fracs.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    fracs.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    std::fs::create_dir_all(dir)?;
+
+    let mut rungs = Vec::with_capacity(fracs.len());
+    for frac in fracs {
+        let (factored, nu) = model::truncate_groups_diag(params, frac)?;
+        let tag = rung_tag(frac);
+        if let Some(clash) = rungs.iter().find(|r: &&RungInfo| r.tag == tag) {
+            return Err(Error::Config(format!(
+                "rank fractions {} and {frac} both map to rung tag '{tag}' \
+                 (tags resolve 3 decimals); pick more distinct fractions",
+                clash.rank_frac
+            )));
+        }
+        let scalars = factored.num_scalars();
+
+        let mut art = Artifact::new(rung_meta(dims, frac, &tag, scalars, &nu));
+        for (name, t) in factored.iter() {
+            if name.ends_with("_b") {
+                art.set(name.clone(), Entry::F32(t.clone()));
+            } else {
+                art.set(name.clone(), Entry::I8(quantize(t)));
+            }
+        }
+        // fail the offline build, not the later serve, if the source
+        // checkpoint and `dims` disagree (extra/missing layers) — every
+        // rung must construct a servable engine
+        Engine::from_entries(dims, &art.entries, 1)?;
+        let file = format!("rung_{tag}.tnck");
+        checkpoint::save_artifact(&art, dir.join(&file))?;
+        rungs.push(RungInfo {
+            tag,
+            rank_frac: frac,
+            file,
+            params: scalars,
+            bytes: art.payload_bytes(),
+            nu,
+        });
+    }
+    write_manifest(&rungs, dir)?;
+    Ok(rungs)
+}
+
+/// One loaded ladder variant: its build-time facts plus a ready engine.
+pub struct Variant {
+    pub info: RungInfo,
+    pub engine: Arc<Engine>,
+}
+
+/// The serve-time registry: every ladder variant loaded, verified and
+/// wrapped in an engine, ordered fidelity-descending (tier 0 first).
+pub struct Registry {
+    pub dims: ModelDims,
+    pub dir: PathBuf,
+    variants: Vec<Variant>,
+}
+
+impl Registry {
+    /// Load a ladder directory written by [`ladder_build`].  Every
+    /// artifact's checksum is verified on read, its metadata is checked
+    /// against the manifest row, and all rungs must agree on model dims.
+    pub fn load(dir: &Path, time_batch: usize) -> Result<Registry> {
+        let manifest_path = dir.join(LADDER_MANIFEST);
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Checkpoint(format!("cannot read {}: {e}", manifest_path.display()))
+        })?;
+        let j = Json::parse(&text)?;
+        let rows = j
+            .req("rungs")?
+            .as_arr()
+            .ok_or_else(|| Error::Checkpoint("ladder.json 'rungs' must be an array".into()))?;
+        if rows.is_empty() {
+            return Err(Error::Checkpoint("ladder.json lists no rungs".into()));
+        }
+
+        let mut dims: Option<ModelDims> = None;
+        let mut variants = Vec::with_capacity(rows.len());
+        for row in rows {
+            let file = json_str(row, "file")?;
+            let art = checkpoint::load_artifact(dir.join(&file))?;
+            let mut info = rung_info_from_meta(&art.meta, &file)?;
+            info.bytes = art.payload_bytes();
+            let want_frac = json_f64(row, "rank_frac")?;
+            if (info.rank_frac - want_frac).abs() > 1e-9 {
+                return Err(Error::Checkpoint(format!(
+                    "rung {file}: manifest rank_frac {want_frac} != artifact {}",
+                    info.rank_frac
+                )));
+            }
+            let d = dims_from_json(art.meta.req("dims")?)?;
+            match &dims {
+                None => dims = Some(d),
+                Some(have) if dims_eq(have, &d) => {}
+                Some(_) => {
+                    return Err(Error::Checkpoint(format!(
+                        "rung {file}: model dims disagree with earlier rungs"
+                    )))
+                }
+            }
+            let engine =
+                Engine::from_entries(dims.as_ref().unwrap(), &art.entries, time_batch)?;
+            variants.push(Variant { info, engine: Arc::new(engine) });
+        }
+        variants.sort_by(|a, b| {
+            b.info
+                .rank_frac
+                .partial_cmp(&a.info.rank_frac)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Ok(Registry { dims: dims.unwrap(), dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn num_tiers(&self) -> usize {
+        self.variants.len()
+    }
+
+    /// Variant at fidelity tier `t` (0 = highest rank).
+    pub fn tier(&self, t: usize) -> &Variant {
+        &self.variants[t]
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON plumbing (manifest + per-artifact metadata).
+// ---------------------------------------------------------------------------
+
+fn write_manifest(rungs: &[RungInfo], dir: &Path) -> Result<()> {
+    let rows: Vec<Json> = rungs
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("tag", Json::str(r.tag.clone())),
+                ("file", Json::str(r.file.clone())),
+                ("rank_frac", Json::num(r.rank_frac)),
+                ("params", Json::num(r.params as f64)),
+                ("bytes", Json::num(r.bytes as f64)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![("kind", Json::str("ladder")), ("rungs", Json::Arr(rows))]);
+    std::fs::write(dir.join(LADDER_MANIFEST), j.to_string_pretty())?;
+    Ok(())
+}
+
+fn rung_meta(dims: &ModelDims, frac: f64, tag: &str, params: usize, nu: &[(String, f32)]) -> Json {
+    let nu_obj = Json::Obj(
+        nu.iter().map(|(base, v)| (base.clone(), Json::Num(*v as f64))).collect(),
+    );
+    Json::obj(vec![
+        ("kind", Json::str("ladder-rung")),
+        ("scheme", Json::str("partial")),
+        ("tag", Json::str(tag)),
+        ("rank_frac", Json::num(frac)),
+        ("params", Json::num(params as f64)),
+        ("dims", dims_to_json(dims)),
+        ("nu", nu_obj),
+    ])
+}
+
+fn rung_info_from_meta(meta: &Json, file: &str) -> Result<RungInfo> {
+    if json_str(meta, "kind")? != "ladder-rung" {
+        return Err(Error::Checkpoint(format!("{file}: not a ladder-rung artifact")));
+    }
+    let nu = meta
+        .req("nu")?
+        .as_obj()
+        .ok_or_else(|| Error::Checkpoint(format!("{file}: 'nu' must be an object")))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_f64()
+                .map(|f| (k.clone(), f as f32))
+                .ok_or_else(|| Error::Checkpoint(format!("{file}: non-numeric nu entry")))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(RungInfo {
+        tag: json_str(meta, "tag")?,
+        rank_frac: json_f64(meta, "rank_frac")?,
+        file: file.to_string(),
+        params: json_f64(meta, "params")? as usize,
+        bytes: 0, // caller fills this from the loaded entries
+        nu,
+    })
+}
+
+fn dims_to_json(d: &ModelDims) -> Json {
+    let conv: Vec<Json> = d
+        .conv
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("context", Json::num(c.context as f64)),
+                ("dim", Json::num(c.dim as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("feat_dim", Json::num(d.feat_dim as f64)),
+        ("conv", Json::Arr(conv)),
+        ("gru_dims", Json::arr_num(&d.gru_dims.iter().map(|&g| g as f64).collect::<Vec<_>>())),
+        ("fc_dim", Json::num(d.fc_dim as f64)),
+        ("vocab", Json::num(d.vocab as f64)),
+        ("total_stride", Json::num(d.total_stride as f64)),
+    ])
+}
+
+fn dims_from_json(j: &Json) -> Result<ModelDims> {
+    let conv = j
+        .req("conv")?
+        .as_arr()
+        .ok_or_else(|| Error::Checkpoint("dims 'conv' must be an array".into()))?
+        .iter()
+        .map(|c| {
+            Ok(ConvDims {
+                context: json_f64(c, "context")? as usize,
+                dim: json_f64(c, "dim")? as usize,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let gru_dims = j
+        .req("gru_dims")?
+        .as_arr()
+        .ok_or_else(|| Error::Checkpoint("dims 'gru_dims' must be an array".into()))?
+        .iter()
+        .map(|g| {
+            g.as_usize()
+                .ok_or_else(|| Error::Checkpoint("non-numeric gru dim".into()))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelDims {
+        feat_dim: json_f64(j, "feat_dim")? as usize,
+        conv,
+        gru_dims,
+        fc_dim: json_f64(j, "fc_dim")? as usize,
+        vocab: json_f64(j, "vocab")? as usize,
+        total_stride: json_f64(j, "total_stride")? as usize,
+    })
+}
+
+fn dims_eq(a: &ModelDims, b: &ModelDims) -> bool {
+    a.feat_dim == b.feat_dim
+        && a.gru_dims == b.gru_dims
+        && a.fc_dim == b.fc_dim
+        && a.vocab == b.vocab
+        && a.total_stride == b.total_stride
+        && a.conv.len() == b.conv.len()
+        && a.conv.iter().zip(&b.conv).all(|(x, y)| x.context == y.context && x.dim == y.dim)
+}
+
+fn json_str(j: &Json, key: &str) -> Result<String> {
+    j.req(key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Checkpoint(format!("'{key}' must be a string")))
+}
+
+fn json_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Checkpoint(format!("'{key}' must be a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_tags_are_stable() {
+        assert_eq!(rung_tag(1.0), "r1000");
+        assert_eq!(rung_tag(0.5), "r0500");
+        assert_eq!(rung_tag(0.25), "r0250");
+        assert_eq!(rung_tag(0.125), "r0125");
+    }
+
+    #[test]
+    fn dims_json_roundtrip() {
+        let d = ModelDims {
+            feat_dim: 8,
+            conv: vec![ConvDims { context: 2, dim: 12 }],
+            gru_dims: vec![10, 12],
+            fc_dim: 14,
+            vocab: 29,
+            total_stride: 2,
+        };
+        let j = dims_to_json(&d);
+        let back = dims_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert!(dims_eq(&d, &back));
+    }
+
+    #[test]
+    fn empty_ladder_rejected() {
+        let dir = std::env::temp_dir().join(format!("tnladder-empty-{}", std::process::id()));
+        assert!(ladder_build(&ParamSet::new(), &demo_dims_tiny(), &[], &dir).is_err());
+    }
+
+    fn demo_dims_tiny() -> ModelDims {
+        ModelDims {
+            feat_dim: 8,
+            conv: vec![ConvDims { context: 2, dim: 12 }],
+            gru_dims: vec![10],
+            fc_dim: 14,
+            vocab: 29,
+            total_stride: 2,
+        }
+    }
+
+    // end-to-end build -> load -> bit-identical serve lives in
+    // rust/tests/ladder.rs
+}

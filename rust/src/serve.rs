@@ -10,6 +10,12 @@
 //! report carries per-stream latency percentiles and a time-weighted
 //! pool-occupancy histogram (DESIGN.md §6).
 //!
+//! [`ladder_serve`] is the adaptive-fidelity path (DESIGN.md §8): one
+//! [`StreamPool`] per rank-ladder tier from a [`Registry`], with a
+//! [`FidelityController`] routing *new* sessions down the ladder when the
+//! routed tier's p99 breaches its target or its pool saturates, and back
+//! up once the load drains.
+//!
 //! [`simulate`] keeps the earlier discrete-event *whole-utterance*
 //! batcher: requests are padded into a static PJRT eval batch (the
 //! server-side deployment of Prabhavalkar et al.), the contrast case to
@@ -17,12 +23,14 @@
 
 use std::sync::Arc;
 
+use crate::controller::{ControllerConfig, FidelityController, ShiftEvent};
 use crate::data::Utterance;
 use crate::error::{Error, Result};
 use crate::infer::{Breakdown, Engine};
 use crate::metricsx::{Histogram, LatencySummary, OccupancyTracker};
 use crate::model::ParamSet;
 use crate::prng::Pcg64;
+use crate::registry::Registry;
 use crate::runtime::Runtime;
 use crate::stream::StreamPool;
 use crate::train::Evaluator;
@@ -190,6 +198,240 @@ pub fn stream_serve(
 }
 
 // ---------------------------------------------------------------------------
+// Adaptive-fidelity ladder serving (registry + controller, DESIGN.md §8).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct LadderServeConfig {
+    /// steady-state session arrival rate (utterances / second)
+    pub base_rate: f64,
+    /// arrival rate inside the ramp window
+    pub ramp_rate: f64,
+    /// session indices `[start, end)` arriving at `ramp_rate` — the
+    /// synthetic load ramp the controller must absorb
+    pub ramp_range: (usize, usize),
+    /// session slots per fidelity tier
+    pub pool_size: usize,
+    /// raw feature frames a client delivers per engine tick
+    pub chunk_frames: usize,
+    pub seed: u64,
+    pub controller: ControllerConfig,
+}
+
+impl Default for LadderServeConfig {
+    fn default() -> Self {
+        LadderServeConfig {
+            base_rate: 4.0,
+            ramp_rate: 1e5,
+            ramp_range: (0, 0),
+            pool_size: 4,
+            chunk_frames: 16,
+            seed: 0,
+            controller: ControllerConfig::default(),
+        }
+    }
+}
+
+/// Per-tier slice of a [`LadderServeReport`].
+#[derive(Clone, Debug)]
+pub struct TierReport {
+    pub tier: usize,
+    pub tag: String,
+    pub rank_frac: f64,
+    /// scalar parameter count of the tier's variant
+    pub params: usize,
+    /// sessions admitted at this tier
+    pub sessions: usize,
+    /// arrival → final-transcript latency of those sessions
+    pub latency: LatencySummary,
+    /// time-weighted occupancy of this tier's pool
+    pub occupancy: OccupancyTracker,
+}
+
+/// Report from a [`ladder_serve`] run.
+#[derive(Clone, Debug)]
+pub struct LadderServeReport {
+    pub sessions: usize,
+    pub pool_size: usize,
+    pub tiers: Vec<TierReport>,
+    pub downshifts: u64,
+    pub upshifts: u64,
+    /// fidelity shifts in order (simulated clock, new tier)
+    pub shifts: Vec<ShiftEvent>,
+    /// admission tier per session, indexed by arrival order
+    pub tier_of_session: Vec<usize>,
+    pub throughput: f64,
+    pub busy_secs: f64,
+    pub span_secs: f64,
+    pub breakdown: Breakdown,
+}
+
+/// One in-flight ladder session: which utterance, how far the client has
+/// streamed it, and which tier admitted it.
+struct InFlightTiered {
+    id: crate::stream::StreamId,
+    utt: usize,
+    off: usize,
+    arrived: f64,
+    tier: usize,
+}
+
+/// Serve `utts` as concurrent streaming sessions across a rank ladder,
+/// one [`StreamPool`] per tier, with the [`FidelityController`] routing
+/// each *new* session to a tier (spilling further down the ladder when
+/// the routed pool is full).  Arrival clocks are simulated with a
+/// piecewise Poisson rate (the ramp); every service interval is measured
+/// wall-clock on the real kernels, exactly like [`stream_serve`].
+pub fn ladder_serve(
+    registry: &Registry,
+    utts: &[Utterance],
+    cfg: &LadderServeConfig,
+) -> Result<LadderServeReport> {
+    if utts.is_empty() {
+        return Err(Error::other("no sessions"));
+    }
+    if cfg.pool_size == 0 || cfg.chunk_frames == 0 {
+        return Err(Error::Config("pool_size and chunk_frames must be >= 1".into()));
+    }
+    if cfg.base_rate <= 0.0 || cfg.ramp_rate <= 0.0 {
+        return Err(Error::Config("arrival rates must be positive".into()));
+    }
+    let tiers = registry.num_tiers();
+    let feat = registry.dims.feat_dim;
+    let mut ctl = FidelityController::new(tiers, cfg.controller.clone())?;
+
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
+    let mut t = 0.0;
+    for i in 0..utts.len() {
+        let rate = if i >= cfg.ramp_range.0 && i < cfg.ramp_range.1 {
+            cfg.ramp_rate
+        } else {
+            cfg.base_rate
+        };
+        t += -rng.uniform().max(1e-12).ln() / rate;
+        arrivals.push(t);
+    }
+
+    let mut pools: Vec<StreamPool> = registry
+        .variants()
+        .iter()
+        .map(|v| StreamPool::new(v.engine.clone(), cfg.pool_size))
+        .collect();
+    let mut lat: Vec<Histogram> = (0..tiers).map(|_| Histogram::new()).collect();
+    let mut occ: Vec<OccupancyTracker> = (0..tiers).map(|_| OccupancyTracker::new()).collect();
+    let mut sessions_at: Vec<usize> = vec![0; tiers];
+    let mut tier_of_session: Vec<usize> = vec![0; utts.len()];
+
+    let mut active: Vec<InFlightTiered> = Vec::new();
+    let mut next = 0usize;
+    let mut clock = 0.0f64;
+    let mut busy = 0.0f64;
+    let mut bd = Breakdown::default();
+
+    while next < utts.len() || !active.is_empty() {
+        // admit queued arrivals: route to the controller's tier, spilling
+        // down the ladder when that pool is full (never up — an overload
+        // must not push extra load onto the expensive tiers)
+        while next < utts.len() && arrivals[next] <= clock {
+            let want = ctl.tier();
+            let Some(tier) = (want..tiers).find(|&t| !pools[t].is_full()) else {
+                break;
+            };
+            let id = pools[tier].open()?;
+            active.push(InFlightTiered { id, utt: next, off: 0, arrived: arrivals[next], tier });
+            tier_of_session[next] = tier;
+            sessions_at[tier] += 1;
+            next += 1;
+        }
+        if active.is_empty() {
+            // idle server: the controller sees a drained system, the
+            // occupancy trackers record the empty gap, the clock jumps
+            ctl.observe(clock, 0.0);
+            let target = clock.max(arrivals[next]);
+            if target > clock {
+                for o in occ.iter_mut() {
+                    o.record(0, target - clock);
+                }
+            }
+            clock = target;
+            continue;
+        }
+
+        // one engine tick across every tier: clients deliver a chunk
+        // each, busy pools pump, finished sessions close
+        let occ_now: Vec<usize> = pools.iter().map(|p| p.active()).collect();
+        let t0 = std::time::Instant::now();
+        for a in &mut active {
+            let data = utts[a.utt].feats.data();
+            let end = (a.off + cfg.chunk_frames * feat).min(data.len());
+            if a.off < end {
+                pools[a.tier].push_frames(a.id, &data[a.off..end])?;
+                a.off = end;
+            }
+        }
+        for pool in pools.iter_mut() {
+            if pool.active() > 0 {
+                pool.pump(&mut bd)?;
+            }
+        }
+        let mut finished: Vec<InFlightTiered> = Vec::new();
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].off >= utts[active[i].utt].feats.data().len() {
+                let a = active.swap_remove(i);
+                pools[a.tier].close(a.id, &mut bd)?;
+                finished.push(a);
+            } else {
+                i += 1;
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        busy += dt;
+        clock += dt;
+        for (t, o) in occ.iter_mut().enumerate() {
+            o.record(occ_now[t], dt);
+        }
+        for a in finished {
+            let l = clock - a.arrived;
+            lat[a.tier].record(l);
+            ctl.record_latency(a.tier, l);
+        }
+        // control tick: the routed tier's pool is the admission signal
+        ctl.observe(clock, pools[ctl.tier()].occupancy_frac());
+    }
+
+    let span = clock - arrivals[0];
+    let tiers_report: Vec<TierReport> = (0..tiers)
+        .map(|t| {
+            let v = registry.tier(t);
+            TierReport {
+                tier: t,
+                tag: v.info.tag.clone(),
+                rank_frac: v.info.rank_frac,
+                params: v.info.params,
+                sessions: sessions_at[t],
+                latency: lat[t].summary(),
+                occupancy: occ[t].clone(),
+            }
+        })
+        .collect();
+    Ok(LadderServeReport {
+        sessions: utts.len(),
+        pool_size: cfg.pool_size,
+        tiers: tiers_report,
+        downshifts: ctl.downshifts,
+        upshifts: ctl.upshifts,
+        shifts: ctl.shifts().to_vec(),
+        tier_of_session,
+        throughput: utts.len() as f64 / span.max(1e-9),
+        busy_secs: busy,
+        span_secs: span,
+        breakdown: bd,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Whole-utterance PJRT batcher (the server-row baseline; `xla` feature).
 // ---------------------------------------------------------------------------
 
@@ -321,6 +563,9 @@ mod tests {
         assert!(c.arrival_rate > 0.0 && c.max_batch >= 1 && c.window >= 0.0);
         let s = StreamServeConfig::default();
         assert!(s.arrival_rate > 0.0 && s.pool_size >= 1 && s.chunk_frames >= 1);
+        let l = LadderServeConfig::default();
+        assert!(l.base_rate > 0.0 && l.ramp_rate > 0.0 && l.pool_size >= 1);
+        assert!(l.controller.low_water < l.controller.high_water);
     }
 
     #[test]

@@ -147,6 +147,13 @@ impl StreamPool {
         self.active() == self.capacity()
     }
 
+    /// Fraction of slots occupied — the load signal the fidelity
+    /// controller ([`crate::controller`]) compares against its
+    /// high/low-water marks.
+    pub fn occupancy_frac(&self) -> f64 {
+        self.active() as f64 / self.capacity() as f64
+    }
+
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
@@ -416,9 +423,11 @@ mod tests {
         let b = pool.open().unwrap();
         assert!(pool.is_full());
         assert!(pool.open().is_err(), "third open must fail at capacity 2");
+        assert!((pool.occupancy_frac() - 1.0).abs() < 1e-12);
         let mut bd = Breakdown::default();
         pool.close(a, &mut bd).unwrap();
         assert_eq!(pool.active(), 1);
+        assert!((pool.occupancy_frac() - 0.5).abs() < 1e-12);
         let c = pool.open().unwrap();
         assert_ne!(a, c, "ids are never reused");
         assert_ne!(b, c);

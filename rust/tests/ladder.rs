@@ -1,0 +1,171 @@
+//! Integration tests for the rank-ladder subsystem (no artifacts
+//! needed): a built ladder must round-trip build → load → serve with
+//! pooled decoding **bit-identical** to a direct engine constructed from
+//! the same factored weights, and the fidelity controller must
+//! demonstrably downshift under a synthetic load ramp and upshift once
+//! it drains (ISSUE acceptance criteria; DESIGN.md §8).
+
+use std::path::PathBuf;
+
+use tracenorm::controller::ControllerConfig;
+use tracenorm::data::Utterance;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::model::truncate_groups;
+use tracenorm::prng::Pcg64;
+use tracenorm::registry::{ladder_build, Registry, LADDER_MANIFEST};
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::serve::{ladder_serve, LadderServeConfig};
+use tracenorm::stream::{synthetic_params, StreamPool};
+use tracenorm::tensor::Tensor;
+
+/// Small dims so SVDs stay fast in debug builds; the structure still
+/// exercises conv, two GRU layers, factored fc and the int8 path.
+fn tiny_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 8,
+        conv: vec![ConvDims { context: 2, dim: 12 }],
+        gru_dims: vec![10, 12],
+        fc_dim: 14,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn temp_ladder_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tnladder-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn ladder_round_trips_and_pooled_decode_is_bit_identical() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 5);
+    let dir = temp_ladder_dir("roundtrip");
+    let rungs = ladder_build(&params, &dims, &[0.25, 0.5], &dir).unwrap();
+    assert_eq!(rungs.len(), 2);
+    assert!(dir.join(LADDER_MANIFEST).exists());
+    // rung order is tier order: fidelity-descending
+    assert!(rungs[0].rank_frac > rungs[1].rank_frac);
+    assert!(rungs[0].params > rungs[1].params, "lower rank must mean fewer params");
+    assert!(rungs[0].bytes > rungs[1].bytes);
+    for r in &rungs {
+        assert!(!r.nu.is_empty(), "each rung carries per-group nu diagnostics");
+        assert!(r.nu.iter().all(|(_, nu)| (0.0..=1.0).contains(nu)));
+    }
+
+    let reg = Registry::load(&dir, 4).unwrap();
+    assert_eq!(reg.num_tiers(), 2);
+    let mut rng = Pcg64::seeded(7);
+    let feats = Tensor::randn(&[26, 8], 0.7, &mut rng);
+
+    for tier in 0..reg.num_tiers() {
+        let v = reg.tier(tier);
+        assert_eq!(v.info.tag, rungs[tier].tag);
+        assert_eq!(v.engine.precision, Precision::Int8);
+        assert_eq!(v.info.params, rungs[tier].params);
+
+        // the reference: a direct engine built from the same factored
+        // f32 weights (same SVD truncation, same quantize() call)
+        let factored = truncate_groups(&params, v.info.rank_frac).unwrap();
+        let direct =
+            Engine::from_params(&dims, "partial", &factored, Precision::Int8, 4).unwrap();
+        let mut bd = Breakdown::default();
+        let (ref_text, ref_rows) = direct.transcribe(&feats, &mut bd).unwrap();
+        assert_eq!(v.engine.model_bytes(), direct.model_bytes());
+
+        // pooled decode through the registry engine, ragged chunks
+        let mut pool = StreamPool::new(v.engine.clone(), 3);
+        let id = pool.open().unwrap();
+        let data = feats.data();
+        let mut bd2 = Breakdown::default();
+        for chunk in [&data[..48], &data[48..120], &data[120..]] {
+            pool.push_frames(id, chunk).unwrap();
+            pool.pump(&mut bd2).unwrap();
+        }
+        let closed = pool.close(id, &mut bd2).unwrap();
+        assert_eq!(closed.transcript, ref_text);
+        assert_eq!(closed.logprob_rows.len(), ref_rows.len());
+        for (a, b) in closed.logprob_rows.iter().zip(&ref_rows) {
+            assert_eq!(a, b, "tier {tier}: pooled decode must be bit-identical");
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn registry_load_detects_artifact_corruption() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 6);
+    let dir = temp_ladder_dir("corrupt");
+    let rungs = ladder_build(&params, &dims, &[0.5], &dir).unwrap();
+    let path = dir.join(&rungs[0].file);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(Registry::load(&dir, 4).is_err(), "flipped bit must fail the checksum");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn fixed_utterances(n: usize, frames: usize, feat: usize, seed: u64) -> Vec<Utterance> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| Utterance {
+            text: String::new(),
+            labels: Vec::new(),
+            feats: Tensor::randn(&[frames, feat], 0.6, &mut rng),
+        })
+        .collect()
+}
+
+#[test]
+fn controller_downshifts_under_ramp_and_upshifts_after() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 8);
+    let dir = temp_ladder_dir("ramp");
+    ladder_build(&params, &dims, &[0.5, 0.125], &dir).unwrap();
+    let reg = Registry::load(&dir, 2).unwrap();
+
+    // 8-session burst at near-instant arrivals into 2x2 slots, then 4
+    // trickle sessions far apart.  The burst saturates tier 0 (occupancy
+    // 1.0 >= high_water) -> downshift; the drain and the idle gaps clear
+    // the counters -> upshift before the trickle, which lands on tier 0.
+    // Occupancy is integer-driven, so this sequencing does not depend on
+    // wall-clock speed.  target_p99 is huge so only occupancy triggers.
+    let utts = fixed_utterances(12, 16, 8, 9);
+    let cfg = LadderServeConfig {
+        base_rate: 1e-3,
+        ramp_rate: 1e9,
+        ramp_range: (0, 8),
+        pool_size: 2,
+        chunk_frames: 2,
+        seed: 3,
+        controller: ControllerConfig {
+            target_p99: 1e9,
+            high_water: 0.95,
+            low_water: 0.5,
+            breach_ticks: 2,
+            clear_ticks: 2,
+            window: 32,
+        },
+    };
+    let r = ladder_serve(&reg, &utts, &cfg).unwrap();
+
+    assert_eq!(r.sessions, 12);
+    assert!(r.downshifts >= 1, "ramp must force a downshift ({:?} shifts)", r.shifts);
+    assert!(r.upshifts >= 1, "drain must allow an upshift ({:?} shifts)", r.shifts);
+    // the per-tier report shows traffic on both rungs
+    assert!(r.tiers[0].sessions >= 1, "tier 0 served sessions");
+    assert!(r.tiers[1].sessions >= 1, "tier 1 absorbed the ramp spill");
+    assert_eq!(r.tiers.iter().map(|t| t.sessions).sum::<usize>(), 12);
+    assert!(r.tiers.iter().all(|t| t.sessions == t.latency.count));
+    // at least one burst session was admitted below top fidelity...
+    assert!(r.tier_of_session[..8].iter().any(|&t| t > 0));
+    // ...and after the ramp drained, the trickle rides tier 0 again
+    assert_eq!(*r.tier_of_session.last().unwrap(), 0, "tiers: {:?}", r.tier_of_session);
+    // shift log alternates down then up at least once, in clock order
+    assert!(r.shifts[0].down);
+    assert!(r.shifts.windows(2).all(|w| w[0].clock <= w[1].clock));
+    std::fs::remove_dir_all(&dir).unwrap();
+}

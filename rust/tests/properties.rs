@@ -2,12 +2,12 @@
 
 use tracenorm::data::{labels_to_text, text_to_labels, CorpusSpec, Dataset};
 use tracenorm::jsonx::Json;
-use tracenorm::kernels::{qgemm_farm, qgemm_lowp, qgemm_ref};
+use tracenorm::kernels::{gemm_f32, qgemm_farm, qgemm_lowp, qgemm_ref};
 use tracenorm::linalg::{nu_from_singular_values, svd};
 use tracenorm::model::{magnitude_masks, mask_density, ParamSet};
 use tracenorm::prng::Pcg64;
 use tracenorm::proplite::check;
-use tracenorm::quant::{dequantize, quantize};
+use tracenorm::quant::{dequantize, qgemm_abs_error_bound, quantize, quantize_into};
 use tracenorm::tensor::{Tensor, TensorI8};
 
 fn rand_tensor(rng: &mut Pcg64, m: usize, n: usize, scale: f32) -> Tensor {
@@ -110,6 +110,41 @@ fn prop_farm_lowp_ref_identical() {
             let b = qgemm_lowp(x, w, 0.013, 0.027);
             let c = qgemm_ref(x, w, 0.013, 0.027);
             a == b && b == c
+        },
+    );
+}
+
+#[test]
+fn prop_qgemm_within_analytic_bound_of_f32_gemm() {
+    // quantize real f32 operands the way the embedded engine does
+    // (per-tensor weights, per-call activations), run the int8 farm
+    // kernel, and assert every output element stays within the analytic
+    // worst-case error bound of the f32 reference GEMM
+    // (quant::qgemm_abs_error_bound) across random shapes and scales.
+    check(
+        "qgemm-analytic-bound",
+        30,
+        |rng, size| {
+            let m = 1 + rng.below(6);
+            let n = 1 + rng.below(size * 6 + 6);
+            let k = 1 + rng.below(size * 12 + 8);
+            let sx = 0.2 + rng.uniform() as f32 * 2.0;
+            let sw = 0.1 + rng.uniform() as f32;
+            (Tensor::randn(&[m, k], sx, rng), Tensor::randn(&[n, k], sw, rng))
+        },
+        |(x, w)| {
+            let (m, k) = (x.rows(), x.cols());
+            let qw = quantize(w);
+            let mut xq = vec![0i8; m * k];
+            let sx = quantize_into(x.data(), &mut xq);
+            let xq = TensorI8::new(&[m, k], xq).unwrap();
+            let y = qgemm_farm(&xq, &qw.q, sx, qw.scale);
+            let yref = gemm_f32(x, w, None);
+            let bound = qgemm_abs_error_bound(k, sx, qw.scale);
+            y.data()
+                .iter()
+                .zip(yref.data())
+                .all(|(a, b)| (a - b).abs() <= bound)
         },
     );
 }

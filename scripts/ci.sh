@@ -21,8 +21,19 @@ cargo test -q
 echo "==> rustdoc (no warnings allowed)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
+echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
+ldir="$(mktemp -d)"
+trap 'rm -rf "$ldir"' EXIT
+cargo run --release -q -- ladder-build --out "$ldir" --fracs 0.5,0.25 --seed 7
+report="$(cargo run --release -q -- stream-serve --ladder "$ldir" --utts 10 --ramp-utts 6 \
+  --ramp-rate 1000000 --rate 0.001 --pool 2 --chunk 8 --seed 7)"
+echo "$report"
+echo "$report" | grep -q "tier 0" || { echo "ladder smoke: per-tier report missing tier 0"; exit 1; }
+echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missing tier 1"; exit 1; }
+echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
+
 echo "==> bench smoke (1 iteration each)"
-for b in gemm linalg streaming stream_pool coordinator; do
+for b in gemm linalg streaming stream_pool ladder coordinator; do
   echo "--- bench $b"
   BENCH_SMOKE=1 cargo bench --bench "$b"
 done
