@@ -1,12 +1,27 @@
 //! Bench: the Figure-6 GEMM comparison (farm vs gemmlowp-style vs f32)
-//! across batch sizes, plus GOP/s and the farm/lowp speedup factor.
+//! across batch sizes, plus the **backend sweep**: every registered
+//! [`GemmBackend`](tracenorm::kernels::GemmBackend) × m ∈ {1,2,4,8} on
+//! steady-state `*_into` calls — weights pre-packed once, output tensor
+//! reused — so the numbers measure exactly what the engine's hot loop
+//! pays.  Packing cost is excluded from the steady-state rows and
+//! reported separately.
+//!
+//! Emits machine-readable `BENCH_gemm.json` (override the path with
+//! `BENCH_GEMM_JSON`) so future PRs have a perf trajectory.  The
+//! acceptance floor for this module tree is `blocked >= scalar` at every
+//! m in the sweep.
 
 #[path = "harness.rs"]
 mod harness;
 use harness::{bench, header};
 
-use tracenorm::kernels::{farm_counts, gemm_f32, qgemm_farm, qgemm_lowp};
+use tracenorm::jsonx::Json;
+use tracenorm::kernels::{
+    all_backends, farm_counts, gemm_f32, qgemm_farm, qgemm_lowp, simd_runtime_available,
+    GemmBackend, PackedQMatrix, PreparedQMatrix,
+};
 use tracenorm::prng::Pcg64;
+use tracenorm::quant::QMatrix;
 use tracenorm::tensor::{Tensor, TensorI8};
 
 const N: usize = 6144;
@@ -44,4 +59,63 @@ fn main() {
             tl / tf
         );
     }
+
+    // -- backend sweep: steady-state *_into calls, pre-packed weights ------
+
+    header(&format!("backend sweep: {N}x{K}, *_into steady state (packing excluded)"));
+    let tpack = bench("PackedQMatrix::pack (one-time plan cost)", 200, || {
+        std::hint::black_box(PackedQMatrix::pack(&w));
+    });
+    let prepped = PreparedQMatrix::new(QMatrix { q: w.clone(), scale: 0.01 });
+
+    let mut results: Vec<Json> = Vec::new();
+    for (_, be) in all_backends() {
+        for m in [1usize, 2, 4, 8] {
+            let x = rand_i8(&[m, K], &mut rng);
+            let xf = Tensor::randn(&[m, K], 1.0, &mut rng);
+            let scales: Vec<f32> = (0..m).map(|i| 0.008 + 0.001 * i as f32).collect();
+            let ops = farm_counts(m, N, K).ops() as f64;
+            let mut out = Tensor::zeros(&[m, N]);
+
+            let tq = bench(&format!("{:<8} qgemm_farm_into      m={m}", be.name()), 300, || {
+                be.qgemm_farm_into(x.data(), m, &prepped, 0.01, &mut out);
+                std::hint::black_box(&out);
+            });
+            let tr = bench(&format!("{:<8} qgemm_farm_rows_into m={m}", be.name()), 300, || {
+                be.qgemm_farm_rows_into(x.data(), m, &prepped, &scales, &mut out);
+                std::hint::black_box(&out);
+            });
+            let tf32 = bench(&format!("{:<8} gemm_f32_into        m={m}", be.name()), 300, || {
+                be.gemm_f32_into(&xf, &wf, None, &mut out);
+                std::hint::black_box(&out);
+            });
+            for (kind, secs) in
+                [("qgemm_farm", tq), ("qgemm_farm_rows", tr), ("gemm_f32", tf32)]
+            {
+                results.push(Json::obj(vec![
+                    ("backend", Json::str(be.name())),
+                    ("kind", Json::str(kind)),
+                    ("m", Json::num(m as f64)),
+                    ("secs", Json::num(secs)),
+                    ("gops", Json::num(ops / secs / 1e9)),
+                ]));
+            }
+        }
+        println!();
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("gemm")),
+        ("n", Json::num(N as f64)),
+        ("k", Json::num(K as f64)),
+        ("pack_secs", Json::num(tpack)),
+        ("pack_excluded_from_steady_state", Json::Bool(true)),
+        // when false, any backend="simd" rows below are scalar-fallback
+        // timings — do not read them as vector-path numbers
+        ("simd_vector_path_available", Json::Bool(simd_runtime_available())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::env::var("BENCH_GEMM_JSON").unwrap_or_else(|_| "BENCH_gemm.json".into());
+    std::fs::write(&path, report.to_string_pretty()).expect("write BENCH_gemm.json");
+    println!("wrote machine-readable sweep to {path}");
 }

@@ -18,11 +18,15 @@
 //!   transcribe                   train briefly, then transcribe test
 //!                                utterances with the embedded engine
 //!                                  --precision int8|f32
+//!                                  --backend scalar|blocked|simd|auto
 //!   bench-gemm                   quick farm-vs-lowp timing sweep
 //!   stream-serve                 multi-stream pool serving demo: Poisson
 //!                                arrivals over concurrent decode sessions
 //!                                  --pool 4 --rate 8 --utts 32 --chunk 16
 //!                                  --precision int8|f32 [--load ckpt]
+//!                                  --backend scalar|blocked|simd|auto
+//!                                (the GEMM backend; simd needs the `simd`
+//!                                cargo feature — DESIGN.md §4)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
 //!                                synthetic load ramp and a per-tier
@@ -57,12 +61,14 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
               [--load CKPT] [--save CKPT]
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
-  repro transcribe [--precision int8|f32] [--utts N]
+  repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
   repro bench-gemm [--reps N]
   repro stream-serve [--pool N] [--rate F] [--utts N] [--chunk N] [--precision int8|f32]
                      [--rank-frac F] [--time-batch N] [--scheme S] [--load CKPT] [--seed N]
+                     [--backend scalar|blocked|simd|auto]
   repro stream-serve --ladder DIR [--pool N] [--utts N] [--chunk N] [--rate F]
                      [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N]
+                     [--backend scalar|blocked|simd|auto]
                      (adaptive-fidelity serving over a built rank ladder)
   repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]
                      (offline SVD-truncate + int8-quantize, one artifact per rung)

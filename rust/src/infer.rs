@@ -15,9 +15,22 @@
 //!   recurrent path, so pooled and single-stream decoding are
 //!   bit-identical; weights once at load; biases and gate math stay f32.
 //!
-//! The [`Engine`] owns only **shared immutable weights**; everything a
-//! live utterance needs (GRU hidden vectors, the raw-frame buffer) lives
-//! in [`StreamState`], so one engine can serve many concurrent sessions.
+//! The execution model is a **plan/executor split** (DESIGN.md §4):
+//!
+//! * The **plan** is the [`Engine`] — immutable shared weights prepared
+//!   for every GEMM backend at construction ([`PreparedQMatrix`]: the
+//!   row-major reference layout plus the NR-panel pre-packed layout,
+//!   built once, never per call) plus the selected
+//!   [`GemmBackend`](crate::kernels::GemmBackend).
+//! * The **executor state** is per stream: [`StreamState`] carries the
+//!   GRU hidden vectors, the raw-frame buffer, and a [`Scratch`] arena of
+//!   reusable activation/quantization buffers.  Every GEMM runs through
+//!   the backend's `*_into` entry points into scratch-owned tensors, the
+//!   hidden state is updated in place, and log-softmax runs in place —
+//!   so the steady-state block loop ([`Engine::pump_block`]) performs
+//!   **zero heap allocations** (enforced by a counting global allocator
+//!   in `rust/tests/alloc_free.rs`).
+//!
 //! The block computation is decomposed into staged primitives
 //! (`frontend` → per-layer `nonrec_block` + stepwise `rec_gates`/
 //! `gru_cell` → `head`) that the stream pool re-drives at batch m.
@@ -31,11 +44,11 @@ use crate::checkpoint::Entry;
 use crate::data::labels_to_text;
 use crate::decoder;
 use crate::error::{Error, Result};
-use crate::kernels::{gemm_f32, qgemm_farm, qgemm_farm_rows};
+use crate::kernels::{self, BackendSel, GemmBackend, PreparedQMatrix};
 use crate::model::ParamSet;
-use crate::quant::{quantize, quantize_into, QMatrix};
+use crate::quant::{quantize, quantize_into};
 use crate::runtime::ModelDims;
-use crate::tensor::{Tensor, TensorI8};
+use crate::tensor::Tensor;
 
 /// Inference numeric mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,18 +57,19 @@ pub enum Precision {
     Int8,
 }
 
-/// A dense operator `y = x Wᵀ`, f32 or int8-quantized.
+/// A dense operator `y = x Wᵀ`, f32 or int8-quantized.  Int8 weights are
+/// prepared for every backend layout at construction (plan time).
 #[derive(Clone, Debug)]
 enum QDense {
     F32(Tensor),
-    I8(QMatrix),
+    I8(PreparedQMatrix),
 }
 
 impl QDense {
     fn from(w: &Tensor, p: Precision) -> QDense {
         match p {
             Precision::F32 => QDense::F32(w.clone()),
-            Precision::Int8 => QDense::I8(quantize(w)),
+            Precision::Int8 => QDense::I8(PreparedQMatrix::new(quantize(w))),
         }
     }
 
@@ -64,61 +78,74 @@ impl QDense {
     fn from_entry(e: &Entry) -> QDense {
         match e {
             Entry::F32(t) => QDense::F32(t.clone()),
-            Entry::I8(q) => QDense::I8(q.clone()),
+            Entry::I8(q) => QDense::I8(PreparedQMatrix::new(q.clone())),
         }
     }
 
     fn out_dim(&self) -> usize {
         match self {
             QDense::F32(w) => w.rows(),
-            QDense::I8(q) => q.q.rows(),
+            QDense::I8(q) => q.n(),
         }
     }
 
     fn in_dim(&self) -> usize {
         match self {
             QDense::F32(w) => w.cols(),
-            QDense::I8(q) => q.q.cols(),
+            QDense::I8(q) => q.k(),
         }
     }
 
-    /// Apply to (m, k) activations.
-    fn apply(&self, x: &Tensor) -> Tensor {
+    /// Apply to (m, k) activations, writing into `out` (per-call
+    /// activation scale — the time-batched non-recurrent path).
+    fn apply_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        out: &mut Tensor,
+    ) {
         match self {
-            QDense::F32(w) => gemm_f32(x, w, None),
+            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
             QDense::I8(qw) => {
                 let (m, k) = (x.rows(), x.cols());
-                let mut xq = vec![0i8; m * k];
+                qs.xq.resize(m * k, 0);
                 // per-row dynamic quantization would be more accurate; the
                 // paper (and farm) use per-call scales — do the same.
-                let sx = quantize_into(x.data(), &mut xq);
-                let xq = TensorI8::new(&[m, k], xq).unwrap();
-                qgemm_farm(&xq, &qw.q, sx, qw.scale)
+                let sx = quantize_into(x.data(), &mut qs.xq[..m * k]);
+                be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out);
             }
         }
     }
 
     /// Apply to (m, k) activations where each row belongs to an
     /// *independent stream*: dynamic quantization runs per row, so the
-    /// result is bit-identical to m separate batch-1 [`QDense::apply`]
-    /// calls while the weight matrix streams through cache once.
-    fn apply_rows(&self, x: &Tensor) -> Tensor {
+    /// result is bit-identical to m separate batch-1
+    /// [`QDense::apply_into`] calls while the weight matrix streams
+    /// through cache once.
+    fn apply_rows_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        out: &mut Tensor,
+    ) {
         match self {
-            QDense::F32(w) => gemm_f32(x, w, None),
+            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
             QDense::I8(qw) => {
                 let (m, k) = (x.rows(), x.cols());
-                let mut xq = vec![0i8; m * k];
-                let mut sx = vec![0f32; m];
+                qs.xq.resize(m * k, 0);
+                qs.sx.resize(m, 0.0);
                 for i in 0..m {
-                    sx[i] = quantize_into(x.row(i), &mut xq[i * k..(i + 1) * k]);
+                    qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
                 }
-                let xq = TensorI8::new(&[m, k], xq).unwrap();
-                qgemm_farm_rows(&xq, &qw.q, &sx, qw.scale)
+                be.qgemm_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
             }
         }
     }
 
-    /// Weight bytes on "device".
+    /// Weight bytes on "device" (the packed plan-time copy is derived
+    /// data and not counted — it never ships in an artifact).
     fn bytes(&self) -> usize {
         match self {
             QDense::F32(w) => w.len() * 4,
@@ -158,19 +185,41 @@ impl Op {
         }
     }
 
-    fn apply(&self, x: &Tensor) -> Tensor {
+    /// Per-call-quantized apply into `out` (`mid` holds the factored
+    /// intermediate; untouched for dense ops).
+    fn apply_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        out: &mut Tensor,
+    ) {
         match self {
-            Op::Dense(w) => w.apply(x),
-            Op::LowRank { u, v } => u.apply(&v.apply(x)),
+            Op::Dense(w) => w.apply_into(be, x, qs, out),
+            Op::LowRank { u, v } => {
+                v.apply_into(be, x, qs, mid);
+                u.apply_into(be, mid, qs, out);
+            }
         }
     }
 
     /// Per-row-quantized apply (the pooled recurrent path); see
-    /// [`QDense::apply_rows`].
-    fn apply_rows(&self, x: &Tensor) -> Tensor {
+    /// [`QDense::apply_rows_into`].
+    fn apply_rows_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        out: &mut Tensor,
+    ) {
         match self {
-            Op::Dense(w) => w.apply_rows(x),
-            Op::LowRank { u, v } => u.apply_rows(&v.apply_rows(x)),
+            Op::Dense(w) => w.apply_rows_into(be, x, qs, out),
+            Op::LowRank { u, v } => {
+                v.apply_rows_into(be, x, qs, mid);
+                u.apply_rows_into(be, mid, qs, out);
+            }
         }
     }
 
@@ -270,10 +319,102 @@ impl Breakdown {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Scratch arena: every buffer the block executor reuses.
+// ---------------------------------------------------------------------------
+
+/// Reusable activation-quantization buffers, threaded through every GEMM
+/// call so dynamic quantization never allocates in steady state.
+#[derive(Default)]
+pub(crate) struct QuantScratch {
+    /// quantized activation panel (row-major, sized m·k per call)
+    pub(crate) xq: Vec<i8>,
+    /// per-row dynamic scales (the pooled recurrent path)
+    pub(crate) sx: Vec<f32>,
+}
+
+impl QuantScratch {
+    pub(crate) fn footprint_bytes(&self) -> usize {
+        self.xq.capacity() + self.sx.capacity() * 4
+    }
+}
+
+/// The per-stream scratch arena: every tensor the block executor writes,
+/// allocated lazily on the first (warmup) block and reused verbatim from
+/// then on.  [`Scratch::grow_events`] counts post-warmup growth — the
+/// steady-state contract is that it stays at zero
+/// (`rust/tests/alloc_free.rs` additionally asserts zero allocator hits
+/// with a counting global allocator).
+#[derive(Default)]
+pub struct Scratch {
+    /// staging copy of one raw block (drained from the stream buffer)
+    pub(crate) chunk: Vec<f32>,
+    pub(crate) qs: QuantScratch,
+    /// factored-op intermediate (`x Vᵀ`)
+    pub(crate) mid: Tensor,
+    /// layer ping-pong: `a` holds the current activations
+    pub(crate) a: Tensor,
+    pub(crate) b: Tensor,
+    /// non-recurrent gate pre-activations of the current layer
+    pub(crate) gx: Tensor,
+    /// recurrent gate pre-activations of the current step
+    pub(crate) gh: Tensor,
+    /// head intermediates
+    pub(crate) fc_y: Tensor,
+    /// log-prob rows of the most recent block (log-softmax in place)
+    pub(crate) logp: Tensor,
+    high_water: usize,
+    grow_events: u64,
+}
+
+impl Scratch {
+    pub(crate) fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Log-prob rows of the most recent block processed into this arena.
+    pub fn logp(&self) -> &Tensor {
+        &self.logp
+    }
+
+    /// Total bytes currently reserved by the arena's buffers.
+    pub fn footprint_bytes(&self) -> usize {
+        self.chunk.capacity() * 4
+            + self.qs.footprint_bytes()
+            + 4 * (self.mid.capacity()
+                + self.a.capacity()
+                + self.b.capacity()
+                + self.gx.capacity()
+                + self.gh.capacity()
+                + self.fc_y.capacity()
+                + self.logp.capacity())
+    }
+
+    /// Times the arena grew **after** its warmup block — zero in steady
+    /// state (the debug-friendly allocation counter of DESIGN.md §4).
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Fold the current footprint into the growth counter (called once
+    /// per block by the executor).
+    pub(crate) fn settle(&mut self) {
+        let fp = self.footprint_bytes();
+        if fp > self.high_water {
+            if self.high_water > 0 {
+                self.grow_events += 1;
+            }
+            self.high_water = fp;
+        }
+    }
+}
+
 /// The streaming embedded engine.
 pub struct Engine {
     pub precision: Precision,
     pub time_batch: usize,
+    backend: &'static dyn GemmBackend,
+    backend_sel: BackendSel,
     conv: Vec<ConvLayer>,
     grus: Vec<GruLayer>,
     fc: Op,
@@ -287,12 +428,14 @@ pub struct Engine {
 }
 
 /// Per-stream session state, split from the shared [`Engine`] weights:
-/// carried GRU hidden vectors + the raw-frame ring buffer.  One of these
-/// exists per live utterance; the stream pool lock-steps many of them
-/// against a single engine.
+/// carried GRU hidden vectors, the raw-frame ring buffer, and the
+/// [`Scratch`] arena of the block executor.  One of these exists per
+/// live utterance; the stream pool lock-steps many of them against a
+/// single engine.
 pub struct StreamState {
     pub(crate) h: Vec<Tensor>,
     pub(crate) buf: Vec<f32>,
+    pub(crate) scratch: Scratch,
 }
 
 impl StreamState {
@@ -300,13 +443,30 @@ impl StreamState {
     pub fn buffered_len(&self) -> usize {
         self.buf.len()
     }
+
+    /// Log-prob rows of the most recent block processed by
+    /// [`Engine::pump_block`] (borrowed from the scratch arena).
+    pub fn block_logp(&self) -> &Tensor {
+        self.scratch.logp()
+    }
+
+    /// Bytes reserved by this stream's scratch arena.
+    pub fn scratch_footprint(&self) -> usize {
+        self.scratch.footprint_bytes()
+    }
+
+    /// Post-warmup scratch growth events (zero in steady state).
+    pub fn scratch_grow_events(&self) -> u64 {
+        self.scratch.grow_events()
+    }
 }
 
 impl Engine {
     /// Build from trained parameters. `scheme` is the artifact scheme
     /// string ("unfactored" | "partial" | "split" | "joint" — joint is not
     /// supported on the embedded path, matching the paper's choice of
-    /// partial factorization for deployment).
+    /// partial factorization for deployment).  The GEMM backend defaults
+    /// to [`BackendSel::Auto`]; see [`Engine::with_backend`].
     pub fn from_params(
         dims: &ModelDims,
         scheme: &str,
@@ -356,6 +516,8 @@ impl Engine {
         Ok(Engine {
             precision,
             time_batch: time_batch.max(1),
+            backend: kernels::resolve(BackendSel::Auto)?,
+            backend_sel: BackendSel::Auto,
             conv,
             grus,
             fc: Op::from_params(params, "fc", precision)?,
@@ -372,7 +534,8 @@ impl Engine {
     /// Build directly from a ladder artifact's typed entries
     /// ([`crate::registry`], DESIGN.md §8): int8 weight entries install
     /// their stored quantized matrices verbatim — **no SVD and no
-    /// re-quantization at load** — while biases stay f32.
+    /// re-quantization at load** — while biases stay f32.  Backend
+    /// layouts ([`PreparedQMatrix`]) are packed here, once, at load.
     ///
     /// Decoding is bit-identical to an engine built by
     /// [`Engine::from_params`] at [`Precision::Int8`] from the same
@@ -481,6 +644,8 @@ impl Engine {
         Ok(Engine {
             precision: if any_i8 { Precision::Int8 } else { Precision::F32 },
             time_batch: time_batch.max(1),
+            backend: kernels::resolve(BackendSel::Auto)?,
+            backend_sel: BackendSel::Auto,
             conv,
             grus,
             fc,
@@ -494,14 +659,41 @@ impl Engine {
         })
     }
 
+    /// Select the GEMM backend (`--backend` on the CLI; DESIGN.md §4
+    /// dispatch rules).  Int8 decoding is bit-identical across backends;
+    /// `simd` may differ from scalar at rounding level on f32 paths.
+    pub fn set_backend(&mut self, sel: BackendSel) -> Result<()> {
+        self.backend = kernels::resolve(sel)?;
+        self.backend_sel = sel;
+        Ok(())
+    }
+
+    /// Builder form of [`Engine::set_backend`].
+    pub fn with_backend(mut self, sel: BackendSel) -> Result<Engine> {
+        self.set_backend(sel)?;
+        Ok(self)
+    }
+
+    /// Name of the backend actually executing (after `auto` resolution).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// The selector this engine was configured with.
+    pub fn backend_sel(&self) -> BackendSel {
+        self.backend_sel
+    }
+
     pub fn new_state(&self) -> StreamState {
         StreamState {
             h: self.grus.iter().map(|g| Tensor::zeros(&[1, g.hidden])).collect(),
             buf: Vec::new(),
+            scratch: Scratch::new(),
         }
     }
 
-    /// Model weight footprint in bytes (the Table-2 acoustic model size).
+    /// Model weight footprint in bytes (the Table-2 acoustic model size;
+    /// plan-time packed copies are derived data and excluded).
     pub fn model_bytes(&self) -> usize {
         let conv: usize = self.conv.iter().map(|c| c.op.bytes() + c.bias.len() * 4).sum();
         let gru: usize = self
@@ -530,6 +722,33 @@ impl Engine {
         macs + self.fc.macs(1) + self.out.macs(1)
     }
 
+    /// Buffer raw feature frames for a stream without processing them
+    /// (pairs with [`Engine::pump_block`]; [`Engine::stream`] is the
+    /// convenience wrapper over both).
+    pub fn buffer_frames(&self, state: &mut StreamState, frames: &[f32], bd: &mut Breakdown) {
+        assert!(frames.len() % self.feat_dim == 0);
+        state.buf.extend_from_slice(frames);
+        bd.frames += (frames.len() / self.feat_dim) as u64;
+    }
+
+    /// Process one full time-batched block from the stream's buffer, if
+    /// one is available; returns whether a block ran.  The block's
+    /// log-prob rows are left in the scratch arena
+    /// ([`StreamState::block_logp`]) — they are valid until the next
+    /// block.  In steady state (shapes warmed up) this path performs
+    /// **zero heap allocations** (`rust/tests/alloc_free.rs`).
+    pub fn pump_block(&self, state: &mut StreamState, bd: &mut Breakdown) -> Result<bool> {
+        let block_raw = self.block_raw_len();
+        if state.buf.len() < block_raw {
+            return Ok(false);
+        }
+        let StreamState { h, buf, scratch } = state;
+        scratch.chunk.resize(block_raw, 0.0);
+        scratch.chunk.copy_from_slice(&buf[..block_raw]);
+        buf.drain(..block_raw);
+        self.run_chunk(h, scratch, bd)
+    }
+
     /// Stream raw feature frames; returns log-prob rows for each completed
     /// output step.  Feed arbitrary-size chunks; leftovers are buffered.
     pub fn stream(
@@ -538,17 +757,13 @@ impl Engine {
         frames: &[f32],
         bd: &mut Breakdown,
     ) -> Result<Vec<Vec<f32>>> {
-        assert!(frames.len() % self.feat_dim == 0);
-        state.buf.extend_from_slice(frames);
-        bd.frames += (frames.len() / self.feat_dim) as u64;
-
-        // process in blocks of time_batch output steps
-        let raw_per_step = self.total_stride;
-        let block_raw = self.time_batch * raw_per_step * self.feat_dim;
+        self.buffer_frames(state, frames, bd);
         let mut outputs = Vec::new();
-        while state.buf.len() >= block_raw {
-            let chunk: Vec<f32> = state.buf.drain(..block_raw).collect();
-            outputs.extend(self.process_block(state, &chunk, bd)?);
+        while self.pump_block(state, bd)? {
+            let logp = state.scratch.logp();
+            for r in 0..logp.rows() {
+                outputs.push(logp.row(r).to_vec());
+            }
         }
         Ok(outputs)
     }
@@ -561,48 +776,72 @@ impl Engine {
         }
         let raw_per_step = self.total_stride * self.feat_dim;
         let steps = state.buf.len().div_ceil(raw_per_step);
-        let mut chunk: Vec<f32> = state.buf.drain(..).collect();
-        chunk.resize(steps * raw_per_step, 0.0);
-        self.process_block(state, &chunk, bd)
+        let StreamState { h, buf, scratch } = state;
+        scratch.chunk.resize(buf.len(), 0.0);
+        scratch.chunk.copy_from_slice(buf);
+        scratch.chunk.resize(steps * raw_per_step, 0.0);
+        buf.clear();
+        self.run_chunk(h, scratch, bd)?;
+        let logp = state.scratch.logp();
+        Ok((0..logp.rows()).map(|r| logp.row(r).to_vec()).collect())
     }
 
     // -- staged primitives -------------------------------------------------
     //
-    // `process_block` (single stream) and `StreamPool::pump` (m streams,
+    // `run_chunk` (single stream) and `StreamPool::pump` (m streams,
     // lock-stepped) are both built from these, which is what makes pooled
     // decoding bit-identical to sequential decoding by construction.
+    // Every primitive writes into caller-owned scratch tensors.
 
     /// Frontend: stack-and-project conv layers over one raw chunk
-    /// (time-batched by nature).  Returns `(T, d)` activations.
-    pub(crate) fn frontend(&self, chunk: &[f32], bd: &mut Breakdown) -> Result<Tensor> {
+    /// (time-batched by nature).  Ping-pongs `a`/`b`; the `(T, d)` result
+    /// is left in `a`.
+    pub(crate) fn frontend_into(
+        &self,
+        chunk: &[f32],
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        a: &mut Tensor,
+        b: &mut Tensor,
+        bd: &mut Breakdown,
+    ) {
         let t_raw = chunk.len() / self.feat_dim;
-        let mut x = Tensor::new(&[t_raw, self.feat_dim], chunk.to_vec())?;
+        a.reset(&[t_raw, self.feat_dim]);
+        a.data_mut().copy_from_slice(chunk);
         let t0 = std::time::Instant::now();
         for c in &self.conv {
-            let (t, f) = (x.rows(), x.cols());
+            let (t, f) = (a.rows(), a.cols());
             let t2 = t / c.context;
-            let stacked = Tensor::new(&[t2, c.context * f], x.data()[..t2 * c.context * f].to_vec())?;
-            let mut y = c.op.apply(&stacked);
+            // stack: reinterpret the prefix as (t2, context·f) in place
+            a.reset(&[t2, c.context * f]);
+            c.op.apply_into(self.backend, a, qs, mid, b);
             bd.macs += c.op.macs(t2);
             for row in 0..t2 {
-                let r = y.row_mut(row);
-                for (v, b) in r.iter_mut().zip(&c.bias) {
-                    *v = (*v + b).max(0.0); // bias + ReLU
+                let r = b.row_mut(row);
+                for (v, bias) in r.iter_mut().zip(&c.bias) {
+                    *v = (*v + bias).max(0.0); // bias + ReLU
                 }
             }
-            x = y;
+            std::mem::swap(a, b);
         }
         bd.frontend += t0.elapsed().as_secs_f64();
-        Ok(x)
     }
 
     /// Non-recurrent GEMM + bias for GRU layer `li`, batched across the
-    /// whole block (§4).
-    pub(crate) fn nonrec_block(&self, li: usize, x: &Tensor, bd: &mut Breakdown) -> Tensor {
+    /// whole block (§4), into `gx`.
+    pub(crate) fn nonrec_block_into(
+        &self,
+        li: usize,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        gx: &mut Tensor,
+        bd: &mut Breakdown,
+    ) {
         let g = &self.grus[li];
         let t = x.rows();
         let t0 = std::time::Instant::now();
-        let mut gx = g.nonrec.apply(x);
+        g.nonrec.apply_into(self.backend, x, qs, mid, gx);
         bd.macs += g.nonrec.macs(t);
         for row in 0..t {
             let r = gx.row_mut(row);
@@ -611,73 +850,92 @@ impl Engine {
             }
         }
         bd.nonrec += t0.elapsed().as_secs_f64();
-        gx
     }
 
     /// One recurrent GEMM for layer `li` over `h` = (m, H) — the m rows
     /// are independent streams' hidden states, lock-stepped into a single
-    /// batch-m farm call with per-row activation scales.
-    pub(crate) fn rec_gates(&self, li: usize, h: &Tensor, bd: &mut Breakdown) -> Tensor {
+    /// batch-m farm call with per-row activation scales — into `gh`.
+    pub(crate) fn rec_gates_into(
+        &self,
+        li: usize,
+        h: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        gh: &mut Tensor,
+        bd: &mut Breakdown,
+    ) {
         let g = &self.grus[li];
         let t1 = std::time::Instant::now();
-        let gh = g.rec.apply_rows(h);
+        g.rec.apply_rows_into(self.backend, h, qs, mid, gh);
         bd.macs += g.rec.macs(h.rows());
         bd.rec += t1.elapsed().as_secs_f64();
-        gh
     }
 
-    /// FC + output projection + log-softmax over the block's GRU outputs.
-    pub(crate) fn head(&self, x: &Tensor, bd: &mut Breakdown) -> Vec<Vec<f32>> {
+    /// FC + output projection + in-place log-softmax over the block's GRU
+    /// outputs; log-prob rows land in `logp`.
+    pub(crate) fn head_into(
+        &self,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        fc_y: &mut Tensor,
+        logp: &mut Tensor,
+        bd: &mut Breakdown,
+    ) {
         let t3 = std::time::Instant::now();
         let t = x.rows();
-        let mut y = self.fc.apply(x);
+        self.fc.apply_into(self.backend, x, qs, mid, fc_y);
         bd.macs += self.fc.macs(t);
         for row in 0..t {
-            let r = y.row_mut(row);
+            let r = fc_y.row_mut(row);
             for (v, b) in r.iter_mut().zip(&self.fc_bias) {
                 *v = (*v + b).max(0.0);
             }
         }
-        let mut logits = self.out.apply(&y);
+        self.out.apply_into(self.backend, fc_y, qs, mid, logp);
         bd.macs += self.out.macs(t);
-        let mut out_rows = Vec::with_capacity(t);
         for row in 0..t {
-            let r = logits.row_mut(row);
+            let r = logp.row_mut(row);
             for (v, b) in r.iter_mut().zip(&self.out_bias) {
                 *v += b;
             }
-            out_rows.push(log_softmax(r));
+            log_softmax_in_place(r);
         }
         bd.fc_out += t3.elapsed().as_secs_f64();
-        out_rows
     }
 
-    fn process_block(
+    /// The block executor: run the staged primitives over the chunk
+    /// staged in `scratch.chunk`, leaving log-prob rows in
+    /// `scratch.logp`.  Allocation-free once the arena is warm.
+    fn run_chunk(
         &self,
-        state: &mut StreamState,
-        chunk: &[f32],
+        h: &mut [Tensor],
+        scratch: &mut Scratch,
         bd: &mut Breakdown,
-    ) -> Result<Vec<Vec<f32>>> {
-        let mut x = self.frontend(chunk, bd)?;
+    ) -> Result<bool> {
+        let Scratch { chunk, qs, mid, a, b, gx, gh, fc_y, logp, .. } = scratch;
+        self.frontend_into(chunk, qs, mid, a, b, bd);
 
         // GRU stack: time-batched nonrec, then sequential recurrent steps
         // at stream-batch 1
         for (li, g) in self.grus.iter().enumerate() {
-            let gx = self.nonrec_block(li, &x, bd);
+            self.nonrec_block_into(li, a, qs, mid, gx, bd);
             let t = gx.rows();
-            let h_dim = g.hidden;
-            let mut outputs = Tensor::zeros(&[t, h_dim]);
+            b.reset(&[t, g.hidden]);
             for step in 0..t {
-                let gh = self.rec_gates(li, &state.h[li], bd);
+                self.rec_gates_into(li, &h[li], qs, mid, gh, bd);
                 let t2 = std::time::Instant::now();
-                gru_cell(gx.row(step), gh.row(0), state.h[li].data(), outputs.row_mut(step));
-                state.h[li] = Tensor::new(&[1, h_dim], outputs.row(step).to_vec())?;
+                gru_cell(gx.row(step), gh.row(0), h[li].data(), b.row_mut(step));
+                // in-place hidden update — no per-step Tensor allocation
+                h[li].data_mut().copy_from_slice(b.row(step));
                 bd.gates += t2.elapsed().as_secs_f64();
             }
-            x = outputs;
+            std::mem::swap(a, b);
         }
 
-        Ok(self.head(&x, bd))
+        self.head_into(a, qs, mid, fc_y, logp, bd);
+        scratch.settle();
+        Ok(true)
     }
 
     /// Transcribe a whole utterance (streaming internally); returns
@@ -772,10 +1030,15 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-fn log_softmax(row: &[f32]) -> Vec<f32> {
+/// In-place log-softmax over one logits row (same arithmetic as the
+/// previous allocating version, so outputs are bit-identical).
+#[inline]
+fn log_softmax_in_place(row: &mut [f32]) {
     let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
-    row.iter().map(|v| v - lse).collect()
+    for v in row {
+        *v -= lse;
+    }
 }
 
 #[cfg(test)]
@@ -1023,5 +1286,50 @@ mod tests {
         let dims = tiny_dims();
         let p = tiny_params(&dims, true, 8);
         assert!(Engine::from_params(&dims, "joint", &p, Precision::F32, 4).is_err());
+    }
+
+    #[test]
+    fn backend_switch_is_bit_identical_on_int8() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 20);
+        let mut rng = Pcg64::seeded(21);
+        let feats = Tensor::randn(&[24, 8], 0.7, &mut rng);
+        let base = Engine::from_params(&dims, "partial", &p, Precision::Int8, 4)
+            .unwrap()
+            .with_backend(BackendSel::Scalar)
+            .unwrap();
+        let mut b0 = Breakdown::default();
+        let (t0, r0) = base.transcribe(&feats, &mut b0).unwrap();
+        for sel in [BackendSel::Blocked, BackendSel::Auto] {
+            let eng = Engine::from_params(&dims, "partial", &p, Precision::Int8, 4)
+                .unwrap()
+                .with_backend(sel)
+                .unwrap();
+            let mut bd = Breakdown::default();
+            let (t, r) = eng.transcribe(&feats, &mut bd).unwrap();
+            assert_eq!(t, t0, "{sel} transcript");
+            assert_eq!(r, r0, "{sel} must be bit-identical to scalar on int8");
+        }
+    }
+
+    #[test]
+    fn scratch_stops_growing_after_warmup() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 22);
+        let eng = Engine::from_params(&dims, "partial", &p, Precision::Int8, 2).unwrap();
+        let mut state = eng.new_state();
+        let mut bd = Breakdown::default();
+        let mut rng = Pcg64::seeded(23);
+        let block = eng.block_raw_len();
+        let feats = Tensor::randn(&[4 * block / 8, 8], 0.7, &mut rng);
+        eng.stream(&mut state, feats.data(), &mut bd).unwrap(); // warm
+        let fp = state.scratch_footprint();
+        assert!(fp > 0);
+        for _ in 0..5 {
+            eng.buffer_frames(&mut state, &feats.data()[..block], &mut bd);
+            assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+        }
+        assert_eq!(state.scratch_footprint(), fp, "steady state must not grow the arena");
+        assert_eq!(state.scratch_grow_events(), 0);
     }
 }

@@ -1,0 +1,128 @@
+//! The `blocked` backend: the farm schedule over
+//! [`PackedQMatrix`](super::pack::PackedQMatrix) pre-packed weights.
+//!
+//! Same arithmetic as [`super::scalar`] (exact i32 accumulation →
+//! bit-identical int8 results), different data movement: weights are read
+//! from the NR-panel, KC-strip interleaved layout built once at plan
+//! time.  Inside a panel the four weights a register tile needs for one
+//! activation element are adjacent (`kk·NR + r`), so the inner loop loads
+//! each activation once, feeds four independent i32 accumulator chains,
+//! and walks the weight stream strictly sequentially — the prefetcher's
+//! best case.  There is **no** per-call packing (the gemmlowp mistake at
+//! small batch) and no allocation: `out` is reshaped in place.
+//!
+//! f32 weights are not packed (the embedded deployment path is int8);
+//! the f32 entry point shares [`super::scalar`]'s core, so `blocked` and
+//! `scalar` are bit-identical on f32 too.
+
+use crate::tensor::Tensor;
+
+use super::pack::{KC, NR};
+use super::{scalar, GemmBackend, PreparedQMatrix, RowScales};
+
+/// Core of the packed-panel schedule: for each panel, each activation
+/// row carries 4 i32 accumulators across every k-strip, then writes the
+/// 4 dequantized outputs (ragged last panel writes only the real rows).
+fn qgemm_packed_core(
+    xq: &[i8],
+    m: usize,
+    w: &PreparedQMatrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k) = (w.packed.n(), w.packed.k());
+    assert_eq!(xq.len(), m * k, "blocked activation panel mismatch");
+    out.reset(&[m, n]);
+    let nstrips = k.div_ceil(KC);
+    let npanels = n.div_ceil(NR);
+    for p in 0..npanels {
+        let j0 = p * NR;
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0, 0, 0);
+            for s in 0..nstrips {
+                let k0 = s * KC;
+                let kc = w.packed.strip_cols(s);
+                let panel = w.packed.panel(s, p);
+                for (kk, &xv) in xi[k0..k0 + kc].iter().enumerate() {
+                    let xv = xv as i32;
+                    let wb = kk * NR;
+                    a0 += xv * panel[wb] as i32;
+                    a1 += xv * panel[wb + 1] as i32;
+                    a2 += xv * panel[wb + 2] as i32;
+                    a3 += xv * panel[wb + 3] as i32;
+                }
+            }
+            let scale = scales.get(i);
+            let orow = out.row_mut(i);
+            orow[j0] = a0 as f32 * scale;
+            if j0 + 1 < n {
+                orow[j0 + 1] = a1 as f32 * scale;
+            }
+            if j0 + 2 < n {
+                orow[j0 + 2] = a2 as f32 * scale;
+            }
+            if j0 + 3 < n {
+                orow[j0 + 3] = a3 as f32 * scale;
+            }
+        }
+    }
+}
+
+/// The packed-weight backend (see module docs).
+pub struct BlockedBackend;
+
+impl GemmBackend for BlockedBackend {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn gemm_f32_into(&self, x: &Tensor, w: &Tensor, bias: Option<&[f32]>, out: &mut Tensor) {
+        // f32 weights are not packed; identical to scalar by construction
+        scalar::gemm_f32_core(x, w, bias, out);
+    }
+
+    fn qgemm_farm_into(&self, xq: &[i8], m: usize, w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        qgemm_packed_core(xq, m, w, RowScales::Uniform(sx * w.scale), out);
+    }
+
+    fn qgemm_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
+        qgemm_packed_core(xq, m, w, RowScales::PerRow(sx, w.scale), out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::quant::QMatrix;
+    use crate::tensor::TensorI8;
+
+    #[test]
+    fn blocked_matches_reference_on_ragged_shapes() {
+        let mut rng = Pcg64::seeded(0);
+        let be = BlockedBackend;
+        let shapes = [(1usize, 1usize, 1usize), (1, 5, 3), (3, 7, 7), (2, 9, 257), (5, 66, 300)];
+        for &(m, n, k) in &shapes {
+            let mk = |r: usize, c: usize, rng: &mut Pcg64| {
+                let data = (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+                TensorI8::new(&[r, c], data).unwrap()
+            };
+            let x = mk(m, k, &mut rng);
+            let wq = mk(n, k, &mut rng);
+            let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.03 });
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_into(x.data(), m, &w, 0.011, &mut out);
+            let want = super::super::qgemm_ref(&x, &wq, 0.011, 0.03);
+            assert_eq!(out, want, "({m},{n},{k})");
+        }
+    }
+}

@@ -1,0 +1,498 @@
+//! GEMM kernels — the Rust reproduction of the paper's §4 contribution,
+//! organized as pluggable backends behind the [`GemmBackend`] trait.
+//!
+//! The paper ships hand-written AArch64 kernels ("farm") that beat
+//! gemmlowp by 3–7× at batch sizes 1–4, the regime that dominates
+//! on-device streaming ASR (the recurrent GEMM is strictly batch-1; the
+//! non-recurrent one batches across ≤ 4 timesteps before latency suffers).
+//! Deployment wins in that regime come from memory layout and allocation
+//! discipline as much as arithmetic (Prabhavalkar et al., 1603.08042), so
+//! this module separates the two concerns:
+//!
+//! * **What** is computed — `y = x·wᵀ` with exact i32 accumulation on the
+//!   int8 path — is fixed by the reference functions [`qgemm_farm`],
+//!   [`qgemm_farm_rows`], [`gemm_f32`] and [`qgemm_ref`], and every
+//!   backend must reproduce the int8 results **bit-identically**
+//!   (`rust/tests/backends.rs`).
+//! * **How** it is computed — weight layout, tiling, ISA — is a backend:
+//!
+//! | backend | module | weight layout | notes |
+//! |---|---|---|---|
+//! | `scalar` | [`scalar`] | row-major | the original farm schedule; the reference |
+//! | `blocked` | [`blocked`] | [`PackedQMatrix`] NR-panels | pre-packed once at plan time, k-stripped |
+//! | `simd` | `simd` | row-major | `std::arch` AVX2/NEON, runtime-detected, feature-gated |
+//!
+//! Backends expose allocation-free `*_into` entry points
+//! ([`GemmBackend::gemm_f32_into`], [`GemmBackend::qgemm_farm_into`],
+//! [`GemmBackend::qgemm_farm_rows_into`]) that write into caller-owned
+//! output tensors — the engine's scratch arena ([`crate::infer`]) — so
+//! the steady-state decode loop performs zero heap allocations.
+//!
+//! **Dispatch rules** (see DESIGN.md §4): [`BackendSel`] names a backend;
+//! [`resolve`] maps it to an implementation.  `auto` picks `simd` when
+//! the crate was built with the `simd` feature *and* the CPU supports it
+//! at runtime, else `blocked`.  `simd` without the feature is a
+//! configuration error; `simd` with the feature but without CPU support
+//! silently computes on the scalar path (same results — the backends are
+//! bit-identical on int8).
+//!
+//! [`qgemm_lowp`] remains the gemmlowp contrast case of Figure 6
+//! (pack-compute-unpack **per call**) and is deliberately not a backend:
+//! its per-call packing is the cost the [`PackedQMatrix`] plan-time
+//! packing exists to avoid.
+//!
+//! [`qgemm_farm_rows`] is the batch-m **pooled** entry point: the
+//! [`crate::stream`] pool lock-steps the recurrent GEMMs of m concurrent
+//! utterance streams into one call, with per-row activation scales so the
+//! result stays bit-identical to m independent batch-1 calls.
+//! [`pooled_rec_counts`]/[`sequential_rec_counts`] expose the op/byte
+//! contrast for the roofline projection.
+
+pub mod blocked;
+pub mod pack;
+pub mod scalar;
+#[cfg(feature = "simd")]
+pub mod simd;
+
+pub use blocked::BlockedBackend;
+pub use pack::{PackedQMatrix, KC, NR};
+pub use scalar::{gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, ScalarBackend};
+#[cfg(feature = "simd")]
+pub use simd::SimdBackend;
+
+use std::str::FromStr;
+
+use crate::error::{Error, Result};
+use crate::quant::QMatrix;
+use crate::tensor::{Tensor, TensorI8};
+
+/// Operation/byte accounting for roofline projection (devicesim).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmCounts {
+    /// multiply-accumulate ops
+    pub macs: u64,
+    /// bytes read from "DRAM" (counting each operand stream once, plus
+    /// packing copies where the algorithm makes them)
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+impl GemmCounts {
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+}
+
+/// Counts for `y(m,n) = x(m,k) · w(n,k)ᵀ` under the farm schedule.
+pub fn farm_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    GemmCounts {
+        macs: (m * n * k) as u64,
+        // weights streamed once (n·k), activations reused from L1 (m·k),
+        // output written once (4·m·n f32)
+        bytes_read: (n * k + m * k) as u64,
+        bytes_written: (4 * m * n) as u64,
+    }
+}
+
+/// Counts for the gemmlowp schedule: the pack copies (read + write of
+/// both operands) plus the fixed MR-tile padding of the MAC count.
+pub fn lowp_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    let mp = m.div_ceil(8) * 8; // LOWP_MR register-tile padding
+    GemmCounts {
+        macs: (mp * n * k) as u64,
+        bytes_read: (2 * (n * k + mp * k)) as u64, // stream + packed re-read
+        bytes_written: (n * k + mp * k + 4 * m * n) as u64, // packed copies + output
+    }
+}
+
+/// Counts for one **pooled** recurrent step: `m` concurrent streams'
+/// hidden vectors lock-stepped into a single batch-m farm call
+/// ([`qgemm_farm_rows`]).  The weight matrix streams from memory once
+/// for all `m` streams — this is the whole point of cross-stream
+/// batching (DESIGN.md §6).
+pub fn pooled_rec_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    farm_counts(m, n, k)
+}
+
+/// Counts for the same work done the pre-pool way: `m` independent
+/// batch-1 recurrent GEMMs, each streaming the weight matrix separately.
+/// MACs match [`pooled_rec_counts`]; weight traffic is `m×`.
+pub fn sequential_rec_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    let one = farm_counts(1, n, k);
+    GemmCounts {
+        macs: one.macs * m as u64,
+        bytes_read: one.bytes_read * m as u64,
+        bytes_written: one.bytes_written * m as u64,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prepared weights: every layout a backend may want, built once at plan
+// time (engine construction / registry load) — never per call.
+// ---------------------------------------------------------------------------
+
+/// An int8 weight matrix prepared for all registered backends: the
+/// row-major reference layout (scalar, simd) **plus** the NR-panel
+/// pre-packed layout (blocked), both built exactly once when the engine
+/// is constructed or a registry artifact is loaded.
+#[derive(Clone, Debug)]
+pub struct PreparedQMatrix {
+    /// row-major `(n, k)` int8 weights — the reference layout
+    pub q: TensorI8,
+    /// per-tensor dequantization scale (`w ≈ scale · q`)
+    pub scale: f32,
+    /// panel-interleaved pre-packed copy (see [`PackedQMatrix`])
+    pub packed: PackedQMatrix,
+}
+
+impl PreparedQMatrix {
+    /// Prepare a quantized matrix for every backend (packs once).
+    pub fn new(q: QMatrix) -> PreparedQMatrix {
+        let packed = PackedQMatrix::pack(&q.q);
+        PreparedQMatrix { q: q.q, scale: q.scale, packed }
+    }
+
+    /// Output dimension `n` of `y = x·wᵀ`.
+    pub fn n(&self) -> usize {
+        self.q.rows()
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.q.cols()
+    }
+}
+
+/// Per-output-row dequantization scales, shared by the backend kernels.
+/// `Uniform` carries the pre-multiplied `sx·sw` product (one activation
+/// scale per call); `PerRow` carries the per-stream activation scales and
+/// the weight scale, multiplied per row exactly as `m` batch-1 calls
+/// would — which is what keeps pooled decoding bit-identical.
+#[derive(Clone, Copy)]
+pub(crate) enum RowScales<'a> {
+    Uniform(f32),
+    PerRow(&'a [f32], f32),
+}
+
+impl RowScales<'_> {
+    #[inline]
+    pub(crate) fn get(&self, i: usize) -> f32 {
+        match self {
+            RowScales::Uniform(s) => *s,
+            RowScales::PerRow(sx, sw) => sx[i] * sw,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The backend trait + selection.
+// ---------------------------------------------------------------------------
+
+/// A GEMM execution strategy.  All entry points are `*_into`: they write
+/// into a caller-owned output tensor (reshaped in place via
+/// [`Tensor::reset`], which does not allocate in steady state), so the
+/// engine's hot loop stays allocation-free.
+///
+/// Correctness contract: the int8 entry points accumulate in i32
+/// (exact), so **every** backend must be bit-identical to
+/// [`ScalarBackend`] — and therefore to [`qgemm_ref`] — on the same
+/// inputs.  f32 entry points may differ from scalar only by summation
+/// order (≤ 1e-5 relative).  `rust/tests/backends.rs` enforces both.
+pub trait GemmBackend: Send + Sync {
+    /// Stable backend name (CLI value, bench/report label).
+    fn name(&self) -> &'static str;
+
+    /// `out = x·wᵀ (+ bias)`, f32.  `x: (m, k)`, `w: (n, k)` → `(m, n)`.
+    fn gemm_f32_into(&self, x: &Tensor, w: &Tensor, bias: Option<&[f32]>, out: &mut Tensor);
+
+    /// `out = (sx·xq)·(w.scale·w)ᵀ`: int8 GEMM with one dynamic
+    /// activation scale per call.  `xq` is row-major `(m, k)` with
+    /// `k = w.k()`.
+    fn qgemm_farm_into(&self, xq: &[i8], m: usize, w: &PreparedQMatrix, sx: f32, out: &mut Tensor);
+
+    /// Batch-m int8 GEMM with **per-row** activation scales (the pooled
+    /// recurrent path): row `i` dequantizes by `sx[i]·w.scale`,
+    /// bit-identical to `m` separate batch-1
+    /// [`GemmBackend::qgemm_farm_into`] calls.
+    fn qgemm_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    );
+}
+
+/// Backend selector: the value of the `--backend` CLI flag and the knob
+/// threaded through [`crate::registry`] and [`crate::serve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSel {
+    /// best available: `simd` if compiled in and CPU-supported, else `blocked`
+    Auto,
+    Scalar,
+    Blocked,
+    Simd,
+}
+
+impl FromStr for BackendSel {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<BackendSel> {
+        match s {
+            "auto" => Ok(BackendSel::Auto),
+            "scalar" => Ok(BackendSel::Scalar),
+            "blocked" => Ok(BackendSel::Blocked),
+            "simd" => Ok(BackendSel::Simd),
+            other => Err(Error::Config(format!(
+                "unknown backend '{other}' (want scalar|blocked|simd|auto)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendSel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendSel::Auto => "auto",
+            BackendSel::Scalar => "scalar",
+            BackendSel::Blocked => "blocked",
+            BackendSel::Simd => "simd",
+        })
+    }
+}
+
+/// Resolve a selector to a backend implementation (the dispatch rules of
+/// the module docs).  `Simd` errors when the crate was built without the
+/// `simd` feature; `Auto` never errors.
+pub fn resolve(sel: BackendSel) -> Result<&'static dyn GemmBackend> {
+    match sel {
+        BackendSel::Scalar => Ok(&ScalarBackend),
+        BackendSel::Blocked => Ok(&BlockedBackend),
+        BackendSel::Simd => simd_backend(),
+        BackendSel::Auto => Ok(auto_backend()),
+    }
+}
+
+#[cfg(feature = "simd")]
+fn simd_backend() -> Result<&'static dyn GemmBackend> {
+    Ok(&SimdBackend)
+}
+
+#[cfg(not(feature = "simd"))]
+fn simd_backend() -> Result<&'static dyn GemmBackend> {
+    Err(Error::Config(
+        "backend 'simd' requires building with `--features simd`".into(),
+    ))
+}
+
+/// The `auto` choice: `simd` when compiled in and usable on this CPU,
+/// else `blocked` (whose f32 path is bit-identical to scalar).
+pub fn auto_backend() -> &'static dyn GemmBackend {
+    #[cfg(feature = "simd")]
+    if simd::runtime_available() {
+        return &SimdBackend;
+    }
+    &BlockedBackend
+}
+
+/// Whether the `simd` backend would actually take a vector path on this
+/// CPU.  False when the crate was built without the `simd` feature or
+/// the CPU lacks AVX2/NEON — in that case the backend still *works*
+/// (scalar fallback, same bits) but runs at scalar speed, and benches /
+/// reports should say so (`benches/gemm.rs` records this flag in
+/// `BENCH_gemm.json` so fallback timings are never mistaken for vector
+/// timings).
+#[cfg(feature = "simd")]
+pub fn simd_runtime_available() -> bool {
+    simd::runtime_available()
+}
+
+/// Whether the `simd` backend would actually take a vector path on this
+/// CPU (always false: built without the `simd` feature).
+#[cfg(not(feature = "simd"))]
+pub fn simd_runtime_available() -> bool {
+    false
+}
+
+/// Every backend registered in this build, for the parity suite and the
+/// bench sweep.  The `simd` entry appears only under the `simd` feature
+/// (it still runs — on its scalar fallback — when the CPU lacks support).
+pub fn all_backends() -> Vec<(BackendSel, &'static dyn GemmBackend)> {
+    #[allow(unused_mut)] // mutated only under the simd feature
+    let mut v: Vec<(BackendSel, &'static dyn GemmBackend)> =
+        vec![(BackendSel::Scalar, &ScalarBackend), (BackendSel::Blocked, &BlockedBackend)];
+    #[cfg(feature = "simd")]
+    v.push((BackendSel::Simd, &SimdBackend));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::quant::{quantize, quantize_into};
+
+    fn rand_i8(shape: &[usize], rng: &mut Pcg64) -> TensorI8 {
+        let n: usize = shape.iter().product();
+        let data: Vec<i8> = (0..n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        TensorI8::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn farm_matches_reference_exactly() {
+        let mut rng = Pcg64::seeded(0);
+        for &(m, n, k) in &[(1, 7, 5), (2, 64, 32), (4, 33, 100), (8, 128, 320), (3, 6144 / 64, 320)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w = rand_i8(&[n, k], &mut rng);
+            let got = qgemm_farm(&x, &w, 0.01, 0.02);
+            let want = qgemm_ref(&x, &w, 0.01, 0.02);
+            assert_eq!(got, want, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn lowp_matches_reference_exactly() {
+        let mut rng = Pcg64::seeded(1);
+        for &(m, n, k) in &[(1, 7, 5), (2, 64, 300), (4, 33, 257), (16, 65, 512), (5, 9, 1000)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w = rand_i8(&[n, k], &mut rng);
+            let got = qgemm_lowp(&x, &w, 0.5, 2.0);
+            let want = qgemm_ref(&x, &w, 0.5, 2.0);
+            assert_eq!(got, want, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn farm_and_lowp_agree() {
+        let mut rng = Pcg64::seeded(2);
+        let x = rand_i8(&[4, 320], &mut rng);
+        let w = rand_i8(&[256, 320], &mut rng);
+        let a = qgemm_farm(&x, &w, 0.1, 0.1);
+        let b = qgemm_lowp(&x, &w, 0.1, 0.1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gemm_f32_matches_tensor_matmul() {
+        let mut rng = Pcg64::seeded(3);
+        let x = Tensor::randn(&[5, 37], 1.0, &mut rng);
+        let w = Tensor::randn(&[11, 37], 1.0, &mut rng);
+        let got = gemm_f32(&x, &w, None);
+        let want = x.matmul(&w.transpose()).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_f32_bias() {
+        let x = Tensor::new(&[1, 2], vec![1.0, 1.0]).unwrap();
+        let w = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let got = gemm_f32(&x, &w, Some(&[10.0, 20.0]));
+        assert_eq!(got.data(), &[11.0, 21.0]);
+    }
+
+    #[test]
+    fn quantized_gemm_tracks_f32() {
+        // end-to-end: quantize f32 operands, run farm, compare to f32 GEMM
+        let mut rng = Pcg64::seeded(4);
+        let x = Tensor::randn(&[4, 320], 1.0, &mut rng);
+        let w = Tensor::randn(&[64, 320], 0.1, &mut rng);
+        let qw = quantize(&w);
+        let mut xq_data = vec![0i8; 4 * 320];
+        let sx = quantize_into(x.data(), &mut xq_data);
+        let xq = TensorI8::new(&[4, 320], xq_data).unwrap();
+        let got = qgemm_farm(&xq, &qw.q, sx, qw.scale);
+        let want = gemm_f32(&x, &w, None);
+        // relative error bounded by accumulated quantization noise
+        let scale = want.abs_max().max(1e-6);
+        assert!(got.max_abs_diff(&want) / scale < 0.02);
+    }
+
+    #[test]
+    fn farm_rows_matches_independent_batch1_calls() {
+        // the pooled-step contract: one batch-m call with per-row scales
+        // is bit-identical to m separate batch-1 farm calls
+        let mut rng = Pcg64::seeded(5);
+        for &(m, n, k) in &[(2usize, 48usize, 32usize), (4, 96, 128), (3, 33, 100), (8, 64, 320)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w = rand_i8(&[n, k], &mut rng);
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let pooled = qgemm_farm_rows(&x, &w, &sx, 0.02);
+            for i in 0..m {
+                let xi = TensorI8::new(&[1, k], x.row(i).to_vec()).unwrap();
+                let solo = qgemm_farm(&xi, &w, sx[i], 0.02);
+                assert_eq!(pooled.row(i), solo.row(0), "row {i} of ({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn farm_rows_with_uniform_scale_equals_farm() {
+        let mut rng = Pcg64::seeded(6);
+        let x = rand_i8(&[4, 160], &mut rng);
+        let w = rand_i8(&[96, 160], &mut rng);
+        let a = qgemm_farm(&x, &w, 0.011, 0.017);
+        let b = qgemm_farm_rows(&x, &w, &[0.011; 4], 0.017);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooled_counts_save_weight_traffic() {
+        let (m, n, k) = (4usize, 384usize, 128usize);
+        let pooled = pooled_rec_counts(m, n, k);
+        let seq = sequential_rec_counts(m, n, k);
+        assert_eq!(pooled.macs, seq.macs); // same useful work
+        assert!(pooled.bytes_read < seq.bytes_read);
+        // weight stream dominates: pooled reads ~1/m of the sequential bytes
+        let ratio = seq.bytes_read as f64 / pooled.bytes_read as f64;
+        assert!(ratio > m as f64 * 0.8, "ratio {ratio}");
+        assert_eq!(pooled_rec_counts(1, n, k).bytes_read, sequential_rec_counts(1, n, k).bytes_read);
+    }
+
+    #[test]
+    fn counts_reflect_packing_and_tile_overhead() {
+        let f = farm_counts(1, 6144, 320);
+        let l = lowp_counts(1, 6144, 320);
+        assert_eq!(l.macs, 8 * f.macs); // MR=8 register-tile padding
+        assert!(l.bytes_read > f.bytes_read);
+        assert!(l.bytes_written > f.bytes_written);
+        // at large batch the tile padding vanishes
+        assert_eq!(lowp_counts(16, 64, 64).macs, farm_counts(16, 64, 64).macs);
+    }
+
+    #[test]
+    fn backend_sel_parses_and_resolves() {
+        assert_eq!("scalar".parse::<BackendSel>().unwrap(), BackendSel::Scalar);
+        assert_eq!("blocked".parse::<BackendSel>().unwrap(), BackendSel::Blocked);
+        assert_eq!("simd".parse::<BackendSel>().unwrap(), BackendSel::Simd);
+        assert_eq!("auto".parse::<BackendSel>().unwrap(), BackendSel::Auto);
+        assert!("fast".parse::<BackendSel>().is_err());
+        assert_eq!(resolve(BackendSel::Scalar).unwrap().name(), "scalar");
+        assert_eq!(resolve(BackendSel::Blocked).unwrap().name(), "blocked");
+        // auto always resolves; without the simd feature it is `blocked`
+        let auto = resolve(BackendSel::Auto).unwrap();
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(auto.name(), "blocked");
+        #[cfg(feature = "simd")]
+        assert!(auto.name() == "simd" || auto.name() == "blocked");
+        #[cfg(not(feature = "simd"))]
+        assert!(resolve(BackendSel::Simd).is_err(), "simd needs the feature");
+    }
+
+    #[test]
+    fn all_backends_lists_scalar_and_blocked() {
+        let names: Vec<&str> = all_backends().iter().map(|(_, b)| b.name()).collect();
+        assert!(names.contains(&"scalar"));
+        assert!(names.contains(&"blocked"));
+    }
+
+    #[test]
+    fn prepared_matrix_exposes_dims_and_round_trips() {
+        let mut rng = Pcg64::seeded(7);
+        let w = Tensor::randn(&[37, 53], 0.3, &mut rng);
+        let p = PreparedQMatrix::new(quantize(&w));
+        assert_eq!(p.n(), 37);
+        assert_eq!(p.k(), 53);
+        assert_eq!(p.packed.unpack(), p.q, "plan-time packing must be lossless");
+    }
+}

@@ -1,0 +1,180 @@
+//! Plan-time weight packing: the [`PackedQMatrix`] layout consumed by the
+//! `blocked` backend.
+//!
+//! gemmlowp's pack-compute-unpack loses at small batch because the O(n·k)
+//! packing traffic recurs **every call** (paper §4, [`super::qgemm_lowp`]).
+//! The layout itself is not the problem — paying for it repeatedly is.
+//! `PackedQMatrix` keeps the favorable layout but builds it exactly once,
+//! when the engine is constructed or a registry artifact is loaded;
+//! steady-state GEMMs then only ever read it.
+//!
+//! Layout (`NR = 4` panel rows, `KC = 256` k-strip):
+//!
+//! ```text
+//! source  w (n, k), row-major             packed, strip-major
+//! ┌──────────── k ────────────┐
+//! │ row 0                     │   strip 0 (cols 0..KC):
+//! │ row 1                     │     panel 0: k-interleaved rows 0..4
+//! │ ...                       │       [w00 w10 w20 w30 | w01 w11 w21 w31 | ...]
+//! │ row n-1                   │     panel 1: rows 4..8, same interleave
+//! └───────────────────────────┘     ... panel ⌈n/NR⌉-1 (tail rows zero-padded)
+//!                                 strip 1 (cols KC..2KC): panels again
+//!                                 ... last strip ragged (kc = k mod KC)
+//! ```
+//!
+//! Within a panel, element `(row p·NR + r, col k0 + kk)` lives at
+//! `kk·NR + r`: the four weights a register tile needs for one activation
+//! element are adjacent, so the kernel loads the activation once and
+//! reads weights strictly sequentially.  Rows past `n` in the last panel
+//! are stored as zeros and contribute nothing to the i32 accumulation, so
+//! ragged `n` stays bit-exact; ragged `k` is handled by the final short
+//! strip.  [`PackedQMatrix::unpack`] inverts the layout exactly —
+//! `rust/tests/properties.rs` property-tests the round trip over all
+//! `n mod NR` / `k mod KC` tails, including `k < 8`.
+
+use crate::tensor::TensorI8;
+
+/// Weight rows per packed panel (the register-tile height of the farm
+/// schedule — 4 weight rows of i32 accumulators).
+pub const NR: usize = 4;
+
+/// Columns per k-strip; strips keep the working set of one panel pass
+/// inside L1 for paper-scale `k`.
+pub const KC: usize = 256;
+
+/// An int8 weight matrix in NR-panel, KC-strip interleaved layout,
+/// packed once at plan time (see module docs for the layout diagram).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedQMatrix {
+    n: usize,
+    k: usize,
+    data: Vec<i8>,
+}
+
+impl PackedQMatrix {
+    /// Pack a row-major `(n, k)` matrix.  O(n·k), runs once per weight
+    /// at engine construction / registry load.
+    pub fn pack(wq: &TensorI8) -> PackedQMatrix {
+        let (n, k) = (wq.rows(), wq.cols());
+        let npanels = n.div_ceil(NR);
+        let nstrips = k.div_ceil(KC);
+        let mut data = vec![0i8; npanels * NR * k];
+        for s in 0..nstrips {
+            let k0 = s * KC;
+            let kc = KC.min(k - k0);
+            let strip_base = npanels * NR * k0;
+            for p in 0..npanels {
+                let pbase = strip_base + p * NR * kc;
+                for r in 0..NR {
+                    let row = p * NR + r;
+                    if row >= n {
+                        continue; // padding rows stay zero
+                    }
+                    for (kk, &v) in wq.row(row)[k0..k0 + kc].iter().enumerate() {
+                        data[pbase + kk * NR + r] = v;
+                    }
+                }
+            }
+        }
+        PackedQMatrix { n, k, data }
+    }
+
+    /// Output dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bytes held by the packed copy (footprint accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Columns in strip `s` (`KC`, or the ragged tail for the last strip).
+    #[inline]
+    pub(crate) fn strip_cols(&self, s: usize) -> usize {
+        KC.min(self.k - s * KC)
+    }
+
+    /// The interleaved `(kc × NR)` block of (strip `s`, panel `p`).
+    #[inline]
+    pub(crate) fn panel(&self, s: usize, p: usize) -> &[i8] {
+        let k0 = s * KC;
+        let kc = KC.min(self.k - k0);
+        let npanels = self.n.div_ceil(NR);
+        let base = npanels * NR * k0 + p * NR * kc;
+        &self.data[base..base + NR * kc]
+    }
+
+    /// Exact inverse of [`PackedQMatrix::pack`] (drops the zero padding).
+    pub fn unpack(&self) -> TensorI8 {
+        let mut out = TensorI8::zeros(&[self.n, self.k]);
+        let npanels = self.n.div_ceil(NR);
+        let nstrips = self.k.div_ceil(KC);
+        for s in 0..nstrips {
+            let k0 = s * KC;
+            let kc = self.strip_cols(s);
+            for p in 0..npanels {
+                let panel = self.panel(s, p);
+                for r in 0..NR {
+                    let row = p * NR + r;
+                    if row >= self.n {
+                        continue;
+                    }
+                    for kk in 0..kc {
+                        out.data_mut()[row * self.k + k0 + kk] = panel[kk * NR + r];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn rand_i8(n: usize, k: usize, rng: &mut Pcg64) -> TensorI8 {
+        let data: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        TensorI8::new(&[n, k], data).unwrap()
+    }
+
+    #[test]
+    fn round_trip_exhaustive_small_tails() {
+        // every n mod NR residue × every interesting k tail, incl. k < 8
+        // (the dot_i8 unroll tail) and the KC strip boundary
+        let mut rng = Pcg64::seeded(0);
+        for n in 1..=9usize {
+            for &k in &[1usize, 2, 3, 5, 7, 8, 9, 255, 256, 257, 511, 512, 513] {
+                let w = rand_i8(n, k, &mut rng);
+                let p = PackedQMatrix::pack(&w);
+                assert_eq!(p.unpack(), w, "({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_is_padded_rows_times_k() {
+        let mut rng = Pcg64::seeded(1);
+        let w = rand_i8(6, 300, &mut rng);
+        let p = PackedQMatrix::pack(&w);
+        assert_eq!(p.bytes(), 8 * 300, "6 rows pad to 2 panels of 4");
+        assert_eq!((p.n(), p.k()), (6, 300));
+    }
+
+    #[test]
+    fn strip_accounting_covers_k() {
+        let mut rng = Pcg64::seeded(2);
+        let w = rand_i8(4, 2 * KC + 17, &mut rng);
+        let p = PackedQMatrix::pack(&w);
+        let total: usize = (0..3).map(|s| p.strip_cols(s)).sum();
+        assert_eq!(total, 2 * KC + 17);
+        assert_eq!(p.strip_cols(2), 17);
+    }
+}

@@ -1,0 +1,306 @@
+//! The `scalar` backend — the original portable-Rust farm schedule, now
+//! the reference implementation every other backend must match
+//! bit-identically on int8.
+//!
+//! Two competing int8 implementations reproduce the paper's *algorithmic*
+//! contrast on the host ISA (the 3–7× shape is ISA-independent; see
+//! DESIGN.md §3):
+//!
+//! * [`qgemm_farm`] — the farm strategy: **no packing**. The big weight
+//!   matrix streams through cache exactly once per call in its storage
+//!   layout; the tiny activation panel (m ≤ 8 rows) stays register/L1
+//!   resident. 4-row × m-col register tiles of i32 accumulators.
+//! * [`qgemm_lowp`] — the gemmlowp strategy: **pack-compute-unpack**.
+//!   Both operands are copied into cache-friendly panel layouts before the
+//!   compute pass (amortizes beautifully at large batch, but at batch 1–4
+//!   the O(n·k) packing traffic rivals the GEMM itself).
+//!
+//! Both produce bit-identical i32 accumulations (tested), so Figure 6 is a
+//! pure scheduling comparison.  [`gemm_f32`] is the f32 path of the
+//! embedded engine.
+
+use crate::tensor::{Tensor, TensorI8};
+
+use super::{GemmBackend, PreparedQMatrix, RowScales};
+
+#[inline]
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    // 4-way unrolled to give LLVM independent accumulation chains.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0, 0, 0);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] as i32 * b[i] as i32 + a[i + 4] as i32 * b[i + 4] as i32;
+        s1 += a[i + 1] as i32 * b[i + 1] as i32 + a[i + 5] as i32 * b[i + 5] as i32;
+        s2 += a[i + 2] as i32 * b[i + 2] as i32 + a[i + 6] as i32 * b[i + 6] as i32;
+        s3 += a[i + 3] as i32 * b[i + 3] as i32 + a[i + 7] as i32 * b[i + 7] as i32;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 8..n {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+/// Allocation-free core of [`gemm_f32`]: writes into `out`, reshaped in
+/// place.  Shared by the scalar and blocked backends (f32 weights are not
+/// packed), so both are bit-identical on f32.
+pub(crate) fn gemm_f32_core(x: &Tensor, w: &Tensor, bias: Option<&[f32]>, out: &mut Tensor) {
+    let (m, k) = (x.rows(), x.cols());
+    let (n, k2) = (w.rows(), w.cols());
+    assert_eq!(k, k2, "gemm_f32 contraction mismatch");
+    out.reset(&[m, n]);
+    for i in 0..m {
+        let xi = x.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            orow[j] = dot_f32(xi, w.row(j));
+        }
+        if let Some(b) = bias {
+            for j in 0..n {
+                orow[j] += b[j];
+            }
+        }
+    }
+}
+
+/// Allocation-free core of the farm schedule over raw activation rows:
+/// 4-row weight tiles streamed in storage order against all `m` x-rows,
+/// per-row dequantization scales (see [`RowScales`]).
+pub(crate) fn farm_core(
+    xq: &[i8],
+    m: usize,
+    wq: &TensorI8,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k) = (wq.rows(), wq.cols());
+    assert_eq!(xq.len(), m * k, "farm activation panel mismatch");
+    out.reset(&[m, n]);
+    let mut j = 0;
+    // 4-row weight tiles: stream w rows j..j+4 against all m x-rows.
+    while j + 4 <= n {
+        let w0 = wq.row(j);
+        let w1 = wq.row(j + 1);
+        let w2 = wq.row(j + 2);
+        let w3 = wq.row(j + 3);
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let scale = scales.get(i);
+            let (a0, a1, a2, a3) =
+                (dot_i8(xi, w0), dot_i8(xi, w1), dot_i8(xi, w2), dot_i8(xi, w3));
+            let orow = out.row_mut(i);
+            orow[j] = a0 as f32 * scale;
+            orow[j + 1] = a1 as f32 * scale;
+            orow[j + 2] = a2 as f32 * scale;
+            orow[j + 3] = a3 as f32 * scale;
+        }
+        j += 4;
+    }
+    while j < n {
+        let wj = wq.row(j);
+        for i in 0..m {
+            out.row_mut(i)[j] = dot_i8(&xq[i * k..(i + 1) * k], wj) as f32 * scales.get(i);
+        }
+        j += 1;
+    }
+}
+
+/// `y = x @ wᵀ + bias?`, f32. x: (m, k), w: (n, k) -> (m, n).
+pub fn gemm_f32(x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
+    let mut out = Tensor::zeros(&[0, 0]);
+    gemm_f32_core(x, w, bias, &mut out);
+    out
+}
+
+/// farm-style quantized GEMM: `y = (sx·xq) (sw·wq)ᵀ`.
+///
+/// xq: (m, k) — the small activation panel (batch ≤ ~8 in practice);
+/// wq: (n, k) — the big weight matrix, streamed once, in storage order.
+/// Output tile: 4 weight rows × m activation rows of i32 accumulators
+/// live in registers across the whole k extent.
+pub fn qgemm_farm(xq: &TensorI8, wq: &TensorI8, sx: f32, sw: f32) -> Tensor {
+    assert_eq!(xq.cols(), wq.cols(), "qgemm_farm contraction mismatch");
+    let mut out = Tensor::zeros(&[0, 0]);
+    farm_core(xq.data(), xq.rows(), wq, RowScales::Uniform(sx * sw), &mut out);
+    out
+}
+
+/// Batch-m farm GEMM with **per-row activation scales** — the pooled
+/// recurrent step of the multi-stream engine ([`crate::stream`]).
+///
+/// Each activation row belongs to a different utterance stream and was
+/// quantized independently (`sx[i]` is stream *i*'s dynamic scale), so
+/// row *i* dequantizes as `acc · sx[i] · sw`.  The i32 accumulation and
+/// the per-row scale product are exactly what `m` separate
+/// [`qgemm_farm`] calls at batch 1 would compute, which is what makes
+/// pooled decoding bit-identical to sequential decoding while the big
+/// weight matrix streams through cache only **once** for all `m`
+/// streams (the §4 small-batch sweet spot).
+pub fn qgemm_farm_rows(xq: &TensorI8, wq: &TensorI8, sx: &[f32], sw: f32) -> Tensor {
+    assert_eq!(xq.cols(), wq.cols(), "qgemm_farm_rows contraction mismatch");
+    assert_eq!(xq.rows(), sx.len(), "qgemm_farm_rows needs one scale per row");
+    let mut out = Tensor::zeros(&[0, 0]);
+    farm_core(xq.data(), xq.rows(), wq, RowScales::PerRow(sx, sw), &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// gemmlowp-style: pack both operands, panel compute, unpack.
+// ---------------------------------------------------------------------------
+
+const LOWP_KC: usize = 256; // k-strip
+const LOWP_NR: usize = 4; // weight panel rows
+const LOWP_MR: usize = 8; // activation panel rows (gemmlowp NEON kernels are 8x8/12x4)
+
+/// gemmlowp-style quantized GEMM (pack → compute → unpack).
+///
+/// Faithful to the library's structure, including the two properties that
+/// make it lose at small batch (the paper's §4 point):
+///
+/// 1. **per-call packing** of both operands into `[strip][panel]`
+///    interleaved layouts — O(n·k) copy traffic that only amortizes when
+///    many activation columns reuse the packed weights;
+/// 2. **a fixed MR×NR register tile** (gemmlowp's NEON kernels are
+///    12×4/8×8 etc.): the activation panel is zero-padded up to
+///    `LOWP_MR` rows, so a batch-1 GEMM performs `LOWP_MR×` the useful
+///    multiply-accumulates.  farm instead specializes per batch size.
+///
+/// Exactness is unaffected (padded rows are zero and dropped on unpack);
+/// the cost structure is what changes — which is exactly the Figure-6
+/// story.  This is deliberately **not** a [`GemmBackend`]: its per-call
+/// packing is the cost [`super::PackedQMatrix`] plan-time packing avoids.
+pub fn qgemm_lowp(xq: &TensorI8, wq: &TensorI8, sx: f32, sw: f32) -> Tensor {
+    let (m, k) = (xq.rows(), xq.cols());
+    let (n, k2) = (wq.rows(), wq.cols());
+    assert_eq!(k, k2, "qgemm_lowp contraction mismatch");
+    let scale = sx * sw;
+    let mp = m.div_ceil(LOWP_MR) * LOWP_MR; // fixed-tile row padding
+    let mut acc = vec![0i32; mp * n];
+
+    let nstrips = k.div_ceil(LOWP_KC);
+    // Reusable packing buffers (gemmlowp allocates these per context).
+    let npanels = n.div_ceil(LOWP_NR);
+    let mut wpack = vec![0i8; npanels * LOWP_NR * LOWP_KC];
+    let mut xpack = vec![0i8; mp * LOWP_KC];
+
+    for strip in 0..nstrips {
+        let k0 = strip * LOWP_KC;
+        let kc = LOWP_KC.min(k - k0);
+
+        // pack weights: panel-major, row-interleaved by 4 (zero-padded)
+        for p in 0..npanels {
+            for r in 0..LOWP_NR {
+                let row = p * LOWP_NR + r;
+                let dst = &mut wpack[(p * LOWP_NR + r) * LOWP_KC..][..kc];
+                if row < n {
+                    dst.copy_from_slice(&wq.row(row)[k0..k0 + kc]);
+                } else {
+                    dst.fill(0);
+                }
+            }
+        }
+        // pack activations: strip-contiguous rows, zero-padded to MR
+        xpack.fill(0);
+        for i in 0..m {
+            xpack[i * LOWP_KC..i * LOWP_KC + kc]
+                .copy_from_slice(&xq.row(i)[k0..k0 + kc]);
+        }
+
+        // compute pass over packed memory: full MR×NR tiles always
+        for p in 0..npanels {
+            let base = p * LOWP_NR;
+            let w0 = &wpack[(base) * LOWP_KC..][..kc];
+            let w1 = &wpack[(base + 1) * LOWP_KC..][..kc];
+            let w2 = &wpack[(base + 2) * LOWP_KC..][..kc];
+            let w3 = &wpack[(base + 3) * LOWP_KC..][..kc];
+            for i in 0..mp {
+                let xi = &xpack[i * LOWP_KC..][..kc];
+                let arow = &mut acc[i * n..];
+                let (a0, a1, a2, a3) =
+                    (dot_i8(xi, w0), dot_i8(xi, w1), dot_i8(xi, w2), dot_i8(xi, w3));
+                arow[base] += a0;
+                if base + 1 < n {
+                    arow[base + 1] += a1;
+                }
+                if base + 2 < n {
+                    arow[base + 2] += a2;
+                }
+                if base + 3 < n {
+                    arow[base + 3] += a3;
+                }
+            }
+        }
+    }
+
+    // unpack / dequantize (drops the padded rows)
+    let data: Vec<f32> = acc[..m * n].iter().map(|&a| a as f32 * scale).collect();
+    Tensor::new(&[m, n], data).unwrap()
+}
+
+/// Naive i32 reference for exactness tests.
+pub fn qgemm_ref(xq: &TensorI8, wq: &TensorI8, sx: f32, sw: f32) -> Tensor {
+    let (m, k) = (xq.rows(), xq.cols());
+    let n = wq.rows();
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut a = 0i32;
+            for kk in 0..k {
+                a += xq.row(i)[kk] as i32 * wq.row(j)[kk] as i32;
+            }
+            out.set2(i, j, a as f32 * (sx * sw));
+        }
+    }
+    out
+}
+
+/// The reference backend: the farm schedule over row-major weights, no
+/// packing, exactly the code the bit-identity contract is defined by.
+pub struct ScalarBackend;
+
+impl GemmBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn gemm_f32_into(&self, x: &Tensor, w: &Tensor, bias: Option<&[f32]>, out: &mut Tensor) {
+        gemm_f32_core(x, w, bias, out);
+    }
+
+    fn qgemm_farm_into(&self, xq: &[i8], m: usize, w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        farm_core(xq, m, &w.q, RowScales::Uniform(sx * w.scale), out);
+    }
+
+    fn qgemm_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
+        farm_core(xq, m, &w.q, RowScales::PerRow(sx, w.scale), out);
+    }
+}

@@ -1,0 +1,379 @@
+//! The `simd` backend (cargo feature `simd`): the farm schedule with
+//! `std::arch` vector dot products — AVX2 on x86_64, NEON on aarch64 —
+//! selected by **runtime** CPU detection with a transparent scalar
+//! fallback, so a `--features simd` binary is safe on any host.
+//!
+//! Exactness: the int8 path widens i8 → i16 and multiply-accumulates into
+//! i32 lanes (`_mm256_madd_epi16` / `vmull_s8` + `vpadalq_s16`), which is
+//! exact — integer addition is associative, so lane-order differences
+//! cannot change the result and the backend stays **bit-identical** to
+//! [`super::scalar`] on int8.  The f32 path reorders the summation into
+//! vector lanes, so it may differ from scalar at rounding level (the
+//! parity suite allows ≤ 1e-5 relative).
+//!
+//! Weights are read in the row-major reference layout: with the dot
+//! vectorized along k, row-major already gives sequential weight loads,
+//! and keeping one layout per ISA family avoids a second packed variant.
+
+use crate::tensor::Tensor;
+
+use super::{scalar, GemmBackend, PreparedQMatrix, RowScales};
+
+/// Is an accelerated path actually usable on this CPU at runtime?
+/// (`auto` consults this; without support the backend still works via
+/// the scalar fallback.)
+#[cfg(target_arch = "x86_64")]
+pub fn runtime_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Is an accelerated path actually usable on this CPU at runtime?
+#[cfg(target_arch = "aarch64")]
+pub fn runtime_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Is an accelerated path actually usable on this CPU at runtime?
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn runtime_available() -> bool {
+    false
+}
+
+/// The runtime-detected vector backend (see module docs).
+pub struct SimdBackend;
+
+impl GemmBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn gemm_f32_into(&self, x: &Tensor, w: &Tensor, bias: Option<&[f32]>, out: &mut Tensor) {
+        #[cfg(target_arch = "x86_64")]
+        if runtime_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { x86::gemm_f32_avx2(x, w, bias, out) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if runtime_available() {
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { arm::gemm_f32_neon(x, w, bias, out) };
+            return;
+        }
+        scalar::gemm_f32_core(x, w, bias, out);
+    }
+
+    fn qgemm_farm_into(&self, xq: &[i8], m: usize, w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        farm_dispatch(xq, m, w, RowScales::Uniform(sx * w.scale), out);
+    }
+
+    fn qgemm_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
+        farm_dispatch(xq, m, w, RowScales::PerRow(sx, w.scale), out);
+    }
+}
+
+fn farm_dispatch(
+    xq: &[i8],
+    m: usize,
+    w: &PreparedQMatrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if runtime_available() {
+        // SAFETY: AVX2 support was just verified at runtime.
+        unsafe { x86::farm_avx2(xq, m, &w.q, scales, out) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if runtime_available() {
+        // SAFETY: NEON support was just verified at runtime.
+        unsafe { arm::farm_neon(xq, m, &w.q, scales, out) };
+        return;
+    }
+    scalar::farm_core(xq, m, &w.q, scales, out);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use crate::kernels::RowScales;
+    use crate::tensor::{Tensor, TensorI8};
+
+    /// Exact int8 dot: widen i8→i16, `madd` pairs into i32 lanes, sum.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let av = _mm_loadu_si128(a.as_ptr().add(c * 16).cast());
+            let bv = _mm_loadu_si128(b.as_ptr().add(c * 16).cast());
+            let prod = _mm256_madd_epi16(_mm256_cvtepi8_epi16(av), _mm256_cvtepi8_epi16(bv));
+            acc = _mm256_add_epi32(acc, prod);
+        }
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s)); // swap 64-bit halves
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s)); // swap 32-bit pairs
+        let mut sum = _mm_cvtsi128_si32(s);
+        for i in chunks * 16..n {
+            sum += a[i] as i32 * b[i] as i32;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let av = _mm256_loadu_ps(a.as_ptr().add(c * 8));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(c * 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+        }
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0x1>(s, s));
+        let mut sum = _mm_cvtss_f32(s);
+        for i in chunks * 8..n {
+            sum += a[i] * b[i];
+        }
+        sum
+    }
+
+    /// The farm schedule with AVX2 dots (same 4-row weight tiles as the
+    /// scalar core; int8 results are bit-identical).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn farm_avx2(
+        xq: &[i8],
+        m: usize,
+        wq: &TensorI8,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (n, k) = (wq.rows(), wq.cols());
+        assert_eq!(xq.len(), m * k, "simd activation panel mismatch");
+        out.reset(&[m, n]);
+        let mut j = 0;
+        while j + 4 <= n {
+            let w0 = wq.row(j);
+            let w1 = wq.row(j + 1);
+            let w2 = wq.row(j + 2);
+            let w3 = wq.row(j + 3);
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let scale = scales.get(i);
+                let (a0, a1, a2, a3) = (
+                    dot_i8_avx2(xi, w0),
+                    dot_i8_avx2(xi, w1),
+                    dot_i8_avx2(xi, w2),
+                    dot_i8_avx2(xi, w3),
+                );
+                let orow = out.row_mut(i);
+                orow[j] = a0 as f32 * scale;
+                orow[j + 1] = a1 as f32 * scale;
+                orow[j + 2] = a2 as f32 * scale;
+                orow[j + 3] = a3 as f32 * scale;
+            }
+            j += 4;
+        }
+        while j < n {
+            let wj = wq.row(j);
+            for i in 0..m {
+                out.row_mut(i)[j] =
+                    dot_i8_avx2(&xq[i * k..(i + 1) * k], wj) as f32 * scales.get(i);
+            }
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_f32_avx2(
+        x: &Tensor,
+        w: &Tensor,
+        bias: Option<&[f32]>,
+        out: &mut Tensor,
+    ) {
+        let (m, k) = (x.rows(), x.cols());
+        let (n, k2) = (w.rows(), w.cols());
+        assert_eq!(k, k2, "gemm_f32 contraction mismatch");
+        out.reset(&[m, n]);
+        for i in 0..m {
+            let xi = x.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot_f32_avx2(xi, w.row(j));
+            }
+            if let Some(b) = bias {
+                for j in 0..n {
+                    orow[j] += b[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    use crate::kernels::RowScales;
+    use crate::tensor::{Tensor, TensorI8};
+
+    /// Exact int8 dot: widening `vmull_s8` into i16, pairwise-accumulate
+    /// into i32 lanes, horizontal sum.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let chunks = n / 16;
+        let mut acc = vdupq_n_s32(0);
+        for c in 0..chunks {
+            let av = vld1q_s8(a.as_ptr().add(c * 16));
+            let bv = vld1q_s8(b.as_ptr().add(c * 16));
+            acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(av), vget_low_s8(bv)));
+            acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(av), vget_high_s8(bv)));
+        }
+        let mut sum = vaddvq_s32(acc);
+        for i in chunks * 16..n {
+            sum += a[i] as i32 * b[i] as i32;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_f32_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let av = vld1q_f32(a.as_ptr().add(c * 4));
+            let bv = vld1q_f32(b.as_ptr().add(c * 4));
+            acc = vfmaq_f32(acc, av, bv);
+        }
+        let mut sum = vaddvq_f32(acc);
+        for i in chunks * 4..n {
+            sum += a[i] * b[i];
+        }
+        sum
+    }
+
+    /// The farm schedule with NEON dots (int8 bit-identical to scalar).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn farm_neon(
+        xq: &[i8],
+        m: usize,
+        wq: &TensorI8,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (n, k) = (wq.rows(), wq.cols());
+        assert_eq!(xq.len(), m * k, "simd activation panel mismatch");
+        out.reset(&[m, n]);
+        let mut j = 0;
+        while j + 4 <= n {
+            let w0 = wq.row(j);
+            let w1 = wq.row(j + 1);
+            let w2 = wq.row(j + 2);
+            let w3 = wq.row(j + 3);
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let scale = scales.get(i);
+                let (a0, a1, a2, a3) = (
+                    dot_i8_neon(xi, w0),
+                    dot_i8_neon(xi, w1),
+                    dot_i8_neon(xi, w2),
+                    dot_i8_neon(xi, w3),
+                );
+                let orow = out.row_mut(i);
+                orow[j] = a0 as f32 * scale;
+                orow[j + 1] = a1 as f32 * scale;
+                orow[j + 2] = a2 as f32 * scale;
+                orow[j + 3] = a3 as f32 * scale;
+            }
+            j += 4;
+        }
+        while j < n {
+            let wj = wq.row(j);
+            for i in 0..m {
+                out.row_mut(i)[j] =
+                    dot_i8_neon(&xq[i * k..(i + 1) * k], wj) as f32 * scales.get(i);
+            }
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_f32_neon(
+        x: &Tensor,
+        w: &Tensor,
+        bias: Option<&[f32]>,
+        out: &mut Tensor,
+    ) {
+        let (m, k) = (x.rows(), x.cols());
+        let (n, k2) = (w.rows(), w.cols());
+        assert_eq!(k, k2, "gemm_f32 contraction mismatch");
+        out.reset(&[m, n]);
+        for i in 0..m {
+            let xi = x.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot_f32_neon(xi, w.row(j));
+            }
+            if let Some(b) = bias {
+                for j in 0..n {
+                    orow[j] += b[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{qgemm_farm_rows, qgemm_ref};
+    use crate::prng::Pcg64;
+    use crate::quant::QMatrix;
+    use crate::tensor::TensorI8;
+
+    fn rand_i8(r: usize, c: usize, rng: &mut Pcg64) -> TensorI8 {
+        TensorI8::new(&[r, c], (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn simd_bit_identical_to_reference_incl_unroll_tails() {
+        // k values straddle the 16-lane vector width; whatever path the
+        // host CPU takes (vector or scalar fallback), results are exact
+        let mut rng = Pcg64::seeded(0);
+        let be = SimdBackend;
+        let shapes = [(1usize, 3usize, 1usize), (2, 7, 15), (3, 9, 16), (4, 33, 17), (8, 66, 320)];
+        for &(m, n, k) in &shapes {
+            let x = rand_i8(m, k, &mut rng);
+            let wq = rand_i8(n, k, &mut rng);
+            let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.021 });
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_into(x.data(), m, &w, 0.013, &mut out);
+            assert_eq!(out, qgemm_ref(&x, &wq, 0.013, 0.021), "({m},{n},{k})");
+
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.002 * i as f32).collect();
+            let mut rows = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_rows_into(x.data(), m, &w, &sx, &mut rows);
+            assert_eq!(rows, qgemm_farm_rows(&x, &wq, &sx, 0.021), "rows ({m},{n},{k})");
+        }
+    }
+}

@@ -13,6 +13,7 @@ use tracenorm::data::{Batcher, CorpusSpec, Dataset};
 use tracenorm::error::Result;
 use tracenorm::experiments;
 use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::BackendSel;
 use tracenorm::registry::{ladder_build, Registry};
 use tracenorm::runtime::Runtime;
 use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
@@ -60,6 +61,11 @@ fn run(args: &[String]) -> Result<()> {
 
 fn open_runtime(cli: &Cli) -> Result<Runtime> {
     Runtime::open(cli.flag_str("artifacts", "artifacts"))
+}
+
+/// The `--backend {scalar,blocked,simd,auto}` flag (DESIGN.md §4).
+fn backend_flag(cli: &Cli) -> Result<BackendSel> {
+    cli.flag_str("backend", "auto").parse()
 }
 
 fn info(cli: &Cli) -> Result<()> {
@@ -215,10 +221,12 @@ fn transcribe_cmd(cli: &Cli) -> Result<()> {
     t.run(&mut batcher, None, None)?;
 
     let dims = ctx.rt.manifest().dims("wsj_mini")?.clone();
-    let engine = Engine::from_params(&dims, "partial", &t.params, precision, 4)?;
+    let engine = Engine::from_params(&dims, "partial", &t.params, precision, 4)?
+        .with_backend(backend_flag(cli)?)?;
     println!(
-        "\nembedded engine: {:?}, model {} KB, {} MACs/step",
+        "\nembedded engine: {:?}, backend {}, model {} KB, {} MACs/step",
         precision,
+        engine.backend_name(),
         engine.model_bytes() / 1024,
         engine.macs_per_step()
     );
@@ -301,8 +309,16 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     let seed = cli.flag_usize("seed", 17) as u64;
     let n = cli.flag_usize("utts", 32);
     let ramp_utts = cli.flag_usize("ramp-utts", n / 2).min(n);
-    let reg = Registry::load(Path::new(dir), cli.flag_usize("time-batch", 4))?;
-    println!("registry {dir}: {} tiers", reg.num_tiers());
+    let reg = Registry::load_with_backend(
+        Path::new(dir),
+        cli.flag_usize("time-batch", 4),
+        backend_flag(cli)?,
+    )?;
+    println!(
+        "registry {dir}: {} tiers, backend {}",
+        reg.num_tiers(),
+        reg.tier(0).engine.backend_name()
+    );
     for v in reg.variants() {
         println!(
             "  {}  rank_frac {:.3}  params {}  weights {} KB",
@@ -393,11 +409,14 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
             synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed)
         }
     };
-    let engine =
-        Arc::new(Engine::from_params(&dims, &scheme, &params, precision, time_batch)?);
+    let engine = Arc::new(
+        Engine::from_params(&dims, &scheme, &params, precision, time_batch)?
+            .with_backend(backend_flag(cli)?)?,
+    );
     println!(
-        "engine: {:?}, model {} KB, pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
+        "engine: {:?}, backend {}, model {} KB, pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
         precision,
+        engine.backend_name(),
         engine.model_bytes() / 1024
     );
 

@@ -33,6 +33,7 @@ use crate::checkpoint::{self, Artifact, Entry};
 use crate::error::{Error, Result};
 use crate::infer::Engine;
 use crate::jsonx::Json;
+use crate::kernels::BackendSel;
 use crate::model::{self, ParamSet};
 use crate::quant::quantize;
 use crate::runtime::{ConvDims, ModelDims};
@@ -134,10 +135,23 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Load a ladder directory written by [`ladder_build`] with the
+    /// default ([`BackendSel::Auto`]) GEMM backend.
+    pub fn load(dir: &Path, time_batch: usize) -> Result<Registry> {
+        Registry::load_with_backend(dir, time_batch, BackendSel::Auto)
+    }
+
     /// Load a ladder directory written by [`ladder_build`].  Every
     /// artifact's checksum is verified on read, its metadata is checked
     /// against the manifest row, and all rungs must agree on model dims.
-    pub fn load(dir: &Path, time_batch: usize) -> Result<Registry> {
+    /// Each rung's engine executes on `backend` (`--backend` on the CLI);
+    /// weight packing for the blocked layout happens here, once per rung,
+    /// never at serve time.
+    pub fn load_with_backend(
+        dir: &Path,
+        time_batch: usize,
+        backend: BackendSel,
+    ) -> Result<Registry> {
         let manifest_path = dir.join(LADDER_MANIFEST);
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
             Error::Checkpoint(format!("cannot read {}: {e}", manifest_path.display()))
@@ -175,8 +189,9 @@ impl Registry {
                     )))
                 }
             }
-            let engine =
+            let mut engine =
                 Engine::from_entries(dims.as_ref().unwrap(), &art.entries, time_batch)?;
+            engine.set_backend(backend)?;
             variants.push(Variant { info, engine: Arc::new(engine) });
         }
         variants.sort_by(|a, b| {

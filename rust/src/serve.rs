@@ -61,6 +61,8 @@ impl Default for StreamServeConfig {
 pub struct StreamServeReport {
     pub sessions: usize,
     pub pool_size: usize,
+    /// GEMM backend the engine executed on (after `auto` resolution)
+    pub backend: &'static str,
     /// completed sessions per simulated second
     pub throughput: f64,
     /// arrival → final-transcript latency across sessions
@@ -186,6 +188,7 @@ pub fn stream_serve(
     Ok(StreamServeReport {
         sessions: utts.len(),
         pool_size: cfg.pool_size,
+        backend: pool.engine().backend_name(),
         throughput: utts.len() as f64 / span.max(1e-9),
         session_latency: lat.summary(),
         occupancy,
@@ -253,6 +256,8 @@ pub struct TierReport {
 pub struct LadderServeReport {
     pub sessions: usize,
     pub pool_size: usize,
+    /// GEMM backend every tier's engine executed on
+    pub backend: &'static str,
     pub tiers: Vec<TierReport>,
     pub downshifts: u64,
     pub upshifts: u64,
@@ -419,6 +424,7 @@ pub fn ladder_serve(
     Ok(LadderServeReport {
         sessions: utts.len(),
         pool_size: cfg.pool_size,
+        backend: registry.tier(0).engine.backend_name(),
         tiers: tiers_report,
         downshifts: ctl.downshifts,
         upshifts: ctl.upshifts,
@@ -584,6 +590,7 @@ mod tests {
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 6);
         assert_eq!(r.transcripts.len(), 6);
+        assert!(!r.backend.is_empty(), "report must name the GEMM backend");
         assert!(r.throughput > 0.0);
         assert!(r.session_latency.p50 <= r.session_latency.p95);
         assert!(r.session_latency.p95 <= r.session_latency.p99);

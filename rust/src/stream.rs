@@ -17,6 +17,14 @@
 //! dynamic scale never depends on its pool neighbours (see
 //! `rust/tests/stream_pool.rs`).
 //!
+//! Like the single-stream engine, the pool is a **plan/executor split**:
+//! the shared engine plan (prepared weights + backend) never changes at
+//! serve time, and all per-block buffers — the gather matrix, per-stream
+//! gate/activation tensors, quantization panels — live in a pool-level
+//! scratch arena reused across blocks, so the lock-stepped hot loop does
+//! no per-timestep allocations (`rust/tests/alloc_free.rs` tracks the
+//! arena's growth counters).
+//!
 //! Session lifecycle: [`StreamPool::open`] claims a slot,
 //! [`StreamPool::push_frames`] buffers raw feature frames,
 //! [`StreamPool::pump`] advances every stream that has a full time-batched
@@ -31,7 +39,7 @@ use std::sync::Arc;
 use crate::data::labels_to_text;
 use crate::decoder::{greedy_step, BLANK};
 use crate::error::{Error, Result};
-use crate::infer::{gru_cell, Breakdown, Engine, StreamState};
+use crate::infer::{gru_cell, Breakdown, Engine, Scratch, StreamState};
 use crate::model::ParamSet;
 use crate::prng::Pcg64;
 use crate::runtime::ModelDims;
@@ -103,6 +111,16 @@ impl Session {
         self.prev_label = c;
     }
 
+    /// Absorb a block of log-prob rows (one tensor row per output step).
+    fn absorb_block(&mut self, rows: &Tensor) {
+        self.steps += rows.rows() as u64;
+        for r in 0..rows.rows() {
+            self.decode_row(rows.row(r));
+            self.ready.push(rows.row(r).to_vec());
+        }
+    }
+
+    /// Absorb already-materialized rows (the close/flush path).
     fn absorb(&mut self, rows: Vec<Vec<f32>>) {
         self.steps += rows.len() as u64;
         for r in &rows {
@@ -112,12 +130,73 @@ impl Session {
     }
 }
 
+/// The pool-level scratch arena: the single-stream [`Scratch`] buffer
+/// set (staging chunk, quantization panels, frontend ping-pong, gate and
+/// head tensors) plus the batch-row buffers only the lock-stepped
+/// executor needs.  `xs`/`gxs`/`outs` are indexed by batch row (not
+/// slot), so an m-stream round touches exactly m of each.  Reused across
+/// `pump` calls.
+struct PoolScratch {
+    /// the engine-shaped buffers, shared with the single-stream executor
+    eng: Scratch,
+    /// slot indices of the sessions advancing this round
+    ready: Vec<usize>,
+    /// per-row block activations (frontend output, then layer outputs)
+    xs: Vec<Tensor>,
+    /// per-row non-recurrent gate pre-activations of the current layer
+    gxs: Vec<Tensor>,
+    /// per-row per-layer outputs (swapped into `xs` after each layer)
+    outs: Vec<Tensor>,
+    /// the (m, H) gathered hidden matrix of the pooled recurrent GEMM
+    hmat: Tensor,
+    high_water: usize,
+    grow_events: u64,
+}
+
+impl PoolScratch {
+    fn with_capacity(capacity: usize) -> PoolScratch {
+        PoolScratch {
+            eng: Scratch::default(),
+            ready: Vec::with_capacity(capacity),
+            xs: (0..capacity).map(|_| Tensor::default()).collect(),
+            gxs: (0..capacity).map(|_| Tensor::default()).collect(),
+            outs: (0..capacity).map(|_| Tensor::default()).collect(),
+            hmat: Tensor::default(),
+            high_water: 0,
+            grow_events: 0,
+        }
+    }
+
+    fn footprint_bytes(&self) -> usize {
+        let tensors: usize = self
+            .xs
+            .iter()
+            .chain(&self.gxs)
+            .chain(&self.outs)
+            .chain([&self.hmat])
+            .map(|t| t.capacity() * 4)
+            .sum();
+        self.eng.footprint_bytes() + tensors + self.ready.capacity() * 8
+    }
+
+    fn settle(&mut self) {
+        let fp = self.footprint_bytes();
+        if fp > self.high_water {
+            if self.high_water > 0 {
+                self.grow_events += 1;
+            }
+            self.high_water = fp;
+        }
+    }
+}
+
 /// N concurrent decode sessions sharing one [`Engine`], with the
 /// recurrent GEMMs of all runnable sessions executed as a single batch-m
 /// call per layer per timestep.
 pub struct StreamPool {
     engine: Arc<Engine>,
     slots: Vec<Option<Session>>,
+    scratch: PoolScratch,
     next_id: u64,
     pub stats: PoolStats,
 }
@@ -129,6 +208,7 @@ impl StreamPool {
         StreamPool {
             engine,
             slots: (0..capacity).map(|_| None).collect(),
+            scratch: PoolScratch::with_capacity(capacity),
             next_id: 0,
             stats: PoolStats::default(),
         }
@@ -156,6 +236,18 @@ impl StreamPool {
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Bytes reserved by the pool-level scratch arena.
+    pub fn scratch_footprint(&self) -> usize {
+        self.scratch.footprint_bytes()
+    }
+
+    /// Post-warmup growth events of the pool-level arena — zero once
+    /// every pool batch size has been seen (the allocation-discipline
+    /// counter of `rust/tests/alloc_free.rs`).
+    pub fn scratch_grow_events(&self) -> u64 {
+        self.scratch.grow_events
     }
 
     /// Claim a free slot for a new utterance stream.
@@ -232,76 +324,108 @@ impl StreamPool {
         }
     }
 
-    /// One lock-stepped block across all runnable sessions.
+    /// One lock-stepped block across all runnable sessions.  All buffers
+    /// come from the pool-level scratch arena; the per-timestep loop
+    /// performs no heap allocations in steady state.
     fn pump_block(&mut self, bd: &mut Breakdown) -> Result<usize> {
-        let block_raw = self.engine.block_raw_len();
-        let ready: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.as_ref().is_some_and(|s| s.state.buf.len() >= block_raw))
-            .map(|(i, _)| i)
-            .collect();
-        if ready.is_empty() {
+        let StreamPool { engine, slots, scratch: ps, stats, .. } = self;
+        let block_raw = engine.block_raw_len();
+        ps.ready.clear();
+        for (i, s) in slots.iter().enumerate() {
+            if s.as_ref().is_some_and(|s| s.state.buf.len() >= block_raw) {
+                ps.ready.push(i);
+            }
+        }
+        if ps.ready.is_empty() {
             return Ok(0);
         }
-        let m = ready.len();
-        let t = self.engine.time_batch;
-        let feat = self.engine.feat_dim();
+        let m = ps.ready.len();
+        let t = engine.time_batch;
+        let feat = engine.feat_dim();
 
         // frontend runs per stream (it is non-recurrent and time-batched
         // by nature); this also accounts the raw frames like `stream` does
-        let mut xs: Vec<Tensor> = Vec::with_capacity(m);
-        for &si in &ready {
-            let sess = self.slots[si].as_mut().unwrap();
-            let chunk: Vec<f32> = sess.state.buf.drain(..block_raw).collect();
-            bd.frames += (chunk.len() / feat) as u64;
-            xs.push(self.engine.frontend(&chunk, bd)?);
+        for (row, &si) in ps.ready.iter().enumerate() {
+            let sess = slots[si].as_mut().unwrap();
+            ps.eng.chunk.resize(block_raw, 0.0);
+            ps.eng.chunk.copy_from_slice(&sess.state.buf[..block_raw]);
+            sess.state.buf.drain(..block_raw);
+            bd.frames += (block_raw / feat) as u64;
+            let Scratch { chunk, qs, mid, a, b, .. } = &mut ps.eng;
+            engine.frontend_into(chunk, qs, mid, a, b, bd);
+            // copy (not swap) the result out: keeping every buffer's role
+            // fixed bounds arena warmup at two rounds, and the copy is
+            // tiny next to the layer GEMMs
+            let (fr, fc) = (a.rows(), a.cols());
+            ps.xs[row].reset(&[fr, fc]);
+            ps.xs[row].data_mut().copy_from_slice(ps.eng.a.data());
         }
 
         // GRU stack: per-stream time-batched nonrec, then the pooled
         // recurrent steps — ONE batch-m GEMM per layer per timestep.
         // The gather matrix and hidden states are written in place so the
         // hot loop performs no per-step allocations.
-        for li in 0..self.engine.num_gru_layers() {
-            let h_dim = self.engine.gru_hidden(li);
-            let gxs: Vec<Tensor> =
-                xs.iter().map(|x| self.engine.nonrec_block(li, x, bd)).collect();
-            let mut outs: Vec<Tensor> = (0..m).map(|_| Tensor::zeros(&[t, h_dim])).collect();
-            let mut hmat = Tensor::zeros(&[m, h_dim]);
+        for li in 0..engine.num_gru_layers() {
+            let h_dim = engine.gru_hidden(li);
+            for row in 0..m {
+                engine.nonrec_block_into(
+                    li,
+                    &ps.xs[row],
+                    &mut ps.eng.qs,
+                    &mut ps.eng.mid,
+                    &mut ps.gxs[row],
+                    bd,
+                );
+                ps.outs[row].reset(&[t, h_dim]);
+            }
+            ps.hmat.reset(&[m, h_dim]);
             for step in 0..t {
-                for (row, &si) in ready.iter().enumerate() {
-                    hmat.row_mut(row)
-                        .copy_from_slice(self.slots[si].as_ref().unwrap().state.h[li].data());
+                for (row, &si) in ps.ready.iter().enumerate() {
+                    ps.hmat
+                        .row_mut(row)
+                        .copy_from_slice(slots[si].as_ref().unwrap().state.h[li].data());
                 }
-                let gh = self.engine.rec_gates(li, &hmat, bd);
-                self.stats.pooled_gemms += 1;
-                self.stats.pooled_rows += m as u64;
+                engine.rec_gates_into(
+                    li,
+                    &ps.hmat,
+                    &mut ps.eng.qs,
+                    &mut ps.eng.mid,
+                    &mut ps.eng.gh,
+                    bd,
+                );
+                stats.pooled_gemms += 1;
+                stats.pooled_rows += m as u64;
 
                 let t2 = std::time::Instant::now();
-                for (row, &si) in ready.iter().enumerate() {
-                    let sess = self.slots[si].as_mut().unwrap();
+                for (row, &si) in ps.ready.iter().enumerate() {
+                    let sess = slots[si].as_mut().unwrap();
                     gru_cell(
-                        gxs[row].row(step),
-                        gh.row(row),
+                        ps.gxs[row].row(step),
+                        ps.eng.gh.row(row),
                         sess.state.h[li].data(),
-                        outs[row].row_mut(step),
+                        ps.outs[row].row_mut(step),
                     );
-                    sess.state.h[li].data_mut().copy_from_slice(outs[row].row(step));
+                    // in-place hidden update — the pooled counterpart of
+                    // the engine's double-buffer swap
+                    sess.state.h[li].data_mut().copy_from_slice(ps.outs[row].row(step));
                 }
                 bd.gates += t2.elapsed().as_secs_f64();
             }
-            xs = outs;
+            for row in 0..m {
+                std::mem::swap(&mut ps.xs[row], &mut ps.outs[row]);
+            }
         }
 
         // head + incremental decode, per stream
         let mut produced = 0;
-        for (row, &si) in ready.iter().enumerate() {
-            let rows = self.engine.head(&xs[row], bd);
-            produced += rows.len();
-            self.slots[si].as_mut().unwrap().absorb(rows);
+        for (row, &si) in ps.ready.iter().enumerate() {
+            let Scratch { qs, mid, fc_y, logp, .. } = &mut ps.eng;
+            engine.head_into(&ps.xs[row], qs, mid, fc_y, logp, bd);
+            produced += logp.rows();
+            slots[si].as_mut().unwrap().absorb_block(logp);
         }
-        self.stats.blocks += 1;
+        stats.blocks += 1;
+        ps.settle();
         Ok(produced)
     }
 
@@ -478,5 +602,35 @@ mod tests {
         let mut pool = StreamPool::new(eng, 1);
         let id = pool.open().unwrap();
         assert!(pool.push_frames(id, &[0.0; 41]).is_err());
+    }
+
+    #[test]
+    fn pool_scratch_stops_growing_at_steady_occupancy() {
+        let eng = engine(Precision::Int8);
+        let block = eng.block_raw_len();
+        let mut pool = StreamPool::new(eng, 3);
+        let ids: Vec<StreamId> = (0..3).map(|_| pool.open().unwrap()).collect();
+        let mut rng = Pcg64::seeded(9);
+        let frames = Tensor::randn(&[block / 40, 40], 0.5, &mut rng);
+        let mut bd = Breakdown::default();
+        // warmup: two rounds at full occupancy (the layer ping-pong
+        // buffers alternate roles between blocks, so both parities must
+        // see their steady-state shapes)
+        for _ in 0..2 {
+            for &id in &ids {
+                pool.push_frames(id, frames.data()).unwrap();
+            }
+            pool.pump(&mut bd).unwrap();
+        }
+        let fp = pool.scratch_footprint();
+        assert!(fp > 0);
+        for _ in 0..4 {
+            for &id in &ids {
+                pool.push_frames(id, frames.data()).unwrap();
+            }
+            pool.pump(&mut bd).unwrap();
+        }
+        assert_eq!(pool.scratch_footprint(), fp, "steady-state pump must not grow the arena");
+        assert_eq!(pool.scratch_grow_events(), 0);
     }
 }

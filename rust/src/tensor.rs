@@ -16,6 +16,14 @@ pub struct Tensor {
     data: Vec<f32>,
 }
 
+/// An empty (0, 0) matrix — the initial state of scratch-arena buffers,
+/// which take their real shape on first [`Tensor::reset`].
+impl Default for Tensor {
+    fn default() -> Tensor {
+        Tensor::zeros(&[0, 0])
+    }
+}
+
 impl Tensor {
     pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
         let n: usize = shape.iter().product();
@@ -87,6 +95,25 @@ impl Tensor {
 
     pub fn into_data(self) -> Vec<f32> {
         self.data
+    }
+
+    /// Reshape in place to `shape`, reusing the backing allocation: the
+    /// data vector is resized (new elements zeroed, surviving prefix
+    /// kept) and the shape is overwritten without reallocating.  This is
+    /// the scratch-arena primitive ([`crate::infer`]): once a buffer has
+    /// seen its steady-state shape, later `reset` calls perform **no**
+    /// heap allocation.  Callers are expected to overwrite the contents.
+    pub fn reset(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+    }
+
+    /// Capacity of the backing allocation in elements (allocation
+    /// accounting for the scratch-arena footprint counters).
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
     }
 
     /// 2-D accessors (most weights are matrices).
@@ -358,5 +385,17 @@ mod tests {
     fn frob_norm() {
         let t = Tensor::new(&[2, 2], vec![3., 0., 0., 4.]).unwrap();
         assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reset_reshapes_without_growing_within_capacity() {
+        let mut t = Tensor::zeros(&[4, 8]);
+        let cap = t.capacity();
+        t.reset(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        t.reset(&[4, 8]);
+        assert_eq!(t.shape(), &[4, 8]);
+        assert_eq!(t.capacity(), cap, "shrink-then-grow must reuse the allocation");
     }
 }

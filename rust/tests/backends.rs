@@ -1,0 +1,178 @@
+//! Backend parity suite (DESIGN.md §4): every registered GEMM backend
+//! must be **bit-identical** to the scalar reference — and therefore to
+//! `qgemm_ref` — on the int8 entry points (i32 accumulation is exact),
+//! and within 1e-5 (relative) of scalar on f32.  Runs under both the
+//! default build and `--features simd` (scripts/ci.sh exercises both).
+
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::{all_backends, qgemm_ref, BackendSel, GemmBackend, PreparedQMatrix};
+use tracenorm::prng::Pcg64;
+use tracenorm::quant::QMatrix;
+use tracenorm::stream::{demo_dims, synthetic_params, StreamPool};
+use tracenorm::tensor::{Tensor, TensorI8};
+
+fn rand_i8(r: usize, c: usize, rng: &mut Pcg64) -> TensorI8 {
+    TensorI8::new(&[r, c], (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect())
+        .unwrap()
+}
+
+/// The shape grid of the parity contract: every m ∈ 1..=8, with odd and
+/// ragged n/k — n over all mod-4 residues, k below the 8-wide unroll
+/// tail, straddling the 256-col pack strip, and paper-scale.
+fn parity_shapes() -> Vec<(usize, usize, usize)> {
+    let mut shapes = Vec::new();
+    for m in 1..=8usize {
+        for &(n, k) in &[
+            (1usize, 1usize),
+            (3, 3),
+            (5, 7), // k < 8: the dot_i8 unroll tail
+            (7, 5),
+            (33, 31),
+            (34, 100),
+            (64, 255),
+            (65, 257), // k straddles the KC=256 strip boundary
+            (96, 320),
+        ] {
+            shapes.push((m, n, k));
+        }
+    }
+    shapes
+}
+
+#[test]
+fn int8_backends_bit_identical_to_reference() {
+    let mut rng = Pcg64::seeded(1);
+    for (m, n, k) in parity_shapes() {
+        let x = rand_i8(m, k, &mut rng);
+        let wq = rand_i8(n, k, &mut rng);
+        let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.021 });
+        let want = qgemm_ref(&x, &wq, 0.013, 0.021);
+        for (_, be) in all_backends() {
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_into(x.data(), m, &w, 0.013, &mut out);
+            assert_eq!(out, want, "{} qgemm_farm_into ({m},{n},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn int8_farm_rows_bit_identical_to_batch1_calls() {
+    // the pooled contract, per backend: one batch-m call with per-row
+    // scales == m batch-1 calls of the same backend, bit for bit
+    let mut rng = Pcg64::seeded(2);
+    for (m, n, k) in parity_shapes() {
+        let x = rand_i8(m, k, &mut rng);
+        let wq = rand_i8(n, k, &mut rng);
+        let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.017 });
+        let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+        for (_, be) in all_backends() {
+            let mut pooled = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_rows_into(x.data(), m, &w, &sx, &mut pooled);
+            for i in 0..m {
+                let mut solo = Tensor::zeros(&[0, 0]);
+                be.qgemm_farm_into(x.row(i), 1, &w, sx[i], &mut solo);
+                assert_eq!(
+                    pooled.row(i),
+                    solo.row(0),
+                    "{} row {i} of ({m},{n},{k})",
+                    be.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_backends_within_1e5_of_scalar() {
+    let mut rng = Pcg64::seeded(3);
+    for &(m, n, k) in &[(1usize, 7usize, 5usize), (2, 33, 64), (4, 65, 257), (8, 96, 320)] {
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[n, k], 0.1, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.01).collect();
+        let mut want = Tensor::zeros(&[0, 0]);
+        tracenorm::kernels::ScalarBackend.gemm_f32_into(&x, &w, Some(&bias), &mut want);
+        let scale = want.abs_max().max(1.0);
+        for (_, be) in all_backends() {
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.gemm_f32_into(&x, &w, Some(&bias), &mut out);
+            let rel = out.max_abs_diff(&want) / scale;
+            assert!(rel < 1e-5, "{} f32 rel err {rel} at ({m},{n},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn int8_engines_bit_identical_across_backends() {
+    // end to end: same weights, every backend, identical transcripts and
+    // log-prob rows — backend choice can never change what a user hears
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 11);
+    let mut rng = Pcg64::seeded(12);
+    let feats = Tensor::randn(&[48, dims.feat_dim], 0.7, &mut rng);
+
+    let reference = Engine::from_params(&dims, "partial", &params, Precision::Int8, 4)
+        .unwrap()
+        .with_backend(BackendSel::Scalar)
+        .unwrap();
+    let mut bd = Breakdown::default();
+    let (t0, r0) = reference.transcribe(&feats, &mut bd).unwrap();
+
+    for (sel, _) in all_backends() {
+        let eng = Engine::from_params(&dims, "partial", &params, Precision::Int8, 4)
+            .unwrap()
+            .with_backend(sel)
+            .unwrap();
+        let mut bd = Breakdown::default();
+        let (t, r) = eng.transcribe(&feats, &mut bd).unwrap();
+        assert_eq!(t, t0, "{sel} transcript");
+        assert_eq!(r, r0, "{sel} log-prob rows must be bit-identical");
+    }
+}
+
+#[test]
+fn pooled_decoding_bit_identical_under_every_backend() {
+    // the PR-1 pooled bit-identity guarantee must survive backend choice
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.25, 13);
+    let mut rng = Pcg64::seeded(14);
+    let utts: Vec<Tensor> =
+        (0..3).map(|_| Tensor::randn(&[32, dims.feat_dim], 0.6, &mut rng)).collect();
+
+    for (sel, _) in all_backends() {
+        let eng = std::sync::Arc::new(
+            Engine::from_params(&dims, "partial", &params, Precision::Int8, 4)
+                .unwrap()
+                .with_backend(sel)
+                .unwrap(),
+        );
+        let solos: Vec<(String, Vec<Vec<f32>>)> = utts
+            .iter()
+            .map(|u| {
+                let mut bd = Breakdown::default();
+                eng.transcribe(u, &mut bd).unwrap()
+            })
+            .collect();
+
+        let mut pool = StreamPool::new(eng, 3);
+        let ids: Vec<_> = (0..3).map(|_| pool.open().unwrap()).collect();
+        let mut bd = Breakdown::default();
+        for (id, u) in ids.iter().zip(&utts) {
+            pool.push_frames(*id, u.data()).unwrap();
+        }
+        pool.pump(&mut bd).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let closed = pool.close(*id, &mut bd).unwrap();
+            assert_eq!(closed.transcript, solos[i].0, "{sel} pooled transcript {i}");
+            assert_eq!(closed.logprob_rows, solos[i].1, "{sel} pooled rows {i}");
+        }
+    }
+}
+
+#[test]
+fn simd_selector_requires_feature() {
+    let r = tracenorm::kernels::resolve(BackendSel::Simd);
+    #[cfg(feature = "simd")]
+    assert_eq!(r.unwrap().name(), "simd");
+    #[cfg(not(feature = "simd"))]
+    assert!(r.is_err(), "simd selector must fail without the feature");
+}

@@ -2,12 +2,15 @@
 
 use tracenorm::data::{labels_to_text, text_to_labels, CorpusSpec, Dataset};
 use tracenorm::jsonx::Json;
-use tracenorm::kernels::{gemm_f32, qgemm_farm, qgemm_lowp, qgemm_ref};
+use tracenorm::kernels::{
+    all_backends, gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, GemmBackend,
+    PackedQMatrix, PreparedQMatrix, KC, NR,
+};
 use tracenorm::linalg::{nu_from_singular_values, svd};
 use tracenorm::model::{magnitude_masks, mask_density, ParamSet};
 use tracenorm::prng::Pcg64;
 use tracenorm::proplite::check;
-use tracenorm::quant::{dequantize, qgemm_abs_error_bound, quantize, quantize_into};
+use tracenorm::quant::{dequantize, qgemm_abs_error_bound, quantize, quantize_into, QMatrix};
 use tracenorm::tensor::{Tensor, TensorI8};
 
 fn rand_tensor(rng: &mut Pcg64, m: usize, n: usize, scale: f32) -> Tensor {
@@ -110,6 +113,70 @@ fn prop_farm_lowp_ref_identical() {
             let b = qgemm_lowp(x, w, 0.013, 0.027);
             let c = qgemm_ref(x, w, 0.013, 0.027);
             a == b && b == c
+        },
+    );
+}
+
+#[test]
+fn prop_packed_qmatrix_roundtrip_lossless() {
+    // pack/unpack must be exact for every ragged shape: all n mod NR
+    // residues, all interesting k tails — k < 8 (dot_i8's unroll tail),
+    // the KC strip boundary ±, multi-strip, and plain odd sizes
+    check(
+        "packed-qmatrix-roundtrip",
+        80,
+        |rng, size| {
+            let n = 1 + rng.below(4 * NR + size * 4); // sweeps every n % NR
+            let k = match rng.below(4) {
+                0 => 1 + rng.below(7),                    // k < 8
+                1 => KC - 3 + rng.below(7),               // straddles KC
+                2 => 2 * KC - 2 + rng.below(5),           // multi-strip tail
+                _ => 1 + rng.below(size * 16 + 16),       // generic ragged
+            };
+            let data: Vec<i8> =
+                (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            TensorI8::new(&[n, k], data).unwrap()
+        },
+        |w| PackedQMatrix::pack(w).unpack() == *w,
+    );
+}
+
+#[test]
+fn prop_all_backends_bit_identical_on_int8() {
+    // the parity contract as a property: for random ragged shapes and
+    // scales, every registered backend reproduces qgemm_ref bit for bit
+    // through both the uniform-scale and per-row-scale entry points
+    check(
+        "backend-parity",
+        20,
+        |rng, size| {
+            let m = 1 + rng.below(8);
+            let n = 1 + rng.below(size * 8 + 8);
+            let k = 1 + rng.below(size * 16 + 8);
+            let mk = |rng: &mut Pcg64, r: usize, c: usize| {
+                TensorI8::new(
+                    &[r, c],
+                    (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect(),
+                )
+                .unwrap()
+            };
+            let x = mk(rng, m, k);
+            let w = mk(rng, n, k);
+            let sx: Vec<f32> = (0..m).map(|_| 0.002 + rng.uniform() as f32 * 0.02).collect();
+            (x, w, sx)
+        },
+        |(x, w, sx)| {
+            let m = x.rows();
+            let prepped = PreparedQMatrix::new(QMatrix { q: w.clone(), scale: 0.019 });
+            let want = qgemm_ref(x, w, 0.007, 0.019);
+            let want_rows = qgemm_farm_rows(x, w, sx, 0.019);
+            all_backends().iter().all(|(_, be)| {
+                let mut out = Tensor::zeros(&[0, 0]);
+                be.qgemm_farm_into(x.data(), m, &prepped, 0.007, &mut out);
+                let mut rows = Tensor::zeros(&[0, 0]);
+                be.qgemm_farm_rows_into(x.data(), m, &prepped, sx, &mut rows);
+                out == want && rows == want_rows
+            })
         },
     );
 }

@@ -11,12 +11,20 @@ cd "$(dirname "$0")/../rust"
 echo "==> cargo fmt --check"
 cargo fmt --check
 
-echo "==> cargo clippy -D warnings"
+echo "==> cargo clippy -D warnings (default + simd)"
 cargo clippy --all-targets -- -D warnings
+cargo clippy --all-targets --features simd -- -D warnings
 
 echo "==> tier-1 verify: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
+
+echo "==> backend parity suite under --features simd"
+cargo build --release --features simd
+cargo test -q --features simd --test backends
+cargo test -q --features simd --test properties
+cargo test -q --features simd --test alloc_free
+cargo test -q --features simd --lib kernels
 
 echo "==> rustdoc (no warnings allowed)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -33,9 +41,13 @@ echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missi
 echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
 
 echo "==> bench smoke (1 iteration each)"
+rm -f BENCH_gemm.json # so the emit check below cannot pass on a stale file
 for b in gemm linalg streaming stream_pool ladder coordinator; do
   echo "--- bench $b"
   BENCH_SMOKE=1 cargo bench --bench "$b"
 done
+test -f BENCH_gemm.json || { echo "gemm bench did not emit BENCH_gemm.json"; exit 1; }
+grep -q '"backend": "blocked"' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json missing the blocked-backend sweep"; exit 1; }
 
 echo "CI OK"
