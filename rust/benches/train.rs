@@ -1,0 +1,91 @@
+//! Bench: native-training hot paths — full optimizer-step time by GRU
+//! layer width (tape build + forward + backward + penalty + SGD), and
+//! CTC forward-backward cost over the T×U lattice grid.
+//!
+//! Emits machine-readable `BENCH_train.json` (override the path with
+//! `BENCH_TRAIN_JSON`) so future PRs have a perf trajectory for the
+//! training subsystem alongside the GEMM sweep.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use tracenorm::autograd::{ctc_loss_grad, log_softmax_rows, NativeOpts};
+use tracenorm::data::{make_batch, CorpusSpec, Dataset, Utterance};
+use tracenorm::jsonx::Json;
+use tracenorm::prng::Pcg64;
+use tracenorm::runtime::{BatchGeom, ConvDims, ModelDims};
+use tracenorm::tensor::Tensor;
+use tracenorm::train::{NativeTrainer, TrainOpts};
+
+fn dims_for(hidden: usize) -> ModelDims {
+    ModelDims {
+        feat_dim: 40,
+        conv: vec![ConvDims { context: 2, dim: hidden }],
+        gru_dims: vec![hidden, hidden],
+        fc_dim: hidden + 16,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn normalized_logp(t: usize, v: usize, rng: &mut Pcg64) -> Tensor {
+    let mut logits = Tensor::randn(&[t, v], 1.0, rng);
+    log_softmax_rows(&mut logits);
+    logits
+}
+
+fn main() {
+    let mut results: Vec<Json> = Vec::new();
+
+    // -- optimizer step time by layer size --------------------------------
+    header("native train step by GRU width (batch 2, synthetic utterances)");
+    let data = Dataset::generate(CorpusSpec::standard(3), 4, 0, 0);
+    let geom = BatchGeom { batch: 2, max_frames: 128, max_label: 12 };
+    for hidden in [16usize, 32, 64] {
+        let dims = dims_for(hidden);
+        let opts = TrainOpts {
+            lr: 1e-4,
+            lam_rec: 1e-3,
+            lam_nonrec: 1e-3,
+            ..TrainOpts::default()
+        };
+        let mut t = NativeTrainer::new_factored(&dims, opts, NativeOpts::default());
+        let refs: Vec<&Utterance> = data.train.iter().take(2).collect();
+        let batch = make_batch(&refs, &geom, 40);
+        let secs = bench(&format!("native step   h={hidden:<3} params={}", t.params.num_scalars()), 300, || {
+            std::hint::black_box(t.step(&batch).unwrap());
+        });
+        results.push(Json::obj(vec![
+            ("kind", Json::str("step")),
+            ("hidden", Json::num(hidden as f64)),
+            ("params", Json::num(t.params.num_scalars() as f64)),
+            ("secs", Json::num(secs)),
+        ]));
+    }
+
+    // -- CTC forward-backward cost over the T×U lattice -------------------
+    header("ctc_loss_grad by T (frames) x U (labels), vocab 29");
+    let mut rng = Pcg64::seeded(7);
+    for (t_len, u) in [(16usize, 4usize), (32, 8), (64, 12), (128, 12)] {
+        let logp = normalized_logp(t_len, 29, &mut rng);
+        let labels: Vec<i32> = (0..u).map(|i| (i as i32 % 27) + 1).collect();
+        let secs = bench(&format!("ctc T={t_len:<4} U={u:<3}"), 200, || {
+            std::hint::black_box(ctc_loss_grad(&logp, &labels).unwrap());
+        });
+        results.push(Json::obj(vec![
+            ("kind", Json::str("ctc")),
+            ("t", Json::num(t_len as f64)),
+            ("u", Json::num(u as f64)),
+            ("secs", Json::num(secs)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("train")),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::env::var("BENCH_TRAIN_JSON").unwrap_or_else(|_| "BENCH_train.json".into());
+    std::fs::write(&path, report.to_string_pretty()).expect("write BENCH_train.json");
+    println!("wrote machine-readable sweep to {path}");
+}

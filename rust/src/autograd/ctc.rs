@@ -1,0 +1,209 @@
+//! Numerically-stable CTC loss: log-space alpha/beta recursions and the
+//! exact input gradient (Graves et al., 2006; the loss the paper trains
+//! under, §2).
+//!
+//! Layout: the label sequence `l` (blanks excluded) is extended to
+//! `l' = [∅, l₁, ∅, l₂, …, ∅]` of length `S = 2U + 1` with the blank `∅`
+//! at every even position.  Both recursions run entirely in log space on
+//! `f64` accumulators (the inputs are f32 log-probs; promoting the
+//! lattice avoids the catastrophic underflow a prob-space forward-backward
+//! hits past a few dozen frames), using the same `logaddexp` the beam
+//! decoder uses ([`crate::decoder::logaddexp`]).
+//!
+//! Conventions: `alpha[t][s]` and `beta[t][s]` both *include* the
+//! emission at `t`, so the path-through-(t,s) mass is
+//! `gamma[t][s] = alpha[t][s] + beta[t][s] − logp[t][l'ₛ]` and the
+//! gradient of the loss `L = −log P(l|x)` with respect to the log-prob
+//! *inputs* (not logits) is
+//!
+//! ```text
+//! ∂L/∂logp[t][k] = −Σ_{s : l'ₛ = k} exp(gamma[t][s] − log P)
+//! ```
+//!
+//! which row-sums to −1 for every `t`; composed with the log-softmax
+//! backward this yields the familiar `softmax − occupancy` logits
+//! gradient.  The gradient is computed here at forward time (alpha and
+//! beta are both in hand) and cached on the tape node ([`super::ops`]).
+
+use crate::decoder::{logaddexp, BLANK};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// CTC negative log-likelihood of `logp` (T, V) log-prob rows against
+/// `labels` (values in `1..V`; [`BLANK`] = 0 must not appear), plus the
+/// gradient ∂loss/∂logp.
+///
+/// Errors when a label is out of range or when `T` is too short to emit
+/// the sequence (`T < U + repeats`, the CTC feasibility bound the
+/// synthetic corpus guarantees at its frontend stride — `data.rs`).
+pub fn ctc_loss_grad(logp: &Tensor, labels: &[i32]) -> Result<(f32, Tensor)> {
+    let (t_len, vocab) = (logp.rows(), logp.cols());
+    if t_len == 0 {
+        return Err(Error::Train("ctc: empty log-prob matrix".into()));
+    }
+    for &l in labels {
+        if l <= BLANK || l as usize >= vocab {
+            return Err(Error::Train(format!(
+                "ctc: label {l} outside 1..{vocab} (blank = {BLANK} is implicit)"
+            )));
+        }
+    }
+    let u = labels.len();
+    let repeats = labels.windows(2).filter(|w| w[0] == w[1]).count();
+    if t_len < u + repeats {
+        return Err(Error::Train(format!(
+            "ctc: {t_len} frames cannot emit {u} labels with {repeats} repeats"
+        )));
+    }
+
+    // Extended sequence l' = [∅, l1, ∅, l2, ..., ∅].
+    let s_len = 2 * u + 1;
+    let lab = |s: usize| -> usize {
+        if s % 2 == 0 {
+            BLANK as usize
+        } else {
+            labels[s / 2] as usize
+        }
+    };
+    // Skip transition s-2 → s is allowed iff l'_s is a (new) non-blank.
+    let can_skip = |s: usize| -> bool { s % 2 == 1 && (s < 2 || labels[s / 2] != labels[s / 2 - 1]) };
+    let lp = |t: usize, s: usize| -> f64 { logp.row(t)[lab(s)] as f64 };
+    const NEG_INF: f64 = f64::NEG_INFINITY;
+
+    // -- alpha (forward), emission at t included -------------------------
+    let mut alpha = vec![NEG_INF; t_len * s_len];
+    alpha[0] = lp(0, 0);
+    if s_len > 1 {
+        alpha[1] = lp(0, 1);
+    }
+    for t in 1..t_len {
+        // paths can end at most 2(t+1) extended positions in, and must
+        // leave room to finish: s >= S - 2(T - t)
+        let lo = s_len.saturating_sub(2 * (t_len - t));
+        let hi = (2 * (t + 1)).min(s_len);
+        for s in lo..hi {
+            let mut a = alpha[(t - 1) * s_len + s];
+            if s >= 1 {
+                a = logaddexp(a, alpha[(t - 1) * s_len + s - 1]);
+            }
+            if s >= 2 && can_skip(s) {
+                a = logaddexp(a, alpha[(t - 1) * s_len + s - 2]);
+            }
+            alpha[t * s_len + s] = if a == NEG_INF { NEG_INF } else { a + lp(t, s) };
+        }
+    }
+    let log_p = if s_len > 1 {
+        logaddexp(
+            alpha[(t_len - 1) * s_len + s_len - 1],
+            alpha[(t_len - 1) * s_len + s_len - 2],
+        )
+    } else {
+        alpha[(t_len - 1) * s_len]
+    };
+    if log_p == NEG_INF {
+        return Err(Error::Train("ctc: no feasible alignment (all paths -inf)".into()));
+    }
+
+    // -- beta (backward), emission at t included -------------------------
+    let mut beta = vec![NEG_INF; t_len * s_len];
+    beta[(t_len - 1) * s_len + s_len - 1] = lp(t_len - 1, s_len - 1);
+    if s_len > 1 {
+        beta[(t_len - 1) * s_len + s_len - 2] = lp(t_len - 1, s_len - 2);
+    }
+    for t in (0..t_len - 1).rev() {
+        let lo = s_len.saturating_sub(2 * (t_len - t));
+        let hi = (2 * (t + 1)).min(s_len);
+        for s in lo..hi {
+            let mut b = beta[(t + 1) * s_len + s];
+            if s + 1 < s_len {
+                b = logaddexp(b, beta[(t + 1) * s_len + s + 1]);
+            }
+            // the skip rule mirrors alpha's: entering s+2 from s skips
+            // the blank at s+1, allowed iff l'_{s+2} is a new non-blank
+            if s + 2 < s_len && can_skip(s + 2) {
+                b = logaddexp(b, beta[(t + 1) * s_len + s + 2]);
+            }
+            beta[t * s_len + s] = if b == NEG_INF { NEG_INF } else { b + lp(t, s) };
+        }
+    }
+
+    // -- gradient wrt the log-prob inputs --------------------------------
+    let mut grad = Tensor::zeros(&[t_len, vocab]);
+    for t in 0..t_len {
+        let grow = grad.row_mut(t);
+        for s in 0..s_len {
+            let (a, b) = (alpha[t * s_len + s], beta[t * s_len + s]);
+            if a == NEG_INF || b == NEG_INF {
+                continue;
+            }
+            let gamma = a + b - lp(t, s);
+            grow[lab(s)] -= (gamma - log_p).exp() as f32;
+        }
+    }
+    Ok(((-log_p) as f32, grad))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_normalize(mut logits: Tensor) -> Tensor {
+        crate::autograd::ops::log_softmax_rows(&mut logits);
+        logits
+    }
+
+    #[test]
+    fn single_frame_single_label() {
+        // T=1, l=[1]: P = p(1), loss = -logp[0][1], grad -1 there only
+        let logp = row_normalize(Tensor::new(&[1, 3], vec![0.3, 1.2, -0.5]).unwrap());
+        let (loss, grad) = ctc_loss_grad(&logp, &[1]).unwrap();
+        assert!((loss + logp.row(0)[1]).abs() < 1e-5);
+        assert!((grad.row(0)[1] + 1.0).abs() < 1e-5);
+        assert!(grad.row(0)[0].abs() < 1e-6 && grad.row(0)[2].abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_frames_one_label_matches_hand_sum() {
+        // T=2, l=[1]: P = p1(1)p2(1) + p1(0)p2(1) + p1(1)p2(0)
+        let logp = row_normalize(Tensor::new(&[2, 3], vec![0.1, 0.9, -0.2, 0.4, -0.3, 0.8]).unwrap());
+        let p = |t: usize, k: usize| (logp.row(t)[k] as f64).exp();
+        let want = p(0, 1) * p(1, 1) + p(0, 0) * p(1, 1) + p(0, 1) * p(1, 0);
+        let (loss, grad) = ctc_loss_grad(&logp, &[1]).unwrap();
+        assert!(((loss as f64) + want.ln()).abs() < 1e-5, "{loss} vs {}", -want.ln());
+        // every frame's gradient row sums to -1
+        for t in 0..2 {
+            let s: f32 = grad.row(t).iter().sum();
+            assert!((s + 1.0).abs() < 1e-4, "row {t} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn repeated_label_needs_interposed_blank() {
+        // l=[1,1] needs T >= 3 (one blank between); T=2 must error
+        let logp = row_normalize(Tensor::new(&[2, 3], vec![0.0; 6]).unwrap());
+        assert!(ctc_loss_grad(&logp, &[1, 1]).is_err());
+        let logp3 = row_normalize(Tensor::new(&[3, 3], vec![0.1; 9]).unwrap());
+        let (loss, _) = ctc_loss_grad(&logp3, &[1, 1]).unwrap();
+        // only path: 1, blank, 1 → loss = -3·log(1/3)
+        assert!(((loss as f64) - 3.0 * (3.0f64).ln()).abs() < 1e-4, "loss {loss}");
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let logp = row_normalize(Tensor::new(&[2, 3], vec![0.0; 6]).unwrap());
+        assert!(ctc_loss_grad(&logp, &[0]).is_err(), "blank label");
+        assert!(ctc_loss_grad(&logp, &[3]).is_err(), "out of vocab");
+    }
+
+    #[test]
+    fn empty_label_sequence_is_all_blanks() {
+        let logp = row_normalize(Tensor::new(&[3, 2], vec![0.5, -0.1, 0.2, 0.4, -0.3, 0.1]).unwrap());
+        let (loss, grad) = ctc_loss_grad(&logp, &[]).unwrap();
+        let want: f32 = (0..3).map(|t| logp.row(t)[0]).sum();
+        assert!((loss + want).abs() < 1e-5);
+        for t in 0..3 {
+            assert!((grad.row(t)[0] + 1.0).abs() < 1e-5);
+            assert!(grad.row(t)[1].abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Forward-graph builder for the factored GRU stack — the training-time
+//! mirror of `infer.rs`'s layer map, op for op:
+//!
+//! ```text
+//! feats (T, F)
+//!   └─ per conv layer: stack_rows(ctx) → x·Wᵀ → +bias → ReLU
+//!   └─ per GRU layer:  gx = x·Wnrᵀ + b (time-batched)
+//!                      per step t: gh = h·Wrᵀ
+//!                        z = σ(gx_z + gh_z)   r = σ(gx_r + gh_r)
+//!                        h̃ = tanh(gx_h + r ∘ gh_h)
+//!                        h = h + z ∘ (h̃ − h)          [= (1−z)h + z h̃]
+//!   └─ head: x·Wfcᵀ + b → ReLU → x·Woutᵀ + b → log-softmax
+//!   └─ CTC(logp, labels) → scalar loss
+//! ```
+//!
+//! Factored groups (`{base}_u`/`{base}_v`) apply as `(x·Vᵀ)·Uᵀ`, dense
+//! groups as `x·Wᵀ` — the same dispatch rule as `infer::Op::from_params`,
+//! so any parameter set the embedded engine can serve, the native trainer
+//! can train, and vice versa.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::model::ParamSet;
+use crate::runtime::ModelDims;
+use crate::tensor::Tensor;
+
+use super::tape::{Tape, Var};
+
+/// A built forward graph for one utterance: the tape, the log-prob output
+/// var, and the trainable leaf var per parameter name.
+pub struct Forward {
+    pub tape: Tape,
+    pub logp: Var,
+    pub leaves: BTreeMap<String, Var>,
+}
+
+/// Trainable leaf for a named parameter — **one leaf per name**: the
+/// recurrent weights are applied once per timestep, and every use must
+/// hit the same tape node so the backward sweep sums their gradients in
+/// one slot.
+fn leaf_param(
+    tape: &mut Tape,
+    params: &ParamSet,
+    leaves: &mut BTreeMap<String, Var>,
+    name: &str,
+) -> Result<Var> {
+    if let Some(&v) = leaves.get(name) {
+        return Ok(v);
+    }
+    let v = tape.leaf(params.get(name)?.clone(), true);
+    leaves.insert(name.to_string(), v);
+    Ok(v)
+}
+
+/// Apply a possibly-factored group: `(x·Vᵀ)·Uᵀ` when `{base}_u` exists,
+/// else `x·Wᵀ` from `{base}_w`.
+fn apply_group(
+    tape: &mut Tape,
+    params: &ParamSet,
+    leaves: &mut BTreeMap<String, Var>,
+    base: &str,
+    x: Var,
+) -> Result<Var> {
+    if params.contains(&format!("{base}_u")) {
+        let u = leaf_param(tape, params, leaves, &format!("{base}_u"))?;
+        let v = leaf_param(tape, params, leaves, &format!("{base}_v"))?;
+        let mid = tape.matmul_nt(x, v);
+        Ok(tape.matmul_nt(mid, u))
+    } else {
+        let w = leaf_param(tape, params, leaves, &format!("{base}_w"))?;
+        Ok(tape.matmul_nt(x, w))
+    }
+}
+
+/// Pad an utterance's feature rows with zeros to a stride boundary (the
+/// same padding `Engine::flush` applies at end of utterance), so the
+/// frontend's frame stacking divides evenly.
+fn pad_to_stride(feats: &Tensor, stride: usize) -> Tensor {
+    let (t, f) = (feats.rows(), feats.cols());
+    let steps = t.div_ceil(stride);
+    let mut data = feats.data().to_vec();
+    data.resize(steps * stride * f, 0.0);
+    Tensor::new(&[steps * stride, f], data).unwrap()
+}
+
+/// Build the forward graph for one utterance up to the log-prob rows.
+pub fn build_forward(params: &ParamSet, dims: &ModelDims, feats: &Tensor) -> Result<Forward> {
+    if feats.rank() != 2 || feats.cols() != dims.feat_dim {
+        return Err(Error::Train(format!(
+            "feats {:?} do not match feat_dim {}",
+            feats.shape(),
+            dims.feat_dim
+        )));
+    }
+    if feats.rows() == 0 {
+        return Err(Error::Train("empty utterance".into()));
+    }
+    let mut tape = Tape::new();
+    let mut leaves = BTreeMap::new();
+    let padded = pad_to_stride(feats, dims.total_stride);
+    let mut x = tape.leaf(padded, false);
+
+    // frontend: stack-and-project conv layers (time-batched by nature)
+    for (i, c) in dims.conv.iter().enumerate() {
+        x = tape.stack_rows(x, c.context);
+        x = apply_group(&mut tape, params, &mut leaves, &format!("conv{i}"), x)?;
+        let b = leaf_param(&mut tape, params, &mut leaves, &format!("conv{i}_b"))?;
+        x = tape.add_bias(x, b);
+        x = tape.relu(x);
+    }
+
+    // GRU stack: time-batched non-recurrent GEMM, sequential recurrence
+    for (i, &h_dim) in dims.gru_dims.iter().enumerate() {
+        let gx_raw = apply_group(&mut tape, params, &mut leaves, &format!("nonrec{i}"), x)?;
+        let b = leaf_param(&mut tape, params, &mut leaves, &format!("gru{i}_b"))?;
+        let gx = tape.add_bias(gx_raw, b);
+        let t_steps = tape.value(gx).rows();
+        let mut h = tape.leaf(Tensor::zeros(&[1, h_dim]), false);
+        let mut rows = Vec::with_capacity(t_steps);
+        for t in 0..t_steps {
+            let gh = apply_group(&mut tape, params, &mut leaves, &format!("rec{i}"), h)?;
+            let gxt = tape.row(gx, t);
+            let (gxz, ghz) = (
+                tape.slice_cols(gxt, 0, h_dim),
+                tape.slice_cols(gh, 0, h_dim),
+            );
+            let (gxr, ghr) = (
+                tape.slice_cols(gxt, h_dim, 2 * h_dim),
+                tape.slice_cols(gh, h_dim, 2 * h_dim),
+            );
+            let (gxh, ghh) = (
+                tape.slice_cols(gxt, 2 * h_dim, 3 * h_dim),
+                tape.slice_cols(gh, 2 * h_dim, 3 * h_dim),
+            );
+            let zsum = tape.add(gxz, ghz);
+            let z = tape.sigmoid(zsum);
+            let rsum = tape.add(gxr, ghr);
+            let r = tape.sigmoid(rsum);
+            let gated = tape.mul(r, ghh);
+            let csum = tape.add(gxh, gated);
+            let cand = tape.tanh(csum);
+            // h' = (1−z)·h + z·h̃ = h + z·(h̃ − h), the infer::gru_cell form
+            let delta = tape.sub(cand, h);
+            let zdelta = tape.mul(z, delta);
+            h = tape.add(h, zdelta);
+            rows.push(h);
+        }
+        x = tape.concat_rows(&rows);
+    }
+
+    // head: fc (+ReLU) → output projection → log-softmax
+    x = apply_group(&mut tape, params, &mut leaves, "fc", x)?;
+    let fcb = leaf_param(&mut tape, params, &mut leaves, "fc_b")?;
+    x = tape.add_bias(x, fcb);
+    x = tape.relu(x);
+    x = apply_group(&mut tape, params, &mut leaves, "out", x)?;
+    let outb = leaf_param(&mut tape, params, &mut leaves, "out_b")?;
+    x = tape.add_bias(x, outb);
+    let logp = tape.log_softmax(x);
+    Ok(Forward { tape, logp, leaves })
+}
+
+/// Pull the per-parameter gradients out of the backward sweep's slots
+/// (one leaf per name — multi-use parameters like the recurrent weights
+/// already accumulated across timesteps on the tape).
+fn collect_grads(fwd: &Forward, grads: &[Option<Tensor>]) -> BTreeMap<String, Tensor> {
+    let mut out: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (name, var) in &fwd.leaves {
+        if let Some(g) = &grads[var.0] {
+            out.insert(name.clone(), g.clone());
+        }
+    }
+    out
+}
+
+/// Loss + parameter gradients for a single utterance.
+pub fn utterance_grads(
+    params: &ParamSet,
+    dims: &ModelDims,
+    feats: &Tensor,
+    labels: &[i32],
+) -> Result<(f32, BTreeMap<String, Tensor>)> {
+    let mut fwd = build_forward(params, dims, feats)?;
+    let loss_var = fwd.tape.ctc(fwd.logp, labels)?;
+    let loss = fwd.tape.value(loss_var).data()[0];
+    let grads = fwd.tape.backward(loss_var);
+    Ok((loss, collect_grads(&fwd, &grads)))
+}
+
+/// Mean CTC loss and mean parameter gradients over a batch of
+/// `(feats, labels)` utterances (the padded-batch rows of
+/// [`crate::data::Batch::utterances`]).
+pub fn batch_ctc_grads(
+    params: &ParamSet,
+    dims: &ModelDims,
+    utts: &[(Tensor, Vec<i32>)],
+) -> Result<(f32, ParamSet)> {
+    if utts.is_empty() {
+        return Err(Error::Train("batch_ctc_grads: empty batch".into()));
+    }
+    let scale = 1.0 / utts.len() as f32;
+    let mut grads = ParamSet::zeros_like(params);
+    let mut loss_sum = 0.0f64;
+    for (feats, labels) in utts {
+        let (loss, ugrads) = utterance_grads(params, dims, feats, labels)?;
+        loss_sum += loss as f64;
+        for (name, mut g) in ugrads {
+            g.scale(scale);
+            grads.get_mut(&name)?.add_assign(&g)?;
+        }
+    }
+    Ok(((loss_sum * scale as f64) as f32, grads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+    use crate::prng::Pcg64;
+    use crate::runtime::ConvDims;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims {
+            feat_dim: 6,
+            conv: vec![ConvDims { context: 2, dim: 8 }],
+            gru_dims: vec![5, 7],
+            fc_dim: 9,
+            vocab: 11,
+            total_stride: 2,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_normalization() {
+        let dims = tiny_dims();
+        let params = model::init_factored_full(&dims, 3);
+        let mut rng = Pcg64::seeded(4);
+        let feats = Tensor::randn(&[11, 6], 0.7, &mut rng); // ragged → pads to 12
+        let fwd = build_forward(&params, &dims, &feats).unwrap();
+        let logp = fwd.tape.value(fwd.logp);
+        assert_eq!(logp.shape(), &[6, 11]); // 12 rows / stride 2
+        for t in 0..logp.rows() {
+            let total: f32 = logp.row(t).iter().map(|v| v.exp()).sum();
+            assert!((total - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn forward_matches_inference_engine() {
+        // The training forward must agree with the engine the checkpoint
+        // will be served by — same layer map, same gate math.
+        use crate::infer::{Breakdown, Engine, Precision};
+        let dims = tiny_dims();
+        let params = model::init_factored_full(&dims, 5);
+        let mut rng = Pcg64::seeded(6);
+        let feats = Tensor::randn(&[12, 6], 0.7, &mut rng);
+        let fwd = build_forward(&params, &dims, &feats).unwrap();
+        let logp = fwd.tape.value(fwd.logp);
+
+        let eng = Engine::from_params(&dims, "partial", &params, Precision::F32, 4).unwrap();
+        let mut bd = Breakdown::default();
+        let (_, rows) = eng.transcribe(&feats, &mut bd).unwrap();
+        assert_eq!(rows.len(), logp.rows());
+        for (t, row) in rows.iter().enumerate() {
+            for (a, b) in logp.row(t).iter().zip(row) {
+                assert!((a - b).abs() < 1e-4, "step {t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_grads_cover_every_param() {
+        let dims = tiny_dims();
+        let params = model::init_factored_full(&dims, 7);
+        let mut rng = Pcg64::seeded(8);
+        let utts: Vec<(Tensor, Vec<i32>)> = (0..2)
+            .map(|_| (Tensor::randn(&[10, 6], 0.7, &mut rng), vec![1, 2]))
+            .collect();
+        let (loss, grads) = batch_ctc_grads(&params, &dims, &utts).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), params.len());
+        for (name, g) in grads.iter() {
+            assert!(g.abs_max().is_finite(), "{name} grad non-finite");
+        }
+        // the loss pushes on every weight in the stack
+        assert!(grads.get("rec0_u").unwrap().abs_max() > 0.0);
+        assert!(grads.get("out_w").unwrap().abs_max() > 0.0);
+    }
+}

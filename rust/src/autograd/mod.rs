@@ -1,0 +1,33 @@
+//! Native reverse-mode training subsystem (DESIGN.md §2.5) — the L2.5
+//! layer that lets the paper's two-stage trace-norm scheme run in the
+//! **default offline build**, with no XLA toolchain:
+//!
+//! * [`tape`] — the `Var`/`Tape` reverse-mode engine: eager forward,
+//!   single reverse sweep, gradients only where they are needed.
+//! * [`ops`] — the op set of the factored GRU stack (x·Wᵀ GEMM, gate
+//!   math, slicing, log-softmax) with textbook adjoints.
+//! * [`ctc`] — numerically-stable CTC loss: log-space alpha/beta
+//!   recursions on f64, gradient cached at forward time.
+//! * [`gru`] — the forward-graph builder mirroring `infer.rs`'s layer
+//!   map op for op, so anything trainable here is servable there.
+//! * [`optim`] — the trace-norm surrogate penalty (+ analytic gradient),
+//!   global-norm clipping, and SGD with momentum.
+//!
+//! The trainer orchestration on top of these — `NativeTrainer`, the
+//! `TrainBackend` trait it shares with the XLA-AOT path, and the native
+//! two-stage pipeline — lives in [`crate::train`].  Gradient
+//! correctness is enforced by finite-difference property tests in
+//! `rust/tests/autograd.rs` (every op, the GRU cell chain, CTC, and the
+//! surrogate penalty).
+
+pub mod ctc;
+pub mod gru;
+pub mod ops;
+pub mod optim;
+pub mod tape;
+
+pub use ctc::ctc_loss_grad;
+pub use gru::{batch_ctc_grads, build_forward, utterance_grads, Forward};
+pub use ops::log_softmax_rows;
+pub use optim::{clip_grads, grad_norm, sgd_momentum_step, surrogate_penalty, NativeOpts};
+pub use tape::{Tape, Var};

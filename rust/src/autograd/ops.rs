@@ -1,0 +1,404 @@
+//! Tape op set: forward constructors + backward rules.
+//!
+//! Every op the factored GRU stack needs (DESIGN.md §2.5): the `y = x·Wᵀ`
+//! GEMM (the same contraction the embedded engine runs, so trained and
+//! served layer maps match one-to-one), elementwise gate math, bias
+//! broadcast, row/column slicing for the `[z | r | h̃]` gate layout,
+//! row-stacking for the conv frontend, per-row log-softmax, and the CTC
+//! loss as a fused node ([`Tape::ctc`], see [`super::ctc`]) that caches
+//! its input gradient at forward time — the alpha/beta recursions already
+//! produce it, so backward is a single saxpy.
+//!
+//! Backward rules live in `backward_op` (crate-private); each is the
+//! textbook adjoint of the forward line directly above it in [`Tape`]'s
+//! constructors.
+
+use crate::error::{Error, Result};
+use crate::kernels;
+use crate::tensor::Tensor;
+
+use super::tape::{acc, Node, Tape, Var};
+
+/// Node operation. Aux data needed by the backward rule rides on the
+/// variant (slice bounds, the cached CTC gradient).
+pub(crate) enum Op {
+    Leaf,
+    /// `y = a @ bᵀ` — a (m,k), b (n,k) → (m,n); weights stay in their
+    /// `(out, in)` storage layout exactly as `infer.rs` applies them.
+    MatMulNT,
+    /// elementwise `a + b`
+    Add,
+    /// elementwise `a - b`
+    Sub,
+    /// elementwise `a ∘ b`
+    Mul,
+    /// `x + bias` with rank-1 `bias` broadcast over rows
+    AddBias,
+    Sigmoid,
+    Tanh,
+    Relu,
+    /// columns `[c0, c1)` of a rank-2 input
+    SliceCols { c0: usize, c1: usize },
+    /// row `r` of a rank-2 input, as a (1, n) matrix
+    Row { r: usize },
+    /// vertical concatenation of rank-2 inputs (equal cols)
+    ConcatRows,
+    /// (t, f) → (t/ctx, ctx·f) reshape — the conv frontend's frame
+    /// stacking; row-major data is untouched, so backward is the inverse
+    /// reshape
+    StackRows,
+    /// per-row log-softmax
+    LogSoftmax,
+    /// sum of all elements → scalar
+    Sum,
+    /// CTC negative log-likelihood of the input log-prob rows against a
+    /// fixed label sequence; `grad` is ∂loss/∂logp cached at forward time
+    Ctc { grad: Tensor },
+}
+
+impl Tape {
+    /// `a @ bᵀ`: a (m,k) × b (n,k) → (m,n).
+    pub fn matmul_nt(&mut self, a: Var, b: Var) -> Var {
+        let y = kernels::gemm_f32(self.value(a), self.value(b), None);
+        self.push(Op::MatMulNT, vec![a, b], y)
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let mut y = self.value(a).clone();
+        y.add_assign(self.value(b)).expect("add: shape mismatch");
+        self.push(Op::Add, vec![a, b], y)
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let mut y = self.value(a).clone();
+        assert_eq!(y.shape(), self.value(b).shape(), "sub: shape mismatch");
+        for (x, s) in y.data_mut().iter_mut().zip(self.value(b).data()) {
+            *x -= s;
+        }
+        self.push(Op::Sub, vec![a, b], y)
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let mut y = self.value(a).clone();
+        y.mul_assign(self.value(b)).expect("mul: shape mismatch");
+        self.push(Op::Mul, vec![a, b], y)
+    }
+
+    /// `x + bias`, rank-1 `bias` broadcast over the rows of rank-2 `x`.
+    pub fn add_bias(&mut self, x: Var, bias: Var) -> Var {
+        let b = self.value(bias).data().to_vec();
+        let mut y = self.value(x).clone();
+        let cols = y.cols();
+        assert_eq!(b.len(), cols, "add_bias: bias length mismatch");
+        for row in y.data_mut().chunks_mut(cols) {
+            for (v, bv) in row.iter_mut().zip(&b) {
+                *v += bv;
+            }
+        }
+        self.push(Op::AddBias, vec![x, bias], y)
+    }
+
+    pub fn sigmoid(&mut self, x: Var) -> Var {
+        let mut y = self.value(x).clone();
+        for v in y.data_mut() {
+            *v = 1.0 / (1.0 + (-*v).exp());
+        }
+        self.push(Op::Sigmoid, vec![x], y)
+    }
+
+    pub fn tanh(&mut self, x: Var) -> Var {
+        let mut y = self.value(x).clone();
+        for v in y.data_mut() {
+            *v = v.tanh();
+        }
+        self.push(Op::Tanh, vec![x], y)
+    }
+
+    pub fn relu(&mut self, x: Var) -> Var {
+        let mut y = self.value(x).clone();
+        for v in y.data_mut() {
+            *v = v.max(0.0);
+        }
+        self.push(Op::Relu, vec![x], y)
+    }
+
+    /// Columns `[c0, c1)` of rank-2 `x`.
+    pub fn slice_cols(&mut self, x: Var, c0: usize, c1: usize) -> Var {
+        let xv = self.value(x);
+        let (m, n) = (xv.rows(), xv.cols());
+        assert!(c0 < c1 && c1 <= n, "slice_cols [{c0},{c1}) of {n}");
+        let mut data = Vec::with_capacity(m * (c1 - c0));
+        for i in 0..m {
+            data.extend_from_slice(&xv.row(i)[c0..c1]);
+        }
+        let y = Tensor::new(&[m, c1 - c0], data).unwrap();
+        self.push(Op::SliceCols { c0, c1 }, vec![x], y)
+    }
+
+    /// Row `r` of rank-2 `x`, as a (1, n) matrix.
+    pub fn row(&mut self, x: Var, r: usize) -> Var {
+        let xv = self.value(x);
+        let y = Tensor::new(&[1, xv.cols()], xv.row(r).to_vec()).unwrap();
+        self.push(Op::Row { r }, vec![x], y)
+    }
+
+    /// Vertical concatenation of rank-2 vars with equal column counts.
+    pub fn concat_rows(&mut self, parts: &[Var]) -> Var {
+        assert!(!parts.is_empty(), "concat_rows of nothing");
+        let tensors: Vec<&Tensor> = parts.iter().map(|&v| self.value(v)).collect();
+        let y = Tensor::concat_rows(&tensors).expect("concat_rows: col mismatch");
+        self.push(Op::ConcatRows, parts.to_vec(), y)
+    }
+
+    /// (t, f) → (t/ctx, ctx·f): the conv frontend's frame stacking.
+    pub fn stack_rows(&mut self, x: Var, ctx: usize) -> Var {
+        let xv = self.value(x);
+        let (t, f) = (xv.rows(), xv.cols());
+        assert!(ctx > 0 && t % ctx == 0, "stack_rows: {t} rows not divisible by {ctx}");
+        let y = xv.clone().reshape(&[t / ctx, ctx * f]).unwrap();
+        self.push(Op::StackRows, vec![x], y)
+    }
+
+    /// Per-row log-softmax (same arithmetic as the inference head).
+    pub fn log_softmax(&mut self, x: Var) -> Var {
+        let mut y = self.value(x).clone();
+        log_softmax_rows(&mut y);
+        self.push(Op::LogSoftmax, vec![x], y)
+    }
+
+    /// Sum of all elements → rank-0 scalar.
+    pub fn sum(&mut self, x: Var) -> Var {
+        let total: f32 = self.value(x).data().iter().sum();
+        self.push(Op::Sum, vec![x], Tensor::scalar(total))
+    }
+
+    /// CTC loss of log-prob rows `logp` (T, V) against `labels`
+    /// (blank = 0 excluded).  Fails on infeasible (T too short) or
+    /// non-finite inputs; see [`super::ctc::ctc_loss_grad`].
+    pub fn ctc(&mut self, logp: Var, labels: &[i32]) -> Result<Var> {
+        let (loss, grad) = super::ctc::ctc_loss_grad(self.value(logp), labels)?;
+        if !loss.is_finite() {
+            return Err(Error::Train(format!("CTC loss is non-finite ({loss})")));
+        }
+        Ok(self.push(Op::Ctc { grad }, vec![logp], Tensor::scalar(loss)))
+    }
+}
+
+/// In-place per-row log-softmax over a rank-2 tensor — the single
+/// normalization kernel shared by [`Tape::log_softmax`], the max-shifted
+/// arithmetic of the inference head, and the tests/benches that need
+/// valid log-prob inputs for CTC.
+pub fn log_softmax_rows(x: &mut Tensor) {
+    let cols = x.cols();
+    for row in x.data_mut().chunks_mut(cols) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+        for v in row {
+            *v -= lse;
+        }
+    }
+}
+
+/// `aᵀ @ b` without materializing the transpose — the weight-side
+/// adjoint of [`Tape::matmul_nt`], computed as rank-1 row updates so
+/// both operands stream in row-major order.  (A farm-tiled TN kernel in
+/// `crate::kernels` would be the next step if `BENCH_train.json` shows
+/// backward GEMMs dominating.)
+fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let k = b.cols();
+    debug_assert_eq!(b.rows(), m, "matmul_tn contraction mismatch");
+    let mut out = Tensor::zeros(&[n, k]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for (j, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for (o, &bv) in out.row_mut(j).iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Backward rule dispatch: accumulate ∂loss/∂input into `lower` (the
+/// gradient slots of all earlier tape nodes) given the node's own
+/// gradient `g`.
+pub(crate) fn backward_op(tape: &Tape, node: &Node, g: &Tensor, lower: &mut [Option<Tensor>]) {
+    let input = |k: usize| -> &Tensor { tape.value(node.inputs[k]) };
+    let needs = |k: usize| -> bool { tape.nodes[node.inputs[k].0].requires_grad };
+    let idx = |k: usize| -> usize { node.inputs[k].0 };
+    match &node.op {
+        Op::Leaf => {}
+        Op::MatMulNT => {
+            // y = a bᵀ: da = g b, db = gᵀ a (TN form, no transpose copy)
+            if needs(0) {
+                let da = g.matmul(input(1)).unwrap();
+                acc(&mut lower[idx(0)], da);
+            }
+            if needs(1) {
+                acc(&mut lower[idx(1)], matmul_tn(g, input(0)));
+            }
+        }
+        Op::Add => {
+            for k in 0..2 {
+                if needs(k) {
+                    acc(&mut lower[idx(k)], g.clone());
+                }
+            }
+        }
+        Op::Sub => {
+            if needs(0) {
+                acc(&mut lower[idx(0)], g.clone());
+            }
+            if needs(1) {
+                let mut ng = g.clone();
+                ng.scale(-1.0);
+                acc(&mut lower[idx(1)], ng);
+            }
+        }
+        Op::Mul => {
+            if needs(0) {
+                let mut da = g.clone();
+                da.mul_assign(input(1)).unwrap();
+                acc(&mut lower[idx(0)], da);
+            }
+            if needs(1) {
+                let mut db = g.clone();
+                db.mul_assign(input(0)).unwrap();
+                acc(&mut lower[idx(1)], db);
+            }
+        }
+        Op::AddBias => {
+            if needs(0) {
+                acc(&mut lower[idx(0)], g.clone());
+            }
+            if needs(1) {
+                let n = input(1).len();
+                let mut db = vec![0.0f32; n];
+                for row in g.data().chunks(n) {
+                    for (d, gv) in db.iter_mut().zip(row) {
+                        *d += gv;
+                    }
+                }
+                acc(&mut lower[idx(1)], Tensor::from_vec(db));
+            }
+        }
+        Op::Sigmoid => {
+            if needs(0) {
+                let mut dx = g.clone();
+                for (d, &y) in dx.data_mut().iter_mut().zip(node.value.data()) {
+                    *d *= y * (1.0 - y);
+                }
+                acc(&mut lower[idx(0)], dx);
+            }
+        }
+        Op::Tanh => {
+            if needs(0) {
+                let mut dx = g.clone();
+                for (d, &y) in dx.data_mut().iter_mut().zip(node.value.data()) {
+                    *d *= 1.0 - y * y;
+                }
+                acc(&mut lower[idx(0)], dx);
+            }
+        }
+        Op::Relu => {
+            if needs(0) {
+                let mut dx = g.clone();
+                for (d, &y) in dx.data_mut().iter_mut().zip(node.value.data()) {
+                    if y <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                acc(&mut lower[idx(0)], dx);
+            }
+        }
+        // Slicing backward accumulates **in place** into the input's
+        // gradient slot (allocated zeroed on first touch) instead of
+        // materializing a full-size sparse delta per use: the GRU loop
+        // slices gx/gh once per timestep, and a per-use full-matrix
+        // add would make backward O(T²) in the block length.
+        Op::SliceCols { c0, c1 } => {
+            if needs(0) {
+                let (m, n) = {
+                    let x = input(0);
+                    (x.rows(), x.cols())
+                };
+                let dst = lower[idx(0)].get_or_insert_with(|| Tensor::zeros(&[m, n]));
+                debug_assert_eq!(dst.shape(), &[m, n]);
+                for i in 0..m {
+                    for (d, &gv) in dst.row_mut(i)[*c0..*c1].iter_mut().zip(g.row(i)) {
+                        *d += gv;
+                    }
+                }
+            }
+        }
+        Op::Row { r } => {
+            if needs(0) {
+                let (m, n) = {
+                    let x = input(0);
+                    (x.rows(), x.cols())
+                };
+                let dst = lower[idx(0)].get_or_insert_with(|| Tensor::zeros(&[m, n]));
+                debug_assert_eq!(dst.shape(), &[m, n]);
+                for (d, &gv) in dst.row_mut(*r).iter_mut().zip(g.row(0)) {
+                    *d += gv;
+                }
+            }
+        }
+        Op::ConcatRows => {
+            let mut r0 = 0usize;
+            for k in 0..node.inputs.len() {
+                let rows = input(k).rows();
+                if needs(k) {
+                    let cols = g.cols();
+                    let part = Tensor::new(
+                        &[rows, cols],
+                        g.data()[r0 * cols..(r0 + rows) * cols].to_vec(),
+                    )
+                    .unwrap();
+                    acc(&mut lower[idx(k)], part);
+                }
+                r0 += rows;
+            }
+        }
+        Op::StackRows => {
+            if needs(0) {
+                let xshape = input(0).shape().to_vec();
+                acc(&mut lower[idx(0)], g.clone().reshape(&xshape).unwrap());
+            }
+        }
+        Op::LogSoftmax => {
+            if needs(0) {
+                // dx = g − softmax(x) · rowsum(g), softmax(x) = exp(y)
+                let mut dx = g.clone();
+                let cols = dx.cols();
+                for (drow, yrow) in
+                    dx.data_mut().chunks_mut(cols).zip(node.value.data().chunks(cols))
+                {
+                    let rowsum: f32 = drow.iter().sum();
+                    for (d, &y) in drow.iter_mut().zip(yrow) {
+                        *d -= y.exp() * rowsum;
+                    }
+                }
+                acc(&mut lower[idx(0)], dx);
+            }
+        }
+        Op::Sum => {
+            if needs(0) {
+                let gs = g.data()[0];
+                acc(&mut lower[idx(0)], Tensor::full(input(0).shape(), gs));
+            }
+        }
+        Op::Ctc { grad } => {
+            if needs(0) {
+                let mut dx = grad.clone();
+                dx.scale(g.data()[0]);
+                acc(&mut lower[idx(0)], dx);
+            }
+        }
+    }
+}

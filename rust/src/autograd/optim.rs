@@ -1,0 +1,178 @@
+//! Optimizer + regularizer for the native trainer: the paper's §3
+//! trace-norm surrogate penalty with its (analytic) gradient, global
+//! gradient-norm clipping, and SGD with classical momentum driving the
+//! §3.2.3 LR schedule (the per-epoch decay itself lives in the epoch
+//! runner — `train.rs`).
+//!
+//! The surrogate is Lemma 1's variational bound: for a factored group
+//! `W = U·V`,
+//!
+//! ```text
+//! ‖W‖_* ≤ ½(‖U‖²_F + ‖V‖²_F)        (equality at the balanced split)
+//! ```
+//!
+//! so stage 1 penalizes `λ/2·(‖U‖²_F + ‖V‖²_F)` per group — λ_rec on
+//! recurrent groups (`rec*`, `grujoint*`), λ_nonrec on the rest — whose
+//! gradient is simply `λU` / `λV`.  Dense (unfactored) groups fall back
+//! to the paper's ℓ² baseline `λ/2·‖W‖²_F` with gradient `λW`.  Conv and
+//! the output projection are never regularized (§3.2), matching
+//! [`crate::model::group_bases`].
+
+use crate::error::Result;
+use crate::linalg;
+use crate::model::{self, ParamSet};
+
+/// Native-optimizer knobs, orthogonal to the schedule in
+/// [`crate::train::TrainOpts`].
+#[derive(Clone, Copy, Debug)]
+pub struct NativeOpts {
+    /// classical momentum coefficient μ
+    pub momentum: f32,
+    /// global gradient-norm ceiling; 0 disables clipping
+    pub clip: f32,
+}
+
+impl Default for NativeOpts {
+    fn default() -> Self {
+        NativeOpts { momentum: 0.9, clip: 2.0 }
+    }
+}
+
+/// Trace-norm surrogate penalty and its gradient over every compressible
+/// group: returns `(penalty value, gradient ParamSet holding only the
+/// group factors/weights)`.
+pub fn surrogate_penalty(
+    params: &ParamSet,
+    lam_rec: f32,
+    lam_nonrec: f32,
+) -> Result<(f32, ParamSet)> {
+    let mut penalty = 0.0f32;
+    let mut grads = ParamSet::new();
+    for base in model::group_bases(params) {
+        let lam = if model::is_recurrent_group(&base) { lam_rec } else { lam_nonrec };
+        if lam == 0.0 {
+            continue;
+        }
+        if params.contains(&format!("{base}_u")) {
+            let u = params.get(&format!("{base}_u"))?;
+            let v = params.get(&format!("{base}_v"))?;
+            penalty += lam * linalg::surrogate_norm(u, v);
+            let mut gu = u.clone();
+            gu.scale(lam);
+            let mut gv = v.clone();
+            gv.scale(lam);
+            grads.set(format!("{base}_u"), gu);
+            grads.set(format!("{base}_v"), gv);
+        } else {
+            let w = params.get(&format!("{base}_w"))?;
+            penalty += 0.5 * lam * w.data().iter().map(|x| x * x).sum::<f32>();
+            let mut gw = w.clone();
+            gw.scale(lam);
+            grads.set(format!("{base}_w"), gw);
+        }
+    }
+    Ok((penalty, grads))
+}
+
+/// Global L2 norm across all gradient tensors.
+pub fn grad_norm(grads: &ParamSet) -> f32 {
+    grads
+        .iter()
+        .map(|(_, g)| g.data().iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Clip gradients to a global-norm ceiling in place; returns the
+/// **pre-clip** norm (the `grad_norm` metric).  `max_norm <= 0` disables.
+pub fn clip_grads(grads: &mut ParamSet, max_norm: f32) -> f32 {
+    let norm = grad_norm(grads);
+    if max_norm > 0.0 && norm > max_norm {
+        let s = max_norm / norm;
+        for (_, g) in grads.iter_mut() {
+            g.scale(s);
+        }
+    }
+    norm
+}
+
+/// One SGD-with-momentum update:
+/// `v ← μ·v + g`, `w ← w − lr·v` for every parameter.
+pub fn sgd_momentum_step(
+    params: &mut ParamSet,
+    velocity: &mut ParamSet,
+    grads: &ParamSet,
+    lr: f32,
+    mu: f32,
+) -> Result<()> {
+    for (name, g) in grads.iter() {
+        let v = velocity.get_mut(name)?;
+        for (vi, gi) in v.data_mut().iter_mut().zip(g.data()) {
+            *vi = mu * *vi + gi;
+        }
+        let w = params.get_mut(name)?;
+        for (wi, vi) in w.data_mut().iter_mut().zip(velocity.get(name)?.data()) {
+            *wi -= lr * vi;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn penalty_matches_frobenius_sums_and_grad_is_lambda_w() {
+        let mut rng = Pcg64::seeded(1);
+        let mut p = ParamSet::new();
+        let u = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        p.set("rec0_u", u.clone());
+        p.set("rec0_v", v.clone());
+        p.set("fc_w", Tensor::randn(&[4, 4], 1.0, &mut rng));
+        p.set("out_w", Tensor::randn(&[2, 4], 1.0, &mut rng)); // not a group
+
+        let (pen, grads) = surrogate_penalty(&p, 0.5, 0.0).unwrap();
+        let want = 0.5 * 0.5 * (u.frob_norm().powi(2) + v.frob_norm().powi(2));
+        assert!((pen - want).abs() < 1e-4, "{pen} vs {want}");
+        // λ_nonrec = 0 → fc untouched; out never regularized
+        assert!(!grads.contains("fc_w") && !grads.contains("out_w"));
+        let gu = grads.get("rec0_u").unwrap();
+        for (g, w) in gu.data().iter().zip(u.data()) {
+            assert!((g - 0.5 * w).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clip_rescales_to_ceiling() {
+        let mut g = ParamSet::new();
+        g.set("a_w", Tensor::new(&[1, 2], vec![3.0, 4.0]).unwrap());
+        let pre = clip_grads(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-5);
+        let post = grad_norm(&g);
+        assert!((post - 1.0).abs() < 1e-5);
+        // disabled clip leaves gradients alone
+        let mut g2 = ParamSet::new();
+        g2.set("a_w", Tensor::new(&[1, 2], vec![3.0, 4.0]).unwrap());
+        assert!((clip_grads(&mut g2, 0.0) - 5.0).abs() < 1e-5);
+        assert!((grad_norm(&g2) - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut p = ParamSet::new();
+        p.set("w", Tensor::scalar(1.0));
+        let mut vel = ParamSet::zeros_like(&p);
+        let mut g = ParamSet::new();
+        g.set("w", Tensor::scalar(1.0));
+        sgd_momentum_step(&mut p, &mut vel, &g, 0.1, 0.5).unwrap();
+        // v = 1, w = 1 - 0.1
+        assert!((p.get("w").unwrap().data()[0] - 0.9).abs() < 1e-6);
+        sgd_momentum_step(&mut p, &mut vel, &g, 0.1, 0.5).unwrap();
+        // v = 0.5 + 1 = 1.5, w = 0.9 - 0.15
+        assert!((p.get("w").unwrap().data()[0] - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,148 @@
+//! Reverse-mode tape: the `Var`/`Tape` core of the native trainer.
+//!
+//! A [`Tape`] is an append-only list of nodes in topological order: leaves
+//! (weights, inputs, constants) followed by ops whose inputs are earlier
+//! vars.  Forward values are computed eagerly at `push` time and stored on
+//! the node, so [`Tape::backward`] is a single reverse sweep that
+//! accumulates gradients into a parallel `Vec<Option<Tensor>>` — no graph
+//! search, no recursion, no interior mutability.
+//!
+//! The op set (see [`super::ops`]) is exactly what the factored GRU stack
+//! + CTC head of `infer.rs` needs; everything is rank-2 (or rank-1 for
+//! biases, rank-0 for the loss).  Gradients only flow into vars whose
+//! `requires_grad` flag is set (leaves marked trainable, and any op with
+//! at least one trainable ancestor), so constant inputs like the feature
+//! matrix and the initial hidden state cost nothing in the backward pass.
+
+use crate::tensor::Tensor;
+
+use super::ops::Op;
+
+/// Handle to a tape node (an index into the tape's node list).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Var(pub(crate) usize);
+
+impl Var {
+    /// Position on the tape — the index of this var's gradient slot in
+    /// the vector [`Tape::backward`] returns.
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+pub(crate) struct Node {
+    pub(crate) op: Op,
+    pub(crate) inputs: Vec<Var>,
+    pub(crate) value: Tensor,
+    pub(crate) requires_grad: bool,
+}
+
+/// Append-only reverse-mode tape.
+#[derive(Default)]
+pub struct Tape {
+    pub(crate) nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    /// Install a leaf holding `value`; `trainable` marks it as a gradient
+    /// sink (weights) vs a constant (inputs, initial hidden state).
+    pub fn leaf(&mut self, value: Tensor, trainable: bool) -> Var {
+        self.nodes.push(Node {
+            op: Op::Leaf,
+            inputs: Vec::new(),
+            value,
+            requires_grad: trainable,
+        });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Forward value of a var.
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].value
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Append an op node whose forward `value` has already been computed
+    /// by the caller (the op constructors in [`super::ops`]).
+    pub(crate) fn push(&mut self, op: Op, inputs: Vec<Var>, value: Tensor) -> Var {
+        let requires_grad = inputs.iter().any(|v| self.nodes[v.0].requires_grad);
+        self.nodes.push(Node { op, inputs, value, requires_grad });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Reverse sweep from the scalar `loss` var: returns one gradient slot
+    /// per tape node (`None` where no gradient flowed).  Gradients for a
+    /// leaf `v` are at index `v.0`.
+    pub fn backward(&self, loss: Var) -> Vec<Option<Tensor>> {
+        let n = self.nodes.len();
+        let mut grads: Vec<Option<Tensor>> = Vec::with_capacity(n);
+        grads.resize_with(n, || None);
+        let lshape = self.nodes[loss.0].value.shape().to_vec();
+        debug_assert_eq!(
+            self.nodes[loss.0].value.len(),
+            1,
+            "backward seed must be scalar, got {lshape:?}"
+        );
+        grads[loss.0] = Some(Tensor::full(&lshape, 1.0));
+        for i in (0..=loss.0).rev() {
+            if !self.nodes[i].requires_grad || matches!(self.nodes[i].op, Op::Leaf) {
+                continue;
+            }
+            // Inputs are strictly earlier on the tape, so splitting at i
+            // gives disjoint views: the node's own gradient (read) and
+            // every input slot (write).
+            let (lower, upper) = grads.split_at_mut(i);
+            let Some(g) = upper[0].as_ref() else { continue };
+            let node = &self.nodes[i];
+            super::ops::backward_op(self, node, g, lower);
+        }
+        grads
+    }
+}
+
+/// Accumulate `delta` into an optional gradient slot.
+pub(crate) fn acc(slot: &mut Option<Tensor>, delta: Tensor) {
+    match slot {
+        Some(g) => g
+            .add_assign(&delta)
+            .expect("gradient shape mismatch (tape op backward bug)"),
+        None => *slot = Some(delta),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leaf_and_value() {
+        let mut t = Tape::new();
+        let v = t.leaf(Tensor::from_vec(vec![1.0, 2.0]), true);
+        assert_eq!(t.value(v).data(), &[1.0, 2.0]);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn constant_leaves_get_no_grad() {
+        let mut t = Tape::new();
+        let a = t.leaf(Tensor::from_vec(vec![1.0, 2.0]), true);
+        let b = t.leaf(Tensor::from_vec(vec![3.0, 4.0]), false);
+        let y = t.mul(a, b);
+        let s = t.sum(y);
+        let g = t.backward(s);
+        assert!(g[a.0].is_some());
+        assert!(g[b.0].is_none(), "constant leaf must not accumulate grad");
+        assert_eq!(g[a.0].as_ref().unwrap().data(), &[3.0, 4.0]);
+    }
+}

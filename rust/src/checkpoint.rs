@@ -36,6 +36,7 @@ use crate::error::{Error, Result};
 use crate::jsonx::Json;
 use crate::model::ParamSet;
 use crate::quant::QMatrix;
+use crate::runtime::ModelDims;
 use crate::tensor::{Tensor, TensorI8};
 
 const MAGIC: &[u8; 4] = b"TNCK";
@@ -303,6 +304,184 @@ pub fn load_artifact(path: impl AsRef<Path>) -> Result<Artifact> {
 }
 
 // ---------------------------------------------------------------------------
+// Train-state checkpoints (native trainer): params + momentum + schedule.
+// ---------------------------------------------------------------------------
+
+/// `meta.kind` of a train-state artifact.
+pub const TRAIN_STATE_KIND: &str = "train-state";
+
+/// Entry-name prefix for the optimizer's momentum buffers inside a
+/// train-state artifact; everything else is a parameter.
+pub const MOMENTUM_PREFIX: &str = "momentum/";
+
+/// Optimizer/stage metadata recorded in the TNCK-v2 JSON meta block so a
+/// resumed stage-2 run carries the §3.2.3 LR schedule (previously lost:
+/// v1 checkpoints stored bare parameters, so `--load` restarted the
+/// schedule and dropped the momentum state).
+#[derive(Clone, Debug)]
+pub struct TrainMeta {
+    /// model layer map, so a checkpoint is servable without out-of-band
+    /// dims (`ladder-build --load`, `stream-serve --load`)
+    pub dims: ModelDims,
+    /// 1 = stage-1 (surrogate-regularized full rank), 2 = stage-2
+    pub stage: u32,
+    /// epochs completed so far
+    pub epoch: usize,
+    /// current learning rate (post-decay — the schedule position)
+    pub lr: f32,
+    pub lr_decay: f32,
+    /// momentum coefficient μ
+    pub momentum: f32,
+    /// global gradient-norm clip ceiling (0 = off)
+    pub clip: f32,
+    pub lam_rec: f32,
+    pub lam_nonrec: f32,
+    pub seed: u64,
+}
+
+/// A resumable native-trainer snapshot.
+pub struct TrainState {
+    pub params: ParamSet,
+    pub momentum: ParamSet,
+    pub meta: TrainMeta,
+}
+
+fn meta_f64(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| err(format!("train-state meta '{key}' must be a number")))
+}
+
+impl TrainMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(TRAIN_STATE_KIND)),
+            ("dims", self.dims.to_json()),
+            ("stage", Json::num(self.stage as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("lr_decay", Json::num(self.lr_decay as f64)),
+            ("momentum", Json::num(self.momentum as f64)),
+            ("clip", Json::num(self.clip as f64)),
+            ("lam_rec", Json::num(self.lam_rec as f64)),
+            ("lam_nonrec", Json::num(self.lam_nonrec as f64)),
+            // string, not number: a JSON f64 would silently round seeds
+            // above 2^53 across save/load
+            ("seed", Json::str(self.seed.to_string())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<TrainMeta> {
+        Ok(TrainMeta {
+            dims: ModelDims::from_json(j.req("dims")?)?,
+            stage: meta_f64(j, "stage")? as u32,
+            epoch: meta_f64(j, "epoch")? as usize,
+            lr: meta_f64(j, "lr")? as f32,
+            lr_decay: meta_f64(j, "lr_decay")? as f32,
+            momentum: meta_f64(j, "momentum")? as f32,
+            clip: meta_f64(j, "clip")? as f32,
+            lam_rec: meta_f64(j, "lam_rec")? as f32,
+            lam_nonrec: meta_f64(j, "lam_nonrec")? as f32,
+            seed: j
+                .req("seed")?
+                .as_str()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| err("train-state meta 'seed' must be a u64 string"))?,
+        })
+    }
+}
+
+/// Is this artifact a native train-state snapshot?
+pub fn is_train_state(a: &Artifact) -> bool {
+    a.meta.get("kind").and_then(|k| k.as_str()) == Some(TRAIN_STATE_KIND)
+}
+
+/// Assemble a train-state artifact: parameters under their own names,
+/// momentum buffers under [`MOMENTUM_PREFIX`], schedule in the meta
+/// block.  All entries are f32 (training precision).
+pub fn train_state_to_artifact(state: &TrainState) -> Artifact {
+    let mut a = Artifact::new(state.meta.to_json());
+    for (name, t) in state.params.iter() {
+        a.set(name.clone(), Entry::F32(t.clone()));
+    }
+    for (name, t) in state.momentum.iter() {
+        a.set(format!("{MOMENTUM_PREFIX}{name}"), Entry::F32(t.clone()));
+    }
+    a
+}
+
+/// Split a train-state artifact back into params + momentum + meta.
+pub fn train_state_from_artifact(a: &Artifact) -> Result<TrainState> {
+    if !is_train_state(a) {
+        return Err(err("artifact is not a train-state (meta.kind mismatch)"));
+    }
+    let meta = TrainMeta::from_json(&a.meta)?;
+    let mut params = ParamSet::new();
+    let mut momentum = ParamSet::new();
+    for (name, e) in &a.entries {
+        let t = match e {
+            Entry::F32(t) => t.clone(),
+            Entry::I8(_) => {
+                return Err(err(format!("train-state entry '{name}' must be f32")))
+            }
+        };
+        match name.strip_prefix(MOMENTUM_PREFIX) {
+            Some(base) => momentum.set(base.to_string(), t),
+            None => params.set(name.clone(), t),
+        }
+    }
+    if params.is_empty() {
+        return Err(err("train-state holds no parameters"));
+    }
+    Ok(TrainState { params, momentum, meta })
+}
+
+/// Save a resumable train state (atomic, checksummed, finiteness-guarded
+/// like every TNCK write).
+pub fn save_train_state(state: &TrainState, path: impl AsRef<Path>) -> Result<()> {
+    save_artifact(&train_state_to_artifact(state), path)
+}
+
+/// Load a train state saved by [`save_train_state`].
+pub fn load_train_state(path: impl AsRef<Path>) -> Result<TrainState> {
+    train_state_from_artifact(&load_artifact(path)?)
+}
+
+/// Extract a plain f32 [`ParamSet`] from any artifact: v1 files load
+/// directly; v2 train-states contribute their parameter entries (the
+/// momentum buffers are dropped); other all-f32 v2 artifacts load as-is.
+/// Int8 (ladder-rung) artifacts are rejected — serve those through
+/// [`crate::registry::Registry`] instead.
+pub fn params_from_artifact(a: &Artifact) -> Result<ParamSet> {
+    let mut params = ParamSet::new();
+    for (name, e) in &a.entries {
+        if name.starts_with(MOMENTUM_PREFIX) {
+            continue;
+        }
+        match e {
+            Entry::F32(t) => params.set(name.clone(), t.clone()),
+            Entry::I8(_) => {
+                return Err(err(format!(
+                    "entry '{name}' is int8 — quantized ladder artifacts cannot load as a \
+                     ParamSet; use Registry::load"
+                )))
+            }
+        }
+    }
+    if params.is_empty() {
+        return Err(err("artifact holds no f32 parameters"));
+    }
+    Ok(params)
+}
+
+/// Load a parameter set from a v1 checkpoint **or** any f32 v2 artifact
+/// (train-states included) — the `--load` entry point for `ladder-build`
+/// and `stream-serve`, so native training output is directly servable.
+pub fn load_params_any(path: impl AsRef<Path>) -> Result<ParamSet> {
+    params_from_artifact(&load_artifact(path)?)
+}
+
+// ---------------------------------------------------------------------------
 // Shared low-level plumbing.
 // ---------------------------------------------------------------------------
 
@@ -556,6 +735,83 @@ mod tests {
         let bytes = artifact_to_bytes(&sample_artifact()).unwrap();
         let e = from_bytes(&bytes).unwrap_err();
         assert!(e.to_string().contains("load_artifact"), "should point at the right API: {e}");
+    }
+
+    fn sample_meta() -> TrainMeta {
+        use crate::runtime::ConvDims;
+        TrainMeta {
+            dims: ModelDims {
+                feat_dim: 8,
+                conv: vec![ConvDims { context: 2, dim: 10 }],
+                gru_dims: vec![8, 8],
+                fc_dim: 12,
+                vocab: 29,
+                total_stride: 2,
+            },
+            stage: 2,
+            epoch: 5,
+            lr: 7.5e-4,
+            lr_decay: 0.92,
+            momentum: 0.9,
+            clip: 1.5,
+            lam_rec: 0.0,
+            lam_nonrec: 0.0,
+            // > 2^53: would corrupt if the seed went through a JSON f64
+            seed: u64::MAX - 1,
+        }
+    }
+
+    #[test]
+    fn train_state_roundtrip_keeps_momentum_and_schedule() {
+        let mut rng = Pcg64::seeded(9);
+        let mut params = ParamSet::new();
+        params.set("rec0_u", Tensor::randn(&[6, 2], 0.5, &mut rng));
+        params.set("gru0_b", Tensor::zeros(&[6]));
+        let mut momentum = ParamSet::zeros_like(&params);
+        momentum.set("rec0_u", Tensor::randn(&[6, 2], 0.1, &mut rng));
+        let state = TrainState { params, momentum, meta: sample_meta() };
+
+        let art = train_state_to_artifact(&state);
+        assert!(is_train_state(&art));
+        let bytes = artifact_to_bytes(&art).unwrap();
+        let back = train_state_from_artifact(&artifact_from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.momentum.len(), 2);
+        assert_eq!(
+            back.momentum.get("rec0_u").unwrap(),
+            state.momentum.get("rec0_u").unwrap(),
+            "momentum buffers must survive the roundtrip"
+        );
+        // the schedule position survives — the ISSUE-4 satellite fix
+        assert_eq!(back.meta.stage, 2);
+        assert_eq!(back.meta.epoch, 5);
+        assert!((back.meta.lr - 7.5e-4).abs() < 1e-9);
+        assert!((back.meta.lr_decay - 0.92).abs() < 1e-6);
+        assert!((back.meta.momentum - 0.9).abs() < 1e-6);
+        assert!((back.meta.clip - 1.5).abs() < 1e-6);
+        assert_eq!(back.meta.seed, u64::MAX - 1, "seed must round-trip exactly, not via f64");
+        assert!(back.meta.dims.same_as(&state.meta.dims));
+
+        // params_from_artifact strips the momentum entries
+        let p = params_from_artifact(&art).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(p.contains("rec0_u") && p.contains("gru0_b"));
+    }
+
+    #[test]
+    fn params_from_artifact_rejects_int8_and_v1_still_loads() {
+        let a = sample_artifact(); // holds int8 rungs
+        assert!(params_from_artifact(&a).is_err());
+        // a v1 byte stream loads through the same any-path
+        let p = sample();
+        let back = params_from_artifact(&artifact_from_bytes(&to_bytes(&p).unwrap()).unwrap())
+            .unwrap();
+        assert_eq!(back.len(), p.len());
+    }
+
+    #[test]
+    fn non_train_state_artifact_rejected_as_state() {
+        assert!(train_state_from_artifact(&sample_artifact()).is_err());
     }
 
     #[test]

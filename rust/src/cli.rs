@@ -7,10 +7,21 @@
 //!   info                         list artifacts + configs from the manifest
 //!   experiment <id|all>          regenerate a paper table/figure (fig1..fig8,
 //!                                table1..table3)
-//!   train                        single training run
+//!   train                        single training run (XLA-AOT artifacts)
 //!                                  --artifact train_mini_partial_full
 //!                                  --epochs 5 --lr 0.003
 //!                                  --lam-rec 0 --lam-nonrec 0
+//!   train --native               pure-Rust autograd + CTC training in the
+//!                                default offline build (DESIGN.md §2.5):
+//!                                the full §3 two-stage scheme by default
+//!                                  --stage two|1|2 --epochs N --transition N
+//!                                  --lr F --momentum F --clip F
+//!                                  --lam-rec F --lam-nonrec F --threshold F
+//!                                  --utts N --dev-utts N --batch N --seed N
+//!                                  --save CKPT (TNCK-v2 train-state: params
+//!                                  + momentum + LR-schedule meta)
+//!                                  --load CKPT (resume a train-state, or
+//!                                  warmstart stage 2 from stage-1 params)
 //!   two-stage                    full §3 pipeline
 //!                                  --stage1 train_mini_partial_full
 //!                                  --family train_mini_partial
@@ -60,6 +71,11 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all>
   repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
               [--load CKPT] [--save CKPT]
+  repro train --native [--stage two|1|2] [--epochs N] [--transition N] [--lr F]
+              [--momentum F] [--clip F] [--lam-rec F] [--lam-nonrec F] [--threshold T]
+              [--utts N] [--dev-utts N] [--batch N] [--seed N] [--load CKPT] [--save CKPT]
+              (offline two-stage trace-norm training, no XLA; saves a TNCK-v2
+               train-state that ladder-build / stream-serve --load serve directly)
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
   repro bench-gemm [--reps N]

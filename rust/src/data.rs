@@ -231,6 +231,42 @@ pub struct Batch {
     pub texts: Vec<String>,
 }
 
+impl Batch {
+    /// Per-row unpadded views for the native trainer
+    /// ([`crate::train::NativeTrainer`]): the i-th row's `(frames_i,
+    /// feat_dim)` features and its label sequence.  Pad-replica rows
+    /// (see [`make_batch`]) are returned too — the loss averages over
+    /// all rows, matching the AOT artifacts' batch semantics.  Rows with
+    /// zero frames (an under-filled batch with no utterances to
+    /// replicate) are skipped.
+    pub fn utterances(&self) -> crate::error::Result<Vec<(Tensor, Vec<i32>)>> {
+        let feats = self.feats.as_f32()?;
+        let shape = feats.shape();
+        if shape.len() != 3 {
+            return Err(crate::error::Error::Shape(format!(
+                "batch feats must be (b, max_frames, feat), got {shape:?}"
+            )));
+        }
+        let (b, max_t, f) = (shape[0], shape[1], shape[2]);
+        let frame_lens = self.frame_lens.as_i32()?;
+        let labels = self.labels.as_i32()?;
+        let label_lens = self.label_lens.as_i32()?;
+        let max_l = self.labels.shape()[1];
+        let mut out = Vec::with_capacity(b);
+        for i in 0..b {
+            let t = (frame_lens[i] as usize).min(max_t);
+            if t == 0 {
+                continue;
+            }
+            let data = feats.data()[i * max_t * f..(i * max_t + t) * f].to_vec();
+            let l = (label_lens[i] as usize).min(max_l);
+            let lab = labels[i * max_l..i * max_l + l].to_vec();
+            out.push((Tensor::new(&[t, f], data)?, lab));
+        }
+        Ok(out)
+    }
+}
+
 /// Assemble utterances into the static-shape batch an artifact expects.
 /// Fewer utterances than `geom.batch` are padded with empty (zero-length)
 /// rows whose CTC loss contribution is masked by `label_lens = 0`... the
@@ -385,6 +421,22 @@ mod tests {
             let row = &feats.data()[(l0 * 40)..(l0 * 40 + 40)];
             assert!(row.iter().all(|&v| v == 0.0));
         }
+    }
+
+    #[test]
+    fn batch_utterances_roundtrip_unpadded() {
+        let d = Dataset::generate(CorpusSpec::standard(7), 6, 2, 2);
+        let refs: Vec<&Utterance> = d.train.iter().take(3).collect();
+        let b = make_batch(&refs, &geom(), 40);
+        let utts = b.utterances().unwrap();
+        // 3 real rows + 1 pad replica of the last utterance
+        assert_eq!(utts.len(), 4);
+        for (i, u) in refs.iter().enumerate() {
+            assert_eq!(utts[i].0, u.feats, "row {i} feats");
+            assert_eq!(utts[i].1, u.labels, "row {i} labels");
+        }
+        assert_eq!(utts[3].0, refs[2].feats, "pad row replicates the last utterance");
+        assert_eq!(utts[3].1, refs[2].labels);
     }
 
     #[test]

@@ -121,7 +121,10 @@ pub fn beam_decode(
         .unwrap_or_default()
 }
 
-fn logaddexp(a: f64, b: f64) -> f64 {
+/// `log(eᵃ + eᵇ)` without overflow; −∞-safe.  Shared by the beam
+/// decoder's prefix merging and the CTC alpha/beta recursions of the
+/// native trainer ([`crate::autograd::ctc`]).
+pub fn logaddexp(a: f64, b: f64) -> f64 {
     if a == f64::NEG_INFINITY {
         return b;
     }

@@ -19,6 +19,7 @@
 //! implemented in-repo: the build environment is offline, so everything
 //! beyond the `xla` crate closure is first-party code.
 
+pub mod autograd;
 pub mod checkpoint;
 pub mod cli;
 pub mod configx;

@@ -204,6 +204,16 @@ pub fn trace_norm(w: &Tensor) -> Result<f32> {
     Ok(svd(w)?.s.iter().sum())
 }
 
+/// Lemma 1's variational surrogate at a factor pair:
+/// `½(‖U‖²_F + ‖V‖²_F) ≥ ‖U·V‖_*`, with equality at the balanced split
+/// ([`Svd::balanced_factors`]).  This is the quantity stage-1 training
+/// penalizes in place of the trace norm ([`crate::autograd::optim`]).
+pub fn surrogate_norm(u: &Tensor, v: &Tensor) -> f32 {
+    let su: f64 = u.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let sv: f64 = v.data().iter().map(|&x| (x as f64) * (x as f64)).sum();
+    (0.5 * (su + sv)) as f32
+}
+
 /// The paper's Definition 1: nondimensional trace norm coefficient
 /// ν(W) = (‖σ‖₁/‖σ‖₂ − 1) / (√d − 1), d = min(m, n) ≥ 2.
 ///
@@ -322,7 +332,7 @@ mod tests {
         let rec = u.matmul(&v).unwrap();
         assert!(w.max_abs_diff(&rec) < 1e-3);
         // Lemma 1 equality: ½(‖U‖² + ‖V‖²) == trace norm at the balanced split
-        let surrogate = 0.5 * (u.frob_norm().powi(2) + v.frob_norm().powi(2));
+        let surrogate = surrogate_norm(&u, &v);
         let tn: f32 = s.s.iter().sum();
         assert_close(surrogate, tn, 1e-3 * tn.max(1.0));
     }

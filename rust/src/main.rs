@@ -7,6 +7,8 @@
 use std::path::Path;
 use std::sync::Arc;
 
+use tracenorm::autograd::NativeOpts;
+use tracenorm::checkpoint::{self, TrainMeta, TrainState};
 use tracenorm::cli::{self, Cli, USAGE};
 use tracenorm::controller::ControllerConfig;
 use tracenorm::data::{Batcher, CorpusSpec, Dataset};
@@ -14,12 +16,14 @@ use tracenorm::error::Result;
 use tracenorm::experiments;
 use tracenorm::infer::{Breakdown, Engine, Precision};
 use tracenorm::kernels::BackendSel;
+use tracenorm::model::ParamSet;
 use tracenorm::registry::{ladder_build, Registry};
-use tracenorm::runtime::Runtime;
+use tracenorm::runtime::{BatchGeom, ModelDims, Runtime};
 use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
 use tracenorm::stream::{demo_dims, synthetic_params};
 use tracenorm::train::{
-    eval_name, two_stage, Evaluator, Stage2Lr, TrainOpts, Trainer,
+    eval_name, native_mini_dims, two_stage, two_stage_native, EpochLog, Evaluator,
+    NativeEvaluator, NativeTrainer, Stage2Lr, TrainOpts, Trainer, NATIVE_RANK_LADDER,
 };
 
 fn main() {
@@ -99,7 +103,36 @@ fn default_ctx(cli: &Cli) -> Result<experiments::Ctx> {
     experiments::Ctx::new(cli.cfg.clone())
 }
 
+/// A `--load`-ed checkpoint: either a resumable native train-state or a
+/// bare parameter set (v1, or any f32 v2 artifact).
+enum LoadedCkpt {
+    State(TrainState),
+    Params(ParamSet),
+}
+
+fn load_ckpt(path: &str) -> Result<LoadedCkpt> {
+    let art = checkpoint::load_artifact(path)?;
+    if checkpoint::is_train_state(&art) {
+        Ok(LoadedCkpt::State(checkpoint::train_state_from_artifact(&art)?))
+    } else {
+        Ok(LoadedCkpt::Params(checkpoint::params_from_artifact(&art)?))
+    }
+}
+
+/// Params + (when the checkpoint is a train-state) the model dims it was
+/// trained with — so `ladder-build`/`stream-serve --load` serve native
+/// checkpoints without out-of-band layer-map knowledge.
+fn load_ckpt_params(path: &str) -> Result<(ParamSet, Option<ModelDims>)> {
+    match load_ckpt(path)? {
+        LoadedCkpt::State(st) => Ok((st.params, Some(st.meta.dims))),
+        LoadedCkpt::Params(p) => Ok((p, None)),
+    }
+}
+
 fn train_cmd(cli: &Cli) -> Result<()> {
+    if cli.cfg.bool_or("native", false) {
+        return native_train_cmd(cli);
+    }
     let ctx = default_ctx(cli)?;
     let artifact = cli.flag_str("artifact", "train_mini_partial_full");
     let opts = TrainOpts {
@@ -141,6 +174,259 @@ fn train_cmd(cli: &Cli) -> Result<()> {
         println!("saved checkpoint to {path}");
     }
     Ok(())
+}
+
+fn loss_trajectory(history: &[EpochLog]) -> String {
+    history.iter().map(|l| format!("{:.4}", l.mean_loss)).collect::<Vec<_>>().join(" -> ")
+}
+
+fn loss_decreased(history: &[EpochLog]) -> bool {
+    history.len() >= 2 && history.windows(2).all(|w| w[1].mean_loss < w[0].mean_loss)
+}
+
+/// `train --native`: the paper's two-stage scheme on the pure-Rust
+/// autograd backend — runs in the default offline build, no artifacts,
+/// no manifest, no XLA (DESIGN.md §2.5).  `--stage two` (default) runs
+/// stage-1 + SVD transition + stage-2 end to end; `--stage 1`/`--stage 2`
+/// run a single stage, with `--load` resuming a saved train-state
+/// (momentum + LR schedule restored from the TNCK-v2 meta block) or
+/// warmstarting stage 2 from stage-1 parameters.
+fn native_train_cmd(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_usize("seed", 17) as u64;
+    let stage = cli.flag_str("stage", "two");
+    let epochs = cli.flag_usize("epochs", 6);
+    let transition = cli.flag_usize("transition", epochs.div_ceil(2)).min(epochs);
+    let threshold = cli.flag_f64("threshold", 0.9);
+    let n_train = cli.flag_usize("utts", 48);
+    let n_dev = cli.flag_usize("dev-utts", 8);
+    let batch = cli.flag_usize("batch", 4);
+    if n_train < batch {
+        return Err(tracenorm::Error::Config(format!(
+            "--utts {n_train} is smaller than --batch {batch}: every epoch would drop its \
+             only (partial) batch and train nothing"
+        )));
+    }
+    let mut nopts = NativeOpts {
+        momentum: cli.flag_f64("momentum", 0.9) as f32,
+        clip: cli.flag_f64("clip", 2.0) as f32,
+    };
+    let mut opts = TrainOpts {
+        seed,
+        lr: cli.flag_f64("lr", 5e-3) as f32,
+        lr_decay: cli.flag_f64("lr-decay", 0.92) as f32,
+        epochs,
+        lam_rec: cli.flag_f64("lam-rec", 1e-3) as f32,
+        lam_nonrec: cli.flag_f64("lam-nonrec", 1e-3) as f32,
+        quiet: false,
+    };
+
+    let loaded = match cli.cfg.raw("load") {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            Some(load_ckpt(path)?)
+        }
+        None => None,
+    };
+    // resume/warmstart on the same synthetic corpus the checkpoint was
+    // trained on unless --seed explicitly overrides
+    let seed = match &loaded {
+        Some(LoadedCkpt::State(st)) if cli.cfg.raw("seed").is_none() => st.meta.seed,
+        _ => seed,
+    };
+    opts.seed = seed;
+    let dims = match &loaded {
+        Some(LoadedCkpt::State(st)) => st.meta.dims.clone(),
+        _ => native_mini_dims(),
+    };
+    let corpus = CorpusSpec::standard(seed);
+    if dims.feat_dim != corpus.feat_dim {
+        return Err(tracenorm::Error::Config(format!(
+            "checkpoint feat_dim {} does not match the synthetic corpus ({})",
+            dims.feat_dim, corpus.feat_dim
+        )));
+    }
+    let geom =
+        BatchGeom { batch, max_frames: corpus.max_frames, max_label: corpus.max_label };
+    let data = Dataset::generate(corpus, n_train, n_dev, n_dev.max(4));
+    let mut batcher = Batcher::new(&data.train, geom, data.spec.feat_dim, seed);
+    let eval = NativeEvaluator::new(&dims);
+    println!(
+        "native training: stage {stage}, {} train / {} dev utts, batch {batch}, {epochs} epochs",
+        data.train.len(),
+        data.dev.len()
+    );
+
+    // epochs completed in earlier sessions (restored from a resumed
+    // train-state, so the saved `epoch` stays cumulative)
+    let mut prior_epochs = 0usize;
+    // restore the saved schedule on resume unless the flag was given
+    // explicitly on this command line
+    let restore_schedule = |opts: &mut TrainOpts, nopts: &mut NativeOpts, st: &TrainMeta| {
+        if cli.cfg.raw("lr").is_none() {
+            opts.lr = st.lr;
+        }
+        if cli.cfg.raw("lr-decay").is_none() {
+            opts.lr_decay = st.lr_decay;
+        }
+        if cli.cfg.raw("momentum").is_none() {
+            nopts.momentum = st.momentum;
+        }
+        if cli.cfg.raw("clip").is_none() {
+            nopts.clip = st.clip;
+        }
+    };
+
+    let (mut trainer, final_stage) = match stage.as_str() {
+        "two" => {
+            if loaded.is_some() {
+                return Err(tracenorm::Error::Config(
+                    "--load applies to --stage 1|2 (resume/warmstart); --stage two always \
+                     starts stage 1 fresh"
+                        .into(),
+                ));
+            }
+            let r = two_stage_native(
+                &dims,
+                &mut batcher,
+                Some(&data.dev),
+                threshold,
+                NATIVE_RANK_LADDER,
+                transition,
+                epochs,
+                opts,
+                nopts,
+                Stage2Lr::Continuation,
+            )?;
+            println!("stage1 loss trajectory: {}", loss_trajectory(&r.stage1_history));
+            println!("stage1 loss decreased: {}", loss_decreased(&r.stage1_history));
+            println!(
+                "picked rank_frac {:.3}  stage-1 params {}  stage-2 params {}",
+                r.rank_frac,
+                r.stage1_params.num_scalars(),
+                r.stage2.params.num_scalars()
+            );
+            (r.stage2, 2u32)
+        }
+        "1" => {
+            let mut t = match loaded {
+                Some(LoadedCkpt::State(st)) if st.meta.stage == 1 => {
+                    println!("resuming stage-1 train-state (epoch {}, lr {})", st.meta.epoch, st.meta.lr);
+                    restore_schedule(&mut opts, &mut nopts, &st.meta);
+                    if cli.cfg.raw("lam-rec").is_none() {
+                        opts.lam_rec = st.meta.lam_rec;
+                    }
+                    if cli.cfg.raw("lam-nonrec").is_none() {
+                        opts.lam_nonrec = st.meta.lam_nonrec;
+                    }
+                    prior_epochs = st.meta.epoch;
+                    let mut t =
+                        NativeTrainer::resume(&dims, st.params, st.momentum, opts.lr, opts, nopts)?;
+                    t.epoch_offset = prior_epochs;
+                    t
+                }
+                Some(LoadedCkpt::State(st)) => {
+                    return Err(tracenorm::Error::Config(format!(
+                        "--stage 1 cannot resume a stage-{} train-state (re-running the \
+                         surrogate stage on truncated factors corrupts the two-stage \
+                         provenance); use --stage 2 to continue it",
+                        st.meta.stage
+                    )));
+                }
+                Some(LoadedCkpt::Params(p)) => NativeTrainer::with_params(&dims, p, opts, nopts)?,
+                None => NativeTrainer::new_factored(&dims, opts, nopts),
+            };
+            t.run(&mut batcher, Some(&eval), Some(&data.dev))?;
+            println!("stage1 loss trajectory: {}", loss_trajectory(&t.history));
+            println!("stage1 loss decreased: {}", loss_decreased(&t.history));
+            (t, 1u32)
+        }
+        "2" => {
+            opts.lam_rec = 0.0;
+            opts.lam_nonrec = 0.0;
+            let mut t = match loaded {
+                Some(LoadedCkpt::State(st)) if st.meta.stage == 2 => {
+                    println!(
+                        "resuming stage-2 train-state (epoch {}, lr {} — schedule carried)",
+                        st.meta.epoch, st.meta.lr
+                    );
+                    restore_schedule(&mut opts, &mut nopts, &st.meta);
+                    prior_epochs = st.meta.epoch;
+                    let mut t =
+                        NativeTrainer::resume(&dims, st.params, st.momentum, opts.lr, opts, nopts)?;
+                    t.epoch_offset = prior_epochs;
+                    t
+                }
+                Some(LoadedCkpt::State(st)) => {
+                    // §3.2.3 continuation: stage 2 picks up the stage-1
+                    // schedule position, matching two_stage_native
+                    restore_schedule(&mut opts, &mut nopts, &st.meta);
+                    let p2 = truncate_for_stage2(cli, st.params, threshold)?;
+                    NativeTrainer::with_params(&dims, p2, opts, nopts)?
+                }
+                Some(LoadedCkpt::Params(p)) => {
+                    let p2 = truncate_for_stage2(cli, p, threshold)?;
+                    NativeTrainer::with_params(&dims, p2, opts, nopts)?
+                }
+                None => {
+                    return Err(tracenorm::Error::Config(
+                        "--stage 2 needs --load (a stage-1 checkpoint or a stage-2 train-state)"
+                            .into(),
+                    ))
+                }
+            };
+            t.run(&mut batcher, Some(&eval), Some(&data.dev))?;
+            println!("stage2 loss trajectory: {}", loss_trajectory(&t.history));
+            println!("stage2 loss decreased: {}", loss_decreased(&t.history));
+            (t, 2u32)
+        }
+        other => {
+            return Err(tracenorm::Error::Config(format!(
+                "--stage must be 1, 2 or two (got '{other}')"
+            )))
+        }
+    };
+
+    let stats = eval.greedy_cer(&trainer.params, &data.test)?;
+    println!(
+        "final: params {}  test CER {:.3}  WER {:.3}",
+        trainer.params.num_scalars(),
+        stats.cer(),
+        stats.wer()
+    );
+    if let Some(path) = cli.cfg.raw("save") {
+        let meta = TrainMeta {
+            dims: dims.clone(),
+            stage: final_stage,
+            epoch: prior_epochs + trainer.history.len(),
+            lr: trainer.lr,
+            lr_decay: trainer.opts.lr_decay,
+            momentum: trainer.nopts.momentum,
+            clip: trainer.nopts.clip,
+            lam_rec: trainer.opts.lam_rec,
+            lam_nonrec: trainer.opts.lam_nonrec,
+            seed,
+        };
+        let state = TrainState {
+            params: std::mem::take(&mut trainer.params),
+            momentum: std::mem::take(&mut trainer.velocity),
+            meta,
+        };
+        checkpoint::save_train_state(&state, path)?;
+        println!("saved train-state checkpoint to {path} (servable via ladder-build/stream-serve --load)");
+    }
+    Ok(())
+}
+
+/// Stage-2 warmstart from stage-1 parameters: truncate every group at
+/// `--rank-frac`, or pick the fraction by explained variance
+/// (`--threshold`) against the native ladder.
+fn truncate_for_stage2(cli: &Cli, stage1: ParamSet, threshold: f64) -> Result<ParamSet> {
+    let frac = match cli.cfg.raw("rank-frac") {
+        Some(_) => cli.flag_f64("rank-frac", 0.5),
+        None => tracenorm::model::pick_rank_frac(&stage1, threshold, NATIVE_RANK_LADDER)?,
+    };
+    println!("stage-2 warmstart: truncating groups at rank_frac {frac:.3}");
+    tracenorm::model::truncate_groups(&stage1, frac)
 }
 
 fn two_stage_cmd(cli: &Cli) -> Result<()> {
@@ -261,15 +547,24 @@ fn ladder_build_cmd(cli: &Cli) -> Result<()> {
             })
         })
         .collect::<Result<Vec<f64>>>()?;
-    let dims = demo_dims();
-    let params = match cli.cfg.raw("load") {
+    let (params, dims) = match cli.cfg.raw("load") {
         Some(path) => {
-            println!("loading trained weights from checkpoint {path} (wsj_mini dims assumed)");
-            tracenorm::checkpoint::load(path)?
+            let (params, ckpt_dims) = load_ckpt_params(path)?;
+            match ckpt_dims {
+                Some(d) => {
+                    println!("loading trained weights from train-state {path} (dims from its meta block)");
+                    (params, d)
+                }
+                None => {
+                    println!("loading trained weights from checkpoint {path} (wsj_mini dims assumed)");
+                    (params, demo_dims())
+                }
+            }
         }
         None => {
             println!("using synthetic full-rank weights — structure is real, accuracy is not");
-            synthetic_params(&dims, 1.0, seed)
+            let dims = demo_dims();
+            (synthetic_params(&dims, 1.0, seed), dims)
         }
     };
     let rungs = ladder_build(&params, &dims, &fracs, Path::new(&out))?;
@@ -393,11 +688,13 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     let time_batch = cli.flag_usize("time-batch", 4);
     let scheme = cli.flag_str("scheme", "partial");
 
-    let dims = demo_dims();
-    let params = match cli.cfg.raw("load") {
+    let (params, dims) = match cli.cfg.raw("load") {
         Some(path) => {
             println!("loading weights from checkpoint {path}");
-            tracenorm::checkpoint::load(path)?
+            let (params, ckpt_dims) = load_ckpt_params(path)?;
+            // train-states carry their own layer map; bare v1 checkpoints
+            // are assumed to match the demo dims, as before
+            (params, ckpt_dims.unwrap_or_else(demo_dims))
         }
         None => {
             if scheme != "partial" {
@@ -406,7 +703,9 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
                 ));
             }
             println!("using synthetic (untrained) weights — timing is real, transcripts are not");
-            synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed)
+            let dims = demo_dims();
+            let p = synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed);
+            (p, dims)
         }
     };
     let engine = Arc::new(

@@ -71,6 +71,12 @@ impl ParamSet {
             .ok_or_else(|| Error::other(format!("no param '{name}'")))
     }
 
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map
+            .get_mut(name)
+            .ok_or_else(|| Error::other(format!("no param '{name}'")))
+    }
+
     pub fn set(&mut self, name: impl Into<String>, t: Tensor) {
         self.map.insert(name.into(), t);
     }
@@ -85,6 +91,10 @@ impl ParamSet {
 
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
         self.map.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Tensor)> {
+        self.map.iter_mut()
     }
 
     pub fn len(&self) -> usize {
@@ -134,6 +144,138 @@ impl ParamSet {
         }
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Native (manifest-free) initialization.
+// ---------------------------------------------------------------------------
+
+/// Stage-1 initialization for the native trainer ([`crate::train`]):
+/// every compressible group starts as **full-rank balanced factors**
+/// `{base}_u (m, r)` / `{base}_v (r, n)` with `r = min(m, n)` — the
+/// paper's stage-1 factored parameterization (§3.1), under which the
+/// `½(‖U‖²+‖V‖²)` surrogate is trained.  Conv and the output projection
+/// stay dense; biases start at zero; weights are Glorot-uniform.  The
+/// layer map mirrors [`crate::infer::Engine::from_params`] exactly.
+pub fn init_factored_full(dims: &crate::runtime::ModelDims, seed: u64) -> ParamSet {
+    init_native(dims, true, seed)
+}
+
+/// Dense (unfactored) initialization on the same layer map — the ℓ²
+/// baseline of the paper's comparisons.
+pub fn init_dense(dims: &crate::runtime::ModelDims, seed: u64) -> ParamSet {
+    init_native(dims, false, seed)
+}
+
+fn init_native(dims: &crate::runtime::ModelDims, factored: bool, seed: u64) -> ParamSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut p = ParamSet::new();
+    let set_group = |p: &mut ParamSet, base: &str, m: usize, n: usize, rng: &mut Pcg64| {
+        if factored {
+            let r = m.min(n);
+            p.set(format!("{base}_u"), Tensor::glorot(m, r, rng));
+            p.set(format!("{base}_v"), Tensor::glorot(r, n, rng));
+        } else {
+            p.set(format!("{base}_w"), Tensor::glorot(m, n, rng));
+        }
+    };
+    let mut prev = dims.feat_dim;
+    for (i, c) in dims.conv.iter().enumerate() {
+        p.set(format!("conv{i}_w"), Tensor::glorot(c.dim, c.context * prev, &mut rng));
+        p.set(format!("conv{i}_b"), Tensor::zeros(&[c.dim]));
+        prev = c.dim;
+    }
+    for (i, &h) in dims.gru_dims.iter().enumerate() {
+        set_group(&mut p, &format!("rec{i}"), 3 * h, h, &mut rng);
+        set_group(&mut p, &format!("nonrec{i}"), 3 * h, prev, &mut rng);
+        p.set(format!("gru{i}_b"), Tensor::zeros(&[3 * h]));
+        prev = h;
+    }
+    set_group(&mut p, "fc", dims.fc_dim, prev, &mut rng);
+    p.set("fc_b", Tensor::zeros(&[dims.fc_dim]));
+    p.set("out_w", Tensor::glorot(dims.vocab, dims.fc_dim, &mut rng));
+    p.set("out_b", Tensor::zeros(&[dims.vocab]));
+    p
+}
+
+/// Do these parameters implement the layer map `dims` describes (group
+/// out/in dims, factor inner ranks, bias lengths)?  The clean-error
+/// gate for untrusted `--load` checkpoints on the native training path —
+/// without it a mismatched layer map panics inside a GEMM contraction
+/// assert mid-run instead of failing at construction (mirrors the
+/// validation [`crate::infer::Engine::from_entries`] applies to ladder
+/// artifacts).
+pub fn check_params_match_dims(params: &ParamSet, dims: &crate::runtime::ModelDims) -> Result<()> {
+    let matrix = |name: &str| -> Result<&Tensor> {
+        let t = params.get(name)?;
+        if t.rank() != 2 {
+            return Err(Error::Shape(format!("'{name}' must be a matrix, got {:?}", t.shape())));
+        }
+        Ok(t)
+    };
+    // (out, in) dims of a possibly-factored group
+    let group_dims = |base: &str| -> Result<(usize, usize)> {
+        if params.contains(&format!("{base}_u")) {
+            let u = matrix(&format!("{base}_u"))?;
+            let v = matrix(&format!("{base}_v"))?;
+            if u.cols() != v.rows() {
+                return Err(Error::Shape(format!("{base}: factor inner ranks disagree")));
+            }
+            Ok((u.rows(), v.cols()))
+        } else {
+            let w = matrix(&format!("{base}_w"))?;
+            Ok((w.rows(), w.cols()))
+        }
+    };
+    let err = |what: &str| {
+        Err(Error::Shape(format!(
+            "checkpoint {what} does not match the model dims (layer-map mismatch?)"
+        )))
+    };
+    let stride: usize = dims.conv.iter().map(|c| c.context).product();
+    if stride != dims.total_stride {
+        return Err(Error::Shape(format!(
+            "model dims are self-inconsistent: conv contexts multiply to {stride} but \
+             total_stride is {}",
+            dims.total_stride
+        )));
+    }
+    let mut prev = dims.feat_dim;
+    for (i, c) in dims.conv.iter().enumerate() {
+        let (o, inp) = group_dims(&format!("conv{i}"))?;
+        if o != c.dim
+            || inp != c.context * prev
+            || params.get(&format!("conv{i}_b"))?.len() != c.dim
+        {
+            return err(&format!("conv{i}"));
+        }
+        prev = c.dim;
+    }
+    for (i, &h) in dims.gru_dims.iter().enumerate() {
+        let (ro, ri) = group_dims(&format!("rec{i}"))?;
+        let (no, ni) = group_dims(&format!("nonrec{i}"))?;
+        if ro != 3 * h
+            || ri != h
+            || no != 3 * h
+            || ni != prev
+            || params.get(&format!("gru{i}_b"))?.len() != 3 * h
+        {
+            return err(&format!("gru layer {i}"));
+        }
+        prev = h;
+    }
+    let (fo, fi) = group_dims("fc")?;
+    if fo != dims.fc_dim || fi != prev || params.get("fc_b")?.len() != dims.fc_dim {
+        return err("fc");
+    }
+    let out = matrix("out_w")?;
+    if out.rows() != dims.vocab
+        || out.cols() != dims.fc_dim
+        || params.get("out_b")?.len() != dims.vocab
+    {
+        return err("the output projection");
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -405,6 +547,71 @@ mod tests {
         assert!(p.get("fc_b").unwrap().data().iter().all(|&v| v == 0.0));
         assert!(p.get("fc_u").unwrap().abs_max() > 0.0);
         assert_eq!(p.num_scalars(), 8 * 4 + 4 * 6 + 8);
+    }
+
+    #[test]
+    fn init_factored_full_matches_engine_layer_map() {
+        use crate::runtime::{ConvDims, ModelDims};
+        let dims = ModelDims {
+            feat_dim: 6,
+            conv: vec![ConvDims { context: 2, dim: 8 }],
+            gru_dims: vec![5, 7],
+            fc_dim: 9,
+            vocab: 11,
+            total_stride: 2,
+        };
+        let p = init_factored_full(&dims, 0);
+        // full-rank factors: rec0 is (15, 5) => r = 5
+        assert_eq!(p.get("rec0_u").unwrap().shape(), &[15, 5]);
+        assert_eq!(p.get("rec0_v").unwrap().shape(), &[5, 5]);
+        // nonrec1 maps gru0 (5) -> 3*7: r = min(21, 5) = 5
+        assert_eq!(p.get("nonrec1_u").unwrap().shape(), &[21, 5]);
+        assert_eq!(p.get("nonrec1_v").unwrap().shape(), &[5, 5]);
+        assert_eq!(p.get("conv0_w").unwrap().shape(), &[8, 12]);
+        assert_eq!(p.get("out_w").unwrap().shape(), &[11, 9]);
+        // servable as-is by the embedded engine
+        assert!(crate::infer::Engine::from_params(
+            &dims,
+            "partial",
+            &p,
+            crate::infer::Precision::F32,
+            4
+        )
+        .is_ok());
+        let d = init_dense(&dims, 0);
+        assert_eq!(d.get("rec0_w").unwrap().shape(), &[15, 5]);
+        assert!(!d.contains("rec0_u"));
+    }
+
+    #[test]
+    fn check_params_match_dims_gates_layer_map_mismatches() {
+        use crate::runtime::{ConvDims, ModelDims};
+        let dims = ModelDims {
+            feat_dim: 6,
+            conv: vec![ConvDims { context: 2, dim: 8 }],
+            gru_dims: vec![5, 7],
+            fc_dim: 9,
+            vocab: 11,
+            total_stride: 2,
+        };
+        let p = init_factored_full(&dims, 1);
+        assert!(check_params_match_dims(&p, &dims).is_ok());
+        let d = init_dense(&dims, 1);
+        assert!(check_params_match_dims(&d, &dims).is_ok());
+
+        // truncated groups still match (rank lives on the inner dim)
+        let trunc = truncate_groups(&p, 0.5).unwrap();
+        assert!(check_params_match_dims(&trunc, &dims).is_ok());
+
+        // a wider network must be rejected with a clean shape error
+        let mut wide = dims.clone();
+        wide.gru_dims = vec![16, 16];
+        let e = check_params_match_dims(&p, &wide).unwrap_err();
+        assert!(matches!(e, Error::Shape(_)), "expected shape error, got {e:?}");
+        // missing a layer entirely is also an error (extra layer in dims)
+        let mut deeper = dims.clone();
+        deeper.gru_dims.push(5);
+        assert!(check_params_match_dims(&p, &deeper).is_err());
     }
 
     #[test]

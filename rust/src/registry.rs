@@ -36,7 +36,7 @@ use crate::jsonx::Json;
 use crate::kernels::BackendSel;
 use crate::model::{self, ParamSet};
 use crate::quant::quantize;
-use crate::runtime::{ConvDims, ModelDims};
+use crate::runtime::ModelDims;
 
 /// File name of the rung index inside a ladder directory.
 pub const LADDER_MANIFEST: &str = "ladder.json";
@@ -179,10 +179,10 @@ impl Registry {
                     info.rank_frac
                 )));
             }
-            let d = dims_from_json(art.meta.req("dims")?)?;
+            let d = ModelDims::from_json(art.meta.req("dims")?)?;
             match &dims {
                 None => dims = Some(d),
-                Some(have) if dims_eq(have, &d) => {}
+                Some(have) if have.same_as(&d) => {}
                 Some(_) => {
                     return Err(Error::Checkpoint(format!(
                         "rung {file}: model dims disagree with earlier rungs"
@@ -249,7 +249,7 @@ fn rung_meta(dims: &ModelDims, frac: f64, tag: &str, params: usize, nu: &[(Strin
         ("tag", Json::str(tag)),
         ("rank_frac", Json::num(frac)),
         ("params", Json::num(params as f64)),
-        ("dims", dims_to_json(dims)),
+        ("dims", dims.to_json()),
         ("nu", nu_obj),
     ])
 }
@@ -279,70 +279,6 @@ fn rung_info_from_meta(meta: &Json, file: &str) -> Result<RungInfo> {
     })
 }
 
-fn dims_to_json(d: &ModelDims) -> Json {
-    let conv: Vec<Json> = d
-        .conv
-        .iter()
-        .map(|c| {
-            Json::obj(vec![
-                ("context", Json::num(c.context as f64)),
-                ("dim", Json::num(c.dim as f64)),
-            ])
-        })
-        .collect();
-    Json::obj(vec![
-        ("feat_dim", Json::num(d.feat_dim as f64)),
-        ("conv", Json::Arr(conv)),
-        ("gru_dims", Json::arr_num(&d.gru_dims.iter().map(|&g| g as f64).collect::<Vec<_>>())),
-        ("fc_dim", Json::num(d.fc_dim as f64)),
-        ("vocab", Json::num(d.vocab as f64)),
-        ("total_stride", Json::num(d.total_stride as f64)),
-    ])
-}
-
-fn dims_from_json(j: &Json) -> Result<ModelDims> {
-    let conv = j
-        .req("conv")?
-        .as_arr()
-        .ok_or_else(|| Error::Checkpoint("dims 'conv' must be an array".into()))?
-        .iter()
-        .map(|c| {
-            Ok(ConvDims {
-                context: json_f64(c, "context")? as usize,
-                dim: json_f64(c, "dim")? as usize,
-            })
-        })
-        .collect::<Result<Vec<_>>>()?;
-    let gru_dims = j
-        .req("gru_dims")?
-        .as_arr()
-        .ok_or_else(|| Error::Checkpoint("dims 'gru_dims' must be an array".into()))?
-        .iter()
-        .map(|g| {
-            g.as_usize()
-                .ok_or_else(|| Error::Checkpoint("non-numeric gru dim".into()))
-        })
-        .collect::<Result<Vec<_>>>()?;
-    Ok(ModelDims {
-        feat_dim: json_f64(j, "feat_dim")? as usize,
-        conv,
-        gru_dims,
-        fc_dim: json_f64(j, "fc_dim")? as usize,
-        vocab: json_f64(j, "vocab")? as usize,
-        total_stride: json_f64(j, "total_stride")? as usize,
-    })
-}
-
-fn dims_eq(a: &ModelDims, b: &ModelDims) -> bool {
-    a.feat_dim == b.feat_dim
-        && a.gru_dims == b.gru_dims
-        && a.fc_dim == b.fc_dim
-        && a.vocab == b.vocab
-        && a.total_stride == b.total_stride
-        && a.conv.len() == b.conv.len()
-        && a.conv.iter().zip(&b.conv).all(|(x, y)| x.context == y.context && x.dim == y.dim)
-}
-
 fn json_str(j: &Json, key: &str) -> Result<String> {
     j.req(key)?
         .as_str()
@@ -359,6 +295,7 @@ fn json_f64(j: &Json, key: &str) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::ConvDims;
 
     #[test]
     fn rung_tags_are_stable() {
@@ -378,9 +315,9 @@ mod tests {
             vocab: 29,
             total_stride: 2,
         };
-        let j = dims_to_json(&d);
-        let back = dims_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
-        assert!(dims_eq(&d, &back));
+        let j = d.to_json();
+        let back = ModelDims::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert!(d.same_as(&back));
     }
 
     #[test]

@@ -78,6 +78,83 @@ pub struct ModelDims {
     pub total_stride: usize,
 }
 
+impl ModelDims {
+    /// Self-describing JSON form, embedded in rank-ladder rung metadata
+    /// ([`crate::registry`]) and native train-state checkpoints
+    /// ([`crate::checkpoint`]) so artifacts carry their own layer map.
+    pub fn to_json(&self) -> Json {
+        let conv: Vec<Json> = self
+            .conv
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("context", Json::num(c.context as f64)),
+                    ("dim", Json::num(c.dim as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("feat_dim", Json::num(self.feat_dim as f64)),
+            ("conv", Json::Arr(conv)),
+            (
+                "gru_dims",
+                Json::arr_num(&self.gru_dims.iter().map(|&g| g as f64).collect::<Vec<_>>()),
+            ),
+            ("fc_dim", Json::num(self.fc_dim as f64)),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("total_stride", Json::num(self.total_stride as f64)),
+        ])
+    }
+
+    /// Parse the [`ModelDims::to_json`] form back.
+    pub fn from_json(j: &Json) -> Result<ModelDims> {
+        let req_usize = |j: &Json, key: &str| -> Result<usize> {
+            j.req(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Manifest(format!("dims '{key}' must be a number")))
+        };
+        let conv = j
+            .req("conv")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("dims 'conv' must be an array".into()))?
+            .iter()
+            .map(|c| {
+                Ok(ConvDims { context: req_usize(c, "context")?, dim: req_usize(c, "dim")? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let gru_dims = j
+            .req("gru_dims")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("dims 'gru_dims' must be an array".into()))?
+            .iter()
+            .map(|g| g.as_usize().ok_or_else(|| Error::Manifest("non-numeric gru dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelDims {
+            feat_dim: req_usize(j, "feat_dim")?,
+            conv,
+            gru_dims,
+            fc_dim: req_usize(j, "fc_dim")?,
+            vocab: req_usize(j, "vocab")?,
+            total_stride: req_usize(j, "total_stride")?,
+        })
+    }
+
+    /// Structural equality (layer map + widths).
+    pub fn same_as(&self, other: &ModelDims) -> bool {
+        self.feat_dim == other.feat_dim
+            && self.gru_dims == other.gru_dims
+            && self.fc_dim == other.fc_dim
+            && self.vocab == other.vocab
+            && self.total_stride == other.total_stride
+            && self.conv.len() == other.conv.len()
+            && self
+                .conv
+                .iter()
+                .zip(&other.conv)
+                .all(|(x, y)| x.context == y.context && x.dim == y.dim)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
     pub name: String,

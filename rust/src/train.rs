@@ -13,14 +13,24 @@
 //!    warmstart ([`crate::model::warmstart`]).
 //! 3. *Stage 2*: low-rank training, no regularization, LR carried over
 //!    per the §3.2.3 schedule (continuation or 3× final stage-1 LR).
+//!
+//! Training runs behind the [`TrainBackend`]/[`EvalBackend`] traits with
+//! two implementations sharing one epoch loop: the XLA-AOT path above
+//! ([`Trainer`]/[`Evaluator`] — needs the `xla` feature at runtime), and
+//! the pure-Rust [`NativeTrainer`]/[`NativeEvaluator`] built on
+//! [`crate::autograd`] (reverse-mode tape + CTC + the surrogate
+//! penalty), which runs the full two-stage scheme — [`two_stage_native`]
+//! — in the default offline build (DESIGN.md §2.5).
 
 use std::sync::Arc;
 
+use crate::autograd::{self, NativeOpts};
 use crate::data::{Batch, Batcher, Utterance, make_batch};
 use crate::decoder::{self, ErrorStats};
 use crate::error::{Error, Result};
+use crate::infer::{Breakdown, Engine, Precision};
 use crate::model::{self, ParamSet};
-use crate::runtime::{LoadedArtifact, Runtime, Value};
+use crate::runtime::{LoadedArtifact, ModelDims, Runtime, Value};
 use crate::tensor::Tensor;
 
 /// Scalar metrics returned by one train step.
@@ -67,6 +77,109 @@ pub struct EpochLog {
     pub mean_ctc: f64,
     pub lr: f32,
     pub dev_cer: Option<f64>,
+}
+
+// ---------------------------------------------------------------------------
+// Backend traits: the XLA-AOT and native paths behind one interface.
+// ---------------------------------------------------------------------------
+
+/// One training backend: something that owns a parameter set, applies
+/// one optimizer step per batch, and follows the §3.2.3 LR schedule.
+/// Two implementations exist — the XLA-AOT [`Trainer`] (executes the
+/// lowered `train_*` artifacts; needs the `xla` feature at runtime) and
+/// the pure-Rust [`NativeTrainer`] (reverse-mode autograd + CTC,
+/// [`crate::autograd`]; works in the default offline build).  The epoch
+/// loop is shared: [`run_one_epoch_on`] / [`run_epochs_on`].
+pub trait TrainBackend {
+    /// Human-readable identity for logs and error messages.
+    fn backend_name(&self) -> &str;
+    /// One optimizer step on a batch.
+    fn step(&mut self, batch: &Batch) -> Result<StepMetrics>;
+    fn params(&self) -> &ParamSet;
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+    fn opts(&self) -> &TrainOpts;
+    fn history(&self) -> &[EpochLog];
+    fn history_mut(&mut self) -> &mut Vec<EpochLog>;
+    /// Epochs completed before this backend instance existed (a resumed
+    /// native run), so logged epoch numbers stay cumulative.
+    fn epoch_offset(&self) -> usize {
+        0
+    }
+}
+
+/// Dev/test evaluation behind the same split: the XLA-AOT [`Evaluator`]
+/// (batched `eval_*` artifacts) or the [`NativeEvaluator`] (the embedded
+/// f32 engine itself — eval exactly what will be served).
+pub trait EvalBackend {
+    fn greedy_cer(&self, params: &ParamSet, utts: &[Utterance]) -> Result<ErrorStats>;
+}
+
+/// One epoch (all batches once) on any backend; appends to its history
+/// and applies the per-epoch LR decay.
+pub fn run_one_epoch_on(
+    t: &mut dyn TrainBackend,
+    batcher: &mut Batcher,
+    eval: Option<&dyn EvalBackend>,
+    dev: Option<&[Utterance]>,
+) -> Result<()> {
+    let epoch = t.epoch_offset() + t.history().len();
+    let mut sum_loss = 0.0f64;
+    let mut sum_ctc = 0.0f64;
+    let batches = batcher.epoch();
+    let n = batches.len().max(1);
+    for b in &batches {
+        let m = t.step(b)?;
+        if !m.loss.is_finite() {
+            return Err(Error::Train(format!(
+                "non-finite loss at epoch {epoch} ({})",
+                t.backend_name()
+            )));
+        }
+        sum_loss += m.loss as f64;
+        sum_ctc += m.ctc as f64;
+    }
+    let dev_cer = match (eval, dev) {
+        (Some(e), Some(d)) => Some(e.greedy_cer(t.params(), d)?.cer()),
+        _ => None,
+    };
+    let log = EpochLog {
+        epoch,
+        mean_loss: sum_loss / n as f64,
+        mean_ctc: sum_ctc / n as f64,
+        lr: t.lr(),
+        dev_cer,
+    };
+    if !t.opts().quiet {
+        match dev_cer {
+            Some(c) => println!(
+                "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}  dev CER {:.3}",
+                log.mean_loss, log.mean_ctc, log.lr, c
+            ),
+            None => println!(
+                "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}",
+                log.mean_loss, log.mean_ctc, log.lr
+            ),
+        }
+    }
+    t.history_mut().push(log);
+    let decay = t.opts().lr_decay;
+    let lr = t.lr() * decay;
+    t.set_lr(lr);
+    Ok(())
+}
+
+/// `opts.epochs` epochs over the batcher on any backend.
+pub fn run_epochs_on(
+    t: &mut dyn TrainBackend,
+    batcher: &mut Batcher,
+    eval: Option<&dyn EvalBackend>,
+    dev: Option<&[Utterance]>,
+) -> Result<()> {
+    for _ in 0..t.opts().epochs {
+        run_one_epoch_on(t, batcher, eval, dev)?;
+    }
+    Ok(())
 }
 
 /// Single-stage trainer bound to one train artifact.
@@ -182,11 +295,7 @@ impl Trainer {
     /// Train for `opts.epochs` epochs over the batcher, decaying LR per
     /// epoch and logging dev CER through `eval` when provided.
     pub fn run(&mut self, batcher: &mut Batcher, eval: Option<&Evaluator>, dev: Option<&[Utterance]>) -> Result<()> {
-        let epochs = self.opts.epochs;
-        for _ in 0..epochs {
-            self.run_one_epoch(batcher, eval, dev)?;
-        }
-        Ok(())
+        run_epochs_on(self, batcher, eval.map(|e| e as &dyn EvalBackend), dev)
     }
 
     /// One epoch (all batches once); appends to history.
@@ -196,48 +305,41 @@ impl Trainer {
         eval: Option<&Evaluator>,
         dev: Option<&[Utterance]>,
     ) -> Result<()> {
-        let epoch = self.history.len();
-        let mut sum_loss = 0.0f64;
-        let mut sum_ctc = 0.0f64;
-        let batches = batcher.epoch();
-        let n = batches.len().max(1);
-        for b in &batches {
-            let m = self.step(b)?;
-            if !m.loss.is_finite() {
-                return Err(Error::Train(format!(
-                    "non-finite loss at epoch {epoch} ({})",
-                    self.artifact.spec.name
-                )));
-            }
-            sum_loss += m.loss as f64;
-            sum_ctc += m.ctc as f64;
-        }
-        let dev_cer = match (eval, dev) {
-            (Some(e), Some(d)) => Some(e.greedy_cer(&self.params, d)?.cer()),
-            _ => None,
-        };
-        let log = EpochLog {
-            epoch,
-            mean_loss: sum_loss / n as f64,
-            mean_ctc: sum_ctc / n as f64,
-            lr: self.lr,
-            dev_cer,
-        };
-        if !self.opts.quiet {
-            match dev_cer {
-                Some(c) => println!(
-                    "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}  dev CER {:.3}",
-                    log.mean_loss, log.mean_ctc, log.lr, c
-                ),
-                None => println!(
-                    "  epoch {epoch:>3}  loss {:.4}  ctc {:.4}  lr {:.5}",
-                    log.mean_loss, log.mean_ctc, log.lr
-                ),
-            }
-        }
-        self.history.push(log);
-        self.lr *= self.opts.lr_decay;
-        Ok(())
+        run_one_epoch_on(self, batcher, eval.map(|e| e as &dyn EvalBackend), dev)
+    }
+}
+
+impl TrainBackend for Trainer {
+    fn backend_name(&self) -> &str {
+        &self.artifact.spec.name
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        Trainer::step(self, batch)
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn opts(&self) -> &TrainOpts {
+        &self.opts
+    }
+
+    fn history(&self) -> &[EpochLog] {
+        &self.history
+    }
+
+    fn history_mut(&mut self) -> &mut Vec<EpochLog> {
+        &mut self.history
     }
 }
 
@@ -316,6 +418,214 @@ impl Evaluator {
             stats.push(&hyp, &reference);
         }
         Ok(stats)
+    }
+}
+
+impl EvalBackend for Evaluator {
+    fn greedy_cer(&self, params: &ParamSet, utts: &[Utterance]) -> Result<ErrorStats> {
+        Evaluator::greedy_cer(self, params, utts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native trainer: pure-Rust autograd + CTC (crate::autograd), no XLA.
+// ---------------------------------------------------------------------------
+
+/// Native evaluator: greedy CER through the embedded f32
+/// [`Engine`] itself — the dev metric is computed on exactly the code
+/// path the checkpoint will be served by.
+pub struct NativeEvaluator {
+    dims: ModelDims,
+    time_batch: usize,
+}
+
+impl NativeEvaluator {
+    pub fn new(dims: &ModelDims) -> NativeEvaluator {
+        NativeEvaluator { dims: dims.clone(), time_batch: 4 }
+    }
+
+    pub fn greedy_cer(&self, params: &ParamSet, utts: &[Utterance]) -> Result<ErrorStats> {
+        // "partial" dispatches per group on the params themselves
+        // (factored where `{base}_u` exists, dense otherwise)
+        let eng = Engine::from_params(&self.dims, "partial", params, Precision::F32, self.time_batch)?;
+        let mut stats = ErrorStats::default();
+        let mut bd = Breakdown::default();
+        for u in utts {
+            let (hyp, _) = eng.transcribe(&u.feats, &mut bd)?;
+            stats.push(&hyp, &u.text);
+        }
+        Ok(stats)
+    }
+}
+
+impl EvalBackend for NativeEvaluator {
+    fn greedy_cer(&self, params: &ParamSet, utts: &[Utterance]) -> Result<ErrorStats> {
+        NativeEvaluator::greedy_cer(self, params, utts)
+    }
+}
+
+/// Pure-Rust single-stage trainer: reverse-mode autograd through the
+/// factored GRU stack + CTC ([`crate::autograd`]), the §3 trace-norm
+/// surrogate penalty, and SGD with momentum.  Runs in the default
+/// offline build — no artifacts, no manifest, no XLA.
+pub struct NativeTrainer {
+    pub dims: ModelDims,
+    pub params: ParamSet,
+    /// momentum buffers (one per parameter)
+    pub velocity: ParamSet,
+    pub lr: f32,
+    pub opts: TrainOpts,
+    pub nopts: NativeOpts,
+    pub history: Vec<EpochLog>,
+    /// epochs completed by earlier sessions (set on resume); logged and
+    /// saved epoch numbers are offset by this so they stay cumulative
+    pub epoch_offset: usize,
+}
+
+impl NativeTrainer {
+    /// Fresh stage-1 trainer: full-rank factored init
+    /// ([`model::init_factored_full`]).
+    pub fn new_factored(dims: &ModelDims, opts: TrainOpts, nopts: NativeOpts) -> NativeTrainer {
+        let params = model::init_factored_full(dims, opts.seed);
+        NativeTrainer::assemble(dims, params, opts, nopts)
+    }
+
+    /// Fresh dense trainer (the ℓ² baseline scheme).
+    pub fn new_dense(dims: &ModelDims, opts: TrainOpts, nopts: NativeOpts) -> NativeTrainer {
+        let params = model::init_dense(dims, opts.seed);
+        NativeTrainer::assemble(dims, params, opts, nopts)
+    }
+
+    /// Warmstarted trainer (stage 2): params given, momentum zeroed.
+    /// Validates the parameter set against `dims` so a mismatched
+    /// checkpoint fails here with a clean error instead of panicking in
+    /// a GEMM contraction mid-epoch.
+    pub fn with_params(
+        dims: &ModelDims,
+        params: ParamSet,
+        opts: TrainOpts,
+        nopts: NativeOpts,
+    ) -> Result<NativeTrainer> {
+        model::check_params_match_dims(&params, dims)?;
+        Ok(NativeTrainer::assemble(dims, params, opts, nopts))
+    }
+
+    fn assemble(
+        dims: &ModelDims,
+        params: ParamSet,
+        opts: TrainOpts,
+        nopts: NativeOpts,
+    ) -> NativeTrainer {
+        let velocity = ParamSet::zeros_like(&params);
+        let lr = opts.lr;
+        NativeTrainer {
+            dims: dims.clone(),
+            params,
+            velocity,
+            lr,
+            opts,
+            nopts,
+            history: Vec::new(),
+            epoch_offset: 0,
+        }
+    }
+
+    /// Resumed trainer: params **and** momentum buffers restored from a
+    /// saved train state ([`crate::checkpoint::load_train_state`]), with
+    /// the LR schedule position carried in `lr` — the fix for the
+    /// save-path metadata loss (ISSUE 4 satellite).
+    pub fn resume(
+        dims: &ModelDims,
+        params: ParamSet,
+        velocity: ParamSet,
+        lr: f32,
+        opts: TrainOpts,
+        nopts: NativeOpts,
+    ) -> Result<NativeTrainer> {
+        for (name, v) in velocity.iter() {
+            if params.get(name)?.shape() != v.shape() {
+                return Err(Error::Train(format!(
+                    "resume: momentum '{name}' shape {:?} does not match params",
+                    v.shape()
+                )));
+            }
+        }
+        if velocity.len() != params.len() {
+            return Err(Error::Train("resume: momentum/param name sets differ".into()));
+        }
+        let mut t = NativeTrainer::with_params(dims, params, opts, nopts)?;
+        t.velocity = velocity;
+        t.lr = lr;
+        Ok(t)
+    }
+
+    /// One optimizer step: mean CTC loss + gradients over the batch rows,
+    /// surrogate penalty added, global-norm clip, momentum update.
+    pub fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        let utts = batch.utterances()?;
+        let (ctc, mut grads) = autograd::batch_ctc_grads(&self.params, &self.dims, &utts)?;
+        let (penalty, pgrads) =
+            autograd::surrogate_penalty(&self.params, self.opts.lam_rec, self.opts.lam_nonrec)?;
+        for (name, g) in pgrads.iter() {
+            grads.get_mut(name)?.add_assign(g)?;
+        }
+        let grad_norm = autograd::clip_grads(&mut grads, self.nopts.clip);
+        autograd::sgd_momentum_step(
+            &mut self.params,
+            &mut self.velocity,
+            &grads,
+            self.lr,
+            self.nopts.momentum,
+        )?;
+        Ok(StepMetrics { loss: ctc + penalty, ctc, penalty, grad_norm })
+    }
+
+    /// Train for `opts.epochs` epochs (shared epoch loop).
+    pub fn run(
+        &mut self,
+        batcher: &mut Batcher,
+        eval: Option<&dyn EvalBackend>,
+        dev: Option<&[Utterance]>,
+    ) -> Result<()> {
+        run_epochs_on(self, batcher, eval, dev)
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn backend_name(&self) -> &str {
+        "native"
+    }
+
+    fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
+        NativeTrainer::step(self, batch)
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn opts(&self) -> &TrainOpts {
+        &self.opts
+    }
+
+    fn history(&self) -> &[EpochLog] {
+        &self.history
+    }
+
+    fn history_mut(&mut self) -> &mut Vec<EpochLog> {
+        &mut self.history
+    }
+
+    fn epoch_offset(&self) -> usize {
+        self.epoch_offset
     }
 }
 
@@ -407,6 +717,95 @@ pub fn two_stage(
     })
 }
 
+/// Default rank ladder for the manifest-free native path (the AOT
+/// manifest carries its own; this mirrors the same spread).
+pub const NATIVE_RANK_LADDER: &[f64] = &[0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 1.0];
+
+/// Built-in model config for manifest-free native training (`train
+/// --native`): feature width matches the synthetic corpus
+/// ([`crate::data::CorpusSpec::standard`]), sized so a CI smoke run
+/// trains in seconds while still exercising conv, a two-layer GRU stack,
+/// factored fc and the full CTC head.  Bigger serving-scale dims live in
+/// [`crate::stream::demo_dims`].
+pub fn native_mini_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 40,
+        conv: vec![crate::runtime::ConvDims { context: 2, dim: 32 }],
+        gru_dims: vec![32, 32],
+        fc_dim: 48,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+/// Result of a native two-stage run.
+pub struct NativeTwoStageResult {
+    pub stage1_params: ParamSet,
+    pub stage2: NativeTrainer,
+    pub rank_frac: f64,
+    pub stage1_history: Vec<EpochLog>,
+}
+
+/// The full §3 two-stage scheme on the native backend, end to end in the
+/// default offline build:
+///
+/// 1. **Stage 1** — full-rank factored training under the
+///    `λ/2·(‖U‖²+‖V‖²)` surrogate for `transition_epoch` epochs.
+/// 2. **Transition** — per-group explained-variance rank selection
+///    against `ladder` ([`model::pick_rank_frac`]), then truncated-SVD
+///    balanced-factor warmstart ([`model::truncate_groups`] — the same
+///    transform `ladder-build` applies per rung).
+/// 3. **Stage 2** — low-rank training, no regularization, LR per the
+///    §3.2.2/§3.2.3 rule (`stage2_lr`), for the remaining budget.
+///
+/// The stage-2 parameter set is directly servable: `Engine::from_params`,
+/// `ladder-build`, and `stream-serve --load` all consume it unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn two_stage_native(
+    dims: &ModelDims,
+    batcher: &mut Batcher,
+    dev: Option<&[Utterance]>,
+    svd_threshold: f64,
+    ladder: &[f64],
+    transition_epoch: usize,
+    total_epochs: usize,
+    stage1_opts: TrainOpts,
+    nopts: NativeOpts,
+    stage2_lr: Stage2Lr,
+) -> Result<NativeTwoStageResult> {
+    let eval = NativeEvaluator::new(dims);
+    let eval_ref = dev.map(|_| &eval as &dyn EvalBackend);
+
+    // ---- stage 1: full-rank factored + surrogate
+    let mut opts1 = stage1_opts.clone();
+    opts1.epochs = transition_epoch;
+    let mut t1 = NativeTrainer::new_factored(dims, opts1, nopts);
+    t1.run(batcher, eval_ref, dev)?;
+
+    // ---- transition: rank selection + balanced-factor truncation
+    let frac = model::pick_rank_frac(&t1.params, svd_threshold, ladder)?;
+    let params2 = model::truncate_groups(&t1.params, frac)?;
+
+    // ---- stage 2: low-rank, no regularization
+    let mut opts2 = stage1_opts.clone();
+    opts2.lam_rec = 0.0;
+    opts2.lam_nonrec = 0.0;
+    opts2.epochs = total_epochs.saturating_sub(transition_epoch);
+    opts2.lr = match stage2_lr {
+        Stage2Lr::TripleFinal => t1.lr * 3.0,
+        Stage2Lr::Continuation => t1.lr,
+    };
+    let mut t2 = NativeTrainer::with_params(dims, params2, opts2, nopts)?;
+    t2.run(batcher, eval_ref, dev)?;
+
+    Ok(NativeTwoStageResult {
+        stage1_params: t1.params,
+        stage2: t2,
+        rank_frac: frac,
+        stage1_history: t1.history,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -430,5 +829,131 @@ mod tests {
     fn default_opts_sane() {
         let o = TrainOpts::default();
         assert!(o.lr > 0.0 && o.lr_decay <= 1.0 && o.epochs > 0);
+    }
+
+    // -- native backend ----------------------------------------------------
+
+    use crate::data::{CorpusSpec, Dataset};
+    use crate::runtime::{BatchGeom, ConvDims};
+
+    fn tiny_native_dims() -> ModelDims {
+        ModelDims {
+            feat_dim: 8,
+            conv: vec![ConvDims { context: 2, dim: 10 }],
+            gru_dims: vec![8, 8],
+            fc_dim: 12,
+            vocab: 29,
+            total_stride: 2,
+        }
+    }
+
+    fn tiny_corpus(seed: u64, n_train: usize, n_dev: usize) -> Dataset {
+        let spec = CorpusSpec {
+            seed,
+            feat_dim: 8,
+            max_frames: 64,
+            max_label: 6,
+            dur_min: 3,
+            dur_max: 6,
+            noise: 0.3,
+            bands: 2,
+            feasibility_stride: 2,
+        };
+        Dataset::generate(spec, n_train, n_dev, n_dev)
+    }
+
+    fn tiny_geom(batch: usize) -> BatchGeom {
+        BatchGeom { batch, max_frames: 64, max_label: 6 }
+    }
+
+    #[test]
+    fn native_step_updates_params_and_reports_finite_metrics() {
+        let dims = tiny_native_dims();
+        let data = tiny_corpus(11, 6, 2);
+        let mut batcher = Batcher::new(&data.train, tiny_geom(3), 8, 0);
+        let opts = TrainOpts { lam_rec: 1e-3, lam_nonrec: 1e-3, ..TrainOpts::default() };
+        let mut t = NativeTrainer::new_factored(&dims, opts, NativeOpts::default());
+        let before = t.params.get("rec0_u").unwrap().clone();
+        let batches = batcher.epoch();
+        let m = t.step(&batches[0]).unwrap();
+        assert!(m.loss.is_finite() && m.ctc > 0.0, "loss {} ctc {}", m.loss, m.ctc);
+        assert!(m.penalty > 0.0, "surrogate penalty must be active in stage 1");
+        assert!(m.grad_norm > 0.0);
+        assert!(t.params.get("rec0_u").unwrap().max_abs_diff(&before) > 0.0);
+    }
+
+    #[test]
+    fn native_epoch_runner_logs_lr_decay_and_dev_cer() {
+        let dims = tiny_native_dims();
+        let data = tiny_corpus(12, 6, 2);
+        let mut batcher = Batcher::new(&data.train, tiny_geom(3), 8, 1);
+        let opts = TrainOpts { epochs: 2, lr: 1e-3, lr_decay: 0.5, ..TrainOpts::default() };
+        let mut t = NativeTrainer::new_factored(&dims, opts, NativeOpts::default());
+        let eval = NativeEvaluator::new(&dims);
+        t.run(&mut batcher, Some(&eval), Some(&data.dev)).unwrap();
+        assert_eq!(t.history.len(), 2);
+        assert!((t.history[0].lr - 1e-3).abs() < 1e-9);
+        assert!((t.history[1].lr - 5e-4).abs() < 1e-9);
+        assert!((t.lr - 2.5e-4).abs() < 1e-9);
+        assert!(t.history.iter().all(|l| l.dev_cer.is_some()));
+    }
+
+    #[test]
+    fn native_two_stage_transitions_to_low_rank() {
+        let dims = tiny_native_dims();
+        let data = tiny_corpus(13, 6, 0);
+        let mut batcher = Batcher::new(&data.train, tiny_geom(3), 8, 2);
+        let opts = TrainOpts { lr: 2e-3, lam_rec: 1e-3, lam_nonrec: 1e-3, ..TrainOpts::default() };
+        let r = two_stage_native(
+            &dims,
+            &mut batcher,
+            None,
+            0.9,
+            NATIVE_RANK_LADDER,
+            1,
+            2,
+            opts,
+            NativeOpts::default(),
+            Stage2Lr::Continuation,
+        )
+        .unwrap();
+        assert!(NATIVE_RANK_LADDER.contains(&r.rank_frac));
+        assert_eq!(r.stage1_history.len(), 1);
+        assert_eq!(r.stage2.history.len(), 1);
+        // stage 2 dropped the regularizer per §3.2.2
+        assert_eq!(r.stage2.opts.lam_rec, 0.0);
+        assert!(r.stage2.history[0].mean_loss.is_finite());
+        // the stage-2 params stay servable by the embedded engine
+        assert!(Engine::from_params(&dims, "partial", &r.stage2.params, Precision::F32, 4).is_ok());
+        if r.rank_frac < 1.0 {
+            assert!(r.stage2.params.num_scalars() < r.stage1_params.num_scalars());
+        }
+    }
+
+    #[test]
+    fn native_resume_validates_momentum_shapes() {
+        let dims = tiny_native_dims();
+        let params = model::init_factored_full(&dims, 3);
+        let good = ParamSet::zeros_like(&params);
+        assert!(NativeTrainer::resume(
+            &dims,
+            params.clone(),
+            good,
+            1e-3,
+            TrainOpts::default(),
+            NativeOpts::default()
+        )
+        .is_ok());
+        let mut bad = ParamSet::zeros_like(&params);
+        bad.set("rec0_u", Tensor::zeros(&[2, 2]));
+        assert!(NativeTrainer::resume(
+            &dims,
+            params,
+            bad,
+            1e-3,
+            TrainOpts::default(),
+            NativeOpts::default()
+        )
+        .is_err());
     }
 }

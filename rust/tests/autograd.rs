@@ -1,0 +1,577 @@
+//! Gradient correctness for the native training subsystem (ISSUE 4):
+//! central finite differences vs reverse-mode autograd for **every tape
+//! op**, the GRU cell chain (the whole tiny network), the CTC loss
+//! (also cross-checked against brute-force path enumeration), and the
+//! trace-norm surrogate penalty — plus the end-to-end two-stage run
+//! whose checkpoint round-trips into the serving stack bit-identically.
+//!
+//! Tolerances are scaled per op: f32 forward arithmetic puts a noise
+//! floor of ~`loss·1e-7 / (2ε)` under every finite difference, so each
+//! comparison allows a small absolute term plus a relative term.
+
+use std::path::PathBuf;
+
+use tracenorm::autograd::tape::{Tape, Var};
+use tracenorm::autograd::{self, ctc_loss_grad, log_softmax_rows, NativeOpts};
+use tracenorm::checkpoint::{self, TrainMeta, TrainState};
+use tracenorm::data::{Batcher, CorpusSpec, Dataset};
+use tracenorm::infer::{Breakdown, Engine};
+use tracenorm::model;
+use tracenorm::prng::Pcg64;
+use tracenorm::proplite;
+use tracenorm::registry::{ladder_build, Registry};
+use tracenorm::runtime::{BatchGeom, ConvDims, ModelDims};
+use tracenorm::tensor::Tensor;
+use tracenorm::train::{two_stage_native, Stage2Lr, TrainOpts, NATIVE_RANK_LADDER};
+
+// ---------------------------------------------------------------------------
+// Finite-difference harness.
+// ---------------------------------------------------------------------------
+
+/// Build a scalar loss from leaf tensors, returning (loss, grad per input).
+fn scalar_loss(
+    build: &dyn Fn(&mut Tape, &[Var]) -> Var,
+    inputs: &[Tensor],
+) -> (f32, Vec<Tensor>) {
+    let mut tape = Tape::new();
+    let vars: Vec<Var> = inputs.iter().map(|t| tape.leaf(t.clone(), true)).collect();
+    let loss = build(&mut tape, &vars);
+    let val = tape.value(loss).data()[0];
+    let grads = tape.backward(loss);
+    let gs = vars
+        .iter()
+        .zip(inputs)
+        .map(|(v, t)| {
+            grads[v.index()].clone().unwrap_or_else(|| Tensor::zeros(t.shape()))
+        })
+        .collect();
+    (val, gs)
+}
+
+/// Central-difference check of every element of every input.
+fn fd_matches(
+    build: &dyn Fn(&mut Tape, &[Var]) -> Var,
+    inputs: &[Tensor],
+    eps: f32,
+    tol_abs: f32,
+    tol_rel: f32,
+) -> bool {
+    let (_, gs) = scalar_loss(build, inputs);
+    for (i, t) in inputs.iter().enumerate() {
+        for j in 0..t.len() {
+            let mut plus = inputs.to_vec();
+            plus[i].data_mut()[j] += eps;
+            let mut minus = inputs.to_vec();
+            minus[i].data_mut()[j] -= eps;
+            let fd = (scalar_loss(build, &plus).0 - scalar_loss(build, &minus).0) / (2.0 * eps);
+            let ad = gs[i].data()[j];
+            let tol = tol_abs + tol_rel * ad.abs().max(fd.abs());
+            if (ad - fd).abs() > tol {
+                eprintln!("input {i} elem {j}: autograd {ad} vs fd {fd} (tol {tol})");
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Reduce an op's output to a scalar via a fixed pseudo-random weighted
+/// sum, so the FD probes a dense linear functional of every output.
+fn wsum(tape: &mut Tape, y: Var, seed: u64) -> Var {
+    let shape = tape.value(y).shape().to_vec();
+    let mut rng = Pcg64::seeded(seed ^ 0x57e1_6875);
+    let w = tape.leaf(Tensor::randn(&shape, 1.0, &mut rng), false);
+    let p = tape.mul(y, w);
+    tape.sum(p)
+}
+
+fn rt(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    Tensor::randn(shape, 0.8, rng)
+}
+
+// ---------------------------------------------------------------------------
+// Per-op gradient checks (proplite-randomized shapes/values).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grad_matmul_nt() {
+    proplite::check(
+        "grad-matmul-nt",
+        12,
+        |rng, size| {
+            let (m, k, n) = (1 + size % 3, 2 + size % 4, 1 + rng.below(5));
+            vec![rt(rng, &[m, k]), rt(rng, &[n, k])]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let y = tape.matmul_nt(v[0], v[1]);
+                    wsum(tape, y, 1)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_elementwise_add_sub_mul() {
+    proplite::check(
+        "grad-add-sub-mul",
+        10,
+        |rng, size| {
+            let (m, n) = (1 + size % 3, 2 + rng.below(4));
+            vec![rt(rng, &[m, n]), rt(rng, &[m, n]), rt(rng, &[m, n])]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let a = tape.add(v[0], v[1]);
+                    let s = tape.sub(a, v[2]);
+                    let p = tape.mul(s, v[1]); // reuse an input: fan-out grads
+                    wsum(tape, p, 2)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_add_bias() {
+    proplite::check(
+        "grad-add-bias",
+        10,
+        |rng, size| {
+            let (m, n) = (1 + size % 4, 2 + rng.below(4));
+            vec![rt(rng, &[m, n]), rt(rng, &[n])]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let y = tape.add_bias(v[0], v[1]);
+                    wsum(tape, y, 3)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_sigmoid_tanh() {
+    proplite::check(
+        "grad-sigmoid-tanh",
+        10,
+        |rng, size| vec![rt(rng, &[1 + size % 3, 3])],
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let s = tape.sigmoid(v[0]);
+                    let t = tape.tanh(s);
+                    wsum(tape, t, 4)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_relu_away_from_kink() {
+    proplite::check(
+        "grad-relu",
+        10,
+        |rng, size| {
+            let mut t = rt(rng, &[1 + size % 3, 4]);
+            // keep every element away from the non-differentiable point
+            for v in t.data_mut() {
+                if v.abs() < 0.1 {
+                    *v = 0.1 * if *v < 0.0 { -1.0 } else { 1.0 };
+                }
+            }
+            vec![t]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let y = tape.relu(v[0]);
+                    wsum(tape, y, 5)
+                },
+                ts,
+                2e-2, // eps must stay below the 0.1 kink margin
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_slicing_and_concat() {
+    proplite::check(
+        "grad-slice-row-concat-stack",
+        10,
+        |rng, size| {
+            let m = 2 + size % 3;
+            vec![rt(rng, &[2 * m, 6]), rt(rng, &[m, 6])]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let a = tape.slice_cols(v[0], 1, 4);
+                    let b = tape.row(a, 0);
+                    let c = tape.concat_rows(&[b, b]);
+                    let d = tape.stack_rows(c, 2);
+                    let e = tape.slice_cols(v[1], 0, 3);
+                    let f = tape.concat_rows(&[e, a]);
+                    let l1 = wsum(tape, d, 6);
+                    let l2 = wsum(tape, f, 7);
+                    tape.add(l1, l2)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_log_softmax() {
+    proplite::check(
+        "grad-log-softmax",
+        10,
+        |rng, size| vec![rt(rng, &[1 + size % 4, 5])],
+        |ts| {
+            fd_matches(
+                &|tape, v| {
+                    let y = tape.log_softmax(v[0]);
+                    wsum(tape, y, 8)
+                },
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+#[test]
+fn grad_ctc_loss() {
+    proplite::check(
+        "grad-ctc",
+        10,
+        |rng, size| {
+            let t = 4 + size % 4;
+            let mut logits = rt(rng, &[t, 5]);
+            // operate on normalized rows (the real input regime)
+            log_softmax_rows(&mut logits);
+            vec![logits]
+        },
+        |ts| {
+            fd_matches(
+                &|tape, v| tape.ctc(v[0], &[1, 2]).unwrap(),
+                ts,
+                1e-2,
+                5e-3,
+                5e-2,
+            )
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CTC vs brute-force path enumeration.
+// ---------------------------------------------------------------------------
+
+/// Sum, in probability space, over all V^T emission paths that collapse
+/// (dedupe consecutive, drop blanks) to `labels`.
+fn brute_force_log_p(logp: &Tensor, labels: &[i32]) -> f64 {
+    let (t_len, v) = (logp.rows(), logp.cols());
+    let mut total = 0.0f64;
+    let n_paths = (v as u64).pow(t_len as u32);
+    for code in 0..n_paths {
+        let mut c = code;
+        let mut path = Vec::with_capacity(t_len);
+        for _ in 0..t_len {
+            path.push((c % v as u64) as i32);
+            c /= v as u64;
+        }
+        let mut collapsed = Vec::new();
+        let mut prev = -1;
+        for &s in &path {
+            if s != prev && s != 0 {
+                collapsed.push(s);
+            }
+            prev = s;
+        }
+        if collapsed == labels {
+            let lp: f64 =
+                path.iter().enumerate().map(|(t, &s)| logp.row(t)[s as usize] as f64).sum();
+            total += lp.exp();
+        }
+    }
+    total.ln()
+}
+
+#[test]
+fn ctc_matches_brute_force_enumeration() {
+    let mut rng = Pcg64::seeded(42);
+    for labels in [vec![1], vec![1, 2], vec![1, 1], vec![2, 1, 2]] {
+        let mut logits = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        log_softmax_rows(&mut logits);
+        let want = -brute_force_log_p(&logits, &labels);
+        let (loss, grad) = ctc_loss_grad(&logits, &labels).unwrap();
+        assert!(
+            ((loss as f64) - want).abs() < 1e-4,
+            "labels {labels:?}: ctc {loss} vs brute force {want}"
+        );
+        // each frame's gradient row sums to −1 (total occupancy)
+        for t in 0..4 {
+            let s: f32 = grad.row(t).iter().sum();
+            assert!((s + 1.0).abs() < 1e-3, "labels {labels:?} row {t}: {s}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-network gradient check (the GRU cell chain, factored and dense).
+// ---------------------------------------------------------------------------
+
+fn micro_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 4,
+        conv: vec![ConvDims { context: 2, dim: 6 }],
+        gru_dims: vec![5],
+        fc_dim: 6,
+        vocab: 7,
+        total_stride: 2,
+    }
+}
+
+fn net_loss(params: &model::ParamSet, dims: &ModelDims, feats: &Tensor, labels: &[i32]) -> f32 {
+    let mut fwd = autograd::build_forward(params, dims, feats).unwrap();
+    let loss = fwd.tape.ctc(fwd.logp, labels).unwrap();
+    fwd.tape.value(loss).data()[0]
+}
+
+fn check_net_grads(params: &model::ParamSet, dims: &ModelDims) {
+    let mut rng = Pcg64::seeded(31);
+    let feats = Tensor::randn(&[8, 4], 0.8, &mut rng);
+    let labels = [1i32, 2];
+    let (loss, grads) = autograd::utterance_grads(params, dims, &feats, &labels).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let eps = 1e-2f32;
+    for (name, g) in grads.iter() {
+        let base = params.get(name).unwrap();
+        for j in 0..base.len() {
+            let mut plus = params.clone();
+            plus.get_mut(name).unwrap().data_mut()[j] += eps;
+            let mut minus = params.clone();
+            minus.get_mut(name).unwrap().data_mut()[j] -= eps;
+            let fd = (net_loss(&plus, dims, &feats, &labels)
+                - net_loss(&minus, dims, &feats, &labels))
+                / (2.0 * eps);
+            let ad = g.data()[j];
+            let tol = 5e-3 + 5e-2 * ad.abs().max(fd.abs());
+            assert!(
+                (ad - fd).abs() <= tol,
+                "{name}[{j}]: autograd {ad} vs fd {fd} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_full_network_factored() {
+    let dims = micro_dims();
+    check_net_grads(&model::init_factored_full(&dims, 7), &dims);
+}
+
+#[test]
+fn grad_full_network_dense() {
+    let dims = micro_dims();
+    check_net_grads(&model::init_dense(&dims, 8), &dims);
+}
+
+// ---------------------------------------------------------------------------
+// Trace-norm surrogate penalty gradient.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn grad_surrogate_penalty() {
+    proplite::check(
+        "grad-surrogate",
+        10,
+        |rng, size| {
+            let r = 2 + size % 3;
+            vec![rt(rng, &[5, r]), rt(rng, &[r, 4]), rt(rng, &[4, 4])]
+        },
+        |ts| {
+            let (lam_rec, lam_nonrec) = (0.7f32, 0.3f32);
+            let mut p = model::ParamSet::new();
+            p.set("rec0_u", ts[0].clone());
+            p.set("rec0_v", ts[1].clone());
+            p.set("fc_w", ts[2].clone());
+            let (_, grads) = autograd::surrogate_penalty(&p, lam_rec, lam_nonrec).unwrap();
+            let eps = 1e-2f32;
+            for name in ["rec0_u", "rec0_v", "fc_w"] {
+                let base = p.get(name).unwrap().clone();
+                for j in 0..base.len() {
+                    let pen_at = |delta: f32| {
+                        let mut q = p.clone();
+                        q.get_mut(name).unwrap().data_mut()[j] += delta;
+                        autograd::surrogate_penalty(&q, lam_rec, lam_nonrec).unwrap().0
+                    };
+                    let fd = (pen_at(eps) - pen_at(-eps)) / (2.0 * eps);
+                    let ad = grads.get(name).unwrap().data()[j];
+                    if (ad - fd).abs() > 1e-3 + 2e-2 * ad.abs().max(fd.abs()) {
+                        eprintln!("{name}[{j}]: {ad} vs {fd}");
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: native two-stage → checkpoint → ladder → bit-identical serve.
+// ---------------------------------------------------------------------------
+
+fn e2e_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 8,
+        conv: vec![ConvDims { context: 2, dim: 10 }],
+        gru_dims: vec![8, 8],
+        fc_dim: 12,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn e2e_corpus(seed: u64, n_train: usize) -> Dataset {
+    let spec = CorpusSpec {
+        seed,
+        feat_dim: 8,
+        max_frames: 64,
+        max_label: 6,
+        dur_min: 3,
+        dur_max: 6,
+        noise: 0.3,
+        bands: 2,
+        feasibility_stride: 2,
+    };
+    Dataset::generate(spec, n_train, 4, 4)
+}
+
+#[test]
+fn native_two_stage_trains_and_roundtrips_into_serving_stack() {
+    let dims = e2e_dims();
+    let data = e2e_corpus(23, 18);
+    let geom = BatchGeom { batch: 3, max_frames: 64, max_label: 6 };
+    let mut batcher = Batcher::new(&data.train, geom, 8, 5);
+    let opts = TrainOpts {
+        seed: 23,
+        lr: 3e-3,
+        lr_decay: 0.92,
+        epochs: 0, // set per stage by two_stage_native
+        lam_rec: 1e-3,
+        lam_nonrec: 1e-3,
+        quiet: true,
+    };
+    let r = two_stage_native(
+        &dims,
+        &mut batcher,
+        None,
+        0.9,
+        NATIVE_RANK_LADDER,
+        3,
+        5,
+        opts,
+        NativeOpts::default(),
+        Stage2Lr::Continuation,
+    )
+    .unwrap();
+
+    // acceptance: stage-1 loss strictly decreases over the smoke epochs
+    assert_eq!(r.stage1_history.len(), 3);
+    for w in r.stage1_history.windows(2) {
+        assert!(
+            w[1].mean_loss < w[0].mean_loss,
+            "stage-1 loss must decrease monotonically: {:?}",
+            r.stage1_history.iter().map(|l| l.mean_loss).collect::<Vec<_>>()
+        );
+    }
+    assert!(r.stage2.history.iter().all(|l| l.mean_loss.is_finite()));
+
+    // save as a TNCK-v2 train-state; params must round-trip bit-exactly
+    let dir: PathBuf =
+        std::env::temp_dir().join(format!("tn-native-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("stage2.tnck");
+    let meta = TrainMeta {
+        dims: dims.clone(),
+        stage: 2,
+        epoch: r.stage2.history.len(),
+        lr: r.stage2.lr,
+        lr_decay: r.stage2.opts.lr_decay,
+        momentum: r.stage2.nopts.momentum,
+        clip: r.stage2.nopts.clip,
+        lam_rec: 0.0,
+        lam_nonrec: 0.0,
+        seed: 23,
+    };
+    let state = TrainState {
+        params: r.stage2.params.clone(),
+        momentum: r.stage2.velocity.clone(),
+        meta,
+    };
+    checkpoint::save_train_state(&state, &ckpt).unwrap();
+    let loaded = checkpoint::load_params_any(&ckpt).unwrap();
+    assert_eq!(loaded.len(), r.stage2.params.len());
+    for (name, t) in r.stage2.params.iter() {
+        assert_eq!(loaded.get(name).unwrap(), t, "{name} must round-trip bit-exactly");
+    }
+    // the schedule metadata survives too (the satellite fix)
+    let st = checkpoint::load_train_state(&ckpt).unwrap();
+    assert_eq!(st.meta.stage, 2);
+    assert!((st.meta.lr - r.stage2.lr).abs() < 1e-9);
+    assert_eq!(st.momentum.len(), r.stage2.velocity.len());
+
+    // ladder-build from the trained checkpoint → Registry::load → decode
+    // bit-identical to an engine built directly from the artifact entries
+    let ladder_dir = dir.join("ladder");
+    let rungs = ladder_build(&loaded, &dims, &[0.5], &ladder_dir).unwrap();
+    let reg = Registry::load(&ladder_dir, 4).unwrap();
+    assert_eq!(reg.num_tiers(), 1);
+    let art = checkpoint::load_artifact(ladder_dir.join(&rungs[0].file)).unwrap();
+    let direct = Engine::from_entries(&dims, &art.entries, 4).unwrap();
+
+    let feats = &data.test[0].feats;
+    let mut b1 = Breakdown::default();
+    let mut b2 = Breakdown::default();
+    let (t_reg, rows_reg) = reg.tier(0).engine.transcribe(feats, &mut b1).unwrap();
+    let (t_dir, rows_dir) = direct.transcribe(feats, &mut b2).unwrap();
+    assert_eq!(t_reg, t_dir);
+    assert_eq!(rows_reg, rows_dir, "registry decode must be bit-identical to from_entries");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -29,9 +29,25 @@ cargo test -q --features simd --lib kernels
 echo "==> rustdoc (no warnings allowed)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
+echo "==> native-train smoke: 2-epoch stage-1 loss must decrease; checkpoint must serve"
 ldir="$(mktemp -d)"
-trap 'rm -rf "$ldir"' EXIT
+ndir="$(mktemp -d)"
+trap 'rm -rf "$ldir" "$ndir"' EXIT
+cargo run --release -q -- train --native --stage 1 --epochs 2 --utts 24 --dev-utts 4 \
+  --batch 4 --seed 7 --save "$ndir/stage1.tnck" | tee "$ndir/native.log"
+grep -q "stage1 loss decreased: true" "$ndir/native.log" \
+  || { echo "native-train smoke: stage-1 loss did not decrease"; exit 1; }
+cargo run --release -q -- train --native --stage 2 --epochs 1 --utts 24 --dev-utts 4 \
+  --batch 4 --seed 7 --load "$ndir/stage1.tnck" --save "$ndir/stage2.tnck" \
+  > "$ndir/stage2.log"
+grep -q "saved train-state" "$ndir/stage2.log" \
+  || { echo "native-train smoke: stage-2 save failed"; exit 1; }
+cargo run --release -q -- ladder-build --out "$ndir/ladder" --fracs 0.5 \
+  --load "$ndir/stage2.tnck" > "$ndir/ladder.log"
+grep -q "dims from its meta block" "$ndir/ladder.log" \
+  || { echo "native-train smoke: ladder-build did not consume the train-state"; exit 1; }
+
+echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
 cargo run --release -q -- ladder-build --out "$ldir" --fracs 0.5,0.25 --seed 7
 report="$(cargo run --release -q -- stream-serve --ladder "$ldir" --utts 10 --ramp-utts 6 \
   --ramp-rate 1000000 --rate 0.001 --pool 2 --chunk 8 --seed 7)"
@@ -41,13 +57,16 @@ echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missi
 echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
 
 echo "==> bench smoke (1 iteration each)"
-rm -f BENCH_gemm.json # so the emit check below cannot pass on a stale file
-for b in gemm linalg streaming stream_pool ladder coordinator; do
+rm -f BENCH_gemm.json BENCH_train.json # so the emit checks below cannot pass on stale files
+for b in gemm linalg streaming stream_pool ladder coordinator train; do
   echo "--- bench $b"
   BENCH_SMOKE=1 cargo bench --bench "$b"
 done
 test -f BENCH_gemm.json || { echo "gemm bench did not emit BENCH_gemm.json"; exit 1; }
 grep -q '"backend": "blocked"' BENCH_gemm.json \
   || { echo "BENCH_gemm.json missing the blocked-backend sweep"; exit 1; }
+test -f BENCH_train.json || { echo "train bench did not emit BENCH_train.json"; exit 1; }
+grep -q '"kind": "ctc"' BENCH_train.json \
+  || { echo "BENCH_train.json missing the CTC lattice sweep"; exit 1; }
 
 echo "CI OK"
