@@ -1,0 +1,89 @@
+//! Bench: the sharded serving runtime (DESIGN.md §9) — shards × pool
+//! size sweep under a saturating burst, emitting machine-readable
+//! `BENCH_shard.json` for the perf trajectory (uploaded by CI like
+//! `BENCH_gemm.json`).
+//!
+//! The acceptance shape: steady-state *simulated-span throughput*
+//! (sessions per second of clock, where the clock advances by the
+//! measured wall-clock of each parallel round) increases with shard
+//! count on a multi-core host — N shards decode N pools concurrently,
+//! so a round costs ~one pool's tick instead of N of them.  On a
+//! single-core or loaded host the curve flattens; the JSON records
+//! `available_parallelism` so a flat curve is never misread.
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use std::sync::Arc;
+
+use tracenorm::data::{CorpusSpec, Dataset};
+use tracenorm::infer::{Engine, Precision};
+use tracenorm::jsonx::Json;
+use tracenorm::serve::{stream_serve, StreamServeConfig};
+use tracenorm::stream::{demo_dims, synthetic_params};
+
+fn main() {
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.25, 1);
+    let engine =
+        Arc::new(Engine::from_params(&dims, "partial", &params, Precision::Int8, 4).unwrap());
+    let utts = 24usize;
+    let data = Dataset::generate(CorpusSpec::standard(41), 0, 0, utts);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    header(&format!(
+        "sharded serve: shards x pool sweep ({utts} burst sessions, int8 wsj_mini, {cores} cores)"
+    ));
+    let mut results = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        for &pool in &[2usize, 4] {
+            let cfg = StreamServeConfig {
+                arrival_rate: 1e6, // burst: every slot fills immediately
+                pool_size: pool,
+                chunk_frames: 16,
+                shards,
+                seed: 9,
+            };
+            // wall-clock of the whole serve (spawn + rounds + drain)
+            let wall = bench(&format!("serve shards={shards} pool={pool}"), 600, || {
+                let r = stream_serve(engine.clone(), &data.test, &cfg).unwrap();
+                std::hint::black_box(&r);
+            });
+            // one representative run for the simulated-clock report
+            let r = stream_serve(engine.clone(), &data.test, &cfg).unwrap();
+            println!(
+                "  -> {:.1} sessions/s simulated  (p50 {:.1} ms, p99 {:.1} ms, busy {:.3} s over {:.3} s span, rec batch {:.2})",
+                r.throughput,
+                r.session_latency.p50 * 1e3,
+                r.session_latency.p99 * 1e3,
+                r.busy_secs,
+                r.span_secs,
+                r.mean_rec_batch
+            );
+            results.push(Json::obj(vec![
+                ("shards", Json::num(shards as f64)),
+                ("pool", Json::num(pool as f64)),
+                ("sessions", Json::num(r.sessions as f64)),
+                ("throughput", Json::num(r.throughput)),
+                ("p50", Json::num(r.session_latency.p50)),
+                ("p99", Json::num(r.session_latency.p99)),
+                ("busy_secs", Json::num(r.busy_secs)),
+                ("span_secs", Json::num(r.span_secs)),
+                ("mean_rec_batch", Json::num(r.mean_rec_batch)),
+                ("serve_wall_secs", Json::num(wall)),
+            ]));
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("shard")),
+        ("sessions", Json::num(utts as f64)),
+        ("backend", Json::str(engine.backend_name())),
+        ("available_parallelism", Json::num(cores as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = std::env::var("BENCH_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
+    std::fs::write(&path, report.to_string_pretty()).expect("write BENCH_shard.json");
+    println!("wrote machine-readable sweep to {path}");
+}

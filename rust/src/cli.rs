@@ -31,17 +31,21 @@
 //!                                  --precision int8|f32
 //!                                  --backend scalar|blocked|simd|auto
 //!   bench-gemm                   quick farm-vs-lowp timing sweep
-//!   stream-serve                 multi-stream pool serving demo: Poisson
-//!                                arrivals over concurrent decode sessions
+//!   stream-serve                 multi-stream serving demo: Poisson
+//!                                arrivals over concurrent decode sessions,
+//!                                sharded across worker threads
 //!                                  --pool 4 --rate 8 --utts 32 --chunk 16
+//!                                  --shards N (worker shards; default 1 —
+//!                                  bit-identical to the unsharded path)
+//!                                  --json (machine-readable report)
 //!                                  --precision int8|f32 [--load ckpt]
 //!                                  --backend scalar|blocked|simd|auto
 //!                                (the GEMM backend; simd needs the `simd`
 //!                                cargo feature — DESIGN.md §4)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
-//!                                synthetic load ramp and a per-tier
-//!                                latency/occupancy report
+//!                                synthetic load ramp, per-shard fidelity
+//!                                controllers and a per-tier report
 //!                                  --ladder DIR --ramp-utts N --ramp-rate F
 //!                                  --target-p99-ms F
 //!   ladder-build                 offline rank-ladder build: truncated SVD
@@ -79,13 +83,16 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
   repro bench-gemm [--reps N]
-  repro stream-serve [--pool N] [--rate F] [--utts N] [--chunk N] [--precision int8|f32]
-                     [--rank-frac F] [--time-batch N] [--scheme S] [--load CKPT] [--seed N]
+  repro stream-serve [--shards N] [--pool N] [--rate F] [--utts N] [--chunk N] [--json]
+                     [--precision int8|f32] [--rank-frac F] [--time-batch N] [--scheme S]
+                     [--load CKPT] [--seed N] [--backend scalar|blocked|simd|auto]
+                     (--shards N spreads sessions over N worker threads; --shards 1,
+                      the default, is bit-identical to the unsharded serving path)
+  repro stream-serve --ladder DIR [--shards N] [--pool N] [--utts N] [--chunk N] [--rate F]
+                     [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N] [--json]
                      [--backend scalar|blocked|simd|auto]
-  repro stream-serve --ladder DIR [--pool N] [--utts N] [--chunk N] [--rate F]
-                     [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N]
-                     [--backend scalar|blocked|simd|auto]
-                     (adaptive-fidelity serving over a built rank ladder)
+                     (adaptive-fidelity serving over a built rank ladder; per-shard
+                      fidelity controllers with a merged, shard-tagged shift log)
   repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]
                      (offline SVD-truncate + int8-quantize, one artifact per rung)
 common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";

@@ -74,6 +74,10 @@ pub struct ShiftEvent {
     pub tier: usize,
     /// true = downshift (lower fidelity), false = upshift
     pub down: bool,
+    /// which worker shard's controller shifted (0 for an unsharded
+    /// serve) — the sharded runtime merges every shard's shifts into one
+    /// clock-ordered log (DESIGN.md §9)
+    pub shard: usize,
 }
 
 /// Routes new streams to a fidelity tier based on injected telemetry.
@@ -81,6 +85,8 @@ pub struct ShiftEvent {
 pub struct FidelityController {
     cfg: ControllerConfig,
     tiers: usize,
+    /// shard label stamped on this controller's shift events
+    shard: usize,
     current: usize,
     /// rolling latency window per tier
     windows: Vec<VecDeque<f64>>,
@@ -94,6 +100,18 @@ pub struct FidelityController {
 impl FidelityController {
     /// `tiers` is the ladder depth (tier 0 = highest fidelity).
     pub fn new(tiers: usize, cfg: ControllerConfig) -> Result<FidelityController> {
+        FidelityController::for_shard(tiers, cfg, 0)
+    }
+
+    /// A controller owned by worker shard `shard` of a sharded ladder
+    /// serve: hysteresis state is fully per-shard (each shard reacts to
+    /// its own pools' latency/occupancy), and shift events carry the
+    /// shard id so the merged shift log stays attributable.
+    pub fn for_shard(
+        tiers: usize,
+        cfg: ControllerConfig,
+        shard: usize,
+    ) -> Result<FidelityController> {
         if tiers == 0 {
             return Err(Error::Config("controller needs at least one tier".into()));
         }
@@ -113,6 +131,7 @@ impl FidelityController {
             windows: (0..tiers).map(|_| VecDeque::with_capacity(cfg.window)).collect(),
             cfg,
             tiers,
+            shard,
             current: 0,
             pressure: 0,
             clear: 0,
@@ -172,7 +191,8 @@ impl FidelityController {
                 // the lower tier's history predates this overload; let it
                 // earn fresh samples instead of inheriting stale ones
                 self.windows[self.current].clear();
-                let ev = ShiftEvent { clock, tier: self.current, down: true };
+                let ev =
+                    ShiftEvent { clock, tier: self.current, down: true, shard: self.shard };
                 self.shifts.push(ev);
                 return Some(ev);
             }
@@ -186,7 +206,8 @@ impl FidelityController {
                 // stale breached samples from the overload era must not
                 // immediately re-trigger a downshift
                 self.windows[self.current].clear();
-                let ev = ShiftEvent { clock, tier: self.current, down: false };
+                let ev =
+                    ShiftEvent { clock, tier: self.current, down: false, shard: self.shard };
                 self.shifts.push(ev);
                 return Some(ev);
             }
@@ -202,6 +223,15 @@ impl FidelityController {
     pub fn shifts(&self) -> &[ShiftEvent] {
         &self.shifts
     }
+}
+
+/// Merge per-shard shift logs into one clock-ordered log — the "shared
+/// shift log" of the sharded ladder serve.  The sort is stable, so
+/// same-clock shifts keep shard order.
+pub fn merge_shift_logs(per_shard: &[&[ShiftEvent]]) -> Vec<ShiftEvent> {
+    let mut all: Vec<ShiftEvent> = per_shard.iter().flat_map(|s| s.iter().copied()).collect();
+    all.sort_by(|a, b| a.clock.total_cmp(&b.clock));
+    all
 }
 
 #[cfg(test)]
@@ -308,6 +338,28 @@ mod tests {
         }
         assert_eq!(ctl.tier(), 0);
         assert_eq!(ctl.downshifts + ctl.upshifts, 0);
+    }
+
+    #[test]
+    fn shard_label_rides_shift_events_and_logs_merge_in_clock_order() {
+        let mut a = FidelityController::for_shard(2, cfg(), 0).unwrap();
+        let mut b = FidelityController::for_shard(2, cfg(), 1).unwrap();
+        for t in 0..3 {
+            a.observe(10.0 + t as f64, 1.0);
+            b.observe(t as f64, 1.0);
+        }
+        assert_eq!(a.shifts()[0].shard, 0);
+        assert_eq!(b.shifts()[0].shard, 1);
+        let merged = merge_shift_logs(&[a.shifts(), b.shifts()]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].shard, 1, "shard 1 shifted earlier on the clock");
+        assert!(merged.windows(2).all(|w| w[0].clock <= w[1].clock));
+        // the plain constructor labels shard 0
+        let mut c = FidelityController::new(2, cfg()).unwrap();
+        for _ in 0..3 {
+            c.observe(0.0, 1.0);
+        }
+        assert_eq!(c.shifts()[0].shard, 0);
     }
 
     #[test]

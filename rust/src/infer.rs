@@ -312,6 +312,18 @@ impl Breakdown {
         self.frontend + self.nonrec + self.rec + self.gates + self.fc_out
     }
 
+    /// Fold another breakdown into this one — the cross-shard
+    /// aggregation of the sharded serving report (DESIGN.md §9).
+    pub fn absorb(&mut self, o: &Breakdown) {
+        self.frontend += o.frontend;
+        self.nonrec += o.nonrec;
+        self.rec += o.rec;
+        self.gates += o.gates;
+        self.fc_out += o.fc_out;
+        self.frames += o.frames;
+        self.macs += o.macs;
+    }
+
     /// Real-time factor given a frame hop (seconds of audio per frame).
     pub fn speedup_over_realtime(&self, frame_hop_secs: f64) -> f64 {
         let audio = self.frames as f64 * frame_hop_secs;
@@ -996,6 +1008,14 @@ impl Engine {
         self.time_batch * self.step_raw_len()
     }
 }
+
+// Compile-time Send+Sync audit (DESIGN.md §9): the sharded runtime
+// shares one `Arc<Engine>` plan across N worker threads and moves
+// per-stream state between them, so these bounds are load-bearing — a
+// future non-Sync field (say, a `Cell` cache inside a weight op) must
+// fail the build here, not corrupt a serve.
+const _: () = crate::assert_send_sync::<Engine>();
+const _: () = crate::assert_send_sync::<StreamState>();
 
 /// One GRU cell update (elementwise gate math), writing the new hidden
 /// state into `out`.  `gx`/`gh` are the non-recurrent/recurrent gate

@@ -163,6 +163,13 @@ impl PreparedQMatrix {
     }
 }
 
+// Compile-time Send+Sync audit (DESIGN.md §9): prepared weights are the
+// shared read-only half of the serving plan — every shard thread reads
+// the same `PreparedQMatrix` through its `Arc<Engine>`, so both layouts
+// must stay shareable by construction.
+const _: () = crate::assert_send_sync::<PreparedQMatrix>();
+const _: () = crate::assert_send_sync::<PackedQMatrix>();
+
 /// Per-output-row dequantization scales, shared by the backend kernels.
 /// `Uniform` carries the pre-multiplied `sx·sw` product (one activation
 /// scale per call); `PerRow` carries the per-stream activation scales and

@@ -6,11 +6,11 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * **L3 (this crate)** — training orchestrator (two-stage trace-norm
-//!   scheme, SVD warmstart), the multi-stream serving engine
-//!   ([`stream`]/[`serve`]) with its rank-ladder model registry and
-//!   adaptive-fidelity controller ([`registry`]/[`controller`]), and the
-//!   pure-Rust embedded int8 inference engine with the reproduced "farm"
-//!   low-batch GEMM kernels.
+//!   scheme, SVD warmstart), the sharded multi-threaded serving runtime
+//!   ([`stream`]/[`shard`]/[`serve`]) with its rank-ladder model
+//!   registry and adaptive-fidelity controller
+//!   ([`registry`]/[`controller`]), and the pure-Rust embedded int8
+//!   inference engine with the reproduced "farm" low-batch GEMM kernels.
 //! * **L2/L1 (python/, build-time only)** — the DS2-style GRU acoustic
 //!   model and its Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed here through the PJRT CPU client ([`runtime`]).
@@ -42,8 +42,15 @@ pub mod quant;
 pub mod registry;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod stream;
 pub mod tensor;
 pub mod train;
 
 pub use error::{Error, Result};
+
+/// Compile-time `Send + Sync` proof helper for the sharded serving
+/// runtime's shared-plan types (DESIGN.md §9): modules assert their
+/// thread-safety with `const _: () = crate::assert_send_sync::<T>();`
+/// so a future non-Sync field fails the build, not a serve.
+pub(crate) const fn assert_send_sync<T: Send + Sync>() {}

@@ -586,9 +586,11 @@ fn ladder_build_cmd(cli: &Cli) -> Result<()> {
 }
 
 /// `stream-serve --ladder DIR`: adaptive-fidelity serving over a built
-/// rank ladder.  A synthetic load ramp (the first `--ramp-utts` sessions
-/// arrive at `--ramp-rate`) drives the controller down the ladder and
-/// back up; the report is per-tier.
+/// rank ladder, sharded across `--shards` worker threads (per-shard
+/// fidelity controllers).  A synthetic load ramp (the first
+/// `--ramp-utts` sessions arrive at `--ramp-rate`) drives the
+/// controllers down the ladder and back up; the report is per-tier,
+/// with per-shard slices and a merged shift log.
 fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     // precision, weights and scheme are baked into the ladder artifacts;
     // silently ignoring these flags would serve something other than
@@ -601,27 +603,32 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             )));
         }
     }
+    let json = cli.cfg.bool_or("json", false);
     let seed = cli.flag_usize("seed", 17) as u64;
     let n = cli.flag_usize("utts", 32);
+    let shards = cli.flag_usize("shards", 1);
     let ramp_utts = cli.flag_usize("ramp-utts", n / 2).min(n);
     let reg = Registry::load_with_backend(
         Path::new(dir),
         cli.flag_usize("time-batch", 4),
         backend_flag(cli)?,
     )?;
-    println!(
-        "registry {dir}: {} tiers, backend {}",
-        reg.num_tiers(),
-        reg.tier(0).engine.backend_name()
-    );
-    for v in reg.variants() {
+    if !json {
         println!(
-            "  {}  rank_frac {:.3}  params {}  weights {} KB",
-            v.info.tag,
-            v.info.rank_frac,
-            v.info.params,
-            v.info.bytes / 1024
+            "registry {dir}: {} tiers, {} shard(s), backend {}",
+            reg.num_tiers(),
+            shards,
+            reg.tier(0).engine.backend_name()
         );
+        for v in reg.variants() {
+            println!(
+                "  {}  rank_frac {:.3}  params {}  weights {} KB",
+                v.info.tag,
+                v.info.rank_frac,
+                v.info.params,
+                v.info.bytes / 1024
+            );
+        }
     }
     let cfg = LadderServeConfig {
         base_rate: cli.flag_f64("rate", 4.0),
@@ -629,6 +636,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
         ramp_range: (0, ramp_utts),
         pool_size: cli.flag_usize("pool", 4),
         chunk_frames: cli.flag_usize("chunk", 16),
+        shards,
         seed,
         controller: ControllerConfig {
             target_p99: cli.flag_f64("target-p99-ms", 250.0) / 1e3,
@@ -638,6 +646,10 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
     let r = ladder_serve(&reg, &data.test, &cfg)?;
 
+    if json {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
     println!(
         "\n{} sessions ({} ramped) in {:.2} s simulated span ({:.2} s engine-busy) -> {:.1} sessions/s",
         r.sessions, ramp_utts, r.span_secs, r.busy_secs, r.throughput
@@ -656,26 +668,52 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             t.occupancy.mean()
         );
     }
+    if r.shards > 1 {
+        println!("per-shard report:");
+        for s in &r.per_shard {
+            println!(
+                "  shard {}  sessions {:>3}  p50 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
+                s.shard,
+                s.sessions,
+                s.latency.p50 * 1e3,
+                s.latency.p99 * 1e3,
+                s.occupancy.mean()
+            );
+        }
+    }
     println!("fidelity shifts: {} down, {} up", r.downshifts, r.upshifts);
     for s in &r.shifts {
-        println!(
-            "  t={:8.3} s  -> tier {} ({})",
-            s.clock,
-            s.tier,
-            if s.down { "downshift" } else { "upshift" }
-        );
+        if r.shards > 1 {
+            println!(
+                "  t={:8.3} s  shard {}  -> tier {} ({})",
+                s.clock,
+                s.shard,
+                s.tier,
+                if s.down { "downshift" } else { "upshift" }
+            );
+        } else {
+            println!(
+                "  t={:8.3} s  -> tier {} ({})",
+                s.clock,
+                s.tier,
+                if s.down { "downshift" } else { "upshift" }
+            );
+        }
     }
     Ok(())
 }
 
-/// `stream-serve`: the multi-stream pool serving demo — runs fully
-/// offline (synthetic corpus + synthetic or checkpointed weights).
-/// With `--ladder DIR` it becomes the adaptive-fidelity path instead.
+/// `stream-serve`: the multi-stream serving demo, sharded across
+/// `--shards` worker threads — runs fully offline (synthetic corpus +
+/// synthetic or checkpointed weights).  With `--ladder DIR` it becomes
+/// the adaptive-fidelity path instead; with `--json` the report is a
+/// single machine-readable document.
 fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     if let Some(dir) = cli.cfg.raw("ladder") {
         let dir = dir.to_string();
         return ladder_serve_cmd(cli, &dir);
     }
+    let json = cli.cfg.bool_or("json", false);
     let precision = match cli.flag_str("precision", "int8").as_str() {
         "f32" => Precision::F32,
         _ => Precision::Int8,
@@ -684,13 +722,16 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     let n = cli.flag_usize("utts", 32);
     let rate = cli.flag_f64("rate", 8.0);
     let chunk = cli.flag_usize("chunk", 16);
+    let shards = cli.flag_usize("shards", 1);
     let seed = cli.flag_usize("seed", 17) as u64;
     let time_batch = cli.flag_usize("time-batch", 4);
     let scheme = cli.flag_str("scheme", "partial");
 
     let (params, dims) = match cli.cfg.raw("load") {
         Some(path) => {
-            println!("loading weights from checkpoint {path}");
+            if !json {
+                println!("loading weights from checkpoint {path}");
+            }
             let (params, ckpt_dims) = load_ckpt_params(path)?;
             // train-states carry their own layer map; bare v1 checkpoints
             // are assumed to match the demo dims, as before
@@ -702,7 +743,11 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
                     "--scheme other than 'partial' requires --load (synthetic weights are partial-factored)".into(),
                 ));
             }
-            println!("using synthetic (untrained) weights — timing is real, transcripts are not");
+            if !json {
+                println!(
+                    "using synthetic (untrained) weights — timing is real, transcripts are not"
+                );
+            }
             let dims = demo_dims();
             let p = synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed);
             (p, dims)
@@ -712,22 +757,29 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         Engine::from_params(&dims, &scheme, &params, precision, time_batch)?
             .with_backend(backend_flag(cli)?)?,
     );
-    println!(
-        "engine: {:?}, backend {}, model {} KB, pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
-        precision,
-        engine.backend_name(),
-        engine.model_bytes() / 1024
-    );
+    if !json {
+        println!(
+            "engine: {:?}, backend {}, model {} KB, {shards} shard(s) x pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
+            precision,
+            engine.backend_name(),
+            engine.model_bytes() / 1024
+        );
+    }
 
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
     let cfg = StreamServeConfig {
         arrival_rate: rate,
         pool_size: pool,
         chunk_frames: chunk,
+        shards,
         seed,
     };
     let r = stream_serve(engine, &data.test, &cfg)?;
 
+    if json {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
     println!(
         "\n{} sessions in {:.2} s simulated span ({:.2} s engine-busy) -> {:.1} sessions/s",
         r.sessions, r.span_secs, r.busy_secs, r.throughput
@@ -748,6 +800,19 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     );
     for (k, frac) in r.occupancy.buckets() {
         println!("  occ {k}: {:5.1}% of time", frac * 100.0);
+    }
+    if r.shards > 1 {
+        println!("per-shard report:");
+        for s in &r.per_shard {
+            println!(
+                "  shard {}  sessions {:>3}  p50 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
+                s.shard,
+                s.sessions,
+                s.latency.p50 * 1e3,
+                s.latency.p99 * 1e3,
+                s.occupancy.mean()
+            );
+        }
     }
     println!(
         "audio {:.2} s -> {:.1}x realtime aggregate",

@@ -3,10 +3,18 @@
 //! serving report ([`crate::serve::stream_serve`]) is built from
 //! [`LatencySummary`] (per-stream p50/p95/p99) and [`OccupancyTracker`]
 //! (time-weighted pool occupancy).
+//!
+//! The sharded runtime (DESIGN.md §9) aggregates per-shard metrics with
+//! [`Histogram::merge`] / [`OccupancyTracker::merge`]: merging happens
+//! at the *sample* level, so a merged histogram's [`LatencySummary`] is
+//! exactly the summary of the union of samples — never an approximation
+//! stitched from per-shard percentiles.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+use crate::jsonx::Json;
 
 /// Monotonic named counters, shareable across threads.
 #[derive(Default, Debug)]
@@ -127,6 +135,14 @@ impl Histogram {
         self.samples.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Fold another histogram's samples into this one (cross-shard
+    /// aggregation).  Exact: the merged summary equals the summary of a
+    /// single histogram fed every sample.
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
     /// One-shot percentile summary (the serving-report shape).
     pub fn summary(&mut self) -> LatencySummary {
         LatencySummary {
@@ -149,6 +165,20 @@ pub struct LatencySummary {
     pub p95: f64,
     pub p99: f64,
     pub max: f64,
+}
+
+impl LatencySummary {
+    /// Machine-readable form for the `--json` serving reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("max", Json::num(self.max)),
+        ])
+    }
 }
 
 /// Time-weighted occupancy histogram for a fixed-capacity pool: how much
@@ -220,6 +250,33 @@ impl OccupancyTracker {
             .map(|(k, &s)| (k, s / total))
             .collect()
     }
+
+    /// Fold another tracker's time-at-occupancy buckets into this one
+    /// (cross-shard aggregation).  Exact: bucket seconds add, so the
+    /// merged mean is the time-weighted mean over every shard's samples.
+    pub fn merge(&mut self, other: &OccupancyTracker) {
+        if self.secs_at.len() < other.secs_at.len() {
+            self.secs_at.resize(other.secs_at.len(), 0.0);
+        }
+        for (k, &s) in other.secs_at.iter().enumerate() {
+            self.secs_at[k] += s;
+        }
+    }
+
+    /// Machine-readable form for the `--json` serving reports.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets()
+            .into_iter()
+            .map(|(k, frac)| Json::arr_num(&[k as f64, frac]))
+            .collect();
+        Json::obj(vec![
+            ("mean", Json::num(self.mean())),
+            ("max", Json::num(self.max_occupancy() as f64)),
+            ("total_secs", Json::num(self.total_secs())),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
 }
 
 /// Simple stopwatch for phase reporting.
@@ -279,6 +336,64 @@ mod tests {
         let s = h.summary();
         assert_eq!(s.count, 100);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn merged_histogram_summary_equals_single_shard_summary() {
+        // the cross-shard aggregation contract: splitting the same
+        // samples across k shards and merging is indistinguishable from
+        // one shard seeing everything
+        let samples: Vec<f64> = (0..97).map(|i| ((i * 37) % 101) as f64 * 0.013).collect();
+        let mut single = Histogram::new();
+        for &s in &samples {
+            single.record(s);
+        }
+        let mut shards: Vec<Histogram> = (0..3).map(|_| Histogram::new()).collect();
+        for (i, &s) in samples.iter().enumerate() {
+            shards[i % 3].record(s);
+        }
+        let mut merged = Histogram::new();
+        for h in &shards {
+            merged.merge(h);
+        }
+        let (a, b) = (merged.summary(), single.summary());
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.mean, b.mean);
+        assert_eq!(a.p50, b.p50);
+        assert_eq!(a.p95, b.p95);
+        assert_eq!(a.p99, b.p99);
+        assert_eq!(a.max, b.max);
+    }
+
+    #[test]
+    fn occupancy_merge_adds_buckets() {
+        let mut a = OccupancyTracker::new();
+        a.record(1, 2.0);
+        a.record(3, 1.0);
+        let mut b = OccupancyTracker::new();
+        b.record(3, 1.0);
+        b.record(5, 4.0);
+        a.merge(&b);
+        assert!((a.total_secs() - 8.0).abs() < 1e-12);
+        assert!((a.frac_at(3) - 0.25).abs() < 1e-12);
+        assert_eq!(a.max_occupancy(), 5);
+        // merging an empty tracker is a no-op
+        let before = a.total_secs();
+        a.merge(&OccupancyTracker::new());
+        assert_eq!(a.total_secs(), before);
+    }
+
+    #[test]
+    fn summary_and_tracker_serialize() {
+        let mut h = Histogram::new();
+        h.record(0.5);
+        let j = h.summary().to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(1));
+        let mut o = OccupancyTracker::new();
+        o.record(2, 1.0);
+        let j = o.to_json();
+        assert_eq!(j.get("max").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("buckets").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -215,7 +215,20 @@ impl Registry {
     pub fn variants(&self) -> &[Variant] {
         &self.variants
     }
+
+    /// The tier engines in fidelity order — the shared plan handed to
+    /// every worker shard of a sharded ladder serve (DESIGN.md §9).
+    /// Cloning the `Arc`s is free; the prepared weights exist once no
+    /// matter how many shards serve them.
+    pub fn engines(&self) -> Vec<Arc<Engine>> {
+        self.variants.iter().map(|v| v.engine.clone()).collect()
+    }
 }
+
+// Compile-time Send+Sync audit (DESIGN.md §9): a loaded registry is
+// read-only shared state for the whole shard fleet.
+const _: () = crate::assert_send_sync::<Registry>();
+const _: () = crate::assert_send_sync::<Variant>();
 
 // ---------------------------------------------------------------------------
 // JSON plumbing (manifest + per-artifact metadata).

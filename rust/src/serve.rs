@@ -1,58 +1,104 @@
-//! Serving: concurrent utterance streams over the embedded engine, plus
-//! the PJRT whole-utterance batcher for the Table-2 "GPU server" row.
+//! Serving: concurrent utterance streams over the embedded engine — now
+//! a sharded, multi-threaded runtime (DESIGN.md §9) — plus the PJRT
+//! whole-utterance batcher for the Table-2 "GPU server" row.
 //!
 //! The primary path is [`stream_serve`]: a Poisson arrival process opens
-//! **real concurrent decode sessions** on a [`StreamPool`] and streams
-//! each utterance in client-sized chunks, so the pool's lock-stepped
-//! recurrent GEMMs run at the batch the load actually produces (m = 1–4
-//! is the paper's §4 sweet spot).  Arrival clocks are simulated; every
-//! service interval is measured wall-clock on the real kernels, and the
-//! report carries per-stream latency percentiles and a time-weighted
-//! pool-occupancy histogram (DESIGN.md §6).
+//! **real concurrent decode sessions** across `--shards N` worker
+//! threads (each owning its own [`StreamPool`](crate::stream::StreamPool) over the shared
+//! `Arc<Engine>` plan), behind the admission router of
+//! [`crate::shard`]: least-occupancy placement with per-shard
+//! backpressure and spill, fed over bounded channels, with graceful
+//! drain when the arrivals end.  Arrival clocks are simulated; every
+//! round's service interval is measured wall-clock on the real kernels
+//! running concurrently, and the report carries per-stream latency
+//! percentiles and time-weighted occupancy both per shard and merged
+//! cross-shard ([`Histogram::merge`]/[`OccupancyTracker::merge`]).
 //!
-//! [`ladder_serve`] is the adaptive-fidelity path (DESIGN.md §8): one
-//! [`StreamPool`] per rank-ladder tier from a [`Registry`], with a
-//! [`FidelityController`] routing *new* sessions down the ladder when the
-//! routed tier's p99 breaches its target or its pool saturates, and back
-//! up once the load drains.
+//! Compatibility contract: with a fixed seed, `--shards 1` replays the
+//! pre-shard serving loop decision for decision (same arrival schedule,
+//! same admission order, same metrics recording), and **any** shard
+//! count yields identical per-stream transcripts — placement never
+//! changes decoding, because pooled decoding is bit-identical to
+//! sequential decoding (`rust/tests/shard.rs`).
+//!
+//! [`ladder_serve`] is the adaptive-fidelity path (DESIGN.md §8): each
+//! shard runs one [`StreamPool`](crate::stream::StreamPool) per rank-ladder tier from a
+//! [`Registry`] plus its **own** [`FidelityController`] (per-shard
+//! hysteresis), and the report merges every shard's shift log into one
+//! clock-ordered, shard-tagged log.
 //!
 //! [`simulate`] keeps the earlier discrete-event *whole-utterance*
 //! batcher: requests are padded into a static PJRT eval batch (the
 //! server-side deployment of Prabhavalkar et al.), the contrast case to
 //! per-frame stream pooling.  It needs the `xla` feature + artifacts.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::controller::{ControllerConfig, FidelityController, ShiftEvent};
+use crate::controller::{merge_shift_logs, ControllerConfig, FidelityController, ShiftEvent};
 use crate::data::Utterance;
 use crate::error::{Error, Result};
 use crate::infer::{Breakdown, Engine};
+use crate::jsonx::Json;
 use crate::metricsx::{Histogram, LatencySummary, OccupancyTracker};
 use crate::model::ParamSet;
 use crate::prng::Pcg64;
 use crate::registry::Registry;
 use crate::runtime::Runtime;
-use crate::stream::StreamPool;
+use crate::shard::{run_sharded, sharded_arrivals, Admission};
+use crate::stream::PoolStats;
 use crate::train::Evaluator;
 
 // ---------------------------------------------------------------------------
-// Stream-pool serving (embedded path, pure Rust).
+// Stream-pool serving (embedded path, pure Rust, sharded).
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
 pub struct StreamServeConfig {
-    /// mean session arrival rate (utterances / second)
+    /// mean session arrival rate (utterances / second, summed over the
+    /// per-shard sub-processes)
     pub arrival_rate: f64,
-    /// concurrent session slots (the lock-step batch ceiling)
+    /// concurrent session slots per shard (the lock-step batch ceiling)
     pub pool_size: usize,
     /// raw feature frames a client delivers per engine tick
     pub chunk_frames: usize,
+    /// worker shards (OS threads); 1 replays the unsharded loop exactly
+    pub shards: usize,
     pub seed: u64,
 }
 
 impl Default for StreamServeConfig {
     fn default() -> Self {
-        StreamServeConfig { arrival_rate: 8.0, pool_size: 4, chunk_frames: 16, seed: 0 }
+        StreamServeConfig {
+            arrival_rate: 8.0,
+            pool_size: 4,
+            chunk_frames: 16,
+            shards: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-shard slice of a serving report.
+#[derive(Clone, Debug)]
+pub struct ShardSlice {
+    pub shard: usize,
+    /// sessions this shard served
+    pub sessions: usize,
+    /// arrival → final-transcript latency of those sessions
+    pub latency: LatencySummary,
+    /// time-weighted occupancy of this shard (summed over its tiers)
+    pub occupancy: OccupancyTracker,
+}
+
+impl ShardSlice {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::num(self.shard as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("latency", self.latency.to_json()),
+            ("occupancy", self.occupancy.to_json()),
+        ])
     }
 }
 
@@ -61,43 +107,73 @@ impl Default for StreamServeConfig {
 pub struct StreamServeReport {
     pub sessions: usize,
     pub pool_size: usize,
+    /// worker shards the serve ran on
+    pub shards: usize,
     /// GEMM backend the engine executed on (after `auto` resolution)
     pub backend: &'static str,
     /// completed sessions per simulated second
     pub throughput: f64,
-    /// arrival → final-transcript latency across sessions
+    /// arrival → final-transcript latency across all sessions
+    /// (per-shard histograms merged at the sample level)
     pub session_latency: LatencySummary,
-    /// time-weighted pool occupancy over the run
+    /// time-weighted occupancy merged across shards
     pub occupancy: OccupancyTracker,
+    /// per-shard latency/occupancy slices
+    pub per_shard: Vec<ShardSlice>,
+    /// shard that served each session, indexed by arrival order
+    pub shard_of_session: Vec<usize>,
     /// mean stream-batch the pooled recurrent GEMMs actually ran at
     pub mean_rec_batch: f64,
-    /// wall-clock actually spent in the engine
+    /// aggregate wall-clock spent in the engine across all shard
+    /// threads (CPU-seconds; can exceed `span_secs` when shards > 1)
     pub busy_secs: f64,
     /// simulated span from first arrival to last completion
     pub span_secs: f64,
-    /// accumulated engine component timing
+    /// accumulated engine component timing, summed across shards
     pub breakdown: Breakdown,
     /// (reference, hypothesis) per completed session, arrival order
     pub transcripts: Vec<(String, String)>,
 }
 
-/// One in-flight session: which utterance it is streaming and how far the
-/// "client" has gotten.
-struct InFlight {
-    id: crate::stream::StreamId,
-    utt: usize,
-    off: usize,
-    arrived: f64,
+impl StreamServeReport {
+    /// Machine-readable report (`stream-serve --json`): everything CI
+    /// and the bench harness parse instead of grepping text.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("stream-serve")),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("pool_size", Json::num(self.pool_size as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("backend", Json::str(self.backend)),
+            ("throughput", Json::num(self.throughput)),
+            ("busy_secs", Json::num(self.busy_secs)),
+            ("span_secs", Json::num(self.span_secs)),
+            ("mean_rec_batch", Json::num(self.mean_rec_batch)),
+            ("latency", self.session_latency.to_json()),
+            ("occupancy", self.occupancy.to_json()),
+            ("per_shard", Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect())),
+            (
+                "shard_of_session",
+                Json::Arr(
+                    self.shard_of_session.iter().map(|&s| Json::num(s as f64)).collect(),
+                ),
+            ),
+        ])
+    }
 }
 
-/// Serve `utts` as concurrent streaming sessions over a [`StreamPool`].
+/// Serve `utts` as concurrent streaming sessions across `cfg.shards`
+/// worker threads, each running a [`StreamPool`](crate::stream::StreamPool) over the shared engine.
 ///
-/// Arrivals follow a seeded Poisson process.  Each engine tick, every
-/// live session receives its next `chunk_frames` frames, the pool pumps
-/// (one lock-stepped batch-m advance over all runnable streams), and
-/// sessions whose audio is exhausted are closed (tail flush + transcript).
-/// The simulated clock advances by the *measured* tick time, so latency
-/// and occupancy numbers reflect the real kernels under the offered load.
+/// Arrivals are the superposition of per-shard seeded Poisson processes
+/// ([`sharded_arrivals`]; with one shard this is the historical
+/// root-seeded schedule, bit for bit).  Each round the router admits
+/// queued arrivals to the least-occupied shard with a free slot
+/// (spilling to the next shard under backpressure), every busy shard
+/// runs one lock-stepped tick concurrently, and the simulated clock
+/// advances by the measured wall-clock of the parallel round — so
+/// latency and occupancy numbers reflect the real kernels, on all
+/// cores, under the offered load.
 pub fn stream_serve(
     engine: Arc<Engine>,
     utts: &[Utterance],
@@ -109,99 +185,127 @@ pub fn stream_serve(
     if cfg.pool_size == 0 || cfg.chunk_frames == 0 {
         return Err(Error::Config("pool_size and chunk_frames must be >= 1".into()));
     }
-    let feat = engine.feat_dim();
-    let mut rng = Pcg64::seeded(cfg.seed);
-    let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
-    let mut t = 0.0;
-    for _ in 0..utts.len() {
-        t += -rng.uniform().max(1e-12).ln() / cfg.arrival_rate;
-        arrivals.push(t);
+    if cfg.shards == 0 {
+        return Err(Error::Config("shards must be >= 1".into()));
     }
-
-    let mut pool = StreamPool::new(engine, cfg.pool_size);
-    let mut active: Vec<InFlight> = Vec::new();
-    let mut next = 0usize;
-    let mut clock = 0.0f64;
-    let mut busy = 0.0f64;
-    let mut bd = Breakdown::default();
-    let mut lat = Histogram::new();
-    let mut occupancy = OccupancyTracker::new();
-    let mut transcripts: Vec<(usize, String, String)> = Vec::new();
-
-    while next < utts.len() || !active.is_empty() {
-        // admit queued arrivals while slots are free
-        while next < utts.len() && arrivals[next] <= clock && !pool.is_full() {
-            let id = pool.open()?;
-            active.push(InFlight { id, utt: next, off: 0, arrived: arrivals[next] });
-            next += 1;
-        }
-        if active.is_empty() {
-            // idle server: record the empty-pool gap, jump to the arrival
-            let target = clock.max(arrivals[next]);
-            if target > clock {
-                occupancy.record(0, target - clock);
-            }
-            clock = target;
-            continue;
-        }
-
-        // one engine tick: clients deliver a chunk each, the pool pumps,
-        // finished sessions close — all measured as one service interval
-        let occ_now = active.len();
-        let t0 = std::time::Instant::now();
-        for a in &mut active {
-            let data = utts[a.utt].feats.data();
-            let end = (a.off + cfg.chunk_frames * feat).min(data.len());
-            if a.off < end {
-                pool.push_frames(a.id, &data[a.off..end])?;
-                a.off = end;
-            }
-        }
-        pool.pump(&mut bd)?;
-        let mut finished: Vec<(InFlight, String)> = Vec::new();
-        let mut i = 0;
-        while i < active.len() {
-            if active[i].off >= utts[active[i].utt].feats.data().len() {
-                let a = active.swap_remove(i);
-                let closed = pool.close(a.id, &mut bd)?;
-                finished.push((a, closed.transcript));
-            } else {
-                i += 1;
-            }
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        busy += dt;
-        clock += dt;
-        occupancy.record(occ_now, dt);
-        for (a, hyp) in finished {
-            lat.record(clock - a.arrived);
-            transcripts.push((a.utt, utts[a.utt].text.clone(), hyp));
-        }
+    if cfg.arrival_rate <= 0.0 {
+        return Err(Error::Config("arrival rate must be positive".into()));
     }
+    let shards = cfg.shards;
+    let backend = engine.backend_name();
+    let arrivals = sharded_arrivals(utts.len(), shards, cfg.arrival_rate, cfg.seed);
+    let engines = [engine];
 
-    // sessions complete out of order under churn; report in arrival order
-    transcripts.sort_by_key(|(utt, _, _)| *utt);
-    let transcripts: Vec<(String, String)> =
-        transcripts.into_iter().map(|(_, reference, hyp)| (reference, hyp)).collect();
+    run_sharded(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, |links| {
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut next = 0usize;
+        let mut clock = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut lat: Vec<Histogram> = (0..shards).map(|_| Histogram::new()).collect();
+        let mut occ: Vec<OccupancyTracker> = (0..shards).map(|_| OccupancyTracker::new()).collect();
+        let mut sessions_at: Vec<usize> = vec![0; shards];
+        let mut shard_of_session: Vec<usize> = vec![0; utts.len()];
+        let mut breakdowns: Vec<Breakdown> = vec![Breakdown::default(); shards];
+        let mut stats: Vec<PoolStats> = vec![PoolStats::default(); shards];
+        let mut transcripts: Vec<(usize, String, String)> = Vec::new();
 
-    let span = clock - arrivals[0];
-    Ok(StreamServeReport {
-        sessions: utts.len(),
-        pool_size: cfg.pool_size,
-        backend: pool.engine().backend_name(),
-        throughput: utts.len() as f64 / span.max(1e-9),
-        session_latency: lat.summary(),
-        occupancy,
-        mean_rec_batch: pool.stats.mean_rec_batch(),
-        busy_secs: busy,
-        span_secs: span,
-        breakdown: bd,
-        transcripts,
+        while next < utts.len() || !queue.is_empty() || links.any_active() {
+            // arrivals land in the admission queue as the clock passes them
+            while next < utts.len() && arrivals[next] <= clock {
+                queue.push_back(next);
+                next += 1;
+            }
+            // least-occupancy placement; a full fleet leaves the rest
+            // queued (backpressure) for a later round
+            let mut admissions: Vec<Vec<Admission>> = vec![Vec::new(); shards];
+            while let Some(&utt) = queue.front() {
+                let Some((shard, tier)) = links.place(|_| 0) else { break };
+                queue.pop_front();
+                links.stage(shard, tier);
+                admissions[shard].push(Admission { utt, tier });
+                shard_of_session[utt] = shard;
+                sessions_at[shard] += 1;
+            }
+            if !links.any_active() {
+                // idle fleet (staged admissions count as active): record
+                // the empty gap on every shard and jump to the arrival
+                let target = clock.max(arrivals[next]);
+                if target > clock {
+                    for o in occ.iter_mut() {
+                        o.record(0, target - clock);
+                    }
+                }
+                clock = target;
+                continue;
+            }
+
+            // one parallel round across the fleet; the clock advances by
+            // the slowest shard's measured tick (the round's wall-clock)
+            let reports = links.round(admissions)?;
+            let dt = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
+            busy += reports.iter().flatten().map(|r| r.secs).sum::<f64>();
+            clock += dt;
+            for (shard, rep) in reports.into_iter().enumerate() {
+                match rep {
+                    Some(r) => {
+                        occ[shard].record(r.occ_before.iter().sum(), dt);
+                        breakdowns[shard] = r.breakdown;
+                        stats[shard] = r.stats;
+                        for f in r.finished {
+                            lat[shard].record(clock - arrivals[f.utt]);
+                            transcripts.push((f.utt, utts[f.utt].text.clone(), f.transcript));
+                        }
+                    }
+                    None => occ[shard].record(0, dt),
+                }
+            }
+        }
+
+        // sessions complete out of order under churn; report in arrival order
+        transcripts.sort_by_key(|(utt, _, _)| *utt);
+        let transcripts: Vec<(String, String)> =
+            transcripts.into_iter().map(|(_, reference, hyp)| (reference, hyp)).collect();
+
+        let span = clock - arrivals[0];
+        let mut all_lat = Histogram::new();
+        let mut all_occ = OccupancyTracker::new();
+        let mut bd = Breakdown::default();
+        let mut st = PoolStats::default();
+        let mut per_shard = Vec::with_capacity(shards);
+        for s in 0..shards {
+            all_lat.merge(&lat[s]);
+            all_occ.merge(&occ[s]);
+            bd.absorb(&breakdowns[s]);
+            st.absorb(&stats[s]);
+            per_shard.push(ShardSlice {
+                shard: s,
+                sessions: sessions_at[s],
+                latency: lat[s].summary(),
+                occupancy: occ[s].clone(),
+            });
+        }
+        Ok(StreamServeReport {
+            sessions: utts.len(),
+            pool_size: cfg.pool_size,
+            shards,
+            backend,
+            throughput: utts.len() as f64 / span.max(1e-9),
+            session_latency: all_lat.summary(),
+            occupancy: all_occ,
+            per_shard,
+            shard_of_session,
+            mean_rec_batch: st.mean_rec_batch(),
+            busy_secs: busy,
+            span_secs: span,
+            breakdown: bd,
+            transcripts,
+        })
     })
 }
 
 // ---------------------------------------------------------------------------
-// Adaptive-fidelity ladder serving (registry + controller, DESIGN.md §8).
+// Adaptive-fidelity ladder serving (registry + controller, DESIGN.md §8),
+// sharded: per-shard tier pools + per-shard hysteresis.
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
@@ -211,12 +315,15 @@ pub struct LadderServeConfig {
     /// arrival rate inside the ramp window
     pub ramp_rate: f64,
     /// session indices `[start, end)` arriving at `ramp_rate` — the
-    /// synthetic load ramp the controller must absorb
+    /// synthetic load ramp the controllers must absorb
     pub ramp_range: (usize, usize),
-    /// session slots per fidelity tier
+    /// session slots per fidelity tier per shard
     pub pool_size: usize,
     /// raw feature frames a client delivers per engine tick
     pub chunk_frames: usize,
+    /// worker shards (OS threads), each with its own tier pools and
+    /// fidelity controller; 1 replays the unsharded loop exactly
+    pub shards: usize,
     pub seed: u64,
     pub controller: ControllerConfig,
 }
@@ -229,13 +336,14 @@ impl Default for LadderServeConfig {
             ramp_range: (0, 0),
             pool_size: 4,
             chunk_frames: 16,
+            shards: 1,
             seed: 0,
             controller: ControllerConfig::default(),
         }
     }
 }
 
-/// Per-tier slice of a [`LadderServeReport`].
+/// Per-tier slice of a [`LadderServeReport`] (merged across shards).
 #[derive(Clone, Debug)]
 pub struct TierReport {
     pub tier: usize,
@@ -243,12 +351,26 @@ pub struct TierReport {
     pub rank_frac: f64,
     /// scalar parameter count of the tier's variant
     pub params: usize,
-    /// sessions admitted at this tier
+    /// sessions admitted at this tier (all shards)
     pub sessions: usize,
     /// arrival → final-transcript latency of those sessions
     pub latency: LatencySummary,
-    /// time-weighted occupancy of this tier's pool
+    /// time-weighted occupancy of this tier's pools, merged cross-shard
     pub occupancy: OccupancyTracker,
+}
+
+impl TierReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tier", Json::num(self.tier as f64)),
+            ("tag", Json::str(self.tag.clone())),
+            ("rank_frac", Json::num(self.rank_frac)),
+            ("params", Json::num(self.params as f64)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("latency", self.latency.to_json()),
+            ("occupancy", self.occupancy.to_json()),
+        ])
+    }
 }
 
 /// Report from a [`ladder_serve`] run.
@@ -256,37 +378,83 @@ pub struct TierReport {
 pub struct LadderServeReport {
     pub sessions: usize,
     pub pool_size: usize,
+    /// worker shards the serve ran on
+    pub shards: usize,
     /// GEMM backend every tier's engine executed on
     pub backend: &'static str,
     pub tiers: Vec<TierReport>,
+    /// per-shard latency/occupancy slices (across that shard's tiers)
+    pub per_shard: Vec<ShardSlice>,
     pub downshifts: u64,
     pub upshifts: u64,
-    /// fidelity shifts in order (simulated clock, new tier)
+    /// every shard's fidelity shifts, merged in clock order (each event
+    /// carries the shard whose controller shifted)
     pub shifts: Vec<ShiftEvent>,
     /// admission tier per session, indexed by arrival order
     pub tier_of_session: Vec<usize>,
+    /// shard that served each session, indexed by arrival order
+    pub shard_of_session: Vec<usize>,
     pub throughput: f64,
+    /// aggregate engine wall-clock across shard threads (CPU-seconds)
     pub busy_secs: f64,
     pub span_secs: f64,
     pub breakdown: Breakdown,
 }
 
-/// One in-flight ladder session: which utterance, how far the client has
-/// streamed it, and which tier admitted it.
-struct InFlightTiered {
-    id: crate::stream::StreamId,
-    utt: usize,
-    off: usize,
-    arrived: f64,
-    tier: usize,
+impl LadderServeReport {
+    /// Machine-readable report (`stream-serve --ladder --json`).
+    pub fn to_json(&self) -> Json {
+        let shifts: Vec<Json> = self
+            .shifts
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("clock", Json::num(s.clock)),
+                    ("tier", Json::num(s.tier as f64)),
+                    ("shard", Json::num(s.shard as f64)),
+                    ("down", Json::Bool(s.down)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::str("ladder-serve")),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("pool_size", Json::num(self.pool_size as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("backend", Json::str(self.backend)),
+            ("throughput", Json::num(self.throughput)),
+            ("busy_secs", Json::num(self.busy_secs)),
+            ("span_secs", Json::num(self.span_secs)),
+            ("downshifts", Json::num(self.downshifts as f64)),
+            ("upshifts", Json::num(self.upshifts as f64)),
+            ("tiers", Json::Arr(self.tiers.iter().map(|t| t.to_json()).collect())),
+            ("per_shard", Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect())),
+            ("shifts", Json::Arr(shifts)),
+            (
+                "tier_of_session",
+                Json::Arr(
+                    self.tier_of_session.iter().map(|&t| Json::num(t as f64)).collect(),
+                ),
+            ),
+            (
+                "shard_of_session",
+                Json::Arr(
+                    self.shard_of_session.iter().map(|&s| Json::num(s as f64)).collect(),
+                ),
+            ),
+        ])
+    }
 }
 
-/// Serve `utts` as concurrent streaming sessions across a rank ladder,
-/// one [`StreamPool`] per tier, with the [`FidelityController`] routing
-/// each *new* session to a tier (spilling further down the ladder when
-/// the routed pool is full).  Arrival clocks are simulated with a
-/// piecewise Poisson rate (the ramp); every service interval is measured
-/// wall-clock on the real kernels, exactly like [`stream_serve`].
+/// Serve `utts` as concurrent streaming sessions across a rank ladder
+/// sharded over `cfg.shards` worker threads: every shard owns one
+/// [`StreamPool`](crate::stream::StreamPool) per tier (all sharing the registry's engines) plus its
+/// own [`FidelityController`].  The router places each *new* session on
+/// the least-occupied shard that has room at (or below — spill, never
+/// up) that shard's routed tier.  Arrival clocks follow the piecewise
+/// Poisson ramp **globally** from the root seed: the ramp is a
+/// coordinated load event, so it is not thinned per shard — per-shard
+/// sub-seeding applies to the steady-state [`stream_serve`] path.
 pub fn ladder_serve(
     registry: &Registry,
     utts: &[Utterance],
@@ -298,12 +466,17 @@ pub fn ladder_serve(
     if cfg.pool_size == 0 || cfg.chunk_frames == 0 {
         return Err(Error::Config("pool_size and chunk_frames must be >= 1".into()));
     }
+    if cfg.shards == 0 {
+        return Err(Error::Config("shards must be >= 1".into()));
+    }
     if cfg.base_rate <= 0.0 || cfg.ramp_rate <= 0.0 {
         return Err(Error::Config("arrival rates must be positive".into()));
     }
     let tiers = registry.num_tiers();
-    let feat = registry.dims.feat_dim;
-    let mut ctl = FidelityController::new(tiers, cfg.controller.clone())?;
+    let shards = cfg.shards;
+    let mut ctls: Vec<FidelityController> = (0..shards)
+        .map(|s| FidelityController::for_shard(tiers, cfg.controller.clone(), s))
+        .collect::<Result<_>>()?;
 
     let mut rng = Pcg64::seeded(cfg.seed);
     let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
@@ -318,122 +491,151 @@ pub fn ladder_serve(
         arrivals.push(t);
     }
 
-    let mut pools: Vec<StreamPool> = registry
-        .variants()
-        .iter()
-        .map(|v| StreamPool::new(v.engine.clone(), cfg.pool_size))
-        .collect();
-    let mut lat: Vec<Histogram> = (0..tiers).map(|_| Histogram::new()).collect();
-    let mut occ: Vec<OccupancyTracker> = (0..tiers).map(|_| OccupancyTracker::new()).collect();
-    let mut sessions_at: Vec<usize> = vec![0; tiers];
-    let mut tier_of_session: Vec<usize> = vec![0; utts.len()];
+    let engines = registry.engines();
+    let backend = registry.tier(0).engine.backend_name();
 
-    let mut active: Vec<InFlightTiered> = Vec::new();
-    let mut next = 0usize;
-    let mut clock = 0.0f64;
-    let mut busy = 0.0f64;
-    let mut bd = Breakdown::default();
+    run_sharded(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, |links| {
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut next = 0usize;
+        let mut clock = 0.0f64;
+        let mut busy = 0.0f64;
+        let mut lat: Vec<Vec<Histogram>> = (0..shards)
+            .map(|_| (0..tiers).map(|_| Histogram::new()).collect())
+            .collect();
+        let mut occ: Vec<Vec<OccupancyTracker>> = (0..shards)
+            .map(|_| (0..tiers).map(|_| OccupancyTracker::new()).collect())
+            .collect();
+        let mut sessions_at: Vec<usize> = vec![0; tiers];
+        let mut tier_of_session: Vec<usize> = vec![0; utts.len()];
+        let mut shard_of_session: Vec<usize> = vec![0; utts.len()];
+        let mut shard_sessions: Vec<usize> = vec![0; shards];
+        let mut breakdowns: Vec<Breakdown> = vec![Breakdown::default(); shards];
 
-    while next < utts.len() || !active.is_empty() {
-        // admit queued arrivals: route to the controller's tier, spilling
-        // down the ladder when that pool is full (never up — an overload
-        // must not push extra load onto the expensive tiers)
-        while next < utts.len() && arrivals[next] <= clock {
-            let want = ctl.tier();
-            let Some(tier) = (want..tiers).find(|&t| !pools[t].is_full()) else {
-                break;
-            };
-            let id = pools[tier].open()?;
-            active.push(InFlightTiered { id, utt: next, off: 0, arrived: arrivals[next], tier });
-            tier_of_session[next] = tier;
-            sessions_at[tier] += 1;
-            next += 1;
-        }
-        if active.is_empty() {
-            // idle server: the controller sees a drained system, the
-            // occupancy trackers record the empty gap, the clock jumps
-            ctl.observe(clock, 0.0);
-            let target = clock.max(arrivals[next]);
-            if target > clock {
-                for o in occ.iter_mut() {
-                    o.record(0, target - clock);
+        while next < utts.len() || !queue.is_empty() || links.any_active() {
+            while next < utts.len() && arrivals[next] <= clock {
+                queue.push_back(next);
+                next += 1;
+            }
+            // route each arrival: least-occupied shard that has room at
+            // (or below) its controller's tier — an overload must never
+            // push extra load onto the expensive tiers
+            let mut admissions: Vec<Vec<Admission>> = vec![Vec::new(); shards];
+            while let Some(&utt) = queue.front() {
+                let Some((shard, tier)) = links.place(|s| ctls[s].tier()) else { break };
+                queue.pop_front();
+                links.stage(shard, tier);
+                admissions[shard].push(Admission { utt, tier });
+                tier_of_session[utt] = tier;
+                shard_of_session[utt] = shard;
+                sessions_at[tier] += 1;
+                shard_sessions[shard] += 1;
+            }
+            if !links.any_active() {
+                // idle fleet: every controller sees a drained system and
+                // the occupancy trackers record the empty gap
+                for ctl in ctls.iter_mut() {
+                    ctl.observe(clock, 0.0);
+                }
+                let target = clock.max(arrivals[next]);
+                if target > clock {
+                    for shard_occ in occ.iter_mut() {
+                        for o in shard_occ.iter_mut() {
+                            o.record(0, target - clock);
+                        }
+                    }
+                }
+                clock = target;
+                continue;
+            }
+
+            let reports = links.round(admissions)?;
+            let dt = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
+            busy += reports.iter().flatten().map(|r| r.secs).sum::<f64>();
+            clock += dt;
+            for (shard, rep) in reports.into_iter().enumerate() {
+                match rep {
+                    Some(r) => {
+                        for (o, &k) in occ[shard].iter_mut().zip(&r.occ_before) {
+                            o.record(k, dt);
+                        }
+                        breakdowns[shard] = r.breakdown;
+                        for f in r.finished {
+                            let l = clock - arrivals[f.utt];
+                            lat[shard][f.tier].record(l);
+                            ctls[shard].record_latency(f.tier, l);
+                        }
+                        // control tick: the shard's routed tier's pool is
+                        // its admission signal
+                        let routed = ctls[shard].tier();
+                        let frac = r.occ_after[routed] as f64 / cfg.pool_size as f64;
+                        ctls[shard].observe(clock, frac);
+                    }
+                    None => {
+                        for o in occ[shard].iter_mut() {
+                            o.record(0, dt);
+                        }
+                        ctls[shard].observe(clock, 0.0);
+                    }
                 }
             }
-            clock = target;
-            continue;
         }
 
-        // one engine tick across every tier: clients deliver a chunk
-        // each, busy pools pump, finished sessions close
-        let occ_now: Vec<usize> = pools.iter().map(|p| p.active()).collect();
-        let t0 = std::time::Instant::now();
-        for a in &mut active {
-            let data = utts[a.utt].feats.data();
-            let end = (a.off + cfg.chunk_frames * feat).min(data.len());
-            if a.off < end {
-                pools[a.tier].push_frames(a.id, &data[a.off..end])?;
-                a.off = end;
+        let span = clock - arrivals[0];
+        let tiers_report: Vec<TierReport> = (0..tiers)
+            .map(|tier| {
+                let v = registry.tier(tier);
+                let mut h = Histogram::new();
+                let mut o = OccupancyTracker::new();
+                for s in 0..shards {
+                    h.merge(&lat[s][tier]);
+                    o.merge(&occ[s][tier]);
+                }
+                TierReport {
+                    tier,
+                    tag: v.info.tag.clone(),
+                    rank_frac: v.info.rank_frac,
+                    params: v.info.params,
+                    sessions: sessions_at[tier],
+                    latency: h.summary(),
+                    occupancy: o,
+                }
+            })
+            .collect();
+        let mut per_shard = Vec::with_capacity(shards);
+        let mut bd = Breakdown::default();
+        for s in 0..shards {
+            let mut h = Histogram::new();
+            let mut o = OccupancyTracker::new();
+            for tier in 0..tiers {
+                h.merge(&lat[s][tier]);
+                o.merge(&occ[s][tier]);
             }
+            bd.absorb(&breakdowns[s]);
+            per_shard.push(ShardSlice {
+                shard: s,
+                sessions: shard_sessions[s],
+                latency: h.summary(),
+                occupancy: o,
+            });
         }
-        for pool in pools.iter_mut() {
-            if pool.active() > 0 {
-                pool.pump(&mut bd)?;
-            }
-        }
-        let mut finished: Vec<InFlightTiered> = Vec::new();
-        let mut i = 0;
-        while i < active.len() {
-            if active[i].off >= utts[active[i].utt].feats.data().len() {
-                let a = active.swap_remove(i);
-                pools[a.tier].close(a.id, &mut bd)?;
-                finished.push(a);
-            } else {
-                i += 1;
-            }
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        busy += dt;
-        clock += dt;
-        for (t, o) in occ.iter_mut().enumerate() {
-            o.record(occ_now[t], dt);
-        }
-        for a in finished {
-            let l = clock - a.arrived;
-            lat[a.tier].record(l);
-            ctl.record_latency(a.tier, l);
-        }
-        // control tick: the routed tier's pool is the admission signal
-        ctl.observe(clock, pools[ctl.tier()].occupancy_frac());
-    }
-
-    let span = clock - arrivals[0];
-    let tiers_report: Vec<TierReport> = (0..tiers)
-        .map(|t| {
-            let v = registry.tier(t);
-            TierReport {
-                tier: t,
-                tag: v.info.tag.clone(),
-                rank_frac: v.info.rank_frac,
-                params: v.info.params,
-                sessions: sessions_at[t],
-                latency: lat[t].summary(),
-                occupancy: occ[t].clone(),
-            }
+        let shift_logs: Vec<&[ShiftEvent]> = ctls.iter().map(|c| c.shifts()).collect();
+        Ok(LadderServeReport {
+            sessions: utts.len(),
+            pool_size: cfg.pool_size,
+            shards,
+            backend,
+            tiers: tiers_report,
+            per_shard,
+            downshifts: ctls.iter().map(|c| c.downshifts).sum(),
+            upshifts: ctls.iter().map(|c| c.upshifts).sum(),
+            shifts: merge_shift_logs(&shift_logs),
+            tier_of_session,
+            shard_of_session,
+            throughput: utts.len() as f64 / span.max(1e-9),
+            busy_secs: busy,
+            span_secs: span,
+            breakdown: bd,
         })
-        .collect();
-    Ok(LadderServeReport {
-        sessions: utts.len(),
-        pool_size: cfg.pool_size,
-        backend: registry.tier(0).engine.backend_name(),
-        tiers: tiers_report,
-        downshifts: ctl.downshifts,
-        upshifts: ctl.upshifts,
-        shifts: ctl.shifts().to_vec(),
-        tier_of_session,
-        throughput: utts.len() as f64 / span.max(1e-9),
-        busy_secs: busy,
-        span_secs: span,
-        breakdown: bd,
     })
 }
 
@@ -569,8 +771,10 @@ mod tests {
         assert!(c.arrival_rate > 0.0 && c.max_batch >= 1 && c.window >= 0.0);
         let s = StreamServeConfig::default();
         assert!(s.arrival_rate > 0.0 && s.pool_size >= 1 && s.chunk_frames >= 1);
+        assert_eq!(s.shards, 1, "unsharded serving is the default");
         let l = LadderServeConfig::default();
         assert!(l.base_rate > 0.0 && l.ramp_rate > 0.0 && l.pool_size >= 1);
+        assert_eq!(l.shards, 1);
         assert!(l.controller.low_water < l.controller.high_water);
     }
 
@@ -585,10 +789,12 @@ mod tests {
             arrival_rate: 1e6, // everyone arrives at once -> pool saturates
             pool_size: 3,
             chunk_frames: 16,
+            shards: 1,
             seed: 1,
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 6);
+        assert_eq!(r.shards, 1);
         assert_eq!(r.transcripts.len(), 6);
         assert!(!r.backend.is_empty(), "report must name the GEMM backend");
         assert!(r.throughput > 0.0);
@@ -598,6 +804,9 @@ mod tests {
         assert!(r.occupancy.max_occupancy() == 3, "max occ {}", r.occupancy.max_occupancy());
         assert!(r.mean_rec_batch > 1.5, "mean rec batch {}", r.mean_rec_batch);
         assert!(r.breakdown.frames > 0);
+        assert_eq!(r.per_shard.len(), 1);
+        assert_eq!(r.per_shard[0].sessions, 6);
+        assert!(r.shard_of_session.iter().all(|&s| s == 0));
     }
 
     #[test]
@@ -612,12 +821,47 @@ mod tests {
             arrival_rate: 0.001,
             pool_size: 4,
             chunk_frames: 32,
+            shards: 1,
             seed: 2,
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 4);
         assert!(r.mean_rec_batch <= 1.0 + 1e-9);
         assert!(r.occupancy.mean() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn sharded_serve_balances_sessions_and_serializes() {
+        let dims = demo_dims();
+        let p = synthetic_params(&dims, 0.25, 3);
+        let engine =
+            Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap());
+        let data = Dataset::generate(CorpusSpec::standard(23), 0, 0, 8);
+        let cfg = StreamServeConfig {
+            arrival_rate: 1e6, // burst -> both shards must take load
+            pool_size: 2,
+            chunk_frames: 16,
+            shards: 2,
+            seed: 1,
+        };
+        let r = stream_serve(engine, &data.test, &cfg).unwrap();
+        assert_eq!(r.shards, 2);
+        assert_eq!(r.per_shard.len(), 2);
+        assert_eq!(r.per_shard.iter().map(|s| s.sessions).sum::<usize>(), 8);
+        assert!(
+            r.per_shard.iter().all(|s| s.sessions > 0),
+            "least-occupancy placement must spread a burst: {:?}",
+            r.per_shard.iter().map(|s| s.sessions).collect::<Vec<_>>()
+        );
+        assert_eq!(r.shard_of_session.len(), 8);
+        assert_eq!(r.transcripts.len(), 8);
+        // the merged latency summary counts every session exactly once
+        assert_eq!(r.session_latency.count, 8);
+        // machine-readable form round-trips through the JSON parser
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("latency").unwrap().get("p99").unwrap().as_f64().is_some());
     }
 
     // end-to-end PJRT serving tests live in rust/tests/integration.rs

@@ -1,0 +1,518 @@
+//! Sharded multi-threaded serving runtime (DESIGN.md §9).
+//!
+//! PR 1–4 built a serving stack whose every GEMM, stream and fidelity
+//! decision ran on one thread — one core of "as fast as the hardware
+//! allows".  This module recovers the other cores the paper's embedded
+//! targets actually have: a [`run_sharded`] serve owns **N worker
+//! shards**, each a dedicated OS thread running its own per-tier
+//! [`StreamPool`]s against a *shared* `Arc<Engine>` plan (the weights —
+//! including the pre-packed int8 layouts — exist once in memory no
+//! matter the shard count; `infer.rs`/`kernels` carry compile-time
+//! `Send + Sync` proofs of that sharing), behind a single front-end
+//! **admission router** that places each arriving session on the
+//! least-occupied shard with free capacity, spilling to the next shard
+//! (and, under `--ladder`, down the fidelity ladder inside the chosen
+//! shard) under backpressure.
+//!
+//! Execution is round-based: each round the router hands every busy or
+//! newly-fed shard one [`Admission`] batch over a bounded channel, all
+//! shards run one lock-stepped tick **concurrently** (chunk delivery →
+//! pool pump → session close), and each replies with a [`TickReport`].
+//! The simulated clock advances by the *maximum* shard tick time — the
+//! wall-clock of the parallel round — so throughput genuinely scales
+//! with shards while latency accounting stays honest.  The control
+//! plane (arrival schedule, placement, latency histograms, fidelity
+//! controllers) lives entirely on the router thread, which is what
+//! makes `--shards 1` replay the pre-shard serving loop decision for
+//! decision: same admission order, same controller call sequence, same
+//! metrics — bit-identical deterministic output.
+//!
+//! Determinism contract: per-stream transcripts never depend on
+//! placement (pooled decoding is bit-identical to sequential decoding,
+//! `rust/tests/stream_pool.rs`), so **any** shard count yields identical
+//! transcripts and CER for a fixed seed — only placement and timing
+//! differ (`rust/tests/shard.rs`).
+//!
+//! Drain protocol: when arrivals end, the router keeps ticking busy
+//! shards until every session completes (graceful drain of the ramp),
+//! then hangs up the command channels; workers exit on the disconnect,
+//! and a worker stopped with sessions still live (router abort mid-
+//! serve) flushes them through [`StreamPool::drain`] rather than
+//! dropping hidden state mid-utterance.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+
+use crate::data::Utterance;
+use crate::error::{Error, Result};
+use crate::infer::{Breakdown, Engine};
+use crate::prng::Pcg64;
+use crate::stream::{PoolStats, StreamId, StreamPool};
+
+// ---------------------------------------------------------------------------
+// Router <-> worker protocol.
+// ---------------------------------------------------------------------------
+
+/// One admission the router hands a shard: which utterance to open a
+/// session for, and which fidelity tier's pool should hold it (always
+/// tier 0 on the plain stream path).
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    pub utt: usize,
+    pub tier: usize,
+}
+
+/// A session that completed during a shard tick.
+#[derive(Clone, Debug)]
+pub struct FinishedSession {
+    pub utt: usize,
+    pub tier: usize,
+    pub transcript: String,
+}
+
+/// What a shard reports back after one lock-stepped round.
+#[derive(Clone, Debug)]
+pub struct TickReport {
+    pub shard: usize,
+    /// per-tier live sessions after this round's admissions, before the
+    /// work phase — the occupancy snapshot the serving report records
+    pub occ_before: Vec<usize>,
+    /// per-tier live sessions after finished sessions closed — the
+    /// router's authoritative placement state for the next round
+    pub occ_after: Vec<usize>,
+    pub finished: Vec<FinishedSession>,
+    /// measured wall-clock of the work phase (chunk delivery + pump +
+    /// close; admissions excluded, exactly like the unsharded loop)
+    pub secs: f64,
+    /// cumulative engine component timing for this shard (not a delta)
+    pub breakdown: Breakdown,
+    /// cumulative pool counters summed over this shard's tier pools
+    pub stats: PoolStats,
+}
+
+enum ToShard {
+    Tick(Vec<Admission>),
+}
+
+enum FromShard {
+    Done(TickReport),
+    Fatal(Error),
+}
+
+// ---------------------------------------------------------------------------
+// The worker shard.
+// ---------------------------------------------------------------------------
+
+struct InFlight {
+    id: StreamId,
+    utt: usize,
+    off: usize,
+    tier: usize,
+}
+
+/// One worker shard: per-tier stream pools plus the in-flight session
+/// table, owned by a dedicated OS thread for the lifetime of the serve.
+struct ShardWorker<'a> {
+    shard: usize,
+    pools: Vec<StreamPool>,
+    active: Vec<InFlight>,
+    utts: &'a [Utterance],
+    chunk_frames: usize,
+    feat: usize,
+    bd: Breakdown,
+}
+
+impl ShardWorker<'_> {
+    fn run(mut self, rx: Receiver<ToShard>, tx: SyncSender<FromShard>) {
+        while let Ok(ToShard::Tick(admissions)) = rx.recv() {
+            match self.tick(admissions) {
+                Ok(report) => {
+                    if tx.send(FromShard::Done(report)).is_err() {
+                        break; // router gone
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(FromShard::Fatal(e));
+                    break;
+                }
+            }
+        }
+        // router hung up: graceful drain of anything still live (only
+        // non-empty on an abort — a normal serve drains via rounds)
+        let mut bd = Breakdown::default();
+        for pool in self.pools.iter_mut() {
+            let _ = pool.drain(&mut bd);
+        }
+    }
+
+    /// One lock-stepped round: admit, deliver one client chunk per live
+    /// session, pump every busy pool, close finished sessions.  Mirrors
+    /// one iteration of the pre-shard serving loop exactly.
+    fn tick(&mut self, admissions: Vec<Admission>) -> Result<TickReport> {
+        for adm in &admissions {
+            let id = self.pools[adm.tier].open()?;
+            self.active.push(InFlight { id, utt: adm.utt, off: 0, tier: adm.tier });
+        }
+        let occ_before: Vec<usize> = self.pools.iter().map(|p| p.active()).collect();
+
+        let t0 = std::time::Instant::now();
+        for a in &mut self.active {
+            let data = self.utts[a.utt].feats.data();
+            let end = (a.off + self.chunk_frames * self.feat).min(data.len());
+            if a.off < end {
+                self.pools[a.tier].push_frames(a.id, &data[a.off..end])?;
+                a.off = end;
+            }
+        }
+        for pool in self.pools.iter_mut() {
+            if pool.active() > 0 {
+                pool.pump(&mut self.bd)?;
+            }
+        }
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].off >= self.utts[self.active[i].utt].feats.data().len() {
+                let a = self.active.swap_remove(i);
+                let closed = self.pools[a.tier].close(a.id, &mut self.bd)?;
+                finished.push(FinishedSession {
+                    utt: a.utt,
+                    tier: a.tier,
+                    transcript: closed.transcript,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+
+        let occ_after: Vec<usize> = self.pools.iter().map(|p| p.active()).collect();
+        let mut stats = PoolStats::default();
+        for p in &self.pools {
+            stats.absorb(&p.stats);
+        }
+        Ok(TickReport {
+            shard: self.shard,
+            occ_before,
+            occ_after,
+            finished,
+            secs,
+            breakdown: self.bd,
+            stats,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The router-facing handle.
+// ---------------------------------------------------------------------------
+
+/// The router's view of the worker fleet: bounded command/report
+/// channels plus the per-shard, per-tier occupancy cache that placement
+/// reads.  The cache is authoritative between rounds (reset from each
+/// [`TickReport::occ_after`]) and is advanced in place by [`ShardedServer::stage`]
+/// as the router assigns arrivals within a round.
+pub struct ShardedServer {
+    txs: Vec<SyncSender<ToShard>>,
+    rxs: Vec<Receiver<FromShard>>,
+    occ: Vec<Vec<usize>>,
+    tiers: usize,
+    capacity: usize,
+}
+
+impl ShardedServer {
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn tiers(&self) -> usize {
+        self.tiers
+    }
+
+    /// Session slots per tier per shard.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Cached live sessions of `shard` across its tiers.
+    pub fn total_active(&self, shard: usize) -> usize {
+        self.occ[shard].iter().sum()
+    }
+
+    /// Any live session anywhere in the fleet?
+    pub fn any_active(&self) -> bool {
+        (0..self.shards()).any(|s| self.total_active(s) > 0)
+    }
+
+    /// Cached per-tier occupancy of one shard.
+    pub fn occupancy(&self, shard: usize, tier: usize) -> usize {
+        self.occ[shard][tier]
+    }
+
+    /// Least-occupancy placement with spill: among shards that still
+    /// have a free slot at some tier in `want(shard)..tiers` (the
+    /// within-shard spill walks *down* the ladder, never up), pick the
+    /// shard with the lowest total occupancy fraction; ties go to the
+    /// lowest shard id.  `None` = every shard is full at every eligible
+    /// tier — the router queues the arrival (backpressure).
+    pub fn place(&self, want: impl Fn(usize) -> usize) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for shard in 0..self.shards() {
+            let w = want(shard);
+            let Some(tier) = (w..self.tiers).find(|&t| self.occ[shard][t] < self.capacity) else {
+                continue;
+            };
+            let frac = self.total_active(shard) as f64 / (self.tiers * self.capacity) as f64;
+            if best.map_or(true, |(_, _, bf)| frac < bf) {
+                best = Some((shard, tier, frac));
+            }
+        }
+        best.map(|(s, t, _)| (s, t))
+    }
+
+    /// Record a staged admission in the occupancy cache, so later
+    /// placements within the same round see the slot as taken.
+    pub fn stage(&mut self, shard: usize, tier: usize) {
+        debug_assert!(self.occ[shard][tier] < self.capacity);
+        self.occ[shard][tier] += 1;
+    }
+
+    /// Run one parallel round: every shard that is busy or has staged
+    /// admissions gets a tick; all ticked shards work concurrently; the
+    /// reports come back indexed by shard (`None` = shard sat the round
+    /// out, i.e. it was idle with nothing admitted).
+    pub fn round(
+        &mut self,
+        mut admissions: Vec<Vec<Admission>>,
+    ) -> Result<Vec<Option<TickReport>>> {
+        assert_eq!(admissions.len(), self.shards());
+        let mut ticked = vec![false; self.shards()];
+        for shard in 0..self.shards() {
+            let adm = std::mem::take(&mut admissions[shard]);
+            if adm.is_empty() && self.total_active(shard) == 0 {
+                continue;
+            }
+            self.txs[shard]
+                .send(ToShard::Tick(adm))
+                .map_err(|_| Error::other(format!("shard {shard} worker hung up")))?;
+            ticked[shard] = true;
+        }
+        let mut reports: Vec<Option<TickReport>> = (0..self.shards()).map(|_| None).collect();
+        for shard in 0..self.shards() {
+            if !ticked[shard] {
+                continue;
+            }
+            match self.rxs[shard].recv() {
+                Ok(FromShard::Done(r)) => {
+                    self.occ[shard].copy_from_slice(&r.occ_after);
+                    reports[shard] = Some(r);
+                }
+                Ok(FromShard::Fatal(e)) => return Err(e),
+                Err(_) => return Err(Error::other(format!("shard {shard} worker died"))),
+            }
+        }
+        Ok(reports)
+    }
+}
+
+/// Spawn `shards` worker threads — each with one [`StreamPool`] of
+/// `pool_size` slots per engine in `engines` (one engine per fidelity
+/// tier; a plain stream serve passes exactly one) — and run `router`
+/// against the fleet.  Workers exit when the router returns (the
+/// command channels disconnect) and are joined before this returns, so
+/// no thread outlives the serve.
+pub fn run_sharded<R>(
+    engines: &[Arc<Engine>],
+    shards: usize,
+    pool_size: usize,
+    chunk_frames: usize,
+    utts: &[Utterance],
+    router: impl FnOnce(&mut ShardedServer) -> Result<R>,
+) -> Result<R> {
+    if shards == 0 {
+        return Err(Error::Config("shards must be >= 1".into()));
+    }
+    if engines.is_empty() {
+        return Err(Error::Config("run_sharded needs at least one engine tier".into()));
+    }
+    let tiers = engines.len();
+    std::thread::scope(|scope| {
+        let mut txs = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx_cmd, rx_cmd) = sync_channel::<ToShard>(1);
+            let (tx_rep, rx_rep) = sync_channel::<FromShard>(1);
+            let worker = ShardWorker {
+                shard,
+                pools: engines.iter().map(|e| StreamPool::new(e.clone(), pool_size)).collect(),
+                active: Vec::new(),
+                utts,
+                chunk_frames,
+                feat: engines[0].feat_dim(),
+                bd: Breakdown::default(),
+            };
+            scope.spawn(move || worker.run(rx_cmd, tx_rep));
+            txs.push(tx_cmd);
+            rxs.push(rx_rep);
+        }
+        let mut links = ShardedServer {
+            txs,
+            rxs,
+            occ: vec![vec![0; tiers]; shards],
+            tiers,
+            capacity: pool_size,
+        };
+        let out = router(&mut links);
+        drop(links); // hang up -> workers drain and exit; scope joins them
+        out
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Sharded arrival schedule.
+// ---------------------------------------------------------------------------
+
+/// The offered load of a sharded serve: the superposition of `shards`
+/// independent Poisson processes, each at `rate / shards` from its own
+/// child generator ([`Pcg64::shard_seeded`]).  The union of independent
+/// Poisson processes is again Poisson at the summed rate, so the
+/// offered load is statistically identical at every shard count while
+/// the per-shard sub-processes stay reproducible and mutually
+/// uncorrelated.  With one shard the schedule is **bit-identical** to
+/// the historical root-seeded process (shard 0's child *is* the root
+/// stream), which anchors the `--shards 1` compatibility guarantee.
+///
+/// Returns `n` arrival times, ascending; session `i` streams `utts[i]`.
+pub fn sharded_arrivals(n: usize, shards: usize, rate: f64, seed: u64) -> Vec<f64> {
+    assert!(shards >= 1 && rate > 0.0);
+    let sub_rate = rate / shards as f64;
+    let mut gens: Vec<Pcg64> = (0..shards).map(|s| Pcg64::shard_seeded(seed, s as u64)).collect();
+    let mut next: Vec<f64> =
+        gens.iter_mut().map(|g| -g.uniform().max(1e-12).ln() / sub_rate).collect();
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = next
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.total_cmp(b))
+            .map(|(i, _)| i)
+            .unwrap();
+        out.push(next[s]);
+        next[s] += -gens[s].uniform().max(1e-12).ln() / sub_rate;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::Precision;
+    use crate::stream::{demo_dims, synthetic_params};
+
+    #[test]
+    fn single_shard_arrivals_match_the_historical_process() {
+        // the exact loop stream_serve ran before sharding existed
+        let (n, rate, seed) = (64usize, 8.0, 17u64);
+        let mut rng = Pcg64::seeded(seed);
+        let mut want = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..n {
+            t += -rng.uniform().max(1e-12).ln() / rate;
+            want.push(t);
+        }
+        assert_eq!(sharded_arrivals(n, 1, rate, seed), want);
+    }
+
+    #[test]
+    fn sharded_arrivals_are_sorted_and_reproducible() {
+        let a = sharded_arrivals(100, 4, 16.0, 3);
+        let b = sharded_arrivals(100, 4, 16.0, 3);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // different shard counts give different (but valid) schedules
+        let c = sharded_arrivals(100, 2, 16.0, 3);
+        assert_ne!(a, c);
+        // mean inter-arrival stays ~1/rate regardless of shard count
+        let mean = a.last().unwrap() / 100.0;
+        assert!((mean - 1.0 / 16.0).abs() < 0.02, "mean gap {mean}");
+    }
+
+    #[test]
+    fn placement_prefers_least_occupied_and_spills() {
+        // shard 0: tier 0 full, tier 1 empty (2 spill slots, total 2)
+        // shard 1: tier 0 has 1, tier 1 empty    (3 free,       total 1)
+        // shard 2: completely full               (0 free,       total 4)
+        let mut links = ShardedServer {
+            txs: Vec::new(),
+            rxs: Vec::new(),
+            occ: vec![vec![2, 0], vec![1, 0], vec![2, 2]],
+            tiers: 2,
+            capacity: 2,
+        };
+        // shards() counts command channels; placement never sends on
+        // them, so dangling dummy ends are fine here
+        let mut keep = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = sync_channel::<ToShard>(1);
+            let (tx2, rx2) = sync_channel::<FromShard>(1);
+            links.txs.push(tx);
+            links.rxs.push(rx2);
+            keep.push((rx, tx2));
+        }
+        // wanting tier 0 everywhere: shard 1 is least occupied and has
+        // tier-0 room -> wins at its routed tier
+        assert_eq!(links.place(|_| 0), Some((1, 0)));
+        links.stage(1, 0);
+        // now shards 0 and 1 tie on total occupancy; the tie breaks to
+        // shard 0, which is full at tier 0 and spills DOWN to tier 1
+        assert_eq!(links.place(|_| 0), Some((0, 1)));
+        links.stage(0, 1);
+        // keep placing: exactly the 3 remaining free slots, then total
+        // backpressure (shard 2 never gets a session — it is full)
+        for _ in 0..3 {
+            let (shard, tier) = links.place(|_| 0).expect("free slots remain");
+            assert_ne!(shard, 2, "a full shard must never be picked");
+            links.stage(shard, tier);
+        }
+        assert_eq!(links.place(|_| 0), None, "fleet full -> router queues");
+    }
+
+    #[test]
+    fn round_trip_through_a_real_worker_fleet() {
+        let dims = demo_dims();
+        let p = synthetic_params(&dims, 0.5, 7);
+        let engine = Arc::new(
+            Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap(),
+        );
+        let data = crate::data::Dataset::generate(crate::data::CorpusSpec::standard(5), 0, 0, 4);
+        let utts = &data.test;
+        let done = run_sharded(&[engine], 2, 2, 16, utts, |links| {
+            assert_eq!(links.shards(), 2);
+            assert_eq!(links.tiers(), 1);
+            // admit two sessions to each shard, then drive to completion
+            let mut admissions = vec![Vec::new(), Vec::new()];
+            for utt in 0..4 {
+                let (shard, tier) = links.place(|_| 0).unwrap();
+                links.stage(shard, tier);
+                admissions[shard].push(Admission { utt, tier });
+            }
+            assert_eq!(admissions[0].len(), 2, "least-occupancy must balance 2/2");
+            let mut finished = 0;
+            let mut rounds = 0;
+            let mut adm = admissions;
+            while links.any_active() || rounds == 0 {
+                let reports = links.round(std::mem::take(&mut adm))?;
+                adm = vec![Vec::new(), Vec::new()];
+                for r in reports.into_iter().flatten() {
+                    assert!(r.secs >= 0.0);
+                    finished += r.finished.len();
+                }
+                rounds += 1;
+                assert!(rounds < 10_000, "fleet failed to drain");
+            }
+            Ok(finished)
+        })
+        .unwrap();
+        assert_eq!(done, 4, "every session must complete and report");
+    }
+}

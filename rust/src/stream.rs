@@ -72,6 +72,16 @@ impl PoolStats {
             self.pooled_rows as f64 / self.pooled_gemms as f64
         }
     }
+
+    /// Fold another pool's counters into this one (cross-shard and
+    /// cross-tier aggregation for the sharded serving report).
+    pub fn absorb(&mut self, o: &PoolStats) {
+        self.blocks += o.blocks;
+        self.pooled_gemms += o.pooled_gemms;
+        self.pooled_rows += o.pooled_rows;
+        self.opened += o.opened;
+        self.closed += o.closed;
+    }
 }
 
 /// Result of closing a session: final greedy transcript plus any log-prob
@@ -429,6 +439,22 @@ impl StreamPool {
         Ok(produced)
     }
 
+    /// Close **every** live session, in slot order, returning each
+    /// session's final transcript — the graceful-drain path of the
+    /// sharded runtime (DESIGN.md §9): when a shard worker is told to
+    /// stop while streams are still open (router abort, serve error),
+    /// the pool flushes their padded tails exactly like [`Self::close`]
+    /// would instead of dropping hidden state mid-utterance.
+    pub fn drain(&mut self, bd: &mut Breakdown) -> Result<Vec<ClosedSession>> {
+        let ids: Vec<StreamId> = self
+            .slots
+            .iter()
+            .flatten()
+            .map(|s| StreamId(s.id))
+            .collect();
+        ids.into_iter().map(|id| self.close(id, bd)).collect()
+    }
+
     /// End a session: drain its remaining full blocks, flush the padded
     /// tail (exactly like [`Engine::flush`] on a lone stream), free the
     /// slot, and return the final transcript + undrained rows.
@@ -451,6 +477,12 @@ impl StreamPool {
         })
     }
 }
+
+// Compile-time Send+Sync audit (DESIGN.md §9): each shard worker owns
+// its pools outright and runs them on a dedicated OS thread, so a pool
+// (and everything inside a session) must be movable across threads.
+const _: () = crate::assert_send_sync::<StreamPool>();
+const _: () = crate::assert_send_sync::<ClosedSession>();
 
 // ---------------------------------------------------------------------------
 // Demo/bench scaffolding: deterministic model dims + synthetic parameters.
@@ -594,6 +626,39 @@ mod tests {
         // close flushes the zero-padded tail instead
         let closed = pool.close(id, &mut bd).unwrap();
         assert_eq!(closed.logprob_rows.len(), 1);
+    }
+
+    #[test]
+    fn drain_closes_every_live_session_like_close_would() {
+        let eng = engine(Precision::Int8);
+        let mut rng = Pcg64::seeded(4);
+        let feats = Tensor::randn(&[30, 40], 0.6, &mut rng);
+
+        // reference: two sessions closed one by one
+        let mut solo = StreamPool::new(eng.clone(), 2);
+        let a = solo.open().unwrap();
+        let b = solo.open().unwrap();
+        let mut bd1 = Breakdown::default();
+        solo.push_frames(a, feats.data()).unwrap();
+        solo.push_frames(b, &feats.data()[..400]).unwrap();
+        let ta = solo.close(a, &mut bd1).unwrap().transcript;
+        let tb = solo.close(b, &mut bd1).unwrap().transcript;
+
+        let mut pool = StreamPool::new(eng, 2);
+        let a2 = pool.open().unwrap();
+        let b2 = pool.open().unwrap();
+        let mut bd2 = Breakdown::default();
+        pool.push_frames(a2, feats.data()).unwrap();
+        pool.push_frames(b2, &feats.data()[..400]).unwrap();
+        let closed = pool.drain(&mut bd2).unwrap();
+        assert_eq!(closed.len(), 2);
+        assert_eq!(pool.active(), 0, "drain must free every slot");
+        assert_eq!(closed[0].transcript, ta);
+        assert_eq!(closed[1].transcript, tb);
+        assert_eq!(pool.stats.closed, 2);
+        assert_eq!(bd2.frames, bd1.frames);
+        // draining an empty pool is a no-op
+        assert!(pool.drain(&mut bd2).unwrap().is_empty());
     }
 
     #[test]

@@ -140,6 +140,7 @@ fn controller_downshifts_under_ramp_and_upshifts_after() {
         ramp_range: (0, 8),
         pool_size: 2,
         chunk_frames: 2,
+        shards: 1,
         seed: 3,
         controller: ControllerConfig {
             target_p99: 1e9,

@@ -1,0 +1,177 @@
+//! Cross-shard determinism suite for the sharded serving runtime
+//! (DESIGN.md §9).
+//!
+//! The load-bearing guarantee: sharding changes *placement and timing*,
+//! never *decoding*.  With a fixed seed, every shard count must produce
+//! identical per-stream transcripts (and therefore identical CER),
+//! because pooled decoding is bit-identical to sequential decoding and
+//! each session's stream is untouched by its neighbours.  The `--shards
+//! 1` path additionally replays the historical arrival schedule bit for
+//! bit ([`tracenorm::shard::sharded_arrivals`] is pinned to the old
+//! root-seeded process in its unit tests).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tracenorm::controller::ControllerConfig;
+use tracenorm::data::{CorpusSpec, Dataset};
+use tracenorm::decoder;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::registry::{ladder_build, Registry};
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::serve::{
+    ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig, StreamServeReport,
+};
+use tracenorm::stream::{demo_dims, synthetic_params};
+
+fn demo_engine(seed: u64) -> Arc<Engine> {
+    let dims = demo_dims();
+    let p = synthetic_params(&dims, 0.25, seed);
+    Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap())
+}
+
+fn serve_at(shards: usize, engine: Arc<Engine>, utts: &Dataset) -> StreamServeReport {
+    let cfg = StreamServeConfig {
+        arrival_rate: 1e5, // burst: shards and pools saturate
+        pool_size: 2,
+        chunk_frames: 16,
+        shards,
+        seed: 11,
+    };
+    stream_serve(engine, &utts.test, &cfg).unwrap()
+}
+
+fn corpus_cer(transcripts: &[(String, String)]) -> f64 {
+    let mut stats = decoder::ErrorStats::default();
+    for (reference, hyp) in transcripts {
+        stats.push(hyp, reference);
+    }
+    stats.cer()
+}
+
+/// The acceptance criterion of ISSUE 5: same seed at shards ∈ {1, 2, 4}
+/// produces identical per-stream transcripts and final CER.
+#[test]
+fn shard_counts_1_2_4_produce_identical_transcripts_and_cer() {
+    let engine = demo_engine(7);
+    let data = Dataset::generate(CorpusSpec::standard(31), 0, 0, 10);
+    let base = serve_at(1, engine.clone(), &data);
+    assert_eq!(base.transcripts.len(), 10);
+    let base_cer = corpus_cer(&base.transcripts);
+
+    for shards in [2usize, 4] {
+        let r = serve_at(shards, engine.clone(), &data);
+        assert_eq!(r.shards, shards);
+        assert_eq!(
+            r.transcripts, base.transcripts,
+            "shards={shards} must not change any transcript"
+        );
+        let cer = corpus_cer(&r.transcripts);
+        assert_eq!(cer, base_cer, "shards={shards} must not change CER");
+        // placement actually used the fleet under a burst
+        let used: std::collections::BTreeSet<usize> =
+            r.shard_of_session.iter().copied().collect();
+        assert!(used.len() > 1, "burst load must touch more than one shard: {used:?}");
+        assert!(used.iter().all(|&s| s < shards));
+        // every session is accounted to exactly one shard
+        assert_eq!(r.per_shard.iter().map(|s| s.sessions).sum::<usize>(), 10);
+        assert_eq!(r.session_latency.count, 10);
+    }
+}
+
+/// Sharded transcripts also match the plain per-utterance engine decode
+/// — concurrency at any shard count is invisible to decoding.
+#[test]
+fn sharded_transcripts_match_sequential_engine_decode() {
+    let engine = demo_engine(9);
+    let data = Dataset::generate(CorpusSpec::standard(32), 0, 0, 6);
+    let r = serve_at(3, engine.clone(), &data);
+    for (utt, (reference, hyp)) in r.transcripts.iter().enumerate() {
+        let mut bd = Breakdown::default();
+        let (solo, _) = engine.transcribe(&data.test[utt].feats, &mut bd).unwrap();
+        assert_eq!(hyp, &solo, "session {utt} (ref '{reference}') drifted under sharding");
+    }
+}
+
+/// The aggregate frame count (and so the realtime-factor accounting) is
+/// shard-invariant: every raw frame is counted exactly once.
+#[test]
+fn breakdown_frames_are_shard_invariant() {
+    let engine = demo_engine(13);
+    let data = Dataset::generate(CorpusSpec::standard(33), 0, 0, 8);
+    let f1 = serve_at(1, engine.clone(), &data).breakdown.frames;
+    let f4 = serve_at(4, engine, &data).breakdown.frames;
+    assert!(f1 > 0);
+    assert_eq!(f1, f4);
+}
+
+// ---------------------------------------------------------------------------
+// Sharded ladder serving.
+// ---------------------------------------------------------------------------
+
+fn tiny_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 8,
+        conv: vec![ConvDims { context: 2, dim: 12 }],
+        gru_dims: vec![10, 12],
+        fc_dim: 14,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+fn temp_ladder_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tn-shard-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn sharded_ladder_serves_every_session_with_per_shard_controllers() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 8);
+    let dir = temp_ladder_dir("ladder");
+    ladder_build(&params, &dims, &[0.5, 0.125], &dir).unwrap();
+    let reg = Registry::load(&dir, 2).unwrap();
+
+    let data = Dataset::generate(CorpusSpec::standard(34), 0, 0, 12);
+    let cfg = LadderServeConfig {
+        base_rate: 1e5, // burst into 2 shards x 2 tiers x 2 slots
+        ramp_rate: 1e5,
+        ramp_range: (0, 0),
+        pool_size: 2,
+        chunk_frames: 4,
+        shards: 2,
+        seed: 5,
+        controller: ControllerConfig {
+            target_p99: 1e9, // occupancy-driven only, like the 1-shard ramp test
+            high_water: 0.95,
+            low_water: 0.5,
+            breach_ticks: 2,
+            clear_ticks: 2,
+            window: 32,
+        },
+    };
+    let r = ladder_serve(&reg, &data.test, &cfg).unwrap();
+    assert_eq!(r.sessions, 12);
+    assert_eq!(r.shards, 2);
+    assert_eq!(r.tiers.iter().map(|t| t.sessions).sum::<usize>(), 12);
+    assert_eq!(r.per_shard.iter().map(|s| s.sessions).sum::<usize>(), 12);
+    assert!(
+        r.per_shard.iter().all(|s| s.sessions > 0),
+        "a burst must land sessions on both shards: {:?}",
+        r.per_shard.iter().map(|s| s.sessions).collect::<Vec<_>>()
+    );
+    // per-tier latency counts line up with admissions
+    assert!(r.tiers.iter().all(|t| t.sessions == t.latency.count));
+    // shift events, if any, are tagged with a real shard and stay
+    // clock-ordered after the merge
+    assert!(r.shifts.iter().all(|s| s.shard < 2));
+    assert!(r.shifts.windows(2).all(|w| w[0].clock <= w[1].clock));
+    assert_eq!(r.tier_of_session.len(), 12);
+    assert_eq!(r.shard_of_session.len(), 12);
+    // the JSON form carries the per-shard and per-tier slices
+    let j = tracenorm::jsonx::Json::parse(&r.to_json().to_string_pretty()).unwrap();
+    assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
+    assert_eq!(j.get("tiers").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(j.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -47,6 +47,22 @@ cargo run --release -q -- ladder-build --out "$ndir/ladder" --fracs 0.5 \
 grep -q "dims from its meta block" "$ndir/ladder.log" \
   || { echo "native-train smoke: ladder-build did not consume the train-state"; exit 1; }
 
+echo "==> sharded smoke: stream-serve --shards 2 --json + report sanity"
+sj="$(cargo run --release -q -- stream-serve --shards 2 --utts 12 --rate 1000 \
+  --pool 2 --chunk 8 --seed 7 --json)"
+echo "$sj" | grep -q '"kind": "stream-serve"' \
+  || { echo "sharded smoke: --json did not emit a stream-serve report"; exit 1; }
+echo "$sj" | grep -q '"shards": 2' \
+  || { echo "sharded smoke: report does not carry the shard count"; exit 1; }
+echo "$sj" | grep -q '"p99"' \
+  || { echo "sharded smoke: latency summary missing"; exit 1; }
+echo "$sj" | grep -q '"shard": 1' \
+  || { echo "sharded smoke: per-shard slice for shard 1 missing"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+  echo "$sj" | python3 -m json.tool >/dev/null \
+    || { echo "sharded smoke: --json output is not valid JSON"; exit 1; }
+fi
+
 echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
 cargo run --release -q -- ladder-build --out "$ldir" --fracs 0.5,0.25 --seed 7
 report="$(cargo run --release -q -- stream-serve --ladder "$ldir" --utts 10 --ramp-utts 6 \
@@ -57,8 +73,9 @@ echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missi
 echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
 
 echo "==> bench smoke (1 iteration each)"
-rm -f BENCH_gemm.json BENCH_train.json # so the emit checks below cannot pass on stale files
-for b in gemm linalg streaming stream_pool ladder coordinator train; do
+# so the emit checks below cannot pass on stale files
+rm -f BENCH_gemm.json BENCH_train.json BENCH_shard.json
+for b in gemm linalg streaming stream_pool shard ladder coordinator train; do
   echo "--- bench $b"
   BENCH_SMOKE=1 cargo bench --bench "$b"
 done
@@ -68,5 +85,8 @@ grep -q '"backend": "blocked"' BENCH_gemm.json \
 test -f BENCH_train.json || { echo "train bench did not emit BENCH_train.json"; exit 1; }
 grep -q '"kind": "ctc"' BENCH_train.json \
   || { echo "BENCH_train.json missing the CTC lattice sweep"; exit 1; }
+test -f BENCH_shard.json || { echo "shard bench did not emit BENCH_shard.json"; exit 1; }
+grep -q '"shards": 4' BENCH_shard.json \
+  || { echo "BENCH_shard.json missing the 4-shard sweep row"; exit 1; }
 
 echo "CI OK"
