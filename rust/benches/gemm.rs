@@ -18,7 +18,7 @@ use harness::{bench, header};
 use tracenorm::jsonx::Json;
 use tracenorm::kernels::{
     all_backends, farm_counts, gemm_f32, qgemm_farm, qgemm_lowp, simd_runtime_available,
-    GemmBackend, PackedQMatrix, PreparedQMatrix,
+    GemmBackend, PackedGatePanels, PackedQMatrix, PreparedQMatrix,
 };
 use tracenorm::prng::Pcg64;
 use tracenorm::quant::QMatrix;
@@ -67,6 +67,13 @@ fn main() {
         std::hint::black_box(PackedQMatrix::pack(&w));
     });
     let prepped = PreparedQMatrix::new(QMatrix { q: w.clone(), scale: 0.01 });
+    // the same weight read as a stacked [z|r|h̃] gate matrix (N = 3H), so
+    // the fused sweep is directly comparable to the plain rows sweep
+    assert_eq!(N % 3, 0, "fused sweep needs a stacked gate shape");
+    let tgpack = bench("PackedGatePanels::pack (one-time plan cost)", 200, || {
+        std::hint::black_box(PackedGatePanels::pack(&w));
+    });
+    let prepped_gates = PreparedQMatrix::new_with_gates(QMatrix { q: w.clone(), scale: 0.01 });
 
     let mut results: Vec<Json> = Vec::new();
     for (_, be) in all_backends() {
@@ -85,13 +92,29 @@ fn main() {
                 be.qgemm_farm_rows_into(x.data(), m, &prepped, &scales, &mut out);
                 std::hint::black_box(&out);
             });
+            let tg = bench(&format!("{:<8} qgemm_gates_rows     m={m}", be.name()), 300, || {
+                be.qgemm_gates_rows_into(x.data(), m, &prepped_gates, &scales, &mut out);
+                std::hint::black_box(&out);
+            });
             let tf32 = bench(&format!("{:<8} gemm_f32_into        m={m}", be.name()), 300, || {
                 be.gemm_f32_into(&xf, &wf, None, &mut out);
                 std::hint::black_box(&out);
             });
-            for (kind, secs) in
-                [("qgemm_farm", tq), ("qgemm_farm_rows", tr), ("gemm_f32", tf32)]
-            {
+            let mut kinds = vec![
+                ("qgemm_farm", tq),
+                ("qgemm_farm_rows", tr),
+                ("qgemm_gates", tg),
+                ("gemm_f32", tf32),
+            ];
+            if m == 1 {
+                // the steady-state decode shape: the dedicated GEMV path
+                let tv = bench(&format!("{:<8} qgemv_into           m=1", be.name()), 300, || {
+                    be.qgemv_into(x.data(), &prepped, 0.01, &mut out);
+                    std::hint::black_box(&out);
+                });
+                kinds.push(("qgemv", tv));
+            }
+            for (kind, secs) in kinds {
                 results.push(Json::obj(vec![
                     ("backend", Json::str(be.name())),
                     ("kind", Json::str(kind)),
@@ -109,6 +132,7 @@ fn main() {
         ("n", Json::num(N as f64)),
         ("k", Json::num(K as f64)),
         ("pack_secs", Json::num(tpack)),
+        ("gate_pack_secs", Json::num(tgpack)),
         ("pack_excluded_from_steady_state", Json::Bool(true)),
         // when false, any backend="simd" rows below are scalar-fallback
         // timings — do not read them as vector-path numbers

@@ -30,6 +30,7 @@
 //!                                utterances with the embedded engine
 //!                                  --precision int8|f32
 //!                                  --backend scalar|blocked|simd|auto
+//!                                  --autotune on|off --fused-gates on|off
 //!   bench-gemm                   quick farm-vs-lowp timing sweep
 //!   stream-serve                 multi-stream serving demo: Poisson
 //!                                arrivals over concurrent decode sessions,
@@ -42,6 +43,12 @@
 //!                                  --backend scalar|blocked|simd|auto
 //!                                (the GEMM backend; simd needs the `simd`
 //!                                cargo feature — DESIGN.md §4)
+//!                                  --autotune on|off (construction-time
+//!                                NR/KC tile probing for the blocked packed
+//!                                layout; off pins the defaults)
+//!                                  --fused-gates on|off (route the
+//!                                recurrent GEMM through the fused GRU-gate
+//!                                kernel; bit-identical either way)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
 //!                                synthetic load ramp, per-shard fidelity
@@ -82,15 +89,21 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                train-state that ladder-build / stream-serve --load serve directly)
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
+                   [--autotune on|off] [--fused-gates on|off]
   repro bench-gemm [--reps N]
   repro stream-serve [--shards N] [--pool N] [--rate F] [--utts N] [--chunk N] [--json]
                      [--precision int8|f32] [--rank-frac F] [--time-batch N] [--scheme S]
                      [--load CKPT] [--seed N] [--backend scalar|blocked|simd|auto]
+                     [--autotune on|off] [--fused-gates on|off]
                      (--shards N spreads sessions over N worker threads; --shards 1,
-                      the default, is bit-identical to the unsharded serving path)
+                      the default, is bit-identical to the unsharded serving path;
+                      --autotune off pins the default NR/KC packing tiles;
+                      --fused-gates off pins the plain stacked recurrent sweep —
+                      decoding is bit-identical on or off)
   repro stream-serve --ladder DIR [--shards N] [--pool N] [--utts N] [--chunk N] [--rate F]
                      [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N] [--json]
-                     [--backend scalar|blocked|simd|auto]
+                     [--backend scalar|blocked|simd|auto] [--autotune on|off]
+                     [--fused-gates on|off]
                      (adaptive-fidelity serving over a built rank ladder; per-shard
                       fidelity controllers with a merged, shard-tagged shift log)
   repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]

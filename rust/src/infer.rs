@@ -7,7 +7,11 @@
 //!
 //! * the **recurrent** GEMM runs at the stream batch (1 for a single
 //!   session; m for a lock-stepped [`crate::stream::StreamPool`]),
-//!   strictly sequential in time;
+//!   strictly sequential in time — routed through the fused GRU-gate
+//!   kernel over gate-interleaved panels by default
+//!   ([`Engine::set_fused_gates`]), and through the dedicated m = 1
+//!   GEMV path when the batch is a single stream (both bit-identical
+//!   to the plain farm sweep);
 //! * the **non-recurrent** GEMM batches across time, up to
 //!   [`Engine::time_batch`] output steps (the paper found > ~4 hurts
 //!   latency — §4);
@@ -73,12 +77,32 @@ impl QDense {
         }
     }
 
+    /// Like [`QDense::from`], additionally building the gate-interleaved
+    /// [`PackedGatePanels`](crate::kernels::PackedGatePanels) layout when
+    /// the weight is a stacked `[z | r | h̃]` gate matrix (rows divisible
+    /// by 3) — used for recurrent GRU weights so the fused gate kernel
+    /// has its layout ready at plan time.
+    fn from_gated(w: &Tensor, p: Precision) -> QDense {
+        match p {
+            Precision::F32 => QDense::F32(w.clone()),
+            Precision::Int8 => QDense::I8(PreparedQMatrix::new_with_gates(quantize(w))),
+        }
+    }
+
     /// From a typed ladder-artifact entry: int8 entries install their
     /// stored `QMatrix` verbatim (scale included), f32 entries stay f32.
     fn from_entry(e: &Entry) -> QDense {
         match e {
             Entry::F32(t) => QDense::F32(t.clone()),
             Entry::I8(q) => QDense::I8(PreparedQMatrix::new(q.clone())),
+        }
+    }
+
+    /// [`QDense::from_entry`] with gate panels (see [`QDense::from_gated`]).
+    fn from_entry_gated(e: &Entry) -> QDense {
+        match e {
+            Entry::F32(t) => QDense::F32(t.clone()),
+            Entry::I8(q) => QDense::I8(PreparedQMatrix::new_with_gates(q.clone())),
         }
     }
 
@@ -113,7 +137,14 @@ impl QDense {
                 // per-row dynamic quantization would be more accurate; the
                 // paper (and farm) use per-call scales — do the same.
                 let sx = quantize_into(x.data(), &mut qs.xq[..m * k]);
-                be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out);
+                if m == 1 {
+                    // steady-state decode shape: the GEMV path (per-call
+                    // and per-row scales coincide at m = 1, so this is
+                    // bit-identical to the batch call)
+                    be.qgemv_into(&qs.xq[..k], qw, sx, out);
+                } else {
+                    be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out);
+                }
             }
         }
     }
@@ -139,7 +170,38 @@ impl QDense {
                 for i in 0..m {
                     qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
                 }
-                be.qgemm_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
+                if m == 1 {
+                    // single stream: `sx[0] · w.scale` is the exact same
+                    // f32 product the per-row path computes → bit-identical
+                    be.qgemv_into(&qs.xq[..k], qw, qs.sx[0], out);
+                } else {
+                    be.qgemm_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
+                }
+            }
+        }
+    }
+
+    /// [`QDense::apply_rows_into`] routed through the backend's fused
+    /// GRU-gate entry point: when the prepared weight carries gate
+    /// panels, all three gate products per hidden unit are computed in
+    /// one sweep (bit-identical either way — exact i32 accumulation).
+    fn apply_gates_rows_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        out: &mut Tensor,
+    ) {
+        match self {
+            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
+            QDense::I8(qw) => {
+                let (m, k) = (x.rows(), x.cols());
+                qs.xq.resize(m * k, 0);
+                qs.sx.resize(m, 0.0);
+                for i in 0..m {
+                    qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
+                }
+                be.qgemm_gates_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
             }
         }
     }
@@ -174,6 +236,21 @@ impl Op {
         }
     }
 
+    /// [`Op::from_params`] for recurrent gate weights: the op producing
+    /// the stacked `[z | r | h̃]` gate rows gets gate panels (for a
+    /// factored op that is `u`, the `(3H, r)` factor; `v` produces the
+    /// rank-`r` intermediate and stays plain).
+    fn from_params_gated(params: &ParamSet, base: &str, p: Precision) -> Result<Op> {
+        if params.contains(&format!("{base}_u")) {
+            Ok(Op::LowRank {
+                u: QDense::from_gated(params.get(&format!("{base}_u"))?, p),
+                v: QDense::from(params.get(&format!("{base}_v"))?, p),
+            })
+        } else {
+            Ok(Op::Dense(QDense::from_gated(params.get(&format!("{base}_w"))?, p)))
+        }
+    }
+
     fn from_entries(entries: &BTreeMap<String, Entry>, base: &str) -> Result<Op> {
         if entries.contains_key(&format!("{base}_u")) {
             Ok(Op::LowRank {
@@ -182,6 +259,19 @@ impl Op {
             })
         } else {
             Ok(Op::Dense(QDense::from_entry(entry(entries, &format!("{base}_w"))?)))
+        }
+    }
+
+    /// [`Op::from_entries`] with gate panels on the gate-producing factor
+    /// (see [`Op::from_params_gated`]).
+    fn from_entries_gated(entries: &BTreeMap<String, Entry>, base: &str) -> Result<Op> {
+        if entries.contains_key(&format!("{base}_u")) {
+            Ok(Op::LowRank {
+                u: QDense::from_entry_gated(entry(entries, &format!("{base}_u"))?),
+                v: QDense::from_entry(entry(entries, &format!("{base}_v"))?),
+            })
+        } else {
+            Ok(Op::Dense(QDense::from_entry_gated(entry(entries, &format!("{base}_w"))?)))
         }
     }
 
@@ -219,6 +309,26 @@ impl Op {
             Op::LowRank { u, v } => {
                 v.apply_rows_into(be, x, qs, mid);
                 u.apply_rows_into(be, mid, qs, out);
+            }
+        }
+    }
+
+    /// [`Op::apply_rows_into`] with the gate-producing GEMM routed
+    /// through the fused gate entry point (the `(3H, ·)` op; for a
+    /// factored op only `u` produces gate rows).
+    fn apply_gates_rows_into(
+        &self,
+        be: &dyn GemmBackend,
+        x: &Tensor,
+        qs: &mut QuantScratch,
+        mid: &mut Tensor,
+        out: &mut Tensor,
+    ) {
+        match self {
+            Op::Dense(w) => w.apply_gates_rows_into(be, x, qs, out),
+            Op::LowRank { u, v } => {
+                v.apply_rows_into(be, x, qs, mid);
+                u.apply_gates_rows_into(be, mid, qs, out);
             }
         }
     }
@@ -427,6 +537,7 @@ pub struct Engine {
     pub time_batch: usize,
     backend: &'static dyn GemmBackend,
     backend_sel: BackendSel,
+    fused_gates: bool,
     conv: Vec<ConvLayer>,
     grus: Vec<GruLayer>,
     fc: Op,
@@ -506,7 +617,10 @@ impl Engine {
                 // below — for simplicity materialize a partially-joint pair
                 // of dense matrices from the per-gate factors.
                 (
-                    Op::Dense(QDense::from(&concat_gates(params, &format!("rec{i}"))?, precision)),
+                    Op::Dense(QDense::from_gated(
+                        &concat_gates(params, &format!("rec{i}"))?,
+                        precision,
+                    )),
                     Op::Dense(QDense::from(
                         &concat_gates(params, &format!("nonrec{i}"))?,
                         precision,
@@ -514,7 +628,7 @@ impl Engine {
                 )
             } else {
                 (
-                    Op::from_params(params, &format!("rec{i}"), precision)?,
+                    Op::from_params_gated(params, &format!("rec{i}"), precision)?,
                     Op::from_params(params, &format!("nonrec{i}"), precision)?,
                 )
             };
@@ -530,6 +644,7 @@ impl Engine {
             time_batch: time_batch.max(1),
             backend: kernels::resolve(BackendSel::Auto)?,
             backend_sel: BackendSel::Auto,
+            fused_gates: true,
             conv,
             grus,
             fc: Op::from_params(params, "fc", precision)?,
@@ -612,7 +727,7 @@ impl Engine {
         for (i, &h) in dims.gru_dims.iter().enumerate() {
             grus.push(GruLayer {
                 hidden: h,
-                rec: Op::from_entries(entries, &format!("rec{i}"))?,
+                rec: Op::from_entries_gated(entries, &format!("rec{i}"))?,
                 nonrec: Op::from_entries(entries, &format!("nonrec{i}"))?,
                 bias: bias_entry(entries, &format!("gru{i}_b"))?,
             });
@@ -658,6 +773,7 @@ impl Engine {
             time_batch: time_batch.max(1),
             backend: kernels::resolve(BackendSel::Auto)?,
             backend_sel: BackendSel::Auto,
+            fused_gates: true,
             conv,
             grus,
             fc,
@@ -694,6 +810,26 @@ impl Engine {
     /// The selector this engine was configured with.
     pub fn backend_sel(&self) -> BackendSel {
         self.backend_sel
+    }
+
+    /// Route the recurrent GEMM through the fused GRU-gate kernel
+    /// (`--fused-gates` on the CLI; on by default).  Off pins the plain
+    /// stacked sweep; decoding is **bit-identical** either way (exact i32
+    /// accumulation — the parity suite asserts it), so this is a
+    /// performance/debugging switch, not an accuracy knob.
+    pub fn set_fused_gates(&mut self, on: bool) {
+        self.fused_gates = on;
+    }
+
+    /// Builder form of [`Engine::set_fused_gates`].
+    pub fn with_fused_gates(mut self, on: bool) -> Engine {
+        self.set_fused_gates(on);
+        self
+    }
+
+    /// Whether the recurrent GEMM routes through the fused gate kernel.
+    pub fn fused_gates(&self) -> bool {
+        self.fused_gates
     }
 
     pub fn new_state(&self) -> StreamState {
@@ -878,7 +1014,11 @@ impl Engine {
     ) {
         let g = &self.grus[li];
         let t1 = std::time::Instant::now();
-        g.rec.apply_rows_into(self.backend, h, qs, mid, gh);
+        if self.fused_gates {
+            g.rec.apply_gates_rows_into(self.backend, h, qs, mid, gh);
+        } else {
+            g.rec.apply_rows_into(self.backend, h, qs, mid, gh);
+        }
         bd.macs += g.rec.macs(h.rows());
         bd.rec += t1.elapsed().as_secs_f64();
     }

@@ -1,0 +1,170 @@
+//! Runtime NR/KC tile autotuning for the blocked backend's packed-weight
+//! layout (DESIGN.md §4).
+//!
+//! The default [`NR`]=4 / [`KC`]=256 tile is a sane portable choice, but
+//! the best panel height and strip width depend on the host's cache
+//! hierarchy and the actual weight dims.  At **engine construction** (and
+//! only then — never per call), [`choose`] micro-probes a small candidate
+//! grid on the real `(n, k)` shape: each candidate is packed, the blocked
+//! packed core is timed at the steady-state decode batch (m = 1), and the
+//! fastest tile wins.  The winner is cached per `(n, k)` so repeated
+//! constructions (registry rungs, shard fleets, tests) probe once per
+//! shape per process.
+//!
+//! Correctness is never at stake: every tile shape produces exact i32
+//! accumulation over the same products, so any choice is bit-identical to
+//! [`super::qgemm_ref`] (the parity suite pins this across candidates).
+//! The probe's only nondeterminism is *which* tile wins — `--autotune
+//! off` (or `TRACENORM_AUTOTUNE=off`) pins the defaults for byte-stable
+//! layout reproducibility.
+//!
+//! Probes are confined to plan time by construction: the steady-state
+//! alloc/probe discipline is enforced in `rust/tests/alloc_free.rs` via
+//! [`probe_count`], which must not move once decoding starts.  Weights
+//! smaller than [`MIN_PROBE_ELEMS`] skip probing entirely (tile choice is
+//! noise at that size, and tiny unit-test weights should not pay for
+//! timing runs).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::tensor::{Tensor, TensorI8};
+
+use super::blocked::qgemm_packed_core;
+use super::pack::{PackedQMatrix, KC, NR};
+use super::RowScales;
+
+/// The probed `(nr, kc)` grid: both panel heights the packed core
+/// specializes for × L1-scale strip widths around the default.
+pub const CANDIDATES: &[(usize, usize)] =
+    &[(4, 128), (4, 256), (4, 512), (8, 128), (8, 256), (8, 512)];
+
+/// Weights with fewer than this many elements keep the default tile
+/// (probing noise would exceed the win, and construction stays instant
+/// for tiny test models).
+pub const MIN_PROBE_ELEMS: usize = 32 * 1024;
+
+/// Timed repetitions per candidate (minimum taken, after one warmup).
+const PROBE_REPS: usize = 3;
+
+static ENABLED: OnceLock<AtomicBool> = OnceLock::new();
+static PROBES: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::type_complexity)]
+static CACHE: OnceLock<Mutex<HashMap<(usize, usize), (usize, usize)>>> = OnceLock::new();
+
+fn enabled_flag() -> &'static AtomicBool {
+    ENABLED.get_or_init(|| {
+        let off = matches!(
+            std::env::var("TRACENORM_AUTOTUNE").as_deref(),
+            Ok("off") | Ok("0") | Ok("false")
+        );
+        AtomicBool::new(!off)
+    })
+}
+
+/// Enable or disable probing process-wide (`--autotune on|off`; the
+/// `TRACENORM_AUTOTUNE` env var sets the initial state).  Disabling pins
+/// the [`NR`]/[`KC`] defaults for every later weight preparation; already
+/// cached winners are left as-is.
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+/// Whether construction-time probing is currently enabled.
+pub fn is_enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Number of micro-probes run so far in this process.  Steady-state
+/// decode must never move this counter (`rust/tests/alloc_free.rs`).
+pub fn probe_count() -> u64 {
+    PROBES.load(Ordering::Relaxed)
+}
+
+/// The `(nr, kc)` tile to pack an `(n, k)` int8 weight with: the cached
+/// probe winner when autotuning is on and the weight is probe-worthy,
+/// else the pinned defaults.
+pub fn choose(n: usize, k: usize) -> (usize, usize) {
+    if !is_enabled() || n * k < MIN_PROBE_ELEMS {
+        return (NR, KC);
+    }
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&hit) = cache.lock().unwrap().get(&(n, k)) {
+        return hit;
+    }
+    let best = probe(n, k);
+    cache.lock().unwrap().insert((n, k), best);
+    best
+}
+
+/// Time every candidate tile on a synthetic `(n, k)` weight at m = 1 (the
+/// steady-state decode batch) and return the fastest.  Operand *values*
+/// cannot affect timing (dense integer kernels), so a fixed pattern is
+/// used — the probe allocates and times, which is exactly why it only
+/// ever runs at plan time.
+fn probe(n: usize, k: usize) -> (usize, usize) {
+    PROBES.fetch_add(1, Ordering::Relaxed);
+    let wq = TensorI8::new(
+        &[n, k],
+        (0..n * k).map(|i| ((i * 37 + 11) % 251) as i32 - 125).map(|v| v as i8).collect(),
+    )
+    .expect("probe weight shape");
+    let xq: Vec<i8> = (0..k).map(|i| (((i * 7 + 3) % 251) as i32 - 125) as i8).collect();
+    let mut out = Tensor::zeros(&[0, 0]);
+    let mut best = (NR, KC);
+    let mut best_t = f64::INFINITY;
+    for &(nr, kc) in CANDIDATES {
+        let packed = PackedQMatrix::pack_with(&wq, nr, kc);
+        // warmup pass (page in the packed copy), then min over reps
+        qgemm_packed_core(&xq, 1, &packed, RowScales::Uniform(1.0), &mut out);
+        let mut t_min = f64::INFINITY;
+        for _ in 0..PROBE_REPS {
+            let t0 = Instant::now();
+            qgemm_packed_core(&xq, 1, &packed, RowScales::Uniform(1.0), &mut out);
+            t_min = t_min.min(t0.elapsed().as_secs_f64());
+        }
+        if t_min < best_t {
+            best_t = t_min;
+            best = (nr, kc);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_weights_skip_probing() {
+        let before = probe_count();
+        assert_eq!(choose(8, 8), (NR, KC));
+        assert_eq!(probe_count(), before, "sub-threshold shapes must not probe");
+    }
+
+    #[test]
+    fn disabled_pins_defaults() {
+        let was = is_enabled();
+        set_enabled(false);
+        let before = probe_count();
+        assert_eq!(choose(512, 512), (NR, KC));
+        assert_eq!(probe_count(), before, "disabled autotune must not probe");
+        set_enabled(was);
+    }
+
+    #[test]
+    fn probe_winner_is_a_candidate_and_cached() {
+        let was = is_enabled();
+        set_enabled(true);
+        let (n, k) = (192, 384); // probe-worthy, not a demo-dims shape
+        let first = choose(n, k);
+        assert!(CANDIDATES.contains(&first), "winner {first:?} not in the grid");
+        let probes = probe_count();
+        let second = choose(n, k);
+        assert_eq!(first, second, "cached winner must be stable");
+        assert_eq!(probe_count(), probes, "second lookup must hit the cache");
+        set_enabled(was);
+    }
+}

@@ -3,13 +3,27 @@
 //!
 //! Same arithmetic as [`super::scalar`] (exact i32 accumulation →
 //! bit-identical int8 results), different data movement: weights are read
-//! from the NR-panel, KC-strip interleaved layout built once at plan
-//! time.  Inside a panel the four weights a register tile needs for one
-//! activation element are adjacent (`kk·NR + r`), so the inner loop loads
-//! each activation once, feeds four independent i32 accumulator chains,
-//! and walks the weight stream strictly sequentially — the prefetcher's
-//! best case.  There is **no** per-call packing (the gemmlowp mistake at
-//! small batch) and no allocation: `out` is reshaped in place.
+//! from the nr-panel, kc-strip interleaved layout built once at plan
+//! time (tile shape per weight chosen by [`super::autotune`]).  Inside a
+//! panel the `nr` weights a register tile needs for one activation
+//! element are adjacent (`kk·nr + r`), so the inner loop loads each
+//! activation once, feeds `nr` independent i32 accumulator chains, and
+//! walks the weight stream strictly sequentially — the prefetcher's best
+//! case.  There is **no** per-call packing (the gemmlowp mistake at small
+//! batch) and no allocation: `out` is reshaped in place.
+//!
+//! Small-batch specializations (DESIGN.md §4):
+//!
+//! * **m = 1 GEMV** ([`GemmBackend::qgemv_into`]): the steady-state
+//!   decode shape.  With a single activation row there is no register
+//!   tile to amortize the panel interleave over, so the GEMV path skips
+//!   panel staging entirely and streams the row-major reference copy —
+//!   one pass, no layout indirection.
+//! * **Fused GRU gates** ([`GemmBackend::qgemm_gates_rows_into`]): when
+//!   the prepared weight carries gate-interleaved
+//!   [`PackedGatePanels`](super::pack::PackedGatePanels), all three gate
+//!   products of each hidden unit are computed in one sweep over
+//!   adjacent weight bytes instead of three sweeps `H·k` bytes apart.
 //!
 //! f32 weights are not packed (the embedded deployment path is int8);
 //! the f32 entry point shares [`super::scalar`]'s core, so `blocked` and
@@ -17,36 +31,53 @@
 
 use crate::tensor::Tensor;
 
-use super::pack::{KC, NR};
+use super::pack::{PackedGatePanels, PackedQMatrix, MAX_NR};
 use super::{scalar, GemmBackend, PreparedQMatrix, RowScales};
 
 /// Core of the packed-panel schedule: for each panel, each activation
-/// row carries 4 i32 accumulators across every k-strip, then writes the
-/// 4 dequantized outputs (ragged last panel writes only the real rows).
-fn qgemm_packed_core(
+/// row carries `nr` i32 accumulators across every k-strip, then writes
+/// the `nr` dequantized outputs (ragged last panel writes only the real
+/// rows).  Dispatches on the packed tile's panel height: the default
+/// nr = 4 keeps the fully unrolled register tile, other heights run the
+/// generic accumulator-array core (both exact, so bit-identical).
+pub(crate) fn qgemm_packed_core(
     xq: &[i8],
     m: usize,
-    w: &PreparedQMatrix,
+    pw: &PackedQMatrix,
     scales: RowScales<'_>,
     out: &mut Tensor,
 ) {
-    let (n, k) = (w.packed.n(), w.packed.k());
-    assert_eq!(xq.len(), m * k, "blocked activation panel mismatch");
-    out.reset(&[m, n]);
-    let nstrips = k.div_ceil(KC);
-    let npanels = n.div_ceil(NR);
+    assert_eq!(xq.len(), m * pw.k(), "blocked activation panel mismatch");
+    out.reset(&[m, pw.n()]);
+    if pw.nr() == 4 {
+        packed_core_nr4(xq, m, pw, scales, out);
+    } else {
+        packed_core_generic(xq, m, pw, scales, out);
+    }
+}
+
+fn packed_core_nr4(
+    xq: &[i8],
+    m: usize,
+    pw: &PackedQMatrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k) = (pw.n(), pw.k());
+    let nstrips = k.div_ceil(pw.kc());
+    let npanels = n.div_ceil(4);
     for p in 0..npanels {
-        let j0 = p * NR;
+        let j0 = p * 4;
         for i in 0..m {
             let xi = &xq[i * k..(i + 1) * k];
             let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0, 0, 0);
             for s in 0..nstrips {
-                let k0 = s * KC;
-                let kc = w.packed.strip_cols(s);
-                let panel = w.packed.panel(s, p);
+                let k0 = s * pw.kc();
+                let kc = pw.strip_cols(s);
+                let panel = pw.panel(s, p);
                 for (kk, &xv) in xi[k0..k0 + kc].iter().enumerate() {
                     let xv = xv as i32;
-                    let wb = kk * NR;
+                    let wb = kk * 4;
                     a0 += xv * panel[wb] as i32;
                     a1 += xv * panel[wb + 1] as i32;
                     a2 += xv * panel[wb + 2] as i32;
@@ -69,6 +100,82 @@ fn qgemm_packed_core(
     }
 }
 
+fn packed_core_generic(
+    xq: &[i8],
+    m: usize,
+    pw: &PackedQMatrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k, nr) = (pw.n(), pw.k(), pw.nr());
+    let nstrips = k.div_ceil(pw.kc());
+    let npanels = n.div_ceil(nr);
+    for p in 0..npanels {
+        let j0 = p * nr;
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let mut acc = [0i32; MAX_NR];
+            for s in 0..nstrips {
+                let k0 = s * pw.kc();
+                let kc = pw.strip_cols(s);
+                let panel = pw.panel(s, p);
+                for (kk, &xv) in xi[k0..k0 + kc].iter().enumerate() {
+                    let xv = xv as i32;
+                    let wb = kk * nr;
+                    for (r, a) in acc[..nr].iter_mut().enumerate() {
+                        *a += xv * panel[wb + r] as i32;
+                    }
+                }
+            }
+            let scale = scales.get(i);
+            let orow = out.row_mut(i);
+            for (r, &a) in acc[..nr.min(n - j0)].iter().enumerate() {
+                orow[j0 + r] = a as f32 * scale;
+            }
+        }
+    }
+}
+
+/// Core of the fused GRU-gate schedule over gate-interleaved panels: for
+/// each hidden unit `j`, one strictly-sequential pass over the adjacent
+/// `[z_j | r_j | h̃_j]` weight segments produces all three gate products,
+/// scattered to the stacked `[z | r | h̃]` output layout the gate math
+/// ([`crate::infer`]) expects.  Exact i32 accumulation → bit-identical
+/// to three separate sweeps and to [`super::qgemm_ref`].  Shared by the
+/// blocked backend and the simd backend's portable fallback.
+pub(crate) fn qgemm_gates_core(
+    xq: &[i8],
+    m: usize,
+    gp: &PackedGatePanels,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (h, k) = (gp.h(), gp.k());
+    assert_eq!(xq.len(), m * k, "fused-gate activation panel mismatch");
+    out.reset(&[m, 3 * h]);
+    let nstrips = gp.nstrips();
+    for j in 0..h {
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let (mut az, mut ar, mut ac) = (0i32, 0, 0);
+            for s in 0..nstrips {
+                let k0 = s * super::pack::KC;
+                let kc = gp.strip_cols(s);
+                let block = gp.block(s, j);
+                let xs = &xi[k0..k0 + kc];
+                az += scalar::dot_i8(xs, &block[..kc]);
+                ar += scalar::dot_i8(xs, &block[kc..2 * kc]);
+                ac += scalar::dot_i8(xs, &block[2 * kc..]);
+            }
+            let scale = scales.get(i);
+            let orow = out.row_mut(i);
+            orow[j] = az as f32 * scale;
+            orow[h + j] = ar as f32 * scale;
+            orow[2 * h + j] = ac as f32 * scale;
+        }
+    }
+}
+
 /// The packed-weight backend (see module docs).
 pub struct BlockedBackend;
 
@@ -83,7 +190,7 @@ impl GemmBackend for BlockedBackend {
     }
 
     fn qgemm_farm_into(&self, xq: &[i8], m: usize, w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
-        qgemm_packed_core(xq, m, w, RowScales::Uniform(sx * w.scale), out);
+        qgemm_packed_core(xq, m, &w.packed, RowScales::Uniform(sx * w.scale), out);
     }
 
     fn qgemm_farm_rows_into(
@@ -95,7 +202,28 @@ impl GemmBackend for BlockedBackend {
         out: &mut Tensor,
     ) {
         assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
-        qgemm_packed_core(xq, m, w, RowScales::PerRow(sx, w.scale), out);
+        qgemm_packed_core(xq, m, &w.packed, RowScales::PerRow(sx, w.scale), out);
+    }
+
+    fn qgemv_into(&self, xq: &[i8], w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        // m = 1: no register tile to amortize the panel interleave over —
+        // stream the row-major reference copy, no panel staging
+        scalar::gemv_core(xq, &w.q, sx * w.scale, out);
+    }
+
+    fn qgemm_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm_gates_rows needs one scale per row");
+        match &w.gates {
+            Some(gp) => qgemm_gates_core(xq, m, gp, RowScales::PerRow(sx, w.scale), out),
+            None => qgemm_packed_core(xq, m, &w.packed, RowScales::PerRow(sx, w.scale), out),
+        }
     }
 }
 
@@ -106,16 +234,17 @@ mod tests {
     use crate::quant::QMatrix;
     use crate::tensor::TensorI8;
 
+    fn mk(r: usize, c: usize, rng: &mut Pcg64) -> TensorI8 {
+        let data = (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        TensorI8::new(&[r, c], data).unwrap()
+    }
+
     #[test]
     fn blocked_matches_reference_on_ragged_shapes() {
         let mut rng = Pcg64::seeded(0);
         let be = BlockedBackend;
         let shapes = [(1usize, 1usize, 1usize), (1, 5, 3), (3, 7, 7), (2, 9, 257), (5, 66, 300)];
         for &(m, n, k) in &shapes {
-            let mk = |r: usize, c: usize, rng: &mut Pcg64| {
-                let data = (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
-                TensorI8::new(&[r, c], data).unwrap()
-            };
             let x = mk(m, k, &mut rng);
             let wq = mk(n, k, &mut rng);
             let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.03 });
@@ -123,6 +252,46 @@ mod tests {
             be.qgemm_farm_into(x.data(), m, &w, 0.011, &mut out);
             let want = super::super::qgemm_ref(&x, &wq, 0.011, 0.03);
             assert_eq!(out, want, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn packed_core_bit_identical_across_every_candidate_tile() {
+        // tile autotuning may pick any (nr, kc) candidate: results must
+        // be bit-identical to the reference for all of them, on ragged
+        // n/k tails including k < 8 and n % nr != 0
+        let mut rng = Pcg64::seeded(1);
+        for &(m, n, k) in &[(1usize, 5usize, 3usize), (2, 9, 7), (3, 13, 257), (4, 66, 513)] {
+            let x = mk(m, k, &mut rng);
+            let wq = mk(n, k, &mut rng);
+            let want = super::super::qgemm_ref(&x, &wq, 0.011, 0.03);
+            for &(nr, kc) in crate::kernels::autotune::CANDIDATES {
+                let pw = crate::kernels::PackedQMatrix::pack_with(&wq, nr, kc);
+                let mut out = Tensor::zeros(&[0, 0]);
+                qgemm_packed_core(
+                    x.data(),
+                    m,
+                    &pw,
+                    RowScales::Uniform(0.011 * 0.03),
+                    &mut out,
+                );
+                assert_eq!(out, want, "tile ({nr},{kc}) at ({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gates_core_matches_stacked_reference() {
+        let mut rng = Pcg64::seeded(2);
+        for &(m, h, k) in &[(1usize, 1usize, 1usize), (2, 5, 7), (3, 32, 257), (4, 7, 100)] {
+            let x = mk(m, k, &mut rng);
+            let wq = mk(3 * h, k, &mut rng);
+            let gp = PackedGatePanels::pack(&wq);
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let mut out = Tensor::zeros(&[0, 0]);
+            qgemm_gates_core(x.data(), m, &gp, RowScales::PerRow(&sx, 0.021), &mut out);
+            let want = crate::kernels::qgemm_farm_rows(&x, &wq, &sx, 0.021);
+            assert_eq!(out, want, "({m},{h},{k})");
         }
     }
 }

@@ -28,6 +28,23 @@
 //! output tensors — the engine's scratch arena ([`crate::infer`]) — so
 //! the steady-state decode loop performs zero heap allocations.
 //!
+//! Two **small-batch specializations** ride the same trait (DESIGN.md
+//! §4; both default to the plain batch path, so every backend stays
+//! correct without overriding them):
+//!
+//! * [`GemmBackend::qgemv_into`] — the dedicated m = 1 GEMV, the
+//!   steady-state decode shape.  Single activation row, no batch loop,
+//!   no panel staging.
+//! * [`GemmBackend::qgemm_gates_rows_into`] — the fused GRU-gate
+//!   product: when the prepared weight carries gate-interleaved
+//!   [`PackedGatePanels`] (`[z|r|h̃]` adjacent per hidden unit), all
+//!   three gate products are computed in one sweep over the weights
+//!   instead of three.
+//!
+//! [`autotune`] adds runtime NR/KC tile selection for the blocked packed
+//! layout — micro-probed once per `(n, k)` at engine construction, never
+//! per call; `--autotune off` pins the defaults.
+//!
 //! **Dispatch rules** (see DESIGN.md §4): [`BackendSel`] names a backend;
 //! [`resolve`] maps it to an implementation.  `auto` picks `simd` when
 //! the crate was built with the `simd` feature *and* the CPU supports it
@@ -48,6 +65,7 @@
 //! [`pooled_rec_counts`]/[`sequential_rec_counts`] expose the op/byte
 //! contrast for the roofline projection.
 
+pub mod autotune;
 pub mod blocked;
 pub mod pack;
 pub mod scalar;
@@ -55,7 +73,7 @@ pub mod scalar;
 pub mod simd;
 
 pub use blocked::BlockedBackend;
-pub use pack::{PackedQMatrix, KC, NR};
+pub use pack::{PackedGatePanels, PackedQMatrix, KC, MAX_NR, NR};
 pub use scalar::{gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, ScalarBackend};
 #[cfg(feature = "simd")]
 pub use simd::SimdBackend;
@@ -132,9 +150,13 @@ pub fn sequential_rec_counts(m: usize, n: usize, k: usize) -> GemmCounts {
 // ---------------------------------------------------------------------------
 
 /// An int8 weight matrix prepared for all registered backends: the
-/// row-major reference layout (scalar, simd) **plus** the NR-panel
-/// pre-packed layout (blocked), both built exactly once when the engine
-/// is constructed or a registry artifact is loaded.
+/// row-major reference layout (scalar, simd) **plus** the nr-panel
+/// pre-packed layout (blocked; tile shape per weight from
+/// [`autotune::choose`]), and — for stacked GRU gate weights prepared
+/// via [`PreparedQMatrix::new_with_gates`] — the gate-interleaved
+/// [`PackedGatePanels`] the fused gate kernels consume.  All layouts are
+/// built exactly once when the engine is constructed or a registry
+/// artifact is loaded.
 #[derive(Clone, Debug)]
 pub struct PreparedQMatrix {
     /// row-major `(n, k)` int8 weights — the reference layout
@@ -143,13 +165,31 @@ pub struct PreparedQMatrix {
     pub scale: f32,
     /// panel-interleaved pre-packed copy (see [`PackedQMatrix`])
     pub packed: PackedQMatrix,
+    /// gate-interleaved `[z|r|h̃]` panels — present only on `(3H, k)`
+    /// GRU gate weights prepared via [`PreparedQMatrix::new_with_gates`]
+    pub gates: Option<PackedGatePanels>,
 }
 
 impl PreparedQMatrix {
-    /// Prepare a quantized matrix for every backend (packs once).
+    /// Prepare a quantized matrix for every backend (packs once; the
+    /// blocked tile shape comes from the autotune cache).
     pub fn new(q: QMatrix) -> PreparedQMatrix {
-        let packed = PackedQMatrix::pack(&q.q);
-        PreparedQMatrix { q: q.q, scale: q.scale, packed }
+        let (nr, kc) = autotune::choose(q.q.rows(), q.q.cols());
+        let packed = PackedQMatrix::pack_with(&q.q, nr, kc);
+        PreparedQMatrix { q: q.q, scale: q.scale, packed, gates: None }
+    }
+
+    /// Prepare a stacked `(3H, k)` GRU gate weight: everything
+    /// [`PreparedQMatrix::new`] builds **plus** the gate-interleaved
+    /// panel layout for the fused gate kernels.  Weights whose row count
+    /// is not a multiple of 3 get no gate panels (the fused entry point
+    /// then falls back to the stacked sweep — same bits).
+    pub fn new_with_gates(q: QMatrix) -> PreparedQMatrix {
+        let mut p = PreparedQMatrix::new(q);
+        if p.q.rows() > 0 && p.q.rows() % 3 == 0 {
+            p.gates = Some(PackedGatePanels::pack(&p.q));
+        }
+        p
     }
 
     /// Output dimension `n` of `y = x·wᵀ`.
@@ -169,6 +209,7 @@ impl PreparedQMatrix {
 // must stay shareable by construction.
 const _: () = crate::assert_send_sync::<PreparedQMatrix>();
 const _: () = crate::assert_send_sync::<PackedQMatrix>();
+const _: () = crate::assert_send_sync::<PackedGatePanels>();
 
 /// Per-output-row dequantization scales, shared by the backend kernels.
 /// `Uniform` carries the pre-multiplied `sx·sw` product (one activation
@@ -229,6 +270,35 @@ pub trait GemmBackend: Send + Sync {
         sx: &[f32],
         out: &mut Tensor,
     );
+
+    /// Dedicated m = 1 GEMV — the steady-state decode shape.  `xq` is a
+    /// single activation row of `w.k()` elements.  Default delegates to
+    /// the batch path at m = 1; backends override with a path that skips
+    /// the batch loop (and, for `blocked`, panel staging) entirely.
+    /// Must stay bit-identical to [`GemmBackend::qgemm_farm_into`] at
+    /// m = 1 (exact i32 accumulation — the parity suite pins it).
+    fn qgemv_into(&self, xq: &[i8], w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        self.qgemm_farm_into(xq, 1, w, sx, out);
+    }
+
+    /// Fused GRU-gate product with per-row activation scales: computes
+    /// the stacked `(m, 3H)` gate pre-activations of a `(3H, k)` gate
+    /// weight.  Backends with a fused kernel read the gate-interleaved
+    /// [`PackedGatePanels`] (one sweep over the weights instead of
+    /// three); the default — and any weight prepared without gate
+    /// panels — is the plain stacked sweep.  Output layout and bits are
+    /// identical either way ([`GemmBackend::qgemm_farm_rows_into`] is
+    /// the reference).
+    fn qgemm_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        self.qgemm_farm_rows_into(xq, m, w, sx, out);
+    }
 }
 
 /// Backend selector: the value of the `--backend` CLI flag and the knob
@@ -501,5 +571,54 @@ mod tests {
         assert_eq!(p.n(), 37);
         assert_eq!(p.k(), 53);
         assert_eq!(p.packed.unpack(), p.q, "plan-time packing must be lossless");
+        assert!(p.gates.is_none(), "plain preparation must not build gate panels");
+    }
+
+    #[test]
+    fn prepared_gates_round_trip_and_gate_rule() {
+        let mut rng = Pcg64::seeded(8);
+        let w = Tensor::randn(&[3 * 11, 17], 0.3, &mut rng);
+        let p = PreparedQMatrix::new_with_gates(quantize(&w));
+        let gp = p.gates.as_ref().expect("(3H, k) weight must get gate panels");
+        assert_eq!((gp.h(), gp.k()), (11, 17));
+        assert_eq!(gp.unpack(), p.q, "gate packing must be lossless");
+        // non-multiple-of-3 row counts fall back to no panels
+        let odd = Tensor::randn(&[10, 17], 0.3, &mut rng);
+        assert!(PreparedQMatrix::new_with_gates(quantize(&odd)).gates.is_none());
+    }
+
+    #[test]
+    fn gemv_entry_point_bit_identical_to_batch1() {
+        // the trait default *and* every override must match qgemm_ref at
+        // m = 1 (deeper shape grid lives in rust/tests/backends.rs)
+        let mut rng = Pcg64::seeded(9);
+        for &(n, k) in &[(5usize, 3usize), (7, 8), (33, 100), (96, 320)] {
+            let x = rand_i8(&[1, k], &mut rng);
+            let wq = rand_i8(&[n, k], &mut rng);
+            let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.021 });
+            let want = qgemm_ref(&x, &wq, 0.013, 0.021);
+            for (_, be) in all_backends() {
+                let mut out = Tensor::zeros(&[0, 0]);
+                be.qgemv_into(x.data(), &w, 0.013, &mut out);
+                assert_eq!(out, want, "{} qgemv ({n},{k})", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gates_entry_point_bit_identical_to_stacked() {
+        let mut rng = Pcg64::seeded(10);
+        for &(m, h, k) in &[(1usize, 5usize, 7usize), (3, 8, 16), (4, 33, 100)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let wq = rand_i8(&[3 * h, k], &mut rng);
+            let w = PreparedQMatrix::new_with_gates(QMatrix { q: wq.clone(), scale: 0.017 });
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let want = qgemm_farm_rows(&x, &wq, &sx, 0.017);
+            for (_, be) in all_backends() {
+                let mut out = Tensor::zeros(&[0, 0]);
+                be.qgemm_gates_rows_into(x.data(), m, &w, &sx, &mut out);
+                assert_eq!(out, want, "{} fused gates ({m},{h},{k})", be.name());
+            }
+        }
     }
 }

@@ -1,82 +1,119 @@
 //! Plan-time weight packing: the [`PackedQMatrix`] layout consumed by the
-//! `blocked` backend.
+//! `blocked` backend, and the gate-interleaved [`PackedGatePanels`] layout
+//! consumed by the fused GRU-gate kernels.
 //!
 //! gemmlowp's pack-compute-unpack loses at small batch because the O(n·k)
 //! packing traffic recurs **every call** (paper §4, [`super::qgemm_lowp`]).
 //! The layout itself is not the problem — paying for it repeatedly is.
-//! `PackedQMatrix` keeps the favorable layout but builds it exactly once,
-//! when the engine is constructed or a registry artifact is loaded;
-//! steady-state GEMMs then only ever read it.
+//! Both layouts here keep the favorable interleaving but are built exactly
+//! once, when the engine is constructed or a registry artifact is loaded;
+//! steady-state GEMMs then only ever read them.
 //!
-//! Layout (`NR = 4` panel rows, `KC = 256` k-strip):
+//! Layout (`nr` panel rows, `kc` k-strip; defaults [`NR`]=4, [`KC`]=256,
+//! overridable per matrix by the [`super::autotune`] probe):
 //!
 //! ```text
 //! source  w (n, k), row-major             packed, strip-major
 //! ┌──────────── k ────────────┐
-//! │ row 0                     │   strip 0 (cols 0..KC):
-//! │ row 1                     │     panel 0: k-interleaved rows 0..4
+//! │ row 0                     │   strip 0 (cols 0..kc):
+//! │ row 1                     │     panel 0: k-interleaved rows 0..nr
 //! │ ...                       │       [w00 w10 w20 w30 | w01 w11 w21 w31 | ...]
-//! │ row n-1                   │     panel 1: rows 4..8, same interleave
-//! └───────────────────────────┘     ... panel ⌈n/NR⌉-1 (tail rows zero-padded)
-//!                                 strip 1 (cols KC..2KC): panels again
-//!                                 ... last strip ragged (kc = k mod KC)
+//! │ row n-1                   │     panel 1: rows nr..2nr, same interleave
+//! └───────────────────────────┘     ... panel ⌈n/nr⌉-1 (tail rows zero-padded)
+//!                                 strip 1 (cols kc..2kc): panels again
+//!                                 ... last strip ragged (k mod kc)
 //! ```
 //!
-//! Within a panel, element `(row p·NR + r, col k0 + kk)` lives at
-//! `kk·NR + r`: the four weights a register tile needs for one activation
+//! Within a panel, element `(row p·nr + r, col k0 + kk)` lives at
+//! `kk·nr + r`: the `nr` weights a register tile needs for one activation
 //! element are adjacent, so the kernel loads the activation once and
 //! reads weights strictly sequentially.  Rows past `n` in the last panel
 //! are stored as zeros and contribute nothing to the i32 accumulation, so
 //! ragged `n` stays bit-exact; ragged `k` is handled by the final short
 //! strip.  [`PackedQMatrix::unpack`] inverts the layout exactly —
 //! `rust/tests/properties.rs` property-tests the round trip over all
-//! `n mod NR` / `k mod KC` tails, including `k < 8`.
+//! `n mod nr` / `k mod kc` tails, including `k < 8`.
+//!
+//! [`PackedGatePanels`] is the GRU-specific variant (DESIGN.md §4): a
+//! stacked `(3H, k)` recurrent weight holds the z-gate rows `0..H`, the
+//! r-gate rows `H..2H` and the candidate rows `2H..3H`, so a stacked
+//! sweep touches three weight rows that are `H·k` bytes apart to produce
+//! one hidden unit's gates.  The gate-interleaved layout stores, per
+//! k-strip, per hidden unit `j`, the three gate rows **adjacent**:
+//!
+//! ```text
+//! strip s: [ z_0 | r_0 | h̃_0 ][ z_1 | r_1 | h̃_1 ] ... [ z_{H-1} | r_{H-1} | h̃_{H-1} ]
+//!            kc     kc    kc     (each gate row segment is kc contiguous i8)
+//! ```
+//!
+//! so the fused kernel computes all three gate products for unit `j` in
+//! one strictly-sequential pass over `3·kc` weight bytes and scatters to
+//! `out[j]`, `out[H+j]`, `out[2H+j]` — one sweep over the weights instead
+//! of three.  Gate segments stay contiguous (no element interleave), so
+//! the same vector dot products the plain kernels use apply unchanged.
 
 use crate::tensor::TensorI8;
 
-/// Weight rows per packed panel (the register-tile height of the farm
-/// schedule — 4 weight rows of i32 accumulators).
+/// Default weight rows per packed panel (the register-tile height of the
+/// farm schedule — 4 weight rows of i32 accumulators).
 pub const NR: usize = 4;
 
-/// Columns per k-strip; strips keep the working set of one panel pass
-/// inside L1 for paper-scale `k`.
+/// Default columns per k-strip; strips keep the working set of one panel
+/// pass inside L1 for paper-scale `k`.
 pub const KC: usize = 256;
 
-/// An int8 weight matrix in NR-panel, KC-strip interleaved layout,
+/// Largest panel height any autotune candidate may request (the generic
+/// packed core carries this many accumulators).
+pub const MAX_NR: usize = 8;
+
+/// An int8 weight matrix in nr-panel, kc-strip interleaved layout,
 /// packed once at plan time (see module docs for the layout diagram).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedQMatrix {
     n: usize,
     k: usize,
+    nr: usize,
+    kc: usize,
     data: Vec<i8>,
 }
 
 impl PackedQMatrix {
-    /// Pack a row-major `(n, k)` matrix.  O(n·k), runs once per weight
-    /// at engine construction / registry load.
+    /// Pack a row-major `(n, k)` matrix with the default [`NR`]/[`KC`]
+    /// tile.  O(n·k), runs once per weight at engine construction /
+    /// registry load.
     pub fn pack(wq: &TensorI8) -> PackedQMatrix {
+        PackedQMatrix::pack_with(wq, NR, KC)
+    }
+
+    /// Pack with an explicit `(nr, kc)` tile shape — the autotune probe
+    /// ([`super::autotune`]) picks these per weight; `pack` is the pinned
+    /// default.  Any `1 ≤ nr ≤ MAX_NR` stays bit-exact (padding rows are
+    /// zero and i32 accumulation is exact).
+    pub fn pack_with(wq: &TensorI8, nr: usize, kc: usize) -> PackedQMatrix {
+        assert!(nr >= 1 && nr <= MAX_NR, "panel height {nr} out of range");
+        assert!(kc >= 1, "k-strip width must be >= 1");
         let (n, k) = (wq.rows(), wq.cols());
-        let npanels = n.div_ceil(NR);
-        let nstrips = k.div_ceil(KC);
-        let mut data = vec![0i8; npanels * NR * k];
+        let npanels = n.div_ceil(nr);
+        let nstrips = k.div_ceil(kc);
+        let mut data = vec![0i8; npanels * nr * k];
         for s in 0..nstrips {
-            let k0 = s * KC;
-            let kc = KC.min(k - k0);
-            let strip_base = npanels * NR * k0;
+            let k0 = s * kc;
+            let kcs = kc.min(k - k0);
+            let strip_base = npanels * nr * k0;
             for p in 0..npanels {
-                let pbase = strip_base + p * NR * kc;
-                for r in 0..NR {
-                    let row = p * NR + r;
+                let pbase = strip_base + p * nr * kcs;
+                for r in 0..nr {
+                    let row = p * nr + r;
                     if row >= n {
                         continue; // padding rows stay zero
                     }
-                    for (kk, &v) in wq.row(row)[k0..k0 + kc].iter().enumerate() {
-                        data[pbase + kk * NR + r] = v;
+                    for (kk, &v) in wq.row(row)[k0..k0 + kcs].iter().enumerate() {
+                        data[pbase + kk * nr + r] = v;
                     }
                 }
             }
         }
-        PackedQMatrix { n, k, data }
+        PackedQMatrix { n, k, nr, kc, data }
     }
 
     /// Output dimension `n`.
@@ -89,45 +126,151 @@ impl PackedQMatrix {
         self.k
     }
 
+    /// Panel height this matrix was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// k-strip width this matrix was packed with.
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
     /// Bytes held by the packed copy (footprint accounting).
     pub fn bytes(&self) -> usize {
         self.data.len()
     }
 
-    /// Columns in strip `s` (`KC`, or the ragged tail for the last strip).
+    /// Columns in strip `s` (`kc`, or the ragged tail for the last strip).
+    #[inline]
+    pub(crate) fn strip_cols(&self, s: usize) -> usize {
+        self.kc.min(self.k - s * self.kc)
+    }
+
+    /// The interleaved `(kcs × nr)` block of (strip `s`, panel `p`).
+    #[inline]
+    pub(crate) fn panel(&self, s: usize, p: usize) -> &[i8] {
+        let k0 = s * self.kc;
+        let kcs = self.kc.min(self.k - k0);
+        let npanels = self.n.div_ceil(self.nr);
+        let base = npanels * self.nr * k0 + p * self.nr * kcs;
+        &self.data[base..base + self.nr * kcs]
+    }
+
+    /// Exact inverse of [`PackedQMatrix::pack_with`] (drops the padding).
+    pub fn unpack(&self) -> TensorI8 {
+        let mut out = TensorI8::zeros(&[self.n, self.k]);
+        let npanels = self.n.div_ceil(self.nr);
+        let nstrips = self.k.div_ceil(self.kc);
+        for s in 0..nstrips {
+            let k0 = s * self.kc;
+            let kcs = self.strip_cols(s);
+            for p in 0..npanels {
+                let panel = self.panel(s, p);
+                for r in 0..self.nr {
+                    let row = p * self.nr + r;
+                    if row >= self.n {
+                        continue;
+                    }
+                    for kk in 0..kcs {
+                        out.data_mut()[row * self.k + k0 + kk] = panel[kk * self.nr + r];
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A stacked `(3H, k)` GRU gate weight in the gate-interleaved `[z|r|h̃]`
+/// layout of the module docs: per k-strip, per hidden unit `j`, the three
+/// gate rows adjacent as contiguous `kc`-byte segments.  Built once at
+/// engine construction / registry load by
+/// [`super::PreparedQMatrix::new_with_gates`]; consumed by the fused
+/// gate kernels of the blocked and simd backends.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedGatePanels {
+    h: usize,
+    k: usize,
+    data: Vec<i8>,
+}
+
+impl PackedGatePanels {
+    /// Pack a stacked `(3H, k)` gate matrix (rows `[z; r; h̃]`, the GRU
+    /// layout [`crate::infer`] uses throughout).  Panics unless the row
+    /// count is a positive multiple of 3.
+    pub fn pack(wq: &TensorI8) -> PackedGatePanels {
+        let (n, k) = (wq.rows(), wq.cols());
+        assert!(n > 0 && n % 3 == 0, "gate panels need a (3H, k) matrix, got {n} rows");
+        let h = n / 3;
+        let nstrips = k.div_ceil(KC);
+        let mut data = vec![0i8; 3 * h * k];
+        for s in 0..nstrips {
+            let k0 = s * KC;
+            let kcs = KC.min(k - k0);
+            let strip_base = 3 * h * k0;
+            for j in 0..h {
+                let block = strip_base + j * 3 * kcs;
+                for (g, row) in [j, h + j, 2 * h + j].into_iter().enumerate() {
+                    data[block + g * kcs..block + (g + 1) * kcs]
+                        .copy_from_slice(&wq.row(row)[k0..k0 + kcs]);
+                }
+            }
+        }
+        PackedGatePanels { h, k, data }
+    }
+
+    /// Hidden width `H` (output dimension is `3H`).
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bytes held by the packed copy (footprint accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Columns in strip `s` ([`KC`], or the ragged tail).
     #[inline]
     pub(crate) fn strip_cols(&self, s: usize) -> usize {
         KC.min(self.k - s * KC)
     }
 
-    /// The interleaved `(kc × NR)` block of (strip `s`, panel `p`).
+    /// Number of k-strips.
     #[inline]
-    pub(crate) fn panel(&self, s: usize, p: usize) -> &[i8] {
-        let k0 = s * KC;
-        let kc = KC.min(self.k - k0);
-        let npanels = self.n.div_ceil(NR);
-        let base = npanels * NR * k0 + p * NR * kc;
-        &self.data[base..base + NR * kc]
+    pub(crate) fn nstrips(&self) -> usize {
+        self.k.div_ceil(KC)
     }
 
-    /// Exact inverse of [`PackedQMatrix::pack`] (drops the zero padding).
+    /// The `[z_j | r_j | h̃_j]` block of (strip `s`, hidden unit `j`):
+    /// three contiguous gate segments of `strip_cols(s)` bytes each.
+    #[inline]
+    pub(crate) fn block(&self, s: usize, j: usize) -> &[i8] {
+        let k0 = s * KC;
+        let kcs = KC.min(self.k - k0);
+        let base = 3 * self.h * k0 + j * 3 * kcs;
+        &self.data[base..base + 3 * kcs]
+    }
+
+    /// Exact inverse of [`PackedGatePanels::pack`]: the `(3H, k)` stacked
+    /// gate matrix (round-trip property-tested in
+    /// `rust/tests/properties.rs`).
     pub fn unpack(&self) -> TensorI8 {
-        let mut out = TensorI8::zeros(&[self.n, self.k]);
-        let npanels = self.n.div_ceil(NR);
-        let nstrips = self.k.div_ceil(KC);
-        for s in 0..nstrips {
+        let (h, k) = (self.h, self.k);
+        let mut out = TensorI8::zeros(&[3 * h, k]);
+        for s in 0..self.nstrips() {
             let k0 = s * KC;
-            let kc = self.strip_cols(s);
-            for p in 0..npanels {
-                let panel = self.panel(s, p);
-                for r in 0..NR {
-                    let row = p * NR + r;
-                    if row >= self.n {
-                        continue;
-                    }
-                    for kk in 0..kc {
-                        out.data_mut()[row * self.k + k0 + kk] = panel[kk * NR + r];
-                    }
+            let kcs = self.strip_cols(s);
+            for j in 0..h {
+                let block = self.block(s, j);
+                for (g, row) in [j, h + j, 2 * h + j].into_iter().enumerate() {
+                    out.data_mut()[row * k + k0..row * k + k0 + kcs]
+                        .copy_from_slice(&block[g * kcs..(g + 1) * kcs]);
                 }
             }
         }
@@ -160,6 +303,21 @@ mod tests {
     }
 
     #[test]
+    fn round_trip_with_explicit_tiles() {
+        // every autotune candidate tile shape must round-trip on ragged
+        // shapes too — tile choice may never change stored weights
+        let mut rng = Pcg64::seeded(3);
+        for &(nr, kc) in &[(4usize, 128usize), (4, 512), (8, 128), (8, 256), (8, 512), (1, 1)] {
+            for &(n, k) in &[(1usize, 1usize), (7, 9), (9, 130), (17, 513)] {
+                let w = rand_i8(n, k, &mut rng);
+                let p = PackedQMatrix::pack_with(&w, nr, kc);
+                assert_eq!((p.nr(), p.kc()), (nr, kc));
+                assert_eq!(p.unpack(), w, "nr {nr} kc {kc} ({n},{k})");
+            }
+        }
+    }
+
+    #[test]
     fn packed_size_is_padded_rows_times_k() {
         let mut rng = Pcg64::seeded(1);
         let w = rand_i8(6, 300, &mut rng);
@@ -176,5 +334,33 @@ mod tests {
         let total: usize = (0..3).map(|s| p.strip_cols(s)).sum();
         assert_eq!(total, 2 * KC + 17);
         assert_eq!(p.strip_cols(2), 17);
+    }
+
+    #[test]
+    fn gate_panels_round_trip_and_blocks() {
+        let mut rng = Pcg64::seeded(4);
+        for &(h, k) in &[(1usize, 1usize), (3, 7), (5, 256), (4, 257), (7, 513), (32, 100)] {
+            let w = rand_i8(3 * h, k, &mut rng);
+            let gp = PackedGatePanels::pack(&w);
+            assert_eq!((gp.h(), gp.k()), (h, k));
+            assert_eq!(gp.bytes(), 3 * h * k, "no padding in the gate layout");
+            assert_eq!(gp.unpack(), w, "({h},{k})");
+            // block (s=0, j) holds the three gate rows' strip-0 prefixes
+            let kcs = gp.strip_cols(0);
+            for j in 0..h {
+                let b = gp.block(0, j);
+                assert_eq!(&b[..kcs], &w.row(j)[..kcs], "z_{j}");
+                assert_eq!(&b[kcs..2 * kcs], &w.row(h + j)[..kcs], "r_{j}");
+                assert_eq!(&b[2 * kcs..], &w.row(2 * h + j)[..kcs], "h̃_{j}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gate panels")]
+    fn gate_panels_reject_non_gate_row_counts() {
+        let mut rng = Pcg64::seeded(5);
+        let w = rand_i8(7, 5, &mut rng);
+        let _ = PackedGatePanels::pack(&w);
     }
 }

@@ -126,6 +126,37 @@ pub(crate) fn farm_core(
     }
 }
 
+/// Allocation-free core of the dedicated m = 1 GEMV path (DESIGN.md §4):
+/// the steady-state decode shape.  One activation row, streamed against
+/// 4-row weight tiles in storage order — no per-row batch loop, no panel
+/// staging, one pass over the weights.  Same exact i32 accumulation as
+/// [`farm_core`] at m = 1, so bit-identical by construction.  `scale` is
+/// the pre-multiplied `sx·sw` product.
+pub(crate) fn gemv_core(xq: &[i8], wq: &TensorI8, scale: f32, out: &mut Tensor) {
+    let (n, k) = (wq.rows(), wq.cols());
+    assert_eq!(xq.len(), k, "gemv takes exactly one activation row");
+    out.reset(&[1, n]);
+    let orow = out.row_mut(0);
+    let mut j = 0;
+    while j + 4 <= n {
+        let (a0, a1, a2, a3) = (
+            dot_i8(xq, wq.row(j)),
+            dot_i8(xq, wq.row(j + 1)),
+            dot_i8(xq, wq.row(j + 2)),
+            dot_i8(xq, wq.row(j + 3)),
+        );
+        orow[j] = a0 as f32 * scale;
+        orow[j + 1] = a1 as f32 * scale;
+        orow[j + 2] = a2 as f32 * scale;
+        orow[j + 3] = a3 as f32 * scale;
+        j += 4;
+    }
+    while j < n {
+        orow[j] = dot_i8(xq, wq.row(j)) as f32 * scale;
+        j += 1;
+    }
+}
+
 /// `y = x @ wᵀ + bias?`, f32. x: (m, k), w: (n, k) -> (m, n).
 pub fn gemm_f32(x: &Tensor, w: &Tensor, bias: Option<&[f32]>) -> Tensor {
     let mut out = Tensor::zeros(&[0, 0]);
@@ -303,4 +334,12 @@ impl GemmBackend for ScalarBackend {
         assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
         farm_core(xq, m, &w.q, RowScales::PerRow(sx, w.scale), out);
     }
+
+    fn qgemv_into(&self, xq: &[i8], w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        gemv_core(xq, &w.q, sx * w.scale, out);
+    }
+
+    // qgemm_gates_rows_into keeps the trait default (the stacked
+    // three-gate sweep): scalar *is* the reference the fused kernels of
+    // the other backends are tested against.
 }

@@ -17,7 +17,7 @@
 
 use crate::tensor::Tensor;
 
-use super::{scalar, GemmBackend, PreparedQMatrix, RowScales};
+use super::{blocked, scalar, GemmBackend, PreparedQMatrix, RowScales};
 
 /// Is an accelerated path actually usable on this CPU at runtime?
 /// (`auto` consults this; without support the backend still works via
@@ -78,6 +78,53 @@ impl GemmBackend for SimdBackend {
         assert_eq!(m, sx.len(), "qgemm_farm_rows needs one scale per row");
         farm_dispatch(xq, m, w, RowScales::PerRow(sx, w.scale), out);
     }
+
+    fn qgemv_into(&self, xq: &[i8], w: &PreparedQMatrix, sx: f32, out: &mut Tensor) {
+        let scale = sx * w.scale;
+        #[cfg(target_arch = "x86_64")]
+        if runtime_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { x86::gemv_avx2(xq, &w.q, scale, out) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if runtime_available() {
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { arm::gemv_neon(xq, &w.q, scale, out) };
+            return;
+        }
+        scalar::gemv_core(xq, &w.q, scale, out);
+    }
+
+    fn qgemm_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQMatrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm_gates_rows needs one scale per row");
+        let Some(gp) = &w.gates else {
+            // no gate panels on this weight: plain stacked sweep
+            farm_dispatch(xq, m, w, RowScales::PerRow(sx, w.scale), out);
+            return;
+        };
+        let scales = RowScales::PerRow(sx, w.scale);
+        #[cfg(target_arch = "x86_64")]
+        if runtime_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { x86::gates_avx2(xq, m, gp, scales, out) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if runtime_available() {
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { arm::gates_neon(xq, m, gp, scales, out) };
+            return;
+        }
+        blocked::qgemm_gates_core(xq, m, gp, scales, out);
+    }
 }
 
 fn farm_dispatch(
@@ -106,6 +153,7 @@ fn farm_dispatch(
 mod x86 {
     use std::arch::x86_64::*;
 
+    use crate::kernels::pack::{PackedGatePanels, KC};
     use crate::kernels::RowScales;
     use crate::tensor::{Tensor, TensorI8};
 
@@ -201,6 +249,64 @@ mod x86 {
         }
     }
 
+    /// m = 1 GEMV with AVX2 dots over the row-major reference copy (same
+    /// 4-row tiling as `scalar::gemv_core`; int8 results bit-identical).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemv_avx2(xq: &[i8], wq: &TensorI8, scale: f32, out: &mut Tensor) {
+        let (n, k) = (wq.rows(), wq.cols());
+        assert_eq!(xq.len(), k, "gemv takes exactly one activation row");
+        out.reset(&[1, n]);
+        let orow = out.row_mut(0);
+        let mut j = 0;
+        while j + 4 <= n {
+            orow[j] = dot_i8_avx2(xq, wq.row(j)) as f32 * scale;
+            orow[j + 1] = dot_i8_avx2(xq, wq.row(j + 1)) as f32 * scale;
+            orow[j + 2] = dot_i8_avx2(xq, wq.row(j + 2)) as f32 * scale;
+            orow[j + 3] = dot_i8_avx2(xq, wq.row(j + 3)) as f32 * scale;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot_i8_avx2(xq, wq.row(j)) as f32 * scale;
+            j += 1;
+        }
+    }
+
+    /// Fused GRU-gate sweep over gate-interleaved panels with AVX2 dots
+    /// (same schedule as `blocked::qgemm_gates_core`; bit-identical).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gates_avx2(
+        xq: &[i8],
+        m: usize,
+        gp: &PackedGatePanels,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (h, k) = (gp.h(), gp.k());
+        assert_eq!(xq.len(), m * k, "fused-gate activation panel mismatch");
+        out.reset(&[m, 3 * h]);
+        let nstrips = gp.nstrips();
+        for j in 0..h {
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let (mut az, mut ar, mut ac) = (0i32, 0, 0);
+                for s in 0..nstrips {
+                    let k0 = s * KC;
+                    let kc = gp.strip_cols(s);
+                    let block = gp.block(s, j);
+                    let xs = &xi[k0..k0 + kc];
+                    az += dot_i8_avx2(xs, &block[..kc]);
+                    ar += dot_i8_avx2(xs, &block[kc..2 * kc]);
+                    ac += dot_i8_avx2(xs, &block[2 * kc..]);
+                }
+                let scale = scales.get(i);
+                let orow = out.row_mut(i);
+                orow[j] = az as f32 * scale;
+                orow[h + j] = ar as f32 * scale;
+                orow[2 * h + j] = ac as f32 * scale;
+            }
+        }
+    }
+
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_f32_avx2(
         x: &Tensor,
@@ -231,6 +337,7 @@ mod x86 {
 mod arm {
     use std::arch::aarch64::*;
 
+    use crate::kernels::pack::{PackedGatePanels, KC};
     use crate::kernels::RowScales;
     use crate::tensor::{Tensor, TensorI8};
 
@@ -316,6 +423,64 @@ mod arm {
         }
     }
 
+    /// m = 1 GEMV with NEON dots over the row-major reference copy (same
+    /// 4-row tiling as `scalar::gemv_core`; int8 results bit-identical).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemv_neon(xq: &[i8], wq: &TensorI8, scale: f32, out: &mut Tensor) {
+        let (n, k) = (wq.rows(), wq.cols());
+        assert_eq!(xq.len(), k, "gemv takes exactly one activation row");
+        out.reset(&[1, n]);
+        let orow = out.row_mut(0);
+        let mut j = 0;
+        while j + 4 <= n {
+            orow[j] = dot_i8_neon(xq, wq.row(j)) as f32 * scale;
+            orow[j + 1] = dot_i8_neon(xq, wq.row(j + 1)) as f32 * scale;
+            orow[j + 2] = dot_i8_neon(xq, wq.row(j + 2)) as f32 * scale;
+            orow[j + 3] = dot_i8_neon(xq, wq.row(j + 3)) as f32 * scale;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot_i8_neon(xq, wq.row(j)) as f32 * scale;
+            j += 1;
+        }
+    }
+
+    /// Fused GRU-gate sweep over gate-interleaved panels with NEON dots
+    /// (same schedule as `blocked::qgemm_gates_core`; bit-identical).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gates_neon(
+        xq: &[i8],
+        m: usize,
+        gp: &PackedGatePanels,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (h, k) = (gp.h(), gp.k());
+        assert_eq!(xq.len(), m * k, "fused-gate activation panel mismatch");
+        out.reset(&[m, 3 * h]);
+        let nstrips = gp.nstrips();
+        for j in 0..h {
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let (mut az, mut ar, mut ac) = (0i32, 0, 0);
+                for s in 0..nstrips {
+                    let k0 = s * KC;
+                    let kc = gp.strip_cols(s);
+                    let block = gp.block(s, j);
+                    let xs = &xi[k0..k0 + kc];
+                    az += dot_i8_neon(xs, &block[..kc]);
+                    ar += dot_i8_neon(xs, &block[kc..2 * kc]);
+                    ac += dot_i8_neon(xs, &block[2 * kc..]);
+                }
+                let scale = scales.get(i);
+                let orow = out.row_mut(i);
+                orow[j] = az as f32 * scale;
+                orow[h + j] = ar as f32 * scale;
+                orow[2 * h + j] = ac as f32 * scale;
+            }
+        }
+    }
+
     #[target_feature(enable = "neon")]
     pub(super) unsafe fn gemm_f32_neon(
         x: &Tensor,
@@ -374,6 +539,32 @@ mod tests {
             let mut rows = Tensor::zeros(&[0, 0]);
             be.qgemm_farm_rows_into(x.data(), m, &w, &sx, &mut rows);
             assert_eq!(rows, qgemm_farm_rows(&x, &wq, &sx, 0.021), "rows ({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn simd_gemv_and_fused_gates_bit_identical() {
+        // whatever path the host takes (vector or fallback), the m = 1
+        // GEMV and the fused gate sweep stay exact
+        let mut rng = Pcg64::seeded(3);
+        let be = SimdBackend;
+        for &(n, k) in &[(1usize, 1usize), (5, 7), (33, 17), (66, 320)] {
+            let x = rand_i8(1, k, &mut rng);
+            let wq = rand_i8(n, k, &mut rng);
+            let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.021 });
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemv_into(x.data(), &w, 0.013, &mut out);
+            assert_eq!(out, qgemm_ref(&x, &wq, 0.013, 0.021), "gemv ({n},{k})");
+        }
+        for &(m, h, k) in &[(1usize, 1usize, 1usize), (2, 5, 7), (3, 32, 257)] {
+            let x = rand_i8(m, k, &mut rng);
+            let wq = rand_i8(3 * h, k, &mut rng);
+            let w = PreparedQMatrix::new_with_gates(QMatrix { q: wq.clone(), scale: 0.021 });
+            assert!(w.gates.is_some(), "3h-row weight must carry gate panels");
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.002 * i as f32).collect();
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm_gates_rows_into(x.data(), m, &w, &sx, &mut out);
+            assert_eq!(out, qgemm_farm_rows(&x, &wq, &sx, 0.021), "gates ({m},{h},{k})");
         }
     }
 }

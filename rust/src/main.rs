@@ -72,6 +72,31 @@ fn backend_flag(cli: &Cli) -> Result<BackendSel> {
     cli.flag_str("backend", "auto").parse()
 }
 
+/// An `--x {on,off}` switch flag.
+fn on_off_flag(cli: &Cli, name: &str, default: bool) -> Result<bool> {
+    match cli.flag_str(name, if default { "on" } else { "off" }).as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => Err(tracenorm::Error::Config(format!(
+            "--{name} must be 'on' or 'off' (got '{other}')"
+        ))),
+    }
+}
+
+/// `--autotune {on,off}` (default on): construction-time NR/KC tile
+/// probing for the blocked packed layout.  Must run before any engine or
+/// registry is built — packing happens at construction (DESIGN.md §4).
+fn apply_autotune_flag(cli: &Cli) -> Result<()> {
+    tracenorm::kernels::autotune::set_enabled(on_off_flag(cli, "autotune", true)?);
+    Ok(())
+}
+
+/// `--fused-gates {on,off}` (default on): route the recurrent GEMM
+/// through the fused GRU-gate kernel.  Bit-identical either way.
+fn fused_gates_flag(cli: &Cli) -> Result<bool> {
+    on_off_flag(cli, "fused-gates", true)
+}
+
 fn info(cli: &Cli) -> Result<()> {
     let rt = open_runtime(cli)?;
     let m = rt.manifest();
@@ -507,12 +532,15 @@ fn transcribe_cmd(cli: &Cli) -> Result<()> {
     t.run(&mut batcher, None, None)?;
 
     let dims = ctx.rt.manifest().dims("wsj_mini")?.clone();
+    apply_autotune_flag(cli)?;
     let engine = Engine::from_params(&dims, "partial", &t.params, precision, 4)?
-        .with_backend(backend_flag(cli)?)?;
+        .with_backend(backend_flag(cli)?)?
+        .with_fused_gates(fused_gates_flag(cli)?);
     println!(
-        "\nembedded engine: {:?}, backend {}, model {} KB, {} MACs/step",
+        "\nembedded engine: {:?}, backend {}, fused gates {}, model {} KB, {} MACs/step",
         precision,
         engine.backend_name(),
+        if engine.fused_gates() { "on" } else { "off" },
         engine.model_bytes() / 1024,
         engine.macs_per_step()
     );
@@ -608,10 +636,12 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     let n = cli.flag_usize("utts", 32);
     let shards = cli.flag_usize("shards", 1);
     let ramp_utts = cli.flag_usize("ramp-utts", n / 2).min(n);
-    let reg = Registry::load_with_backend(
+    apply_autotune_flag(cli)?;
+    let reg = Registry::load_with_options(
         Path::new(dir),
         cli.flag_usize("time-batch", 4),
         backend_flag(cli)?,
+        fused_gates_flag(cli)?,
     )?;
     if !json {
         println!(
@@ -753,15 +783,18 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
             (p, dims)
         }
     };
+    apply_autotune_flag(cli)?;
     let engine = Arc::new(
         Engine::from_params(&dims, &scheme, &params, precision, time_batch)?
-            .with_backend(backend_flag(cli)?)?,
+            .with_backend(backend_flag(cli)?)?
+            .with_fused_gates(fused_gates_flag(cli)?),
     );
     if !json {
         println!(
-            "engine: {:?}, backend {}, model {} KB, {shards} shard(s) x pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
+            "engine: {:?}, backend {}, fused gates {}, model {} KB, {shards} shard(s) x pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
             precision,
             engine.backend_name(),
+            if engine.fused_gates() { "on" } else { "off" },
             engine.model_bytes() / 1024
         );
     }

@@ -152,6 +152,20 @@ impl Registry {
         time_batch: usize,
         backend: BackendSel,
     ) -> Result<Registry> {
+        Registry::load_with_options(dir, time_batch, backend, true)
+    }
+
+    /// [`Registry::load_with_backend`] plus the fused GRU-gate switch
+    /// (`--fused-gates` on the CLI): every rung's engine routes its
+    /// recurrent GEMM through the gate-interleaved fused kernel when
+    /// `fused` is set (decoding is bit-identical either way).  Gate
+    /// panels are built here at load alongside the blocked packing.
+    pub fn load_with_options(
+        dir: &Path,
+        time_batch: usize,
+        backend: BackendSel,
+        fused: bool,
+    ) -> Result<Registry> {
         let manifest_path = dir.join(LADDER_MANIFEST);
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
             Error::Checkpoint(format!("cannot read {}: {e}", manifest_path.display()))
@@ -192,6 +206,7 @@ impl Registry {
             let mut engine =
                 Engine::from_entries(dims.as_ref().unwrap(), &art.entries, time_batch)?;
             engine.set_backend(backend)?;
+            engine.set_fused_gates(fused);
             variants.push(Variant { info, engine: Arc::new(engine) });
         }
         variants.sort_by(|a, b| {

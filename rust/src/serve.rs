@@ -111,6 +111,8 @@ pub struct StreamServeReport {
     pub shards: usize,
     /// GEMM backend the engine executed on (after `auto` resolution)
     pub backend: &'static str,
+    /// whether the recurrent GEMM routed through the fused gate kernel
+    pub fused_gates: bool,
     /// completed sessions per simulated second
     pub throughput: f64,
     /// arrival → final-transcript latency across all sessions
@@ -145,6 +147,7 @@ impl StreamServeReport {
             ("pool_size", Json::num(self.pool_size as f64)),
             ("shards", Json::num(self.shards as f64)),
             ("backend", Json::str(self.backend)),
+            ("fused_gates", Json::Bool(self.fused_gates)),
             ("throughput", Json::num(self.throughput)),
             ("busy_secs", Json::num(self.busy_secs)),
             ("span_secs", Json::num(self.span_secs)),
@@ -193,6 +196,7 @@ pub fn stream_serve(
     }
     let shards = cfg.shards;
     let backend = engine.backend_name();
+    let fused_gates = engine.fused_gates();
     let arrivals = sharded_arrivals(utts.len(), shards, cfg.arrival_rate, cfg.seed);
     let engines = [engine];
 
@@ -289,6 +293,7 @@ pub fn stream_serve(
             pool_size: cfg.pool_size,
             shards,
             backend,
+            fused_gates,
             throughput: utts.len() as f64 / span.max(1e-9),
             session_latency: all_lat.summary(),
             occupancy: all_occ,
@@ -382,6 +387,9 @@ pub struct LadderServeReport {
     pub shards: usize,
     /// GEMM backend every tier's engine executed on
     pub backend: &'static str,
+    /// whether tier engines routed the recurrent GEMM through the fused
+    /// gate kernel
+    pub fused_gates: bool,
     pub tiers: Vec<TierReport>,
     /// per-shard latency/occupancy slices (across that shard's tiers)
     pub per_shard: Vec<ShardSlice>,
@@ -422,6 +430,7 @@ impl LadderServeReport {
             ("pool_size", Json::num(self.pool_size as f64)),
             ("shards", Json::num(self.shards as f64)),
             ("backend", Json::str(self.backend)),
+            ("fused_gates", Json::Bool(self.fused_gates)),
             ("throughput", Json::num(self.throughput)),
             ("busy_secs", Json::num(self.busy_secs)),
             ("span_secs", Json::num(self.span_secs)),
@@ -493,6 +502,7 @@ pub fn ladder_serve(
 
     let engines = registry.engines();
     let backend = registry.tier(0).engine.backend_name();
+    let fused_gates = registry.tier(0).engine.fused_gates();
 
     run_sharded(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, |links| {
         let mut queue: VecDeque<usize> = VecDeque::new();
@@ -624,6 +634,7 @@ pub fn ladder_serve(
             pool_size: cfg.pool_size,
             shards,
             backend,
+            fused_gates,
             tiers: tiers_report,
             per_shard,
             downshifts: ctls.iter().map(|c| c.downshifts).sum(),

@@ -7,7 +7,11 @@
 //! GRU recurrent steps into one batch-m [`crate::kernels::qgemm_farm_rows`]
 //! (or [`crate::kernels::gemm_f32`]) call per layer per timestep, so the
 //! big recurrent weight matrix streams through cache once for all m
-//! streams instead of once per stream.
+//! streams instead of once per stream.  Because the pool drives the same
+//! `rec_gates` primitive as the single-stream engine, it inherits the
+//! small-batch specializations for free: the fused GRU-gate kernel over
+//! gate-interleaved panels ([`Engine::set_fused_gates`], on by default)
+//! and, when only one stream is live, the dedicated m = 1 GEMV path.
 //!
 //! Correctness contract: pooled decoding is **bit-identical** to running
 //! each session alone through [`Engine::transcribe`].  This holds because

@@ -93,6 +93,45 @@ fn engine_steady_state_block_loop_is_alloc_free() {
 }
 
 #[test]
+fn gemv_and_fused_paths_are_alloc_free_and_probe_free() {
+    // time_batch = 1 keeps every activation batch at m = 1, so the block
+    // loop exercises exactly the new small-batch paths: the m = 1 GEMV
+    // dispatch on the non-recurrent / head GEMMs and the fused GRU-gate
+    // kernel on the recurrent path (fused is the default).  Both must be
+    // silent under the counting allocator once warm, and autotune probes
+    // are construction-only: the probe counter must not move during
+    // decode.
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 9);
+    let eng = Engine::from_params(&dims, "partial", &params, Precision::Int8, 1).unwrap();
+    assert!(eng.fused_gates(), "fused gates must default on");
+    let block = eng.block_raw_len();
+    let mut rng = Pcg64::seeded(10);
+    let frames = Tensor::randn(&[2 * block / dims.feat_dim, dims.feat_dim], 0.7, &mut rng);
+    let mut state = eng.new_state();
+    let mut bd = Breakdown::default();
+
+    // warmup sizes the arena
+    eng.stream(&mut state, frames.data(), &mut bd).unwrap();
+    assert_eq!(state.buffered_len(), 0);
+
+    let probes_before = tracenorm::kernels::autotune::probe_count();
+    let hits = count_allocs(|| {
+        for _ in 0..5 {
+            eng.buffer_frames(&mut state, &frames.data()[..block], &mut bd);
+            assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+        }
+    });
+    assert_eq!(hits, 0, "gemv/fused steady-state loop allocated {hits} times");
+    assert_eq!(state.scratch_grow_events(), 0);
+    assert_eq!(
+        tracenorm::kernels::autotune::probe_count(),
+        probes_before,
+        "autotune probed during steady-state decode (must be construction-only)"
+    );
+}
+
+#[test]
 fn pool_per_timestep_loop_reuses_the_arena() {
     // The pool's poll API hands out owned rows, so a pump round is not
     // literally zero-alloc at the API boundary — but the per-timestep

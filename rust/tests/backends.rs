@@ -83,6 +83,89 @@ fn int8_farm_rows_bit_identical_to_batch1_calls() {
 }
 
 #[test]
+fn int8_gemv_bit_identical_to_batch1_farm() {
+    // the dedicated m = 1 GEMV entry point, per backend: same bits as
+    // the batch-1 farm call and the reference, across ragged n/k
+    // (including k < 8 and every n mod 4 residue in the grid)
+    let mut rng = Pcg64::seeded(4);
+    for (m, n, k) in parity_shapes() {
+        if m != 1 {
+            continue;
+        }
+        let x = rand_i8(1, k, &mut rng);
+        let wq = rand_i8(n, k, &mut rng);
+        let w = PreparedQMatrix::new(QMatrix { q: wq.clone(), scale: 0.021 });
+        let want = qgemm_ref(&x, &wq, 0.013, 0.021);
+        for (_, be) in all_backends() {
+            let mut gemv = Tensor::zeros(&[0, 0]);
+            be.qgemv_into(x.data(), &w, 0.013, &mut gemv);
+            assert_eq!(gemv, want, "{} qgemv_into ({n},{k})", be.name());
+
+            let mut farm = Tensor::zeros(&[0, 0]);
+            be.qgemm_farm_into(x.data(), 1, &w, 0.013, &mut farm);
+            assert_eq!(gemv, farm, "{} gemv vs batch-1 farm ({n},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn fused_gates_bit_identical_to_three_separate_gemms() {
+    // the fused kernel's contract, stated the way the GRU uses it: the
+    // (m, 3H) fused result equals three independent per-gate GEMMs
+    // against the z / r / h̃ row slices of the stacked weight
+    let mut rng = Pcg64::seeded(5);
+    for &(m, h, k) in &[
+        (1usize, 1usize, 1usize),
+        (1, 5, 7), // k < 8 tail
+        (2, 7, 5),
+        (3, 33, 31),
+        (4, 64, 257), // k straddles the KC=256 strip boundary
+        (8, 32, 100),
+    ] {
+        let x = rand_i8(m, k, &mut rng);
+        let wq = rand_i8(3 * h, k, &mut rng);
+        let w = PreparedQMatrix::new_with_gates(QMatrix { q: wq.clone(), scale: 0.021 });
+        assert!(w.gates.is_some(), "(3·{h}, {k}) weight must carry gate panels");
+        let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+
+        // three separate per-gate reference GEMMs over the row slices
+        let gate_slice = |g: usize| {
+            let rows: Vec<i8> =
+                (g * h..(g + 1) * h).flat_map(|j| wq.row(j).iter().copied()).collect();
+            TensorI8::new(&[h, k], rows).unwrap()
+        };
+        let per_gate: Vec<Tensor> = (0..3)
+            .map(|g| {
+                let wg = gate_slice(g);
+                let mut want = Tensor::zeros(&[m, h]);
+                for i in 0..m {
+                    let xi = TensorI8::new(&[1, k], x.row(i).to_vec()).unwrap();
+                    let row = qgemm_ref(&xi, &wg, sx[i], 0.021);
+                    want.row_mut(i).copy_from_slice(row.row(0));
+                }
+                want
+            })
+            .collect();
+
+        for (_, be) in all_backends() {
+            let mut fused = Tensor::zeros(&[0, 0]);
+            be.qgemm_gates_rows_into(x.data(), m, &w, &sx, &mut fused);
+            assert_eq!(fused.shape(), &[m, 3 * h], "{} fused shape", be.name());
+            for i in 0..m {
+                for g in 0..3 {
+                    assert_eq!(
+                        &fused.row(i)[g * h..(g + 1) * h],
+                        per_gate[g].row(i),
+                        "{} gate {g} row {i} of ({m},{h},{k})",
+                        be.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn f32_backends_within_1e5_of_scalar() {
     let mut rng = Pcg64::seeded(3);
     for &(m, n, k) in &[(1usize, 7usize, 5usize), (2, 33, 64), (4, 65, 257), (8, 96, 320)] {
@@ -164,6 +247,60 @@ fn pooled_decoding_bit_identical_under_every_backend() {
             let closed = pool.close(*id, &mut bd).unwrap();
             assert_eq!(closed.transcript, solos[i].0, "{sel} pooled transcript {i}");
             assert_eq!(closed.logprob_rows, solos[i].1, "{sel} pooled rows {i}");
+        }
+    }
+}
+
+#[test]
+fn fused_gates_switch_is_bit_identical_end_to_end() {
+    // --fused-gates on/off is a performance switch, not an accuracy
+    // knob: identical transcripts and log-prob rows under every backend,
+    // for both single-stream and pooled decoding
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 21);
+    let mut rng = Pcg64::seeded(22);
+    let feats = Tensor::randn(&[48, dims.feat_dim], 0.7, &mut rng);
+    let utts: Vec<Tensor> =
+        (0..3).map(|_| Tensor::randn(&[32, dims.feat_dim], 0.6, &mut rng)).collect();
+
+    for (sel, _) in all_backends() {
+        let mk = |fused: bool| {
+            Engine::from_params(&dims, "partial", &params, Precision::Int8, 4)
+                .unwrap()
+                .with_backend(sel)
+                .unwrap()
+                .with_fused_gates(fused)
+        };
+        let on = mk(true);
+        let off = mk(false);
+        assert!(on.fused_gates() && !off.fused_gates());
+
+        let mut bd = Breakdown::default();
+        let (t_on, r_on) = on.transcribe(&feats, &mut bd).unwrap();
+        let (t_off, r_off) = off.transcribe(&feats, &mut bd).unwrap();
+        assert_eq!(t_on, t_off, "{sel} fused on/off transcript");
+        assert_eq!(r_on, r_off, "{sel} fused on/off log-prob rows");
+
+        // pooled decoding with the fused engine vs solo with the plain one
+        let eng = std::sync::Arc::new(mk(true));
+        let solos: Vec<(String, Vec<Vec<f32>>)> = utts
+            .iter()
+            .map(|u| {
+                let mut bd = Breakdown::default();
+                off.transcribe(u, &mut bd).unwrap()
+            })
+            .collect();
+        let mut pool = StreamPool::new(eng, 3);
+        let ids: Vec<_> = (0..3).map(|_| pool.open().unwrap()).collect();
+        let mut bd = Breakdown::default();
+        for (id, u) in ids.iter().zip(&utts) {
+            pool.push_frames(*id, u.data()).unwrap();
+        }
+        pool.pump(&mut bd).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let closed = pool.close(*id, &mut bd).unwrap();
+            assert_eq!(closed.transcript, solos[i].0, "{sel} fused pooled transcript {i}");
+            assert_eq!(closed.logprob_rows, solos[i].1, "{sel} fused pooled rows {i}");
         }
     }
 }

@@ -4,7 +4,7 @@ use tracenorm::data::{labels_to_text, text_to_labels, CorpusSpec, Dataset};
 use tracenorm::jsonx::Json;
 use tracenorm::kernels::{
     all_backends, gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, GemmBackend,
-    PackedQMatrix, PreparedQMatrix, KC, NR,
+    PackedGatePanels, PackedQMatrix, PreparedQMatrix, KC, NR,
 };
 use tracenorm::linalg::{nu_from_singular_values, svd};
 use tracenorm::model::{magnitude_masks, mask_density, ParamSet};
@@ -138,6 +138,68 @@ fn prop_packed_qmatrix_roundtrip_lossless() {
             TensorI8::new(&[n, k], data).unwrap()
         },
         |w| PackedQMatrix::pack(w).unpack() == *w,
+    );
+}
+
+#[test]
+fn prop_gate_panels_roundtrip_lossless() {
+    // the gate-interleaved [z|r|h̃] layout must be exact for every
+    // stacked (3H, k) gate shape: H = 1, k < 8 tails, the KC strip
+    // boundary ±, multi-strip, and generic ragged sizes
+    check(
+        "gate-panels-roundtrip",
+        80,
+        |rng, size| {
+            let h = 1 + rng.below(size * 4 + 4);
+            let k = match rng.below(4) {
+                0 => 1 + rng.below(7),              // k < 8
+                1 => KC - 3 + rng.below(7),         // straddles KC
+                2 => 2 * KC - 2 + rng.below(5),     // multi-strip tail
+                _ => 1 + rng.below(size * 16 + 16), // generic ragged
+            };
+            let data: Vec<i8> =
+                (0..3 * h * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            TensorI8::new(&[3 * h, k], data).unwrap()
+        },
+        |w| PackedGatePanels::pack(w).unpack() == *w,
+    );
+}
+
+#[test]
+fn prop_fused_gates_bit_identical_across_backends() {
+    // fused-gate parity as a property: for random stacked gate shapes
+    // and per-row scales, every backend's fused entry point reproduces
+    // the plain stacked per-row sweep bit for bit
+    check(
+        "fused-gates-parity",
+        20,
+        |rng, size| {
+            let m = 1 + rng.below(8);
+            let h = 1 + rng.below(size * 4 + 4);
+            let k = 1 + rng.below(size * 16 + 8);
+            let mk = |rng: &mut Pcg64, r: usize, c: usize| {
+                TensorI8::new(
+                    &[r, c],
+                    (0..r * c).map(|_| (rng.below(255) as i32 - 127) as i8).collect(),
+                )
+                .unwrap()
+            };
+            let x = mk(rng, m, k);
+            let w = mk(rng, 3 * h, k);
+            let sx: Vec<f32> = (0..m).map(|_| 0.002 + rng.uniform() as f32 * 0.02).collect();
+            (x, w, sx)
+        },
+        |(x, w, sx)| {
+            let m = x.rows();
+            let prepped = PreparedQMatrix::new_with_gates(QMatrix { q: w.clone(), scale: 0.019 });
+            let want = qgemm_farm_rows(x, w, sx, 0.019);
+            prepped.gates.is_some()
+                && all_backends().iter().all(|(_, be)| {
+                    let mut out = Tensor::zeros(&[0, 0]);
+                    be.qgemm_gates_rows_into(x.data(), m, &prepped, sx, &mut out);
+                    out == want
+                })
+        },
     );
 }
 

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Tolerance gate for the GEMM bench sweep.
+
+Usage: bench_gate.py BASELINE.json BENCH_gemm.json [tolerance]
+
+Compares every (backend, kind, m) row of the current sweep against the
+committed baseline.  Throughput rows (``gops``, higher is better) may not
+regress below ``(1 - tol) * baseline``; latency-style scalars whose key
+ends in ``_secs`` or ``_ms`` (lower is better) may not exceed
+``(1 + tol) * baseline``.  Improvements never fail the gate.
+
+The baseline starts life as ``{"pending": true}`` (no toolchain on the
+machine that authored it); the gate then passes with a warning so CI
+stays green until ``scripts/bench_snapshot.sh`` is run on real hardware.
+The tolerance defaults to 0.35 and can be overridden by the third
+positional argument or the ``BENCH_GATE_TOL`` environment variable
+(CI's smoke mode runs one iteration per case, so it uses a wider band).
+"""
+
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_key(report):
+    out = {}
+    for r in report.get("results", []):
+        out[(r["backend"], r["kind"], int(r["m"]))] = r
+    return out
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = argv[1], argv[2]
+    tol = float(argv[3]) if len(argv) > 3 else float(os.environ.get("BENCH_GATE_TOL", "0.35"))
+
+    try:
+        baseline = load(baseline_path)
+    except FileNotFoundError:
+        print(f"bench gate: no baseline at {baseline_path}; PASS (nothing to gate)")
+        return 0
+    if baseline.get("pending"):
+        print("bench gate: baseline is pending (run scripts/bench_snapshot.sh on real "
+              "hardware to arm the gate); PASS with warning")
+        return 0
+
+    current = load(current_path)
+    base_rows = rows_by_key(baseline)
+    cur_rows = rows_by_key(current)
+
+    failures = []
+    compared = 0
+    for key, base in sorted(base_rows.items()):
+        cur = cur_rows.get(key)
+        if cur is None:
+            failures.append(f"{key}: row missing from current sweep")
+            continue
+        compared += 1
+        b, c = base["gops"], cur["gops"]
+        if b > 0 and c < (1.0 - tol) * b:
+            failures.append(f"{key}: gops {c:.3f} < {(1.0 - tol) * b:.3f} "
+                            f"(baseline {b:.3f}, tol {tol:.0%})")
+
+    # top-level lower-is-better scalars (pack costs etc.)
+    for k, b in baseline.items():
+        if not isinstance(b, (int, float)) or isinstance(b, bool):
+            continue
+        if not (k.endswith("_secs") or k.endswith("_ms")):
+            continue
+        c = current.get(k)
+        if c is None:
+            continue
+        compared += 1
+        if b > 0 and c > (1.0 + tol) * b:
+            failures.append(f"{k}: {c:.6f} > {(1.0 + tol) * b:.6f} "
+                            f"(baseline {b:.6f}, tol {tol:.0%})")
+
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s) past the {tol:.0%} band:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"bench gate: {compared} metrics within the {tol:.0%} band; PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Snapshot the GEMM bench sweep into BENCH_BASELINE.json at the repo root.
+#
+# Run this on the hardware that CI benches on, at full iteration counts
+# (no BENCH_SMOKE), so the committed baseline reflects real steady-state
+# numbers.  scripts/bench_gate.py then fails CI when a future sweep
+# regresses past its tolerance band (default 35% relative; gops rows are
+# higher-is-better, *_secs / *_ms scalars are lower-is-better).
+#
+# Usage: scripts/bench_snapshot.sh [--features simd]
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+out="$(cd .. && pwd)/BENCH_BASELINE.json"
+tmp="$(mktemp)"
+trap 'rm -f "$tmp"' EXIT
+
+echo "==> full gemm sweep ($*)"
+BENCH_GEMM_JSON="$tmp" cargo bench --bench gemm "$@"
+
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m json.tool "$tmp" >/dev/null || { echo "sweep emitted invalid JSON"; exit 1; }
+fi
+cp "$tmp" "$out"
+echo "wrote baseline to $out"
+echo "commit it so scripts/bench_gate.py arms the CI tolerance gate"

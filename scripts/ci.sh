@@ -63,6 +63,23 @@ if command -v python3 >/dev/null 2>&1; then
     || { echo "sharded smoke: --json output is not valid JSON"; exit 1; }
 fi
 
+echo "==> fused-gates smoke: stream-serve default vs --features simd, on and off"
+# The fused GRU-gate kernel and the m=1 GEMV path are bit-identical to the
+# plain farm sweep by construction; this smoke proves the serving path runs
+# end-to-end with fusion on (default) and off, under both builds, and that
+# the report advertises the switch.
+for build in "" "--features simd"; do
+  for fused in on off; do
+    fj="$(cargo run --release -q $build -- stream-serve --utts 8 --rate 1000 \
+      --pool 2 --chunk 8 --seed 7 --fused-gates "$fused" --autotune off --json)"
+    echo "$fj" | grep -q '"kind": "stream-serve"' \
+      || { echo "fused smoke: no report (build='$build' fused=$fused)"; exit 1; }
+    want=$([ "$fused" = on ] && echo true || echo false)
+    echo "$fj" | grep -q "\"fused_gates\": $want" \
+      || { echo "fused smoke: report fused_gates != $want (build='$build')"; exit 1; }
+  done
+done
+
 echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
 cargo run --release -q -- ladder-build --out "$ldir" --fracs 0.5,0.25 --seed 7
 report="$(cargo run --release -q -- stream-serve --ladder "$ldir" --utts 10 --ramp-utts 6 \
@@ -82,11 +99,25 @@ done
 test -f BENCH_gemm.json || { echo "gemm bench did not emit BENCH_gemm.json"; exit 1; }
 grep -q '"backend": "blocked"' BENCH_gemm.json \
   || { echo "BENCH_gemm.json missing the blocked-backend sweep"; exit 1; }
+grep -q '"kind": "qgemv"' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json missing the m=1 GEMV sweep"; exit 1; }
+grep -q '"kind": "qgemm_gates"' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json missing the fused-gates sweep"; exit 1; }
 test -f BENCH_train.json || { echo "train bench did not emit BENCH_train.json"; exit 1; }
 grep -q '"kind": "ctc"' BENCH_train.json \
   || { echo "BENCH_train.json missing the CTC lattice sweep"; exit 1; }
 test -f BENCH_shard.json || { echo "shard bench did not emit BENCH_shard.json"; exit 1; }
 grep -q '"shards": 4' BENCH_shard.json \
   || { echo "BENCH_shard.json missing the 4-shard sweep row"; exit 1; }
+
+echo "==> bench tolerance gate vs BENCH_BASELINE.json"
+# Smoke-mode numbers are noisy; the gate uses a wide tolerance and is
+# advisory until a real baseline is snapshotted (scripts/bench_snapshot.sh).
+if command -v python3 >/dev/null 2>&1; then
+  python3 ../scripts/bench_gate.py ../BENCH_BASELINE.json BENCH_gemm.json \
+    || { echo "bench gate failed"; exit 1; }
+else
+  echo "python3 unavailable; skipping bench gate"
+fi
 
 echo "CI OK"
