@@ -49,6 +49,13 @@
 //!                                  --fused-gates on|off (route the
 //!                                recurrent GEMM through the fused GRU-gate
 //!                                kernel; bit-identical either way)
+//!                                  --obs on|off (flight-recorder spans,
+//!                                kernel counters and the shard event
+//!                                journal — off by default, bit-identical
+//!                                transcripts either way; DESIGN.md §10)
+//!                                  --metrics-out FILE (JSONL snapshot
+//!                                stream; also accepted by train --native
+//!                                for per-epoch snapshots)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
 //!                                synthetic load ramp, per-shard fidelity
@@ -85,8 +92,10 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro train --native [--stage two|1|2] [--epochs N] [--transition N] [--lr F]
               [--momentum F] [--clip F] [--lam-rec F] [--lam-nonrec F] [--threshold T]
               [--utts N] [--dev-utts N] [--batch N] [--seed N] [--load CKPT] [--save CKPT]
+              [--metrics-out FILE]
               (offline two-stage trace-norm training, no XLA; saves a TNCK-v2
-               train-state that ladder-build / stream-serve --load serve directly)
+               train-state that ladder-build / stream-serve --load serve directly;
+               --metrics-out writes one versioned JSONL snapshot per epoch)
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
   repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
                    [--autotune on|off] [--fused-gates on|off]
@@ -94,16 +103,20 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro stream-serve [--shards N] [--pool N] [--rate F] [--utts N] [--chunk N] [--json]
                      [--precision int8|f32] [--rank-frac F] [--time-batch N] [--scheme S]
                      [--load CKPT] [--seed N] [--backend scalar|blocked|simd|auto]
-                     [--autotune on|off] [--fused-gates on|off]
+                     [--autotune on|off] [--fused-gates on|off] [--obs on|off]
+                     [--metrics-out FILE]
                      (--shards N spreads sessions over N worker threads; --shards 1,
                       the default, is bit-identical to the unsharded serving path;
                       --autotune off pins the default NR/KC packing tiles;
                       --fused-gates off pins the plain stacked recurrent sweep —
-                      decoding is bit-identical on or off)
+                      decoding is bit-identical on or off;
+                      --obs on records stage spans, kernel counters and the shard
+                      event journal into the report, --metrics-out streams periodic
+                      JSONL snapshots — transcripts are bit-identical either way)
   repro stream-serve --ladder DIR [--shards N] [--pool N] [--utts N] [--chunk N] [--rate F]
                      [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N] [--json]
                      [--backend scalar|blocked|simd|auto] [--autotune on|off]
-                     [--fused-gates on|off]
+                     [--fused-gates on|off] [--obs on|off] [--metrics-out FILE]
                      (adaptive-fidelity serving over a built rank ladder; per-shard
                       fidelity controllers with a merged, shard-tagged shift log)
   repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]

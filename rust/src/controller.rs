@@ -228,6 +228,12 @@ impl FidelityController {
 /// Merge per-shard shift logs into one clock-ordered log — the "shared
 /// shift log" of the sharded ladder serve.  The sort is stable, so
 /// same-clock shifts keep shard order.
+///
+/// With `--obs on` the flight-recorder journal
+/// ([`crate::obs::journal`]) records the same shifts (as
+/// `downshift`/`upshift` events, interleaved with the full
+/// admission/placement/drain record) under the same stable clock-order
+/// discipline; this narrower log remains the always-on report field.
 pub fn merge_shift_logs(per_shard: &[&[ShiftEvent]]) -> Vec<ShiftEvent> {
     let mut all: Vec<ShiftEvent> = per_shard.iter().flat_map(|s| s.iter().copied()).collect();
     all.sort_by(|a, b| a.clock.total_cmp(&b.clock));

@@ -50,6 +50,7 @@ use crate::decoder;
 use crate::error::{Error, Result};
 use crate::kernels::{self, BackendSel, GemmBackend, PreparedQMatrix};
 use crate::model::ParamSet;
+use crate::obs::{self, OpKind, SpanSet, Stage};
 use crate::quant::{quantize, quantize_into};
 use crate::runtime::ModelDims;
 use crate::tensor::Tensor;
@@ -67,6 +68,50 @@ pub enum Precision {
 enum QDense {
     F32(Tensor),
     I8(PreparedQMatrix),
+}
+
+/// Run one backend kernel call under the obs kernel counters: op kind,
+/// m-bucket, MACs/bytes from [`kernels::farm_counts`], and the kernel's
+/// wall nanos.  With obs off this is the single relaxed load and the
+/// call itself — nothing else (DESIGN.md §10 overhead budget).
+#[inline]
+fn kernel_obs<R>(
+    be: &dyn GemmBackend,
+    kind: OpKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    f: impl FnOnce() -> R,
+) -> R {
+    if !obs::enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let r = f();
+    let c = kernels::farm_counts(m, n, k);
+    obs::counters::record(
+        be.name(),
+        kind,
+        m,
+        c.macs,
+        c.bytes_read + c.bytes_written,
+        t0.elapsed().as_nanos() as u64,
+    );
+    r
+}
+
+/// Time activation quantization into the thread-local pending cell the
+/// enclosing stage drains ([`obs::spans::take_pending_quantize`]), so
+/// quantize self-time is attributed exactly once.
+#[inline]
+fn quant_obs<R>(f: impl FnOnce() -> R) -> R {
+    if !obs::enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let r = f();
+    obs::spans::add_pending_quantize(t0.elapsed().as_secs_f64());
+    r
 }
 
 impl QDense {
@@ -130,20 +175,27 @@ impl QDense {
         out: &mut Tensor,
     ) {
         match self {
-            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
+            QDense::F32(w) => {
+                let (m, k) = (x.rows(), x.cols());
+                kernel_obs(be, OpKind::F32, m, w.rows(), k, || be.gemm_f32_into(x, w, None, out))
+            }
             QDense::I8(qw) => {
                 let (m, k) = (x.rows(), x.cols());
                 qs.xq.resize(m * k, 0);
                 // per-row dynamic quantization would be more accurate; the
                 // paper (and farm) use per-call scales — do the same.
-                let sx = quantize_into(x.data(), &mut qs.xq[..m * k]);
+                let sx = quant_obs(|| quantize_into(x.data(), &mut qs.xq[..m * k]));
                 if m == 1 {
                     // steady-state decode shape: the GEMV path (per-call
                     // and per-row scales coincide at m = 1, so this is
                     // bit-identical to the batch call)
-                    be.qgemv_into(&qs.xq[..k], qw, sx, out);
+                    kernel_obs(be, OpKind::Gemv, 1, qw.n(), k, || {
+                        be.qgemv_into(&qs.xq[..k], qw, sx, out)
+                    });
                 } else {
-                    be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out);
+                    kernel_obs(be, OpKind::Gemm, m, qw.n(), k, || {
+                        be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out)
+                    });
                 }
             }
         }
@@ -162,20 +214,29 @@ impl QDense {
         out: &mut Tensor,
     ) {
         match self {
-            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
+            QDense::F32(w) => {
+                let (m, k) = (x.rows(), x.cols());
+                kernel_obs(be, OpKind::F32, m, w.rows(), k, || be.gemm_f32_into(x, w, None, out))
+            }
             QDense::I8(qw) => {
                 let (m, k) = (x.rows(), x.cols());
                 qs.xq.resize(m * k, 0);
                 qs.sx.resize(m, 0.0);
-                for i in 0..m {
-                    qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
-                }
+                quant_obs(|| {
+                    for i in 0..m {
+                        qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
+                    }
+                });
                 if m == 1 {
                     // single stream: `sx[0] · w.scale` is the exact same
                     // f32 product the per-row path computes → bit-identical
-                    be.qgemv_into(&qs.xq[..k], qw, qs.sx[0], out);
+                    kernel_obs(be, OpKind::Gemv, 1, qw.n(), k, || {
+                        be.qgemv_into(&qs.xq[..k], qw, qs.sx[0], out)
+                    });
                 } else {
-                    be.qgemm_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
+                    kernel_obs(be, OpKind::Gemm, m, qw.n(), k, || {
+                        be.qgemm_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out)
+                    });
                 }
             }
         }
@@ -193,15 +254,22 @@ impl QDense {
         out: &mut Tensor,
     ) {
         match self {
-            QDense::F32(w) => be.gemm_f32_into(x, w, None, out),
+            QDense::F32(w) => {
+                let (m, k) = (x.rows(), x.cols());
+                kernel_obs(be, OpKind::F32, m, w.rows(), k, || be.gemm_f32_into(x, w, None, out))
+            }
             QDense::I8(qw) => {
                 let (m, k) = (x.rows(), x.cols());
                 qs.xq.resize(m * k, 0);
                 qs.sx.resize(m, 0.0);
-                for i in 0..m {
-                    qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
-                }
-                be.qgemm_gates_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out);
+                quant_obs(|| {
+                    for i in 0..m {
+                        qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
+                    }
+                });
+                kernel_obs(be, OpKind::FusedGates, m, qw.n(), k, || {
+                    be.qgemm_gates_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out)
+                });
             }
         }
     }
@@ -415,6 +483,13 @@ pub struct Breakdown {
     /// frames of audio processed (raw, pre-frontend)
     pub frames: u64,
     pub macs: u64,
+    /// Observability self-time spans (DESIGN.md §10).  Empty unless
+    /// `--obs on`: the legacy component fields above always accumulate
+    /// (they are load-bearing for reports and the controller), while
+    /// the spans add the finer self-time taxonomy — quantize time is
+    /// *subtracted* from its enclosing stage here so the span sum
+    /// equals wall time without double counting.
+    pub spans: SpanSet,
 }
 
 impl Breakdown {
@@ -432,6 +507,7 @@ impl Breakdown {
         self.fc_out += o.fc_out;
         self.frames += o.frames;
         self.macs += o.macs;
+        self.spans.absorb(&o.spans);
     }
 
     /// Real-time factor given a frame hop (seconds of audio per frame).
@@ -972,7 +1048,13 @@ impl Engine {
             }
             std::mem::swap(a, b);
         }
-        bd.frontend += t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed().as_secs_f64();
+        bd.frontend += dt;
+        if obs::enabled() {
+            let q = obs::spans::take_pending_quantize();
+            bd.spans.add(Stage::Quantize, q);
+            bd.spans.add(Stage::Frontend, (dt - q).max(0.0));
+        }
     }
 
     /// Non-recurrent GEMM + bias for GRU layer `li`, batched across the
@@ -997,7 +1079,13 @@ impl Engine {
                 *v += b;
             }
         }
-        bd.nonrec += t0.elapsed().as_secs_f64();
+        let dt = t0.elapsed().as_secs_f64();
+        bd.nonrec += dt;
+        if obs::enabled() {
+            let q = obs::spans::take_pending_quantize();
+            bd.spans.add(Stage::Quantize, q);
+            bd.spans.add(Stage::Nonrec, (dt - q).max(0.0));
+        }
     }
 
     /// One recurrent GEMM for layer `li` over `h` = (m, H) — the m rows
@@ -1020,7 +1108,13 @@ impl Engine {
             g.rec.apply_rows_into(self.backend, h, qs, mid, gh);
         }
         bd.macs += g.rec.macs(h.rows());
-        bd.rec += t1.elapsed().as_secs_f64();
+        let dt = t1.elapsed().as_secs_f64();
+        bd.rec += dt;
+        if obs::enabled() {
+            let q = obs::spans::take_pending_quantize();
+            bd.spans.add(Stage::Quantize, q);
+            bd.spans.add(Stage::RecGates, (dt - q).max(0.0));
+        }
     }
 
     /// FC + output projection + in-place log-softmax over the block's GRU
@@ -1053,7 +1147,13 @@ impl Engine {
             }
             log_softmax_in_place(r);
         }
-        bd.fc_out += t3.elapsed().as_secs_f64();
+        let dt = t3.elapsed().as_secs_f64();
+        bd.fc_out += dt;
+        if obs::enabled() {
+            let q = obs::spans::take_pending_quantize();
+            bd.spans.add(Stage::Quantize, q);
+            bd.spans.add(Stage::Head, (dt - q).max(0.0));
+        }
     }
 
     /// The block executor: run the staged primitives over the chunk
@@ -1080,7 +1180,11 @@ impl Engine {
                 gru_cell(gx.row(step), gh.row(0), h[li].data(), b.row_mut(step));
                 // in-place hidden update — no per-step Tensor allocation
                 h[li].data_mut().copy_from_slice(b.row(step));
-                bd.gates += t2.elapsed().as_secs_f64();
+                let dt = t2.elapsed().as_secs_f64();
+                bd.gates += dt;
+                if obs::enabled() {
+                    bd.spans.add(Stage::GruCell, dt);
+                }
             }
             std::mem::swap(a, b);
         }

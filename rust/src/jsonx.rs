@@ -20,6 +20,12 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+impl Default for Json {
+    fn default() -> Self {
+        Json::Null
+    }
+}
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
@@ -112,6 +118,52 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s, 0);
         s
+    }
+
+    /// Serialize on a single line (no whitespace, stable key order) — the
+    /// JSONL form used by the `--metrics-out` exporter, where one document
+    /// per line is the contract.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -419,6 +471,18 @@ mod tests {
         let text = v.to_string_pretty();
         let v2 = Json::parse(&text).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let src = r#"{"arr": [1, 2.5, "s"], "b": true, "n": null, "o": {"k": -3}, "e": {}, "ea": []}"#;
+        let v = Json::parse(src).unwrap();
+        let line = v.to_string_compact();
+        assert!(!line.contains('\n'), "compact form must stay on one line: {line}");
+        assert!(!line.contains(": "), "compact form carries no separator spaces");
+        assert_eq!(Json::parse(&line).unwrap(), v);
+        assert_eq!(Json::obj(vec![]).to_string_compact(), "{}");
+        assert_eq!(Json::Arr(vec![]).to_string_compact(), "[]");
     }
 
     #[test]

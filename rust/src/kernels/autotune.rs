@@ -106,6 +106,18 @@ pub fn choose(n: usize, k: usize) -> (usize, usize) {
 /// ever runs at plan time.
 fn probe(n: usize, k: usize) -> (usize, usize) {
     PROBES.fetch_add(1, Ordering::Relaxed);
+    let obs_t0 = Instant::now();
+    let best = probe_timed(n, k);
+    if crate::obs::enabled() {
+        crate::obs::spans::record_global(
+            crate::obs::Stage::Autotune,
+            obs_t0.elapsed().as_secs_f64(),
+        );
+    }
+    best
+}
+
+fn probe_timed(n: usize, k: usize) -> (usize, usize) {
     let wq = TensorI8::new(
         &[n, k],
         (0..n * k).map(|i| ((i * 37 + 11) % 251) as i32 - 125).map(|v| v as i8).collect(),

@@ -172,10 +172,16 @@ pub struct PreparedQMatrix {
 
 impl PreparedQMatrix {
     /// Prepare a quantized matrix for every backend (packs once; the
-    /// blocked tile shape comes from the autotune cache).
+    /// blocked tile shape comes from the autotune cache).  Pack time is
+    /// plan time by construction, so with obs on it lands in the global
+    /// `Stage::Pack` span, never a per-stream decode span.
     pub fn new(q: QMatrix) -> PreparedQMatrix {
         let (nr, kc) = autotune::choose(q.q.rows(), q.q.cols());
+        let t0 = std::time::Instant::now();
         let packed = PackedQMatrix::pack_with(&q.q, nr, kc);
+        if crate::obs::enabled() {
+            crate::obs::spans::record_global(crate::obs::Stage::Pack, t0.elapsed().as_secs_f64());
+        }
         PreparedQMatrix { q: q.q, scale: q.scale, packed, gates: None }
     }
 
@@ -187,7 +193,14 @@ impl PreparedQMatrix {
     pub fn new_with_gates(q: QMatrix) -> PreparedQMatrix {
         let mut p = PreparedQMatrix::new(q);
         if p.q.rows() > 0 && p.q.rows() % 3 == 0 {
+            let t0 = std::time::Instant::now();
             p.gates = Some(PackedGatePanels::pack(&p.q));
+            if crate::obs::enabled() {
+                crate::obs::spans::record_global(
+                    crate::obs::Stage::Pack,
+                    t0.elapsed().as_secs_f64(),
+                );
+            }
         }
         p
     }

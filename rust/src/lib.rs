@@ -36,6 +36,7 @@ pub mod linalg;
 pub mod lm;
 pub mod metricsx;
 pub mod model;
+pub mod obs;
 pub mod prng;
 pub mod proplite;
 pub mod quant;

@@ -15,8 +15,10 @@ use tracenorm::data::{Batcher, CorpusSpec, Dataset};
 use tracenorm::error::Result;
 use tracenorm::experiments;
 use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::jsonx::Json;
 use tracenorm::kernels::BackendSel;
 use tracenorm::model::ParamSet;
+use tracenorm::obs::MetricsExporter;
 use tracenorm::registry::{ladder_build, Registry};
 use tracenorm::runtime::{BatchGeom, ModelDims, Runtime};
 use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
@@ -95,6 +97,25 @@ fn apply_autotune_flag(cli: &Cli) -> Result<()> {
 /// through the fused GRU-gate kernel.  Bit-identical either way.
 fn fused_gates_flag(cli: &Cli) -> Result<bool> {
     on_off_flag(cli, "fused-gates", true)
+}
+
+/// `--obs {on,off}` (default off): the flight-recorder observability
+/// layer (DESIGN.md §10).  Like `--autotune`, must run before engines
+/// are built so plan-time spans (pack, autotune, quantize) are captured.
+fn apply_obs_flag(cli: &Cli) -> Result<()> {
+    tracenorm::obs::set_enabled(on_off_flag(cli, "obs", false)?);
+    Ok(())
+}
+
+/// `--metrics-out FILE`: JSONL snapshot destination for the serve loops
+/// and native training (None when the flag is absent).
+fn metrics_out_flag(cli: &Cli) -> Option<String> {
+    let path = cli.flag_str("metrics-out", "");
+    if path.is_empty() {
+        None
+    } else {
+        Some(path)
+    }
 }
 
 fn info(cli: &Cli) -> Result<()> {
@@ -411,6 +432,32 @@ fn native_train_cmd(cli: &Cli) -> Result<()> {
         }
     };
 
+    // `--metrics-out FILE`: one versioned JSONL snapshot per final-stage
+    // epoch (same envelope as the serve exporters, kind "train-epoch")
+    if let Some(path) = metrics_out_flag(cli) {
+        let mut ex = MetricsExporter::create(&path)?;
+        for e in &trainer.history {
+            ex.write_snapshot(
+                "train-epoch",
+                e.epoch as f64,
+                vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("mean_loss", Json::num(e.mean_loss)),
+                    ("mean_ctc", Json::num(e.mean_ctc)),
+                    ("lr", Json::num(e.lr as f64)),
+                    (
+                        "dev_cer",
+                        match e.dev_cer {
+                            Some(c) => Json::num(c),
+                            None => Json::Null,
+                        },
+                    ),
+                ],
+            )?;
+        }
+        println!("wrote {} epoch snapshots to {path}", trainer.history.len());
+    }
+
     let stats = eval.greedy_cer(&trainer.params, &data.test)?;
     println!(
         "final: params {}  test CER {:.3}  WER {:.3}",
@@ -637,6 +684,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     let shards = cli.flag_usize("shards", 1);
     let ramp_utts = cli.flag_usize("ramp-utts", n / 2).min(n);
     apply_autotune_flag(cli)?;
+    apply_obs_flag(cli)?;
     let reg = Registry::load_with_options(
         Path::new(dir),
         cli.flag_usize("time-batch", 4),
@@ -672,6 +720,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             target_p99: cli.flag_f64("target-p99-ms", 250.0) / 1e3,
             ..ControllerConfig::default()
         },
+        metrics_out: metrics_out_flag(cli),
     };
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
     let r = ladder_serve(&reg, &data.test, &cfg)?;
@@ -730,6 +779,9 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             );
         }
     }
+    if let Some(o) = &r.obs {
+        println!("\n{}", o.self_time_table());
+    }
     Ok(())
 }
 
@@ -784,6 +836,7 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         }
     };
     apply_autotune_flag(cli)?;
+    apply_obs_flag(cli)?;
     let engine = Arc::new(
         Engine::from_params(&dims, &scheme, &params, precision, time_batch)?
             .with_backend(backend_flag(cli)?)?
@@ -806,6 +859,7 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         chunk_frames: chunk,
         shards,
         seed,
+        metrics_out: metrics_out_flag(cli),
     };
     let r = stream_serve(engine, &data.test, &cfg)?;
 
@@ -852,6 +906,9 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         r.breakdown.frames as f64 * 0.01,
         r.breakdown.speedup_over_realtime(0.01)
     );
+    if let Some(o) = &r.obs {
+        println!("\n{}", o.self_time_table());
+    }
     println!("\nsample transcripts (hyp vs ref):");
     for (reference, hyp) in r.transcripts.iter().take(5) {
         println!("  ref: {reference:<20} hyp: {hyp}");

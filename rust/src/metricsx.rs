@@ -339,6 +339,24 @@ mod tests {
     }
 
     #[test]
+    fn percentile_cache_invalidates_on_record_and_merge() {
+        // the sort is cached behind the `sorted` flag; recording or
+        // merging after a percentile query must invalidate it so later
+        // queries see the new samples
+        let mut h = Histogram::new();
+        h.record(10.0);
+        h.record(20.0);
+        assert_eq!(h.percentile(1.0), 20.0); // sorts, sets the flag
+        h.record(5.0);
+        assert_eq!(h.percentile(0.0), 5.0); // stale cache would say 10.0
+        assert_eq!(h.percentile(1.0), 20.0);
+        let mut other = Histogram::new();
+        other.record(100.0);
+        h.merge(&other);
+        assert_eq!(h.percentile(1.0), 100.0); // stale cache would say 20.0
+    }
+
+    #[test]
     fn merged_histogram_summary_equals_single_shard_summary() {
         // the cross-shard aggregation contract: splitting the same
         // samples across k shards and merging is indistinguishable from

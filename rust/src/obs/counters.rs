@@ -1,0 +1,212 @@
+//! Kernel counters: per-(backend, op kind, m-bucket) atomic tallies.
+//!
+//! Every `GemmBackend` dispatch site (`QDense::apply_*` in `infer.rs`)
+//! reports the op it ran — kind, activation batch m, MACs, bytes moved,
+//! and kernel nanoseconds — into a fixed grid of static atomic cells.
+//! The grid is allocated at compile time, so recording is lock-free and
+//! allocation-free on the steady-state decode path; with obs off the
+//! sites skip the record entirely (one relaxed load).
+//!
+//! The m-bucket axis mirrors the paper's small-batch sweep (Fig. 6):
+//! m = 1 (the GEMV path), 2–4, 5–8, and >8 — live GOP/s per backend and
+//! shape class next to the `BENCH_gemm.json` numbers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::jsonx::Json;
+
+/// What kind of kernel call ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// int8 farm GEMM (`qgemm_farm_into` / `qgemm_farm_rows_into`).
+    Gemm,
+    /// m = 1 int8 GEMV fast path.
+    Gemv,
+    /// Fused GRU-gate sweep (`qgemm_gates_rows_into`).
+    FusedGates,
+    /// f32 reference GEMM.
+    F32,
+}
+
+pub const NUM_KINDS: usize = 4;
+pub const ALL_KINDS: [OpKind; NUM_KINDS] =
+    [OpKind::Gemm, OpKind::Gemv, OpKind::FusedGates, OpKind::F32];
+
+impl OpKind {
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            OpKind::Gemm => "gemm",
+            OpKind::Gemv => "gemv",
+            OpKind::FusedGates => "fused_gates",
+            OpKind::F32 => "f32",
+        }
+    }
+}
+
+/// Activation-batch buckets: m = 1, 2–4, 5–8, >8.
+pub const NUM_BUCKETS: usize = 4;
+pub const BUCKET_NAMES: [&str; NUM_BUCKETS] = ["m1", "m2_4", "m5_8", "m_gt8"];
+
+#[inline]
+pub const fn m_bucket(m: usize) -> usize {
+    match m {
+        0 | 1 => 0,
+        2..=4 => 1,
+        5..=8 => 2,
+        _ => 3,
+    }
+}
+
+/// Backend axis: the known `GemmBackend::name()` values, plus a spill
+/// slot so an out-of-tree backend still counts somewhere.
+pub const NUM_BACKENDS: usize = 4;
+pub const BACKEND_NAMES: [&str; NUM_BACKENDS] = ["scalar", "blocked", "simd", "other"];
+
+#[inline]
+fn backend_index(name: &str) -> usize {
+    match name {
+        "scalar" => 0,
+        "blocked" => 1,
+        "simd" => 2,
+        _ => 3,
+    }
+}
+
+struct Cell {
+    calls: AtomicU64,
+    macs: AtomicU64,
+    bytes: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl Cell {
+    const fn new() -> Self {
+        Cell {
+            calls: AtomicU64::new(0),
+            macs: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+const NUM_CELLS: usize = NUM_BACKENDS * NUM_KINDS * NUM_BUCKETS;
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY: Cell = Cell::new();
+static CELLS: [Cell; NUM_CELLS] = [EMPTY; NUM_CELLS];
+
+#[inline]
+fn cell(backend: usize, kind: OpKind, bucket: usize) -> &'static Cell {
+    &CELLS[(backend * NUM_KINDS + kind.index()) * NUM_BUCKETS + bucket]
+}
+
+/// Record one kernel call.  `bytes` counts operand reads + result
+/// writes (`kernels::farm_counts`), `nanos` the kernel wall time.
+#[inline]
+pub fn record(backend: &str, kind: OpKind, m: usize, macs: u64, bytes: u64, nanos: u64) {
+    let c = cell(backend_index(backend), kind, m_bucket(m));
+    c.calls.fetch_add(1, Ordering::Relaxed);
+    c.macs.fetch_add(macs, Ordering::Relaxed);
+    c.bytes.fetch_add(bytes, Ordering::Relaxed);
+    c.nanos.fetch_add(nanos, Ordering::Relaxed);
+}
+
+/// Total kernel calls recorded so far (all cells) — the freeze probe for
+/// the `--obs off` tests.
+pub fn total_calls() -> u64 {
+    CELLS.iter().map(|c| c.calls.load(Ordering::Relaxed)).sum()
+}
+
+/// Zero every cell (serve entry / test isolation).
+pub fn reset() {
+    for c in &CELLS {
+        c.calls.store(0, Ordering::Relaxed);
+        c.macs.store(0, Ordering::Relaxed);
+        c.bytes.store(0, Ordering::Relaxed);
+        c.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot the non-empty cells as a JSON array of rows:
+/// `{"backend", "op", "m_bucket", "calls", "macs", "bytes", "secs",
+/// "gops"}` — `gops` is MACs*2 / secs / 1e9 (0 when untimed).
+pub fn snapshot() -> Json {
+    let mut rows = Vec::new();
+    for (bi, bname) in BACKEND_NAMES.iter().enumerate() {
+        for kind in ALL_KINDS {
+            for (mi, mname) in BUCKET_NAMES.iter().enumerate() {
+                let c = cell(bi, kind, mi);
+                let calls = c.calls.load(Ordering::Relaxed);
+                if calls == 0 {
+                    continue;
+                }
+                let macs = c.macs.load(Ordering::Relaxed);
+                let secs = c.nanos.load(Ordering::Relaxed) as f64 / 1e9;
+                let gops = if secs > 0.0 { macs as f64 * 2.0 / secs / 1e9 } else { 0.0 };
+                rows.push(Json::obj(vec![
+                    ("backend", Json::str(*bname)),
+                    ("op", Json::str(kind.name())),
+                    ("m_bucket", Json::str(*mname)),
+                    ("calls", Json::num(calls as f64)),
+                    ("macs", Json::num(macs as f64)),
+                    ("bytes", Json::num(c.bytes.load(Ordering::Relaxed) as f64)),
+                    ("secs", Json::num(secs)),
+                    ("gops", Json::num(gops)),
+                ]));
+            }
+        }
+    }
+    Json::Arr(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_small_batch_sweep() {
+        assert_eq!(m_bucket(1), 0);
+        assert_eq!(m_bucket(2), 1);
+        assert_eq!(m_bucket(4), 1);
+        assert_eq!(m_bucket(5), 2);
+        assert_eq!(m_bucket(8), 2);
+        assert_eq!(m_bucket(9), 3);
+        assert_eq!(m_bucket(128), 3);
+    }
+
+    #[test]
+    fn record_snapshot_reset() {
+        reset();
+        record("blocked", OpKind::Gemv, 1, 1000, 2000, 500);
+        record("blocked", OpKind::Gemv, 1, 1000, 2000, 500);
+        record("nonesuch", OpKind::F32, 16, 10, 20, 0);
+        assert_eq!(total_calls(), 3);
+        let rows = snapshot();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), 2, "one row per hot cell");
+        let gemv = rows
+            .iter()
+            .find(|r| r.get("op").unwrap().as_str() == Some("gemv"))
+            .expect("gemv row");
+        assert_eq!(gemv.get("backend").unwrap().as_str(), Some("blocked"));
+        assert_eq!(gemv.get("m_bucket").unwrap().as_str(), Some("m1"));
+        assert_eq!(gemv.get("calls").unwrap().as_f64(), Some(2.0));
+        assert_eq!(gemv.get("macs").unwrap().as_f64(), Some(2000.0));
+        // 2000 MACs * 2 ops / 1e-6 s / 1e9 = 4 GOP/s
+        assert!((gemv.get("gops").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        let other = rows
+            .iter()
+            .find(|r| r.get("op").unwrap().as_str() == Some("f32"))
+            .expect("f32 row");
+        assert_eq!(other.get("backend").unwrap().as_str(), Some("other"));
+        assert_eq!(other.get("gops").unwrap().as_f64(), Some(0.0), "untimed row reports 0");
+        reset();
+        assert_eq!(total_calls(), 0);
+        assert!(snapshot().as_arr().unwrap().is_empty());
+    }
+}

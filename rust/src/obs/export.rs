@@ -1,0 +1,147 @@
+//! JSONL metrics exporter (`--metrics-out FILE`).
+//!
+//! One JSON document per line, each stamped with the obs
+//! [`SCHEMA_VERSION`](crate::obs::SCHEMA_VERSION), a monotone `seq`, a
+//! snapshot `kind` and the simulated clock.  Serve loops write a
+//! snapshot every few rounds plus a final one; `train --native` writes
+//! one per epoch.  Lines are flushed as written so a killed run still
+//! leaves a valid prefix — every line must parse on its own
+//! (`python3 -m json.tool` per line in CI).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use crate::error::Result;
+use crate::jsonx::Json;
+
+use super::journal::Journal;
+use super::{counters, journal, spans, SpanSet};
+
+/// Rounds between periodic serve snapshots (plus one final snapshot at
+/// drain).  Coarse on purpose: the exporter is for trend lines, not
+/// per-round tracing — the journal carries the per-event record.
+pub const EXPORT_EVERY_ROUNDS: usize = 32;
+
+pub struct MetricsExporter {
+    w: BufWriter<File>,
+    seq: u64,
+    /// Per-shard journal cursors (sequence numbers already exported).
+    cursors: Vec<u64>,
+}
+
+impl MetricsExporter {
+    pub fn create(path: &str) -> Result<Self> {
+        Ok(MetricsExporter { w: BufWriter::new(File::create(path)?), seq: 0, cursors: Vec::new() })
+    }
+
+    /// Write one snapshot line: the standard envelope
+    /// (`schema_version`, `kind`, `seq`, `clock`) plus `body` fields.
+    pub fn write_snapshot(
+        &mut self,
+        kind: &str,
+        clock: f64,
+        body: Vec<(&str, Json)>,
+    ) -> Result<()> {
+        let mut pairs = vec![
+            ("schema_version", Json::num(super::SCHEMA_VERSION as f64)),
+            ("kind", Json::str(kind)),
+            ("seq", Json::num(self.seq as f64)),
+            ("clock", Json::num(clock)),
+        ];
+        pairs.extend(body);
+        self.seq += 1;
+        writeln!(self.w, "{}", Json::obj(pairs).to_string_compact())?;
+        self.w.flush()?;
+        Ok(())
+    }
+
+    /// The serve-loop snapshot: decode spans so far, plan spans, kernel
+    /// counters, and the journal events new since the last snapshot.
+    pub fn write_serve_snapshot(
+        &mut self,
+        kind: &str,
+        clock: f64,
+        decode_spans: &SpanSet,
+        journals: &[Journal],
+    ) -> Result<()> {
+        if self.cursors.len() < journals.len() {
+            self.cursors.resize(journals.len(), 0);
+        }
+        let mut delta = Vec::new();
+        let mut missed = 0u64;
+        for (i, j) in journals.iter().enumerate() {
+            let (evs, m) = j.events_since(self.cursors[i]);
+            self.cursors[i] = j.total_pushed();
+            delta.extend(evs);
+            missed += m;
+        }
+        delta.sort_by(|a, b| a.clock.total_cmp(&b.clock));
+        self.write_snapshot(
+            kind,
+            clock,
+            vec![
+                ("spans", decode_spans.to_json()),
+                ("plan_spans", spans::global_snapshot().to_json()),
+                ("counters", counters::snapshot()),
+                ("journal", journal::events_to_json(&delta)),
+                ("journal_missed", Json::num(missed as f64)),
+            ],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::{Event, EventKind};
+    use crate::obs::Stage;
+
+    fn temp_path(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("tracenorm_obs_export_{tag}_{}.jsonl", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn lines_parse_individually_and_carry_the_envelope() {
+        let path = temp_path("env");
+        let mut ex = MetricsExporter::create(&path).unwrap();
+        ex.write_snapshot("train-epoch", 0.0, vec![("mean_loss", Json::num(1.5))]).unwrap();
+        ex.write_snapshot("train-epoch", 1.0, vec![("mean_loss", Json::num(1.25))]).unwrap();
+        drop(ex);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.get("schema_version").unwrap().as_usize(), Some(1));
+            assert_eq!(v.get("kind").unwrap().as_str(), Some("train-epoch"));
+            assert_eq!(v.get("seq").unwrap().as_usize(), Some(i));
+            assert!(v.get("mean_loss").is_some());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_snapshots_ship_journal_deltas_once() {
+        let path = temp_path("delta");
+        let mut ex = MetricsExporter::create(&path).unwrap();
+        let mut spans = SpanSet::default();
+        spans.add(Stage::RecGates, 0.25);
+        let mut j = Journal::with_capacity(8);
+        j.push(Event { clock: 0.1, shard: 0, session: 0, tier: 0, kind: EventKind::Placement });
+        ex.write_serve_snapshot("stream-serve", 0.2, &spans, std::slice::from_ref(&j)).unwrap();
+        j.push(Event { clock: 0.3, shard: 0, session: 0, tier: 0, kind: EventKind::Drain });
+        ex.write_serve_snapshot("stream-serve", 0.4, &spans, std::slice::from_ref(&j)).unwrap();
+        drop(ex);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("journal").unwrap().as_arr().unwrap().len(), 1);
+        let second = lines[1].get("journal").unwrap().as_arr().unwrap();
+        assert_eq!(second.len(), 1, "second snapshot ships only the new event");
+        assert_eq!(second[0].get("kind").unwrap().as_str(), Some("drain"));
+        assert!(lines[1].get("spans").unwrap().get("rec_gates").is_some());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,263 @@
+//! Shard event journal: pre-sized ring buffers of typed router events.
+//!
+//! Every serve-level decision the admission router makes — a session
+//! arriving, being placed on a shard/tier, spilling down the ladder,
+//! a controller shift, backpressure, a session draining — is recorded as
+//! a fixed-size [`Event`] in a per-shard [`Journal`] ring.  All events
+//! are produced **on the router thread** (the control plane is
+//! single-threaded by design, DESIGN.md §9), so with a fixed seed the
+//! journal is fully deterministic: same config, same event sequence,
+//! at any shard count the same multiset of per-session lifecycle events.
+//!
+//! Rings are sized once at serve construction and overwrite their oldest
+//! entry when full (tracking the drop count), preserving the no-steady-
+//! state-allocation rule.  The merged, clock-ordered view the report and
+//! the JSONL exporter use subsumes the ad-hoc
+//! `controller::merge_shift_logs` path: shift events appear in the
+//! journal with the same clocks, shard-tagged, interleaved with the
+//! admission/placement/drain record around them.
+
+use crate::jsonx::Json;
+
+/// Shard tag for events that belong to the router itself rather than a
+/// worker shard (arrival-queue admissions, backpressure).  Serialized as
+/// `-1`.
+pub const NO_SHARD: usize = usize::MAX;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A session's arrival time passed: it entered the router's
+    /// admission queue.  `shard` is [`NO_SHARD`]; `tier` is 0.
+    Admission,
+    /// The session was placed onto `shard`/`tier`.
+    Placement,
+    /// The placement landed below the tier the controller wanted
+    /// (within-shard downward spill); `tier` is the tier actually used.
+    TierSpill,
+    /// A fidelity controller shifted down to `tier`.
+    DownShift,
+    /// A fidelity controller shifted up to `tier`.
+    UpShift,
+    /// No shard had a free slot this round; `session` carries the queue
+    /// depth left waiting.  `shard` is [`NO_SHARD`].
+    Backpressure,
+    /// The session finished and its pool slot drained.
+    Drain,
+}
+
+impl EventKind {
+    pub const fn name(self) -> &'static str {
+        match self {
+            EventKind::Admission => "admission",
+            EventKind::Placement => "placement",
+            EventKind::TierSpill => "tier_spill",
+            EventKind::DownShift => "downshift",
+            EventKind::UpShift => "upshift",
+            EventKind::Backpressure => "backpressure",
+            EventKind::Drain => "drain",
+        }
+    }
+}
+
+/// One journal entry.  Fixed-size and `Copy` so ring writes are a store,
+/// not an allocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    /// Simulated clock (seconds) when the router made the decision.
+    pub clock: f64,
+    /// Worker shard the event concerns, or [`NO_SHARD`] for router-level
+    /// events.
+    pub shard: usize,
+    /// Session (utterance) id, or the kind-specific payload documented
+    /// on [`EventKind`].
+    pub session: usize,
+    /// Ladder tier (always 0 for the single-tier `stream-serve` path).
+    pub tier: usize,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let shard = if self.shard == NO_SHARD { -1.0 } else { self.shard as f64 };
+        Json::obj(vec![
+            ("clock", Json::num(self.clock)),
+            ("shard", Json::num(shard)),
+            ("session", Json::num(self.session as f64)),
+            ("tier", Json::num(self.tier as f64)),
+            ("kind", Json::str(self.kind.name())),
+        ])
+    }
+}
+
+pub fn events_to_json(events: &[Event]) -> Json {
+    Json::Arr(events.iter().map(Event::to_json).collect())
+}
+
+/// A pre-sized overwrite-oldest ring of [`Event`]s with a monotone
+/// sequence counter, so the exporter can ship deltas
+/// ([`Journal::events_since`]) without re-sending history.
+#[derive(Clone, Debug)]
+pub struct Journal {
+    buf: Vec<Event>,
+    cap: usize,
+    /// Total events ever pushed; the oldest retained event has sequence
+    /// number `total - len`.
+    total: u64,
+}
+
+impl Journal {
+    /// Ring sized once, up front.  `cap` is clamped to at least 1.
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Journal { buf: Vec::with_capacity(cap), cap, total: 0 }
+    }
+
+    /// Append an event, overwriting the oldest once the ring is full.
+    /// Never allocates after construction.
+    pub fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[(self.total as usize) % self.cap] = ev;
+        }
+        self.total += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever pushed (retained + overwritten).
+    pub fn total_pushed(&self) -> u64 {
+        self.total
+    }
+
+    /// Events overwritten by ring wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+
+    /// Retained events in push order (oldest first).
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        let split = if self.buf.len() < self.cap {
+            0
+        } else {
+            (self.total as usize) % self.cap
+        };
+        self.buf[split..].iter().chain(self.buf[..split].iter())
+    }
+
+    /// Events with sequence number >= `since`, plus how many in that
+    /// range were already overwritten — the exporter's delta view.
+    pub fn events_since(&self, since: u64) -> (Vec<Event>, u64) {
+        let oldest = self.total - self.buf.len() as u64;
+        let missed = oldest.saturating_sub(since);
+        let skip = since.saturating_sub(oldest) as usize;
+        (self.iter().skip(skip).copied().collect(), missed)
+    }
+}
+
+/// Merge per-shard journals into one clock-ordered event list.  The sort
+/// is stable, and each shard's ring is already in push order, so equal
+/// clocks keep their deterministic router-side ordering — this is the
+/// same discipline as `controller::merge_shift_logs`, generalized to the
+/// full event vocabulary.
+pub fn merge(journals: &[Journal]) -> Vec<Event> {
+    let mut all: Vec<Event> = journals.iter().flat_map(|j| j.iter().copied()).collect();
+    all.sort_by(|a, b| a.clock.total_cmp(&b.clock));
+    all
+}
+
+/// Total overwrites across a set of journals.
+pub fn total_dropped(journals: &[Journal]) -> u64 {
+    journals.iter().map(|j| j.dropped()).sum()
+}
+
+const _: () = crate::assert_send_sync::<Event>();
+const _: () = crate::assert_send_sync::<Journal>();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(clock: f64, session: usize) -> Event {
+        Event { clock, shard: 0, session, tier: 0, kind: EventKind::Placement }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut j = Journal::with_capacity(3);
+        for i in 0..5 {
+            j.push(ev(i as f64, i));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.total_pushed(), 5);
+        assert_eq!(j.dropped(), 2);
+        let kept: Vec<usize> = j.iter().map(|e| e.session).collect();
+        assert_eq!(kept, vec![2, 3, 4], "oldest entries were overwritten in order");
+    }
+
+    #[test]
+    fn push_never_allocates_after_construction() {
+        let mut j = Journal::with_capacity(4);
+        let cap_before = j.buf.capacity();
+        for i in 0..64 {
+            j.push(ev(i as f64, i));
+        }
+        assert_eq!(j.buf.capacity(), cap_before, "ring must not grow past construction");
+    }
+
+    #[test]
+    fn events_since_yields_deltas_and_missed_counts() {
+        let mut j = Journal::with_capacity(3);
+        for i in 0..3 {
+            j.push(ev(i as f64, i));
+        }
+        let (d, missed) = j.events_since(1);
+        assert_eq!(missed, 0);
+        assert_eq!(d.iter().map(|e| e.session).collect::<Vec<_>>(), vec![1, 2]);
+        // wrap: seqs 0..=4, ring keeps 2..=4
+        j.push(ev(3.0, 3));
+        j.push(ev(4.0, 4));
+        let (d, missed) = j.events_since(1);
+        assert_eq!(missed, 1, "seq 1 was overwritten");
+        assert_eq!(d.iter().map(|e| e.session).collect::<Vec<_>>(), vec![2, 3, 4]);
+        let (d, missed) = j.events_since(5);
+        assert!(d.is_empty());
+        assert_eq!(missed, 0);
+    }
+
+    #[test]
+    fn merge_orders_by_clock_stably() {
+        let mut a = Journal::with_capacity(8);
+        let mut b = Journal::with_capacity(8);
+        a.push(Event { clock: 1.0, shard: 0, session: 0, tier: 0, kind: EventKind::Admission });
+        a.push(Event { clock: 3.0, shard: 0, session: 0, tier: 0, kind: EventKind::Drain });
+        b.push(Event { clock: 1.0, shard: 1, session: 1, tier: 0, kind: EventKind::Admission });
+        b.push(Event { clock: 2.0, shard: 1, session: 1, tier: 1, kind: EventKind::TierSpill });
+        let m = merge(&[a, b]);
+        assert_eq!(m.len(), 4);
+        assert!(m.windows(2).all(|w| w[0].clock <= w[1].clock));
+        // stable: journal order preserved at the tied clock
+        assert_eq!(m[0].shard, 0);
+        assert_eq!(m[1].shard, 1);
+    }
+
+    #[test]
+    fn router_events_serialize_shard_as_minus_one() {
+        let e = Event {
+            clock: 0.5,
+            shard: NO_SHARD,
+            session: 7,
+            tier: 0,
+            kind: EventKind::Backpressure,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("shard").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("backpressure"));
+    }
+}

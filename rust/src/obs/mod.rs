@@ -1,0 +1,144 @@
+//! Flight-recorder observability (DESIGN.md §10).
+//!
+//! A dependency-free instrumentation layer threaded through every tier of
+//! the runtime:
+//!
+//! * [`spans`] — a fixed [`Stage`] taxonomy with zero-alloc per-stream
+//!   accumulators ([`SpanSet`], embedded in `infer::Breakdown`), so a
+//!   decode produces an exact self-time breakdown that sums to wall time,
+//!   plus process-global atomic spans for plan-time work (pack, autotune
+//!   probes, build-time quantization).
+//! * [`counters`] — per-(backend, op-kind, m-bucket) atomic kernel
+//!   counters (calls, MACs, bytes, nanos) recorded at the `GemmBackend`
+//!   dispatch sites, giving live GOP/s per backend and shape class.
+//! * [`journal`] — pre-sized per-shard ring buffers of typed router
+//!   events (admission, placement, tier spill, shift, backpressure,
+//!   drain), merged clock-ordered on the router thread.
+//! * [`export`] — the `--metrics-out FILE` JSONL exporter: periodic
+//!   versioned snapshots (spans, counters, journal deltas) during
+//!   `stream-serve` / `ladder-serve` / `train --native`.
+//!
+//! The whole layer is **off by default** behind one process-global
+//! relaxed atomic ([`enabled`], `--obs on|off`): with obs off, every hot
+//! path pays exactly one `Ordering::Relaxed` load and records nothing, so
+//! transcripts and timing are bit-identical either way.  With obs on the
+//! steady-state zero-allocation invariant still holds — span sets are
+//! fixed arrays inside existing per-stream state, counters are static
+//! atomics, and journal rings are sized at serve construction
+//! (`rust/tests/alloc_free.rs` pins both switch positions).
+
+pub mod counters;
+pub mod export;
+pub mod journal;
+pub mod spans;
+
+pub use counters::OpKind;
+pub use export::MetricsExporter;
+pub use journal::{Event, EventKind, Journal, NO_SHARD};
+pub use spans::{SpanSet, Stage};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::jsonx::Json;
+
+/// Version stamp carried by every `--json` serve report and every
+/// `--metrics-out` JSONL snapshot (DESIGN.md §10).  Bump it whenever a
+/// field is renamed, removed, or changes meaning — additive fields keep
+/// the version.
+pub const SCHEMA_VERSION: u64 = 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn the observability layer on or off process-wide (`--obs on|off`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether instrumentation is live.  This single relaxed load is the
+/// entire hot-path cost of the layer when off.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clear every process-global accumulator (plan-time spans and kernel
+/// counters).  The serve loops deliberately do *not* call this — engine
+/// construction (packing, autotune) happens before a serve starts, and
+/// resetting there would erase those plan-time spans; a CLI invocation is
+/// a fresh process anyway.  Tests call it for isolation (the suite runs
+/// with `RUST_TEST_THREADS=1`, so reset/read races are not a concern).
+pub fn reset_process_metrics() {
+    spans::reset_global();
+    counters::reset();
+}
+
+/// Everything the obs layer contributes to a serve report: the decode
+/// self-time breakdown, plan-time spans, kernel counters, and the merged
+/// shard event journal.
+#[derive(Clone, Debug, Default)]
+pub struct ObsReport {
+    /// Decode-path self-time spans aggregated across shards
+    /// (`Breakdown::spans` merged at the sample level).
+    pub spans: SpanSet,
+    /// Plan-time spans (pack, autotune, build-time quantize) — global
+    /// snapshot, disjoint from the decode spans by construction.
+    pub plan_spans: SpanSet,
+    /// Kernel-counter snapshot (see [`counters::snapshot`]).
+    pub counters: Json,
+    /// Clock-ordered merge of every shard's event journal.
+    pub journal: Vec<Event>,
+    /// Ring-buffer overwrites across all shards (0 unless a serve
+    /// outlives its journal capacity).
+    pub journal_dropped: u64,
+}
+
+impl ObsReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spans", self.spans.to_json()),
+            ("plan_spans", self.plan_spans.to_json()),
+            ("counters", self.counters.clone()),
+            ("journal", journal::events_to_json(&self.journal)),
+            ("journal_dropped", Json::num(self.journal_dropped as f64)),
+        ])
+    }
+
+    /// The flamegraph-style self-time table printed by the non-`--json`
+    /// serve reports: stages sorted by self time, with share-of-total
+    /// bars, decode spans first and plan-time spans below.
+    pub fn self_time_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("self-time breakdown (obs):\n");
+        out.push_str(&spans::table(&self.spans, "decode"));
+        if self.plan_spans.total_secs() > 0.0 {
+            out.push_str(&spans::table(&self.plan_spans, "plan"));
+        }
+        out
+    }
+}
+
+const _: () = crate::assert_send_sync::<ObsReport>();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switch_toggles_and_restores() {
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(was);
+    }
+
+    #[test]
+    fn empty_report_serializes() {
+        let r = ObsReport { counters: Json::Arr(vec![]), ..ObsReport::default() };
+        let j = r.to_json();
+        assert!(j.get("spans").is_some());
+        assert!(j.get("journal").unwrap().as_arr().unwrap().is_empty());
+        assert!(r.self_time_table().contains("self-time breakdown"));
+    }
+}

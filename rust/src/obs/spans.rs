@@ -1,0 +1,302 @@
+//! Stage spans: the fixed self-time taxonomy and its accumulators.
+//!
+//! [`Stage`] names every place the runtime spends time; [`SpanSet`] is a
+//! pair of fixed arrays (seconds + call counts) embedded in
+//! `infer::Breakdown`, so per-stream accumulation is plain field
+//! arithmetic — no allocation, no locks, merged across shards with
+//! [`SpanSet::absorb`] exactly like the rest of the breakdown.
+//!
+//! Self-time discipline: every second of a decode is attributed to
+//! **exactly one** stage.  The engine's staged primitives already time
+//! themselves for the legacy `Breakdown` fields; the span layer reuses
+//! those measurements and *subtracts* nested quantization time (collected
+//! in a thread-local pending cell by `QDense`) from the enclosing stage,
+//! so `frontend + nonrec + rec_gates + gru_cell + head + quantize +
+//! decode` sums to the measured wall time of the block loop instead of
+//! double-counting.
+//!
+//! Plan-time work (weight packing, autotune probes, build-time
+//! quantization) happens outside any stream, possibly on several threads
+//! at once, so it accumulates into process-global atomic nanosecond
+//! cells ([`record_global`] / [`global_snapshot`]) reported separately
+//! from the decode spans.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::jsonx::Json;
+
+/// Every stage the runtime attributes time to.  The order is the wire
+/// order of the JSON arrays; append only (the schema version covers
+/// renames/removals).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Strided conv frontend GEMMs.
+    Frontend,
+    /// Non-recurrent (input-side) GRU GEMMs over the whole block.
+    Nonrec,
+    /// Recurrent gate pre-activation GEMMs (plain or fused).
+    RecGates,
+    /// The element-wise GRU cell update.
+    GruCell,
+    /// FC + output head GEMMs and the log-softmax.
+    Head,
+    /// int8 activation quantization (nested inside the GEMM stages;
+    /// subtracted from them so the sum stays exact).
+    Quantize,
+    /// Plan-time weight packing (`PreparedQMatrix` construction).
+    Pack,
+    /// Greedy CTC decode + transcript collapse.
+    Decode,
+    /// Construction-time NR/KC tile probing.
+    Autotune,
+}
+
+/// Number of stages (array sizes below).
+pub const NUM_STAGES: usize = 9;
+
+/// All stages in wire order.
+pub const ALL: [Stage; NUM_STAGES] = [
+    Stage::Frontend,
+    Stage::Nonrec,
+    Stage::RecGates,
+    Stage::GruCell,
+    Stage::Head,
+    Stage::Quantize,
+    Stage::Pack,
+    Stage::Decode,
+    Stage::Autotune,
+];
+
+impl Stage {
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Stage::Frontend => "frontend",
+            Stage::Nonrec => "nonrec",
+            Stage::RecGates => "rec_gates",
+            Stage::GruCell => "gru_cell",
+            Stage::Head => "head",
+            Stage::Quantize => "quantize",
+            Stage::Pack => "pack",
+            Stage::Decode => "decode",
+            Stage::Autotune => "autotune",
+        }
+    }
+}
+
+/// A fixed-size span accumulator: seconds and call counts per stage.
+/// `Copy` + `Default` so it rides inside `Breakdown` without changing
+/// that type's contract.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanSet {
+    pub secs: [f64; NUM_STAGES],
+    pub calls: [u64; NUM_STAGES],
+}
+
+impl SpanSet {
+    /// Attribute `secs` of self time (one call) to `stage`.
+    #[inline]
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.index()] += secs;
+        self.calls[stage.index()] += 1;
+    }
+
+    /// Merge another span set in (cross-shard / cross-stream absorption,
+    /// mirroring `Breakdown::absorb`).
+    pub fn absorb(&mut self, o: &SpanSet) {
+        for i in 0..NUM_STAGES {
+            self.secs[i] += o.secs[i];
+            self.calls[i] += o.calls[i];
+        }
+    }
+
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs[stage.index()]
+    }
+
+    /// Total attributed self time across every stage.
+    pub fn total_secs(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.calls.iter().all(|&c| c == 0)
+    }
+
+    /// `{"frontend": {"secs": .., "calls": ..}, ...}` — only stages that
+    /// were hit, plus a `total_secs` scalar for the 5%-of-wall check.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        for s in ALL {
+            if self.calls[s.index()] > 0 {
+                pairs.push((
+                    s.name(),
+                    Json::obj(vec![
+                        ("secs", Json::num(self.secs[s.index()])),
+                        ("calls", Json::num(self.calls[s.index()] as f64)),
+                    ]),
+                ));
+            }
+        }
+        pairs.push(("total_secs", Json::num(self.total_secs())));
+        Json::obj(pairs)
+    }
+}
+
+/// Render a span set as an aligned text table, stages sorted by self
+/// time descending with a share bar — the flamegraph-style view of the
+/// plain-text serve report.
+pub fn table(spans: &SpanSet, label: &str) -> String {
+    let total = spans.total_secs();
+    if total <= 0.0 {
+        return format!("  ({label}: no samples)\n");
+    }
+    let mut rows: Vec<Stage> = ALL.iter().copied().filter(|s| spans.calls[s.index()] > 0).collect();
+    rows.sort_by(|a, b| spans.get(*b).total_cmp(&spans.get(*a)));
+    let mut out = String::new();
+    for s in rows {
+        let secs = spans.get(s);
+        let frac = secs / total;
+        let bar = "#".repeat((frac * 30.0).round() as usize);
+        out.push_str(&format!(
+            "  {label:>6}  {:<10} {:>9.3} ms  {:>5.1}%  {:>8} calls  {bar}\n",
+            s.name(),
+            secs * 1e3,
+            frac * 100.0,
+            spans.calls[s.index()],
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Plan-time global spans (pack / autotune / build-time quantize)
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_NANOS: [AtomicU64; NUM_STAGES] = [ZERO; NUM_STAGES];
+static GLOBAL_CALLS: [AtomicU64; NUM_STAGES] = [ZERO; NUM_STAGES];
+
+/// Attribute plan-time work to a stage, process-globally (relaxed
+/// atomics; plan work is rare and coarse).
+pub fn record_global(stage: Stage, secs: f64) {
+    GLOBAL_NANOS[stage.index()].fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    GLOBAL_CALLS[stage.index()].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot the plan-time spans into an ordinary [`SpanSet`].
+pub fn global_snapshot() -> SpanSet {
+    let mut s = SpanSet::default();
+    for i in 0..NUM_STAGES {
+        s.secs[i] = GLOBAL_NANOS[i].load(Ordering::Relaxed) as f64 / 1e9;
+        s.calls[i] = GLOBAL_CALLS[i].load(Ordering::Relaxed);
+    }
+    s
+}
+
+/// Zero the plan-time spans (serve entry / test isolation).
+pub fn reset_global() {
+    for i in 0..NUM_STAGES {
+        GLOBAL_NANOS[i].store(0, Ordering::Relaxed);
+        GLOBAL_CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Nested-quantize pending cell
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Seconds of activation quantization accumulated inside the current
+    /// enclosing stage.  `Cell<f64>` has no destructor, so the slot costs
+    /// no allocation or TLS teardown registration.
+    static PENDING_QUANT: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Record nested quantization time (called by `QDense` with obs on).
+#[inline]
+pub fn add_pending_quantize(secs: f64) {
+    PENDING_QUANT.with(|c| c.set(c.get() + secs));
+}
+
+/// Drain the pending quantization time at a stage boundary: the caller
+/// attributes the drained seconds to [`Stage::Quantize`] and the
+/// remainder of its own elapsed time to itself.
+#[inline]
+pub fn take_pending_quantize() -> f64 {
+    PENDING_QUANT.with(|c| c.replace(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_absorb_total() {
+        let mut a = SpanSet::default();
+        a.add(Stage::Frontend, 0.5);
+        a.add(Stage::Quantize, 0.25);
+        let mut b = SpanSet::default();
+        b.add(Stage::Frontend, 1.0);
+        a.absorb(&b);
+        assert_eq!(a.get(Stage::Frontend), 1.5);
+        assert_eq!(a.calls[Stage::Frontend.index()], 2);
+        assert!((a.total_secs() - 1.75).abs() < 1e-12);
+        assert!(!a.is_empty());
+        assert!(SpanSet::default().is_empty());
+    }
+
+    #[test]
+    fn json_skips_cold_stages_and_carries_total() {
+        let mut s = SpanSet::default();
+        s.add(Stage::Head, 2.0);
+        let j = s.to_json();
+        assert!(j.get("head").is_some());
+        assert!(j.get("frontend").is_none(), "untouched stages stay out of the report");
+        assert_eq!(j.get("total_secs").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn stage_indices_match_wire_order() {
+        for (i, s) in ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+    }
+
+    #[test]
+    fn pending_quantize_drains_to_zero() {
+        add_pending_quantize(0.125);
+        add_pending_quantize(0.125);
+        assert_eq!(take_pending_quantize(), 0.25);
+        assert_eq!(take_pending_quantize(), 0.0);
+    }
+
+    #[test]
+    fn global_spans_round_trip() {
+        reset_global();
+        record_global(Stage::Pack, 0.001);
+        record_global(Stage::Autotune, 0.002);
+        let s = global_snapshot();
+        assert!(s.get(Stage::Pack) > 0.0);
+        assert_eq!(s.calls[Stage::Autotune.index()], 1);
+        reset_global();
+        assert!(global_snapshot().is_empty());
+    }
+
+    #[test]
+    fn table_sorts_by_self_time() {
+        let mut s = SpanSet::default();
+        s.add(Stage::Frontend, 0.1);
+        s.add(Stage::RecGates, 0.7);
+        let t = table(&s, "decode");
+        let rec = t.find("rec_gates").unwrap();
+        let fr = t.find("frontend").unwrap();
+        assert!(rec < fr, "hotter stage prints first:\n{t}");
+    }
+}

@@ -94,12 +94,21 @@ pub fn ladder_build(
         let scalars = factored.num_scalars();
 
         let mut art = Artifact::new(rung_meta(dims, frac, &tag, scalars, &nu));
+        let t0 = std::time::Instant::now();
         for (name, t) in factored.iter() {
             if name.ends_with("_b") {
                 art.set(name.clone(), Entry::F32(t.clone()));
             } else {
                 art.set(name.clone(), Entry::I8(quantize(t)));
             }
+        }
+        if crate::obs::enabled() {
+            // build-time weight quantization is plan-time work: it lands
+            // in the global spans, not any stream's decode breakdown
+            crate::obs::spans::record_global(
+                crate::obs::Stage::Quantize,
+                t0.elapsed().as_secs_f64(),
+            );
         }
         // fail the offline build, not the later serve, if the source
         // checkpoint and `dims` disagree (extra/missing layers) — every

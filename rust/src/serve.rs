@@ -42,6 +42,8 @@ use crate::infer::{Breakdown, Engine};
 use crate::jsonx::Json;
 use crate::metricsx::{Histogram, LatencySummary, OccupancyTracker};
 use crate::model::ParamSet;
+use crate::obs::export::EXPORT_EVERY_ROUNDS;
+use crate::obs::{self, Event, EventKind, Journal, MetricsExporter, ObsReport, SpanSet, NO_SHARD};
 use crate::prng::Pcg64;
 use crate::registry::Registry;
 use crate::runtime::Runtime;
@@ -65,6 +67,9 @@ pub struct StreamServeConfig {
     /// worker shards (OS threads); 1 replays the unsharded loop exactly
     pub shards: usize,
     pub seed: u64,
+    /// JSONL metrics snapshot file (`--metrics-out FILE`); None disables
+    /// the exporter
+    pub metrics_out: Option<String>,
 }
 
 impl Default for StreamServeConfig {
@@ -75,6 +80,7 @@ impl Default for StreamServeConfig {
             chunk_frames: 16,
             shards: 1,
             seed: 0,
+            metrics_out: None,
         }
     }
 }
@@ -135,13 +141,17 @@ pub struct StreamServeReport {
     pub breakdown: Breakdown,
     /// (reference, hypothesis) per completed session, arrival order
     pub transcripts: Vec<(String, String)>,
+    /// flight-recorder data (spans, kernel counters, event journal) —
+    /// Some only when the serve ran with `--obs on`
+    pub obs: Option<ObsReport>,
 }
 
 impl StreamServeReport {
     /// Machine-readable report (`stream-serve --json`): everything CI
     /// and the bench harness parse instead of grepping text.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
+            ("schema_version", Json::num(obs::SCHEMA_VERSION as f64)),
             ("kind", Json::str("stream-serve")),
             ("sessions", Json::num(self.sessions as f64)),
             ("pool_size", Json::num(self.pool_size as f64)),
@@ -161,7 +171,11 @@ impl StreamServeReport {
                     self.shard_of_session.iter().map(|&s| Json::num(s as f64)).collect(),
                 ),
             ),
-        ])
+        ]);
+        if let Some(o) = &self.obs {
+            fields.push(("obs", o.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -213,9 +227,31 @@ pub fn stream_serve(
         let mut stats: Vec<PoolStats> = vec![PoolStats::default(); shards];
         let mut transcripts: Vec<(usize, String, String)> = Vec::new();
 
+        // flight recorder: per-shard event rings plus one router ring
+        // (index `shards`) for pre-placement events, sized once up front
+        // so the serve loop never grows them (DESIGN.md §10)
+        let obs_on = obs::enabled();
+        let jcap = if obs_on { 4 * utts.len() + 64 } else { 1 };
+        let mut journals: Vec<Journal> =
+            (0..shards + 1).map(|_| Journal::with_capacity(jcap)).collect();
+        let mut exporter = match &cfg.metrics_out {
+            Some(path) => Some(MetricsExporter::create(path)?),
+            None => None,
+        };
+        let mut rounds = 0usize;
+
         while next < utts.len() || !queue.is_empty() || links.any_active() {
             // arrivals land in the admission queue as the clock passes them
             while next < utts.len() && arrivals[next] <= clock {
+                if obs_on {
+                    journals[shards].push(Event {
+                        clock: arrivals[next],
+                        shard: NO_SHARD,
+                        session: next,
+                        tier: 0,
+                        kind: EventKind::Admission,
+                    });
+                }
                 queue.push_back(next);
                 next += 1;
             }
@@ -229,6 +265,24 @@ pub fn stream_serve(
                 admissions[shard].push(Admission { utt, tier });
                 shard_of_session[utt] = shard;
                 sessions_at[shard] += 1;
+                if obs_on {
+                    journals[shard].push(Event {
+                        clock,
+                        shard,
+                        session: utt,
+                        tier,
+                        kind: EventKind::Placement,
+                    });
+                }
+            }
+            if obs_on && !queue.is_empty() {
+                journals[shards].push(Event {
+                    clock,
+                    shard: NO_SHARD,
+                    session: queue.len(),
+                    tier: 0,
+                    kind: EventKind::Backpressure,
+                });
             }
             if !links.any_active() {
                 // idle fleet (staged admissions count as active): record
@@ -257,10 +311,29 @@ pub fn stream_serve(
                         stats[shard] = r.stats;
                         for f in r.finished {
                             lat[shard].record(clock - arrivals[f.utt]);
+                            if obs_on {
+                                journals[shard].push(Event {
+                                    clock,
+                                    shard,
+                                    session: f.utt,
+                                    tier: f.tier,
+                                    kind: EventKind::Drain,
+                                });
+                            }
                             transcripts.push((f.utt, utts[f.utt].text.clone(), f.transcript));
                         }
                     }
                     None => occ[shard].record(0, dt),
+                }
+            }
+            rounds += 1;
+            if let Some(ex) = exporter.as_mut() {
+                if rounds % EXPORT_EVERY_ROUNDS == 0 {
+                    let mut sp = SpanSet::default();
+                    for b in &breakdowns {
+                        sp.absorb(&b.spans);
+                    }
+                    ex.write_serve_snapshot("stream-serve", clock, &sp, &journals)?;
                 }
             }
         }
@@ -288,6 +361,16 @@ pub fn stream_serve(
                 occupancy: occ[s].clone(),
             });
         }
+        if let Some(ex) = exporter.as_mut() {
+            ex.write_serve_snapshot("stream-serve", clock, &bd.spans, &journals)?;
+        }
+        let obs_report = obs_on.then(|| ObsReport {
+            spans: bd.spans,
+            plan_spans: obs::spans::global_snapshot(),
+            counters: obs::counters::snapshot(),
+            journal: obs::journal::merge(&journals),
+            journal_dropped: obs::journal::total_dropped(&journals),
+        });
         Ok(StreamServeReport {
             sessions: utts.len(),
             pool_size: cfg.pool_size,
@@ -304,6 +387,7 @@ pub fn stream_serve(
             span_secs: span,
             breakdown: bd,
             transcripts,
+            obs: obs_report,
         })
     })
 }
@@ -331,6 +415,9 @@ pub struct LadderServeConfig {
     pub shards: usize,
     pub seed: u64,
     pub controller: ControllerConfig,
+    /// JSONL metrics snapshot file (`--metrics-out FILE`); None disables
+    /// the exporter
+    pub metrics_out: Option<String>,
 }
 
 impl Default for LadderServeConfig {
@@ -344,6 +431,7 @@ impl Default for LadderServeConfig {
             shards: 1,
             seed: 0,
             controller: ControllerConfig::default(),
+            metrics_out: None,
         }
     }
 }
@@ -407,6 +495,9 @@ pub struct LadderServeReport {
     pub busy_secs: f64,
     pub span_secs: f64,
     pub breakdown: Breakdown,
+    /// flight-recorder data (spans, kernel counters, event journal) —
+    /// Some only when the serve ran with `--obs on`
+    pub obs: Option<ObsReport>,
 }
 
 impl LadderServeReport {
@@ -424,7 +515,8 @@ impl LadderServeReport {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
+            ("schema_version", Json::num(obs::SCHEMA_VERSION as f64)),
             ("kind", Json::str("ladder-serve")),
             ("sessions", Json::num(self.sessions as f64)),
             ("pool_size", Json::num(self.pool_size as f64)),
@@ -451,7 +543,24 @@ impl LadderServeReport {
                     self.shard_of_session.iter().map(|&s| Json::num(s as f64)).collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(o) = &self.obs {
+            fields.push(("obs", o.to_json()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A controller shift as a journal event: the same clock and tier the
+/// ad-hoc shift log records, shard-tagged, so the merged journal subsumes
+/// `merge_shift_logs` while the legacy `shifts` report field stays.
+fn shift_event(sh: &ShiftEvent, shard: usize) -> Event {
+    Event {
+        clock: sh.clock,
+        shard,
+        session: 0,
+        tier: sh.tier,
+        kind: if sh.down { EventKind::DownShift } else { EventKind::UpShift },
     }
 }
 
@@ -521,8 +630,28 @@ pub fn ladder_serve(
         let mut shard_sessions: Vec<usize> = vec![0; shards];
         let mut breakdowns: Vec<Breakdown> = vec![Breakdown::default(); shards];
 
+        // flight recorder (see stream_serve): per-shard rings + router ring
+        let obs_on = obs::enabled();
+        let jcap = if obs_on { 4 * utts.len() + 64 } else { 1 };
+        let mut journals: Vec<Journal> =
+            (0..shards + 1).map(|_| Journal::with_capacity(jcap)).collect();
+        let mut exporter = match &cfg.metrics_out {
+            Some(path) => Some(MetricsExporter::create(path)?),
+            None => None,
+        };
+        let mut rounds = 0usize;
+
         while next < utts.len() || !queue.is_empty() || links.any_active() {
             while next < utts.len() && arrivals[next] <= clock {
+                if obs_on {
+                    journals[shards].push(Event {
+                        clock: arrivals[next],
+                        shard: NO_SHARD,
+                        session: next,
+                        tier: 0,
+                        kind: EventKind::Admission,
+                    });
+                }
                 queue.push_back(next);
                 next += 1;
             }
@@ -539,12 +668,43 @@ pub fn ladder_serve(
                 shard_of_session[utt] = shard;
                 sessions_at[tier] += 1;
                 shard_sessions[shard] += 1;
+                if obs_on {
+                    journals[shard].push(Event {
+                        clock,
+                        shard,
+                        session: utt,
+                        tier,
+                        kind: EventKind::Placement,
+                    });
+                    if tier != ctls[shard].tier() {
+                        journals[shard].push(Event {
+                            clock,
+                            shard,
+                            session: utt,
+                            tier,
+                            kind: EventKind::TierSpill,
+                        });
+                    }
+                }
+            }
+            if obs_on && !queue.is_empty() {
+                journals[shards].push(Event {
+                    clock,
+                    shard: NO_SHARD,
+                    session: queue.len(),
+                    tier: 0,
+                    kind: EventKind::Backpressure,
+                });
             }
             if !links.any_active() {
                 // idle fleet: every controller sees a drained system and
                 // the occupancy trackers record the empty gap
-                for ctl in ctls.iter_mut() {
-                    ctl.observe(clock, 0.0);
+                for (s, ctl) in ctls.iter_mut().enumerate() {
+                    if let Some(sh) = ctl.observe(clock, 0.0) {
+                        if obs_on {
+                            journals[s].push(shift_event(&sh, s));
+                        }
+                    }
                 }
                 let target = clock.max(arrivals[next]);
                 if target > clock {
@@ -573,19 +733,46 @@ pub fn ladder_serve(
                             let l = clock - arrivals[f.utt];
                             lat[shard][f.tier].record(l);
                             ctls[shard].record_latency(f.tier, l);
+                            if obs_on {
+                                journals[shard].push(Event {
+                                    clock,
+                                    shard,
+                                    session: f.utt,
+                                    tier: f.tier,
+                                    kind: EventKind::Drain,
+                                });
+                            }
                         }
                         // control tick: the shard's routed tier's pool is
                         // its admission signal
                         let routed = ctls[shard].tier();
                         let frac = r.occ_after[routed] as f64 / cfg.pool_size as f64;
-                        ctls[shard].observe(clock, frac);
+                        if let Some(sh) = ctls[shard].observe(clock, frac) {
+                            if obs_on {
+                                journals[shard].push(shift_event(&sh, shard));
+                            }
+                        }
                     }
                     None => {
                         for o in occ[shard].iter_mut() {
                             o.record(0, dt);
                         }
-                        ctls[shard].observe(clock, 0.0);
+                        if let Some(sh) = ctls[shard].observe(clock, 0.0) {
+                            if obs_on {
+                                journals[shard].push(shift_event(&sh, shard));
+                            }
+                        }
                     }
+                }
+            }
+            rounds += 1;
+            if let Some(ex) = exporter.as_mut() {
+                if rounds % EXPORT_EVERY_ROUNDS == 0 {
+                    let mut sp = SpanSet::default();
+                    for b in &breakdowns {
+                        sp.absorb(&b.spans);
+                    }
+                    ex.write_serve_snapshot("ladder-serve", clock, &sp, &journals)?;
                 }
             }
         }
@@ -628,6 +815,16 @@ pub fn ladder_serve(
                 occupancy: o,
             });
         }
+        if let Some(ex) = exporter.as_mut() {
+            ex.write_serve_snapshot("ladder-serve", clock, &bd.spans, &journals)?;
+        }
+        let obs_report = obs_on.then(|| ObsReport {
+            spans: bd.spans,
+            plan_spans: obs::spans::global_snapshot(),
+            counters: obs::counters::snapshot(),
+            journal: obs::journal::merge(&journals),
+            journal_dropped: obs::journal::total_dropped(&journals),
+        });
         let shift_logs: Vec<&[ShiftEvent]> = ctls.iter().map(|c| c.shifts()).collect();
         Ok(LadderServeReport {
             sessions: utts.len(),
@@ -646,6 +843,7 @@ pub fn ladder_serve(
             busy_secs: busy,
             span_secs: span,
             breakdown: bd,
+            obs: obs_report,
         })
     })
 }
@@ -802,6 +1000,7 @@ mod tests {
             chunk_frames: 16,
             shards: 1,
             seed: 1,
+            metrics_out: None,
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 6);
@@ -834,6 +1033,7 @@ mod tests {
             chunk_frames: 32,
             shards: 1,
             seed: 2,
+            metrics_out: None,
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 4);
@@ -854,6 +1054,7 @@ mod tests {
             chunk_frames: 16,
             shards: 2,
             seed: 1,
+            metrics_out: None,
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.shards, 2);
@@ -870,6 +1071,7 @@ mod tests {
         assert_eq!(r.session_latency.count, 8);
         // machine-readable form round-trips through the JSON parser
         let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("schema_version").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("shards").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("per_shard").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.get("latency").unwrap().get("p99").unwrap().as_f64().is_some());

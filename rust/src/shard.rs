@@ -31,7 +31,12 @@
 //! placement (pooled decoding is bit-identical to sequential decoding,
 //! `rust/tests/stream_pool.rs`), so **any** shard count yields identical
 //! transcripts and CER for a fixed seed — only placement and timing
-//! differ (`rust/tests/shard.rs`).
+//! differ (`rust/tests/shard.rs`).  The same router-only control plane
+//! is what makes the flight-recorder event journal deterministic: with
+//! `--obs on`, every admission/placement/spill/shift/backpressure/drain
+//! event is produced on the router thread ([`crate::obs::journal`]),
+//! never inside a worker, so the per-session lifecycle record is a
+//! fixed multiset at any shard count.
 //!
 //! Drain protocol: when arrivals end, the router keeps ticking busy
 //! shards until every session completes (graceful drain of the ramp),

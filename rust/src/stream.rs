@@ -45,6 +45,7 @@ use crate::decoder::{greedy_step, BLANK};
 use crate::error::{Error, Result};
 use crate::infer::{gru_cell, Breakdown, Engine, Scratch, StreamState};
 use crate::model::ParamSet;
+use crate::obs::{self, Stage};
 use crate::prng::Pcg64;
 use crate::runtime::ModelDims;
 use crate::tensor::Tensor;
@@ -423,7 +424,11 @@ impl StreamPool {
                     // the engine's double-buffer swap
                     sess.state.h[li].data_mut().copy_from_slice(ps.outs[row].row(step));
                 }
-                bd.gates += t2.elapsed().as_secs_f64();
+                let dt = t2.elapsed().as_secs_f64();
+                bd.gates += dt;
+                if obs::enabled() {
+                    bd.spans.add(Stage::GruCell, dt);
+                }
             }
             for row in 0..m {
                 std::mem::swap(&mut ps.xs[row], &mut ps.outs[row]);
@@ -436,7 +441,14 @@ impl StreamPool {
             let Scratch { qs, mid, fc_y, logp, .. } = &mut ps.eng;
             engine.head_into(&ps.xs[row], qs, mid, fc_y, logp, bd);
             produced += logp.rows();
-            slots[si].as_mut().unwrap().absorb_block(logp);
+            let sess = slots[si].as_mut().unwrap();
+            if obs::enabled() {
+                let t3 = std::time::Instant::now();
+                sess.absorb_block(logp);
+                bd.spans.add(Stage::Decode, t3.elapsed().as_secs_f64());
+            } else {
+                sess.absorb_block(logp);
+            }
         }
         stats.blocks += 1;
         ps.settle();
@@ -471,7 +483,13 @@ impl StreamPool {
         bd.frames += (sess.state.buf.len() / self.engine.feat_dim()) as u64;
         let mut rows = self.engine.stream(&mut sess.state, &[], bd)?;
         rows.extend(self.engine.flush(&mut sess.state, bd)?);
-        sess.absorb(rows);
+        if obs::enabled() {
+            let t0 = std::time::Instant::now();
+            sess.absorb(rows);
+            bd.spans.add(Stage::Decode, t0.elapsed().as_secs_f64());
+        } else {
+            sess.absorb(rows);
+        }
         self.stats.closed += 1;
         Ok(ClosedSession {
             id,

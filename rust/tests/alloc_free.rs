@@ -132,6 +132,77 @@ fn gemv_and_fused_paths_are_alloc_free_and_probe_free() {
 }
 
 #[test]
+fn obs_enabled_block_loop_stays_alloc_free() {
+    // The flight recorder must preserve the steady-state invariant:
+    // spans land in a Copy struct on the Breakdown, kernel counters are
+    // static atomics, and the pending-quantize cell is a thread-local
+    // Cell<f64> — none of which may touch the heap once warm.
+    tracenorm::obs::reset_process_metrics();
+    tracenorm::obs::set_enabled(true);
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 3);
+    let eng = Engine::from_params(&dims, "partial", &params, Precision::Int8, 4).unwrap();
+    let block = eng.block_raw_len();
+    let mut rng = Pcg64::seeded(4);
+    let frames = Tensor::randn(&[2 * block / dims.feat_dim, dims.feat_dim], 0.7, &mut rng);
+    let mut state = eng.new_state();
+    let mut bd = Breakdown::default();
+
+    eng.stream(&mut state, frames.data(), &mut bd).unwrap();
+    assert_eq!(state.buffered_len(), 0);
+
+    let hits = count_allocs(|| {
+        for _ in 0..5 {
+            eng.buffer_frames(&mut state, &frames.data()[..block], &mut bd);
+            assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+        }
+    });
+    tracenorm::obs::set_enabled(false);
+    assert_eq!(hits, 0, "obs-on steady-state decode loop allocated {hits} times");
+    assert_eq!(state.scratch_grow_events(), 0);
+    // and the recorder actually recorded: spans cover the decode stages
+    // and the int8 kernels hit the counters
+    assert!(!bd.spans.is_empty(), "obs on but no spans recorded");
+    assert!(bd.spans.total_secs() > 0.0);
+    assert!(
+        tracenorm::obs::counters::total_calls() > 0,
+        "obs on but kernel counters never moved"
+    );
+}
+
+#[test]
+fn obs_disabled_costs_nothing_and_freezes_counters() {
+    // With the recorder off (the default), decode must not touch the
+    // kernel counters or the span accumulators — the only cost is the
+    // relaxed flag load at each instrumentation site.
+    tracenorm::obs::reset_process_metrics();
+    tracenorm::obs::set_enabled(false);
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 3);
+    let eng = Engine::from_params(&dims, "partial", &params, Precision::Int8, 4).unwrap();
+    let block = eng.block_raw_len();
+    let mut rng = Pcg64::seeded(4);
+    let frames = Tensor::randn(&[2 * block / dims.feat_dim, dims.feat_dim], 0.7, &mut rng);
+    let mut state = eng.new_state();
+    let mut bd = Breakdown::default();
+
+    let calls_before = tracenorm::obs::counters::total_calls();
+    eng.stream(&mut state, frames.data(), &mut bd).unwrap();
+    for _ in 0..3 {
+        eng.buffer_frames(&mut state, &frames.data()[..block], &mut bd);
+        assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+    }
+    assert_eq!(
+        tracenorm::obs::counters::total_calls(),
+        calls_before,
+        "kernel counters moved while obs was disabled"
+    );
+    assert!(bd.spans.is_empty(), "spans recorded while obs was disabled");
+    // the plain timing breakdown still works with the recorder off
+    assert!(bd.frames > 0 && bd.acoustic_total() > 0.0);
+}
+
+#[test]
 fn pool_per_timestep_loop_reuses_the_arena() {
     // The pool's poll API hands out owned rows, so a pump round is not
     // literally zero-alloc at the API boundary — but the per-timestep

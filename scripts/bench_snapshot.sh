@@ -25,3 +25,19 @@ fi
 cp "$tmp" "$out"
 echo "wrote baseline to $out"
 echo "commit it so scripts/bench_gate.py arms the CI tolerance gate"
+
+# Alongside the kernel baseline, record a flight-recorder span snapshot:
+# a short obs-on serve whose JSONL metrics stream (stage self-time
+# breakdown + kernel counters, DESIGN.md §10) lands next to the baseline
+# so span-share drift across machines/commits is diffable.
+spans_out="$(cd .. && pwd)/BENCH_SPANS.jsonl"
+echo "==> obs span snapshot (stream-serve --obs on)"
+cargo run --release -q "$@" -- stream-serve --utts 8 --rate 1000 --pool 2 --chunk 8 \
+  --seed 7 --obs on --metrics-out "$spans_out" > /dev/null
+if command -v python3 >/dev/null 2>&1; then
+  while IFS= read -r line; do
+    printf '%s' "$line" | python3 -m json.tool >/dev/null \
+      || { echo "span snapshot emitted an invalid JSONL line"; exit 1; }
+  done < "$spans_out"
+fi
+echo "wrote span snapshot to $spans_out"

@@ -80,6 +80,34 @@ for build in "" "--features simd"; do
   done
 done
 
+echo "==> obs smoke: flight recorder report + JSONL metrics stream"
+# --obs on must surface the self-time span breakdown, kernel counters and
+# the event journal in the JSON report, and --metrics-out must emit one
+# valid JSON object per line with the versioned envelope (DESIGN.md §10).
+oj="$(cargo run --release -q -- stream-serve --utts 4 --rate 1000 --pool 2 --chunk 8 \
+  --seed 7 --obs on --metrics-out "$ndir/metrics.jsonl" --json)"
+echo "$oj" | grep -q '"schema_version": 1' \
+  || { echo "obs smoke: --json report missing schema_version"; exit 1; }
+echo "$oj" | grep -q '"obs"' \
+  || { echo "obs smoke: --json report missing the obs block"; exit 1; }
+echo "$oj" | grep -q '"spans"' \
+  || { echo "obs smoke: obs block missing the span breakdown"; exit 1; }
+echo "$oj" | grep -q '"journal"' \
+  || { echo "obs smoke: obs block missing the event journal"; exit 1; }
+test -s "$ndir/metrics.jsonl" || { echo "obs smoke: --metrics-out wrote nothing"; exit 1; }
+grep -q '"schema_version":1' "$ndir/metrics.jsonl" \
+  || { echo "obs smoke: JSONL snapshots missing schema_version"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+  while IFS= read -r line; do
+    printf '%s' "$line" | python3 -m json.tool >/dev/null \
+      || { echo "obs smoke: invalid JSONL line: $line"; exit 1; }
+  done < "$ndir/metrics.jsonl"
+fi
+cargo run --release -q -- stream-serve --utts 4 --rate 1000 --pool 2 --chunk 8 \
+  --seed 7 --obs on > "$ndir/obs_text.log"
+grep -q "self-time" "$ndir/obs_text.log" \
+  || { echo "obs smoke: text report missing the self-time table"; exit 1; }
+
 echo "==> ladder smoke: 2-rung build + ramped adaptive-fidelity serve"
 cargo run --release -q -- ladder-build --out "$ldir" --fracs 0.5,0.25 --seed 7
 report="$(cargo run --release -q -- stream-serve --ladder "$ldir" --utts 10 --ramp-utts 6 \
