@@ -1,9 +1,11 @@
 //! Bench: the Figure-6 GEMM comparison (farm vs gemmlowp-style vs f32)
 //! across batch sizes, plus the **backend sweep**: every registered
-//! [`GemmBackend`](tracenorm::kernels::GemmBackend) × m ∈ {1,2,4,8} on
-//! steady-state `*_into` calls — weights pre-packed once, output tensor
-//! reused — so the numbers measure exactly what the engine's hot loop
-//! pays.  Packing cost is excluded from the steady-state rows and
+//! [`GemmBackend`](tracenorm::kernels::GemmBackend) × m ∈ {1,2,4,8} ×
+//! bits ∈ {8,4} on steady-state `*_into` calls — weights pre-packed
+//! once, output tensor reused — so the numbers measure exactly what the
+//! engine's hot loop pays.  Every quantized row carries its `bits` and
+//! `bytes_per_weight` (1.0 int8, 0.625 int4 at the 32-column scale
+//! group).  Packing cost is excluded from the steady-state rows and
 //! reported separately.
 //!
 //! Emits machine-readable `BENCH_gemm.json` (override the path with
@@ -17,11 +19,12 @@ use harness::{bench, header};
 
 use tracenorm::jsonx::Json;
 use tracenorm::kernels::{
-    all_backends, farm_counts, gemm_f32, qgemm_farm, qgemm_lowp, simd_runtime_available,
-    GemmBackend, PackedGatePanels, PackedQMatrix, PreparedQMatrix,
+    all_backends, farm4_counts, farm_counts, gemm_f32, qgemm_farm, qgemm_lowp,
+    simd_runtime_available, GemmBackend, PackedGatePanels, PackedQ4Matrix, PackedQMatrix,
+    PreparedQ4Matrix, PreparedQMatrix,
 };
 use tracenorm::prng::Pcg64;
-use tracenorm::quant::QMatrix;
+use tracenorm::quant::{quantize4, QMatrix};
 use tracenorm::tensor::{Tensor, TensorI8};
 
 const N: usize = 6144;
@@ -115,10 +118,73 @@ fn main() {
                 kinds.push(("qgemv", tv));
             }
             for (kind, secs) in kinds {
+                let bits = if kind == "gemm_f32" { 32 } else { 8 };
+                let bpw = if kind == "gemm_f32" { 4.0 } else { 1.0 };
                 results.push(Json::obj(vec![
                     ("backend", Json::str(be.name())),
                     ("kind", Json::str(kind)),
                     ("m", Json::num(m as f64)),
+                    ("bits", Json::num(bits as f64)),
+                    ("bytes_per_weight", Json::num(bpw)),
+                    ("secs", Json::num(secs)),
+                    ("gops", Json::num(ops / secs / 1e9)),
+                ]));
+            }
+        }
+        println!();
+    }
+
+    // -- int4 sweep: the packed sub-byte path on the same shapes ------------
+
+    header(&format!("int4 sweep: {N}x{K} nibble-packed, *_into steady state"));
+    let wq4 = quantize4(&wf);
+    // weight-stream bytes per weight scalar: packed nibbles + per-group
+    // scales (0.625 at the 32-column group), vs 1.0 for int8
+    let bpw4 = wq4.payload_bytes() as f64 / (N * K) as f64;
+    let tq4pack = bench("PackedQ4Matrix::pack (one-time plan cost)", 200, || {
+        std::hint::black_box(PackedQ4Matrix::pack(&wq4));
+    });
+    let prepped4 = PreparedQ4Matrix::new(wq4.clone());
+    let prepped4_gates = PreparedQ4Matrix::new_with_gates(wq4.clone());
+    assert!(prepped4_gates.gates.is_some(), "int4 fused sweep needs gate panels");
+    for (_, be) in all_backends() {
+        for m in [1usize, 2, 4, 8] {
+            let x = rand_i8(&[m, K], &mut rng);
+            let scales: Vec<f32> = (0..m).map(|i| 0.008 + 0.001 * i as f32).collect();
+            let ops = farm4_counts(m, N, K).ops() as f64;
+            let mut out = Tensor::zeros(&[m, N]);
+
+            let tq = bench(&format!("{:<8} qgemm4_farm_into     m={m}", be.name()), 300, || {
+                be.qgemm4_farm_into(x.data(), m, &prepped4, 0.01, &mut out);
+                std::hint::black_box(&out);
+            });
+            let tr = bench(&format!("{:<8} qgemm4_farm_rows     m={m}", be.name()), 300, || {
+                be.qgemm4_farm_rows_into(x.data(), m, &prepped4, &scales, &mut out);
+                std::hint::black_box(&out);
+            });
+            let tg = bench(&format!("{:<8} qgemm4_gates_rows    m={m}", be.name()), 300, || {
+                be.qgemm4_gates_rows_into(x.data(), m, &prepped4_gates, &scales, &mut out);
+                std::hint::black_box(&out);
+            });
+            let mut kinds = vec![
+                ("qgemm4_farm", tq),
+                ("qgemm4_farm_rows", tr),
+                ("qgemm4_gates", tg),
+            ];
+            if m == 1 {
+                let tv = bench(&format!("{:<8} qgemv4_into          m=1", be.name()), 300, || {
+                    be.qgemv4_into(x.data(), &prepped4, 0.01, &mut out);
+                    std::hint::black_box(&out);
+                });
+                kinds.push(("qgemv4", tv));
+            }
+            for (kind, secs) in kinds {
+                results.push(Json::obj(vec![
+                    ("backend", Json::str(be.name())),
+                    ("kind", Json::str(kind)),
+                    ("m", Json::num(m as f64)),
+                    ("bits", Json::num(4.0)),
+                    ("bytes_per_weight", Json::num(bpw4)),
                     ("secs", Json::num(secs)),
                     ("gops", Json::num(ops / secs / 1e9)),
                 ]));
@@ -133,6 +199,7 @@ fn main() {
         ("k", Json::num(K as f64)),
         ("pack_secs", Json::num(tpack)),
         ("gate_pack_secs", Json::num(tgpack)),
+        ("q4_pack_secs", Json::num(tq4pack)),
         ("pack_excluded_from_steady_state", Json::Bool(true)),
         // when false, any backend="simd" rows below are scalar-fallback
         // timings — do not read them as vector-path numbers

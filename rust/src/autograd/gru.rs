@@ -53,22 +53,52 @@ fn leaf_param(
     Ok(v)
 }
 
+/// Weight leaf, optionally wrapped in a straight-through `fake_quant`
+/// node (quantization-aware fine-tuning, `--bits 4`).  Cached per name in
+/// `fq` so the recurrent weights — applied once per timestep — quantize
+/// once on the tape, not once per step; gradients still land on the raw
+/// leaf (the STE backward is a pass-through).
+fn weight_param(
+    tape: &mut Tape,
+    params: &ParamSet,
+    leaves: &mut BTreeMap<String, Var>,
+    fq: &mut BTreeMap<String, Var>,
+    qat_bits: Option<u32>,
+    name: &str,
+) -> Result<Var> {
+    if let Some(&v) = fq.get(name) {
+        return Ok(v);
+    }
+    let leaf = leaf_param(tape, params, leaves, name)?;
+    let v = match qat_bits {
+        Some(bits) => tape.fake_quant(leaf, bits),
+        None => leaf,
+    };
+    fq.insert(name.to_string(), v);
+    Ok(v)
+}
+
 /// Apply a possibly-factored group: `(x·Vᵀ)·Uᵀ` when `{base}_u` exists,
-/// else `x·Wᵀ` from `{base}_w`.
+/// else `x·Wᵀ` from `{base}_w`.  Weights (never biases) go through
+/// [`weight_param`], so QAT rounds exactly the tensors `ladder-build`
+/// will quantize.
+#[allow(clippy::too_many_arguments)]
 fn apply_group(
     tape: &mut Tape,
     params: &ParamSet,
     leaves: &mut BTreeMap<String, Var>,
+    fq: &mut BTreeMap<String, Var>,
+    qat_bits: Option<u32>,
     base: &str,
     x: Var,
 ) -> Result<Var> {
     if params.contains(&format!("{base}_u")) {
-        let u = leaf_param(tape, params, leaves, &format!("{base}_u"))?;
-        let v = leaf_param(tape, params, leaves, &format!("{base}_v"))?;
+        let u = weight_param(tape, params, leaves, fq, qat_bits, &format!("{base}_u"))?;
+        let v = weight_param(tape, params, leaves, fq, qat_bits, &format!("{base}_v"))?;
         let mid = tape.matmul_nt(x, v);
         Ok(tape.matmul_nt(mid, u))
     } else {
-        let w = leaf_param(tape, params, leaves, &format!("{base}_w"))?;
+        let w = weight_param(tape, params, leaves, fq, qat_bits, &format!("{base}_w"))?;
         Ok(tape.matmul_nt(x, w))
     }
 }
@@ -86,6 +116,19 @@ fn pad_to_stride(feats: &Tensor, stride: usize) -> Tensor {
 
 /// Build the forward graph for one utterance up to the log-prob rows.
 pub fn build_forward(params: &ParamSet, dims: &ModelDims, feats: &Tensor) -> Result<Forward> {
+    build_forward_qat(params, dims, feats, None)
+}
+
+/// [`build_forward`] with optional quantization-aware training: when
+/// `qat_bits` is set, every weight matrix passes through a
+/// straight-through `fake_quant` node at that width before its GEMM, so
+/// the loss is computed against inference-time rounding.
+pub fn build_forward_qat(
+    params: &ParamSet,
+    dims: &ModelDims,
+    feats: &Tensor,
+    qat_bits: Option<u32>,
+) -> Result<Forward> {
     if feats.rank() != 2 || feats.cols() != dims.feat_dim {
         return Err(Error::Train(format!(
             "feats {:?} do not match feat_dim {}",
@@ -98,13 +141,14 @@ pub fn build_forward(params: &ParamSet, dims: &ModelDims, feats: &Tensor) -> Res
     }
     let mut tape = Tape::new();
     let mut leaves = BTreeMap::new();
+    let mut fq = BTreeMap::new();
     let padded = pad_to_stride(feats, dims.total_stride);
     let mut x = tape.leaf(padded, false);
 
     // frontend: stack-and-project conv layers (time-batched by nature)
     for (i, c) in dims.conv.iter().enumerate() {
         x = tape.stack_rows(x, c.context);
-        x = apply_group(&mut tape, params, &mut leaves, &format!("conv{i}"), x)?;
+        x = apply_group(&mut tape, params, &mut leaves, &mut fq, qat_bits, &format!("conv{i}"), x)?;
         let b = leaf_param(&mut tape, params, &mut leaves, &format!("conv{i}_b"))?;
         x = tape.add_bias(x, b);
         x = tape.relu(x);
@@ -112,14 +156,16 @@ pub fn build_forward(params: &ParamSet, dims: &ModelDims, feats: &Tensor) -> Res
 
     // GRU stack: time-batched non-recurrent GEMM, sequential recurrence
     for (i, &h_dim) in dims.gru_dims.iter().enumerate() {
-        let gx_raw = apply_group(&mut tape, params, &mut leaves, &format!("nonrec{i}"), x)?;
+        let gx_raw =
+            apply_group(&mut tape, params, &mut leaves, &mut fq, qat_bits, &format!("nonrec{i}"), x)?;
         let b = leaf_param(&mut tape, params, &mut leaves, &format!("gru{i}_b"))?;
         let gx = tape.add_bias(gx_raw, b);
         let t_steps = tape.value(gx).rows();
         let mut h = tape.leaf(Tensor::zeros(&[1, h_dim]), false);
         let mut rows = Vec::with_capacity(t_steps);
         for t in 0..t_steps {
-            let gh = apply_group(&mut tape, params, &mut leaves, &format!("rec{i}"), h)?;
+            let gh =
+                apply_group(&mut tape, params, &mut leaves, &mut fq, qat_bits, &format!("rec{i}"), h)?;
             let gxt = tape.row(gx, t);
             let (gxz, ghz) = (
                 tape.slice_cols(gxt, 0, h_dim),
@@ -150,11 +196,11 @@ pub fn build_forward(params: &ParamSet, dims: &ModelDims, feats: &Tensor) -> Res
     }
 
     // head: fc (+ReLU) → output projection → log-softmax
-    x = apply_group(&mut tape, params, &mut leaves, "fc", x)?;
+    x = apply_group(&mut tape, params, &mut leaves, &mut fq, qat_bits, "fc", x)?;
     let fcb = leaf_param(&mut tape, params, &mut leaves, "fc_b")?;
     x = tape.add_bias(x, fcb);
     x = tape.relu(x);
-    x = apply_group(&mut tape, params, &mut leaves, "out", x)?;
+    x = apply_group(&mut tape, params, &mut leaves, &mut fq, qat_bits, "out", x)?;
     let outb = leaf_param(&mut tape, params, &mut leaves, "out_b")?;
     x = tape.add_bias(x, outb);
     let logp = tape.log_softmax(x);
@@ -181,7 +227,19 @@ pub fn utterance_grads(
     feats: &Tensor,
     labels: &[i32],
 ) -> Result<(f32, BTreeMap<String, Tensor>)> {
-    let mut fwd = build_forward(params, dims, feats)?;
+    utterance_grads_qat(params, dims, feats, labels, None)
+}
+
+/// [`utterance_grads`] with optional straight-through fake quantization
+/// of the weights (see [`build_forward_qat`]).
+pub fn utterance_grads_qat(
+    params: &ParamSet,
+    dims: &ModelDims,
+    feats: &Tensor,
+    labels: &[i32],
+    qat_bits: Option<u32>,
+) -> Result<(f32, BTreeMap<String, Tensor>)> {
+    let mut fwd = build_forward_qat(params, dims, feats, qat_bits)?;
     let loss_var = fwd.tape.ctc(fwd.logp, labels)?;
     let loss = fwd.tape.value(loss_var).data()[0];
     let grads = fwd.tape.backward(loss_var);
@@ -196,6 +254,17 @@ pub fn batch_ctc_grads(
     dims: &ModelDims,
     utts: &[(Tensor, Vec<i32>)],
 ) -> Result<(f32, ParamSet)> {
+    batch_ctc_grads_qat(params, dims, utts, None)
+}
+
+/// [`batch_ctc_grads`] with optional straight-through fake quantization
+/// of the weights (`train --stage 2 --bits 4`).
+pub fn batch_ctc_grads_qat(
+    params: &ParamSet,
+    dims: &ModelDims,
+    utts: &[(Tensor, Vec<i32>)],
+    qat_bits: Option<u32>,
+) -> Result<(f32, ParamSet)> {
     if utts.is_empty() {
         return Err(Error::Train("batch_ctc_grads: empty batch".into()));
     }
@@ -203,7 +272,7 @@ pub fn batch_ctc_grads(
     let mut grads = ParamSet::zeros_like(params);
     let mut loss_sum = 0.0f64;
     for (feats, labels) in utts {
-        let (loss, ugrads) = utterance_grads(params, dims, feats, labels)?;
+        let (loss, ugrads) = utterance_grads_qat(params, dims, feats, labels, qat_bits)?;
         loss_sum += loss as f64;
         for (name, mut g) in ugrads {
             g.scale(scale);
@@ -286,5 +355,55 @@ mod tests {
         // the loss pushes on every weight in the stack
         assert!(grads.get("rec0_u").unwrap().abs_max() > 0.0);
         assert!(grads.get("out_w").unwrap().abs_max() > 0.0);
+    }
+
+    #[test]
+    fn qat_forward_sees_the_serving_quantizer() {
+        // fake_quant(w) is exactly dequantize4(quantize4(w)), so the QAT
+        // forward must agree with an f32 engine built from the rounded
+        // weights — the STE trains against the rounding serve will apply
+        use crate::infer::{Breakdown, Engine, Precision};
+        use crate::quant::fake_quantize4;
+        let dims = tiny_dims();
+        let params = model::init_factored_full(&dims, 21);
+        let mut rounded = ParamSet::new();
+        for (name, t) in params.iter() {
+            if name.ends_with("_b") {
+                rounded.set(name.clone(), t.clone());
+            } else {
+                rounded.set(name.clone(), fake_quantize4(t));
+            }
+        }
+        let mut rng = Pcg64::seeded(22);
+        let feats = Tensor::randn(&[12, 6], 0.7, &mut rng);
+        let fwd = build_forward_qat(&params, &dims, &feats, Some(4)).unwrap();
+        let logp = fwd.tape.value(fwd.logp);
+        let eng = Engine::from_params(&dims, "partial", &rounded, Precision::F32, 4).unwrap();
+        let mut bd = Breakdown::default();
+        let (_, rows) = eng.transcribe(&feats, &mut bd).unwrap();
+        assert_eq!(rows.len(), logp.rows());
+        for (t, row) in rows.iter().enumerate() {
+            for (a, b) in logp.row(t).iter().zip(row) {
+                assert!((a - b).abs() < 1e-4, "step {t}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn qat_grads_flow_through_the_ste_to_every_weight() {
+        let dims = tiny_dims();
+        let params = model::init_factored_full(&dims, 23);
+        let mut rng = Pcg64::seeded(24);
+        let utts: Vec<(Tensor, Vec<i32>)> = (0..2)
+            .map(|_| (Tensor::randn(&[10, 6], 0.7, &mut rng), vec![1, 2]))
+            .collect();
+        let (loss, grads) = batch_ctc_grads_qat(&params, &dims, &utts, Some(4)).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), params.len());
+        for (name, g) in grads.iter() {
+            assert!(g.abs_max().is_finite(), "{name} grad non-finite");
+        }
+        assert!(grads.get("rec0_u").unwrap().abs_max() > 0.0);
+        assert!(grads.get("conv0_w").unwrap().abs_max() > 0.0);
     }
 }

@@ -27,7 +27,10 @@ pub mod optim;
 pub mod tape;
 
 pub use ctc::ctc_loss_grad;
-pub use gru::{batch_ctc_grads, build_forward, utterance_grads, Forward};
+pub use gru::{
+    batch_ctc_grads, batch_ctc_grads_qat, build_forward, build_forward_qat, utterance_grads,
+    utterance_grads_qat, Forward,
+};
 pub use ops::log_softmax_rows;
 pub use optim::{clip_grads, grad_norm, sgd_momentum_step, surrogate_penalty, NativeOpts};
 pub use tape::{Tape, Var};

@@ -54,6 +54,11 @@ pub(crate) enum Op {
     /// CTC negative log-likelihood of the input log-prob rows against a
     /// fixed label sequence; `grad` is ∂loss/∂logp cached at forward time
     Ctc { grad: Tensor },
+    /// Straight-through fake quantization: forward runs the serving
+    /// quantize→dequantize round trip (int4 per-group or int8 per-tensor),
+    /// backward passes the gradient through unchanged — the STE that lets
+    /// stage-2 fine-tuning see inference-time rounding (`--bits 4`).
+    FakeQuant,
 }
 
 impl Tape {
@@ -181,6 +186,19 @@ impl Tape {
             return Err(Error::Train(format!("CTC loss is non-finite ({loss})")));
         }
         Ok(self.push(Op::Ctc { grad }, vec![logp], Tensor::scalar(loss)))
+    }
+
+    /// Quantize-dequantize `x` through the serving quantizer for `bits`
+    /// (4 = per-group int4, 8 = per-tensor int8) with a straight-through
+    /// gradient.  Panics on any other bit width — callers validate at the
+    /// CLI boundary.
+    pub fn fake_quant(&mut self, x: Var, bits: u32) -> Var {
+        let y = match bits {
+            4 => crate::quant::fake_quantize4(self.value(x)),
+            8 => crate::quant::fake_quantize8(self.value(x)),
+            b => panic!("fake_quant supports bits 4 or 8, got {b}"),
+        };
+        self.push(Op::FakeQuant, vec![x], y)
     }
 }
 
@@ -398,6 +416,12 @@ pub(crate) fn backward_op(tape: &Tape, node: &Node, g: &Tensor, lower: &mut [Opt
                 let mut dx = grad.clone();
                 dx.scale(g.data()[0]);
                 acc(&mut lower[idx(0)], dx);
+            }
+        }
+        Op::FakeQuant => {
+            // straight-through estimator: d(fake_quant(x))/dx ≈ I
+            if needs(0) {
+                acc(&mut lower[idx(0)], g.clone());
             }
         }
     }

@@ -30,11 +30,16 @@ pub struct NativeOpts {
     pub momentum: f32,
     /// global gradient-norm ceiling; 0 disables clipping
     pub clip: f32,
+    /// quantization-aware fine-tuning: wrap every weight matrix in a
+    /// straight-through `fake_quant` node at the given width (4 or 8)
+    /// so the forward pass sees inference-time rounding.  `None`
+    /// trains in plain f32 (stage 1 always clears this).
+    pub qat_bits: Option<u32>,
 }
 
 impl Default for NativeOpts {
     fn default() -> Self {
-        NativeOpts { momentum: 0.9, clip: 2.0 }
+        NativeOpts { momentum: 0.9, clip: 2.0, qat_bits: None }
     }
 }
 

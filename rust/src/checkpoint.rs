@@ -17,6 +17,8 @@
 //! per entry: u32 name_len | name bytes | u8 dtype | u32 rank | u64 dims...
 //!            | dtype 0 (f32): f32 data...
 //!            | dtype 1 (int8): f32 scale | i8 data...
+//!            | dtype 2 (int4): u32 group | f32 scales (n·⌈k/group⌉)
+//!                              | packed nibbles (n·⌈k/2⌉ bytes)
 //! trailer: u64 fnv1a-64 of everything before the trailer
 //! ```
 //!
@@ -35,7 +37,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::jsonx::Json;
 use crate::model::ParamSet;
-use crate::quant::QMatrix;
+use crate::quant::{Q4Matrix, QMatrix};
 use crate::runtime::ModelDims;
 use crate::tensor::{Tensor, TensorI8};
 
@@ -45,6 +47,7 @@ const VERSION_V2: u32 = 2;
 
 const DTYPE_F32: u8 = 0;
 const DTYPE_I8: u8 = 1;
+const DTYPE_I4: u8 = 2;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
@@ -152,6 +155,9 @@ pub enum Entry {
     /// Int8 weights with their quantization scale, installed verbatim by
     /// [`crate::infer::Engine::from_entries`] — no re-quantization at load.
     I8(QMatrix),
+    /// Int4 weights: two nibbles per byte with per-group f32 scales, the
+    /// half-size ladder rungs built by `ladder-build --bits 4`.
+    I4(Q4Matrix),
 }
 
 impl Entry {
@@ -159,6 +165,7 @@ impl Entry {
         match self {
             Entry::F32(t) => t.shape(),
             Entry::I8(q) => q.q.shape(),
+            Entry::I4(q) => q.shape(),
         }
     }
 
@@ -167,6 +174,7 @@ impl Entry {
         match self {
             Entry::F32(t) => t.len(),
             Entry::I8(q) => q.q.data().len(),
+            Entry::I4(q) => q.rows() * q.cols(),
         }
     }
 
@@ -174,11 +182,13 @@ impl Entry {
         self.len() == 0
     }
 
-    /// On-device payload bytes (f32 = 4/elem; int8 = 1/elem + the scale).
+    /// On-device payload bytes (f32 = 4/elem; int8 = 1/elem + the scale;
+    /// int4 = packed nibbles + per-group scales).
     pub fn payload_bytes(&self) -> usize {
         match self {
             Entry::F32(t) => t.len() * 4,
             Entry::I8(q) => q.q.data().len() + 4,
+            Entry::I4(q) => q.payload_bytes(),
         }
     }
 }
@@ -243,6 +253,16 @@ pub fn artifact_to_bytes(a: &Artifact) -> Result<Vec<u8>> {
                 buf.extend_from_slice(&q.scale.to_le_bytes());
                 buf.extend_from_slice(bytes_of_i8(q.q.data()));
             }
+            Entry::I4(q) => {
+                ensure_finite(name, q.scales())?;
+                buf.push(DTYPE_I4);
+                push_shape(&mut buf, q.shape());
+                buf.extend_from_slice(&(q.group() as u32).to_le_bytes());
+                for s in q.scales() {
+                    buf.extend_from_slice(&s.to_le_bytes());
+                }
+                buf.extend_from_slice(q.data());
+            }
         }
     }
     let check = fnv1a(&buf);
@@ -282,6 +302,24 @@ pub fn artifact_from_bytes(bytes: &[u8]) -> Result<Artifact> {
                         let data: Vec<i8> =
                             r.take(count)?.iter().map(|&b| b as i8).collect();
                         Entry::I8(QMatrix { q: TensorI8::new(&shape, data)?, scale })
+                    }
+                    DTYPE_I4 => {
+                        if shape.len() != 2 {
+                            return Err(err(format!(
+                                "int4 entry '{name}' must be rank-2, got rank {}",
+                                shape.len()
+                            )));
+                        }
+                        let (n4, k4) = (shape[0], shape[1]);
+                        let group = r.u32()? as usize;
+                        if group == 0 {
+                            return Err(err(format!("int4 entry '{name}' has group 0")));
+                        }
+                        let scales = r.f32_vec(n4 * k4.div_ceil(group))?;
+                        let data = r.take(n4 * k4.div_ceil(2))?.to_vec();
+                        Entry::I4(Q4Matrix::from_parts(n4, k4, group, data, scales).ok_or_else(
+                            || err(format!("int4 entry '{name}' has inconsistent sizes")),
+                        )?)
                     }
                     d => return Err(err(format!("unknown entry dtype {d} for '{name}'"))),
                 };
@@ -421,7 +459,7 @@ pub fn train_state_from_artifact(a: &Artifact) -> Result<TrainState> {
     for (name, e) in &a.entries {
         let t = match e {
             Entry::F32(t) => t.clone(),
-            Entry::I8(_) => {
+            Entry::I8(_) | Entry::I4(_) => {
                 return Err(err(format!("train-state entry '{name}' must be f32")))
             }
         };
@@ -460,9 +498,9 @@ pub fn params_from_artifact(a: &Artifact) -> Result<ParamSet> {
         }
         match e {
             Entry::F32(t) => params.set(name.clone(), t.clone()),
-            Entry::I8(_) => {
+            Entry::I8(_) | Entry::I4(_) => {
                 return Err(err(format!(
-                    "entry '{name}' is int8 — quantized ladder artifacts cannot load as a \
+                    "entry '{name}' is quantized — ladder artifacts cannot load as a \
                      ParamSet; use Registry::load"
                 )))
             }
@@ -681,6 +719,70 @@ mod tests {
         a
     }
 
+    fn sample_artifact_i4() -> Artifact {
+        use crate::quant::quantize4;
+        let mut rng = Pcg64::seeded(11);
+        let meta = Json::obj(vec![
+            ("kind", Json::str("ladder-rung")),
+            ("bits", Json::num(4.0)),
+        ]);
+        let mut a = Artifact::new(meta);
+        // odd k and a ragged scale-group tail: 37 cols at group 32
+        a.set("rec0_u", Entry::I4(quantize4(&Tensor::randn(&[9, 37], 0.7, &mut rng))));
+        a.set("rec0_v", Entry::I4(quantize4(&Tensor::randn(&[5, 64], 0.7, &mut rng))));
+        a.set("gru0_b", Entry::F32(Tensor::randn(&[9], 0.1, &mut rng)));
+        a
+    }
+
+    #[test]
+    fn v2_int4_roundtrip_is_bit_exact() {
+        let a = sample_artifact_i4();
+        let b = artifact_from_bytes(&artifact_to_bytes(&a).unwrap()).unwrap();
+        assert_eq!(a.meta, b.meta);
+        for (name, e) in &a.entries {
+            match (e, b.get(name).unwrap()) {
+                (Entry::F32(x), Entry::F32(y)) => assert_eq!(x, y),
+                (Entry::I4(x), Entry::I4(y)) => {
+                    assert_eq!(x.shape(), y.shape());
+                    assert_eq!(x.group(), y.group());
+                    assert_eq!(x.data(), y.data());
+                    assert_eq!(x.scales().len(), y.scales().len());
+                    for (sx, sy) in x.scales().iter().zip(y.scales()) {
+                        assert_eq!(sx.to_bits(), sy.to_bits(), "scales must be bit-exact");
+                    }
+                }
+                _ => panic!("entry '{name}' changed dtype through the roundtrip"),
+            }
+        }
+        assert_eq!(a.payload_bytes(), b.payload_bytes());
+        // 9·⌈37/2⌉ + 5·32 nibble bytes, plus (9·2 + 5·2) scales + the bias
+        let rec0_u = a.get("rec0_u").unwrap();
+        assert_eq!(rec0_u.payload_bytes(), 9 * 19 + 9 * 2 * 4);
+        assert_eq!(rec0_u.len(), 9 * 37);
+        assert_eq!(rec0_u.shape(), &[9, 37]);
+    }
+
+    #[test]
+    fn int4_artifacts_rejected_by_f32_loaders() {
+        let a = sample_artifact_i4();
+        let e = params_from_artifact(&a).unwrap_err();
+        assert!(e.to_string().contains("Registry::load"), "should point at the right API: {e}");
+        assert!(train_state_from_artifact(&a).is_err());
+    }
+
+    #[test]
+    fn int4_non_finite_scale_rejected() {
+        use crate::quant::{quantize4, Q4_GROUP};
+        let mut a = sample_artifact_i4();
+        let q = quantize4(&Tensor::new(&[1, 2], vec![1.0, -1.0]).unwrap());
+        let mut scales = q.scales().to_vec();
+        scales[0] = f32::NAN;
+        let bad =
+            Q4Matrix::from_parts(1, 2, Q4_GROUP, q.data().to_vec(), scales).unwrap();
+        a.set("bad_w", Entry::I4(bad));
+        assert!(artifact_to_bytes(&a).is_err());
+    }
+
     #[test]
     fn v2_roundtrip_preserves_types_scales_and_meta() {
         let a = sample_artifact();
@@ -725,7 +827,7 @@ mod tests {
         for (name, t) in p.iter() {
             match a.get(name).unwrap() {
                 Entry::F32(x) => assert_eq!(x, t),
-                Entry::I8(_) => panic!("v1 entries must read back as f32"),
+                _ => panic!("v1 entries must read back as f32"),
             }
         }
     }

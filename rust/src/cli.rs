@@ -18,6 +18,10 @@
 //!                                  --lr F --momentum F --clip F
 //!                                  --lam-rec F --lam-nonrec F --threshold F
 //!                                  --utts N --dev-utts N --batch N --seed N
+//!                                  --bits 4|8 (quantization-aware fine-tune:
+//!                                the forward pass trains through the serving
+//!                                quantizer via a straight-through estimator;
+//!                                stage 1 always stays f32)
 //!                                  --save CKPT (TNCK-v2 train-state: params
 //!                                  + momentum + LR-schedule meta)
 //!                                  --load CKPT (resume a train-state, or
@@ -28,7 +32,7 @@
 //!                                  --threshold 0.9 --transition 3 --total 8
 //!   transcribe                   train briefly, then transcribe test
 //!                                utterances with the embedded engine
-//!                                  --precision int8|f32
+//!                                  --precision int8|f32 --bits 8|4
 //!                                  --backend scalar|blocked|simd|auto
 //!                                  --autotune on|off --fused-gates on|off
 //!   bench-gemm                   quick farm-vs-lowp timing sweep
@@ -40,6 +44,10 @@
 //!                                  bit-identical to the unsharded path)
 //!                                  --json (machine-readable report)
 //!                                  --precision int8|f32 [--load ckpt]
+//!                                  --bits 8|4 (quantized-weight width:
+//!                                8 is the int8 path, 4 the packed sub-byte
+//!                                nibble path with per-group scales —
+//!                                DESIGN.md §4)
 //!                                  --backend scalar|blocked|simd|auto
 //!                                (the GEMM backend; simd needs the `simd`
 //!                                cargo feature — DESIGN.md §4)
@@ -63,11 +71,11 @@
 //!                                  --ladder DIR --ramp-utts N --ramp-rate F
 //!                                  --target-p99-ms F
 //!   ladder-build                 offline rank-ladder build: truncated SVD
-//!                                per group at each rank fraction, int8
-//!                                quantization, one TNCK-v2 artifact per
-//!                                rung + ladder.json
+//!                                per group at each rank fraction, int8 or
+//!                                packed-int4 quantization (--bits), one
+//!                                TNCK-v2 artifact per rung + ladder.json
 //!                                  --out DIR --fracs 0.75,0.5,0.25
-//!                                  [--load ckpt]
+//!                                  --bits 8|4 [--load ckpt]
 //! ```
 //!
 //! Every flag becomes a config key (`--lam-rec 0.1` → `cli.lam-rec`), and
@@ -92,21 +100,27 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
   repro train --native [--stage two|1|2] [--epochs N] [--transition N] [--lr F]
               [--momentum F] [--clip F] [--lam-rec F] [--lam-nonrec F] [--threshold T]
               [--utts N] [--dev-utts N] [--batch N] [--seed N] [--load CKPT] [--save CKPT]
-              [--metrics-out FILE]
+              [--bits 4|8] [--metrics-out FILE]
               (offline two-stage trace-norm training, no XLA; saves a TNCK-v2
                train-state that ladder-build / stream-serve --load serve directly;
+               --bits fine-tunes through the int4/int8 serving quantizer — a
+               straight-through estimator; stage 1 always trains plain f32;
                --metrics-out writes one versioned JSONL snapshot per epoch)
   repro two-stage [--stage1 A] [--family F] [--threshold T] [--transition E] [--total E]
-  repro transcribe [--precision int8|f32] [--utts N] [--backend scalar|blocked|simd|auto]
+  repro transcribe [--precision int8|f32] [--bits 8|4] [--utts N]
+                   [--backend scalar|blocked|simd|auto]
                    [--autotune on|off] [--fused-gates on|off]
   repro bench-gemm [--reps N]
   repro stream-serve [--shards N] [--pool N] [--rate F] [--utts N] [--chunk N] [--json]
-                     [--precision int8|f32] [--rank-frac F] [--time-batch N] [--scheme S]
-                     [--load CKPT] [--seed N] [--backend scalar|blocked|simd|auto]
+                     [--precision int8|f32] [--bits 8|4] [--rank-frac F] [--time-batch N]
+                     [--scheme S] [--load CKPT] [--seed N]
+                     [--backend scalar|blocked|simd|auto]
                      [--autotune on|off] [--fused-gates on|off] [--obs on|off]
                      [--metrics-out FILE]
                      (--shards N spreads sessions over N worker threads; --shards 1,
                       the default, is bit-identical to the unsharded serving path;
+                      --bits 4 serves packed sub-byte weights — int4 nibbles with
+                      per-group scales, bit-identical across backends;
                       --autotune off pins the default NR/KC packing tiles;
                       --fused-gates off pins the plain stacked recurrent sweep —
                       decoding is bit-identical on or off;
@@ -119,8 +133,8 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                      [--fused-gates on|off] [--obs on|off] [--metrics-out FILE]
                      (adaptive-fidelity serving over a built rank ladder; per-shard
                       fidelity controllers with a merged, shard-tagged shift log)
-  repro ladder-build --out DIR [--fracs F,F,...] [--load CKPT] [--seed N]
-                     (offline SVD-truncate + int8-quantize, one artifact per rung)
+  repro ladder-build --out DIR [--fracs F,F,...] [--bits 8|4] [--load CKPT] [--seed N]
+                     (offline SVD-truncate + int8/int4-quantize, one artifact per rung)
 common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";
 
 /// Parse argv (excluding argv[0]).

@@ -48,10 +48,10 @@ use crate::checkpoint::Entry;
 use crate::data::labels_to_text;
 use crate::decoder;
 use crate::error::{Error, Result};
-use crate::kernels::{self, BackendSel, GemmBackend, PreparedQMatrix};
+use crate::kernels::{self, BackendSel, GemmBackend, PreparedQ4Matrix, PreparedQMatrix};
 use crate::model::ParamSet;
 use crate::obs::{self, OpKind, SpanSet, Stage};
-use crate::quant::{quantize, quantize_into};
+use crate::quant::{quantize, quantize4, quantize_into};
 use crate::runtime::ModelDims;
 use crate::tensor::Tensor;
 
@@ -60,14 +60,29 @@ use crate::tensor::Tensor;
 pub enum Precision {
     F32,
     Int8,
+    /// Sub-byte weights: int4 nibbles with per-group scales (`--bits 4`).
+    Int4,
 }
 
-/// A dense operator `y = x Wᵀ`, f32 or int8-quantized.  Int8 weights are
-/// prepared for every backend layout at construction (plan time).
+impl Precision {
+    /// Lower-case label used in reports and logs (`stream-serve --json`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+}
+
+/// A dense operator `y = x Wᵀ`, f32, int8- or int4-quantized.  Quantized
+/// weights are prepared for every backend layout at construction (plan
+/// time).
 #[derive(Clone, Debug)]
 enum QDense {
     F32(Tensor),
     I8(PreparedQMatrix),
+    I4(PreparedQ4Matrix),
 }
 
 /// Run one backend kernel call under the obs kernel counters: op kind,
@@ -100,6 +115,35 @@ fn kernel_obs<R>(
     r
 }
 
+/// [`kernel_obs`] for the int4 ops: bytes come from
+/// [`kernels::farm4_counts`] (nibble stream + per-group scales), so the
+/// GOP/s-per-byte reporting stays honest at `--bits 4`.
+#[inline]
+fn kernel_obs4<R>(
+    be: &dyn GemmBackend,
+    kind: OpKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    f: impl FnOnce() -> R,
+) -> R {
+    if !obs::enabled() {
+        return f();
+    }
+    let t0 = std::time::Instant::now();
+    let r = f();
+    let c = kernels::farm4_counts(m, n, k);
+    obs::counters::record(
+        be.name(),
+        kind,
+        m,
+        c.macs,
+        c.bytes_read + c.bytes_written,
+        t0.elapsed().as_nanos() as u64,
+    );
+    r
+}
+
 /// Time activation quantization into the thread-local pending cell the
 /// enclosing stage drains ([`obs::spans::take_pending_quantize`]), so
 /// quantize self-time is attributed exactly once.
@@ -119,6 +163,7 @@ impl QDense {
         match p {
             Precision::F32 => QDense::F32(w.clone()),
             Precision::Int8 => QDense::I8(PreparedQMatrix::new(quantize(w))),
+            Precision::Int4 => QDense::I4(PreparedQ4Matrix::new(quantize4(w))),
         }
     }
 
@@ -131,6 +176,7 @@ impl QDense {
         match p {
             Precision::F32 => QDense::F32(w.clone()),
             Precision::Int8 => QDense::I8(PreparedQMatrix::new_with_gates(quantize(w))),
+            Precision::Int4 => QDense::I4(PreparedQ4Matrix::new_with_gates(quantize4(w))),
         }
     }
 
@@ -140,6 +186,7 @@ impl QDense {
         match e {
             Entry::F32(t) => QDense::F32(t.clone()),
             Entry::I8(q) => QDense::I8(PreparedQMatrix::new(q.clone())),
+            Entry::I4(q) => QDense::I4(PreparedQ4Matrix::new(q.clone())),
         }
     }
 
@@ -148,6 +195,7 @@ impl QDense {
         match e {
             Entry::F32(t) => QDense::F32(t.clone()),
             Entry::I8(q) => QDense::I8(PreparedQMatrix::new_with_gates(q.clone())),
+            Entry::I4(q) => QDense::I4(PreparedQ4Matrix::new_with_gates(q.clone())),
         }
     }
 
@@ -155,6 +203,7 @@ impl QDense {
         match self {
             QDense::F32(w) => w.rows(),
             QDense::I8(q) => q.n(),
+            QDense::I4(q) => q.n(),
         }
     }
 
@@ -162,6 +211,7 @@ impl QDense {
         match self {
             QDense::F32(w) => w.cols(),
             QDense::I8(q) => q.k(),
+            QDense::I4(q) => q.k(),
         }
     }
 
@@ -195,6 +245,20 @@ impl QDense {
                 } else {
                     kernel_obs(be, OpKind::Gemm, m, qw.n(), k, || {
                         be.qgemm_farm_into(&qs.xq[..m * k], m, qw, sx, out)
+                    });
+                }
+            }
+            QDense::I4(qw) => {
+                let (m, k) = (x.rows(), x.cols());
+                qs.xq.resize(m * k, 0);
+                let sx = quant_obs(|| quantize_into(x.data(), &mut qs.xq[..m * k]));
+                if m == 1 {
+                    kernel_obs4(be, OpKind::Gemv4, 1, qw.n(), k, || {
+                        be.qgemv4_into(&qs.xq[..k], qw, sx, out)
+                    });
+                } else {
+                    kernel_obs4(be, OpKind::Gemm4, m, qw.n(), k, || {
+                        be.qgemm4_farm_into(&qs.xq[..m * k], m, qw, sx, out)
                     });
                 }
             }
@@ -239,6 +303,25 @@ impl QDense {
                     });
                 }
             }
+            QDense::I4(qw) => {
+                let (m, k) = (x.rows(), x.cols());
+                qs.xq.resize(m * k, 0);
+                qs.sx.resize(m, 0.0);
+                quant_obs(|| {
+                    for i in 0..m {
+                        qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
+                    }
+                });
+                if m == 1 {
+                    kernel_obs4(be, OpKind::Gemv4, 1, qw.n(), k, || {
+                        be.qgemv4_into(&qs.xq[..k], qw, qs.sx[0], out)
+                    });
+                } else {
+                    kernel_obs4(be, OpKind::Gemm4, m, qw.n(), k, || {
+                        be.qgemm4_farm_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out)
+                    });
+                }
+            }
         }
     }
 
@@ -271,6 +354,19 @@ impl QDense {
                     be.qgemm_gates_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out)
                 });
             }
+            QDense::I4(qw) => {
+                let (m, k) = (x.rows(), x.cols());
+                qs.xq.resize(m * k, 0);
+                qs.sx.resize(m, 0.0);
+                quant_obs(|| {
+                    for i in 0..m {
+                        qs.sx[i] = quantize_into(x.row(i), &mut qs.xq[i * k..(i + 1) * k]);
+                    }
+                });
+                kernel_obs4(be, OpKind::FusedGates4, m, qw.n(), k, || {
+                    be.qgemm4_gates_rows_into(&qs.xq[..m * k], m, qw, &qs.sx[..m], out)
+                });
+            }
         }
     }
 
@@ -280,6 +376,7 @@ impl QDense {
         match self {
             QDense::F32(w) => w.len() * 4,
             QDense::I8(q) => q.q.data().len() + 4,
+            QDense::I4(q) => q.bytes(),
         }
     }
 }
@@ -442,7 +539,7 @@ fn entry<'a>(entries: &'a BTreeMap<String, Entry>, name: &str) -> Result<&'a Ent
 fn bias_entry(entries: &BTreeMap<String, Entry>, name: &str) -> Result<Vec<f32>> {
     match entry(entries, name)? {
         Entry::F32(t) => Ok(t.data().to_vec()),
-        Entry::I8(_) => Err(Error::Checkpoint(format!(
+        Entry::I8(_) | Entry::I4(_) => Err(Error::Checkpoint(format!(
             "bias '{name}' must be stored f32 (biases and gate math stay f32 on the embedded path)"
         ))),
     }
@@ -791,6 +888,7 @@ impl Engine {
         }
 
         let any_i8 = entries.values().any(|e| matches!(e, Entry::I8(_)));
+        let any_i4 = entries.values().any(|e| matches!(e, Entry::I4(_)));
         let mut conv = Vec::new();
         for (i, c) in dims.conv.iter().enumerate() {
             conv.push(ConvLayer {
@@ -845,7 +943,13 @@ impl Engine {
         }
 
         Ok(Engine {
-            precision: if any_i8 { Precision::Int8 } else { Precision::F32 },
+            precision: if any_i4 {
+                Precision::Int4
+            } else if any_i8 {
+                Precision::Int8
+            } else {
+                Precision::F32
+            },
             time_batch: time_batch.max(1),
             backend: kernels::resolve(BackendSel::Auto)?,
             backend_sel: BackendSel::Auto,
@@ -1574,6 +1678,93 @@ mod tests {
             assert_eq!(t, t0, "{sel} transcript");
             assert_eq!(r, r0, "{sel} must be bit-identical to scalar on int8");
         }
+    }
+
+    #[test]
+    fn int4_engine_tracks_f32_and_halves_int8_bytes() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 30);
+        let f32_eng = Engine::from_params(&dims, "partial", &p, Precision::F32, 4).unwrap();
+        let i8_eng = Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap();
+        let i4_eng = Engine::from_params(&dims, "partial", &p, Precision::Int4, 4).unwrap();
+        let mut rng = Pcg64::seeded(31);
+        let feats = Tensor::randn(&[32, 8], 0.7, &mut rng);
+        let mut bda = Breakdown::default();
+        let mut bdb = Breakdown::default();
+        let (_, ra) = f32_eng.transcribe(&feats, &mut bda).unwrap();
+        let (_, rb) = i4_eng.transcribe(&feats, &mut bdb).unwrap();
+        let mut diff = 0.0f32;
+        let mut n = 0usize;
+        for (a, b) in ra.iter().zip(&rb) {
+            for (x, y) in a.iter().zip(b) {
+                diff += (x - y).abs();
+                n += 1;
+            }
+        }
+        let mean = diff / n as f32;
+        // 4-bit per-group quantization is coarser than int8 but must stay
+        // in the same ballpark on a tiny random net
+        assert!(mean < 0.6, "mean logprob diff {mean}");
+        // weight payload: nibbles + per-group scales land under int8 even
+        // on these tiny matrices, where every row is shorter than one
+        // scale group so the scale overhead is at its worst case (real
+        // layer widths k ≥ 256 approach the asymptotic ~1.8×)
+        let ratio = i8_eng.model_bytes() as f64 / i4_eng.model_bytes() as f64;
+        assert!(ratio > 1.1, "int8/int4 size ratio {ratio}");
+        assert!(i4_eng.model_bytes() < f32_eng.model_bytes() / 3);
+    }
+
+    #[test]
+    fn backend_switch_is_bit_identical_on_int4() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 32);
+        let mut rng = Pcg64::seeded(33);
+        let feats = Tensor::randn(&[24, 8], 0.7, &mut rng);
+        let base = Engine::from_params(&dims, "partial", &p, Precision::Int4, 4)
+            .unwrap()
+            .with_backend(BackendSel::Scalar)
+            .unwrap();
+        let mut b0 = Breakdown::default();
+        let (t0, r0) = base.transcribe(&feats, &mut b0).unwrap();
+        for sel in [BackendSel::Blocked, BackendSel::Auto] {
+            for fused in [true, false] {
+                let eng = Engine::from_params(&dims, "partial", &p, Precision::Int4, 4)
+                    .unwrap()
+                    .with_backend(sel)
+                    .unwrap()
+                    .with_fused_gates(fused);
+                let mut bd = Breakdown::default();
+                let (t, r) = eng.transcribe(&feats, &mut bd).unwrap();
+                assert_eq!(t, t0, "{sel} fused={fused} transcript");
+                assert_eq!(r, r0, "{sel} fused={fused} must be bit-identical on int4");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_from_int4_entries_bit_identical_to_from_params() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 34);
+        let mut entries = BTreeMap::new();
+        for (name, t) in p.iter() {
+            if name.ends_with("_b") {
+                entries.insert(name.clone(), Entry::F32(t.clone()));
+            } else {
+                entries.insert(name.clone(), Entry::I4(quantize4(t)));
+            }
+        }
+        let ea = Engine::from_entries(&dims, &entries, 4).unwrap();
+        let ep = Engine::from_params(&dims, "partial", &p, Precision::Int4, 4).unwrap();
+        assert_eq!(ea.precision, Precision::Int4);
+        assert_eq!(ea.model_bytes(), ep.model_bytes());
+        let mut rng = Pcg64::seeded(35);
+        let feats = Tensor::randn(&[24, 8], 0.7, &mut rng);
+        let mut b1 = Breakdown::default();
+        let mut b2 = Breakdown::default();
+        let (ta, ra) = ea.transcribe(&feats, &mut b1).unwrap();
+        let (tb, rb) = ep.transcribe(&feats, &mut b2).unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(ra, rb, "int4 entry-built engine must decode bit-identically");
     }
 
     #[test]

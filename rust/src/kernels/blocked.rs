@@ -29,10 +29,11 @@
 //! the f32 entry point shares [`super::scalar`]'s core, so `blocked` and
 //! `scalar` are bit-identical on f32 too.
 
+use crate::quant::{nibble_hi, nibble_lo};
 use crate::tensor::Tensor;
 
-use super::pack::{PackedGatePanels, PackedQMatrix, MAX_NR};
-use super::{scalar, GemmBackend, PreparedQMatrix, RowScales};
+use super::pack::{PackedGatePanels, PackedQ4GatePanels, PackedQ4Matrix, PackedQMatrix, MAX_NR};
+use super::{scalar, GemmBackend, PreparedQ4Matrix, PreparedQMatrix, RowScales};
 
 /// Core of the packed-panel schedule: for each panel, each activation
 /// row carries `nr` i32 accumulators across every k-strip, then writes
@@ -176,6 +177,122 @@ pub(crate) fn qgemm_gates_core(
     }
 }
 
+/// Core of the int4 packed-panel schedule: same strip/panel walk as
+/// [`qgemm_packed_core`], but weights arrive two-per-byte with per-group
+/// scales.  Each scale group keeps `nr` exact i32 sub-accumulators; at
+/// the group boundary they fold into the f32 accumulators (one multiply
+/// by the group scale each).  Strips cover whole groups (pack-time
+/// invariant), so the f32 folds happen in ascending global group order —
+/// exactly the accumulation contract of [`scalar::dot_q4_row`], which
+/// makes this bit-identical to the scalar int4 reference.
+pub(crate) fn qgemm4_packed_core(
+    xq: &[i8],
+    m: usize,
+    pw: &PackedQ4Matrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k, nr, group) = (pw.n(), pw.k(), pw.nr(), pw.group());
+    assert_eq!(xq.len(), m * k, "blocked int4 activation panel mismatch");
+    out.reset(&[m, n]);
+    let nstrips = k.div_ceil(pw.kc());
+    let npanels = n.div_ceil(nr);
+    for p in 0..npanels {
+        let j0 = p * nr;
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let mut facc = [0f32; MAX_NR];
+            for s in 0..nstrips {
+                let k0 = s * pw.kc();
+                let kcs = pw.strip_cols(s);
+                let panel = pw.panel(s, p);
+                let pscales = pw.panel_scales(s, p);
+                let gs = kcs.div_ceil(group);
+                for g in 0..gs {
+                    let c0 = g * group; // strip-relative columns
+                    let cend = (c0 + group).min(kcs);
+                    let mut sub = [0i32; MAX_NR];
+                    let mut c = c0;
+                    while c + 1 < cend {
+                        let x0 = xi[k0 + c] as i32;
+                        let x1 = xi[k0 + c + 1] as i32;
+                        let wb = (c / 2) * nr;
+                        for (r, a) in sub[..nr].iter_mut().enumerate() {
+                            let b = panel[wb + r];
+                            *a += x0 * nibble_lo(b) as i32 + x1 * nibble_hi(b) as i32;
+                        }
+                        c += 2;
+                    }
+                    if c < cend {
+                        // odd k tail: only the low nibble is real
+                        let x0 = xi[k0 + c] as i32;
+                        let wb = (c / 2) * nr;
+                        for (r, a) in sub[..nr].iter_mut().enumerate() {
+                            *a += x0 * nibble_lo(panel[wb + r]) as i32;
+                        }
+                    }
+                    for (r, f) in facc[..nr].iter_mut().enumerate() {
+                        *f += sub[r] as f32 * pscales[g * nr + r];
+                    }
+                }
+            }
+            let scale = scales.get(i);
+            let orow = out.row_mut(i);
+            for (r, &f) in facc[..nr.min(n - j0)].iter().enumerate() {
+                orow[j0 + r] = f * scale;
+            }
+        }
+    }
+}
+
+/// Core of the fused int4 GRU-gate schedule: one pass over each hidden
+/// unit's adjacent `[z_j | r_j | h̃_j]` nibble segments and their scale
+/// segments.  The three f32 gate accumulators fold group terms in
+/// ascending global order (strips ascending × groups-within-strip
+/// ascending), so every gate row is bit-identical to the stacked scalar
+/// sweep.  Shared by the blocked backend and the simd backend's portable
+/// fallback.
+pub(crate) fn qgemm4_gates_core(
+    xq: &[i8],
+    m: usize,
+    gp: &PackedQ4GatePanels,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (h, k, group) = (gp.h(), gp.k(), gp.group());
+    assert_eq!(xq.len(), m * k, "fused-gate int4 activation panel mismatch");
+    out.reset(&[m, 3 * h]);
+    let nstrips = gp.nstrips();
+    for j in 0..h {
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            let (mut az, mut ar, mut ac) = (0f32, 0f32, 0f32);
+            for s in 0..nstrips {
+                let k0 = s * super::pack::KC;
+                let kcs = gp.strip_cols(s);
+                let pairs = kcs.div_ceil(2);
+                let gs = kcs.div_ceil(group);
+                let block = gp.block(s, j);
+                let bscales = gp.block_scales(s, j);
+                let xs = &xi[k0..k0 + kcs];
+                let (zb, rb, cb) = (&block[..pairs], &block[pairs..2 * pairs], &block[2 * pairs..]);
+                for g in 0..gs {
+                    let c0 = g * group;
+                    let cend = (c0 + group).min(kcs);
+                    az += scalar::dot_q4_group(xs, zb, c0, cend) as f32 * bscales[g];
+                    ar += scalar::dot_q4_group(xs, rb, c0, cend) as f32 * bscales[gs + g];
+                    ac += scalar::dot_q4_group(xs, cb, c0, cend) as f32 * bscales[2 * gs + g];
+                }
+            }
+            let scale = scales.get(i);
+            let orow = out.row_mut(i);
+            orow[j] = az * scale;
+            orow[h + j] = ar * scale;
+            orow[2 * h + j] = ac * scale;
+        }
+    }
+}
+
 /// The packed-weight backend (see module docs).
 pub struct BlockedBackend;
 
@@ -223,6 +340,49 @@ impl GemmBackend for BlockedBackend {
         match &w.gates {
             Some(gp) => qgemm_gates_core(xq, m, gp, RowScales::PerRow(sx, w.scale), out),
             None => qgemm_packed_core(xq, m, &w.packed, RowScales::PerRow(sx, w.scale), out),
+        }
+    }
+
+    fn qgemm4_farm_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: f32,
+        out: &mut Tensor,
+    ) {
+        qgemm4_packed_core(xq, m, &w.packed, RowScales::Uniform(sx), out);
+    }
+
+    fn qgemm4_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm4_farm_rows needs one scale per row");
+        qgemm4_packed_core(xq, m, &w.packed, RowScales::PerRow(sx, 1.0), out);
+    }
+
+    fn qgemv4_into(&self, xq: &[i8], w: &PreparedQ4Matrix, sx: f32, out: &mut Tensor) {
+        // m = 1: skip panel staging, stream the row-major nibble copy
+        scalar::gemv4_core(xq, &w.q4, sx, out);
+    }
+
+    fn qgemm4_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm4_gates_rows needs one scale per row");
+        match &w.gates {
+            Some(gp) => qgemm4_gates_core(xq, m, gp, RowScales::PerRow(sx, 1.0), out),
+            None => qgemm4_packed_core(xq, m, &w.packed, RowScales::PerRow(sx, 1.0), out),
         }
     }
 }
@@ -291,6 +451,41 @@ mod tests {
             let mut out = Tensor::zeros(&[0, 0]);
             qgemm_gates_core(x.data(), m, &gp, RowScales::PerRow(&sx, 0.021), &mut out);
             let want = crate::kernels::qgemm_farm_rows(&x, &wq, &sx, 0.021);
+            assert_eq!(out, want, "({m},{h},{k})");
+        }
+    }
+
+    fn mk4(n: usize, k: usize, rng: &mut Pcg64) -> crate::quant::Q4Matrix {
+        crate::quant::quantize4(&Tensor::randn(&[n, k], 0.5, rng))
+    }
+
+    #[test]
+    fn int4_packed_core_bit_identical_across_every_candidate_tile() {
+        let mut rng = Pcg64::seeded(3);
+        for &(m, n, k) in &[(1usize, 5usize, 3usize), (2, 9, 31), (3, 13, 257), (4, 66, 513)] {
+            let x = mk(m, k, &mut rng);
+            let w4 = mk4(n, k, &mut rng);
+            let want = crate::kernels::qgemm4_ref(&x, &w4, 0.011);
+            for &(nr, kc) in crate::kernels::autotune::CANDIDATES {
+                let pw = PackedQ4Matrix::pack_with(&w4, nr, kc);
+                let mut out = Tensor::zeros(&[0, 0]);
+                qgemm4_packed_core(x.data(), m, &pw, RowScales::Uniform(0.011), &mut out);
+                assert_eq!(out, want, "tile ({nr},{kc}) at ({m},{n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_fused_gates_core_matches_stacked_scalar_reference() {
+        let mut rng = Pcg64::seeded(4);
+        for &(m, h, k) in &[(1usize, 1usize, 1usize), (2, 5, 7), (3, 32, 257), (4, 7, 100)] {
+            let x = mk(m, k, &mut rng);
+            let w4 = mk4(3 * h, k, &mut rng);
+            let gp = PackedQ4GatePanels::pack(&w4);
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let mut out = Tensor::zeros(&[0, 0]);
+            qgemm4_gates_core(x.data(), m, &gp, RowScales::PerRow(&sx, 1.0), &mut out);
+            let want = crate::kernels::qgemm4_farm_rows(&x, &w4, &sx);
             assert_eq!(out, want, "({m},{h},{k})");
         }
     }

@@ -73,15 +73,18 @@ pub mod scalar;
 pub mod simd;
 
 pub use blocked::BlockedBackend;
-pub use pack::{PackedGatePanels, PackedQMatrix, KC, MAX_NR, NR};
-pub use scalar::{gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, ScalarBackend};
+pub use pack::{PackedGatePanels, PackedQ4GatePanels, PackedQ4Matrix, PackedQMatrix, KC, MAX_NR, NR};
+pub use scalar::{
+    gemm_f32, qgemm4_farm, qgemm4_farm_rows, qgemm4_ref, qgemm_farm, qgemm_farm_rows, qgemm_lowp,
+    qgemm_ref, ScalarBackend,
+};
 #[cfg(feature = "simd")]
 pub use simd::SimdBackend;
 
 use std::str::FromStr;
 
 use crate::error::{Error, Result};
-use crate::quant::QMatrix;
+use crate::quant::{Q4Matrix, QMatrix};
 use crate::tensor::{Tensor, TensorI8};
 
 /// Operation/byte accounting for roofline projection (devicesim).
@@ -120,6 +123,19 @@ pub fn lowp_counts(m: usize, n: usize, k: usize) -> GemmCounts {
         macs: (mp * n * k) as u64,
         bytes_read: (2 * (n * k + mp * k)) as u64, // stream + packed re-read
         bytes_written: (n * k + mp * k + 4 * m * n) as u64, // packed copies + output
+    }
+}
+
+/// Counts for `y(m,n) = x(m,k) · w(n,k)ᵀ` under the int4 farm schedule:
+/// the weight stream halves to one nibble per weight plus the per-group
+/// f32 scales (`4·⌈k/group⌉` bytes per output row) — the bytes-per-weight
+/// lever the sub-byte path exists for.
+pub fn farm4_counts(m: usize, n: usize, k: usize) -> GemmCounts {
+    let group = crate::quant::Q4_GROUP;
+    GemmCounts {
+        macs: (m * n * k) as u64,
+        bytes_read: (n * k.div_ceil(2) + 4 * n * k.div_ceil(group) + m * k) as u64,
+        bytes_written: (4 * m * n) as u64,
     }
 }
 
@@ -216,6 +232,84 @@ impl PreparedQMatrix {
     }
 }
 
+/// An int4 weight matrix prepared for all registered backends — the
+/// sub-byte sibling of [`PreparedQMatrix`].  Carries the nibble-packed
+/// row-major [`Q4Matrix`] (the reference layout scalar and simd consume)
+/// **plus** the nr-panel pre-packed [`PackedQ4Matrix`] (blocked) and,
+/// for `(3H, k)` GRU gate weights prepared via
+/// [`PreparedQ4Matrix::new_with_gates`], the gate-interleaved
+/// [`PackedQ4GatePanels`].  Scales are per-group (no per-tensor weight
+/// scale), so dequantization happens inside the kernels.
+#[derive(Clone, Debug)]
+pub struct PreparedQ4Matrix {
+    /// nibble-packed row-major weights + per-group scales — the
+    /// reference layout
+    pub q4: Q4Matrix,
+    /// panel-interleaved pre-packed copy (see [`PackedQ4Matrix`])
+    pub packed: PackedQ4Matrix,
+    /// gate-interleaved `[z|r|h̃]` nibble panels — present only on
+    /// `(3H, k)` gate weights prepared via
+    /// [`PreparedQ4Matrix::new_with_gates`]
+    pub gates: Option<PackedQ4GatePanels>,
+}
+
+impl PreparedQ4Matrix {
+    /// Prepare an int4 matrix for every backend (packs once, at plan
+    /// time).  The blocked tile shape comes from the same autotune cache
+    /// as int8 — every candidate KC is a multiple of the scale group, and
+    /// the round-up below keeps the strip/group alignment invariant even
+    /// for non-default groups.
+    pub fn new(q4: Q4Matrix) -> PreparedQ4Matrix {
+        let (nr, mut kc) = autotune::choose(q4.rows(), q4.cols());
+        let group = q4.group();
+        if kc % group != 0 {
+            kc = group * kc.div_ceil(group);
+        }
+        let t0 = std::time::Instant::now();
+        let packed = PackedQ4Matrix::pack_with(&q4, nr, kc);
+        if crate::obs::enabled() {
+            crate::obs::spans::record_global(crate::obs::Stage::Pack, t0.elapsed().as_secs_f64());
+        }
+        PreparedQ4Matrix { q4, packed, gates: None }
+    }
+
+    /// Prepare a stacked `(3H, k)` int4 GRU gate weight: everything
+    /// [`PreparedQ4Matrix::new`] builds plus the gate-interleaved panel
+    /// layout.  Row counts that are not a multiple of 3 get no gate
+    /// panels (the fused entry point then falls back to the stacked
+    /// sweep — same bits).
+    pub fn new_with_gates(q4: Q4Matrix) -> PreparedQ4Matrix {
+        let mut p = PreparedQ4Matrix::new(q4);
+        if p.q4.rows() > 0 && p.q4.rows() % 3 == 0 {
+            let t0 = std::time::Instant::now();
+            p.gates = Some(PackedQ4GatePanels::pack(&p.q4));
+            if crate::obs::enabled() {
+                crate::obs::spans::record_global(
+                    crate::obs::Stage::Pack,
+                    t0.elapsed().as_secs_f64(),
+                );
+            }
+        }
+        p
+    }
+
+    /// Output dimension `n` of `y = x·wᵀ`.
+    pub fn n(&self) -> usize {
+        self.q4.rows()
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.q4.cols()
+    }
+
+    /// Serving bytes of the reference layout (nibbles + group scales) —
+    /// what actually streams through cache per GEMM call.
+    pub fn bytes(&self) -> usize {
+        self.q4.payload_bytes()
+    }
+}
+
 // Compile-time Send+Sync audit (DESIGN.md §9): prepared weights are the
 // shared read-only half of the serving plan — every shard thread reads
 // the same `PreparedQMatrix` through its `Arc<Engine>`, so both layouts
@@ -223,6 +317,9 @@ impl PreparedQMatrix {
 const _: () = crate::assert_send_sync::<PreparedQMatrix>();
 const _: () = crate::assert_send_sync::<PackedQMatrix>();
 const _: () = crate::assert_send_sync::<PackedGatePanels>();
+const _: () = crate::assert_send_sync::<PreparedQ4Matrix>();
+const _: () = crate::assert_send_sync::<PackedQ4Matrix>();
+const _: () = crate::assert_send_sync::<PackedQ4GatePanels>();
 
 /// Per-output-row dequantization scales, shared by the backend kernels.
 /// `Uniform` carries the pre-multiplied `sx·sw` product (one activation
@@ -311,6 +408,54 @@ pub trait GemmBackend: Send + Sync {
         out: &mut Tensor,
     ) {
         self.qgemm_farm_rows_into(xq, m, w, sx, out);
+    }
+
+    /// `out = (sx·xq) · dequant(w)ᵀ`: int4 GEMM with per-group weight
+    /// scales and one dynamic activation scale per call.  Accumulation
+    /// contract (every backend bit-identical to [`ScalarBackend`]):
+    /// exact i32 per scale group → f32 multiply by the group scale → f32
+    /// sum in ascending group order → final multiply by `sx`.
+    fn qgemm4_farm_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: f32,
+        out: &mut Tensor,
+    );
+
+    /// Batch-m int4 GEMM with **per-row** activation scales — the pooled
+    /// recurrent path at `--bits 4`, bit-identical to `m` separate
+    /// batch-1 [`GemmBackend::qgemm4_farm_into`] calls.
+    fn qgemm4_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    );
+
+    /// Dedicated m = 1 int4 GEMV.  Default delegates to the batch path
+    /// at m = 1; overrides must stay bit-identical to it.
+    fn qgemv4_into(&self, xq: &[i8], w: &PreparedQ4Matrix, sx: f32, out: &mut Tensor) {
+        self.qgemm4_farm_into(xq, 1, w, sx, out);
+    }
+
+    /// Fused GRU-gate product on int4 weights: the 4-bit sibling of
+    /// [`GemmBackend::qgemm_gates_rows_into`], reading the
+    /// gate-interleaved [`PackedQ4GatePanels`] when present.  Default —
+    /// and any weight prepared without gate panels — is the plain
+    /// stacked sweep; output layout and bits are identical either way.
+    fn qgemm4_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        self.qgemm4_farm_rows_into(xq, m, w, sx, out);
     }
 }
 
@@ -633,5 +778,78 @@ mod tests {
                 assert_eq!(out, want, "{} fused gates ({m},{h},{k})", be.name());
             }
         }
+    }
+
+    fn rand_q4(n: usize, k: usize, rng: &mut Pcg64) -> Q4Matrix {
+        crate::quant::quantize4(&Tensor::randn(&[n, k], 0.5, rng))
+    }
+
+    #[test]
+    fn farm4_matches_nibble_reference_exactly() {
+        let mut rng = Pcg64::seeded(11);
+        for &(m, n, k) in &[(1, 7, 5), (2, 64, 31), (4, 33, 100), (8, 128, 320), (3, 96, 513)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w = rand_q4(n, k, &mut rng);
+            let got = qgemm4_farm(&x, &w, 0.013);
+            let want = qgemm4_ref(&x, &w, 0.013);
+            assert_eq!(got, want, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn prepared_q4_round_trips_and_exposes_dims() {
+        let mut rng = Pcg64::seeded(12);
+        let w = rand_q4(37, 53, &mut rng);
+        let p = PreparedQ4Matrix::new(w.clone());
+        assert_eq!((p.n(), p.k()), (37, 53));
+        assert_eq!(p.packed.unpack(), w, "plan-time int4 packing must be lossless");
+        assert!(p.gates.is_none());
+        assert_eq!(p.bytes(), w.payload_bytes());
+        // gate preparation follows the same multiple-of-3 rule as int8
+        let g = PreparedQ4Matrix::new_with_gates(rand_q4(3 * 11, 17, &mut rng));
+        let gp = g.gates.as_ref().expect("(3H, k) int4 weight must get gate panels");
+        assert_eq!((gp.h(), gp.k()), (11, 17));
+        assert_eq!(gp.unpack(), g.q4, "int4 gate packing must be lossless");
+        assert!(PreparedQ4Matrix::new_with_gates(rand_q4(10, 17, &mut rng)).gates.is_none());
+    }
+
+    #[test]
+    fn gemv4_and_gates4_entry_points_bit_identical_to_reference() {
+        let mut rng = Pcg64::seeded(13);
+        for &(n, k) in &[(5usize, 3usize), (7, 8), (33, 100), (96, 320)] {
+            let x = rand_i8(&[1, k], &mut rng);
+            let w4 = rand_q4(n, k, &mut rng);
+            let w = PreparedQ4Matrix::new(w4.clone());
+            let want = qgemm4_ref(&x, &w4, 0.013);
+            for (_, be) in all_backends() {
+                let mut out = Tensor::zeros(&[0, 0]);
+                be.qgemv4_into(x.data(), &w, 0.013, &mut out);
+                assert_eq!(out, want, "{} qgemv4 ({n},{k})", be.name());
+            }
+        }
+        for &(m, h, k) in &[(1usize, 5usize, 7usize), (3, 8, 16), (4, 33, 100)] {
+            let x = rand_i8(&[m, k], &mut rng);
+            let w4 = rand_q4(3 * h, k, &mut rng);
+            let w = PreparedQ4Matrix::new_with_gates(w4.clone());
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+            let want = qgemm4_farm_rows(&x, &w4, &sx);
+            for (_, be) in all_backends() {
+                let mut out = Tensor::zeros(&[0, 0]);
+                be.qgemm4_gates_rows_into(x.data(), m, &w, &sx, &mut out);
+                assert_eq!(out, want, "{} fused gates4 ({m},{h},{k})", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn farm4_counts_halve_the_weight_stream() {
+        let (m, n, k) = (1usize, 6144usize, 320usize);
+        let i8c = farm_counts(m, n, k);
+        let i4c = farm4_counts(m, n, k);
+        assert_eq!(i4c.macs, i8c.macs); // same useful work
+        assert!(i4c.bytes_read < i8c.bytes_read);
+        // nibble stream + group scales ≈ 0.625 bytes/weight at group 32
+        let per_weight = (i4c.bytes_read - (m * k) as u64) as f64 / (n * k) as f64;
+        assert!(per_weight < 0.65, "int4 bytes/weight {per_weight}");
     }
 }

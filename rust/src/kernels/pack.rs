@@ -51,7 +51,21 @@
 //! `out[j]`, `out[H+j]`, `out[2H+j]` — one sweep over the weights instead
 //! of three.  Gate segments stay contiguous (no element interleave), so
 //! the same vector dot products the plain kernels use apply unchanged.
+//!
+//! [`PackedQ4Matrix`] / [`PackedQ4GatePanels`] are the sub-byte variants
+//! (DESIGN.md §4): the same panel/strip/block structure with two
+//! twos-complement nibbles per byte — byte `t·nr + r` of a panel holds
+//! columns `k0+2t` (low nibble) and `k0+2t+1` (high nibble) of panel row
+//! `r` — and the per-group f32 scales of [`crate::quant::Q4Matrix`]
+//! stored alongside each strip in matching `(group, r)` interleave, so a
+//! kernel walking a strip reads nibble bytes and the scales it needs to
+//! close each group strictly sequentially.  Strip widths must be a
+//! multiple of the (even) scale-group width, so a strip always covers
+//! whole groups and the per-group i32 sub-accumulation never straddles a
+//! strip boundary — the invariant the int4 bit-identity contract rests
+//! on.  Every autotune candidate satisfies it ([`super::autotune`]).
 
+use crate::quant::Q4Matrix;
 use crate::tensor::TensorI8;
 
 /// Default weight rows per packed panel (the register-tile height of the
@@ -278,6 +292,296 @@ impl PackedGatePanels {
     }
 }
 
+/// An int4 weight matrix in nr-panel, kc-strip nibble layout with
+/// per-group scales stored strip-major alongside the data (module docs).
+/// Packed once at plan time from a row-major [`Q4Matrix`]; consumed by
+/// the blocked backend's int4 packed core.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedQ4Matrix {
+    n: usize,
+    k: usize,
+    nr: usize,
+    kc: usize,
+    group: usize,
+    data: Vec<u8>,
+    scales: Vec<f32>,
+}
+
+impl PackedQ4Matrix {
+    /// Pack with the default [`NR`]/[`KC`] tile.
+    pub fn pack(q4: &Q4Matrix) -> PackedQ4Matrix {
+        PackedQ4Matrix::pack_with(q4, NR, KC)
+    }
+
+    /// Pack with an explicit `(nr, kc)` tile.  `kc` must be a positive
+    /// multiple of the matrix's (even) scale-group width so strips cover
+    /// whole groups — every [`super::autotune`] candidate does.
+    pub fn pack_with(q4: &Q4Matrix, nr: usize, kc: usize) -> PackedQ4Matrix {
+        assert!(nr >= 1 && nr <= MAX_NR, "panel height {nr} out of range");
+        let group = q4.group();
+        assert!(group % 2 == 0, "int4 packing needs an even scale group, got {group}");
+        assert!(
+            kc >= group && kc % group == 0,
+            "k-strip width {kc} must be a positive multiple of the scale group {group}"
+        );
+        let (n, k) = (q4.rows(), q4.cols());
+        let ngroups = q4.ngroups();
+        let npanels = n.div_ceil(nr);
+        let nstrips = k.div_ceil(kc);
+        let mut data = vec![0u8; npanels * nr * k.div_ceil(2)];
+        let mut scales = vec![0.0f32; npanels * nr * ngroups];
+        for s in 0..nstrips {
+            let k0 = s * kc;
+            let kcs = kc.min(k - k0);
+            let pairs = kcs.div_ceil(2);
+            let gs = kcs.div_ceil(group);
+            for p in 0..npanels {
+                // k0 is even (kc is) and a group multiple, so the strip's
+                // byte/scale offsets into a source row are exact
+                let dbase = npanels * nr * (k0 / 2) + p * nr * pairs;
+                let sbase = npanels * nr * (k0 / group) + p * nr * gs;
+                for r in 0..nr {
+                    let row = p * nr + r;
+                    if row >= n {
+                        continue; // padding rows stay zero nibbles / zero scales
+                    }
+                    let rowb = q4.row_data(row);
+                    for t in 0..pairs {
+                        data[dbase + t * nr + r] = rowb[k0 / 2 + t];
+                    }
+                    let rows = q4.row_scales(row);
+                    for g in 0..gs {
+                        scales[sbase + g * nr + r] = rows[k0 / group + g];
+                    }
+                }
+            }
+        }
+        PackedQ4Matrix { n, k, nr, kc, group, data, scales }
+    }
+
+    /// Output dimension `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Panel height this matrix was packed with.
+    pub fn nr(&self) -> usize {
+        self.nr
+    }
+
+    /// k-strip width this matrix was packed with.
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// Scale-group width (columns per f32 scale).
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Bytes held by the packed copy (nibble bytes + scale bytes).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Columns in strip `s` (`kc`, or the ragged tail for the last strip).
+    #[inline]
+    pub(crate) fn strip_cols(&self, s: usize) -> usize {
+        self.kc.min(self.k - s * self.kc)
+    }
+
+    /// The nibble-interleaved `(⌈kcs/2⌉ × nr)` byte block of
+    /// (strip `s`, panel `p`).
+    #[inline]
+    pub(crate) fn panel(&self, s: usize, p: usize) -> &[u8] {
+        let k0 = s * self.kc;
+        let pairs = self.strip_cols(s).div_ceil(2);
+        let npanels = self.n.div_ceil(self.nr);
+        let base = npanels * self.nr * (k0 / 2) + p * self.nr * pairs;
+        &self.data[base..base + self.nr * pairs]
+    }
+
+    /// The `(groups-in-strip × nr)` scale block of (strip `s`, panel `p`),
+    /// indexed `g·nr + r`.
+    #[inline]
+    pub(crate) fn panel_scales(&self, s: usize, p: usize) -> &[f32] {
+        let k0 = s * self.kc;
+        let gs = self.strip_cols(s).div_ceil(self.group);
+        let npanels = self.n.div_ceil(self.nr);
+        let base = npanels * self.nr * (k0 / self.group) + p * self.nr * gs;
+        &self.scales[base..base + self.nr * gs]
+    }
+
+    /// Exact inverse of [`PackedQ4Matrix::pack_with`] (drops the padding).
+    pub fn unpack(&self) -> Q4Matrix {
+        let rb = self.k.div_ceil(2);
+        let ngroups = self.k.div_ceil(self.group);
+        let mut data = vec![0u8; self.n * rb];
+        let mut scales = vec![0.0f32; self.n * ngroups];
+        let npanels = self.n.div_ceil(self.nr);
+        for s in 0..self.k.div_ceil(self.kc) {
+            let k0 = s * self.kc;
+            let kcs = self.strip_cols(s);
+            let pairs = kcs.div_ceil(2);
+            let gs = kcs.div_ceil(self.group);
+            for p in 0..npanels {
+                let panel = self.panel(s, p);
+                let ps = self.panel_scales(s, p);
+                for r in 0..self.nr {
+                    let row = p * self.nr + r;
+                    if row >= self.n {
+                        continue;
+                    }
+                    for t in 0..pairs {
+                        data[row * rb + k0 / 2 + t] = panel[t * self.nr + r];
+                    }
+                    for g in 0..gs {
+                        scales[row * ngroups + k0 / self.group + g] = ps[g * self.nr + r];
+                    }
+                }
+            }
+        }
+        Q4Matrix::from_parts(self.n, self.k, self.group, data, scales)
+            .expect("packed q4 shape bookkeeping")
+    }
+}
+
+/// The int4 gate-interleaved variant of [`PackedGatePanels`]: per
+/// [`KC`]-strip, per hidden unit `j`, the three `[z_j | r_j | h̃_j]` gate
+/// rows adjacent as contiguous nibble segments of `⌈kcs/2⌉` bytes each,
+/// with the matching per-group scales blocked the same way
+/// (`[z scales | r scales | h̃ scales]` per unit per strip).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedQ4GatePanels {
+    h: usize,
+    k: usize,
+    group: usize,
+    data: Vec<u8>,
+    scales: Vec<f32>,
+}
+
+impl PackedQ4GatePanels {
+    /// Pack a stacked `(3H, k)` int4 gate matrix.  Panics unless the row
+    /// count is a positive multiple of 3 and the scale group is even and
+    /// divides [`KC`].
+    pub fn pack(q4: &Q4Matrix) -> PackedQ4GatePanels {
+        let (n, k) = (q4.rows(), q4.cols());
+        assert!(n > 0 && n % 3 == 0, "gate panels need a (3H, k) matrix, got {n} rows");
+        let group = q4.group();
+        assert!(
+            group % 2 == 0 && KC % group == 0,
+            "int4 gate panels need an even scale group dividing KC, got {group}"
+        );
+        let h = n / 3;
+        let nstrips = k.div_ceil(KC);
+        let ngroups = q4.ngroups();
+        let mut data = vec![0u8; 3 * h * k.div_ceil(2)];
+        let mut scales = vec![0.0f32; 3 * h * ngroups];
+        for s in 0..nstrips {
+            let k0 = s * KC;
+            let kcs = KC.min(k - k0);
+            let pairs = kcs.div_ceil(2);
+            let gs = kcs.div_ceil(group);
+            for j in 0..h {
+                let dblock = 3 * h * (k0 / 2) + j * 3 * pairs;
+                let sblock = 3 * h * (k0 / group) + j * 3 * gs;
+                for (g, row) in [j, h + j, 2 * h + j].into_iter().enumerate() {
+                    data[dblock + g * pairs..dblock + (g + 1) * pairs]
+                        .copy_from_slice(&q4.row_data(row)[k0 / 2..k0 / 2 + pairs]);
+                    scales[sblock + g * gs..sblock + (g + 1) * gs]
+                        .copy_from_slice(&q4.row_scales(row)[k0 / group..k0 / group + gs]);
+                }
+            }
+        }
+        PackedQ4GatePanels { h, k, group, data, scales }
+    }
+
+    /// Hidden width `H` (output dimension is `3H`).
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    /// Contraction dimension `k`.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Scale-group width (columns per f32 scale).
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Bytes held by the packed copy (nibble bytes + scale bytes).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Columns in strip `s` ([`KC`], or the ragged tail).
+    #[inline]
+    pub(crate) fn strip_cols(&self, s: usize) -> usize {
+        KC.min(self.k - s * KC)
+    }
+
+    /// Number of k-strips.
+    #[inline]
+    pub(crate) fn nstrips(&self) -> usize {
+        self.k.div_ceil(KC)
+    }
+
+    /// The `[z_j | r_j | h̃_j]` nibble block of (strip `s`, unit `j`):
+    /// three contiguous gate segments of `⌈strip_cols(s)/2⌉` bytes each.
+    #[inline]
+    pub(crate) fn block(&self, s: usize, j: usize) -> &[u8] {
+        let k0 = s * KC;
+        let pairs = self.strip_cols(s).div_ceil(2);
+        let base = 3 * self.h * (k0 / 2) + j * 3 * pairs;
+        &self.data[base..base + 3 * pairs]
+    }
+
+    /// The matching scale block of (strip `s`, unit `j`): three contiguous
+    /// gate segments of `⌈strip_cols(s)/group⌉` f32 scales each.
+    #[inline]
+    pub(crate) fn block_scales(&self, s: usize, j: usize) -> &[f32] {
+        let k0 = s * KC;
+        let gs = self.strip_cols(s).div_ceil(self.group);
+        let base = 3 * self.h * (k0 / self.group) + j * 3 * gs;
+        &self.scales[base..base + 3 * gs]
+    }
+
+    /// Exact inverse of [`PackedQ4GatePanels::pack`].
+    pub fn unpack(&self) -> Q4Matrix {
+        let (h, k) = (self.h, self.k);
+        let rb = k.div_ceil(2);
+        let ngroups = k.div_ceil(self.group);
+        let mut data = vec![0u8; 3 * h * rb];
+        let mut scales = vec![0.0f32; 3 * h * ngroups];
+        for s in 0..self.nstrips() {
+            let k0 = s * KC;
+            let kcs = self.strip_cols(s);
+            let pairs = kcs.div_ceil(2);
+            let gs = kcs.div_ceil(self.group);
+            for j in 0..h {
+                let block = self.block(s, j);
+                let bs = self.block_scales(s, j);
+                for (g, row) in [j, h + j, 2 * h + j].into_iter().enumerate() {
+                    data[row * rb + k0 / 2..row * rb + k0 / 2 + pairs]
+                        .copy_from_slice(&block[g * pairs..(g + 1) * pairs]);
+                    scales[row * ngroups + k0 / self.group
+                        ..row * ngroups + k0 / self.group + gs]
+                        .copy_from_slice(&bs[g * gs..(g + 1) * gs]);
+                }
+            }
+        }
+        Q4Matrix::from_parts(3 * h, k, self.group, data, scales)
+            .expect("packed q4 gate shape bookkeeping")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,5 +666,95 @@ mod tests {
         let mut rng = Pcg64::seeded(5);
         let w = rand_i8(7, 5, &mut rng);
         let _ = PackedGatePanels::pack(&w);
+    }
+
+    fn rand_q4(n: usize, k: usize, rng: &mut Pcg64) -> Q4Matrix {
+        crate::quant::quantize4(&crate::tensor::Tensor::randn(&[n, k], 0.5, rng))
+    }
+
+    #[test]
+    fn q4_round_trip_exhaustive_small_tails() {
+        // ragged n × ragged k incl. odd k (nibble tail), group tails
+        // (k mod 32) and the KC strip boundary
+        let mut rng = Pcg64::seeded(6);
+        for n in 1..=9usize {
+            for &k in &[1usize, 2, 3, 5, 7, 31, 32, 33, 63, 64, 65, 255, 256, 257, 513] {
+                let q4 = rand_q4(n, k, &mut rng);
+                let p = PackedQ4Matrix::pack(&q4);
+                assert_eq!(p.unpack(), q4, "({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_round_trip_with_explicit_tiles() {
+        let mut rng = Pcg64::seeded(7);
+        for &(nr, kc) in &[(4usize, 128usize), (4, 512), (8, 128), (8, 256), (8, 512), (1, 32)] {
+            for &(n, k) in &[(1usize, 1usize), (7, 9), (9, 130), (17, 513)] {
+                let q4 = rand_q4(n, k, &mut rng);
+                let p = PackedQ4Matrix::pack_with(&q4, nr, kc);
+                assert_eq!((p.nr(), p.kc(), p.group()), (nr, kc, q4.group()));
+                assert_eq!(p.unpack(), q4, "nr {nr} kc {kc} ({n},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_packed_bytes_are_half_the_int8_panel_bytes_plus_scales() {
+        let mut rng = Pcg64::seeded(8);
+        let q4 = rand_q4(6, 300, &mut rng);
+        let p = PackedQ4Matrix::pack(&q4);
+        // 6 rows pad to 2 panels of 4; 300 cols → 150 nibble bytes per
+        // padded row + 10 group scales per padded row
+        assert_eq!(p.bytes(), 8 * 150 + 8 * 10 * 4);
+        assert_eq!((p.n(), p.k()), (6, 300));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of the scale group")]
+    fn q4_pack_rejects_strip_not_covering_whole_groups() {
+        let mut rng = Pcg64::seeded(9);
+        let q4 = rand_q4(4, 64, &mut rng);
+        let _ = PackedQ4Matrix::pack_with(&q4, 4, 48); // 48 % 32 != 0
+    }
+
+    #[test]
+    fn q4_gate_panels_round_trip_and_blocks() {
+        let mut rng = Pcg64::seeded(10);
+        for &(h, k) in &[(1usize, 1usize), (3, 7), (5, 256), (4, 257), (7, 513), (32, 100)] {
+            let q4 = rand_q4(3 * h, k, &mut rng);
+            let gp = PackedQ4GatePanels::pack(&q4);
+            assert_eq!((gp.h(), gp.k(), gp.group()), (h, k, q4.group()));
+            assert_eq!(gp.unpack(), q4, "({h},{k})");
+            // block (s=0, j) holds the three gate rows' strip-0 nibble
+            // prefixes and their group scales
+            let kcs = gp.strip_cols(0);
+            let pairs = kcs.div_ceil(2);
+            let gs = kcs.div_ceil(gp.group());
+            for j in 0..h {
+                let b = gp.block(0, j);
+                let bs = gp.block_scales(0, j);
+                for (g, row) in [j, h + j, 2 * h + j].into_iter().enumerate() {
+                    assert_eq!(
+                        &b[g * pairs..(g + 1) * pairs],
+                        &q4.row_data(row)[..pairs],
+                        "gate {g} unit {j} data"
+                    );
+                    assert_eq!(
+                        &bs[g * gs..(g + 1) * gs],
+                        &q4.row_scales(row)[..gs],
+                        "gate {g} unit {j} scales"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gate panels")]
+    fn q4_gate_panels_reject_non_gate_row_counts() {
+        let mut rng = Pcg64::seeded(11);
+        let q4 = rand_q4(7, 5, &mut rng);
+        let _ = PackedQ4GatePanels::pack(&q4);
     }
 }

@@ -19,9 +19,10 @@
 //! pure scheduling comparison.  [`gemm_f32`] is the f32 path of the
 //! embedded engine.
 
+use crate::quant::{nibble_hi, nibble_lo, Q4Matrix};
 use crate::tensor::{Tensor, TensorI8};
 
-use super::{GemmBackend, PreparedQMatrix, RowScales};
+use super::{GemmBackend, PreparedQ4Matrix, PreparedQMatrix, RowScales};
 
 #[inline]
 pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
@@ -155,6 +156,131 @@ pub(crate) fn gemv_core(xq: &[i8], wq: &TensorI8, scale: f32, out: &mut Tensor) 
         orow[j] = dot_i8(xq, wq.row(j)) as f32 * scale;
         j += 1;
     }
+}
+
+// ---------------------------------------------------------------------------
+// int4 reference cores: per-group scales, fixed accumulation contract
+// (see the module docs of [`crate::kernels::pack`]).
+// ---------------------------------------------------------------------------
+
+/// Exact i32 sub-dot of one scale group: absolute weight columns
+/// `[c0, cend)` of a nibble-packed row against the activation row.  `c0`
+/// is always even (scale groups are even-sized), so every column pair
+/// shares one byte; an odd `cend` — the ragged k tail — reads only the
+/// low nibble of the final byte.
+#[inline]
+pub(crate) fn dot_q4_group(xq: &[i8], wbytes: &[u8], c0: usize, cend: usize) -> i32 {
+    let mut acc = 0i32;
+    let mut c = c0;
+    while c + 1 < cend {
+        let b = wbytes[c / 2];
+        acc += xq[c] as i32 * nibble_lo(b) as i32 + xq[c + 1] as i32 * nibble_hi(b) as i32;
+        c += 2;
+    }
+    if c < cend {
+        acc += xq[c] as i32 * nibble_lo(wbytes[c / 2]) as i32;
+    }
+    acc
+}
+
+/// One int4 row dot under the fixed contract: exact i32 accumulation per
+/// scale group, one f32 multiply by that group's scale, f32 sum in
+/// ascending group order.  Every backend's int4 kernel must reproduce
+/// this value bit-identically (the caller applies the activation scale
+/// as one final f32 multiply).
+#[inline]
+pub(crate) fn dot_q4_row(xq: &[i8], wbytes: &[u8], scales: &[f32], k: usize, group: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for (g, &s) in scales.iter().enumerate() {
+        let c0 = g * group;
+        let cend = (c0 + group).min(k);
+        acc += dot_q4_group(xq, wbytes, c0, cend) as f32 * s;
+    }
+    acc
+}
+
+/// Allocation-free int4 farm core over raw activation rows — the
+/// reference the blocked/simd int4 kernels are pinned to.  Weight rows
+/// stream once in storage order; per-row activation scales come in via
+/// [`RowScales`] with a unit weight scale (int4 weight scales are
+/// per-group, folded into [`dot_q4_row`]).
+pub(crate) fn farm4_core(
+    xq: &[i8],
+    m: usize,
+    w: &Q4Matrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    let (n, k) = (w.rows(), w.cols());
+    assert_eq!(xq.len(), m * k, "farm4 activation panel mismatch");
+    out.reset(&[m, n]);
+    let group = w.group();
+    for j in 0..n {
+        let wb = w.row_data(j);
+        let ws = w.row_scales(j);
+        for i in 0..m {
+            let xi = &xq[i * k..(i + 1) * k];
+            out.row_mut(i)[j] = dot_q4_row(xi, wb, ws, k, group) * scales.get(i);
+        }
+    }
+}
+
+/// Dedicated m = 1 int4 GEMV — same accumulation as [`farm4_core`] at
+/// m = 1, so bit-identical by construction.
+pub(crate) fn gemv4_core(xq: &[i8], w: &Q4Matrix, sx: f32, out: &mut Tensor) {
+    let (n, k) = (w.rows(), w.cols());
+    assert_eq!(xq.len(), k, "gemv4 takes exactly one activation row");
+    out.reset(&[1, n]);
+    let group = w.group();
+    let orow = out.row_mut(0);
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o = dot_q4_row(xq, w.row_data(j), w.row_scales(j), k, group) * sx;
+    }
+}
+
+/// farm-style int4 GEMM: `y = (sx·xq) · dequant(w)ᵀ` with per-group
+/// weight scales.  Allocating convenience wrapper over [`farm4_core`].
+pub fn qgemm4_farm(xq: &TensorI8, w: &Q4Matrix, sx: f32) -> Tensor {
+    assert_eq!(xq.cols(), w.cols(), "qgemm4_farm contraction mismatch");
+    let mut out = Tensor::zeros(&[0, 0]);
+    farm4_core(xq.data(), xq.rows(), w, RowScales::Uniform(sx), &mut out);
+    out
+}
+
+/// Batch-m int4 farm GEMM with per-row activation scales (the pooled
+/// recurrent path) — bit-identical to `m` batch-1 [`qgemm4_farm`] calls.
+pub fn qgemm4_farm_rows(xq: &TensorI8, w: &Q4Matrix, sx: &[f32]) -> Tensor {
+    assert_eq!(xq.cols(), w.cols(), "qgemm4_farm_rows contraction mismatch");
+    assert_eq!(xq.rows(), sx.len(), "qgemm4_farm_rows needs one scale per row");
+    let mut out = Tensor::zeros(&[0, 0]);
+    farm4_core(xq.data(), xq.rows(), w, RowScales::PerRow(sx, 1.0), &mut out);
+    out
+}
+
+/// Naive int4 reference for exactness tests: decodes one nibble at a
+/// time via [`Q4Matrix::get`], accumulating under the same per-group
+/// contract — deliberately independent of the packed-byte walk of
+/// [`dot_q4_group`].
+pub fn qgemm4_ref(xq: &TensorI8, w: &Q4Matrix, sx: f32) -> Tensor {
+    let (m, k) = (xq.rows(), xq.cols());
+    assert_eq!(k, w.cols(), "qgemm4_ref contraction mismatch");
+    let (n, group) = (w.rows(), w.group());
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let ws = w.row_scales(j);
+            let mut acc = 0.0f32;
+            for (g, &s) in ws.iter().enumerate() {
+                let mut sub = 0i32;
+                for c in g * group..(g * group + group).min(k) {
+                    sub += xq.row(i)[c] as i32 * w.get(j, c) as i32;
+                }
+                acc += sub as f32 * s;
+            }
+            out.set2(i, j, acc * sx);
+        }
+    }
+    out
 }
 
 /// `y = x @ wᵀ + bias?`, f32. x: (m, k), w: (n, k) -> (m, n).
@@ -339,7 +465,34 @@ impl GemmBackend for ScalarBackend {
         gemv_core(xq, &w.q, sx * w.scale, out);
     }
 
-    // qgemm_gates_rows_into keeps the trait default (the stacked
-    // three-gate sweep): scalar *is* the reference the fused kernels of
-    // the other backends are tested against.
+    fn qgemm4_farm_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: f32,
+        out: &mut Tensor,
+    ) {
+        farm4_core(xq, m, &w.q4, RowScales::Uniform(sx), out);
+    }
+
+    fn qgemm4_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm4_farm_rows needs one scale per row");
+        farm4_core(xq, m, &w.q4, RowScales::PerRow(sx, 1.0), out);
+    }
+
+    fn qgemv4_into(&self, xq: &[i8], w: &PreparedQ4Matrix, sx: f32, out: &mut Tensor) {
+        gemv4_core(xq, &w.q4, sx, out);
+    }
+
+    // qgemm_gates_rows_into / qgemm4_gates_rows_into keep the trait
+    // defaults (the stacked three-gate sweep): scalar *is* the reference
+    // the fused kernels of the other backends are tested against.
 }

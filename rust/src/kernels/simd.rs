@@ -17,7 +17,7 @@
 
 use crate::tensor::Tensor;
 
-use super::{blocked, scalar, GemmBackend, PreparedQMatrix, RowScales};
+use super::{blocked, scalar, GemmBackend, PreparedQ4Matrix, PreparedQMatrix, RowScales};
 
 /// Is an accelerated path actually usable on this CPU at runtime?
 /// (`auto` consults this; without support the backend still works via
@@ -125,6 +125,97 @@ impl GemmBackend for SimdBackend {
         }
         blocked::qgemm_gates_core(xq, m, gp, scales, out);
     }
+
+    fn qgemm4_farm_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: f32,
+        out: &mut Tensor,
+    ) {
+        farm4_dispatch(xq, m, w, RowScales::Uniform(sx), out);
+    }
+
+    fn qgemm4_farm_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm4_farm_rows needs one scale per row");
+        farm4_dispatch(xq, m, w, RowScales::PerRow(sx, 1.0), out);
+    }
+
+    fn qgemv4_into(&self, xq: &[i8], w: &PreparedQ4Matrix, sx: f32, out: &mut Tensor) {
+        #[cfg(target_arch = "x86_64")]
+        if runtime_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { x86::gemv4_avx2(xq, &w.q4, sx, out) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if runtime_available() {
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { arm::gemv4_neon(xq, &w.q4, sx, out) };
+            return;
+        }
+        scalar::gemv4_core(xq, &w.q4, sx, out);
+    }
+
+    fn qgemm4_gates_rows_into(
+        &self,
+        xq: &[i8],
+        m: usize,
+        w: &PreparedQ4Matrix,
+        sx: &[f32],
+        out: &mut Tensor,
+    ) {
+        assert_eq!(m, sx.len(), "qgemm4_gates_rows needs one scale per row");
+        let Some(gp) = &w.gates else {
+            // no gate panels on this weight: plain stacked sweep
+            farm4_dispatch(xq, m, w, RowScales::PerRow(sx, 1.0), out);
+            return;
+        };
+        let scales = RowScales::PerRow(sx, 1.0);
+        #[cfg(target_arch = "x86_64")]
+        if runtime_available() {
+            // SAFETY: AVX2 support was just verified at runtime.
+            unsafe { x86::gates4_avx2(xq, m, gp, scales, out) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if runtime_available() {
+            // SAFETY: NEON support was just verified at runtime.
+            unsafe { arm::gates4_neon(xq, m, gp, scales, out) };
+            return;
+        }
+        blocked::qgemm4_gates_core(xq, m, gp, scales, out);
+    }
+}
+
+fn farm4_dispatch(
+    xq: &[i8],
+    m: usize,
+    w: &PreparedQ4Matrix,
+    scales: RowScales<'_>,
+    out: &mut Tensor,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if runtime_available() {
+        // SAFETY: AVX2 support was just verified at runtime.
+        unsafe { x86::farm4_avx2(xq, m, &w.q4, scales, out) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if runtime_available() {
+        // SAFETY: NEON support was just verified at runtime.
+        unsafe { arm::farm4_neon(xq, m, &w.q4, scales, out) };
+        return;
+    }
+    scalar::farm4_core(xq, m, &w.q4, scales, out);
 }
 
 fn farm_dispatch(
@@ -153,8 +244,9 @@ fn farm_dispatch(
 mod x86 {
     use std::arch::x86_64::*;
 
-    use crate::kernels::pack::{PackedGatePanels, KC};
-    use crate::kernels::RowScales;
+    use crate::kernels::pack::{PackedGatePanels, PackedQ4GatePanels, KC};
+    use crate::kernels::{scalar, RowScales};
+    use crate::quant::Q4Matrix;
     use crate::tensor::{Tensor, TensorI8};
 
     /// Exact int8 dot: widen i8→i16, `madd` pairs into i32 lanes, sum.
@@ -331,14 +423,170 @@ mod x86 {
             }
         }
     }
+
+    // -- int4 unpack-and-widen dots -----------------------------------------
+
+    /// Exact i32 dot of one full 32-column scale group: 16 nibble-packed
+    /// weight bytes against 32 activation bytes.  Unpack: mask the low
+    /// nibbles, shift-mask the high nibbles, sign-extend 4-bit
+    /// two's-complement via the xor-sub trick `(v ^ 8) - 8`, then
+    /// interleave lo/hi back into natural column order with
+    /// `unpacklo/unpackhi` before the same widen-madd accumulation as
+    /// [`dot_i8_avx2`].  Per-lane products fit i16 (|x|·|w| ≤ 127·7·2),
+    /// so the accumulation is exact.
+    ///
+    /// SAFETY: caller guarantees 32 readable i8 at `x` and 16 readable
+    /// bytes at `w`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4_block32_avx2(x: *const i8, w: *const u8) -> i32 {
+        let v = _mm_loadu_si128(w.cast());
+        let mask = _mm_set1_epi8(0x0f);
+        let eight = _mm_set1_epi8(8);
+        let lo = _mm_and_si128(v, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+        let lo = _mm_sub_epi8(_mm_xor_si128(lo, eight), eight);
+        let hi = _mm_sub_epi8(_mm_xor_si128(hi, eight), eight);
+        // byte t of `lo`/`hi` holds columns 2t / 2t+1: interleaving
+        // restores natural order (w01 = cols 0..15, w23 = cols 16..31)
+        let w01 = _mm_unpacklo_epi8(lo, hi);
+        let w23 = _mm_unpackhi_epi8(lo, hi);
+        let x01 = _mm_loadu_si128(x.cast());
+        let x23 = _mm_loadu_si128(x.add(16).cast());
+        let p0 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(x01), _mm256_cvtepi8_epi16(w01));
+        let p1 = _mm256_madd_epi16(_mm256_cvtepi8_epi16(x23), _mm256_cvtepi8_epi16(w23));
+        let acc = _mm256_add_epi32(p0, p1);
+        let lo128 = _mm256_castsi256_si128(acc);
+        let hi128 = _mm256_extracti128_si256::<1>(acc);
+        let s = _mm_add_epi32(lo128, hi128);
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x4E>(s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0xB1>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Exact i32 sub-dot of one scale group, columns `[c0, cend)`
+    /// (strip- or row-relative): full 32-column groups take the vector
+    /// block, ragged tails fall back to the scalar nibble walk — both
+    /// exact, so the choice cannot change bits.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4_group_avx2(xs: &[i8], wbytes: &[u8], c0: usize, cend: usize) -> i32 {
+        if cend - c0 == 32 {
+            dot_q4_block32_avx2(xs.as_ptr().add(c0), wbytes.as_ptr().add(c0 / 2))
+        } else {
+            scalar::dot_q4_group(xs, wbytes, c0, cend)
+        }
+    }
+
+    /// One int4 row dot under the fixed accumulation contract (exact i32
+    /// per group → f32 × group scale → f32 sum ascending): bit-identical
+    /// to `scalar::dot_q4_row`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_q4_row_avx2(
+        xq: &[i8],
+        wbytes: &[u8],
+        scales: &[f32],
+        k: usize,
+        group: usize,
+    ) -> f32 {
+        let mut acc = 0.0f32;
+        for (g, &s) in scales.iter().enumerate() {
+            let c0 = g * group;
+            let cend = (c0 + group).min(k);
+            acc += dot_q4_group_avx2(xq, wbytes, c0, cend) as f32 * s;
+        }
+        acc
+    }
+
+    /// The int4 farm schedule with AVX2 nibble dots over the row-major
+    /// reference layout (bit-identical to `scalar::farm4_core`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn farm4_avx2(
+        xq: &[i8],
+        m: usize,
+        w: &Q4Matrix,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(xq.len(), m * k, "simd int4 activation panel mismatch");
+        out.reset(&[m, n]);
+        let group = w.group();
+        for j in 0..n {
+            let wb = w.row_data(j);
+            let ws = w.row_scales(j);
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                out.row_mut(i)[j] = dot_q4_row_avx2(xi, wb, ws, k, group) * scales.get(i);
+            }
+        }
+    }
+
+    /// m = 1 int4 GEMV with AVX2 nibble dots (bit-identical to
+    /// `scalar::gemv4_core`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemv4_avx2(xq: &[i8], w: &Q4Matrix, sx: f32, out: &mut Tensor) {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(xq.len(), k, "gemv4 takes exactly one activation row");
+        out.reset(&[1, n]);
+        let group = w.group();
+        let orow = out.row_mut(0);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_q4_row_avx2(xq, w.row_data(j), w.row_scales(j), k, group) * sx;
+        }
+    }
+
+    /// Fused int4 GRU-gate sweep over gate-interleaved nibble panels
+    /// (same schedule as `blocked::qgemm4_gates_core`; bit-identical).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gates4_avx2(
+        xq: &[i8],
+        m: usize,
+        gp: &PackedQ4GatePanels,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (h, k, group) = (gp.h(), gp.k(), gp.group());
+        assert_eq!(xq.len(), m * k, "fused-gate int4 activation panel mismatch");
+        out.reset(&[m, 3 * h]);
+        let nstrips = gp.nstrips();
+        for j in 0..h {
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let (mut az, mut ar, mut ac) = (0f32, 0f32, 0f32);
+                for s in 0..nstrips {
+                    let k0 = s * KC;
+                    let kcs = gp.strip_cols(s);
+                    let pairs = kcs.div_ceil(2);
+                    let gs = kcs.div_ceil(group);
+                    let block = gp.block(s, j);
+                    let bscales = gp.block_scales(s, j);
+                    let xs = &xi[k0..k0 + kcs];
+                    let (zb, rb, cb) =
+                        (&block[..pairs], &block[pairs..2 * pairs], &block[2 * pairs..]);
+                    for g in 0..gs {
+                        let c0 = g * group;
+                        let cend = (c0 + group).min(kcs);
+                        az += dot_q4_group_avx2(xs, zb, c0, cend) as f32 * bscales[g];
+                        ar += dot_q4_group_avx2(xs, rb, c0, cend) as f32 * bscales[gs + g];
+                        ac += dot_q4_group_avx2(xs, cb, c0, cend) as f32 * bscales[2 * gs + g];
+                    }
+                }
+                let scale = scales.get(i);
+                let orow = out.row_mut(i);
+                orow[j] = az * scale;
+                orow[h + j] = ar * scale;
+                orow[2 * h + j] = ac * scale;
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
 mod arm {
     use std::arch::aarch64::*;
 
-    use crate::kernels::pack::{PackedGatePanels, KC};
-    use crate::kernels::RowScales;
+    use crate::kernels::pack::{PackedGatePanels, PackedQ4GatePanels, KC};
+    use crate::kernels::{scalar, RowScales};
+    use crate::quant::Q4Matrix;
     use crate::tensor::{Tensor, TensorI8};
 
     /// Exact int8 dot: widening `vmull_s8` into i16, pairwise-accumulate
@@ -505,6 +753,154 @@ mod arm {
             }
         }
     }
+
+    // -- int4 unpack-and-widen dots -----------------------------------------
+
+    /// Exact i32 dot of one full 32-column scale group: 16 nibble-packed
+    /// weight bytes against 32 activation bytes.  Unpack: mask the low
+    /// nibbles, logical-shift the high nibbles down, sign-extend 4-bit
+    /// two's-complement via `(v ^ 8) - 8`, then `vzip1q/vzip2q`
+    /// interleave lo/hi back into natural column order before the same
+    /// widening `vmull_s8` + `vpadalq_s16` accumulation as
+    /// [`dot_i8_neon`] — exact, so lane order cannot change bits.
+    ///
+    /// SAFETY: caller guarantees 32 readable i8 at `x` and 16 readable
+    /// bytes at `w`.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_q4_block32_neon(x: *const i8, w: *const u8) -> i32 {
+        let v = vld1q_u8(w);
+        let lo = vreinterpretq_s8_u8(vandq_u8(v, vdupq_n_u8(0x0f)));
+        let hi = vreinterpretq_s8_u8(vshrq_n_u8::<4>(v));
+        let eight = vdupq_n_s8(8);
+        let lo = vsubq_s8(veorq_s8(lo, eight), eight);
+        let hi = vsubq_s8(veorq_s8(hi, eight), eight);
+        // byte t of `lo`/`hi` holds columns 2t / 2t+1: zipping restores
+        // natural order (w01 = cols 0..15, w23 = cols 16..31)
+        let w01 = vzip1q_s8(lo, hi);
+        let w23 = vzip2q_s8(lo, hi);
+        let x01 = vld1q_s8(x);
+        let x23 = vld1q_s8(x.add(16));
+        let mut acc = vdupq_n_s32(0);
+        acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(x01), vget_low_s8(w01)));
+        acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(x01), vget_high_s8(w01)));
+        acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(x23), vget_low_s8(w23)));
+        acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(x23), vget_high_s8(w23)));
+        vaddvq_s32(acc)
+    }
+
+    /// Exact i32 sub-dot of one scale group, columns `[c0, cend)`: full
+    /// 32-column groups take the vector block, ragged tails fall back to
+    /// the scalar nibble walk — both exact.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_q4_group_neon(xs: &[i8], wbytes: &[u8], c0: usize, cend: usize) -> i32 {
+        if cend - c0 == 32 {
+            dot_q4_block32_neon(xs.as_ptr().add(c0), wbytes.as_ptr().add(c0 / 2))
+        } else {
+            scalar::dot_q4_group(xs, wbytes, c0, cend)
+        }
+    }
+
+    /// One int4 row dot under the fixed accumulation contract —
+    /// bit-identical to `scalar::dot_q4_row`.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_q4_row_neon(
+        xq: &[i8],
+        wbytes: &[u8],
+        scales: &[f32],
+        k: usize,
+        group: usize,
+    ) -> f32 {
+        let mut acc = 0.0f32;
+        for (g, &s) in scales.iter().enumerate() {
+            let c0 = g * group;
+            let cend = (c0 + group).min(k);
+            acc += dot_q4_group_neon(xq, wbytes, c0, cend) as f32 * s;
+        }
+        acc
+    }
+
+    /// The int4 farm schedule with NEON nibble dots over the row-major
+    /// reference layout (bit-identical to `scalar::farm4_core`).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn farm4_neon(
+        xq: &[i8],
+        m: usize,
+        w: &Q4Matrix,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(xq.len(), m * k, "simd int4 activation panel mismatch");
+        out.reset(&[m, n]);
+        let group = w.group();
+        for j in 0..n {
+            let wb = w.row_data(j);
+            let ws = w.row_scales(j);
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                out.row_mut(i)[j] = dot_q4_row_neon(xi, wb, ws, k, group) * scales.get(i);
+            }
+        }
+    }
+
+    /// m = 1 int4 GEMV with NEON nibble dots (bit-identical to
+    /// `scalar::gemv4_core`).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemv4_neon(xq: &[i8], w: &Q4Matrix, sx: f32, out: &mut Tensor) {
+        let (n, k) = (w.rows(), w.cols());
+        assert_eq!(xq.len(), k, "gemv4 takes exactly one activation row");
+        out.reset(&[1, n]);
+        let group = w.group();
+        let orow = out.row_mut(0);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_q4_row_neon(xq, w.row_data(j), w.row_scales(j), k, group) * sx;
+        }
+    }
+
+    /// Fused int4 GRU-gate sweep over gate-interleaved nibble panels
+    /// (same schedule as `blocked::qgemm4_gates_core`; bit-identical).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gates4_neon(
+        xq: &[i8],
+        m: usize,
+        gp: &PackedQ4GatePanels,
+        scales: RowScales<'_>,
+        out: &mut Tensor,
+    ) {
+        let (h, k, group) = (gp.h(), gp.k(), gp.group());
+        assert_eq!(xq.len(), m * k, "fused-gate int4 activation panel mismatch");
+        out.reset(&[m, 3 * h]);
+        let nstrips = gp.nstrips();
+        for j in 0..h {
+            for i in 0..m {
+                let xi = &xq[i * k..(i + 1) * k];
+                let (mut az, mut ar, mut ac) = (0f32, 0f32, 0f32);
+                for s in 0..nstrips {
+                    let k0 = s * KC;
+                    let kcs = gp.strip_cols(s);
+                    let pairs = kcs.div_ceil(2);
+                    let gs = kcs.div_ceil(group);
+                    let block = gp.block(s, j);
+                    let bscales = gp.block_scales(s, j);
+                    let xs = &xi[k0..k0 + kcs];
+                    let (zb, rb, cb) =
+                        (&block[..pairs], &block[pairs..2 * pairs], &block[2 * pairs..]);
+                    for g in 0..gs {
+                        let c0 = g * group;
+                        let cend = (c0 + group).min(kcs);
+                        az += dot_q4_group_neon(xs, zb, c0, cend) as f32 * bscales[g];
+                        ar += dot_q4_group_neon(xs, rb, c0, cend) as f32 * bscales[gs + g];
+                        ac += dot_q4_group_neon(xs, cb, c0, cend) as f32 * bscales[2 * gs + g];
+                    }
+                }
+                let scale = scales.get(i);
+                let orow = out.row_mut(i);
+                orow[j] = az * scale;
+                orow[h + j] = ar * scale;
+                orow[2 * h + j] = ac * scale;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -565,6 +961,55 @@ mod tests {
             let mut out = Tensor::zeros(&[0, 0]);
             be.qgemm_gates_rows_into(x.data(), m, &w, &sx, &mut out);
             assert_eq!(out, qgemm_farm_rows(&x, &wq, &sx, 0.021), "gates ({m},{h},{k})");
+        }
+    }
+
+    fn rand_q4(n: usize, k: usize, rng: &mut Pcg64) -> crate::quant::Q4Matrix {
+        crate::quant::quantize4(&Tensor::randn(&[n, k], 0.5, rng))
+    }
+
+    #[test]
+    fn simd_int4_bit_identical_to_scalar_reference() {
+        // k values straddle the 32-column group width (vector block vs
+        // ragged scalar tail); whatever path the host takes, exact
+        let mut rng = Pcg64::seeded(5);
+        let be = SimdBackend;
+        for &(m, n, k) in
+            &[(1usize, 3usize, 1usize), (2, 7, 31), (3, 9, 32), (4, 33, 33), (8, 66, 320)]
+        {
+            let x = rand_i8(m, k, &mut rng);
+            let w4 = rand_q4(n, k, &mut rng);
+            let w = crate::kernels::PreparedQ4Matrix::new(w4.clone());
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm4_farm_into(x.data(), m, &w, 0.013, &mut out);
+            assert_eq!(out, crate::kernels::qgemm4_ref(&x, &w4, 0.013), "({m},{n},{k})");
+
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.002 * i as f32).collect();
+            let mut rows = Tensor::zeros(&[0, 0]);
+            be.qgemm4_farm_rows_into(x.data(), m, &w, &sx, &mut rows);
+            assert_eq!(rows, crate::kernels::qgemm4_farm_rows(&x, &w4, &sx), "rows ({m},{n},{k})");
+        }
+        for &(n, k) in &[(1usize, 1usize), (5, 31), (33, 64), (66, 320)] {
+            let x = rand_i8(1, k, &mut rng);
+            let w4 = rand_q4(n, k, &mut rng);
+            let w = crate::kernels::PreparedQ4Matrix::new(w4.clone());
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemv4_into(x.data(), &w, 0.013, &mut out);
+            assert_eq!(out, crate::kernels::qgemm4_ref(&x, &w4, 0.013), "gemv4 ({n},{k})");
+        }
+        for &(m, h, k) in &[(1usize, 1usize, 1usize), (2, 5, 31), (3, 32, 257)] {
+            let x = rand_i8(m, k, &mut rng);
+            let w4 = rand_q4(3 * h, k, &mut rng);
+            let w = crate::kernels::PreparedQ4Matrix::new_with_gates(w4.clone());
+            assert!(w.gates.is_some(), "3h-row int4 weight must carry gate panels");
+            let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.002 * i as f32).collect();
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm4_gates_rows_into(x.data(), m, &w, &sx, &mut out);
+            assert_eq!(
+                out,
+                crate::kernels::qgemm4_farm_rows(&x, &w4, &sx),
+                "gates4 ({m},{h},{k})"
+            );
         }
     }
 }

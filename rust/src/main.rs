@@ -19,7 +19,7 @@ use tracenorm::jsonx::Json;
 use tracenorm::kernels::BackendSel;
 use tracenorm::model::ParamSet;
 use tracenorm::obs::MetricsExporter;
-use tracenorm::registry::{ladder_build, Registry};
+use tracenorm::registry::{ladder_build_with_bits, Registry};
 use tracenorm::runtime::{BatchGeom, ModelDims, Runtime};
 use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
 use tracenorm::stream::{demo_dims, synthetic_params};
@@ -72,6 +72,35 @@ fn open_runtime(cli: &Cli) -> Result<Runtime> {
 /// The `--backend {scalar,blocked,simd,auto}` flag (DESIGN.md §4).
 fn backend_flag(cli: &Cli) -> Result<BackendSel> {
     cli.flag_str("backend", "auto").parse()
+}
+
+/// The `--bits {8,4}` flag: quantized-weight width for ladder rungs,
+/// the serving engines and QAT fine-tuning (DESIGN.md §4).
+fn bits_flag(cli: &Cli) -> Result<u32> {
+    match cli.flag_usize("bits", 8) {
+        8 => Ok(8),
+        4 => Ok(4),
+        other => Err(tracenorm::Error::Config(format!("--bits must be 8 or 4 (got '{other}')"))),
+    }
+}
+
+/// Resolve `--precision {int8,f32}` × `--bits {8,4}` to an engine
+/// precision.  `--precision f32` serves unquantized (and rejects an
+/// explicit `--bits 4`, which would silently mean something else);
+/// otherwise `--bits` picks the int8 or packed-int4 weight path.
+fn precision_flag(cli: &Cli) -> Result<Precision> {
+    let bits = bits_flag(cli)?;
+    match cli.flag_str("precision", "int8").as_str() {
+        "f32" => {
+            if bits != 8 {
+                return Err(tracenorm::Error::Config(
+                    "--bits 4 contradicts --precision f32 (drop one)".into(),
+                ));
+            }
+            Ok(Precision::F32)
+        }
+        _ => Ok(if bits == 4 { Precision::Int4 } else { Precision::Int8 }),
+    }
 }
 
 /// An `--x {on,off}` switch flag.
@@ -252,9 +281,18 @@ fn native_train_cmd(cli: &Cli) -> Result<()> {
              only (partial) batch and train nothing"
         )));
     }
+    // `--bits 4|8` turns on quantization-aware fine-tuning: the forward
+    // pass trains through the serving quantizer (STE).  Only the stage
+    // being trained here sees it — the two-stage driver keeps stage 1 in
+    // plain f32 regardless.
+    let qat_bits = match cli.cfg.raw("bits") {
+        Some(_) => Some(bits_flag(cli)?),
+        None => None,
+    };
     let mut nopts = NativeOpts {
         momentum: cli.flag_f64("momentum", 0.9) as f32,
         clip: cli.flag_f64("clip", 2.0) as f32,
+        qat_bits,
     };
     let mut opts = TrainOpts {
         seed,
@@ -297,9 +335,13 @@ fn native_train_cmd(cli: &Cli) -> Result<()> {
     let mut batcher = Batcher::new(&data.train, geom, data.spec.feat_dim, seed);
     let eval = NativeEvaluator::new(&dims);
     println!(
-        "native training: stage {stage}, {} train / {} dev utts, batch {batch}, {epochs} epochs",
+        "native training: stage {stage}, {} train / {} dev utts, batch {batch}, {epochs} epochs{}",
         data.train.len(),
-        data.dev.len()
+        data.dev.len(),
+        match qat_bits {
+            Some(b) => format!(", QAT int{b}"),
+            None => String::new(),
+        }
     );
 
     // epochs completed in earlier sessions (restored from a resumed
@@ -555,10 +597,7 @@ fn two_stage_cmd(cli: &Cli) -> Result<()> {
 
 fn transcribe_cmd(cli: &Cli) -> Result<()> {
     let ctx = default_ctx(cli)?;
-    let precision = match cli.flag_str("precision", "int8").as_str() {
-        "f32" => Precision::F32,
-        _ => Precision::Int8,
-    };
+    let precision = precision_flag(cli)?;
     let n = cli.flag_usize("utts", 5);
     // quick train so the transcription is meaningful
     let artifact = "train_mini_partial_full";
@@ -606,13 +645,15 @@ fn transcribe_cmd(cli: &Cli) -> Result<()> {
 }
 
 /// `ladder-build`: the offline rank-ladder pass — per-group truncated
-/// SVD at each rank fraction, int8 quantization, one self-describing
-/// TNCK-v2 artifact per rung plus `ladder.json` (DESIGN.md §8).  Runs
-/// fully offline: weights come from `--load` or, for demos and CI
-/// smoke, a synthetic full-rank model on the `wsj_mini` demo dims.
+/// SVD at each rank fraction, int8 (or, with `--bits 4`, packed int4)
+/// quantization, one self-describing TNCK-v2 artifact per rung plus
+/// `ladder.json` (DESIGN.md §8).  Runs fully offline: weights come from
+/// `--load` or, for demos and CI smoke, a synthetic full-rank model on
+/// the `wsj_mini` demo dims.
 fn ladder_build_cmd(cli: &Cli) -> Result<()> {
     let out = cli.flag_str("out", "ladder");
     let seed = cli.flag_usize("seed", 17) as u64;
+    let bits = bits_flag(cli)?;
     let fracs_flag = cli.flag_str("fracs", "0.75,0.5,0.25");
     let fracs = fracs_flag
         .split(',')
@@ -642,13 +683,14 @@ fn ladder_build_cmd(cli: &Cli) -> Result<()> {
             (synthetic_params(&dims, 1.0, seed), dims)
         }
     };
-    let rungs = ladder_build(&params, &dims, &fracs, Path::new(&out))?;
-    println!("ladder written to {out}/ ({} rungs):", rungs.len());
+    let rungs = ladder_build_with_bits(&params, &dims, &fracs, bits, Path::new(&out))?;
+    println!("ladder written to {out}/ ({} rungs, int{bits} weights):", rungs.len());
     for (tier, r) in rungs.iter().enumerate() {
         println!(
-            "  tier {tier}  {}  rank_frac {:.3}  params {}  weights {} KB",
+            "  tier {tier}  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB",
             r.tag,
             r.rank_frac,
+            r.bits,
             r.params,
             r.bytes / 1024
         );
@@ -670,7 +712,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     // precision, weights and scheme are baked into the ladder artifacts;
     // silently ignoring these flags would serve something other than
     // what the command line claims
-    for flag in ["precision", "load", "rank-frac", "scheme"] {
+    for flag in ["precision", "bits", "load", "rank-frac", "scheme"] {
         if cli.cfg.raw(flag).is_some() {
             return Err(tracenorm::Error::Config(format!(
                 "--{flag} does not apply with --ladder (the ladder artifacts fix it); \
@@ -700,9 +742,10 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
         );
         for v in reg.variants() {
             println!(
-                "  {}  rank_frac {:.3}  params {}  weights {} KB",
+                "  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB",
                 v.info.tag,
                 v.info.rank_frac,
+                v.info.bits,
                 v.info.params,
                 v.info.bytes / 1024
             );
@@ -736,10 +779,11 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     println!("per-tier report:");
     for t in &r.tiers {
         println!(
-            "  tier {}  {}  rank {:.3}  sessions {:>3}  p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
+            "  tier {}  {}  rank {:.3}  bits {}  sessions {:>3}  p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
             t.tier,
             t.tag,
             t.rank_frac,
+            t.bits,
             t.sessions,
             t.latency.p50 * 1e3,
             t.latency.p95 * 1e3,
@@ -796,10 +840,7 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         return ladder_serve_cmd(cli, &dir);
     }
     let json = cli.cfg.bool_or("json", false);
-    let precision = match cli.flag_str("precision", "int8").as_str() {
-        "f32" => Precision::F32,
-        _ => Precision::Int8,
-    };
+    let precision = precision_flag(cli)?;
     let pool = cli.flag_usize("pool", 4);
     let n = cli.flag_usize("utts", 32);
     let rate = cli.flag_f64("rate", 8.0);

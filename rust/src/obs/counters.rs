@@ -26,11 +26,24 @@ pub enum OpKind {
     FusedGates,
     /// f32 reference GEMM.
     F32,
+    /// int4 farm GEMM (`qgemm4_farm_into` / `qgemm4_farm_rows_into`).
+    Gemm4,
+    /// m = 1 int4 GEMV fast path.
+    Gemv4,
+    /// Fused int4 GRU-gate sweep (`qgemm4_gates_rows_into`).
+    FusedGates4,
 }
 
-pub const NUM_KINDS: usize = 4;
-pub const ALL_KINDS: [OpKind; NUM_KINDS] =
-    [OpKind::Gemm, OpKind::Gemv, OpKind::FusedGates, OpKind::F32];
+pub const NUM_KINDS: usize = 7;
+pub const ALL_KINDS: [OpKind; NUM_KINDS] = [
+    OpKind::Gemm,
+    OpKind::Gemv,
+    OpKind::FusedGates,
+    OpKind::F32,
+    OpKind::Gemm4,
+    OpKind::Gemv4,
+    OpKind::FusedGates4,
+];
 
 impl OpKind {
     #[inline]
@@ -44,6 +57,9 @@ impl OpKind {
             OpKind::Gemv => "gemv",
             OpKind::FusedGates => "fused_gates",
             OpKind::F32 => "f32",
+            OpKind::Gemm4 => "qgemm4",
+            OpKind::Gemv4 => "qgemv4",
+            OpKind::FusedGates4 => "qgemm4_gates",
         }
     }
 }
@@ -167,6 +183,16 @@ pub fn snapshot() -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn op_kind_indices_stay_dense() {
+        // the cell grid indexes by `self as usize`: every kind must map
+        // into [0, NUM_KINDS) with no gaps
+        for (i, kind) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(kind.index(), i, "{}", kind.name());
+        }
+        assert_eq!(ALL_KINDS.len(), NUM_KINDS);
+    }
 
     #[test]
     fn buckets_cover_the_small_batch_sweep() {

@@ -1,4 +1,4 @@
-//! Int8 quantization (paper §4): symmetric per-tensor scheme.
+//! Int8 and int4 quantization (paper §4): symmetric schemes.
 //!
 //! The paper quantizes weights and GEMM inputs to unsigned 8-bit after
 //! training ("2% to 4% relative increase in WER").  We use the symmetric
@@ -6,6 +6,16 @@
 //! widening multiply-accumulate in [`crate::kernels`]: the asymmetric
 //! row/column-offset corrections gemmlowp needs are exactly the
 //! bookkeeping the farm-style kernel avoids at small batch.
+//!
+//! The int4 path ([`Q4Matrix`]) halves bytes-per-weight again, which is
+//! the dominant lever at batch 1 where the GEMM is bound by streaming
+//! weight bytes.  A single per-tensor scale is too coarse at 4 bits, so
+//! weights quantize symmetrically per **group** of [`Q4_GROUP`]
+//! consecutive columns with one f32 scale each (scale = group max / 7;
+//! values in [-7, 7], stored as two's-complement nibbles, two per byte).
+//! Activations stay int8 — the kernels widen nibbles to i16/i32 and the
+//! per-group scale multiplies an exact i32 sub-accumulation, which is
+//! what makes the int4 path bit-identical across backends.
 
 use crate::tensor::{Tensor, TensorI8};
 
@@ -63,6 +73,222 @@ pub fn qgemm_abs_error_bound(k: usize, sx: f32, sw: f32) -> f32 {
 pub fn dequantize(q: &QMatrix) -> Tensor {
     let data: Vec<f32> = q.q.data().iter().map(|&v| v as f32 * q.scale).collect();
     Tensor::new(q.q.shape(), data).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Int4: per-group symmetric quantization, two nibbles per byte.
+// ---------------------------------------------------------------------------
+
+/// Columns per int4 scale group.  Chosen to divide every blocked-backend
+/// strip width ([`crate::kernels::autotune::CANDIDATES`] uses kc ∈
+/// {128, 256, 512}), so a KC strip always covers whole groups and the
+/// packed cores never split a group's i32 sub-accumulation across strips.
+pub const Q4_GROUP: usize = 32;
+
+/// Sign-extend the low nibble of a packed byte.
+#[inline(always)]
+pub fn nibble_lo(b: u8) -> i8 {
+    (((b & 0x0f) << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of a packed byte.
+#[inline(always)]
+pub fn nibble_hi(b: u8) -> i8 {
+    (b as i8) >> 4
+}
+
+/// Pack two int4 values (each in [-8, 7]) into one byte: `lo` in the low
+/// nibble, `hi` in the high nibble (two's complement).
+#[inline(always)]
+pub fn pack_nibbles(lo: i8, hi: i8) -> u8 {
+    ((lo as u8) & 0x0f) | ((hi as u8) << 4)
+}
+
+/// Int4-quantized matrix: `w[r, c] ≈ scales[r·ngroups + c/group] · q[r, c]`,
+/// with `q` stored as two's-complement nibbles, two per byte.
+///
+/// Row-major layout: each row is `ceil(k/2)` bytes; byte `j` of a row
+/// holds column `2j` in its low nibble and column `2j+1` in its high
+/// nibble (the high nibble of the last byte is zero when `k` is odd).
+/// Scales are row-major `(n, ngroups)` with `ngroups = ceil(k/group)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Q4Matrix {
+    shape: [usize; 2], // (n, k)
+    group: usize,
+    data: Vec<u8>,
+    scales: Vec<f32>,
+}
+
+impl Q4Matrix {
+    /// Rebuild from stored parts (the checkpoint loader); validates the
+    /// byte/scale counts against the logical shape.
+    pub fn from_parts(
+        n: usize,
+        k: usize,
+        group: usize,
+        data: Vec<u8>,
+        scales: Vec<f32>,
+    ) -> Option<Q4Matrix> {
+        if group == 0 || data.len() != n * k.div_ceil(2) || scales.len() != n * k.div_ceil(group)
+        {
+            return None;
+        }
+        Some(Q4Matrix { shape: [n, k], group, data, scales })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// `(n, k)` as a shape slice (checkpoint entries expose it).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Columns per scale group.
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Scale groups per row.
+    pub fn ngroups(&self) -> usize {
+        self.cols().div_ceil(self.group)
+    }
+
+    /// Packed bytes per row.
+    pub fn row_bytes(&self) -> usize {
+        self.cols().div_ceil(2)
+    }
+
+    /// All packed nibble bytes, row-major.
+    pub fn data(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// All per-group scales, row-major `(n, ngroups)`.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Packed bytes of row `r`.
+    pub fn row_data(&self, r: usize) -> &[u8] {
+        let rb = self.row_bytes();
+        &self.data[r * rb..(r + 1) * rb]
+    }
+
+    /// Group scales of row `r`.
+    pub fn row_scales(&self, r: usize) -> &[f32] {
+        let g = self.ngroups();
+        &self.scales[r * g..(r + 1) * g]
+    }
+
+    /// Decode one element (sign-extended int4 value).
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        debug_assert!(r < self.rows() && c < self.cols());
+        let b = self.data[r * self.row_bytes() + c / 2];
+        if c % 2 == 0 {
+            nibble_lo(b)
+        } else {
+            nibble_hi(b)
+        }
+    }
+
+    /// Largest group scale (the `sw` of [`qgemm4_abs_error_bound`]).
+    pub fn max_scale(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |m, &s| m.max(s))
+    }
+
+    /// On-device payload bytes: packed nibbles plus the f32 scales.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+}
+
+/// Per-group symmetric int4 quantization with the default [`Q4_GROUP`]
+/// group width.  `w` must be rank 2 (weight matrices only — biases stay
+/// f32 on the embedded path).
+pub fn quantize4(w: &Tensor) -> Q4Matrix {
+    quantize4_grouped(w, Q4_GROUP)
+}
+
+/// [`quantize4`] with an explicit group width (tests exercise ragged
+/// tails; production uses [`Q4_GROUP`]).
+pub fn quantize4_grouped(w: &Tensor, group: usize) -> Q4Matrix {
+    assert!(group > 0, "group width must be positive");
+    assert_eq!(w.rank(), 2, "int4 quantization is for rank-2 weights");
+    let (n, k) = (w.rows(), w.cols());
+    let ngroups = k.div_ceil(group);
+    let row_bytes = k.div_ceil(2);
+    let mut data = vec![0u8; n * row_bytes];
+    let mut scales = vec![0.0f32; n * ngroups];
+    let mut qrow = vec![0i8; k];
+    for r in 0..n {
+        let row = w.row(r);
+        for g in 0..ngroups {
+            let c0 = g * group;
+            let c1 = (c0 + group).min(k);
+            let amax = row[c0..c1].iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-12);
+            let scale = amax / 7.0;
+            let inv = 1.0 / scale;
+            scales[r * ngroups + g] = scale;
+            for c in c0..c1 {
+                qrow[c] = (row[c] * inv).round().clamp(-7.0, 7.0) as i8;
+            }
+        }
+        for j in 0..row_bytes {
+            let lo = qrow[2 * j];
+            let hi = if 2 * j + 1 < k { qrow[2 * j + 1] } else { 0 };
+            data[r * row_bytes + j] = pack_nibbles(lo, hi);
+        }
+    }
+    Q4Matrix { shape: [n, k], group, data, scales }
+}
+
+/// Reconstruct the f32 matrix a [`Q4Matrix`] represents.
+pub fn dequantize4(q: &Q4Matrix) -> Tensor {
+    let (n, k, group) = (q.rows(), q.cols(), q.group());
+    let ngroups = q.ngroups();
+    let mut data = vec![0.0f32; n * k];
+    for r in 0..n {
+        for c in 0..k {
+            let s = q.scales()[r * ngroups + c / group];
+            data[r * k + c] = q.get(r, c) as f32 * s;
+        }
+    }
+    Tensor::new(&[n, k], data).unwrap()
+}
+
+/// Quantize-dequantize through the exact serving int4 quantizer — the
+/// forward of the straight-through-estimator `fake_quant` op
+/// ([`crate::autograd`]), so quantization-aware fine-tuning optimizes
+/// against precisely the rounding the inference engine will apply.
+pub fn fake_quantize4(w: &Tensor) -> Tensor {
+    dequantize4(&quantize4(w))
+}
+
+/// [`fake_quantize4`]'s int8 sibling (per-tensor, the serving int8
+/// quantizer verbatim).
+pub fn fake_quantize8(w: &Tensor) -> Tensor {
+    dequantize(&quantize(w))
+}
+
+/// Analytic worst-case absolute error of an int4-weight GEMM output
+/// element against the f32 reference, for a `k`-length contraction with
+/// int8 activation scale `sx` and **largest** group scale `sw`
+/// ([`Q4Matrix::max_scale`]).
+///
+/// Same derivation as [`qgemm_abs_error_bound`] with the weight magnitude
+/// bound dropping from 127 to 7: per product term
+/// `|x·w − sx·s_g·x_q·w_q| ≤ sx·127·(s_g/2) + s_g·7·(sx/2) + (sx/2)(s_g/2)`,
+/// i.e. `sx·s_g·67.25`, and `s_g ≤ sw` for every group, giving
+/// `k · sx · sw · 67.25` over the contraction plus f32 rounding slack.
+pub fn qgemm4_abs_error_bound(k: usize, sx: f32, sw: f32) -> f32 {
+    let quant = k as f32 * sx * sw * 67.25;
+    quant * 1.01 + 1e-6
 }
 
 /// Quantization error statistics (for EXPERIMENTS.md and tests).
@@ -140,5 +366,88 @@ mod tests {
         let w = Tensor::zeros(&[3, 3]);
         let q = quantize(&w);
         assert!(q.q.data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn nibble_pack_roundtrips_full_range() {
+        for lo in -8i8..=7 {
+            for hi in -8i8..=7 {
+                let b = pack_nibbles(lo, hi);
+                assert_eq!(nibble_lo(b), lo);
+                assert_eq!(nibble_hi(b), hi);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_roundtrip_error_bounded_by_half_group_step() {
+        let mut rng = Pcg64::seeded(4);
+        // ragged k (odd, non-multiple of the group) exercises both tails
+        let w = Tensor::randn(&[9, 77], 0.3, &mut rng);
+        let q = quantize4(&w);
+        assert_eq!(q.ngroups(), 77usize.div_ceil(Q4_GROUP));
+        assert_eq!(q.row_bytes(), 39);
+        let deq = dequantize4(&q);
+        for r in 0..w.rows() {
+            for c in 0..w.cols() {
+                let s = q.row_scales(r)[c / Q4_GROUP];
+                let e = (w.row(r)[c] - deq.row(r)[c]).abs();
+                assert!(e <= 0.5 * s + 1e-7, "({r},{c}): err {e} > half step {}", 0.5 * s);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_scale_covers_group_max_and_extreme_maps_to_7() {
+        // two groups of 2 with very different ranges: per-group scales
+        // must adapt where a per-tensor scale would crush the small group
+        let w = Tensor::new(&[1, 4], vec![0.01, -0.02, 7.0, -3.5]).unwrap();
+        let q = quantize4_grouped(&w, 2);
+        assert!((q.row_scales(0)[0] - 0.02 / 7.0).abs() < 1e-9);
+        assert!((q.row_scales(0)[1] - 1.0).abs() < 1e-9);
+        assert_eq!(q.get(0, 1), -7);
+        assert_eq!(q.get(0, 2), 7);
+        assert_eq!(q.max_scale(), 1.0);
+    }
+
+    #[test]
+    fn q4_from_parts_validates_lengths() {
+        let w = Tensor::zeros(&[3, 5]);
+        let q = quantize4_grouped(&w, 4);
+        let rebuilt = Q4Matrix::from_parts(
+            3,
+            5,
+            4,
+            q.data().to_vec(),
+            q.scales().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt.row_bytes(), q.row_bytes());
+        assert!(Q4Matrix::from_parts(3, 5, 4, vec![0u8; 2], q.scales().to_vec()).is_none());
+        assert!(Q4Matrix::from_parts(3, 5, 0, q.data().to_vec(), q.scales().to_vec()).is_none());
+    }
+
+    #[test]
+    fn q4_payload_is_half_byte_per_weight_plus_scales() {
+        let mut rng = Pcg64::seeded(5);
+        let w = Tensor::randn(&[64, 256], 0.5, &mut rng);
+        let q = quantize4(&w);
+        let weights = 64 * 256;
+        let scale_bytes = 64 * (256 / Q4_GROUP) * 4;
+        assert_eq!(q.payload_bytes(), weights / 2 + scale_bytes);
+        // ~0.5 bytes/weight once scales amortize over 32-wide groups
+        let bpw = q.payload_bytes() as f64 / weights as f64;
+        assert!(bpw < 0.7, "bytes/weight {bpw}");
+    }
+
+    #[test]
+    fn fake_quantize_matches_serving_quantizers() {
+        let mut rng = Pcg64::seeded(6);
+        let w = Tensor::randn(&[7, 33], 0.4, &mut rng);
+        assert_eq!(fake_quantize4(&w), dequantize4(&quantize4(&w)));
+        assert_eq!(fake_quantize8(&w), dequantize(&quantize(&w)));
+        // idempotent: re-quantizing a fake-quantized tensor is a no-op
+        let fq = fake_quantize4(&w);
+        assert!(fq.max_abs_diff(&fake_quantize4(&fq)) < 1e-6);
     }
 }

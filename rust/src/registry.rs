@@ -7,9 +7,10 @@
 //! that family a deployable unit: for each requested rank fraction it
 //! runs the per-group truncated SVD ([`crate::model::truncate_groups`],
 //! the same balanced-factor rule as the stage-2 warmstart), quantizes
-//! every weight to int8 ([`crate::quant::quantize`]), and writes one
-//! self-describing TNCK-v2 artifact per rung plus a `ladder.json`
-//! manifest:
+//! every weight to int8 ([`crate::quant::quantize`]) — or int4 with
+//! per-group scales ([`crate::quant::quantize4`], `ladder-build --bits 4`)
+//! for half-size rungs — and writes one self-describing TNCK-v2 artifact
+//! per rung plus a `ladder.json` manifest:
 //!
 //! ```text
 //! <dir>/ladder.json        rung index: tag, file, rank_frac, params, bytes
@@ -35,7 +36,7 @@ use crate::infer::Engine;
 use crate::jsonx::Json;
 use crate::kernels::BackendSel;
 use crate::model::{self, ParamSet};
-use crate::quant::quantize;
+use crate::quant::{quantize, quantize4};
 use crate::runtime::ModelDims;
 
 /// File name of the rung index inside a ladder directory.
@@ -56,8 +57,11 @@ pub struct RungInfo {
     pub file: String,
     /// scalar parameter count of the factored model (the Fig-4 x-axis)
     pub params: usize,
-    /// on-device weight bytes of the int8 artifact
+    /// on-device weight bytes of the quantized artifact
     pub bytes: usize,
+    /// weight precision of the rung (8 = int8, 4 = int4); artifacts
+    /// written before the int4 path default to 8
+    pub bits: u32,
     /// per-group nondimensional trace norm ν(W) after truncation
     pub nu: Vec<(String, f32)>,
 }
@@ -72,8 +76,25 @@ pub fn ladder_build(
     rank_fracs: &[f64],
     dir: &Path,
 ) -> Result<Vec<RungInfo>> {
+    ladder_build_with_bits(params, dims, rank_fracs, 8, dir)
+}
+
+/// [`ladder_build`] with an explicit weight precision: 8 stores int8
+/// per-tensor-scale entries, 4 stores int4 per-group-scale entries at
+/// roughly half the bytes per rung (`ladder-build --bits 4`).  Biases
+/// stay f32 either way.
+pub fn ladder_build_with_bits(
+    params: &ParamSet,
+    dims: &ModelDims,
+    rank_fracs: &[f64],
+    bits: u32,
+    dir: &Path,
+) -> Result<Vec<RungInfo>> {
     if rank_fracs.is_empty() {
         return Err(Error::Config("ladder_build needs at least one rank fraction".into()));
+    }
+    if bits != 8 && bits != 4 {
+        return Err(Error::Config(format!("ladder_build bits must be 8 or 4, got {bits}")));
     }
     let mut fracs: Vec<f64> = rank_fracs.to_vec();
     fracs.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
@@ -93,11 +114,13 @@ pub fn ladder_build(
         }
         let scalars = factored.num_scalars();
 
-        let mut art = Artifact::new(rung_meta(dims, frac, &tag, scalars, &nu));
+        let mut art = Artifact::new(rung_meta(dims, frac, &tag, scalars, bits, &nu));
         let t0 = std::time::Instant::now();
         for (name, t) in factored.iter() {
             if name.ends_with("_b") {
                 art.set(name.clone(), Entry::F32(t.clone()));
+            } else if bits == 4 {
+                art.set(name.clone(), Entry::I4(quantize4(t)));
             } else {
                 art.set(name.clone(), Entry::I8(quantize(t)));
             }
@@ -122,6 +145,7 @@ pub fn ladder_build(
             file,
             params: scalars,
             bytes: art.payload_bytes(),
+            bits,
             nu,
         });
     }
@@ -268,6 +292,7 @@ fn write_manifest(rungs: &[RungInfo], dir: &Path) -> Result<()> {
                 ("rank_frac", Json::num(r.rank_frac)),
                 ("params", Json::num(r.params as f64)),
                 ("bytes", Json::num(r.bytes as f64)),
+                ("bits", Json::num(r.bits as f64)),
             ])
         })
         .collect();
@@ -276,7 +301,14 @@ fn write_manifest(rungs: &[RungInfo], dir: &Path) -> Result<()> {
     Ok(())
 }
 
-fn rung_meta(dims: &ModelDims, frac: f64, tag: &str, params: usize, nu: &[(String, f32)]) -> Json {
+fn rung_meta(
+    dims: &ModelDims,
+    frac: f64,
+    tag: &str,
+    params: usize,
+    bits: u32,
+    nu: &[(String, f32)],
+) -> Json {
     let nu_obj = Json::Obj(
         nu.iter().map(|(base, v)| (base.clone(), Json::Num(*v as f64))).collect(),
     );
@@ -286,6 +318,7 @@ fn rung_meta(dims: &ModelDims, frac: f64, tag: &str, params: usize, nu: &[(Strin
         ("tag", Json::str(tag)),
         ("rank_frac", Json::num(frac)),
         ("params", Json::num(params as f64)),
+        ("bits", Json::num(bits as f64)),
         ("dims", dims.to_json()),
         ("nu", nu_obj),
     ])
@@ -312,6 +345,8 @@ fn rung_info_from_meta(meta: &Json, file: &str) -> Result<RungInfo> {
         file: file.to_string(),
         params: json_f64(meta, "params")? as usize,
         bytes: 0, // caller fills this from the loaded entries
+        // pre-int4 artifacts carry no 'bits' key: they are int8
+        bits: meta.get("bits").and_then(|b| b.as_f64()).map(|b| b as u32).unwrap_or(8),
         nu,
     })
 }

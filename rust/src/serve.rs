@@ -117,6 +117,8 @@ pub struct StreamServeReport {
     pub shards: usize,
     /// GEMM backend the engine executed on (after `auto` resolution)
     pub backend: &'static str,
+    /// numeric mode the engine served at ("f32", "int8" or "int4")
+    pub precision: &'static str,
     /// whether the recurrent GEMM routed through the fused gate kernel
     pub fused_gates: bool,
     /// completed sessions per simulated second
@@ -157,6 +159,7 @@ impl StreamServeReport {
             ("pool_size", Json::num(self.pool_size as f64)),
             ("shards", Json::num(self.shards as f64)),
             ("backend", Json::str(self.backend)),
+            ("precision", Json::str(self.precision)),
             ("fused_gates", Json::Bool(self.fused_gates)),
             ("throughput", Json::num(self.throughput)),
             ("busy_secs", Json::num(self.busy_secs)),
@@ -210,6 +213,7 @@ pub fn stream_serve(
     }
     let shards = cfg.shards;
     let backend = engine.backend_name();
+    let precision = engine.precision.name();
     let fused_gates = engine.fused_gates();
     let arrivals = sharded_arrivals(utts.len(), shards, cfg.arrival_rate, cfg.seed);
     let engines = [engine];
@@ -376,6 +380,7 @@ pub fn stream_serve(
             pool_size: cfg.pool_size,
             shards,
             backend,
+            precision,
             fused_gates,
             throughput: utts.len() as f64 / span.max(1e-9),
             session_latency: all_lat.summary(),
@@ -442,6 +447,8 @@ pub struct TierReport {
     pub tier: usize,
     pub tag: String,
     pub rank_frac: f64,
+    /// quantized-weight width of the tier's artifact (8 or 4)
+    pub bits: u32,
     /// scalar parameter count of the tier's variant
     pub params: usize,
     /// sessions admitted at this tier (all shards)
@@ -458,6 +465,7 @@ impl TierReport {
             ("tier", Json::num(self.tier as f64)),
             ("tag", Json::str(self.tag.clone())),
             ("rank_frac", Json::num(self.rank_frac)),
+            ("bits", Json::num(self.bits as f64)),
             ("params", Json::num(self.params as f64)),
             ("sessions", Json::num(self.sessions as f64)),
             ("latency", self.latency.to_json()),
@@ -791,6 +799,7 @@ pub fn ladder_serve(
                     tier,
                     tag: v.info.tag.clone(),
                     rank_frac: v.info.rank_frac,
+                    bits: v.info.bits,
                     params: v.info.params,
                     sessions: sessions_at[tier],
                     latency: h.summary(),

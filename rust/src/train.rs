@@ -560,10 +560,14 @@ impl NativeTrainer {
     }
 
     /// One optimizer step: mean CTC loss + gradients over the batch rows,
-    /// surrogate penalty added, global-norm clip, momentum update.
+    /// surrogate penalty added, global-norm clip, momentum update.  With
+    /// `nopts.qat_bits` set, the forward pass runs through the
+    /// straight-through `fake_quant` wrapper so the loss is measured on
+    /// the weights inference will actually serve.
     pub fn step(&mut self, batch: &Batch) -> Result<StepMetrics> {
         let utts = batch.utterances()?;
-        let (ctc, mut grads) = autograd::batch_ctc_grads(&self.params, &self.dims, &utts)?;
+        let (ctc, mut grads) =
+            autograd::batch_ctc_grads_qat(&self.params, &self.dims, &utts, self.nopts.qat_bits)?;
         let (penalty, pgrads) =
             autograd::surrogate_penalty(&self.params, self.opts.lam_rec, self.opts.lam_nonrec)?;
         for (name, g) in pgrads.iter() {
@@ -756,7 +760,11 @@ pub struct NativeTwoStageResult {
 ///    balanced-factor warmstart ([`model::truncate_groups`] — the same
 ///    transform `ladder-build` applies per rung).
 /// 3. **Stage 2** — low-rank training, no regularization, LR per the
-///    §3.2.2/§3.2.3 rule (`stage2_lr`), for the remaining budget.
+///    §3.2.2/§3.2.3 rule (`stage2_lr`), for the remaining budget.  With
+///    `nopts.qat_bits` set, stage 2 fine-tunes through the
+///    straight-through `fake_quant` wrapper (quantization-aware
+///    fine-tuning for the int8/int4 serving path); stage 1 always
+///    trains in plain f32 regardless.
 ///
 /// The stage-2 parameter set is directly servable: `Engine::from_params`,
 /// `ladder-build`, and `stream-serve --load` all consume it unchanged.
@@ -776,10 +784,13 @@ pub fn two_stage_native(
     let eval = NativeEvaluator::new(dims);
     let eval_ref = dev.map(|_| &eval as &dyn EvalBackend);
 
-    // ---- stage 1: full-rank factored + surrogate
+    // ---- stage 1: full-rank factored + surrogate (never quantized —
+    // QAT only makes sense once the served topology is fixed, §3.2.2)
     let mut opts1 = stage1_opts.clone();
     opts1.epochs = transition_epoch;
-    let mut t1 = NativeTrainer::new_factored(dims, opts1, nopts);
+    let mut nopts1 = nopts;
+    nopts1.qat_bits = None;
+    let mut t1 = NativeTrainer::new_factored(dims, opts1, nopts1);
     t1.run(batcher, eval_ref, dev)?;
 
     // ---- transition: rank selection + balanced-factor truncation
@@ -928,6 +939,44 @@ mod tests {
         if r.rank_frac < 1.0 {
             assert!(r.stage2.params.num_scalars() < r.stage1_params.num_scalars());
         }
+    }
+
+    #[test]
+    fn native_qat_step_trains_and_two_stage_confines_qat_to_stage2() {
+        let dims = tiny_native_dims();
+        let data = tiny_corpus(14, 6, 0);
+        let mut batcher = Batcher::new(&data.train, tiny_geom(3), 8, 3);
+        let nopts = NativeOpts { qat_bits: Some(4), ..NativeOpts::default() };
+
+        // a QAT step updates params with finite metrics, same as f32
+        let mut t = NativeTrainer::new_factored(&dims, TrainOpts::default(), nopts);
+        let before = t.params.get("rec0_u").unwrap().clone();
+        let batches = batcher.epoch();
+        let m = t.step(&batches[0]).unwrap();
+        assert!(m.loss.is_finite() && m.ctc > 0.0, "loss {} ctc {}", m.loss, m.ctc);
+        assert!(t.params.get("rec0_u").unwrap().max_abs_diff(&before) > 0.0);
+
+        // the two-stage driver keeps QAT out of stage 1, in for stage 2
+        let opts = TrainOpts { lr: 2e-3, lam_rec: 1e-3, lam_nonrec: 1e-3, ..TrainOpts::default() };
+        let r = two_stage_native(
+            &dims,
+            &mut batcher,
+            None,
+            0.9,
+            NATIVE_RANK_LADDER,
+            1,
+            2,
+            opts,
+            nopts,
+            Stage2Lr::Continuation,
+        )
+        .unwrap();
+        assert_eq!(r.stage2.nopts.qat_bits, Some(4));
+        assert!(r.stage2.history[0].mean_loss.is_finite());
+        // the fine-tuned params stay servable on the quantized path
+        assert!(
+            Engine::from_params(&dims, "partial", &r.stage2.params, Precision::Int4, 4).is_ok()
+        );
     }
 
     #[test]

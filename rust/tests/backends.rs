@@ -1,13 +1,18 @@
 //! Backend parity suite (DESIGN.md §4): every registered GEMM backend
 //! must be **bit-identical** to the scalar reference — and therefore to
-//! `qgemm_ref` — on the int8 entry points (i32 accumulation is exact),
-//! and within 1e-5 (relative) of scalar on f32.  Runs under both the
-//! default build and `--features simd` (scripts/ci.sh exercises both).
+//! `qgemm_ref` / `qgemm4_ref` — on the int8 and packed-int4 entry points
+//! (i32 accumulation is exact within a scale group; the f32 group fold
+//! follows one fixed association order), and within 1e-5 (relative) of
+//! scalar on f32.  Runs under both the default build and
+//! `--features simd` (scripts/ci.sh exercises both).
 
 use tracenorm::infer::{Breakdown, Engine, Precision};
-use tracenorm::kernels::{all_backends, qgemm_ref, BackendSel, GemmBackend, PreparedQMatrix};
+use tracenorm::kernels::{
+    all_backends, qgemm4_farm_rows, qgemm4_ref, qgemm_ref, BackendSel, GemmBackend,
+    PreparedQ4Matrix, PreparedQMatrix,
+};
 use tracenorm::prng::Pcg64;
-use tracenorm::quant::QMatrix;
+use tracenorm::quant::{quantize4, QMatrix};
 use tracenorm::stream::{demo_dims, synthetic_params, StreamPool};
 use tracenorm::tensor::{Tensor, TensorI8};
 
@@ -161,6 +166,178 @@ fn fused_gates_bit_identical_to_three_separate_gemms() {
                     );
                 }
             }
+        }
+    }
+}
+
+fn rand_q4(n: usize, k: usize, rng: &mut Pcg64) -> tracenorm::quant::Q4Matrix {
+    quantize4(&Tensor::randn(&[n, k], 0.4, rng))
+}
+
+#[test]
+fn int4_backends_bit_identical_to_reference() {
+    // the int4 bit-identity contract on the same ragged grid as int8:
+    // exact i32 sub-accumulation per scale group, one fixed f32 fold
+    // order over groups — so every backend reproduces qgemm4_ref exactly
+    let mut rng = Pcg64::seeded(31);
+    for (m, n, k) in parity_shapes() {
+        let x = rand_i8(m, k, &mut rng);
+        let q4 = rand_q4(n, k, &mut rng);
+        let w = PreparedQ4Matrix::new(q4.clone());
+        let want = qgemm4_ref(&x, &q4, 0.013);
+        for (_, be) in all_backends() {
+            let mut out = Tensor::zeros(&[0, 0]);
+            be.qgemm4_farm_into(x.data(), m, &w, 0.013, &mut out);
+            assert_eq!(out, want, "{} qgemm4_farm_into ({m},{n},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn int4_farm_rows_bit_identical_to_batch1_calls() {
+    // pooled contract, int4: one batch-m call with per-row scales == m
+    // batch-1 calls of the same backend, bit for bit
+    let mut rng = Pcg64::seeded(32);
+    for (m, n, k) in parity_shapes() {
+        let x = rand_i8(m, k, &mut rng);
+        let w = PreparedQ4Matrix::new(rand_q4(n, k, &mut rng));
+        let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+        for (_, be) in all_backends() {
+            let mut pooled = Tensor::zeros(&[0, 0]);
+            be.qgemm4_farm_rows_into(x.data(), m, &w, &sx, &mut pooled);
+            for i in 0..m {
+                let mut solo = Tensor::zeros(&[0, 0]);
+                be.qgemm4_farm_into(x.row(i), 1, &w, sx[i], &mut solo);
+                assert_eq!(
+                    pooled.row(i),
+                    solo.row(0),
+                    "{} int4 row {i} of ({m},{n},{k})",
+                    be.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn int4_gemv_bit_identical_to_batch1_farm() {
+    // the dedicated m = 1 int4 GEMV entry point, per backend: same bits
+    // as the batch-1 farm call and the scalar reference
+    let mut rng = Pcg64::seeded(33);
+    for (m, n, k) in parity_shapes() {
+        if m != 1 {
+            continue;
+        }
+        let x = rand_i8(1, k, &mut rng);
+        let q4 = rand_q4(n, k, &mut rng);
+        let w = PreparedQ4Matrix::new(q4.clone());
+        let want = qgemm4_ref(&x, &q4, 0.013);
+        for (_, be) in all_backends() {
+            let mut gemv = Tensor::zeros(&[0, 0]);
+            be.qgemv4_into(x.data(), &w, 0.013, &mut gemv);
+            assert_eq!(gemv, want, "{} qgemv4_into ({n},{k})", be.name());
+
+            let mut farm = Tensor::zeros(&[0, 0]);
+            be.qgemm4_farm_into(x.data(), 1, &w, 0.013, &mut farm);
+            assert_eq!(gemv, farm, "{} int4 gemv vs batch-1 farm ({n},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn int4_fused_gates_bit_identical_to_plain_rows_sweep() {
+    // the fused [z|r|h̃] int4 kernel is a layout optimization, not a new
+    // numeric path: its (m, 3H) result must match the plain stacked
+    // per-row sweep (the scalar reference) bit for bit, per backend
+    let mut rng = Pcg64::seeded(34);
+    for &(m, h, k) in &[
+        (1usize, 1usize, 1usize),
+        (1, 5, 7), // k < 8, odd half-byte tail
+        (2, 7, 5),
+        (3, 33, 31),  // k straddles the 32-col scale group
+        (4, 64, 257), // k straddles the KC strip boundary
+        (8, 32, 100),
+    ] {
+        let x = rand_i8(m, k, &mut rng);
+        let q4 = rand_q4(3 * h, k, &mut rng);
+        let w = PreparedQ4Matrix::new_with_gates(q4.clone());
+        assert!(w.gates.is_some(), "(3·{h}, {k}) int4 weight must carry gate panels");
+        let sx: Vec<f32> = (0..m).map(|i| 0.004 + 0.003 * i as f32).collect();
+        let want = qgemm4_farm_rows(&x, &q4, &sx);
+        for (_, be) in all_backends() {
+            let mut fused = Tensor::zeros(&[0, 0]);
+            be.qgemm4_gates_rows_into(x.data(), m, &w, &sx, &mut fused);
+            assert_eq!(fused, want, "{} int4 fused gates ({m},{h},{k})", be.name());
+        }
+    }
+}
+
+#[test]
+fn int4_engines_bit_identical_across_backends() {
+    // end to end at --bits 4: same weights, every backend, identical
+    // transcripts and log-prob rows
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.5, 41);
+    let mut rng = Pcg64::seeded(42);
+    let feats = Tensor::randn(&[48, dims.feat_dim], 0.7, &mut rng);
+
+    let reference = Engine::from_params(&dims, "partial", &params, Precision::Int4, 4)
+        .unwrap()
+        .with_backend(BackendSel::Scalar)
+        .unwrap();
+    let mut bd = Breakdown::default();
+    let (t0, r0) = reference.transcribe(&feats, &mut bd).unwrap();
+
+    for (sel, _) in all_backends() {
+        for fused in [true, false] {
+            let eng = Engine::from_params(&dims, "partial", &params, Precision::Int4, 4)
+                .unwrap()
+                .with_backend(sel)
+                .unwrap()
+                .with_fused_gates(fused);
+            let mut bd = Breakdown::default();
+            let (t, r) = eng.transcribe(&feats, &mut bd).unwrap();
+            assert_eq!(t, t0, "{sel} fused={fused} int4 transcript");
+            assert_eq!(r, r0, "{sel} fused={fused} int4 log-prob rows");
+        }
+    }
+}
+
+#[test]
+fn int4_pooled_decoding_bit_identical_under_every_backend() {
+    // the pooled bit-identity guarantee holds on the sub-byte path too
+    let dims = demo_dims();
+    let params = synthetic_params(&dims, 0.25, 43);
+    let mut rng = Pcg64::seeded(44);
+    let utts: Vec<Tensor> =
+        (0..3).map(|_| Tensor::randn(&[32, dims.feat_dim], 0.6, &mut rng)).collect();
+
+    for (sel, _) in all_backends() {
+        let eng = std::sync::Arc::new(
+            Engine::from_params(&dims, "partial", &params, Precision::Int4, 4)
+                .unwrap()
+                .with_backend(sel)
+                .unwrap(),
+        );
+        let solos: Vec<(String, Vec<Vec<f32>>)> = utts
+            .iter()
+            .map(|u| {
+                let mut bd = Breakdown::default();
+                eng.transcribe(u, &mut bd).unwrap()
+            })
+            .collect();
+
+        let mut pool = StreamPool::new(eng, 3);
+        let ids: Vec<_> = (0..3).map(|_| pool.open().unwrap()).collect();
+        let mut bd = Breakdown::default();
+        for (id, u) in ids.iter().zip(&utts) {
+            pool.push_frames(*id, u.data()).unwrap();
+        }
+        pool.pump(&mut bd).unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let closed = pool.close(*id, &mut bd).unwrap();
+            assert_eq!(closed.transcript, solos[i].0, "{sel} int4 pooled transcript {i}");
+            assert_eq!(closed.logprob_rows, solos[i].1, "{sel} int4 pooled rows {i}");
         }
     }
 }

@@ -3,14 +3,17 @@
 use tracenorm::data::{labels_to_text, text_to_labels, CorpusSpec, Dataset};
 use tracenorm::jsonx::Json;
 use tracenorm::kernels::{
-    all_backends, gemm_f32, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref, GemmBackend,
-    PackedGatePanels, PackedQMatrix, PreparedQMatrix, KC, NR,
+    all_backends, gemm_f32, qgemm4_farm, qgemm_farm, qgemm_farm_rows, qgemm_lowp, qgemm_ref,
+    GemmBackend, PackedGatePanels, PackedQ4Matrix, PackedQMatrix, PreparedQMatrix, KC, NR,
 };
 use tracenorm::linalg::{nu_from_singular_values, svd};
 use tracenorm::model::{magnitude_masks, mask_density, ParamSet};
 use tracenorm::prng::Pcg64;
 use tracenorm::proplite::check;
-use tracenorm::quant::{dequantize, qgemm_abs_error_bound, quantize, quantize_into, QMatrix};
+use tracenorm::quant::{
+    dequantize, qgemm4_abs_error_bound, qgemm_abs_error_bound, quantize, quantize4, quantize_into,
+    QMatrix, Q4_GROUP,
+};
 use tracenorm::tensor::{Tensor, TensorI8};
 
 fn rand_tensor(rng: &mut Pcg64, m: usize, n: usize, scale: f32) -> Tensor {
@@ -270,6 +273,65 @@ fn prop_qgemm_within_analytic_bound_of_f32_gemm() {
             let y = qgemm_farm(&xq, &qw.q, sx, qw.scale);
             let yref = gemm_f32(x, w, None);
             let bound = qgemm_abs_error_bound(k, sx, qw.scale);
+            y.data()
+                .iter()
+                .zip(yref.data())
+                .all(|(a, b)| (a - b).abs() <= bound)
+        },
+    );
+}
+
+#[test]
+fn prop_packed_q4_roundtrip_lossless() {
+    // the nibble-panel pack/unpack must be exact for every ragged int4
+    // shape: odd k (the half-byte tail), k below one scale group, the
+    // group boundary ±, multi-group strips, and every n mod NR residue
+    check(
+        "packed-q4-roundtrip",
+        80,
+        |rng, size| {
+            let n = 1 + rng.below(4 * NR + size * 4); // sweeps every n % NR
+            let k = match rng.below(4) {
+                0 => 1 + rng.below(7),                // k < 8, incl. odd half-byte tails
+                1 => Q4_GROUP - 3 + rng.below(7),     // straddles the scale group
+                2 => 2 * Q4_GROUP - 2 + rng.below(5), // multi-group tail
+                _ => 1 + rng.below(size * 16 + 16),   // generic ragged
+            };
+            quantize4(&rand_tensor(rng, n, k, 0.5))
+        },
+        |q| PackedQ4Matrix::pack(q).unpack() == *q,
+    );
+}
+
+#[test]
+fn prop_qgemm4_within_analytic_bound_of_f32_gemm() {
+    // per-group int4 quantization the way the engine does it (group
+    // scales on weights, per-call activation scale), run the scalar int4
+    // farm kernel, and assert every output element stays within the
+    // analytic worst-case bound of the f32 reference GEMM
+    // (quant::qgemm4_abs_error_bound, evaluated at the largest group
+    // scale) across random shapes and scales.
+    check(
+        "qgemm4-analytic-bound",
+        30,
+        |rng, size| {
+            let m = 1 + rng.below(6);
+            let n = 1 + rng.below(size * 6 + 6);
+            let k = 1 + rng.below(size * 12 + 8);
+            let sx = 0.2 + rng.uniform() as f32 * 2.0;
+            let sw = 0.1 + rng.uniform() as f32;
+            (Tensor::randn(&[m, k], sx, rng), Tensor::randn(&[n, k], sw, rng))
+        },
+        |(x, w)| {
+            let (m, k) = (x.rows(), x.cols());
+            let qw = quantize4(w);
+            let mut xq = vec![0i8; m * k];
+            let sx = quantize_into(x.data(), &mut xq);
+            let xq = TensorI8::new(&[m, k], xq).unwrap();
+            let y = qgemm4_farm(&xq, &qw, sx);
+            let yref = gemm_f32(x, w, None);
+            let sw_max = qw.scales().iter().fold(0.0f32, |a, &s| a.max(s));
+            let bound = qgemm4_abs_error_bound(k, sx, sw_max);
             y.data()
                 .iter()
                 .zip(yref.data())

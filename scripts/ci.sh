@@ -19,7 +19,7 @@ echo "==> tier-1 verify: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
-echo "==> backend parity suite under --features simd"
+echo "==> backend parity suite (int8 + int4) under --features simd"
 cargo build --release --features simd
 cargo test -q --features simd --test backends
 cargo test -q --features simd --test properties
@@ -46,6 +46,26 @@ cargo run --release -q -- ladder-build --out "$ndir/ladder" --fracs 0.5 \
   --load "$ndir/stage2.tnck" > "$ndir/ladder.log"
 grep -q "dims from its meta block" "$ndir/ladder.log" \
   || { echo "native-train smoke: ladder-build did not consume the train-state"; exit 1; }
+
+echo "==> int4 QAT smoke: stage-2 --bits 4 fine-tune; int4 ladder must serve"
+# Quantization-aware stage 2 trains through the serving int4 quantizer
+# (straight-through estimator); the result must quantize into an int4
+# rung that the adaptive-fidelity serve loads and runs.
+cargo run --release -q -- train --native --stage 2 --epochs 2 --utts 24 --dev-utts 4 \
+  --batch 4 --seed 7 --bits 4 --load "$ndir/stage1.tnck" --save "$ndir/stage2q.tnck" \
+  | tee "$ndir/stage2q.log"
+grep -q "QAT int4" "$ndir/stage2q.log" \
+  || { echo "int4 QAT smoke: trainer did not report QAT"; exit 1; }
+grep -q "stage2 loss decreased: true" "$ndir/stage2q.log" \
+  || { echo "int4 QAT smoke: stage-2 loss did not decrease under QAT"; exit 1; }
+cargo run --release -q -- ladder-build --out "$ndir/ladder4" --fracs 0.5 --bits 4 \
+  --load "$ndir/stage2q.tnck" > "$ndir/ladder4.log"
+grep -q "int4 weights" "$ndir/ladder4.log" \
+  || { echo "int4 QAT smoke: ladder-build did not build int4 rungs"; exit 1; }
+cargo run --release -q -- stream-serve --ladder "$ndir/ladder4" --utts 6 --rate 1000 \
+  --pool 2 --chunk 8 --seed 7 > "$ndir/serve4.log"
+grep -q "bits 4" "$ndir/serve4.log" \
+  || { echo "int4 QAT smoke: ladder serve did not report int4 tiers"; exit 1; }
 
 echo "==> sharded smoke: stream-serve --shards 2 --json + report sanity"
 sj="$(cargo run --release -q -- stream-serve --shards 2 --utts 12 --rate 1000 \
@@ -78,6 +98,19 @@ for build in "" "--features simd"; do
     echo "$fj" | grep -q "\"fused_gates\": $want" \
       || { echo "fused smoke: report fused_gates != $want (build='$build')"; exit 1; }
   done
+done
+
+echo "==> int4 serve smoke: --bits 4 under default and --features simd"
+# The packed sub-byte path must serve end to end on every build, and the
+# JSON report must say so (engine/pool transcripts are bit-identical
+# across backends by the parity suite above).
+for build in "" "--features simd"; do
+  qj="$(cargo run --release -q $build -- stream-serve --utts 8 --rate 1000 \
+    --pool 2 --chunk 8 --seed 7 --bits 4 --autotune off --json)"
+  echo "$qj" | grep -q '"kind": "stream-serve"' \
+    || { echo "int4 smoke: no report (build='$build')"; exit 1; }
+  echo "$qj" | grep -q '"precision": "int4"' \
+    || { echo "int4 smoke: report precision != int4 (build='$build')"; exit 1; }
 done
 
 echo "==> obs smoke: flight recorder report + JSONL metrics stream"
@@ -131,6 +164,12 @@ grep -q '"kind": "qgemv"' BENCH_gemm.json \
   || { echo "BENCH_gemm.json missing the m=1 GEMV sweep"; exit 1; }
 grep -q '"kind": "qgemm_gates"' BENCH_gemm.json \
   || { echo "BENCH_gemm.json missing the fused-gates sweep"; exit 1; }
+grep -q '"kind": "qgemv4"' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json missing the int4 m=1 GEMV sweep"; exit 1; }
+grep -q '"kind": "qgemm4_gates"' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json missing the int4 fused-gates sweep"; exit 1; }
+grep -q '"bytes_per_weight": 0.625' BENCH_gemm.json \
+  || { echo "BENCH_gemm.json int4 rows missing the 0.625 bytes/weight axis"; exit 1; }
 test -f BENCH_train.json || { echo "train bench did not emit BENCH_train.json"; exit 1; }
 grep -q '"kind": "ctc"' BENCH_train.json \
   || { echo "BENCH_train.json missing the CTC lattice sweep"; exit 1; }
