@@ -44,7 +44,7 @@ fn main() {
                 chunk_frames: 16,
                 shards,
                 seed: 9,
-                metrics_out: None,
+                ..Default::default()
             };
             // wall-clock of the whole serve (spawn + rounds + drain)
             let wall = bench(&format!("serve shards={shards} pool={pool}"), 600, || {

@@ -64,6 +64,17 @@
 //!                                  --metrics-out FILE (JSONL snapshot
 //!                                stream; also accepted by train --native
 //!                                for per-epoch snapshots)
+//!                                  --trace-out FILE (Chrome-trace /
+//!                                Perfetto JSON of per-session causal
+//!                                traces; needs --obs on)
+//!                                  --slo-target MS --slo-budget FRAC
+//!                                (declarative p99/availability SLO with
+//!                                multi-window burn-rate alerts)
+//!                                  --slo-actions on|off (off by default:
+//!                                observe only; on lets a breach shed
+//!                                admissions / pressure the controllers)
+//!                                  --fixed-tick-ms F (deterministic
+//!                                simulated clock: byte-identical traces)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
 //!                                synthetic load ramp, per-shard fidelity
@@ -76,6 +87,13 @@
 //!                                TNCK-v2 artifact per rung + ladder.json
 //!                                  --out DIR --fracs 0.75,0.5,0.25
 //!                                  --bits 8|4 [--load ckpt]
+//!   obs-report FILE.jsonl        offline analyzer over a --metrics-out
+//!                                capture: envelope validation, replayed
+//!                                per-session timelines, self-time trend,
+//!                                per-tier SLO attainment/burn tables
+//!                                  [--slo-target MS] [--slo-budget FRAC]
+//!                                  [--trace-out FILE] (re-emit the
+//!                                Perfetto trace from the JSONL alone)
 //! ```
 //!
 //! Every flag becomes a config key (`--lam-rec 0.1` → `cli.lam-rec`), and
@@ -92,7 +110,7 @@ pub struct Cli {
     pub cfg: Config,
 }
 
-pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm|stream-serve|ladder-build> [args]
+pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcribe|bench-gemm|stream-serve|ladder-build|obs-report> [args]
   repro info                      list artifacts + configs from the manifest
   repro experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|table1|table2|table3|all>
   repro train --artifact <name> [--epochs N] [--lr F] [--lam-rec F] [--lam-nonrec F]
@@ -116,7 +134,8 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                      [--scheme S] [--load CKPT] [--seed N]
                      [--backend scalar|blocked|simd|auto]
                      [--autotune on|off] [--fused-gates on|off] [--obs on|off]
-                     [--metrics-out FILE]
+                     [--metrics-out FILE] [--trace-out FILE] [--fixed-tick-ms F]
+                     [--slo-target MS] [--slo-budget FRAC] [--slo-actions on|off]
                      (--shards N spreads sessions over N worker threads; --shards 1,
                       the default, is bit-identical to the unsharded serving path;
                       --bits 4 serves packed sub-byte weights — int4 nibbles with
@@ -126,15 +145,29 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                       decoding is bit-identical on or off;
                       --obs on records stage spans, kernel counters and the shard
                       event journal into the report, --metrics-out streams periodic
-                      JSONL snapshots — transcripts are bit-identical either way)
+                      JSONL snapshots — transcripts are bit-identical either way;
+                      --trace-out writes a Chrome-trace/Perfetto JSON of per-session
+                      causal traces (needs --obs on); --fixed-tick-ms F advances the
+                      simulated clock by exactly F ms per round, making the trace
+                      byte-identical run to run;
+                      --slo-target declares a p99/availability SLO evaluated with
+                      multi-window burn-rate alerts; --slo-actions on (default off)
+                      lets a breach shed admissions / pressure the controllers)
   repro stream-serve --ladder DIR [--shards N] [--pool N] [--utts N] [--chunk N] [--rate F]
                      [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N] [--json]
                      [--backend scalar|blocked|simd|auto] [--autotune on|off]
                      [--fused-gates on|off] [--obs on|off] [--metrics-out FILE]
+                     [--trace-out FILE] [--fixed-tick-ms F] [--slo-target MS]
+                     [--slo-budget FRAC] [--slo-actions on|off]
                      (adaptive-fidelity serving over a built rank ladder; per-shard
                       fidelity controllers with a merged, shard-tagged shift log)
   repro ladder-build --out DIR [--fracs F,F,...] [--bits 8|4] [--load CKPT] [--seed N]
                      (offline SVD-truncate + int8/int4-quantize, one artifact per rung)
+  repro obs-report FILE.jsonl [--slo-target MS] [--slo-budget FRAC] [--trace-out FILE]
+                     (offline analyzer over a --metrics-out capture: envelope
+                      validation, replayed per-session timelines, self-time trend,
+                      per-tier SLO attainment/burn tables; --trace-out re-emits the
+                      Perfetto trace from the JSONL alone)
 common flags: --artifacts DIR --results DIR --seed N --exp.<knob> V";
 
 /// Parse argv (excluding argv[0]).

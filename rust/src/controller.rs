@@ -177,10 +177,26 @@ impl FidelityController {
     /// pool occupancy (0 when the server is idle).  Returns the shift if
     /// one happened.
     pub fn observe(&mut self, clock: f64, occupancy_frac: f64) -> Option<ShiftEvent> {
+        self.observe_with_pressure(clock, occupancy_frac, false)
+    }
+
+    /// [`FidelityController::observe`] with an external pressure input:
+    /// when `extra_pressure` is true (the SLO burn-rate engine breaching
+    /// under `--slo-actions on`), the tick counts as pressured even if
+    /// latency and occupancy look fine, and the drain path is blocked —
+    /// an active SLO burn must never upshift.  With `extra_pressure`
+    /// false this is exactly `observe`, so the default-off SLO wiring
+    /// changes nothing.
+    pub fn observe_with_pressure(
+        &mut self,
+        clock: f64,
+        occupancy_frac: f64,
+        extra_pressure: bool,
+    ) -> Option<ShiftEvent> {
         let p99 = self.windowed_p99(self.current);
         let breached = p99.is_some_and(|p| p > self.cfg.target_p99);
-        let pressured = breached || occupancy_frac >= self.cfg.high_water;
-        let drained = occupancy_frac <= self.cfg.low_water;
+        let pressured = breached || occupancy_frac >= self.cfg.high_water || extra_pressure;
+        let drained = occupancy_frac <= self.cfg.low_water && !extra_pressure;
         if pressured {
             self.clear = 0;
             self.pressure = self.pressure.saturating_add(1);
@@ -286,6 +302,48 @@ mod tests {
         }
         assert_eq!(ctl.tier(), 2);
         assert_eq!(ctl.downshifts, 2);
+    }
+
+    #[test]
+    fn slo_pressure_downshifts_and_blocks_the_upshift_drain() {
+        // healthy latency, mid-band occupancy: without the external input
+        // nothing shifts, with it the dwell counter runs to a downshift
+        let mut ctl = FidelityController::new(2, cfg()).unwrap();
+        for _ in 0..4 {
+            assert!(ctl.observe(0.0, 0.6).is_none());
+        }
+        assert_eq!(ctl.tier(), 0);
+        assert!(ctl.observe_with_pressure(0.1, 0.6, true).is_none());
+        assert!(ctl.observe_with_pressure(0.2, 0.6, true).is_none());
+        let ev = ctl.observe_with_pressure(0.3, 0.6, true).expect("SLO pressure shifts");
+        assert!(ev.down);
+        assert_eq!(ctl.tier(), 1);
+        // drained occupancy would normally upshift after clear_ticks, but
+        // an active SLO burn pins the tier down
+        for _ in 0..8 {
+            assert!(ctl.observe_with_pressure(0.4, 0.1, true).is_none(), "already at bottom");
+        }
+        assert_eq!(ctl.tier(), 1, "burning SLO must not upshift");
+        // once the burn clears, the ordinary drain path resumes
+        for _ in 0..4 {
+            ctl.observe(0.5, 0.1);
+        }
+        assert_eq!(ctl.tier(), 0);
+        assert_eq!(ctl.upshifts, 1);
+    }
+
+    #[test]
+    fn extra_pressure_false_is_exactly_observe() {
+        let mut a = FidelityController::new(3, cfg()).unwrap();
+        let mut b = FidelityController::new(3, cfg()).unwrap();
+        let occs = [1.0, 1.0, 1.0, 0.6, 0.1, 0.1, 0.1, 0.1, 0.1, 1.0];
+        for (i, &occ) in occs.iter().enumerate() {
+            let x = a.observe(i as f64, occ);
+            let y = b.observe_with_pressure(i as f64, occ, false);
+            assert_eq!(x.map(|e| (e.tier, e.down)), y.map(|e| (e.tier, e.down)));
+        }
+        assert_eq!(a.tier(), b.tier());
+        assert_eq!(a.downshifts, b.downshifts);
     }
 
     #[test]

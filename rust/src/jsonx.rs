@@ -52,6 +52,33 @@ impl Json {
             .ok_or_else(|| Error::Manifest(format!("missing key '{key}'")))
     }
 
+    /// Typed `req` conveniences: fetch a key and coerce, with the key
+    /// name in the error (the obs-report replay parses untrusted JSONL,
+    /// so "which key was wrong" matters).
+    pub fn req_f64(&self, key: &str) -> Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| Error::Manifest(format!("key '{key}' is not a number")))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| Error::Manifest(format!("key '{key}' is not a number")))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| Error::Manifest(format!("key '{key}' is not a string")))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Json]> {
+        self.req(key)?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest(format!("key '{key}' is not an array")))
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

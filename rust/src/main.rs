@@ -18,7 +18,8 @@ use tracenorm::infer::{Breakdown, Engine, Precision};
 use tracenorm::jsonx::Json;
 use tracenorm::kernels::BackendSel;
 use tracenorm::model::ParamSet;
-use tracenorm::obs::MetricsExporter;
+use tracenorm::obs::trace::Replay;
+use tracenorm::obs::{spans, MetricsExporter, SloConfig, SloEngine};
 use tracenorm::registry::{ladder_build_with_bits, Registry};
 use tracenorm::runtime::{BatchGeom, ModelDims, Runtime};
 use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
@@ -61,6 +62,7 @@ fn run(args: &[String]) -> Result<()> {
         }
         "stream-serve" => stream_serve_cmd(&cli),
         "ladder-build" => ladder_build_cmd(&cli),
+        "obs-report" => obs_report_cmd(&cli),
         other => Err(tracenorm::Error::Config(format!("unknown subcommand '{other}'"))),
     }
 }
@@ -145,6 +147,40 @@ fn metrics_out_flag(cli: &Cli) -> Option<String> {
     } else {
         Some(path)
     }
+}
+
+/// `--trace-out FILE`: Chrome-trace / Perfetto JSON destination for the
+/// serve loops (None when the flag is absent).  Needs `--obs on`.
+fn trace_out_flag(cli: &Cli) -> Option<String> {
+    let path = cli.flag_str("trace-out", "");
+    if path.is_empty() {
+        None
+    } else {
+        Some(path)
+    }
+}
+
+/// `--slo-target MS` + `--slo-budget FRAC` + `--slo-actions {on,off}`:
+/// the declarative serving SLO and whether a burn-rate breach may steer
+/// the runtime (DESIGN.md §10).  Actions without a target are rejected
+/// in serve-config validation.
+fn slo_flags(cli: &Cli) -> Result<(Option<SloConfig>, bool)> {
+    let actions = on_off_flag(cli, "slo-actions", false)?;
+    let slo = match cli.cfg.raw("slo-target") {
+        Some(_) => Some(SloConfig::for_target(
+            cli.flag_f64("slo-target", 250.0) / 1e3,
+            cli.flag_f64("slo-budget", 0.01),
+        )),
+        None => None,
+    };
+    Ok((slo, actions))
+}
+
+/// `--fixed-tick-ms F`: advance the simulated clock by exactly F ms per
+/// round instead of the measured wall time, making serve clocks — and
+/// the exported trace — deterministic (None = wall-clock ticks).
+fn fixed_tick_flag(cli: &Cli) -> Option<f64> {
+    cli.cfg.raw("fixed-tick-ms").map(|_| cli.flag_f64("fixed-tick-ms", 4.0) / 1e3)
 }
 
 fn info(cli: &Cli) -> Result<()> {
@@ -751,6 +787,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             );
         }
     }
+    let (slo, slo_actions) = slo_flags(cli)?;
     let cfg = LadderServeConfig {
         base_rate: cli.flag_f64("rate", 4.0),
         ramp_rate: cli.flag_f64("ramp-rate", 1e5),
@@ -764,6 +801,10 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
             ..ControllerConfig::default()
         },
         metrics_out: metrics_out_flag(cli),
+        trace_out: trace_out_flag(cli),
+        slo,
+        slo_actions,
+        tick_secs: fixed_tick_flag(cli),
     };
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
     let r = ladder_serve(&reg, &data.test, &cfg)?;
@@ -822,6 +863,9 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
                 if s.down { "downshift" } else { "upshift" }
             );
         }
+    }
+    if let Some(s) = &r.slo {
+        print!("{}", s.line());
     }
     if let Some(o) = &r.obs {
         println!("\n{}", o.self_time_table());
@@ -894,6 +938,7 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     }
 
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
+    let (slo, slo_actions) = slo_flags(cli)?;
     let cfg = StreamServeConfig {
         arrival_rate: rate,
         pool_size: pool,
@@ -901,6 +946,10 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         shards,
         seed,
         metrics_out: metrics_out_flag(cli),
+        trace_out: trace_out_flag(cli),
+        slo,
+        slo_actions,
+        tick_secs: fixed_tick_flag(cli),
     };
     let r = stream_serve(engine, &data.test, &cfg)?;
 
@@ -947,12 +996,152 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         r.breakdown.frames as f64 * 0.01,
         r.breakdown.speedup_over_realtime(0.01)
     );
+    if let Some(s) = &r.slo {
+        print!("{}", s.line());
+    }
     if let Some(o) = &r.obs {
         println!("\n{}", o.self_time_table());
     }
     println!("\nsample transcripts (hyp vs ref):");
     for (reference, hyp) in r.transcripts.iter().take(5) {
         println!("  ref: {reference:<20} hyp: {hyp}");
+    }
+    Ok(())
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample (the same
+/// discipline the SLO engine and fidelity controller use).
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let r = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[r - 1]
+}
+
+/// `obs-report FILE.jsonl`: the offline analyzer over a `--metrics-out`
+/// capture.  Validates the versioned envelope (schema version, gapless
+/// `seq`), replays the journal and block-trace deltas into per-session
+/// timelines, prints the self-time trend and per-tier SLO attainment /
+/// burn tables, and with `--trace-out` re-emits the Perfetto trace from
+/// the JSONL alone — byte-identical to what the live serve wrote.
+fn obs_report_cmd(cli: &Cli) -> Result<()> {
+    let path = cli.positional.first().ok_or_else(|| {
+        tracenorm::Error::Config("obs-report needs a --metrics-out JSONL path".into())
+    })?;
+    let text = std::fs::read_to_string(path)?;
+    let r = Replay::from_jsonl(&text)?;
+
+    let kind = if r.kind.is_empty() { "serve" } else { r.kind.as_str() };
+    println!(
+        "{path}: {} lines, {} {kind} snapshots, last clock {:.3} s",
+        r.lines, r.snapshots, r.last_clock
+    );
+    if let Some(c) = &r.config {
+        println!(
+            "serve-config: {} on {} shard(s), pool {}, chunk {} frames, slo-actions {}",
+            c.serve,
+            c.shards,
+            c.pool_size,
+            c.chunk_frames,
+            if c.slo_actions { "on" } else { "off" }
+        );
+    }
+    if r.other_kinds > 0 {
+        println!("  ({} lines of other kinds tolerated)", r.other_kinds);
+    }
+    if r.gap_missed > 0 {
+        println!(
+            "WARNING: journal-gap rows declare {} lost events — the timelines below are incomplete",
+            r.gap_missed
+        );
+    }
+
+    // self-time trend across snapshots, then the final breakdown table
+    if r.trend.len() > 1 {
+        println!("\nself-time trend (cumulative decode seconds per snapshot):");
+        for (clock, sp) in &r.trend {
+            println!("  t={clock:8.3} s  decode {:.4} s", sp.total_secs());
+        }
+    }
+    println!("\nself-time breakdown (replayed):");
+    print!("{}", spans::table(&r.last_spans, "decode"));
+    if r.last_plan_spans.total_secs() > 0.0 {
+        print!("{}", spans::table(&r.last_plan_spans, "plan"));
+    }
+
+    // per-session lifecycle reconstruction
+    let timelines = r.timelines();
+    let completed: Vec<_> = timelines.iter().filter(|t| t.latency().is_some()).collect();
+    let blocks_total: usize = timelines.iter().map(|t| t.blocks).sum();
+    println!(
+        "\nsessions: {} seen, {} completed, {} pump blocks replayed",
+        timelines.len(),
+        completed.len(),
+        blocks_total
+    );
+
+    // SLO objective: the serve-config row wins; `--slo-target` is the
+    // fallback for captures that predate it
+    let slo_cfg = match &r.config {
+        Some(c) => c.slo_target.map(|t| {
+            let mut s = SloConfig::for_target(t, c.slo_budget.unwrap_or(0.01));
+            if let Some(d) = c.slo_deadline {
+                s.deadline = d;
+            }
+            s
+        }),
+        None => None,
+    }
+    .unwrap_or_else(|| {
+        SloConfig::for_target(
+            cli.flag_f64("slo-target", 250.0) / 1e3,
+            cli.flag_f64("slo-budget", 0.01),
+        )
+    });
+
+    // group completions by tier, in drain order (the order the live SLO
+    // engine saw them), and replay the burn-rate engine over the stream
+    let mut drains: Vec<(f64, usize, f64)> = completed
+        .iter()
+        .map(|t| (t.drain.unwrap(), t.tier.unwrap_or(0), t.latency().unwrap()))
+        .collect();
+    drains.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut engine = SloEngine::new(slo_cfg.clone())?;
+    let mut by_tier: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+    for &(_, tier, l) in &drains {
+        engine.record(l);
+        by_tier.entry(tier).or_default().push(l);
+    }
+    println!(
+        "\nSLO attainment by tier (deadline {:.0} ms, budget {:.2}%):",
+        slo_cfg.deadline * 1e3,
+        slo_cfg.budget * 100.0
+    );
+    println!("  tier  sessions   p50 ms   p99 ms  attainment");
+    for (tier, lats) in &mut by_tier {
+        let n = lats.len();
+        let good = lats.iter().filter(|&&l| l <= slo_cfg.deadline).count();
+        lats.sort_by(f64::total_cmp);
+        println!(
+            "  {tier:>4}  {n:>8}  {:>7.1}  {:>7.1}  {:>9.1}%",
+            nearest_rank(lats, 0.5) * 1e3,
+            nearest_rank(lats, 0.99) * 1e3,
+            good as f64 / n.max(1) as f64 * 100.0
+        );
+    }
+    print!("{}", engine.summary().line());
+    let alerts_journaled =
+        r.journal.iter().filter(|e| e.kind == tracenorm::obs::EventKind::SloAlert).count();
+    if alerts_journaled > 0 {
+        println!("journaled slo_alert events: {alerts_journaled}");
+    }
+
+    // trace re-emission: pure function of the replayed journal + blocks,
+    // so with a gapless capture this matches the live --trace-out bytes
+    if let Some(out) = trace_out_flag(cli) {
+        tracenorm::obs::trace::write_chrome_trace(&out, &r.journal, &r.blocks)?;
+        println!("\ntrace re-emitted to {out}");
     }
     Ok(())
 }

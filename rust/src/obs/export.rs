@@ -15,7 +15,8 @@ use crate::error::Result;
 use crate::jsonx::Json;
 
 use super::journal::Journal;
-use super::{counters, journal, spans, SpanSet};
+use super::trace::BlockSpan;
+use super::{counters, journal, spans, trace, SpanSet};
 
 /// Rounds between periodic serve snapshots (plus one final snapshot at
 /// drain).  Coarse on purpose: the exporter is for trend lines, not
@@ -56,13 +57,21 @@ impl MetricsExporter {
     }
 
     /// The serve-loop snapshot: decode spans so far, plan spans, kernel
-    /// counters, and the journal events new since the last snapshot.
+    /// counters, the journal events new since the last snapshot, and the
+    /// block-trace records stamped since then.
+    ///
+    /// If any ring lapped its cursor since the last snapshot, the lost
+    /// events cannot be recovered — rather than pretending the delta is
+    /// complete, an explicit `{"kind":"journal-gap","missed":N}` row is
+    /// written first (its own JSONL line, in the same seq stream), so an
+    /// offline replay knows exactly how many events it is missing.
     pub fn write_serve_snapshot(
         &mut self,
         kind: &str,
         clock: f64,
         decode_spans: &SpanSet,
         journals: &[Journal],
+        blocks: &[BlockSpan],
     ) -> Result<()> {
         if self.cursors.len() < journals.len() {
             self.cursors.resize(journals.len(), 0);
@@ -75,7 +84,10 @@ impl MetricsExporter {
             delta.extend(evs);
             missed += m;
         }
-        delta.sort_by(|a, b| a.clock.total_cmp(&b.clock));
+        delta.sort_by(journal::canonical_cmp);
+        if missed > 0 {
+            self.write_snapshot("journal-gap", clock, vec![("missed", Json::num(missed as f64))])?;
+        }
         self.write_snapshot(
             kind,
             clock,
@@ -85,6 +97,7 @@ impl MetricsExporter {
                 ("counters", counters::snapshot()),
                 ("journal", journal::events_to_json(&delta)),
                 ("journal_missed", Json::num(missed as f64)),
+                ("blocks", trace::blocks_to_json(blocks)),
             ],
         )
     }
@@ -130,18 +143,88 @@ mod tests {
         spans.add(Stage::RecGates, 0.25);
         let mut j = Journal::with_capacity(8);
         j.push(Event { clock: 0.1, shard: 0, session: 0, tier: 0, kind: EventKind::Placement });
-        ex.write_serve_snapshot("stream-serve", 0.2, &spans, std::slice::from_ref(&j)).unwrap();
+        ex.write_serve_snapshot("stream-serve", 0.2, &spans, std::slice::from_ref(&j), &[])
+            .unwrap();
         j.push(Event { clock: 0.3, shard: 0, session: 0, tier: 0, kind: EventKind::Drain });
-        ex.write_serve_snapshot("stream-serve", 0.4, &spans, std::slice::from_ref(&j)).unwrap();
+        let block = BlockSpan {
+            clock: 0.25,
+            secs: 0.01,
+            shard: 0,
+            tier: 0,
+            utts: vec![0],
+            steps: 2,
+            spans: SpanSet::default(),
+        };
+        ex.write_serve_snapshot(
+            "stream-serve",
+            0.4,
+            &spans,
+            std::slice::from_ref(&j),
+            std::slice::from_ref(&block),
+        )
+        .unwrap();
         drop(ex);
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
         assert_eq!(lines.len(), 2);
         assert_eq!(lines[0].get("journal").unwrap().as_arr().unwrap().len(), 1);
+        assert!(lines[0].get("blocks").unwrap().as_arr().unwrap().is_empty());
         let second = lines[1].get("journal").unwrap().as_arr().unwrap();
         assert_eq!(second.len(), 1, "second snapshot ships only the new event");
         assert_eq!(second[0].get("kind").unwrap().as_str(), Some("drain"));
         assert!(lines[1].get("spans").unwrap().get("rec_gates").is_some());
+        let blocks = lines[1].get("blocks").unwrap().as_arr().unwrap();
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].get("utts").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ring_lap_emits_an_explicit_gap_row_and_drops_nothing_silently() {
+        let path = temp_path("gap");
+        let mut ex = MetricsExporter::create(&path).unwrap();
+        let spans = SpanSet::default();
+        let mut j = Journal::with_capacity(2);
+        let ev = |clock: f64, session: usize| Event {
+            clock,
+            shard: 0,
+            session,
+            tier: 0,
+            kind: EventKind::Placement,
+        };
+        j.push(ev(0.1, 0));
+        ex.write_serve_snapshot("stream-serve", 0.2, &spans, std::slice::from_ref(&j), &[])
+            .unwrap();
+        // push 3 more into a 2-ring: seq 1 survives only until seq 3
+        // lands, so the exporter's cursor (1) gets lapped by one event.
+        j.push(ev(0.3, 1));
+        j.push(ev(0.4, 2));
+        j.push(ev(0.5, 3));
+        ex.write_serve_snapshot("stream-serve", 0.6, &spans, std::slice::from_ref(&j), &[])
+            .unwrap();
+        ex.write_serve_snapshot("stream-serve", 0.7, &spans, std::slice::from_ref(&j), &[])
+            .unwrap();
+        drop(ex);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 4, "snapshot, gap row + snapshot, snapshot");
+        assert_eq!(lines[1].get("kind").unwrap().as_str(), Some("journal-gap"));
+        assert_eq!(lines[1].get("missed").unwrap().as_usize(), Some(1));
+        // seq stream stays gapless across the extra row
+        for (i, l) in lines.iter().enumerate() {
+            assert_eq!(l.get("seq").unwrap().as_usize(), Some(i));
+        }
+        // shipped events + declared gap account for every push exactly once
+        let shipped: Vec<usize> = lines
+            .iter()
+            .filter_map(|l| l.get("journal"))
+            .flat_map(|a| a.as_arr().unwrap().iter())
+            .map(|e| e.get("session").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(shipped, vec![0, 2, 3], "session 1 was lapped, nothing duplicated");
+        let missed: usize =
+            lines.iter().filter_map(|l| l.get("missed")).map(|m| m.as_usize().unwrap()).sum();
+        assert_eq!(shipped.len() + missed, j.total_pushed() as usize);
         std::fs::remove_file(&path).ok();
     }
 }

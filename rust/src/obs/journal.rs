@@ -43,6 +43,11 @@ pub enum EventKind {
     Backpressure,
     /// The session finished and its pool slot drained.
     Drain,
+    /// The SLO burn-rate engine crossed its fast+slow thresholds (rising
+    /// edge only).  `shard` is [`NO_SHARD`] (the engine runs on the
+    /// router over the merged latency stream); `session` carries the
+    /// total deadline misses observed so far.
+    SloAlert,
 }
 
 impl EventKind {
@@ -55,7 +60,23 @@ impl EventKind {
             EventKind::UpShift => "upshift",
             EventKind::Backpressure => "backpressure",
             EventKind::Drain => "drain",
+            EventKind::SloAlert => "slo_alert",
         }
+    }
+
+    /// Inverse of [`EventKind::name`], for the `obs-report` JSONL replay.
+    pub fn parse(name: &str) -> Option<EventKind> {
+        Some(match name {
+            "admission" => EventKind::Admission,
+            "placement" => EventKind::Placement,
+            "tier_spill" => EventKind::TierSpill,
+            "downshift" => EventKind::DownShift,
+            "upshift" => EventKind::UpShift,
+            "backpressure" => EventKind::Backpressure,
+            "drain" => EventKind::Drain,
+            "slo_alert" => EventKind::SloAlert,
+            _ => return None,
+        })
     }
 }
 
@@ -86,6 +107,25 @@ impl Event {
             ("tier", Json::num(self.tier as f64)),
             ("kind", Json::str(self.kind.name())),
         ])
+    }
+}
+
+impl Event {
+    /// Inverse of [`Event::to_json`], for the `obs-report` JSONL replay.
+    /// `shard: -1` maps back to [`NO_SHARD`].
+    pub fn from_json(j: &Json) -> crate::error::Result<Event> {
+        let bad = |what: &str| crate::error::Error::Config(format!("journal event: bad {what}"));
+        let shard_raw = j.get("shard").and_then(Json::as_f64).ok_or_else(|| bad("shard"))?;
+        let shard = if shard_raw < 0.0 { NO_SHARD } else { shard_raw as usize };
+        let kind_name = j.get("kind").and_then(Json::as_str).ok_or_else(|| bad("kind"))?;
+        let kind = EventKind::parse(kind_name).ok_or_else(|| bad("kind"))?;
+        Ok(Event {
+            clock: j.get("clock").and_then(Json::as_f64).ok_or_else(|| bad("clock"))?,
+            shard,
+            session: j.get("session").and_then(Json::as_usize).ok_or_else(|| bad("session"))?,
+            tier: j.get("tier").and_then(Json::as_usize).ok_or_else(|| bad("tier"))?,
+            kind,
+        })
     }
 }
 
@@ -161,14 +201,29 @@ impl Journal {
     }
 }
 
-/// Merge per-shard journals into one clock-ordered event list.  The sort
-/// is stable, and each shard's ring is already in push order, so equal
-/// clocks keep their deterministic router-side ordering — this is the
-/// same discipline as `controller::merge_shift_logs`, generalized to the
-/// full event vocabulary.
+/// Canonical total order over events: clock, then every remaining field.
+/// Ordering by *content* rather than by arrival makes the merged journal
+/// a pure function of the event multiset — the offline `obs-report`
+/// replay reassembles the same multiset from snapshot deltas (a
+/// different partition of the same events) and must sort to the same
+/// sequence, byte for byte, even when a fixed tick puts many events on
+/// identical clocks.
+pub fn canonical_cmp(a: &Event, b: &Event) -> std::cmp::Ordering {
+    a.clock
+        .total_cmp(&b.clock)
+        .then(a.shard.cmp(&b.shard))
+        .then(a.session.cmp(&b.session))
+        .then((a.kind as u8).cmp(&(b.kind as u8)))
+        .then(a.tier.cmp(&b.tier))
+}
+
+/// Merge per-shard journals into one clock-ordered event list, in the
+/// [`canonical_cmp`] order — the same discipline as
+/// `controller::merge_shift_logs`, generalized to the full event
+/// vocabulary and made partition-independent for the offline replay.
 pub fn merge(journals: &[Journal]) -> Vec<Event> {
     let mut all: Vec<Event> = journals.iter().flat_map(|j| j.iter().copied()).collect();
-    all.sort_by(|a, b| a.clock.total_cmp(&b.clock));
+    all.sort_by(canonical_cmp);
     all
 }
 
@@ -245,6 +300,32 @@ mod tests {
         // stable: journal order preserved at the tied clock
         assert_eq!(m[0].shard, 0);
         assert_eq!(m[1].shard, 1);
+    }
+
+    #[test]
+    fn event_json_round_trips_including_no_shard_and_slo_alert() {
+        let cases = [
+            Event { clock: 0.25, shard: 2, session: 9, tier: 1, kind: EventKind::TierSpill },
+            Event { clock: 1.5, shard: NO_SHARD, session: 3, tier: 0, kind: EventKind::SloAlert },
+            Event { clock: 2.0, shard: NO_SHARD, session: 4, tier: 0, kind: EventKind::Backpressure },
+        ];
+        for e in cases {
+            assert_eq!(Event::from_json(&e.to_json()).unwrap(), e);
+        }
+        assert!(Event::from_json(&Json::obj(vec![("clock", Json::num(0.0))])).is_err());
+        for k in [
+            EventKind::Admission,
+            EventKind::Placement,
+            EventKind::TierSpill,
+            EventKind::DownShift,
+            EventKind::UpShift,
+            EventKind::Backpressure,
+            EventKind::Drain,
+            EventKind::SloAlert,
+        ] {
+            assert_eq!(EventKind::parse(k.name()), Some(k), "name/parse must stay inverse");
+        }
+        assert_eq!(EventKind::parse("bogus"), None);
     }
 
     #[test]

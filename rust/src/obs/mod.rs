@@ -15,8 +15,17 @@
 //!   events (admission, placement, tier spill, shift, backpressure,
 //!   drain), merged clock-ordered on the router thread.
 //! * [`export`] — the `--metrics-out FILE` JSONL exporter: periodic
-//!   versioned snapshots (spans, counters, journal deltas) during
-//!   `stream-serve` / `ladder-serve` / `train --native`.
+//!   versioned snapshots (spans, counters, journal deltas, block-trace
+//!   deltas) during `stream-serve` / `ladder-serve` / `train --native`,
+//!   plus explicit `journal-gap` rows when a ring lapped a cursor.
+//! * [`trace`] — per-session causal traces: per-`pump_block` records
+//!   stamped onto the simulated clock by the router, a Chrome-trace /
+//!   Perfetto exporter (`--trace-out`), and the offline `obs-report`
+//!   replay over a `--metrics-out` JSONL.
+//! * [`slo`] — declarative latency/availability objectives with
+//!   multi-window burn-rate alerts (`--slo-target`), journaled as
+//!   [`EventKind::SloAlert`] events and optionally wired into the
+//!   fidelity controller and admission shedding (`--slo-actions on`).
 //!
 //! The whole layer is **off by default** behind one process-global
 //! relaxed atomic ([`enabled`], `--obs on|off`): with obs off, every hot
@@ -30,12 +39,16 @@
 pub mod counters;
 pub mod export;
 pub mod journal;
+pub mod slo;
 pub mod spans;
+pub mod trace;
 
 pub use counters::OpKind;
 pub use export::MetricsExporter;
 pub use journal::{Event, EventKind, Journal, NO_SHARD};
+pub use slo::{SloConfig, SloEngine, SloSummary};
 pub use spans::{SpanSet, Stage};
+pub use trace::{BlockSpan, TraceBuilder};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 

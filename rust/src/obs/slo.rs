@@ -1,0 +1,368 @@
+//! Declarative SLOs and multi-window burn-rate alerts.
+//!
+//! An [`SloConfig`] states the objective — a p99 latency target and an
+//! availability error budget (a session is *good* iff its arrival-to-
+//! transcript latency is within `deadline`; at most `budget` of sessions
+//! may miss).  The [`SloEngine`] evaluates the objective over the same
+//! per-session latency stream the `metricsx` histograms record, on the
+//! router thread, using the SRE multi-window burn-rate rule:
+//!
+//! * **burn rate** = (bad fraction in a window) / budget — 1.0 means the
+//!   budget is being spent exactly at the sustainable rate;
+//! * alert when the **fast** window (last `fast_window` sessions) burns
+//!   at ≥ `fast_burn` *and* the **slow** window (last `slow_window`)
+//!   burns at ≥ `slow_burn`.  The fast window makes the alert prompt,
+//!   the slow window keeps one bad session from paging.
+//!
+//! Rising edges emit a journal [`SloAlert`](super::EventKind::SloAlert)
+//! event.  With `--slo-actions on`, a breach also becomes a control
+//! input: the fidelity controllers see it as extra downshift pressure
+//! (`FidelityController::observe_with_pressure`) and the plain router
+//! sheds admissions while it lasts.  The default is `--slo-actions off`:
+//! the engine observes and journals but steers nothing, so every
+//! existing bit-identity and determinism test carries over unchanged.
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+/// A declarative serving SLO.  Construct via [`SloConfig::for_target`]
+/// and override fields as needed.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// p99 latency objective in seconds (reported against the windowed
+    /// p99; also the default `deadline`).
+    pub target_p99: f64,
+    /// Deadline for the availability objective: a session is good iff
+    /// `latency <= deadline`.
+    pub deadline: f64,
+    /// Error budget: allowed fraction of sessions missing the deadline.
+    pub budget: f64,
+    /// Fast window length in sessions (the 1-window of the alert rule).
+    pub fast_window: usize,
+    /// Slow window length in sessions (the N-window; must be >= fast).
+    pub slow_window: usize,
+    /// Burn-rate threshold for the fast window.
+    pub fast_burn: f64,
+    /// Burn-rate threshold for the slow window.
+    pub slow_burn: f64,
+}
+
+impl SloConfig {
+    /// The default objective shape for a target: deadline = target, 1%
+    /// error budget unless overridden, 8/32-session windows, alert at
+    /// 2x/1x burn.
+    pub fn for_target(target_p99: f64, budget: f64) -> SloConfig {
+        SloConfig {
+            target_p99,
+            deadline: target_p99,
+            budget,
+            fast_window: 8,
+            slow_window: 32,
+            fast_burn: 2.0,
+            slow_burn: 1.0,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.target_p99 > 0.0) || !(self.deadline > 0.0) {
+            return Err(Error::Config("slo: target/deadline must be > 0".into()));
+        }
+        if !(self.budget > 0.0 && self.budget <= 1.0) {
+            return Err(Error::Config("slo: budget must be in (0, 1]".into()));
+        }
+        if self.fast_window == 0 || self.slow_window < self.fast_window {
+            return Err(Error::Config(
+                "slo: need fast_window >= 1 and slow_window >= fast_window".into(),
+            ));
+        }
+        if !(self.fast_burn > 0.0) || !(self.slow_burn > 0.0) {
+            return Err(Error::Config("slo: burn thresholds must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Burn-rate evaluator over the per-session latency stream.  One ring of
+/// the last `slow_window` latencies, sized at construction — recording a
+/// sample never allocates.
+pub struct SloEngine {
+    cfg: SloConfig,
+    ring: Vec<f64>,
+    next: usize,
+    filled: usize,
+    /// Sessions observed / deadline misses, cumulative.
+    pub total: u64,
+    pub misses: u64,
+    alerting: bool,
+    /// Rising-edge alerts fired.
+    pub alerts: u64,
+}
+
+impl SloEngine {
+    pub fn new(cfg: SloConfig) -> Result<SloEngine> {
+        cfg.validate()?;
+        let ring = vec![0.0; cfg.slow_window];
+        Ok(SloEngine { cfg, ring, next: 0, filled: 0, total: 0, misses: 0, alerting: false, alerts: 0 })
+    }
+
+    pub fn cfg(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Record one completed session.  Returns `Some(misses_so_far)` on
+    /// the rising edge of a breach — the caller journals it as an
+    /// [`SloAlert`](super::EventKind::SloAlert) event.
+    pub fn record(&mut self, latency: f64) -> Option<u64> {
+        self.ring[self.next] = latency;
+        self.next = (self.next + 1) % self.ring.len();
+        self.filled = (self.filled + 1).min(self.ring.len());
+        self.total += 1;
+        if latency > self.cfg.deadline {
+            self.misses += 1;
+        }
+        let breaching = self.breaching();
+        let rising = breaching && !self.alerting;
+        self.alerting = breaching;
+        if rising {
+            self.alerts += 1;
+            Some(self.misses)
+        } else {
+            None
+        }
+    }
+
+    /// Bad fraction over the last `window` samples (fewer if the stream
+    /// is shorter), divided by the budget: the burn rate.
+    pub fn burn(&self, window: usize) -> f64 {
+        let n = window.min(self.filled);
+        if n == 0 {
+            return 0.0;
+        }
+        let len = self.ring.len();
+        let mut bad = 0usize;
+        for k in 1..=n {
+            // walk backwards from the most recent sample
+            let i = (self.next + len - k) % len;
+            if self.ring[i] > self.cfg.deadline {
+                bad += 1;
+            }
+        }
+        (bad as f64 / n as f64) / self.cfg.budget
+    }
+
+    pub fn fast_burn(&self) -> f64 {
+        self.burn(self.cfg.fast_window)
+    }
+
+    pub fn slow_burn(&self) -> f64 {
+        self.burn(self.cfg.slow_window)
+    }
+
+    /// The multi-window alert condition.  Requires at least a full fast
+    /// window of evidence so a first bad session cannot page on its own.
+    pub fn breaching(&self) -> bool {
+        self.filled >= self.cfg.fast_window
+            && self.fast_burn() >= self.cfg.fast_burn
+            && self.slow_burn() >= self.cfg.slow_burn
+    }
+
+    /// Fraction of sessions that met the deadline, cumulative.
+    pub fn attainment(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        1.0 - self.misses as f64 / self.total as f64
+    }
+
+    /// p99 over the slow window (nearest-rank, same discipline as the
+    /// fidelity controller's windowed p99).
+    pub fn windowed_p99(&self) -> f64 {
+        if self.filled == 0 {
+            return 0.0;
+        }
+        let mut w: Vec<f64> = self.ring[..self.filled].to_vec();
+        w.sort_by(f64::total_cmp);
+        let rank = ((0.99 * w.len() as f64).ceil() as usize).clamp(1, w.len());
+        w[rank - 1]
+    }
+
+    pub fn summary(&self) -> SloSummary {
+        SloSummary {
+            target_p99: self.cfg.target_p99,
+            deadline: self.cfg.deadline,
+            budget: self.cfg.budget,
+            total: self.total,
+            misses: self.misses,
+            attainment: self.attainment(),
+            windowed_p99: self.windowed_p99(),
+            fast_burn: self.fast_burn(),
+            slow_burn: self.slow_burn(),
+            alerts: self.alerts,
+            breaching: self.alerting,
+        }
+    }
+}
+
+/// Snapshot of the engine for the serve report (`--json` and text).
+#[derive(Clone, Debug)]
+pub struct SloSummary {
+    pub target_p99: f64,
+    pub deadline: f64,
+    pub budget: f64,
+    pub total: u64,
+    pub misses: u64,
+    pub attainment: f64,
+    pub windowed_p99: f64,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub alerts: u64,
+    pub breaching: bool,
+}
+
+impl SloSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("target_p99", Json::num(self.target_p99)),
+            ("deadline", Json::num(self.deadline)),
+            ("budget", Json::num(self.budget)),
+            ("total", Json::num(self.total as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("attainment", Json::num(self.attainment)),
+            ("windowed_p99", Json::num(self.windowed_p99)),
+            ("fast_burn", Json::num(self.fast_burn)),
+            ("slow_burn", Json::num(self.slow_burn)),
+            ("alerts", Json::num(self.alerts as f64)),
+            ("breaching", Json::Bool(self.breaching)),
+        ])
+    }
+
+    /// One-line rendering for the plain-text serve report.
+    pub fn line(&self) -> String {
+        format!(
+            "SLO: p99 target {:.0} ms, deadline {:.0} ms, budget {:.2}% | attainment {:.1}% ({} of {} missed) | burn fast {:.2} slow {:.2} | alerts {}\n",
+            self.target_p99 * 1e3,
+            self.deadline * 1e3,
+            self.budget * 100.0,
+            self.attainment * 100.0,
+            self.misses,
+            self.total,
+            self.fast_burn,
+            self.slow_burn,
+            self.alerts,
+        )
+    }
+}
+
+const _: () = crate::assert_send_sync::<SloEngine>();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloConfig {
+        SloConfig { fast_window: 4, slow_window: 8, ..SloConfig::for_target(0.1, 0.25) }
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(SloConfig { target_p99: 0.0, ..cfg() }.validate().is_err());
+        assert!(SloConfig { budget: 0.0, ..cfg() }.validate().is_err());
+        assert!(SloConfig { budget: 1.5, ..cfg() }.validate().is_err());
+        assert!(SloConfig { slow_window: 2, ..cfg() }.validate().is_err());
+        assert!(SloConfig { fast_burn: 0.0, ..cfg() }.validate().is_err());
+        assert!(cfg().validate().is_ok());
+    }
+
+    #[test]
+    fn good_sessions_never_burn_or_alert() {
+        let mut e = SloEngine::new(cfg()).unwrap();
+        for _ in 0..32 {
+            assert_eq!(e.record(0.05), None);
+        }
+        assert_eq!(e.fast_burn(), 0.0);
+        assert_eq!(e.slow_burn(), 0.0);
+        assert_eq!(e.attainment(), 1.0);
+        assert_eq!(e.alerts, 0);
+        assert!(!e.breaching());
+    }
+
+    #[test]
+    fn sustained_misses_alert_once_on_the_rising_edge() {
+        let mut e = SloEngine::new(cfg()).unwrap();
+        let mut fired = Vec::new();
+        for i in 0..8 {
+            if let Some(m) = e.record(0.5) {
+                fired.push((i, m));
+            }
+        }
+        // 100% bad / 25% budget = burn 4.0 in both windows; the alert
+        // needs a full fast window (4 samples), then fires exactly once.
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].0, 3);
+        assert_eq!(e.alerts, 1);
+        assert!(e.breaching());
+        assert!((e.fast_burn() - 4.0).abs() < 1e-12);
+        assert!((e.slow_burn() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recovery_clears_the_alert_and_rearms_it() {
+        let mut e = SloEngine::new(cfg()).unwrap();
+        for _ in 0..4 {
+            e.record(0.5);
+        }
+        assert!(e.breaching());
+        // a clean fast window clears the fast burn and with it the alert
+        for _ in 0..4 {
+            e.record(0.05);
+        }
+        assert!(!e.breaching());
+        assert!(e.fast_burn() < cfg().fast_burn);
+        // a second sustained breach fires a second alert
+        let mut again = 0;
+        for _ in 0..8 {
+            if e.record(0.5).is_some() {
+                again += 1;
+            }
+        }
+        assert_eq!(again, 1);
+        assert_eq!(e.alerts, 2);
+    }
+
+    #[test]
+    fn fast_window_spikes_need_the_slow_window_to_confirm() {
+        // budget 0.5, slow window 8: one bad sample in 8 = slow burn
+        // 0.25 < 1.0, so a short spike does not page even though the
+        // fast window briefly burns hot.
+        let mut e = SloEngine::new(SloConfig {
+            fast_window: 2,
+            slow_window: 8,
+            fast_burn: 1.0,
+            ..SloConfig::for_target(0.1, 0.5)
+        })
+        .unwrap();
+        for _ in 0..7 {
+            assert_eq!(e.record(0.05), None);
+        }
+        assert_eq!(e.record(0.5), None, "fast burn hits 1.0 but slow burn 0.25 < 1.0");
+        assert!(e.fast_burn() >= 1.0);
+        assert!(e.slow_burn() < 1.0);
+        assert!(!e.breaching());
+    }
+
+    #[test]
+    fn summary_carries_the_burn_state_and_serializes() {
+        let mut e = SloEngine::new(cfg()).unwrap();
+        e.record(0.05);
+        e.record(0.5);
+        let s = e.summary();
+        assert_eq!(s.total, 2);
+        assert_eq!(s.misses, 1);
+        assert!((s.attainment - 0.5).abs() < 1e-12);
+        assert!(s.windowed_p99 >= 0.5);
+        let j = s.to_json();
+        assert_eq!(j.get("misses").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("breaching").unwrap().as_bool(), Some(false));
+        assert!(s.line().contains("attainment 50.0%"));
+    }
+}

@@ -87,6 +87,11 @@ impl Stage {
             Stage::Autotune => "autotune",
         }
     }
+
+    /// Inverse of [`Stage::name`], for the `obs-report` JSONL replay.
+    pub fn parse(name: &str) -> Option<Stage> {
+        ALL.iter().copied().find(|s| s.name() == name)
+    }
 }
 
 /// A fixed-size span accumulator: seconds and call counts per stage.
@@ -126,6 +131,44 @@ impl SpanSet {
 
     pub fn is_empty(&self) -> bool {
         self.calls.iter().all(|&c| c == 0)
+    }
+
+    /// The span activity accumulated since `earlier` was snapshotted
+    /// (per-stage subtraction).  `SpanSet` is `Copy`, so the traced pump
+    /// loop snapshots the breakdown before each block and diffs after —
+    /// that difference is the block's own SpanSet.
+    pub fn delta_from(&self, earlier: &SpanSet) -> SpanSet {
+        let mut d = SpanSet::default();
+        for i in 0..NUM_STAGES {
+            d.secs[i] = self.secs[i] - earlier.secs[i];
+            d.calls[i] = self.calls[i] - earlier.calls[i];
+        }
+        d
+    }
+
+    /// Inverse of [`SpanSet::to_json`] (the `total_secs` scalar is
+    /// derived, so it is ignored on the way back in).  Unknown keys are
+    /// tolerated for forward compatibility within a schema version.
+    pub fn from_json(j: &Json) -> crate::error::Result<SpanSet> {
+        let bad = |m: String| crate::error::Error::Config(m);
+        let mut out = SpanSet::default();
+        let obj = j.as_obj().ok_or_else(|| bad("spans: not an object".into()))?;
+        for (k, v) in obj {
+            if k == "total_secs" {
+                continue;
+            }
+            let Some(s) = Stage::parse(k) else { continue };
+            out.secs[s.index()] = v
+                .get("secs")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(format!("spans.{k}: missing secs")))?;
+            out.calls[s.index()] = v
+                .get("calls")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(format!("spans.{k}: missing calls")))?
+                as u64;
+        }
+        Ok(out)
     }
 
     /// `{"frontend": {"secs": .., "calls": ..}, ...}` — only stages that

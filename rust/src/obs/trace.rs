@@ -1,0 +1,613 @@
+//! Per-session causal traces (`--trace-out FILE`, `obs-report`).
+//!
+//! The journal (DESIGN.md §10) records *decisions*; this module adds the
+//! *work*: one [`BlockSpan`] per `pump_block` call, carrying which
+//! sessions advanced, how many output steps each produced, the block's
+//! wall time and its [`SpanSet`] delta.  Workers collect the records
+//! inside their tick (guarded by the same single `obs::enabled()` load as
+//! every other site) and ship them back in the `TickReport`; the **router
+//! thread** stamps them onto the simulated clock with [`TraceBuilder`],
+//! so trace assembly stays on the single-threaded control plane and the
+//! record *content* (sessions, steps, tiers) is deterministic at any
+//! `--shards` count.  Wall-measured durations are only deterministic
+//! under `--fixed-tick-ms`, where the router replaces them with equal
+//! shares of the fixed tick (and drops the measured span deltas), making
+//! the exported trace byte-identical run to run.
+//!
+//! Two consumers:
+//!
+//! * [`chrome_trace`] — a Chrome-trace-event / Perfetto JSON document:
+//!   `pid` = shard (−1 = router), `tid` = session, `ts` = simulated clock
+//!   in microseconds.  Journal events become instants on the session's
+//!   track; every block becomes one `"X"` (complete) slice per
+//!   participating session.
+//! * [`Replay`] — the offline `obs-report` analyzer: parses a
+//!   `--metrics-out` JSONL, validates the versioned envelope, replays the
+//!   journal/block deltas and reconstructs per-session timelines
+//!   ([`timelines`]).  Because the trace is a pure function of journal +
+//!   block records, [`Replay::chrome_trace`] re-emits the exact trace the
+//!   live serve wrote.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+use super::journal::{Event, EventKind, NO_SHARD};
+use super::spans::SpanSet;
+
+/// One `pump_block` call, as seen by one shard worker and stamped onto
+/// the simulated clock by the router.
+#[derive(Clone, Debug, Default)]
+pub struct BlockSpan {
+    /// Simulated clock (seconds) at which the block starts.  Workers
+    /// leave this 0; [`TraceBuilder::stamp_tick`] fills it in.
+    pub clock: f64,
+    /// Block duration in seconds (wall-measured, or `dt/n` under a fixed
+    /// tick).
+    pub secs: f64,
+    pub shard: usize,
+    pub tier: usize,
+    /// Sessions (utterance ids) that advanced in this block, slot order.
+    pub utts: Vec<usize>,
+    /// Output steps each advancing session produced (the engine's time
+    /// batch).
+    pub steps: usize,
+    /// Self-time delta attributed to this block (empty under a fixed
+    /// tick).
+    pub spans: SpanSet,
+}
+
+impl BlockSpan {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("clock", Json::num(self.clock)),
+            ("secs", Json::num(self.secs)),
+            ("shard", Json::num(self.shard as f64)),
+            ("tier", Json::num(self.tier as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("utts", Json::arr_num(&self.utts.iter().map(|&u| u as f64).collect::<Vec<_>>())),
+        ];
+        if !self.spans.is_empty() {
+            pairs.push(("spans", self.spans.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BlockSpan> {
+        let mut utts = Vec::new();
+        for u in j.req_arr("utts")? {
+            utts.push(
+                u.as_usize().ok_or_else(|| Error::Config("block utts: not a number".into()))?,
+            );
+        }
+        let spans = match j.get("spans") {
+            Some(s) => SpanSet::from_json(s)?,
+            None => SpanSet::default(),
+        };
+        Ok(BlockSpan {
+            clock: j.req_f64("clock")?,
+            secs: j.req_f64("secs")?,
+            shard: j.req_usize("shard")?,
+            tier: j.req_usize("tier")?,
+            steps: j.req_usize("steps")?,
+            utts,
+            spans,
+        })
+    }
+}
+
+/// Router-side accumulator: stamps worker block records onto the
+/// simulated clock and keeps a cursor so the JSONL exporter can ship
+/// deltas ([`TraceBuilder::delta`]) without re-sending history.
+#[derive(Default)]
+pub struct TraceBuilder {
+    blocks: Vec<BlockSpan>,
+    cursor: usize,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// Absorb one shard tick's block records.  Blocks within a tick ran
+    /// sequentially, so each starts where the previous ended, offset from
+    /// `clock_before` (the simulated clock when the round began).  Under
+    /// a fixed tick (`fixed`), measured durations are replaced by equal
+    /// shares of `dt` and the span deltas dropped, so the stamped records
+    /// — and everything derived from them — are deterministic.
+    pub fn stamp_tick(
+        &mut self,
+        clock_before: f64,
+        dt: f64,
+        records: &mut Vec<BlockSpan>,
+        fixed: bool,
+    ) {
+        let n = records.len();
+        let mut off = 0.0;
+        for (k, mut b) in records.drain(..).enumerate() {
+            if fixed {
+                b.clock = clock_before + dt * k as f64 / n as f64;
+                b.secs = dt / n as f64;
+                b.spans = SpanSet::default();
+            } else {
+                b.clock = clock_before + off;
+                off += b.secs;
+            }
+            self.blocks.push(b);
+        }
+    }
+
+    /// Blocks stamped since the last `delta` call (the exporter's view).
+    pub fn delta(&mut self) -> &[BlockSpan] {
+        let from = self.cursor;
+        self.cursor = self.blocks.len();
+        &self.blocks[from..]
+    }
+
+    /// Every block stamped so far, in router order.
+    pub fn blocks(&self) -> &[BlockSpan] {
+        &self.blocks
+    }
+}
+
+pub fn blocks_to_json(blocks: &[BlockSpan]) -> Json {
+    Json::Arr(blocks.iter().map(BlockSpan::to_json).collect())
+}
+
+/// Simulated seconds → whole trace microseconds.  Rounding keeps the
+/// serialized timestamps integral, which both Perfetto and the byte-
+/// identity contract prefer.
+fn us(secs: f64) -> Json {
+    Json::num((secs * 1e6).round())
+}
+
+fn pid_json(shard: usize) -> Json {
+    Json::num(if shard == NO_SHARD { -1.0 } else { shard as f64 })
+}
+
+/// Assemble a Chrome-trace-event JSON document from a clock-ordered
+/// journal plus stamped block records.  Pure function of its inputs —
+/// the live `--trace-out` path and the offline `obs-report` re-emission
+/// call this with the same data and get the same bytes.
+pub fn chrome_trace(journal: &[Event], blocks: &[BlockSpan]) -> Json {
+    // Process metadata first: one named row per shard seen, router = -1.
+    let mut pids: Vec<i64> = Vec::new();
+    let mut see = |shard: usize| {
+        let pid = if shard == NO_SHARD { -1 } else { shard as i64 };
+        if !pids.contains(&pid) {
+            pids.push(pid);
+        }
+    };
+    journal.iter().for_each(|e| see(e.shard));
+    blocks.iter().for_each(|b| see(b.shard));
+    pids.sort_unstable();
+    let mut events: Vec<Json> = pids
+        .iter()
+        .map(|&pid| {
+            let name =
+                if pid < 0 { "router".to_string() } else { format!("shard {pid}") };
+            Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ])
+        })
+        .collect();
+
+    // Journal instants and block slices, merged by timestamp (stable, so
+    // ties keep journal-before-block, router order).
+    let mut rows: Vec<(f64, Json)> = Vec::with_capacity(journal.len() + blocks.len());
+    for e in journal {
+        rows.push((
+            e.clock,
+            Json::obj(vec![
+                ("name", Json::str(e.kind.name())),
+                ("ph", Json::str("i")),
+                ("s", Json::str("t")),
+                ("ts", us(e.clock)),
+                ("pid", pid_json(e.shard)),
+                ("tid", Json::num(e.session as f64)),
+                ("args", Json::obj(vec![("tier", Json::num(e.tier as f64))])),
+            ]),
+        ));
+    }
+    for b in blocks {
+        let mut args = vec![
+            ("m", Json::num(b.utts.len() as f64)),
+            ("steps", Json::num(b.steps as f64)),
+            ("tier", Json::num(b.tier as f64)),
+        ];
+        if !b.spans.is_empty() {
+            args.push(("spans", b.spans.to_json()));
+        }
+        let args = Json::obj(args);
+        for &utt in &b.utts {
+            rows.push((
+                b.clock,
+                Json::obj(vec![
+                    ("name", Json::str("block")),
+                    ("ph", Json::str("X")),
+                    ("ts", us(b.clock)),
+                    ("dur", us(b.secs)),
+                    ("pid", pid_json(b.shard)),
+                    ("tid", Json::num(utt as f64)),
+                    ("args", args.clone()),
+                ]),
+            ));
+        }
+    }
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    events.extend(rows.into_iter().map(|(_, j)| j));
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Write the Chrome-trace document to `path` (single compact line plus a
+/// trailing newline).
+pub fn write_chrome_trace(path: &str, journal: &[Event], blocks: &[BlockSpan]) -> Result<()> {
+    let doc = chrome_trace(journal, blocks);
+    std::fs::write(path, format!("{}\n", doc.to_string_compact()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Offline replay (`obs-report`)
+// ---------------------------------------------------------------------------
+
+/// The `serve-config` row a serve writes as its first JSONL line when an
+/// exporter is attached, so the offline analyzer knows the topology and
+/// the SLO the run was held to.
+#[derive(Clone, Debug)]
+pub struct ServeConfigRow {
+    pub serve: String,
+    pub shards: usize,
+    pub pool_size: usize,
+    pub chunk_frames: usize,
+    pub slo_target: Option<f64>,
+    pub slo_deadline: Option<f64>,
+    pub slo_budget: Option<f64>,
+    pub slo_actions: bool,
+}
+
+impl ServeConfigRow {
+    fn from_json(j: &Json) -> Result<ServeConfigRow> {
+        let opt = |key: &str| j.get(key).and_then(Json::as_f64);
+        Ok(ServeConfigRow {
+            serve: j.req_str("serve")?.to_string(),
+            shards: j.req_usize("shards")?,
+            pool_size: j.req_usize("pool_size")?,
+            chunk_frames: j.req_usize("chunk_frames")?,
+            slo_target: opt("slo_target"),
+            slo_deadline: opt("slo_deadline"),
+            slo_budget: opt("slo_budget"),
+            slo_actions: j.get("slo_actions").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+}
+
+/// Everything `obs-report` reconstructs from a `--metrics-out` JSONL:
+/// the envelope-validated snapshot stream, the replayed journal and
+/// block records, the self-time trend, and any explicit journal-gap
+/// rows.
+#[derive(Default)]
+pub struct Replay {
+    /// Snapshot kind seen ("stream-serve" / "ladder-serve").
+    pub kind: String,
+    /// Total JSONL lines parsed.
+    pub lines: usize,
+    /// Serve snapshot lines among them.
+    pub snapshots: usize,
+    /// Clock-ordered journal, reassembled from the per-snapshot deltas.
+    pub journal: Vec<Event>,
+    /// Stamped block records, reassembled from the per-snapshot deltas.
+    pub blocks: Vec<BlockSpan>,
+    /// Events the exporter declared lost via `journal-gap` rows.
+    pub gap_missed: u64,
+    /// Clock of the last serve snapshot.
+    pub last_clock: f64,
+    /// Cumulative decode spans at the last snapshot.
+    pub last_spans: SpanSet,
+    /// Plan-time spans at the last snapshot.
+    pub last_plan_spans: SpanSet,
+    /// (clock, cumulative decode spans) per snapshot — the trend the
+    /// analyzer prints.
+    pub trend: Vec<(f64, SpanSet)>,
+    pub config: Option<ServeConfigRow>,
+    /// Lines with an unknown (but validly enveloped) kind, tolerated for
+    /// forward compatibility.
+    pub other_kinds: usize,
+}
+
+impl Replay {
+    /// Parse and validate a `--metrics-out` JSONL: every line must carry
+    /// the versioned envelope, `seq` must be gapless from 0, and every
+    /// journal/block delta must parse.
+    pub fn from_jsonl(text: &str) -> Result<Replay> {
+        let mut r = Replay::default();
+        for line in text.lines() {
+            let v = Json::parse(line)
+                .map_err(|e| Error::Config(format!("line {}: {e}", r.lines + 1)))?;
+            let ver = v.req_usize("schema_version")?;
+            if ver != super::SCHEMA_VERSION as usize {
+                return Err(Error::Config(format!(
+                    "line {}: schema_version {ver} (analyzer speaks {})",
+                    r.lines + 1,
+                    super::SCHEMA_VERSION
+                )));
+            }
+            let seq = v.req_usize("seq")?;
+            if seq != r.lines {
+                return Err(Error::Config(format!(
+                    "line {}: seq {seq} breaks the gapless envelope (expected {})",
+                    r.lines + 1,
+                    r.lines
+                )));
+            }
+            r.lines += 1;
+            match v.req_str("kind")? {
+                "serve-config" => r.config = Some(ServeConfigRow::from_json(&v)?),
+                "journal-gap" => r.gap_missed += v.req_f64("missed")? as u64,
+                kind @ ("stream-serve" | "ladder-serve") => {
+                    r.kind = kind.to_string();
+                    r.snapshots += 1;
+                    r.last_clock = v.req_f64("clock")?;
+                    r.last_spans = SpanSet::from_json(v.req("spans")?)?;
+                    r.last_plan_spans = SpanSet::from_json(v.req("plan_spans")?)?;
+                    r.trend.push((r.last_clock, r.last_spans));
+                    for e in v.req_arr("journal")? {
+                        r.journal.push(Event::from_json(e)?);
+                    }
+                    if let Some(bs) = v.get("blocks") {
+                        for b in bs
+                            .as_arr()
+                            .ok_or_else(|| Error::Config("blocks: not an array".into()))?
+                        {
+                            r.blocks.push(BlockSpan::from_json(b)?);
+                        }
+                    }
+                }
+                _ => r.other_kinds += 1,
+            }
+        }
+        // Same canonical order as `journal::merge`: sorting by content
+        // makes the replayed journal independent of how the exporter
+        // partitioned it into deltas, so it matches the in-process merge
+        // exactly — even with a fixed tick putting many events on equal
+        // clocks.
+        r.journal.sort_by(super::journal::canonical_cmp);
+        Ok(r)
+    }
+
+    /// Re-emit the Perfetto trace from the replayed data alone.  With a
+    /// gapless JSONL this is byte-identical to the `--trace-out` file the
+    /// live serve wrote.
+    pub fn chrome_trace(&self) -> Json {
+        chrome_trace(&self.journal, &self.blocks)
+    }
+
+    pub fn timelines(&self) -> Vec<SessionTimeline> {
+        timelines(&self.journal, &self.blocks)
+    }
+}
+
+/// One session's reconstructed lifecycle.
+#[derive(Clone, Debug, Default)]
+pub struct SessionTimeline {
+    pub session: usize,
+    /// Arrival clock (admission event).
+    pub admission: Option<f64>,
+    /// Placement clock and shard.
+    pub placement: Option<f64>,
+    pub shard: Option<usize>,
+    /// Tier the session last ran on (spills and the drain record win
+    /// over the original placement).
+    pub tier: Option<usize>,
+    /// Drain clock.
+    pub drain: Option<f64>,
+    /// `pump_block` slices the session participated in.
+    pub blocks: usize,
+    /// Lifecycle kinds in clock order (admission/placement/spill/drain).
+    pub kinds: Vec<EventKind>,
+}
+
+impl SessionTimeline {
+    /// Arrival-to-final-transcript latency — exactly what the live serve
+    /// recorded into its histogram, recovered from the journal.
+    pub fn latency(&self) -> Option<f64> {
+        Some(self.drain? - self.admission?)
+    }
+}
+
+/// Group a clock-ordered journal (plus block records) into per-session
+/// timelines.  Only lifecycle kinds carry a session id in `session`;
+/// backpressure/alert payloads are skipped.
+pub fn timelines(journal: &[Event], blocks: &[BlockSpan]) -> Vec<SessionTimeline> {
+    let mut by: BTreeMap<usize, SessionTimeline> = BTreeMap::new();
+    fn entry(by: &mut BTreeMap<usize, SessionTimeline>, s: usize) -> &mut SessionTimeline {
+        by.entry(s).or_insert_with(|| SessionTimeline { session: s, ..Default::default() })
+    }
+    for e in journal {
+        match e.kind {
+            EventKind::Admission => {
+                let t = entry(&mut by, e.session);
+                t.admission = Some(e.clock);
+                t.kinds.push(e.kind);
+            }
+            EventKind::Placement => {
+                let t = entry(&mut by, e.session);
+                t.placement = Some(e.clock);
+                t.shard = Some(e.shard);
+                t.tier = Some(e.tier);
+                t.kinds.push(e.kind);
+            }
+            EventKind::TierSpill => {
+                let t = entry(&mut by, e.session);
+                t.tier = Some(e.tier);
+                t.kinds.push(e.kind);
+            }
+            EventKind::Drain => {
+                let t = entry(&mut by, e.session);
+                t.drain = Some(e.clock);
+                t.tier = Some(e.tier);
+                t.kinds.push(e.kind);
+            }
+            // Shift events are per-shard, backpressure/SLO payloads are
+            // not session ids: none of them belong to a timeline.
+            EventKind::DownShift
+            | EventKind::UpShift
+            | EventKind::Backpressure
+            | EventKind::SloAlert => {}
+        }
+    }
+    for b in blocks {
+        for &utt in &b.utts {
+            entry(&mut by, utt).blocks += 1;
+        }
+    }
+    by.into_values().collect()
+}
+
+const _: () = crate::assert_send_sync::<BlockSpan>();
+const _: () = crate::assert_send_sync::<TraceBuilder>();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::spans::Stage;
+
+    fn block(shard: usize, utts: Vec<usize>) -> BlockSpan {
+        let mut spans = SpanSet::default();
+        spans.add(Stage::RecGates, 0.002);
+        BlockSpan { clock: 0.0, secs: 0.004, shard, tier: 0, utts, steps: 2, spans }
+    }
+
+    #[test]
+    fn block_span_json_round_trips() {
+        let mut b = block(1, vec![3, 5]);
+        b.clock = 0.25;
+        let j = b.to_json();
+        let back = BlockSpan::from_json(&j).unwrap();
+        assert_eq!(back.utts, vec![3, 5]);
+        assert_eq!(back.steps, 2);
+        assert_eq!(back.shard, 1);
+        assert_eq!(back.clock, 0.25);
+        assert_eq!(back.spans.calls[Stage::RecGates.index()], 1);
+        // span-free blocks drop the key entirely and parse back empty
+        let bare = BlockSpan { spans: SpanSet::default(), ..b };
+        let j = bare.to_json();
+        assert!(j.get("spans").is_none());
+        assert!(BlockSpan::from_json(&j).unwrap().spans.is_empty());
+    }
+
+    #[test]
+    fn stamp_tick_offsets_blocks_and_fixed_mode_is_deterministic() {
+        let mut tb = TraceBuilder::new();
+        let mut recs = vec![block(0, vec![1]), block(0, vec![1, 2])];
+        tb.stamp_tick(1.0, 0.01, &mut recs, false);
+        assert!(recs.is_empty());
+        assert_eq!(tb.blocks()[0].clock, 1.0);
+        assert!((tb.blocks()[1].clock - 1.004).abs() < 1e-12, "second block starts after first");
+        // fixed tick: equal shares of dt, spans dropped
+        let mut tb = TraceBuilder::new();
+        let mut recs = vec![block(0, vec![1]), block(0, vec![1])];
+        tb.stamp_tick(2.0, 0.01, &mut recs, true);
+        assert_eq!(tb.blocks()[0].secs, 0.005);
+        assert_eq!(tb.blocks()[1].clock, 2.005);
+        assert!(tb.blocks()[0].spans.is_empty());
+    }
+
+    #[test]
+    fn delta_ships_each_block_exactly_once() {
+        let mut tb = TraceBuilder::new();
+        let mut recs = vec![block(0, vec![1])];
+        tb.stamp_tick(0.0, 0.01, &mut recs, false);
+        assert_eq!(tb.delta().len(), 1);
+        assert_eq!(tb.delta().len(), 0, "no new blocks, empty delta");
+        let mut recs = vec![block(0, vec![2]), block(0, vec![2])];
+        tb.stamp_tick(0.01, 0.01, &mut recs, false);
+        assert_eq!(tb.delta().len(), 2);
+        assert_eq!(tb.blocks().len(), 3);
+    }
+
+    #[test]
+    fn chrome_trace_is_deterministic_and_per_session() {
+        let journal = vec![
+            Event { clock: 0.0, shard: NO_SHARD, session: 7, tier: 0, kind: EventKind::Admission },
+            Event { clock: 0.0, shard: 0, session: 7, tier: 0, kind: EventKind::Placement },
+            Event { clock: 0.02, shard: 0, session: 7, tier: 0, kind: EventKind::Drain },
+        ];
+        let mut b = block(0, vec![7, 9]);
+        b.clock = 0.01;
+        let doc = chrome_trace(&journal, &[b]);
+        let text = doc.to_string_compact();
+        let again = chrome_trace(
+            &journal,
+            &[BlockSpan { clock: 0.01, ..block(0, vec![7, 9]) }],
+        )
+        .to_string_compact();
+        assert_eq!(text, again, "pure function of its inputs");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata rows lead: router (-1) then shard 0
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        assert_eq!(events[0].get("pid").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(events[1].get("pid").unwrap().as_f64(), Some(0.0));
+        // one "X" slice per participating session
+        let slices: Vec<&Json> =
+            events.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")).collect();
+        assert_eq!(slices.len(), 2);
+        assert_eq!(slices[0].get("tid").unwrap().as_usize(), Some(7));
+        assert_eq!(slices[1].get("tid").unwrap().as_usize(), Some(9));
+        assert_eq!(slices[0].get("ts").unwrap().as_f64(), Some(10_000.0), "µs timestamps");
+        // instants ride the session's track too
+        let drains: Vec<&Json> =
+            events.iter().filter(|e| e.get("name").unwrap().as_str() == Some("drain")).collect();
+        assert_eq!(drains[0].get("tid").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn replay_validates_the_envelope_and_rebuilds_timelines() {
+        let lines = [
+            r#"{"schema_version":1,"kind":"serve-config","seq":0,"clock":0,"serve":"stream-serve","shards":1,"pool_size":2,"chunk_frames":8,"slo_target":0.25,"slo_deadline":0.25,"slo_budget":0.01,"slo_actions":false}"#,
+            r#"{"schema_version":1,"kind":"stream-serve","seq":1,"clock":0.5,"spans":{"rec_gates":{"calls":4,"secs":0.004},"total_secs":0.004},"plan_spans":{"total_secs":0},"counters":[],"journal":[{"clock":0.1,"kind":"admission","session":0,"shard":-1,"tier":0},{"clock":0.1,"kind":"placement","session":0,"shard":0,"tier":0}],"blocks":[{"clock":0.2,"secs":0.004,"shard":0,"steps":2,"tier":0,"utts":[0]}],"journal_missed":0}"#,
+            r#"{"schema_version":1,"kind":"journal-gap","seq":2,"clock":0.6,"missed":3}"#,
+            r#"{"schema_version":1,"kind":"stream-serve","seq":3,"clock":1.0,"spans":{"rec_gates":{"calls":8,"secs":0.008},"total_secs":0.008},"plan_spans":{"total_secs":0},"counters":[],"journal":[{"clock":0.9,"kind":"drain","session":0,"shard":0,"tier":0}],"blocks":[],"journal_missed":0}"#,
+        ];
+        let r = Replay::from_jsonl(&lines.join("\n")).unwrap();
+        assert_eq!(r.lines, 4);
+        assert_eq!(r.snapshots, 2);
+        assert_eq!(r.gap_missed, 3);
+        assert_eq!(r.kind, "stream-serve");
+        assert_eq!(r.journal.len(), 3);
+        assert_eq!(r.blocks.len(), 1);
+        assert_eq!(r.trend.len(), 2);
+        assert_eq!(r.config.as_ref().unwrap().slo_target, Some(0.25));
+        let tl = r.timelines();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].session, 0);
+        assert_eq!(tl[0].blocks, 1);
+        assert!((tl[0].latency().unwrap() - 0.8).abs() < 1e-12);
+        assert_eq!(
+            tl[0].kinds,
+            vec![EventKind::Admission, EventKind::Placement, EventKind::Drain]
+        );
+    }
+
+    #[test]
+    fn replay_rejects_broken_envelopes() {
+        let bad_seq = [
+            r#"{"schema_version":1,"kind":"journal-gap","seq":0,"clock":0,"missed":1}"#,
+            r#"{"schema_version":1,"kind":"journal-gap","seq":2,"clock":0,"missed":1}"#,
+        ]
+        .join("\n");
+        assert!(Replay::from_jsonl(&bad_seq).is_err(), "seq gap must fail validation");
+        let bad_ver = r#"{"schema_version":9,"kind":"journal-gap","seq":0,"clock":0,"missed":1}"#;
+        assert!(Replay::from_jsonl(bad_ver).is_err(), "wrong schema_version must fail");
+        assert!(Replay::from_jsonl("not json").is_err());
+    }
+}

@@ -43,7 +43,10 @@ use crate::jsonx::Json;
 use crate::metricsx::{Histogram, LatencySummary, OccupancyTracker};
 use crate::model::ParamSet;
 use crate::obs::export::EXPORT_EVERY_ROUNDS;
-use crate::obs::{self, Event, EventKind, Journal, MetricsExporter, ObsReport, SpanSet, NO_SHARD};
+use crate::obs::{
+    self, trace, Event, EventKind, Journal, MetricsExporter, ObsReport, SloConfig, SloEngine,
+    SloSummary, SpanSet, TraceBuilder, NO_SHARD,
+};
 use crate::prng::Pcg64;
 use crate::registry::Registry;
 use crate::runtime::Runtime;
@@ -70,6 +73,20 @@ pub struct StreamServeConfig {
     /// JSONL metrics snapshot file (`--metrics-out FILE`); None disables
     /// the exporter
     pub metrics_out: Option<String>,
+    /// Chrome-trace / Perfetto JSON output file (`--trace-out FILE`);
+    /// needs `--obs on` (the trace is assembled from the event journal)
+    pub trace_out: Option<String>,
+    /// latency/availability objective evaluated over completed sessions
+    /// (`--slo-target MS`); None disables the burn-rate engine
+    pub slo: Option<SloConfig>,
+    /// whether an SLO breach steers the runtime (`--slo-actions on`):
+    /// this path sheds admissions while breaching.  Off by default —
+    /// observe and journal only, so determinism contracts are untouched
+    pub slo_actions: bool,
+    /// fixed simulated tick in seconds (`--fixed-tick-ms F`): the clock
+    /// advances by exactly this every round instead of the measured wall
+    /// time, making clocks — and the exported trace — deterministic
+    pub tick_secs: Option<f64>,
 }
 
 impl Default for StreamServeConfig {
@@ -81,8 +98,63 @@ impl Default for StreamServeConfig {
             shards: 1,
             seed: 0,
             metrics_out: None,
+            trace_out: None,
+            slo: None,
+            slo_actions: false,
+            tick_secs: None,
         }
     }
+}
+
+/// Shared validation for the trace/SLO/fixed-tick extras both serve
+/// paths accept.
+fn validate_obs_extras(
+    trace_out: &Option<String>,
+    slo: &Option<SloConfig>,
+    slo_actions: bool,
+    tick_secs: Option<f64>,
+) -> Result<()> {
+    if trace_out.is_some() && !obs::enabled() {
+        return Err(Error::Config(
+            "--trace-out needs --obs on (the trace is assembled from the event journal)".into(),
+        ));
+    }
+    if slo_actions && slo.is_none() {
+        return Err(Error::Config("--slo-actions on needs --slo-target".into()));
+    }
+    if let Some(t) = tick_secs {
+        if !(t > 0.0) {
+            return Err(Error::Config("--fixed-tick-ms must be > 0".into()));
+        }
+    }
+    Ok(())
+}
+
+/// First JSONL row of a serve with an exporter attached: the topology
+/// and SLO the run was held to, so `obs-report` can analyze the file
+/// without the command line that produced it.
+fn write_config_row(
+    ex: &mut MetricsExporter,
+    serve: &str,
+    shards: usize,
+    pool_size: usize,
+    chunk_frames: usize,
+    slo: &Option<SloConfig>,
+    slo_actions: bool,
+) -> Result<()> {
+    let mut body = vec![
+        ("serve", Json::str(serve)),
+        ("shards", Json::num(shards as f64)),
+        ("pool_size", Json::num(pool_size as f64)),
+        ("chunk_frames", Json::num(chunk_frames as f64)),
+        ("slo_actions", Json::Bool(slo_actions)),
+    ];
+    if let Some(s) = slo {
+        body.push(("slo_target", Json::num(s.target_p99)));
+        body.push(("slo_deadline", Json::num(s.deadline)));
+        body.push(("slo_budget", Json::num(s.budget)));
+    }
+    ex.write_snapshot("serve-config", 0.0, body)
 }
 
 /// Per-shard slice of a serving report.
@@ -146,6 +218,9 @@ pub struct StreamServeReport {
     /// flight-recorder data (spans, kernel counters, event journal) —
     /// Some only when the serve ran with `--obs on`
     pub obs: Option<ObsReport>,
+    /// SLO attainment / burn-rate summary — Some only when the serve ran
+    /// with `--slo-target`
+    pub slo: Option<SloSummary>,
 }
 
 impl StreamServeReport {
@@ -175,6 +250,9 @@ impl StreamServeReport {
                 ),
             ),
         ]);
+        if let Some(s) = &self.slo {
+            fields.push(("slo", s.to_json()));
+        }
         if let Some(o) = &self.obs {
             fields.push(("obs", o.to_json()));
         }
@@ -211,6 +289,7 @@ pub fn stream_serve(
     if cfg.arrival_rate <= 0.0 {
         return Err(Error::Config("arrival rate must be positive".into()));
     }
+    validate_obs_extras(&cfg.trace_out, &cfg.slo, cfg.slo_actions, cfg.tick_secs)?;
     let shards = cfg.shards;
     let backend = engine.backend_name();
     let precision = engine.precision.name();
@@ -242,6 +321,22 @@ pub fn stream_serve(
             Some(path) => Some(MetricsExporter::create(path)?),
             None => None,
         };
+        if let Some(ex) = exporter.as_mut() {
+            write_config_row(
+                ex,
+                "stream-serve",
+                shards,
+                cfg.pool_size,
+                cfg.chunk_frames,
+                &cfg.slo,
+                cfg.slo_actions,
+            )?;
+        }
+        let mut tracer = TraceBuilder::new();
+        let mut slo = match &cfg.slo {
+            Some(c) => Some(SloEngine::new(c.clone())?),
+            None => None,
+        };
         let mut rounds = 0usize;
 
         while next < utts.len() || !queue.is_empty() || links.any_active() {
@@ -260,9 +355,16 @@ pub fn stream_serve(
                 next += 1;
             }
             // least-occupancy placement; a full fleet leaves the rest
-            // queued (backpressure) for a later round
+            // queued (backpressure) for a later round — and under
+            // `--slo-actions on` a burn-rate breach sheds the whole
+            // round's admissions (never into an idle fleet: shedding with
+            // nothing running could not clear the breach)
+            let shedding = cfg.slo_actions
+                && slo.as_ref().map_or(false, |e| e.breaching())
+                && links.any_active();
             let mut admissions: Vec<Vec<Admission>> = vec![Vec::new(); shards];
-            while let Some(&utt) = queue.front() {
+            while !shedding {
+                let Some(&utt) = queue.front() else { break };
                 let Some((shard, tier)) = links.place(|_| 0) else { break };
                 queue.pop_front();
                 links.stage(shard, tier);
@@ -302,19 +404,37 @@ pub fn stream_serve(
             }
 
             // one parallel round across the fleet; the clock advances by
-            // the slowest shard's measured tick (the round's wall-clock)
+            // the slowest shard's measured tick (the round's wall-clock),
+            // or by exactly `--fixed-tick-ms` when one is set
             let reports = links.round(admissions)?;
-            let dt = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
+            let measured = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
             busy += reports.iter().flatten().map(|r| r.secs).sum::<f64>();
+            let dt = cfg.tick_secs.unwrap_or(measured);
+            let clock_before = clock;
             clock += dt;
             for (shard, rep) in reports.into_iter().enumerate() {
                 match rep {
-                    Some(r) => {
+                    Some(mut r) => {
+                        tracer.stamp_tick(clock_before, dt, &mut r.blocks, cfg.tick_secs.is_some());
                         occ[shard].record(r.occ_before.iter().sum(), dt);
                         breakdowns[shard] = r.breakdown;
                         stats[shard] = r.stats;
                         for f in r.finished {
-                            lat[shard].record(clock - arrivals[f.utt]);
+                            let l = clock - arrivals[f.utt];
+                            lat[shard].record(l);
+                            if let Some(eng) = slo.as_mut() {
+                                if let Some(misses) = eng.record(l) {
+                                    if obs_on {
+                                        journals[shards].push(Event {
+                                            clock,
+                                            shard: NO_SHARD,
+                                            session: misses as usize,
+                                            tier: 0,
+                                            kind: EventKind::SloAlert,
+                                        });
+                                    }
+                                }
+                            }
                             if obs_on {
                                 journals[shard].push(Event {
                                     clock,
@@ -337,7 +457,7 @@ pub fn stream_serve(
                     for b in &breakdowns {
                         sp.absorb(&b.spans);
                     }
-                    ex.write_serve_snapshot("stream-serve", clock, &sp, &journals)?;
+                    ex.write_serve_snapshot("stream-serve", clock, &sp, &journals, tracer.delta())?;
                 }
             }
         }
@@ -366,13 +486,17 @@ pub fn stream_serve(
             });
         }
         if let Some(ex) = exporter.as_mut() {
-            ex.write_serve_snapshot("stream-serve", clock, &bd.spans, &journals)?;
+            ex.write_serve_snapshot("stream-serve", clock, &bd.spans, &journals, tracer.delta())?;
+        }
+        let merged_journal = obs::journal::merge(&journals);
+        if let Some(path) = &cfg.trace_out {
+            trace::write_chrome_trace(path, &merged_journal, tracer.blocks())?;
         }
         let obs_report = obs_on.then(|| ObsReport {
             spans: bd.spans,
             plan_spans: obs::spans::global_snapshot(),
             counters: obs::counters::snapshot(),
-            journal: obs::journal::merge(&journals),
+            journal: merged_journal,
             journal_dropped: obs::journal::total_dropped(&journals),
         });
         Ok(StreamServeReport {
@@ -393,6 +517,7 @@ pub fn stream_serve(
             breakdown: bd,
             transcripts,
             obs: obs_report,
+            slo: slo.as_ref().map(|e| e.summary()),
         })
     })
 }
@@ -423,6 +548,20 @@ pub struct LadderServeConfig {
     /// JSONL metrics snapshot file (`--metrics-out FILE`); None disables
     /// the exporter
     pub metrics_out: Option<String>,
+    /// Chrome-trace / Perfetto JSON output file (`--trace-out FILE`);
+    /// needs `--obs on` (the trace is assembled from the event journal)
+    pub trace_out: Option<String>,
+    /// latency/availability objective evaluated over completed sessions
+    /// (`--slo-target MS`); None disables the burn-rate engine
+    pub slo: Option<SloConfig>,
+    /// whether an SLO breach steers the runtime (`--slo-actions on`):
+    /// this path feeds the breach into every fidelity controller as
+    /// extra downshift pressure.  Off by default
+    pub slo_actions: bool,
+    /// fixed simulated tick in seconds (`--fixed-tick-ms F`): the clock
+    /// advances by exactly this every round instead of the measured wall
+    /// time, making clocks — and the exported trace — deterministic
+    pub tick_secs: Option<f64>,
 }
 
 impl Default for LadderServeConfig {
@@ -437,6 +576,10 @@ impl Default for LadderServeConfig {
             seed: 0,
             controller: ControllerConfig::default(),
             metrics_out: None,
+            trace_out: None,
+            slo: None,
+            slo_actions: false,
+            tick_secs: None,
         }
     }
 }
@@ -506,6 +649,9 @@ pub struct LadderServeReport {
     /// flight-recorder data (spans, kernel counters, event journal) —
     /// Some only when the serve ran with `--obs on`
     pub obs: Option<ObsReport>,
+    /// SLO attainment / burn-rate summary — Some only when the serve ran
+    /// with `--slo-target`
+    pub slo: Option<SloSummary>,
 }
 
 impl LadderServeReport {
@@ -552,6 +698,9 @@ impl LadderServeReport {
                 ),
             ),
         ];
+        if let Some(s) = &self.slo {
+            fields.push(("slo", s.to_json()));
+        }
         if let Some(o) = &self.obs {
             fields.push(("obs", o.to_json()));
         }
@@ -598,6 +747,7 @@ pub fn ladder_serve(
     if cfg.base_rate <= 0.0 || cfg.ramp_rate <= 0.0 {
         return Err(Error::Config("arrival rates must be positive".into()));
     }
+    validate_obs_extras(&cfg.trace_out, &cfg.slo, cfg.slo_actions, cfg.tick_secs)?;
     let tiers = registry.num_tiers();
     let shards = cfg.shards;
     let mut ctls: Vec<FidelityController> = (0..shards)
@@ -645,6 +795,22 @@ pub fn ladder_serve(
             (0..shards + 1).map(|_| Journal::with_capacity(jcap)).collect();
         let mut exporter = match &cfg.metrics_out {
             Some(path) => Some(MetricsExporter::create(path)?),
+            None => None,
+        };
+        if let Some(ex) = exporter.as_mut() {
+            write_config_row(
+                ex,
+                "ladder-serve",
+                shards,
+                cfg.pool_size,
+                cfg.chunk_frames,
+                &cfg.slo,
+                cfg.slo_actions,
+            )?;
+        }
+        let mut tracer = TraceBuilder::new();
+        let mut slo = match &cfg.slo {
+            Some(c) => Some(SloEngine::new(c.clone())?),
             None => None,
         };
         let mut rounds = 0usize;
@@ -727,12 +893,15 @@ pub fn ladder_serve(
             }
 
             let reports = links.round(admissions)?;
-            let dt = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
+            let measured = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
             busy += reports.iter().flatten().map(|r| r.secs).sum::<f64>();
+            let dt = cfg.tick_secs.unwrap_or(measured);
+            let clock_before = clock;
             clock += dt;
             for (shard, rep) in reports.into_iter().enumerate() {
                 match rep {
-                    Some(r) => {
+                    Some(mut r) => {
+                        tracer.stamp_tick(clock_before, dt, &mut r.blocks, cfg.tick_secs.is_some());
                         for (o, &k) in occ[shard].iter_mut().zip(&r.occ_before) {
                             o.record(k, dt);
                         }
@@ -741,6 +910,19 @@ pub fn ladder_serve(
                             let l = clock - arrivals[f.utt];
                             lat[shard][f.tier].record(l);
                             ctls[shard].record_latency(f.tier, l);
+                            if let Some(eng) = slo.as_mut() {
+                                if let Some(misses) = eng.record(l) {
+                                    if obs_on {
+                                        journals[shards].push(Event {
+                                            clock,
+                                            shard: NO_SHARD,
+                                            session: misses as usize,
+                                            tier: 0,
+                                            kind: EventKind::SloAlert,
+                                        });
+                                    }
+                                }
+                            }
                             if obs_on {
                                 journals[shard].push(Event {
                                     clock,
@@ -752,10 +934,14 @@ pub fn ladder_serve(
                             }
                         }
                         // control tick: the shard's routed tier's pool is
-                        // its admission signal
+                        // its admission signal; under `--slo-actions on`
+                        // a burn-rate breach is extra downshift pressure
+                        let slo_pressure =
+                            cfg.slo_actions && slo.as_ref().map_or(false, |e| e.breaching());
                         let routed = ctls[shard].tier();
                         let frac = r.occ_after[routed] as f64 / cfg.pool_size as f64;
-                        if let Some(sh) = ctls[shard].observe(clock, frac) {
+                        if let Some(sh) = ctls[shard].observe_with_pressure(clock, frac, slo_pressure)
+                        {
                             if obs_on {
                                 journals[shard].push(shift_event(&sh, shard));
                             }
@@ -765,7 +951,10 @@ pub fn ladder_serve(
                         for o in occ[shard].iter_mut() {
                             o.record(0, dt);
                         }
-                        if let Some(sh) = ctls[shard].observe(clock, 0.0) {
+                        let slo_pressure =
+                            cfg.slo_actions && slo.as_ref().map_or(false, |e| e.breaching());
+                        if let Some(sh) = ctls[shard].observe_with_pressure(clock, 0.0, slo_pressure)
+                        {
                             if obs_on {
                                 journals[shard].push(shift_event(&sh, shard));
                             }
@@ -780,7 +969,7 @@ pub fn ladder_serve(
                     for b in &breakdowns {
                         sp.absorb(&b.spans);
                     }
-                    ex.write_serve_snapshot("ladder-serve", clock, &sp, &journals)?;
+                    ex.write_serve_snapshot("ladder-serve", clock, &sp, &journals, tracer.delta())?;
                 }
             }
         }
@@ -825,13 +1014,17 @@ pub fn ladder_serve(
             });
         }
         if let Some(ex) = exporter.as_mut() {
-            ex.write_serve_snapshot("ladder-serve", clock, &bd.spans, &journals)?;
+            ex.write_serve_snapshot("ladder-serve", clock, &bd.spans, &journals, tracer.delta())?;
+        }
+        let merged_journal = obs::journal::merge(&journals);
+        if let Some(path) = &cfg.trace_out {
+            trace::write_chrome_trace(path, &merged_journal, tracer.blocks())?;
         }
         let obs_report = obs_on.then(|| ObsReport {
             spans: bd.spans,
             plan_spans: obs::spans::global_snapshot(),
             counters: obs::counters::snapshot(),
-            journal: obs::journal::merge(&journals),
+            journal: merged_journal,
             journal_dropped: obs::journal::total_dropped(&journals),
         });
         let shift_logs: Vec<&[ShiftEvent]> = ctls.iter().map(|c| c.shifts()).collect();
@@ -853,6 +1046,7 @@ pub fn ladder_serve(
             span_secs: span,
             breakdown: bd,
             obs: obs_report,
+            slo: slo.as_ref().map(|e| e.summary()),
         })
     })
 }
@@ -990,10 +1184,34 @@ mod tests {
         let s = StreamServeConfig::default();
         assert!(s.arrival_rate > 0.0 && s.pool_size >= 1 && s.chunk_frames >= 1);
         assert_eq!(s.shards, 1, "unsharded serving is the default");
+        assert!(s.trace_out.is_none() && s.slo.is_none() && s.tick_secs.is_none());
+        assert!(!s.slo_actions, "SLO breaches must not steer by default");
         let l = LadderServeConfig::default();
         assert!(l.base_rate > 0.0 && l.ramp_rate > 0.0 && l.pool_size >= 1);
         assert_eq!(l.shards, 1);
         assert!(l.controller.low_water < l.controller.high_water);
+        assert!(l.trace_out.is_none() && l.slo.is_none() && !l.slo_actions);
+    }
+
+    #[test]
+    fn obs_extras_validate_their_preconditions() {
+        let was = obs::enabled();
+        obs::set_enabled(false);
+        assert!(
+            validate_obs_extras(&Some("t.json".into()), &None, false, None).is_err(),
+            "--trace-out without --obs on must be rejected"
+        );
+        obs::set_enabled(true);
+        assert!(validate_obs_extras(&Some("t.json".into()), &None, false, None).is_ok());
+        obs::set_enabled(was);
+        assert!(
+            validate_obs_extras(&None, &None, true, None).is_err(),
+            "--slo-actions on without an SLO must be rejected"
+        );
+        assert!(validate_obs_extras(&None, &None, false, Some(0.0)).is_err());
+        assert!(validate_obs_extras(&None, &None, false, Some(0.004)).is_ok());
+        let slo = Some(SloConfig::for_target(0.25, 0.01));
+        assert!(validate_obs_extras(&None, &slo, true, None).is_ok());
     }
 
     #[test]
@@ -1009,7 +1227,7 @@ mod tests {
             chunk_frames: 16,
             shards: 1,
             seed: 1,
-            metrics_out: None,
+            ..Default::default()
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 6);
@@ -1042,7 +1260,7 @@ mod tests {
             chunk_frames: 32,
             shards: 1,
             seed: 2,
-            metrics_out: None,
+            ..Default::default()
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.sessions, 4);
@@ -1063,7 +1281,7 @@ mod tests {
             chunk_frames: 16,
             shards: 2,
             seed: 1,
-            metrics_out: None,
+            ..Default::default()
         };
         let r = stream_serve(engine, &data.test, &cfg).unwrap();
         assert_eq!(r.shards, 2);

@@ -51,8 +51,9 @@ use std::sync::Arc;
 use crate::data::Utterance;
 use crate::error::{Error, Result};
 use crate::infer::{Breakdown, Engine};
+use crate::obs::{self, trace::BlockSpan};
 use crate::prng::Pcg64;
-use crate::stream::{PoolStats, StreamId, StreamPool};
+use crate::stream::{BlockTrace, PoolStats, StreamId, StreamPool};
 
 // ---------------------------------------------------------------------------
 // Router <-> worker protocol.
@@ -93,6 +94,10 @@ pub struct TickReport {
     pub breakdown: Breakdown,
     /// cumulative pool counters summed over this shard's tier pools
     pub stats: PoolStats,
+    /// per-`pump_block` trace records from this tick, utterance-mapped
+    /// but not yet clock-stamped (the router does that).  Always empty
+    /// with obs off — `Vec::new()` never allocates.
+    pub blocks: Vec<BlockSpan>,
 }
 
 enum ToShard {
@@ -169,9 +174,43 @@ impl ShardWorker<'_> {
                 a.off = end;
             }
         }
-        for pool in self.pools.iter_mut() {
-            if pool.active() > 0 {
-                pool.pump(&mut self.bd)?;
+        // With obs on, pump through the traced path and map each block's
+        // session ids to utterance numbers (the in-flight table still
+        // holds every advancing session — closes happen below).  The
+        // records ship back unstamped; the router owns the clock.
+        let obs_on = obs::enabled();
+        let mut blocks: Vec<BlockSpan> = Vec::new();
+        let mut traces: Vec<BlockTrace> = Vec::new();
+        for tier in 0..self.pools.len() {
+            if self.pools[tier].active() == 0 {
+                continue;
+            }
+            if obs_on {
+                self.pools[tier].pump_traced(&mut self.bd, &mut traces)?;
+                for tr in traces.drain(..) {
+                    let utts = tr
+                        .ids
+                        .iter()
+                        .map(|id| {
+                            self.active
+                                .iter()
+                                .find(|a| a.id == *id)
+                                .expect("pumped session missing from in-flight table")
+                                .utt
+                        })
+                        .collect();
+                    blocks.push(BlockSpan {
+                        clock: 0.0,
+                        secs: tr.secs,
+                        shard: self.shard,
+                        tier,
+                        utts,
+                        steps: tr.steps,
+                        spans: tr.spans,
+                    });
+                }
+            } else {
+                self.pools[tier].pump(&mut self.bd)?;
             }
         }
         let mut finished = Vec::new();
@@ -204,6 +243,7 @@ impl ShardWorker<'_> {
             secs,
             breakdown: self.bd,
             stats,
+            blocks,
         })
     }
 }

@@ -45,7 +45,7 @@ use crate::decoder::{greedy_step, BLANK};
 use crate::error::{Error, Result};
 use crate::infer::{gru_cell, Breakdown, Engine, Scratch, StreamState};
 use crate::model::ParamSet;
-use crate::obs::{self, Stage};
+use crate::obs::{self, SpanSet, Stage};
 use crate::prng::Pcg64;
 use crate::runtime::ModelDims;
 use crate::tensor::Tensor;
@@ -98,6 +98,24 @@ pub struct ClosedSession {
     pub logprob_rows: Vec<Vec<f32>>,
     /// total output steps this session produced over its lifetime
     pub steps: u64,
+}
+
+/// One `pump_block` call as seen by [`StreamPool::pump_traced`]: the
+/// sessions that advanced in lock-step, the output steps each produced,
+/// the measured wall time and the block's self-time span delta.  The
+/// shard worker maps the ids to utterance numbers and forwards the
+/// record to the router for clock stamping (`obs::trace`).
+#[derive(Clone, Debug, Default)]
+pub struct BlockTrace {
+    /// Sessions that advanced, slot order.
+    pub ids: Vec<StreamId>,
+    /// Output steps each advancing session produced (the engine's time
+    /// batch).
+    pub steps: usize,
+    /// Measured wall-clock seconds of the block.
+    pub secs: f64,
+    /// Span self-time attributed to this block alone.
+    pub spans: SpanSet,
 }
 
 /// One live session: per-stream state split from the shared engine
@@ -335,6 +353,43 @@ impl StreamPool {
             if n == 0 {
                 return Ok(produced);
             }
+            produced += n;
+        }
+    }
+
+    /// [`StreamPool::pump`] with per-block trace records: each
+    /// `pump_block` call appends one [`BlockTrace`] to `out` naming the
+    /// sessions that advanced, the steps each produced, the measured
+    /// wall time of the block and its span delta (`SpanSet` is `Copy`,
+    /// so the delta is a before/after snapshot subtraction — the pool's
+    /// breakdown keeps accumulating exactly as in the plain path).
+    ///
+    /// Only the shard worker calls this, and only with obs on; the plain
+    /// `pump` path stays byte-for-byte what it was, so the obs-off cost
+    /// contract is untouched.
+    pub fn pump_traced(&mut self, bd: &mut Breakdown, out: &mut Vec<BlockTrace>) -> Result<usize> {
+        let mut produced = 0;
+        loop {
+            let before = bd.spans;
+            let t0 = std::time::Instant::now();
+            let n = self.pump_block(bd)?;
+            if n == 0 {
+                return Ok(produced);
+            }
+            // `scratch.ready` still names the slots that advanced in the
+            // block that just ran (it is only rewritten by the next call)
+            let ids = self
+                .scratch
+                .ready
+                .iter()
+                .map(|&si| StreamId(self.slots[si].as_ref().unwrap().id))
+                .collect::<Vec<_>>();
+            out.push(BlockTrace {
+                steps: n / ids.len(),
+                ids,
+                secs: t0.elapsed().as_secs_f64(),
+                spans: bd.spans.delta_from(&before),
+            });
             produced += n;
         }
     }
@@ -633,6 +688,57 @@ mod tests {
         let rows = pool.poll(ids[0]).unwrap();
         assert_eq!(rows.len(), 4);
         assert!(pool.poll(ids[0]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn pump_traced_matches_pump_and_records_each_block() {
+        let eng = engine(Precision::Int8);
+        let block = eng.block_raw_len();
+        let mut rng = Pcg64::seeded(3);
+        let frames = Tensor::randn(&[2 * block / 40, 40], 0.5, &mut rng);
+
+        let mut pool = StreamPool::new(eng.clone(), 4);
+        let ids: Vec<StreamId> = (0..2).map(|_| pool.open().unwrap()).collect();
+        for &id in &ids {
+            pool.push_frames(id, frames.data()).unwrap();
+        }
+        let was = obs::enabled();
+        obs::set_enabled(true);
+        let mut bd = Breakdown::default();
+        let mut traces = Vec::new();
+        let produced = pool.pump_traced(&mut bd, &mut traces).unwrap();
+        obs::set_enabled(was);
+
+        // 2 sessions x 2 buffered blocks x time_batch=4 steps
+        assert_eq!(produced, 2 * 2 * 4);
+        assert_eq!(traces.len(), 2, "one record per lock-stepped block");
+        for tr in &traces {
+            assert_eq!(tr.ids, ids, "both sessions advanced in slot order");
+            assert_eq!(tr.steps, 4);
+            assert!(tr.secs > 0.0);
+            assert!(!tr.spans.is_empty(), "block carries its span delta");
+        }
+        // the block deltas partition the pool's accumulated spans
+        let mut sum = SpanSet::default();
+        for tr in &traces {
+            sum.absorb(&tr.spans);
+        }
+        for i in 0..crate::obs::spans::NUM_STAGES {
+            assert!((sum.secs[i] - bd.spans.secs[i]).abs() < 1e-9);
+            assert_eq!(sum.calls[i], bd.spans.calls[i]);
+        }
+
+        // transcripts are bit-identical to the plain pump path
+        let mut plain = StreamPool::new(eng, 4);
+        let pids: Vec<StreamId> = (0..2).map(|_| plain.open().unwrap()).collect();
+        for &id in &pids {
+            plain.push_frames(id, frames.data()).unwrap();
+        }
+        let mut bd2 = Breakdown::default();
+        assert_eq!(plain.pump(&mut bd2).unwrap(), produced);
+        for (&a, &b) in ids.iter().zip(&pids) {
+            assert_eq!(pool.transcript(a).unwrap(), plain.transcript(b).unwrap());
+        }
     }
 
     #[test]

@@ -200,6 +200,39 @@ fn obs_disabled_costs_nothing_and_freezes_counters() {
     assert!(bd.spans.is_empty(), "spans recorded while obs was disabled");
     // the plain timing breakdown still works with the recorder off
     assert!(bd.frames > 0 && bd.acoustic_total() > 0.0);
+
+    // same contract at the pool level: pump + close leave the counters
+    // frozen, and even the traced pump path records no span data — the
+    // per-block records carry empty deltas because no instrumentation
+    // site fired
+    let eng = Arc::new(eng);
+    let mut pool = StreamPool::new(eng.clone(), 2);
+    let id = pool.open().unwrap();
+    let mut bdp = Breakdown::default();
+    pool.push_frames(id, frames.data()).unwrap();
+    let mut traces = Vec::new();
+    pool.pump_traced(&mut bdp, &mut traces).unwrap();
+    let closed = pool.close(id, &mut bdp).unwrap();
+    assert_eq!(
+        tracenorm::obs::counters::total_calls(),
+        calls_before,
+        "kernel counters moved during pooled decode with obs disabled"
+    );
+    assert!(bdp.spans.is_empty(), "pool spans recorded while obs was disabled");
+    assert!(!traces.is_empty());
+    assert!(
+        traces.iter().all(|t| t.spans.is_empty()),
+        "traced pump recorded span deltas while obs was disabled"
+    );
+    // ... and the traced path decodes bit-identically to the plain one
+    let mut plain = StreamPool::new(eng, 2);
+    let pid = plain.open().unwrap();
+    let mut bdq = Breakdown::default();
+    plain.push_frames(pid, frames.data()).unwrap();
+    plain.pump(&mut bdq).unwrap();
+    let ref_closed = plain.close(pid, &mut bdq).unwrap();
+    assert_eq!(closed.transcript, ref_closed.transcript);
+    assert_eq!(closed.logprob_rows, ref_closed.logprob_rows);
 }
 
 #[test]

@@ -150,7 +150,7 @@ fn controller_downshifts_under_ramp_and_upshifts_after() {
             clear_ticks: 2,
             window: 32,
         },
-        metrics_out: None,
+        ..Default::default()
     };
     let r = ladder_serve(&reg, &utts, &cfg).unwrap();
 

@@ -14,7 +14,8 @@ use std::time::Instant;
 use tracenorm::data::{CorpusSpec, Dataset};
 use tracenorm::infer::{Breakdown, Engine, Precision};
 use tracenorm::obs;
-use tracenorm::obs::{EventKind, NO_SHARD};
+use tracenorm::obs::trace::Replay;
+use tracenorm::obs::{EventKind, SloConfig, NO_SHARD};
 use tracenorm::prng::Pcg64;
 use tracenorm::serve::{stream_serve, StreamServeConfig};
 use tracenorm::stream::{demo_dims, synthetic_params};
@@ -89,7 +90,7 @@ fn transcripts_bit_identical_with_obs_on_and_off() {
         chunk_frames: 16,
         shards: 2,
         seed: 7,
-        metrics_out: None,
+        ..Default::default()
     };
 
     obs::set_enabled(false);
@@ -128,7 +129,7 @@ fn journal_merge_deterministic_across_shard_counts() {
             chunk_frames: 16,
             shards,
             seed: 9,
-            metrics_out: None,
+            ..Default::default()
         };
         let r = stream_serve(engine.clone(), &data.test, &cfg).unwrap();
         obs::set_enabled(false);
@@ -168,4 +169,165 @@ fn journal_merge_deterministic_across_shard_counts() {
     // ... and that lifecycle multiset is identical at 1, 2 and 4 shards
     assert_eq!(lifecycles[0], lifecycles[1], "1-shard vs 2-shard journals differ");
     assert_eq!(lifecycles[0], lifecycles[2], "1-shard vs 4-shard journals differ");
+}
+
+fn temp_path(tag: &str, ext: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("tracenorm_obs_{tag}_{}.{ext}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Under `--fixed-tick-ms` the simulated clock — and with it every
+/// journal clock and block stamp — is a pure function of the seed, so
+/// the exported Chrome trace is byte-identical run to run.
+#[test]
+fn fixed_tick_trace_is_byte_identical_run_to_run() {
+    let dims = demo_dims();
+    let p = synthetic_params(&dims, 0.25, 3);
+    let engine =
+        Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap());
+    let data = Dataset::generate(CorpusSpec::standard(25), 0, 0, 5);
+    let run = |out: &str| {
+        obs::reset_process_metrics();
+        obs::set_enabled(true);
+        let cfg = StreamServeConfig {
+            arrival_rate: 50.0,
+            pool_size: 2,
+            chunk_frames: 16,
+            shards: 1,
+            seed: 5,
+            trace_out: Some(out.to_string()),
+            tick_secs: Some(0.002),
+            ..Default::default()
+        };
+        let r = stream_serve(engine.clone(), &data.test, &cfg).unwrap();
+        obs::set_enabled(false);
+        r
+    };
+    let (a, b) = (temp_path("trace_a", "json"), temp_path("trace_b", "json"));
+    run(&a);
+    run(&b);
+    let ta = std::fs::read_to_string(&a).unwrap();
+    let tb = std::fs::read_to_string(&b).unwrap();
+    assert_eq!(ta, tb, "fixed-tick trace must be byte-identical across runs");
+    // and it is a well-formed Chrome-trace document with block slices
+    // and journal instants on session tracks
+    let doc = tracenorm::jsonx::Json::parse(ta.trim()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("X")),
+        "trace carries no pump-block slices"
+    );
+    assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("i")));
+    assert!(events.iter().any(|e| e.get("ph").unwrap().as_str() == Some("M")));
+    std::fs::remove_file(&a).ok();
+    std::fs::remove_file(&b).ok();
+}
+
+/// The offline replay reconstructs the exact in-process journal from the
+/// JSONL deltas (canonical order makes this partition-independent), and
+/// per-session event sequences agree — shard tag aside — at 1, 2 and 4
+/// shards.
+#[test]
+fn obs_report_replay_matches_in_process_journal_at_any_shard_count() {
+    let dims = demo_dims();
+    let p = synthetic_params(&dims, 0.25, 3);
+    let engine =
+        Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap());
+    let data = Dataset::generate(CorpusSpec::standard(27), 0, 0, 6);
+    let mut per_session: Vec<Vec<(usize, Vec<&'static str>)>> = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let mpath = temp_path(&format!("replay_{shards}"), "jsonl");
+        obs::reset_process_metrics();
+        obs::set_enabled(true);
+        let cfg = StreamServeConfig {
+            arrival_rate: 40.0,
+            pool_size: 2,
+            chunk_frames: 16,
+            shards,
+            seed: 9,
+            metrics_out: Some(mpath.clone()),
+            ..Default::default()
+        };
+        let r = stream_serve(engine.clone(), &data.test, &cfg).unwrap();
+        obs::set_enabled(false);
+        let live = r.obs.expect("obs report missing").journal;
+        let replay = Replay::from_jsonl(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
+        assert_eq!(replay.gap_missed, 0, "journal ring must not lap at this size");
+        assert_eq!(replay.config.as_ref().unwrap().shards, shards);
+        assert_eq!(replay.journal, live, "replayed journal diverges at {shards} shard(s)");
+        assert!(!replay.blocks.is_empty(), "block-trace records must ship in the JSONL");
+        let tl = replay.timelines();
+        assert_eq!(tl.len(), data.test.len());
+        // Every session drains; only sessions long enough to fill at
+        // least one raw block appear in a BlockSpan (the close-path
+        // flush of a final partial block is deliberately untraced).
+        assert!(tl.iter().all(|t| t.latency().is_some()));
+        assert!(
+            tl.iter().any(|t| t.blocks > 0),
+            "no session participated in a traced block"
+        );
+        per_session.push(
+            tl.iter()
+                .map(|t| (t.session, t.kinds.iter().map(|k| k.name()).collect()))
+                .collect(),
+        );
+        std::fs::remove_file(&mpath).ok();
+    }
+    assert_eq!(per_session[0], per_session[1], "1 vs 2 shards: per-session sequences differ");
+    assert_eq!(per_session[0], per_session[2], "1 vs 4 shards: per-session sequences differ");
+}
+
+/// Full round trip: a fixed-tick serve writes both a JSONL and a trace;
+/// `obs-report`'s replay re-emits the trace from the JSONL alone,
+/// byte-identical.  The run also exercises the SLO engine (impossible
+/// deadline -> every session misses, alert journaled on the rising edge)
+/// without letting it steer (`slo_actions: false`).
+#[test]
+fn obs_report_replay_round_trips_the_live_trace_bytes() {
+    let dims = demo_dims();
+    let p = synthetic_params(&dims, 0.25, 3);
+    let engine =
+        Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap());
+    let data = Dataset::generate(CorpusSpec::standard(29), 0, 0, 6);
+    let mpath = temp_path("roundtrip", "jsonl");
+    let tpath = temp_path("roundtrip", "json");
+    obs::reset_process_metrics();
+    obs::set_enabled(true);
+    let cfg = StreamServeConfig {
+        arrival_rate: 40.0,
+        pool_size: 2,
+        chunk_frames: 16,
+        shards: 2,
+        seed: 13,
+        metrics_out: Some(mpath.clone()),
+        trace_out: Some(tpath.clone()),
+        slo: Some(SloConfig {
+            fast_window: 2,
+            slow_window: 4,
+            ..SloConfig::for_target(1e-9, 0.01)
+        }),
+        slo_actions: false,
+        tick_secs: Some(0.002),
+    };
+    let r = stream_serve(engine, &data.test, &cfg).unwrap();
+    obs::set_enabled(false);
+
+    let slo = r.slo.expect("slo summary missing with --slo-target");
+    assert_eq!(slo.total, 6);
+    assert_eq!(slo.misses, 6, "1 ns deadline: every session misses");
+    assert!(slo.alerts >= 1, "sustained misses must fire a burn-rate alert");
+    let journal = &r.obs.as_ref().unwrap().journal;
+    assert!(
+        journal.iter().any(|e| e.kind == EventKind::SloAlert && e.shard == NO_SHARD),
+        "rising edge must be journaled as slo_alert"
+    );
+
+    let replay = Replay::from_jsonl(&std::fs::read_to_string(&mpath).unwrap()).unwrap();
+    assert_eq!(replay.gap_missed, 0);
+    let live = std::fs::read_to_string(&tpath).unwrap();
+    let re = format!("{}\n", replay.chrome_trace().to_string_compact());
+    assert_eq!(live, re, "offline re-emission must match the live --trace-out bytes");
+    std::fs::remove_file(&mpath).ok();
+    std::fs::remove_file(&tpath).ok();
 }

@@ -37,7 +37,7 @@ fn serve_at(shards: usize, engine: Arc<Engine>, utts: &Dataset) -> StreamServeRe
         chunk_frames: 16,
         shards,
         seed: 11,
-        metrics_out: None,
+        ..Default::default()
     };
     stream_serve(engine, &utts.test, &cfg).unwrap()
 }
@@ -150,7 +150,7 @@ fn sharded_ladder_serves_every_session_with_per_shard_controllers() {
             clear_ticks: 2,
             window: 32,
         },
-        metrics_out: None,
+        ..Default::default()
     };
     let r = ladder_serve(&reg, &data.test, &cfg).unwrap();
     assert_eq!(r.sessions, 12);

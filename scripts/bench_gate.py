@@ -47,8 +47,8 @@ def main(argv):
         print(f"bench gate: no baseline at {baseline_path}; PASS (nothing to gate)")
         return 0
     if baseline.get("pending"):
-        print("bench gate: baseline is pending (run scripts/bench_snapshot.sh on real "
-              "hardware to arm the gate); PASS with warning")
+        print("bench gate: BENCH GATE UNARMED — baseline is pending (run "
+              "scripts/bench_snapshot.sh on real hardware to arm it); PASS with warning")
         return 0
 
     current = load(current_path)

@@ -41,3 +41,23 @@ if command -v python3 >/dev/null 2>&1; then
   done < "$spans_out"
 fi
 echo "wrote span snapshot to $spans_out"
+
+# Trace-export overhead row: the same obs-on serve with and without
+# --trace-out, wall-timed, so the cost of assembling and writing the
+# Perfetto trace is tracked next to the kernel baseline (lower is
+# better; *_secs scalars are gated by scripts/bench_gate.py).
+trace_out="$(cd .. && pwd)/BENCH_trace.json"
+echo "==> trace-export overhead (obs on vs obs + --trace-out)"
+t0=$(date +%s.%N)
+cargo run --release -q "$@" -- stream-serve --utts 8 --rate 1000 --pool 2 --chunk 8 \
+  --seed 7 --obs on > /dev/null
+t1=$(date +%s.%N)
+cargo run --release -q "$@" -- stream-serve --utts 8 --rate 1000 --pool 2 --chunk 8 \
+  --seed 7 --obs on --trace-out "$tmp.trace" > /dev/null
+t2=$(date +%s.%N)
+awk -v a="$t0" -v b="$t1" -v c="$t2" 'BEGIN {
+  printf "{\"kind\": \"trace-export-overhead\", \"obs_secs\": %.6f, \"obs_trace_secs\": %.6f, \"trace_overhead_secs\": %.6f}\n",
+    b - a, c - b, (c - b) - (b - a)
+}' > "$trace_out"
+rm -f "$tmp.trace"
+echo "BENCH trace-export overhead: $(cat "$trace_out")"

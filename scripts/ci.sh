@@ -150,6 +150,30 @@ echo "$report" | grep -q "tier 0" || { echo "ladder smoke: per-tier report missi
 echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missing tier 1"; exit 1; }
 echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
 
+echo "==> trace/SLO smoke: --trace-out + --slo-target + obs-report round trip"
+# A fixed-tick ladder serve writes both a Perfetto trace and a JSONL;
+# obs-report must replay the JSONL into the same summary tables and
+# re-emit the identical trace bytes from the JSONL alone (DESIGN.md §10).
+cargo run --release -q -- stream-serve --ladder "$ldir" --utts 8 --rate 1000 \
+  --pool 2 --chunk 8 --seed 7 --obs on --fixed-tick-ms 4 --slo-target 250 \
+  --metrics-out "$ndir/slo.jsonl" --trace-out "$ndir/trace.json" > "$ndir/slo.log"
+grep -q "SLO:" "$ndir/slo.log" \
+  || { echo "trace smoke: serve report missing the SLO line"; exit 1; }
+test -s "$ndir/trace.json" || { echo "trace smoke: --trace-out wrote nothing"; exit 1; }
+grep -q '"ph":"X"' "$ndir/trace.json" \
+  || { echo "trace smoke: trace carries no pump-block slices"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m json.tool "$ndir/trace.json" >/dev/null \
+    || { echo "trace smoke: trace is not valid JSON"; exit 1; }
+fi
+orep="$(cargo run --release -q -- obs-report "$ndir/slo.jsonl" --trace-out "$ndir/trace2.json")"
+echo "$orep" | grep -q "SLO attainment" \
+  || { echo "trace smoke: obs-report missing the SLO attainment table"; exit 1; }
+echo "$orep" | grep -q "self-time" \
+  || { echo "trace smoke: obs-report missing the self-time breakdown"; exit 1; }
+cmp -s "$ndir/trace.json" "$ndir/trace2.json" \
+  || { echo "trace smoke: obs-report re-emission differs from the live trace"; exit 1; }
+
 echo "==> bench smoke (1 iteration each)"
 # so the emit checks below cannot pass on stale files
 rm -f BENCH_gemm.json BENCH_train.json BENCH_shard.json
@@ -184,7 +208,7 @@ if command -v python3 >/dev/null 2>&1; then
   python3 ../scripts/bench_gate.py ../BENCH_BASELINE.json BENCH_gemm.json \
     || { echo "bench gate failed"; exit 1; }
 else
-  echo "python3 unavailable; skipping bench gate"
+  echo "BENCH GATE UNARMED: python3 unavailable; skipping bench gate"
 fi
 
 echo "CI OK"
