@@ -1,0 +1,164 @@
+//! Bench: confidence-gated cascade decoding (DESIGN.md §11) — the
+//! CER-vs-effective-FLOPs curve per rung pair, persisted to
+//! `BENCH_cascade.json` (path overridable via `BENCH_CASCADE_JSON`).
+//!
+//! Each rung pair shares one synthetic seed, so the unfactored conv
+//! frontend is byte-identical across the pair and escalated blocks
+//! reuse it (the `shared_frontend` fast path).  Per threshold the sweep
+//! decodes the synthetic corpus through the cascade pool and records
+//! the escalation rate, the analytic effective GFLOP/frame
+//! (`low + rate * (high - shared frontend)` — the same accounting the
+//! serve reports print), corpus CER against the reference texts, and
+//! the fidelity gap (CER of the cascade transcript against the pure
+//! high-rung transcript).  `matched_cer_flops_reduction` is the best
+//! `high / effective` ratio over sweep points whose CER matches the
+//! pure high rung — the ISSUE-10 acceptance number (>= 1.5 expected).
+
+#[path = "harness.rs"]
+mod harness;
+use harness::{bench, header};
+
+use std::sync::Arc;
+
+use tracenorm::data::{CorpusSpec, Dataset, Utterance};
+use tracenorm::decoder::cer;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::jsonx::Json;
+use tracenorm::stream::{demo_dims, synthetic_params, CascadeCfg, PoolStats, StreamPool};
+
+/// A rung engine at `frac` from the seed shared by every rung.
+fn engine_at(frac: f64) -> Arc<Engine> {
+    let dims = demo_dims();
+    let p = synthetic_params(&dims, frac, 5);
+    Arc::new(Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap())
+}
+
+/// Pooled decode of the whole corpus (4 concurrent sessions, ragged
+/// chunk pushes); returns per-utterance transcripts and the gate stats.
+fn decode_corpus(
+    low: &Arc<Engine>,
+    cascade: Option<&CascadeCfg>,
+    utts: &[Utterance],
+) -> (Vec<String>, PoolStats) {
+    let feat = low.feat_dim();
+    let mut pool = StreamPool::new(low.clone(), 4);
+    if let Some(cc) = cascade {
+        pool.set_cascade(cc.clone()).unwrap();
+    }
+    let mut out = vec![String::new(); utts.len()];
+    let mut bd = Breakdown::default();
+    for group in (0..utts.len()).collect::<Vec<usize>>().chunks(4) {
+        let ids: Vec<(tracenorm::stream::StreamId, usize)> =
+            group.iter().map(|&i| (pool.open().unwrap(), i)).collect();
+        let mut off = vec![0usize; ids.len()];
+        let mut open = ids.len();
+        while open > 0 {
+            for (k, &(id, i)) in ids.iter().enumerate() {
+                if off[k] == usize::MAX {
+                    continue;
+                }
+                let data = utts[i].feats.data();
+                let end = (off[k] + 32 * feat).min(data.len());
+                if off[k] < end {
+                    pool.push_frames(id, &data[off[k]..end]).unwrap();
+                    off[k] = end;
+                }
+                if off[k] >= data.len() {
+                    out[i] = pool.close(id, &mut bd).unwrap().transcript;
+                    off[k] = usize::MAX;
+                    open -= 1;
+                }
+            }
+            pool.pump(&mut bd).unwrap();
+        }
+    }
+    (out, pool.stats)
+}
+
+fn mean_cer(hyps: &[String], refs: &[&str]) -> f64 {
+    let sum: f64 = hyps.iter().zip(refs).map(|(h, r)| cer(h, r)).sum();
+    sum / hyps.len() as f64
+}
+
+fn main() {
+    let n = 8;
+    let data = Dataset::generate(CorpusSpec::standard(5), 0, 0, n);
+    let texts: Vec<&str> = data.test.iter().map(|u| u.text.as_str()).collect();
+    let pairs = [(0.125, 0.5), (0.125, 0.75)];
+    let thresholds = [0.0, 1e-3, 0.01, 0.1, 0.3, 1.0, f64::INFINITY];
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut best_reduction = 0.0f64;
+    for (lf, hf) in pairs {
+        let low = engine_at(lf);
+        let high = engine_at(hf);
+        let stride = low.total_stride() as f64;
+        let gflops = |macs: u64| 2.0 * macs as f64 / stride / 1e9;
+        let gl = gflops(low.macs_per_step());
+        let gh = gflops(high.macs_per_step());
+        // escalated blocks reuse the low rung's frontend activations
+        let g_esc = gflops(high.macs_per_step() - high.frontend_macs_per_step());
+
+        header(&format!(
+            "cascade {lf}:{hf} — low {gl:.4} / high {gh:.4} GFLOP/frame, {n} utts"
+        ));
+        let (high_hyps, _) = decode_corpus(&high, None, &data.test);
+        let cer_high = mean_cer(&high_hyps, &texts);
+        let high_refs: Vec<&str> = high_hyps.iter().map(String::as_str).collect();
+
+        for t in thresholds {
+            let cc = CascadeCfg { high: high.clone(), threshold: t, shared_frontend: true };
+            let mut last: Option<(Vec<String>, PoolStats)> = None;
+            let secs = bench(&format!("decode corpus @ threshold {t}"), 250, || {
+                last = Some(decode_corpus(&low, Some(&cc), &data.test));
+            });
+            let (hyps, stats) = last.unwrap();
+            let rate = stats.escalation_rate();
+            let g_eff = gl + rate * g_esc;
+            let c = mean_cer(&hyps, &texts);
+            let gap = mean_cer(&hyps, &high_refs);
+            // "matched CER": no worse than the pure high rung on the
+            // corpus (small slack for ties), or transcript-identical
+            if c <= cer_high + 0.005 || gap == 0.0 {
+                best_reduction = best_reduction.max(gh / g_eff);
+            }
+            println!(
+                "    esc {:5.1}%  eff {g_eff:.4} GF/frame ({:.2}x below high)  \
+                 cer {c:.3} (high {cer_high:.3})  gap-vs-high {gap:.3}",
+                rate * 100.0,
+                gh / g_eff
+            );
+            results.push(Json::obj(vec![
+                ("pair", Json::str(format!("{lf}:{hf}"))),
+                // inf is not representable in strict JSON
+                ("threshold", Json::str(t.to_string())),
+                ("escalation_rate", Json::num(rate)),
+                ("stream_blocks", Json::num(stats.stream_blocks as f64)),
+                ("escalated_blocks", Json::num(stats.escalated_blocks as f64)),
+                ("gflops_low", Json::num(gl)),
+                ("gflops_high", Json::num(gh)),
+                ("gflops_effective", Json::num(g_eff)),
+                ("flops_reduction_vs_high", Json::num(gh / g_eff)),
+                ("cer", Json::num(c)),
+                ("cer_high_rung", Json::num(cer_high)),
+                ("cer_gap_vs_high", Json::num(gap)),
+                ("corpus_secs", Json::num(secs)),
+            ]));
+        }
+    }
+
+    println!(
+        "\nbest effective-FLOPs reduction at matched CER: {best_reduction:.2}x \
+         (acceptance floor 1.5x)"
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::str("cascade")),
+        ("utts", Json::num(n as f64)),
+        ("matched_cer_flops_reduction", Json::num(best_reduction)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path =
+        std::env::var("BENCH_CASCADE_JSON").unwrap_or_else(|_| "BENCH_cascade.json".into());
+    std::fs::write(&path, report.to_string_pretty()).expect("write BENCH_cascade.json");
+    println!("wrote {path}");
+}

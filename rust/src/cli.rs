@@ -75,12 +75,26 @@
 //!                                admissions / pressure the controllers)
 //!                                  --fixed-tick-ms F (deterministic
 //!                                simulated clock: byte-identical traces)
+//!                                  --cascade LOWFRAC:HIGHFRAC
+//!                                (confidence-gated cascade over two
+//!                                synthetic rank fractions: blocks decode
+//!                                on the cheap LOW rung and re-run on HIGH
+//!                                only when worst-frame confidence breaches
+//!                                the threshold — DESIGN.md §11)
+//!                                  --escalate-threshold T (0 is bit-
+//!                                identical to pure LOW, inf to pure HIGH)
 //!                                with --ladder DIR: adaptive-fidelity
 //!                                serving over a built rank ladder, with a
 //!                                synthetic load ramp, per-shard fidelity
 //!                                controllers and a per-tier report
 //!                                  --ladder DIR --ramp-utts N --ramp-rate F
 //!                                  --target-p99-ms F
+//!                                  --cascade LOW:HIGH (rung tags like
+//!                                r0250:r0750 or tier indices; sessions on
+//!                                the LOW tier escalate breached blocks to
+//!                                HIGH, and the fidelity controllers steer
+//!                                the threshold under SLO pressure before
+//!                                shifting admission tiers)
 //!   ladder-build                 offline rank-ladder build: truncated SVD
 //!                                per group at each rank fraction, int8 or
 //!                                packed-int4 quantization (--bits), one
@@ -136,6 +150,7 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                      [--autotune on|off] [--fused-gates on|off] [--obs on|off]
                      [--metrics-out FILE] [--trace-out FILE] [--fixed-tick-ms F]
                      [--slo-target MS] [--slo-budget FRAC] [--slo-actions on|off]
+                     [--cascade LOWFRAC:HIGHFRAC] [--escalate-threshold T]
                      (--shards N spreads sessions over N worker threads; --shards 1,
                       the default, is bit-identical to the unsharded serving path;
                       --bits 4 serves packed sub-byte weights — int4 nibbles with
@@ -152,15 +167,24 @@ pub const USAGE: &str = "usage: repro <info|experiment|train|two-stage|transcrib
                       byte-identical run to run;
                       --slo-target declares a p99/availability SLO evaluated with
                       multi-window burn-rate alerts; --slo-actions on (default off)
-                      lets a breach shed admissions / pressure the controllers)
+                      lets a breach shed admissions / pressure the controllers;
+                      --cascade LOWFRAC:HIGHFRAC decodes every block on the cheap
+                      LOW rank fraction and re-runs only low-confidence blocks on
+                      HIGH from a block-boundary checkpoint — --escalate-threshold 0
+                      is bit-identical to pure LOW, inf to pure HIGH)
   repro stream-serve --ladder DIR [--shards N] [--pool N] [--utts N] [--chunk N] [--rate F]
                      [--ramp-utts N] [--ramp-rate F] [--target-p99-ms F] [--seed N] [--json]
                      [--backend scalar|blocked|simd|auto] [--autotune on|off]
                      [--fused-gates on|off] [--obs on|off] [--metrics-out FILE]
                      [--trace-out FILE] [--fixed-tick-ms F] [--slo-target MS]
                      [--slo-budget FRAC] [--slo-actions on|off]
+                     [--cascade LOW:HIGH] [--escalate-threshold T]
                      (adaptive-fidelity serving over a built rank ladder; per-shard
-                      fidelity controllers with a merged, shard-tagged shift log)
+                      fidelity controllers with a merged, shard-tagged shift log;
+                      --cascade names two rungs by tag or tier index — LOW-tier
+                      sessions escalate low-confidence blocks to the HIGH rung, and
+                      controllers cut the threshold under SLO pressure before
+                      downshifting admission tiers)
   repro ladder-build --out DIR [--fracs F,F,...] [--bits 8|4] [--load CKPT] [--seed N]
                      (offline SVD-truncate + int8/int4-quantize, one artifact per rung)
   repro obs-report FILE.jsonl [--slo-target MS] [--slo-budget FRAC] [--trace-out FILE]

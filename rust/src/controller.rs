@@ -81,6 +81,16 @@ pub struct ShiftEvent {
 }
 
 /// Routes new streams to a fidelity tier based on injected telemetry.
+///
+/// When a cascade is active ([`FidelityController::set_cascade_knob`])
+/// the controller gains a second, cheaper actuator: before spending a
+/// pressure dwell on an admission-tier downshift it halves the cascade
+/// escalation threshold (fewer blocks re-run on the high rung — an
+/// immediate FLOPs cut that degrades only low-confidence frames), and on
+/// drain it restores the threshold toward its base before upshifting
+/// tiers.  Tier shifts only happen once the threshold governor is
+/// exhausted, so cascade serving sheds load in finer steps than the
+/// ladder alone.
 #[derive(Debug)]
 pub struct FidelityController {
     cfg: ControllerConfig,
@@ -95,6 +105,16 @@ pub struct FidelityController {
     pub downshifts: u64,
     pub upshifts: u64,
     shifts: Vec<ShiftEvent>,
+    /// configured cascade escalation threshold (None = no cascade knob)
+    cascade_base: Option<f64>,
+    /// governor floor: the threshold is never cut below base/8
+    cascade_floor: f64,
+    /// live threshold value the serve loop propagates to its pools
+    cascade_current: f64,
+    /// threshold halvings taken under pressure (report counter)
+    pub threshold_cuts: u64,
+    /// threshold doublings taken on drain (report counter)
+    pub threshold_restores: u64,
 }
 
 impl FidelityController {
@@ -138,7 +158,27 @@ impl FidelityController {
             downshifts: 0,
             upshifts: 0,
             shifts: Vec::new(),
+            cascade_base: None,
+            cascade_floor: 0.0,
+            cascade_current: 0.0,
+            threshold_cuts: 0,
+            threshold_restores: 0,
         })
+    }
+
+    /// Arm the escalation-threshold governor with the serve's configured
+    /// `--escalate-threshold` as its base.  Until this is called the
+    /// controller behaves exactly as before the cascade existed.
+    pub fn set_cascade_knob(&mut self, base: f64) {
+        self.cascade_base = Some(base);
+        self.cascade_floor = base / 8.0;
+        self.cascade_current = base;
+    }
+
+    /// Live escalation threshold the serve loop should hand its pools
+    /// this tick (None when no cascade knob is armed).
+    pub fn escalation_threshold(&self) -> Option<f64> {
+        self.cascade_base.map(|_| self.cascade_current)
     }
 
     /// Tier new streams should be admitted at right now.
@@ -200,32 +240,55 @@ impl FidelityController {
         if pressured {
             self.clear = 0;
             self.pressure = self.pressure.saturating_add(1);
-            if self.pressure >= self.cfg.breach_ticks && self.current + 1 < self.tiers {
-                self.pressure = 0;
-                self.current += 1;
-                self.downshifts += 1;
-                // the lower tier's history predates this overload; let it
-                // earn fresh samples instead of inheriting stale ones
-                self.windows[self.current].clear();
-                let ev =
-                    ShiftEvent { clock, tier: self.current, down: true, shard: self.shard };
-                self.shifts.push(ev);
-                return Some(ev);
+            if self.pressure >= self.cfg.breach_ticks {
+                // the threshold governor absorbs pressure first: halving
+                // the escalation threshold cuts high-rung re-runs now,
+                // without moving any session's admission tier
+                if self.cascade_base.is_some() && self.cascade_current > self.cascade_floor {
+                    self.pressure = 0;
+                    self.cascade_current = (self.cascade_current / 2.0).max(self.cascade_floor);
+                    self.threshold_cuts += 1;
+                    return None;
+                }
+                if self.current + 1 < self.tiers {
+                    self.pressure = 0;
+                    self.current += 1;
+                    self.downshifts += 1;
+                    // the lower tier's history predates this overload; let
+                    // it earn fresh samples instead of inheriting stale ones
+                    self.windows[self.current].clear();
+                    let ev =
+                        ShiftEvent { clock, tier: self.current, down: true, shard: self.shard };
+                    self.shifts.push(ev);
+                    return Some(ev);
+                }
             }
         } else if drained {
             self.pressure = 0;
             self.clear = self.clear.saturating_add(1);
-            if self.clear >= self.cfg.clear_ticks && self.current > 0 {
-                self.clear = 0;
-                self.current -= 1;
-                self.upshifts += 1;
-                // stale breached samples from the overload era must not
-                // immediately re-trigger a downshift
-                self.windows[self.current].clear();
-                let ev =
-                    ShiftEvent { clock, tier: self.current, down: false, shard: self.shard };
-                self.shifts.push(ev);
-                return Some(ev);
+            if self.clear >= self.cfg.clear_ticks {
+                // undo threshold cuts before upshifting tiers: restoring
+                // escalation fidelity is the cheaper recovery step
+                if let Some(base) = self.cascade_base {
+                    if self.cascade_current < base {
+                        self.clear = 0;
+                        self.cascade_current = (self.cascade_current * 2.0).min(base);
+                        self.threshold_restores += 1;
+                        return None;
+                    }
+                }
+                if self.current > 0 {
+                    self.clear = 0;
+                    self.current -= 1;
+                    self.upshifts += 1;
+                    // stale breached samples from the overload era must not
+                    // immediately re-trigger a downshift
+                    self.windows[self.current].clear();
+                    let ev =
+                        ShiftEvent { clock, tier: self.current, down: false, shard: self.shard };
+                    self.shifts.push(ev);
+                    return Some(ev);
+                }
             }
         } else {
             // dead band: hold, reset both dwell counters
@@ -424,6 +487,66 @@ mod tests {
             c.observe(0.0, 1.0);
         }
         assert_eq!(c.shifts()[0].shard, 0);
+    }
+
+    #[test]
+    fn threshold_governor_absorbs_pressure_before_tier_shifts() {
+        let mut ctl = FidelityController::new(2, cfg()).unwrap();
+        ctl.set_cascade_knob(4.0);
+        assert_eq!(ctl.escalation_threshold(), Some(4.0));
+        // each pressure dwell halves the threshold instead of downshifting
+        for _ in 0..3 {
+            assert!(ctl.observe(0.0, 1.0).is_none());
+        }
+        assert_eq!(ctl.escalation_threshold(), Some(2.0));
+        assert_eq!(ctl.tier(), 0, "threshold cut absorbed the dwell");
+        for _ in 0..6 {
+            ctl.observe(0.1, 1.0);
+        }
+        // base/2 -> base/4 -> base/8 floor reached
+        assert_eq!(ctl.escalation_threshold(), Some(0.5));
+        assert_eq!(ctl.threshold_cuts, 3);
+        assert_eq!(ctl.tier(), 0);
+        // governor exhausted: the next dwell moves the admission tier
+        for _ in 0..3 {
+            ctl.observe(0.2, 1.0);
+        }
+        assert_eq!(ctl.tier(), 1);
+        assert_eq!(ctl.downshifts, 1);
+        // drain: threshold restores toward base before any upshift
+        for _ in 0..4 {
+            assert!(ctl.observe(1.0, 0.1).is_none());
+        }
+        assert_eq!(ctl.escalation_threshold(), Some(1.0));
+        assert_eq!(ctl.tier(), 1, "restore happens before the tier moves");
+        for _ in 0..8 {
+            ctl.observe(2.0, 0.1);
+        }
+        assert_eq!(ctl.escalation_threshold(), Some(4.0), "restored to base, never past it");
+        assert_eq!(ctl.threshold_restores, 3);
+        // threshold back at base: the following drain dwell upshifts
+        for _ in 0..4 {
+            ctl.observe(3.0, 0.1);
+        }
+        assert_eq!(ctl.tier(), 0);
+        assert_eq!(ctl.upshifts, 1);
+    }
+
+    #[test]
+    fn unarmed_knob_leaves_the_state_machine_untouched() {
+        let mut a = FidelityController::new(3, cfg()).unwrap();
+        let mut b = FidelityController::new(3, cfg()).unwrap();
+        b.set_cascade_knob(0.0); // threshold 0: floor == base, governor is a no-op
+        assert_eq!(a.escalation_threshold(), None);
+        let occs = [1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1, 0.1];
+        for (i, &occ) in occs.iter().enumerate() {
+            let x = a.observe(i as f64, occ);
+            let y = b.observe(i as f64, occ);
+            assert_eq!(x.map(|e| (e.tier, e.down)), y.map(|e| (e.tier, e.down)));
+        }
+        assert_eq!(a.tier(), b.tier());
+        assert_eq!(b.threshold_cuts + b.threshold_restores, 0);
+        assert_eq!(b.escalation_threshold(), Some(0.0));
     }
 
     #[test]

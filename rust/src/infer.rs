@@ -658,6 +658,10 @@ pub struct Scratch {
     pub(crate) fc_y: Tensor,
     /// log-prob rows of the most recent block (log-softmax in place)
     pub(crate) logp: Tensor,
+    /// block-boundary hidden-state checkpoint (one tensor per GRU layer),
+    /// filled by [`StreamState::snap_checkpoint`] — the cascade decoder's
+    /// rewind target, so escalating a block is a memcpy, not a re-decode
+    pub(crate) ckpt: Vec<Tensor>,
     high_water: usize,
     grow_events: u64,
 }
@@ -682,7 +686,8 @@ impl Scratch {
                 + self.gx.capacity()
                 + self.gh.capacity()
                 + self.fc_y.capacity()
-                + self.logp.capacity())
+                + self.logp.capacity()
+                + self.ckpt.iter().map(|t| t.capacity()).sum::<usize>())
     }
 
     /// Times the arena grew **after** its warmup block — zero in steady
@@ -754,6 +759,33 @@ impl StreamState {
     /// Post-warmup scratch growth events (zero in steady state).
     pub fn scratch_grow_events(&self) -> u64 {
         self.scratch.grow_events()
+    }
+
+    /// Snapshot the carried hidden state into the scratch arena's
+    /// checkpoint buffers (the cascade decoder calls this at every block
+    /// boundary).  The buffers are allocated on the first call and reused
+    /// verbatim from then on, so steady-state snapping is a memcpy.
+    pub fn snap_checkpoint(&mut self) {
+        if self.scratch.ckpt.len() != self.h.len() {
+            self.scratch.ckpt = self.h.iter().map(|t| Tensor::zeros(t.shape())).collect();
+        }
+        for (c, h) in self.scratch.ckpt.iter_mut().zip(&self.h) {
+            c.data_mut().copy_from_slice(h.data());
+        }
+    }
+
+    /// Restore the hidden state from the last [`Self::snap_checkpoint`]
+    /// — the cascade rewind: a memcpy per layer, never a re-decode.
+    /// Panics if no checkpoint was ever snapped (programming error).
+    pub fn rewind_to_checkpoint(&mut self) {
+        assert_eq!(
+            self.scratch.ckpt.len(),
+            self.h.len(),
+            "rewind_to_checkpoint without a prior snap_checkpoint"
+        );
+        for (h, c) in self.h.iter_mut().zip(&self.scratch.ckpt) {
+            h.data_mut().copy_from_slice(c.data());
+        }
     }
 }
 
@@ -1050,6 +1082,20 @@ impl Engine {
         macs + self.fc.macs(1) + self.out.macs(1)
     }
 
+    /// MACs per output step spent in the conv frontend alone.  The
+    /// frontend is never factored (§3.2), so when a cascade rung pair
+    /// shares it the escalated re-run skips exactly this many MACs —
+    /// the effective-FLOPs accounting in `serve.rs` subtracts it.
+    pub fn frontend_macs_per_step(&self) -> u64 {
+        let mut macs = 0u64;
+        let mut t = self.total_stride as u64;
+        for c in &self.conv {
+            t /= c.context as u64;
+            macs += c.op.macs(1) * t;
+        }
+        macs
+    }
+
     /// Buffer raw feature frames for a stream without processing them
     /// (pairs with [`Engine::pump_block`]; [`Engine::stream`] is the
     /// convenience wrapper over both).
@@ -1263,7 +1309,10 @@ impl Engine {
     /// The block executor: run the staged primitives over the chunk
     /// staged in `scratch.chunk`, leaving log-prob rows in
     /// `scratch.logp`.  Allocation-free once the arena is warm.
-    fn run_chunk(
+    /// `pub(crate)` so the cascade decoder ([`crate::stream`]) can re-run
+    /// the chunk still staged in the arena through a higher rung after a
+    /// checkpoint rewind.
+    pub(crate) fn run_chunk(
         &self,
         h: &mut [Tensor],
         scratch: &mut Scratch,
@@ -1355,6 +1404,27 @@ impl Engine {
     pub fn block_raw_len(&self) -> usize {
         self.time_batch * self.step_raw_len()
     }
+
+    /// Whether a [`StreamState`] produced by this engine can be driven by
+    /// `other` mid-stream — the cascade pairing contract: identical layer
+    /// map (hidden widths, conv stack shape, head dims) and identical
+    /// time batch, so a block-boundary hidden checkpoint means the same
+    /// thing on both rungs.  Weight precision and rank may differ; that
+    /// is the whole point of the cascade.
+    pub fn state_compatible(&self, other: &Engine) -> bool {
+        self.time_batch == other.time_batch
+            && self.feat_dim == other.feat_dim
+            && self.vocab == other.vocab
+            && self.total_stride == other.total_stride
+            && self.conv.len() == other.conv.len()
+            && self
+                .conv
+                .iter()
+                .zip(&other.conv)
+                .all(|(a, b)| a.context == b.context && a.bias.len() == b.bias.len())
+            && self.grus.len() == other.grus.len()
+            && self.grus.iter().zip(&other.grus).all(|(a, b)| a.hidden == b.hidden)
+    }
 }
 
 // Compile-time Send+Sync audit (DESIGN.md §9): the sharded runtime
@@ -1396,6 +1466,45 @@ fn concat_gates(params: &ParamSet, base: &str) -> Result<Tensor> {
 #[inline]
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+/// Per-frame decode confidence from one already-materialized log-softmax
+/// row — no extra softmax pass, just a scan: the top-2 log-prob margin
+/// scaled by one minus the normalized posterior entropy,
+/// `(lp₁ - lp₂) · (1 - H/ln V)`.  Both factors are non-negative, so the
+/// score is ≥ 0 with equality only at a uniform posterior; a strict
+/// `< threshold` comparison therefore never escalates at threshold 0 and
+/// always escalates at threshold ∞ — the cascade's bit-identity
+/// endpoints (DESIGN.md §11).
+pub fn frame_confidence(row: &[f32]) -> f64 {
+    if row.len() < 2 {
+        return f64::INFINITY;
+    }
+    let (mut lp1, mut lp2) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+    let mut entropy = 0.0f64;
+    for &v in row {
+        let lp = v as f64;
+        if lp > lp1 {
+            lp2 = lp1;
+            lp1 = lp;
+        } else if lp > lp2 {
+            lp2 = lp;
+        }
+        // -p·ln p with p = exp(lp); exp(-inf) rows contribute 0
+        let p = lp.exp();
+        if p > 0.0 {
+            entropy -= p * lp;
+        }
+    }
+    let norm = (entropy / (row.len() as f64).ln()).clamp(0.0, 1.0);
+    (lp1 - lp2) * (1.0 - norm)
+}
+
+/// Worst-frame confidence over a block of log-prob rows — the cascade's
+/// escalation signal: a block re-runs on the high rung iff this value is
+/// strictly below the escalation threshold.
+pub fn block_confidence(logp: &Tensor) -> f64 {
+    (0..logp.rows()).map(|r| frame_confidence(logp.row(r))).fold(f64::INFINITY, f64::min)
 }
 
 /// In-place log-softmax over one logits row (same arithmetic as the
@@ -1786,5 +1895,72 @@ mod tests {
         }
         assert_eq!(state.scratch_footprint(), fp, "steady state must not grow the arena");
         assert_eq!(state.scratch_grow_events(), 0);
+    }
+
+    #[test]
+    fn frame_confidence_orders_posteriors() {
+        // a near-one-hot log-softmax row is maximally confident
+        let mut peaked = vec![-20.0f32; 10];
+        peaked[3] = -1e-6;
+        // uniform posterior: zero margin and maximal entropy
+        let uniform = vec![-(10f32.ln()); 10];
+        let hi = frame_confidence(&peaked);
+        let lo = frame_confidence(&uniform);
+        assert!(hi > lo, "peaked ({hi}) must beat uniform ({lo})");
+        assert!(lo.abs() < 1e-6, "uniform confidence is ~0, got {lo}");
+        assert!(hi > 1.0, "near-one-hot margin dominates, got {hi}");
+        // degenerate single-symbol rows never escalate
+        assert_eq!(frame_confidence(&[0.0]), f64::INFINITY);
+    }
+
+    #[test]
+    fn block_confidence_is_worst_frame() {
+        let mut peaked = vec![-20.0f32; 5];
+        peaked[0] = -1e-6;
+        let uniform = vec![-(5f32.ln()); 5];
+        let t = Tensor::new(&[2, 5], [peaked.clone(), uniform.clone()].concat()).unwrap();
+        let worst = block_confidence(&t);
+        assert!((worst - frame_confidence(&uniform)).abs() < 1e-12);
+        assert!(worst < frame_confidence(&peaked));
+    }
+
+    #[test]
+    fn checkpoint_rewind_restores_hidden_state() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 31);
+        let eng = Engine::from_params(&dims, "partial", &p, Precision::Int8, 2).unwrap();
+        let mut state = eng.new_state();
+        let mut bd = Breakdown::default();
+        let mut rng = Pcg64::seeded(32);
+        let block = eng.block_raw_len();
+        let feats = Tensor::randn(&[2 * block / 8, 8], 0.7, &mut rng);
+        // advance one block so h is non-trivial, then snap
+        eng.buffer_frames(&mut state, feats.data(), &mut bd);
+        assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+        state.snap_checkpoint();
+        let snapped: Vec<Vec<f32>> = state.h.iter().map(|t| t.data().to_vec()).collect();
+        // advance again (mutates h), rewind, and the snap must be back
+        assert!(eng.pump_block(&mut state, &mut bd).unwrap());
+        assert!(state.h.iter().zip(&snapped).any(|(h, s)| h.data() != s.as_slice()));
+        state.rewind_to_checkpoint();
+        for (h, s) in state.h.iter().zip(&snapped) {
+            assert_eq!(h.data(), s.as_slice(), "rewind must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn state_compatible_matches_layer_maps() {
+        let dims = tiny_dims();
+        let p = tiny_params(&dims, true, 33);
+        let a = Engine::from_params(&dims, "partial", &p, Precision::Int8, 2).unwrap();
+        let b = Engine::from_params(&dims, "partial", &p, Precision::F32, 2).unwrap();
+        assert!(a.state_compatible(&b), "precision may differ across rungs");
+        let c = Engine::from_params(&dims, "partial", &p, Precision::Int8, 4).unwrap();
+        assert!(!a.state_compatible(&c), "time batch must agree");
+        let mut dims2 = tiny_dims();
+        dims2.gru_dims[0] += 2;
+        let p2 = tiny_params(&dims2, true, 33);
+        let d = Engine::from_params(&dims2, "partial", &p2, Precision::Int8, 2).unwrap();
+        assert!(!a.state_compatible(&d), "hidden widths must agree");
     }
 }

@@ -22,8 +22,10 @@ use tracenorm::obs::trace::Replay;
 use tracenorm::obs::{spans, MetricsExporter, SloConfig, SloEngine};
 use tracenorm::registry::{ladder_build_with_bits, Registry};
 use tracenorm::runtime::{BatchGeom, ModelDims, Runtime};
-use tracenorm::serve::{ladder_serve, stream_serve, LadderServeConfig, StreamServeConfig};
-use tracenorm::stream::{demo_dims, synthetic_params};
+use tracenorm::serve::{
+    ladder_serve, stream_serve_cascade, CascadePlan, LadderServeConfig, StreamServeConfig,
+};
+use tracenorm::stream::{demo_dims, synthetic_params, CascadeCfg};
 use tracenorm::train::{
     eval_name, native_mini_dims, two_stage, two_stage_native, EpochLog, Evaluator,
     NativeEvaluator, NativeTrainer, Stage2Lr, TrainOpts, Trainer, NATIVE_RANK_LADDER,
@@ -723,12 +725,13 @@ fn ladder_build_cmd(cli: &Cli) -> Result<()> {
     println!("ladder written to {out}/ ({} rungs, int{bits} weights):", rungs.len());
     for (tier, r) in rungs.iter().enumerate() {
         println!(
-            "  tier {tier}  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB",
+            "  tier {tier}  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB  {:.3} GFLOP/frame",
             r.tag,
             r.rank_frac,
             r.bits,
             r.params,
-            r.bytes / 1024
+            r.bytes / 1024,
+            r.gflops_per_frame
         );
         for (base, nu) in &r.nu {
             println!("      nu({base}) = {nu:.3}");
@@ -778,15 +781,34 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
         );
         for v in reg.variants() {
             println!(
-                "  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB",
+                "  {}  rank_frac {:.3}  bits {}  params {}  weights {} KB  {:.3} GFLOP/frame",
                 v.info.tag,
                 v.info.rank_frac,
                 v.info.bits,
                 v.info.params,
-                v.info.bytes / 1024
+                v.info.bytes / 1024,
+                v.info.gflops_per_frame
             );
         }
     }
+    let cascade = match cli.cfg.raw("cascade") {
+        Some(spec) => {
+            let (low_tier, high_tier) = reg.cascade_pair(spec)?;
+            Some(CascadePlan {
+                low_tier,
+                high_tier,
+                threshold: cli.flag_f64("escalate-threshold", 1.0),
+            })
+        }
+        None => {
+            if cli.cfg.raw("escalate-threshold").is_some() {
+                return Err(tracenorm::Error::Config(
+                    "--escalate-threshold needs --cascade LOW:HIGH".into(),
+                ));
+            }
+            None
+        }
+    };
     let (slo, slo_actions) = slo_flags(cli)?;
     let cfg = LadderServeConfig {
         base_rate: cli.flag_f64("rate", 4.0),
@@ -805,6 +827,7 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
         slo,
         slo_actions,
         tick_secs: fixed_tick_flag(cli),
+        cascade,
     };
     let data = Dataset::generate(CorpusSpec::standard(seed), 0, 0, n);
     let r = ladder_serve(&reg, &data.test, &cfg)?;
@@ -820,11 +843,12 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
     println!("per-tier report:");
     for t in &r.tiers {
         println!(
-            "  tier {}  {}  rank {:.3}  bits {}  sessions {:>3}  p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
+            "  tier {}  {}  rank {:.3}  bits {}  {:.3} GF/frame  sessions {:>3}  p50 {:>7.1} ms  p95 {:>7.1} ms  p99 {:>7.1} ms  occ mean {:.2}",
             t.tier,
             t.tag,
             t.rank_frac,
             t.bits,
+            t.gflops_per_frame,
             t.sessions,
             t.latency.p50 * 1e3,
             t.latency.p95 * 1e3,
@@ -844,6 +868,26 @@ fn ladder_serve_cmd(cli: &Cli, dir: &str) -> Result<()> {
                 s.occupancy.mean()
             );
         }
+    }
+    if let Some(c) = &r.cascade {
+        println!(
+            "cascade: escalation-rate {:.1}% ({} of {} blocks)  threshold {:.4}",
+            c.escalation_rate * 100.0,
+            c.escalated_blocks,
+            c.stream_blocks,
+            c.threshold
+        );
+        println!(
+            "  effective {:.3} GFLOP/frame  (low {:.3}, high {:.3}, {:.2}x below pure high rung)",
+            c.gflops_effective,
+            c.gflops_low,
+            c.gflops_high,
+            c.gflops_high / c.gflops_effective
+        );
+        println!(
+            "  threshold governor: {} cuts, {} restores",
+            c.threshold_cuts, c.threshold_restores
+        );
     }
     println!("fidelity shifts: {} down, {} up", r.downshifts, r.upshifts);
     for s in &r.shifts {
@@ -894,6 +938,61 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     let time_batch = cli.flag_usize("time-batch", 4);
     let scheme = cli.flag_str("scheme", "partial");
 
+    // `--cascade LOWFRAC:HIGHFRAC` pairs two synthetic rank fractions
+    // built from the same seed, so the unfactored conv frontend is
+    // byte-identical across the pair and escalated blocks reuse it.
+    // Trained weights carry one factorization — cascade those through a
+    // built ladder (`--ladder DIR --cascade LOW:HIGH`) instead.
+    let cascade_fracs = match cli.cfg.raw("cascade") {
+        Some(spec) => {
+            if cli.cfg.raw("load").is_some() {
+                return Err(tracenorm::Error::Config(
+                    "--cascade with trained weights needs a built ladder: \
+                     ladder-build --out DIR, then stream-serve --ladder DIR --cascade LOW:HIGH"
+                        .into(),
+                ));
+            }
+            if cli.cfg.raw("rank-frac").is_some() {
+                return Err(tracenorm::Error::Config(
+                    "--rank-frac conflicts with --cascade LOWFRAC:HIGHFRAC (the pair fixes both rungs)"
+                        .into(),
+                ));
+            }
+            let (ls, hs) = spec.split_once(':').ok_or_else(|| {
+                tracenorm::Error::Config(format!(
+                    "--cascade wants LOWFRAC:HIGHFRAC rank fractions (e.g. 0.25:0.75), got '{spec}'"
+                ))
+            })?;
+            let frac = |s: &str| -> Result<f64> {
+                let f = s.trim().parse::<f64>().map_err(|_| {
+                    tracenorm::Error::Config(format!("bad --cascade rank fraction '{s}'"))
+                })?;
+                if !(f > 0.0 && f <= 1.0) {
+                    return Err(tracenorm::Error::Config(format!(
+                        "--cascade rank fraction {f} out of range (0, 1]"
+                    )));
+                }
+                Ok(f)
+            };
+            let (lf, hf) = (frac(ls)?, frac(hs)?);
+            if lf >= hf {
+                return Err(tracenorm::Error::Config(format!(
+                    "--cascade LOW fraction must be below HIGH ({lf} >= {hf}); \
+                     the low rung is the cheap one"
+                )));
+            }
+            Some((lf, hf))
+        }
+        None => {
+            if cli.cfg.raw("escalate-threshold").is_some() {
+                return Err(tracenorm::Error::Config(
+                    "--escalate-threshold needs --cascade LOW:HIGH".into(),
+                ));
+            }
+            None
+        }
+    };
+
     let (params, dims) = match cli.cfg.raw("load") {
         Some(path) => {
             if !json {
@@ -916,7 +1015,10 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
                 );
             }
             let dims = demo_dims();
-            let p = synthetic_params(&dims, cli.flag_f64("rank-frac", 0.25), seed);
+            let frac = cascade_fracs
+                .map(|(lf, _)| lf)
+                .unwrap_or_else(|| cli.flag_f64("rank-frac", 0.25));
+            let p = synthetic_params(&dims, frac, seed);
             (p, dims)
         }
     };
@@ -927,6 +1029,22 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
             .with_backend(backend_flag(cli)?)?
             .with_fused_gates(fused_gates_flag(cli)?),
     );
+    let cascade = match cascade_fracs {
+        Some((_, hf)) => {
+            let hp = synthetic_params(&dims, hf, seed);
+            let high = Arc::new(
+                Engine::from_params(&dims, &scheme, &hp, precision, time_batch)?
+                    .with_backend(backend_flag(cli)?)?
+                    .with_fused_gates(fused_gates_flag(cli)?),
+            );
+            Some(CascadeCfg {
+                high,
+                threshold: cli.flag_f64("escalate-threshold", 1.0),
+                shared_frontend: true,
+            })
+        }
+        None => None,
+    };
     if !json {
         println!(
             "engine: {:?}, backend {}, fused gates {}, model {} KB, {shards} shard(s) x pool {pool}, arrival rate {rate}/s, chunk {chunk} frames",
@@ -951,7 +1069,7 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
         slo_actions,
         tick_secs: fixed_tick_flag(cli),
     };
-    let r = stream_serve(engine, &data.test, &cfg)?;
+    let r = stream_serve_cascade(engine, cascade, &data.test, &cfg)?;
 
     if json {
         println!("{}", r.to_json().to_string_pretty());
@@ -977,6 +1095,22 @@ fn stream_serve_cmd(cli: &Cli) -> Result<()> {
     );
     for (k, frac) in r.occupancy.buckets() {
         println!("  occ {k}: {:5.1}% of time", frac * 100.0);
+    }
+    if let Some(c) = &r.cascade {
+        println!(
+            "cascade: escalation-rate {:.1}% ({} of {} blocks)  threshold {:.4}",
+            c.escalation_rate * 100.0,
+            c.escalated_blocks,
+            c.stream_blocks,
+            c.threshold
+        );
+        println!(
+            "  effective {:.3} GFLOP/frame  (low {:.3}, high {:.3}, {:.2}x below pure high rung)",
+            c.gflops_effective,
+            c.gflops_low,
+            c.gflops_high,
+            c.gflops_high / c.gflops_effective
+        );
     }
     if r.shards > 1 {
         println!("per-shard report:");

@@ -138,6 +138,29 @@ pub fn total_calls() -> u64 {
     CELLS.iter().map(|c| c.calls.load(Ordering::Relaxed)).sum()
 }
 
+/// Cascade tallies: blocks that went through the confidence gate and
+/// the subset that escalated to the high rung.  Separate from the
+/// kernel-cell grid because the unit is a decode block, not a kernel
+/// dispatch.
+static CASCADE_BLOCKS: AtomicU64 = AtomicU64::new(0);
+static CASCADE_ESCALATED: AtomicU64 = AtomicU64::new(0);
+
+/// Record cascade gate outcomes: `blocks` low-rung blocks scored, of
+/// which `escalated` breached the threshold and re-ran on the high rung.
+#[inline]
+pub fn record_cascade(blocks: u64, escalated: u64) {
+    CASCADE_BLOCKS.fetch_add(blocks, Ordering::Relaxed);
+    CASCADE_ESCALATED.fetch_add(escalated, Ordering::Relaxed);
+}
+
+/// `(blocks_scored, blocks_escalated)` since the last `reset`.
+pub fn cascade_totals() -> (u64, u64) {
+    (
+        CASCADE_BLOCKS.load(Ordering::Relaxed),
+        CASCADE_ESCALATED.load(Ordering::Relaxed),
+    )
+}
+
 /// Zero every cell (serve entry / test isolation).
 pub fn reset() {
     for c in &CELLS {
@@ -146,6 +169,8 @@ pub fn reset() {
         c.bytes.store(0, Ordering::Relaxed);
         c.nanos.store(0, Ordering::Relaxed);
     }
+    CASCADE_BLOCKS.store(0, Ordering::Relaxed);
+    CASCADE_ESCALATED.store(0, Ordering::Relaxed);
 }
 
 /// Snapshot the non-empty cells as a JSON array of rows:
@@ -231,8 +256,13 @@ mod tests {
             .expect("f32 row");
         assert_eq!(other.get("backend").unwrap().as_str(), Some("other"));
         assert_eq!(other.get("gops").unwrap().as_f64(), Some(0.0), "untimed row reports 0");
+        // cascade tallies live on the same reset cycle as the cell grid
+        record_cascade(4, 1);
+        record_cascade(1, 0);
+        assert_eq!(cascade_totals(), (5, 1));
         reset();
         assert_eq!(total_calls(), 0);
         assert!(snapshot().as_arr().unwrap().is_empty());
+        assert_eq!(cascade_totals(), (0, 0));
     }
 }

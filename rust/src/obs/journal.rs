@@ -48,6 +48,11 @@ pub enum EventKind {
     /// router over the merged latency stream); `session` carries the
     /// total deadline misses observed so far.
     SloAlert,
+    /// A cascade block breached the confidence threshold and re-ran on
+    /// the high rung.  `tier` is the tier the session decodes on (the
+    /// low rung of the pair); journaled by the router from worker tick
+    /// reports so the control plane stays single-threaded.
+    CascadeEscalate,
 }
 
 impl EventKind {
@@ -61,6 +66,7 @@ impl EventKind {
             EventKind::Backpressure => "backpressure",
             EventKind::Drain => "drain",
             EventKind::SloAlert => "slo_alert",
+            EventKind::CascadeEscalate => "cascade_escalate",
         }
     }
 
@@ -75,6 +81,7 @@ impl EventKind {
             "backpressure" => EventKind::Backpressure,
             "drain" => EventKind::Drain,
             "slo_alert" => EventKind::SloAlert,
+            "cascade_escalate" => EventKind::CascadeEscalate,
             _ => return None,
         })
     }
@@ -322,6 +329,7 @@ mod tests {
             EventKind::Backpressure,
             EventKind::Drain,
             EventKind::SloAlert,
+            EventKind::CascadeEscalate,
         ] {
             assert_eq!(EventKind::parse(k.name()), Some(k), "name/parse must stay inverse");
         }

@@ -64,6 +64,18 @@ pub struct RungInfo {
     pub bits: u32,
     /// per-group nondimensional trace norm ν(W) after truncation
     pub nu: Vec<(String, f32)>,
+    /// effective decode cost of the rung in GFLOP per raw input frame
+    /// (2 × MACs/step ÷ stride).  Derived from the stored factor dims at
+    /// build/load time — never persisted, so it can't drift from the
+    /// artifact — and the number cascade rung-pair choice reads instead
+    /// of recomputing it in `serve.rs`.
+    pub gflops_per_frame: f64,
+}
+
+/// GFLOP per raw input frame for an engine: 2 ops per MAC, spread over
+/// the frames one output step consumes.
+fn engine_gflops_per_frame(engine: &Engine) -> f64 {
+    2.0 * engine.macs_per_step() as f64 / engine.total_stride() as f64 / 1e9
 }
 
 /// Build a rank ladder from trained parameters: one int8 TNCK-v2
@@ -136,7 +148,7 @@ pub fn ladder_build_with_bits(
         // fail the offline build, not the later serve, if the source
         // checkpoint and `dims` disagree (extra/missing layers) — every
         // rung must construct a servable engine
-        Engine::from_entries(dims, &art.entries, 1)?;
+        let probe = Engine::from_entries(dims, &art.entries, 1)?;
         let file = format!("rung_{tag}.tnck");
         checkpoint::save_artifact(&art, dir.join(&file))?;
         rungs.push(RungInfo {
@@ -147,6 +159,7 @@ pub fn ladder_build_with_bits(
             bytes: art.payload_bytes(),
             bits,
             nu,
+            gflops_per_frame: engine_gflops_per_frame(&probe),
         });
     }
     write_manifest(&rungs, dir)?;
@@ -240,6 +253,7 @@ impl Registry {
                 Engine::from_entries(dims.as_ref().unwrap(), &art.entries, time_batch)?;
             engine.set_backend(backend)?;
             engine.set_fused_gates(fused);
+            info.gflops_per_frame = engine_gflops_per_frame(&engine);
             variants.push(Variant { info, engine: Arc::new(engine) });
         }
         variants.sort_by(|a, b| {
@@ -270,6 +284,67 @@ impl Registry {
     /// matter how many shards serve them.
     pub fn engines(&self) -> Vec<Arc<Engine>> {
         self.variants.iter().map(|v| v.engine.clone()).collect()
+    }
+
+    /// Resolve one side of a `--cascade LOW:HIGH` spec to a tier index:
+    /// either a rung tag (`r0250`) or a bare tier index (`1`).
+    fn resolve_rung(&self, part: &str) -> Result<usize> {
+        if let Some(t) = self.variants.iter().position(|v| v.info.tag == part) {
+            return Ok(t);
+        }
+        if let Ok(t) = part.parse::<usize>() {
+            if t < self.variants.len() {
+                return Ok(t);
+            }
+            return Err(Error::Config(format!(
+                "cascade rung '{part}': tier index out of range (ladder has {} tiers)",
+                self.variants.len()
+            )));
+        }
+        Err(Error::Config(format!(
+            "cascade rung '{part}': no rung with that tag or tier index (tags: {})",
+            self.variants.iter().map(|v| v.info.tag.as_str()).collect::<Vec<_>>().join(", ")
+        )))
+    }
+
+    /// Parse a `--cascade LOW:HIGH` rung-pair spec against this ladder.
+    /// Each side is a rung tag (`r0250`) or tier index; LOW is the rung
+    /// every block decodes on first (cheaper, *higher* tier index), HIGH
+    /// the escalation target.  Returns `(low_tier, high_tier)`.
+    pub fn cascade_pair(&self, spec: &str) -> Result<(usize, usize)> {
+        let (low_s, high_s) = spec.split_once(':').ok_or_else(|| {
+            Error::Config(format!("cascade spec '{spec}' must be LOW:HIGH (rung tags or tiers)"))
+        })?;
+        let low = self.resolve_rung(low_s.trim())?;
+        let high = self.resolve_rung(high_s.trim())?;
+        if low == high {
+            return Err(Error::Config(format!(
+                "cascade spec '{spec}': LOW and HIGH resolve to the same rung"
+            )));
+        }
+        // tier 0 is the highest-fidelity rung: the cheap decode rung must
+        // sit *deeper* in the ladder than its escalation target
+        if low < high {
+            return Err(Error::Config(format!(
+                "cascade spec '{spec}': LOW ({}, {:.1} GFLOP/frame) is costlier than \
+                 HIGH ({}, {:.1} GFLOP/frame) — swap the pair",
+                self.variants[low].info.tag,
+                self.variants[low].info.gflops_per_frame,
+                self.variants[high].info.tag,
+                self.variants[high].info.gflops_per_frame,
+            )));
+        }
+        Ok((low, high))
+    }
+
+    /// Whether two rungs share a byte-identical conv frontend.  The
+    /// frontend is never factored (§3.2) and build-time quantization is
+    /// deterministic, so rungs built from the same checkpoint at the
+    /// same weight precision carry identical frontend entries — the
+    /// cascade then reuses the low rung's frontend output on escalation
+    /// instead of recomputing it.
+    pub fn shared_frontend(&self, a: usize, b: usize) -> bool {
+        self.variants[a].info.bits == self.variants[b].info.bits
     }
 }
 
@@ -348,6 +423,7 @@ fn rung_info_from_meta(meta: &Json, file: &str) -> Result<RungInfo> {
         // pre-int4 artifacts carry no 'bits' key: they are int8
         bits: meta.get("bits").and_then(|b| b.as_f64()).map(|b| b as u32).unwrap_or(8),
         nu,
+        gflops_per_frame: 0.0, // caller derives this from the built engine
     })
 }
 

@@ -50,8 +50,8 @@ use crate::obs::{
 use crate::prng::Pcg64;
 use crate::registry::Registry;
 use crate::runtime::Runtime;
-use crate::shard::{run_sharded, sharded_arrivals, Admission};
-use crate::stream::PoolStats;
+use crate::shard::{run_sharded, run_sharded_with, sharded_arrivals, Admission};
+use crate::stream::{CascadeCfg, PoolStats, StreamPool};
 use crate::train::Evaluator;
 
 // ---------------------------------------------------------------------------
@@ -103,6 +103,96 @@ impl Default for StreamServeConfig {
             slo_actions: false,
             tick_secs: None,
         }
+    }
+}
+
+/// Cascade wiring for a ladder serve (`--cascade LOW:HIGH` resolved
+/// against the registry by [`crate::registry::Registry::cascade_pair`]):
+/// sessions admitted at `low_tier` decode through the confidence-gated
+/// cascade, escalating breached blocks to `high_tier`'s rung.
+#[derive(Clone, Copy, Debug)]
+pub struct CascadePlan {
+    /// tier every cascade block decodes on first (cheaper rung — the
+    /// *higher* tier index)
+    pub low_tier: usize,
+    /// escalation target tier (the higher-fidelity rung)
+    pub high_tier: usize,
+    /// worst-frame confidence below which a block escalates
+    pub threshold: f64,
+}
+
+/// Cascade outcome of a serve: the gate counters plus the analytic
+/// effective-FLOPs accounting the text and `--json` reports print.
+#[derive(Clone, Debug)]
+pub struct CascadeSummary {
+    /// configured escalation threshold (the controller may have steered
+    /// the live value below this under SLO pressure)
+    pub threshold: f64,
+    /// blocks that went through the confidence gate
+    pub stream_blocks: u64,
+    /// the subset that escalated to the high rung
+    pub escalated_blocks: u64,
+    /// `escalated_blocks / stream_blocks` (0 when no blocks ran)
+    pub escalation_rate: f64,
+    /// GFLOP per raw frame of pure low-rung decoding
+    pub gflops_low: f64,
+    /// GFLOP per raw frame of pure high-rung decoding
+    pub gflops_high: f64,
+    /// effective GFLOP per raw frame at the observed escalation rate:
+    /// low + rate × (high − shared frontend), the cascade's actual
+    /// compute draw
+    pub gflops_effective: f64,
+    /// escalation-threshold halvings the controller took under pressure
+    pub threshold_cuts: u64,
+    /// threshold doublings the controller took on drain
+    pub threshold_restores: u64,
+}
+
+impl CascadeSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("threshold", Json::num(self.threshold)),
+            ("stream_blocks", Json::num(self.stream_blocks as f64)),
+            ("escalated_blocks", Json::num(self.escalated_blocks as f64)),
+            ("escalation_rate", Json::num(self.escalation_rate)),
+            ("gflops_low", Json::num(self.gflops_low)),
+            ("gflops_high", Json::num(self.gflops_high)),
+            ("gflops_effective", Json::num(self.gflops_effective)),
+            ("threshold_cuts", Json::num(self.threshold_cuts as f64)),
+            ("threshold_restores", Json::num(self.threshold_restores as f64)),
+        ])
+    }
+}
+
+/// Analytic effective-FLOPs accounting for a finished cascade serve:
+/// every gated block pays the low rung; escalated blocks additionally
+/// pay the high rung, minus the conv frontend when the pair shares it
+/// (the pooled path reuses the low rung's frontend activations).
+fn cascade_summary(
+    low: &Engine,
+    cc: &CascadeCfg,
+    stats: &PoolStats,
+    threshold_cuts: u64,
+    threshold_restores: u64,
+) -> CascadeSummary {
+    let stride = low.total_stride() as f64;
+    let gflops = |macs: u64| 2.0 * macs as f64 / stride / 1e9;
+    let esc_macs = if cc.shared_frontend {
+        cc.high.macs_per_step() - cc.high.frontend_macs_per_step()
+    } else {
+        cc.high.macs_per_step()
+    };
+    let rate = stats.escalation_rate();
+    CascadeSummary {
+        threshold: cc.threshold,
+        stream_blocks: stats.stream_blocks,
+        escalated_blocks: stats.escalated_blocks,
+        escalation_rate: rate,
+        gflops_low: gflops(low.macs_per_step()),
+        gflops_high: gflops(cc.high.macs_per_step()),
+        gflops_effective: gflops(low.macs_per_step()) + rate * gflops(esc_macs),
+        threshold_cuts,
+        threshold_restores,
     }
 }
 
@@ -221,6 +311,9 @@ pub struct StreamServeReport {
     /// SLO attainment / burn-rate summary — Some only when the serve ran
     /// with `--slo-target`
     pub slo: Option<SloSummary>,
+    /// cascade gate counters and effective-FLOPs accounting — Some only
+    /// when the serve ran with `--cascade`
+    pub cascade: Option<CascadeSummary>,
 }
 
 impl StreamServeReport {
@@ -250,6 +343,9 @@ impl StreamServeReport {
                 ),
             ),
         ]);
+        if let Some(c) = &self.cascade {
+            fields.push(("cascade", c.to_json()));
+        }
         if let Some(s) = &self.slo {
             fields.push(("slo", s.to_json()));
         }
@@ -277,6 +373,19 @@ pub fn stream_serve(
     utts: &[Utterance],
     cfg: &StreamServeConfig,
 ) -> Result<StreamServeReport> {
+    stream_serve_cascade(engine, None, utts, cfg)
+}
+
+/// [`stream_serve`] with an optional confidence-gated cascade
+/// (`--cascade LOW:HIGH --escalate-threshold T`): every pool decodes on
+/// `engine` (the low rung) and re-runs breached blocks on
+/// `cascade.high`.  `None` is exactly `stream_serve`.
+pub fn stream_serve_cascade(
+    engine: Arc<Engine>,
+    cascade: Option<CascadeCfg>,
+    utts: &[Utterance],
+    cfg: &StreamServeConfig,
+) -> Result<StreamServeReport> {
     if utts.is_empty() {
         return Err(Error::other("no sessions"));
     }
@@ -297,7 +406,11 @@ pub fn stream_serve(
     let arrivals = sharded_arrivals(utts.len(), shards, cfg.arrival_rate, cfg.seed);
     let engines = [engine];
 
-    run_sharded(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, |links| {
+    let make_pool = |_tier: usize, e: Arc<Engine>| match &cascade {
+        Some(cc) => StreamPool::new(e, cfg.pool_size).with_cascade(cc.clone()),
+        None => Ok(StreamPool::new(e, cfg.pool_size)),
+    };
+    run_sharded_with(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, make_pool, |links| {
         let mut queue: VecDeque<usize> = VecDeque::new();
         let mut next = 0usize;
         let mut clock = 0.0f64;
@@ -312,9 +425,12 @@ pub fn stream_serve(
 
         // flight recorder: per-shard event rings plus one router ring
         // (index `shards`) for pre-placement events, sized once up front
-        // so the serve loop never grows them (DESIGN.md §10)
+        // so the serve loop never grows them (DESIGN.md §10).  A cascade
+        // serve journals one event per escalated block, so its rings get
+        // block-scale headroom.
         let obs_on = obs::enabled();
-        let jcap = if obs_on { 4 * utts.len() + 64 } else { 1 };
+        let per_utt = if cascade.is_some() { 32 } else { 4 };
+        let jcap = if obs_on { per_utt * utts.len() + 64 } else { 1 };
         let mut journals: Vec<Journal> =
             (0..shards + 1).map(|_| Journal::with_capacity(jcap)).collect();
         let mut exporter = match &cfg.metrics_out {
@@ -416,6 +532,17 @@ pub fn stream_serve(
                 match rep {
                     Some(mut r) => {
                         tracer.stamp_tick(clock_before, dt, &mut r.blocks, cfg.tick_secs.is_some());
+                        // cascade escalations journal on the router with
+                        // the round's clock, like every worker outcome
+                        for &(utt, tier) in &r.escalations {
+                            journals[shard].push(Event {
+                                clock,
+                                shard,
+                                session: utt,
+                                tier,
+                                kind: EventKind::CascadeEscalate,
+                            });
+                        }
                         occ[shard].record(r.occ_before.iter().sum(), dt);
                         breakdowns[shard] = r.breakdown;
                         stats[shard] = r.stats;
@@ -518,6 +645,7 @@ pub fn stream_serve(
             transcripts,
             obs: obs_report,
             slo: slo.as_ref().map(|e| e.summary()),
+            cascade: cascade.as_ref().map(|cc| cascade_summary(&engines[0], cc, &st, 0, 0)),
         })
     })
 }
@@ -562,6 +690,9 @@ pub struct LadderServeConfig {
     /// advances by exactly this every round instead of the measured wall
     /// time, making clocks — and the exported trace — deterministic
     pub tick_secs: Option<f64>,
+    /// confidence-gated cascade over one rung pair (`--cascade LOW:HIGH
+    /// --escalate-threshold T`); None serves every tier plain
+    pub cascade: Option<CascadePlan>,
 }
 
 impl Default for LadderServeConfig {
@@ -580,6 +711,7 @@ impl Default for LadderServeConfig {
             slo: None,
             slo_actions: false,
             tick_secs: None,
+            cascade: None,
         }
     }
 }
@@ -594,6 +726,9 @@ pub struct TierReport {
     pub bits: u32,
     /// scalar parameter count of the tier's variant
     pub params: usize,
+    /// effective decode cost of the tier's rung, GFLOP per raw frame
+    /// (derived from the artifact's factor dims at registry load)
+    pub gflops_per_frame: f64,
     /// sessions admitted at this tier (all shards)
     pub sessions: usize,
     /// arrival → final-transcript latency of those sessions
@@ -610,6 +745,7 @@ impl TierReport {
             ("rank_frac", Json::num(self.rank_frac)),
             ("bits", Json::num(self.bits as f64)),
             ("params", Json::num(self.params as f64)),
+            ("gflops_per_frame", Json::num(self.gflops_per_frame)),
             ("sessions", Json::num(self.sessions as f64)),
             ("latency", self.latency.to_json()),
             ("occupancy", self.occupancy.to_json()),
@@ -652,6 +788,9 @@ pub struct LadderServeReport {
     /// SLO attainment / burn-rate summary — Some only when the serve ran
     /// with `--slo-target`
     pub slo: Option<SloSummary>,
+    /// cascade gate counters and effective-FLOPs accounting — Some only
+    /// when the serve ran with `--cascade`
+    pub cascade: Option<CascadeSummary>,
 }
 
 impl LadderServeReport {
@@ -698,6 +837,9 @@ impl LadderServeReport {
                 ),
             ),
         ];
+        if let Some(c) = &self.cascade {
+            fields.push(("cascade", c.to_json()));
+        }
         if let Some(s) = &self.slo {
             fields.push(("slo", s.to_json()));
         }
@@ -750,9 +892,41 @@ pub fn ladder_serve(
     validate_obs_extras(&cfg.trace_out, &cfg.slo, cfg.slo_actions, cfg.tick_secs)?;
     let tiers = registry.num_tiers();
     let shards = cfg.shards;
+    // resolve the cascade plan against the ladder before any thread
+    // spawns: build the CascadeCfg the low tier's pools will carry
+    let cascade: Option<CascadeCfg> = match &cfg.cascade {
+        Some(plan) => {
+            if plan.low_tier >= tiers || plan.high_tier >= tiers {
+                return Err(Error::Config(format!(
+                    "cascade tiers {}:{} out of range (ladder has {tiers} tiers)",
+                    plan.low_tier, plan.high_tier
+                )));
+            }
+            if plan.low_tier <= plan.high_tier {
+                return Err(Error::Config(
+                    "cascade LOW must be a cheaper rung (higher tier index) than HIGH".into(),
+                ));
+            }
+            Some(CascadeCfg {
+                high: registry.tier(plan.high_tier).engine.clone(),
+                threshold: plan.threshold,
+                shared_frontend: registry.shared_frontend(plan.low_tier, plan.high_tier),
+            })
+        }
+        None => None,
+    };
     let mut ctls: Vec<FidelityController> = (0..shards)
         .map(|s| FidelityController::for_shard(tiers, cfg.controller.clone(), s))
         .collect::<Result<_>>()?;
+    if let Some(plan) = &cfg.cascade {
+        // the escalation threshold becomes each controller's first
+        // pressure actuator (cut before downshift, restore before
+        // upshift); the live value is propagated to the worker pools
+        // every round
+        for ctl in ctls.iter_mut() {
+            ctl.set_cascade_knob(plan.threshold);
+        }
+    }
 
     let mut rng = Pcg64::seeded(cfg.seed);
     let mut arrivals: Vec<f64> = Vec::with_capacity(utts.len());
@@ -771,7 +945,13 @@ pub fn ladder_serve(
     let backend = registry.tier(0).engine.backend_name();
     let fused_gates = registry.tier(0).engine.fused_gates();
 
-    run_sharded(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, |links| {
+    let make_pool = |tier: usize, e: Arc<Engine>| match (&cascade, &cfg.cascade) {
+        (Some(cc), Some(plan)) if tier == plan.low_tier => {
+            StreamPool::new(e, cfg.pool_size).with_cascade(cc.clone())
+        }
+        _ => Ok(StreamPool::new(e, cfg.pool_size)),
+    };
+    run_sharded_with(&engines, shards, cfg.pool_size, cfg.chunk_frames, utts, make_pool, |links| {
         let mut queue: VecDeque<usize> = VecDeque::new();
         let mut next = 0usize;
         let mut clock = 0.0f64;
@@ -787,10 +967,13 @@ pub fn ladder_serve(
         let mut shard_of_session: Vec<usize> = vec![0; utts.len()];
         let mut shard_sessions: Vec<usize> = vec![0; shards];
         let mut breakdowns: Vec<Breakdown> = vec![Breakdown::default(); shards];
+        let mut stats: Vec<PoolStats> = vec![PoolStats::default(); shards];
 
-        // flight recorder (see stream_serve): per-shard rings + router ring
+        // flight recorder (see stream_serve): per-shard rings + router
+        // ring, with block-scale headroom for cascade escalation events
         let obs_on = obs::enabled();
-        let jcap = if obs_on { 4 * utts.len() + 64 } else { 1 };
+        let per_utt = if cascade.is_some() { 32 } else { 4 };
+        let jcap = if obs_on { per_utt * utts.len() + 64 } else { 1 };
         let mut journals: Vec<Journal> =
             (0..shards + 1).map(|_| Journal::with_capacity(jcap)).collect();
         let mut exporter = match &cfg.metrics_out {
@@ -892,7 +1075,12 @@ pub fn ladder_serve(
                 continue;
             }
 
-            let reports = links.round(admissions)?;
+            // propagate each controller's live escalation threshold to
+            // its shard's cascade pools (None when no cascade is armed,
+            // which makes this exactly the plain round)
+            let thresholds: Vec<Option<f64>> =
+                ctls.iter().map(|c| c.escalation_threshold()).collect();
+            let reports = links.round_with_thresholds(admissions, &thresholds)?;
             let measured = reports.iter().flatten().map(|r| r.secs).fold(0.0, f64::max);
             busy += reports.iter().flatten().map(|r| r.secs).sum::<f64>();
             let dt = cfg.tick_secs.unwrap_or(measured);
@@ -902,10 +1090,20 @@ pub fn ladder_serve(
                 match rep {
                     Some(mut r) => {
                         tracer.stamp_tick(clock_before, dt, &mut r.blocks, cfg.tick_secs.is_some());
+                        for &(utt, tier) in &r.escalations {
+                            journals[shard].push(Event {
+                                clock,
+                                shard,
+                                session: utt,
+                                tier,
+                                kind: EventKind::CascadeEscalate,
+                            });
+                        }
                         for (o, &k) in occ[shard].iter_mut().zip(&r.occ_before) {
                             o.record(k, dt);
                         }
                         breakdowns[shard] = r.breakdown;
+                        stats[shard] = r.stats;
                         for f in r.finished {
                             let l = clock - arrivals[f.utt];
                             lat[shard][f.tier].record(l);
@@ -990,6 +1188,7 @@ pub fn ladder_serve(
                     rank_frac: v.info.rank_frac,
                     bits: v.info.bits,
                     params: v.info.params,
+                    gflops_per_frame: v.info.gflops_per_frame,
                     sessions: sessions_at[tier],
                     latency: h.summary(),
                     occupancy: o,
@@ -1028,6 +1227,24 @@ pub fn ladder_serve(
             journal_dropped: obs::journal::total_dropped(&journals),
         });
         let shift_logs: Vec<&[ShiftEvent]> = ctls.iter().map(|c| c.shifts()).collect();
+        let cascade_report = match (&cascade, &cfg.cascade) {
+            (Some(cc), Some(plan)) => {
+                let mut st = PoolStats::default();
+                for s in &stats {
+                    st.absorb(s);
+                }
+                // exactly one rung pair per serve: the folded counters
+                // are the low tier's counters (no other pool cascades)
+                Some(cascade_summary(
+                    &registry.tier(plan.low_tier).engine,
+                    cc,
+                    &st,
+                    ctls.iter().map(|c| c.threshold_cuts).sum(),
+                    ctls.iter().map(|c| c.threshold_restores).sum(),
+                ))
+            }
+            _ => None,
+        };
         Ok(LadderServeReport {
             sessions: utts.len(),
             pool_size: cfg.pool_size,
@@ -1047,6 +1264,7 @@ pub fn ladder_serve(
             breakdown: bd,
             obs: obs_report,
             slo: slo.as_ref().map(|e| e.summary()),
+            cascade: cascade_report,
         })
     })
 }
@@ -1191,6 +1409,7 @@ mod tests {
         assert_eq!(l.shards, 1);
         assert!(l.controller.low_water < l.controller.high_water);
         assert!(l.trace_out.is_none() && l.slo.is_none() && !l.slo_actions);
+        assert!(l.cascade.is_none(), "plain ladder serving is the default");
     }
 
     #[test]

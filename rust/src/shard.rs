@@ -98,10 +98,18 @@ pub struct TickReport {
     /// but not yet clock-stamped (the router does that).  Always empty
     /// with obs off — `Vec::new()` never allocates.
     pub blocks: Vec<BlockSpan>,
+    /// cascade escalations this tick as `(utt, tier)` pairs, in pump
+    /// order — the router stamps the clock and journals them
+    /// (`cascade_escalate`), keeping the journal single-threaded.
+    /// Always empty with obs off.
+    pub escalations: Vec<(usize, usize)>,
 }
 
 enum ToShard {
-    Tick(Vec<Admission>),
+    /// One round's admissions, plus an optional cascade escalation
+    /// threshold override the controller decided this tick (None = keep
+    /// the pools' current threshold).
+    Tick(Vec<Admission>, Option<f64>),
 }
 
 enum FromShard {
@@ -134,8 +142,8 @@ struct ShardWorker<'a> {
 
 impl ShardWorker<'_> {
     fn run(mut self, rx: Receiver<ToShard>, tx: SyncSender<FromShard>) {
-        while let Ok(ToShard::Tick(admissions)) = rx.recv() {
-            match self.tick(admissions) {
+        while let Ok(ToShard::Tick(admissions, threshold)) = rx.recv() {
+            match self.tick(admissions, threshold) {
                 Ok(report) => {
                     if tx.send(FromShard::Done(report)).is_err() {
                         break; // router gone
@@ -158,7 +166,14 @@ impl ShardWorker<'_> {
     /// One lock-stepped round: admit, deliver one client chunk per live
     /// session, pump every busy pool, close finished sessions.  Mirrors
     /// one iteration of the pre-shard serving loop exactly.
-    fn tick(&mut self, admissions: Vec<Admission>) -> Result<TickReport> {
+    fn tick(&mut self, admissions: Vec<Admission>, threshold: Option<f64>) -> Result<TickReport> {
+        if let Some(t) = threshold {
+            for pool in self.pools.iter_mut() {
+                if pool.cascade().is_some() {
+                    pool.set_escalation_threshold(t)?;
+                }
+            }
+        }
         for adm in &admissions {
             let id = self.pools[adm.tier].open()?;
             self.active.push(InFlight { id, utt: adm.utt, off: 0, tier: adm.tier });
@@ -213,6 +228,14 @@ impl ShardWorker<'_> {
                 self.pools[tier].pump(&mut self.bd)?;
             }
         }
+        // id -> utt snapshot before closes remove sessions from the
+        // in-flight table: close-side cascade escalations still need the
+        // mapping (slot ids are not reused until next tick's admissions)
+        let idmap: Vec<(StreamId, usize)> = if obs_on {
+            self.active.iter().map(|a| (a.id, a.utt)).collect()
+        } else {
+            Vec::new()
+        };
         let mut finished = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
@@ -230,6 +253,23 @@ impl ShardWorker<'_> {
         }
         let secs = t0.elapsed().as_secs_f64();
 
+        let mut escalations: Vec<(usize, usize)> = Vec::new();
+        for (tier, pool) in self.pools.iter_mut().enumerate() {
+            if obs_on {
+                for id in pool.escalations() {
+                    let utt = idmap
+                        .iter()
+                        .find(|(i, _)| i == id)
+                        .expect("escalated session missing from in-flight snapshot")
+                        .1;
+                    escalations.push((utt, tier));
+                }
+            }
+            // the per-tick escalation list must not grow across rounds,
+            // obs on or off
+            pool.clear_escalations();
+        }
+
         let occ_after: Vec<usize> = self.pools.iter().map(|p| p.active()).collect();
         let mut stats = PoolStats::default();
         for p in &self.pools {
@@ -244,6 +284,7 @@ impl ShardWorker<'_> {
             breakdown: self.bd,
             stats,
             blocks,
+            escalations,
         })
     }
 }
@@ -328,9 +369,25 @@ impl ShardedServer {
     /// out, i.e. it was idle with nothing admitted).
     pub fn round(
         &mut self,
+        admissions: Vec<Vec<Admission>>,
+    ) -> Result<Vec<Option<TickReport>>> {
+        let none = vec![None; admissions.len()];
+        self.round_with_thresholds(admissions, &none)
+    }
+
+    /// [`ShardedServer::round`] with a per-shard cascade escalation
+    /// threshold override: `thresholds[shard] = Some(t)` tells that
+    /// shard's cascade pools to gate at `t` from this tick on (the
+    /// controller's threshold governor under SLO pressure).  `None`
+    /// entries leave the shard's threshold alone, so plain `round` is
+    /// unchanged behavior.
+    pub fn round_with_thresholds(
+        &mut self,
         mut admissions: Vec<Vec<Admission>>,
+        thresholds: &[Option<f64>],
     ) -> Result<Vec<Option<TickReport>>> {
         assert_eq!(admissions.len(), self.shards());
+        assert_eq!(thresholds.len(), self.shards());
         let mut ticked = vec![false; self.shards()];
         for shard in 0..self.shards() {
             let adm = std::mem::take(&mut admissions[shard]);
@@ -338,7 +395,7 @@ impl ShardedServer {
                 continue;
             }
             self.txs[shard]
-                .send(ToShard::Tick(adm))
+                .send(ToShard::Tick(adm, thresholds[shard]))
                 .map_err(|_| Error::other(format!("shard {shard} worker hung up")))?;
             ticked[shard] = true;
         }
@@ -374,6 +431,32 @@ pub fn run_sharded<R>(
     utts: &[Utterance],
     router: impl FnOnce(&mut ShardedServer) -> Result<R>,
 ) -> Result<R> {
+    run_sharded_with(
+        engines,
+        shards,
+        pool_size,
+        chunk_frames,
+        utts,
+        |_, e| Ok(StreamPool::new(e, pool_size)),
+        router,
+    )
+}
+
+/// [`run_sharded`] with a pool factory: `make_pool(tier, engine)` builds
+/// each worker's per-tier pool, so a cascade serve can attach a
+/// [`crate::stream::CascadeCfg`] to the rung pools it gates while every
+/// existing caller keeps plain pools.  The factory runs on the router
+/// thread; a factory error aborts the serve (already-spawned workers
+/// exit on the dropped command channels and are joined by the scope).
+pub fn run_sharded_with<R>(
+    engines: &[Arc<Engine>],
+    shards: usize,
+    pool_size: usize,
+    chunk_frames: usize,
+    utts: &[Utterance],
+    make_pool: impl Fn(usize, Arc<Engine>) -> Result<StreamPool>,
+    router: impl FnOnce(&mut ShardedServer) -> Result<R>,
+) -> Result<R> {
     if shards == 0 {
         return Err(Error::Config("shards must be >= 1".into()));
     }
@@ -387,9 +470,14 @@ pub fn run_sharded<R>(
         for shard in 0..shards {
             let (tx_cmd, rx_cmd) = sync_channel::<ToShard>(1);
             let (tx_rep, rx_rep) = sync_channel::<FromShard>(1);
+            let pools = engines
+                .iter()
+                .enumerate()
+                .map(|(t, e)| make_pool(t, e.clone()))
+                .collect::<Result<Vec<_>>>()?;
             let worker = ShardWorker {
                 shard,
-                pools: engines.iter().map(|e| StreamPool::new(e.clone(), pool_size)).collect(),
+                pools,
                 active: Vec::new(),
                 utts,
                 chunk_frames,

@@ -43,7 +43,7 @@ use std::sync::Arc;
 use crate::data::labels_to_text;
 use crate::decoder::{greedy_step, BLANK};
 use crate::error::{Error, Result};
-use crate::infer::{gru_cell, Breakdown, Engine, Scratch, StreamState};
+use crate::infer::{block_confidence, gru_cell, Breakdown, Engine, Scratch, StreamState};
 use crate::model::ParamSet;
 use crate::obs::{self, SpanSet, Stage};
 use crate::prng::Pcg64;
@@ -53,6 +53,28 @@ use crate::tensor::Tensor;
 /// Opaque handle to a live decode session in a [`StreamPool`].
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct StreamId(u64);
+
+/// Confidence-gated cascade configuration for a [`StreamPool`]
+/// (DESIGN.md §11): every block decodes on the pool's own (low-rung)
+/// engine first; blocks whose worst-frame confidence
+/// ([`crate::infer::block_confidence`]) falls strictly below
+/// `threshold` rewind to the block-boundary hidden checkpoint and
+/// re-run on `high`.
+#[derive(Clone)]
+pub struct CascadeCfg {
+    /// the high-fidelity rung escalated blocks re-run on
+    pub high: Arc<Engine>,
+    /// worst-frame confidence below which a block escalates: 0 never
+    /// escalates (bit-identical to the low rung alone), ∞ always does
+    /// (bit-identical to the high rung alone)
+    pub threshold: f64,
+    /// both rungs share a byte-identical frontend — true within a
+    /// ladder, where conv and the output projection are never factored
+    /// (paper §3.2) and quantization is deterministic — so escalated
+    /// blocks reuse the low rung's frontend activations; false
+    /// recomputes the frontend on `high` from the saved raw chunk
+    pub shared_frontend: bool,
+}
 
 /// Lifetime counters for a pool (feeds the serving report and benches).
 #[derive(Clone, Copy, Debug, Default)]
@@ -65,6 +87,12 @@ pub struct PoolStats {
     pub pooled_rows: u64,
     pub opened: u64,
     pub closed: u64,
+    /// per-stream blocks decoded through a cascade low rung (zero unless
+    /// the pool has a [`CascadeCfg`])
+    pub stream_blocks: u64,
+    /// cascade blocks whose worst-frame confidence breached the
+    /// threshold and re-ran on the high rung
+    pub escalated_blocks: u64,
 }
 
 impl PoolStats {
@@ -78,6 +106,16 @@ impl PoolStats {
         }
     }
 
+    /// Fraction of cascade blocks that escalated to the high rung (zero
+    /// when the pool runs without a cascade).
+    pub fn escalation_rate(&self) -> f64 {
+        if self.stream_blocks == 0 {
+            0.0
+        } else {
+            self.escalated_blocks as f64 / self.stream_blocks as f64
+        }
+    }
+
     /// Fold another pool's counters into this one (cross-shard and
     /// cross-tier aggregation for the sharded serving report).
     pub fn absorb(&mut self, o: &PoolStats) {
@@ -86,6 +124,8 @@ impl PoolStats {
         self.pooled_rows += o.pooled_rows;
         self.opened += o.opened;
         self.closed += o.closed;
+        self.stream_blocks += o.stream_blocks;
+        self.escalated_blocks += o.escalated_blocks;
     }
 }
 
@@ -161,6 +201,37 @@ impl Session {
         }
         self.ready.extend(rows);
     }
+
+    /// Absorb the block left in this session's **own** scratch arena —
+    /// the cascade close path, where `run_chunk` decoded into the
+    /// session's arena instead of the pool's.  Inlines `decode_row` to
+    /// split the borrow between the scratch (read) and the decode state
+    /// (written); same collapse-repeats / drop-blanks rule.
+    fn absorb_own_block(&mut self) {
+        let Session { state, ready, prev_label, labels, steps, .. } = self;
+        let rows = state.scratch.logp();
+        *steps += rows.rows() as u64;
+        for r in 0..rows.rows() {
+            let c = greedy_step(rows.row(r));
+            if c != *prev_label && c != BLANK {
+                labels.push(c);
+            }
+            *prev_label = c;
+            ready.push(rows.row(r).to_vec());
+        }
+    }
+}
+
+/// [`Session::absorb_own_block`] with the same obs decode-span
+/// accounting as the pooled absorb sites.
+fn absorb_own_block_timed(sess: &mut Session, bd: &mut Breakdown) {
+    if obs::enabled() {
+        let t0 = std::time::Instant::now();
+        sess.absorb_own_block();
+        bd.spans.add(Stage::Decode, t0.elapsed().as_secs_f64());
+    } else {
+        sess.absorb_own_block();
+    }
 }
 
 /// The pool-level scratch arena: the single-stream [`Scratch`] buffer
@@ -182,6 +253,19 @@ struct PoolScratch {
     outs: Vec<Tensor>,
     /// the (m, H) gathered hidden matrix of the pooled recurrent GEMM
     hmat: Tensor,
+    /// per-row frontend activations of the current block — kept aside so
+    /// escalated rows re-enter the GRU stack on the high rung without
+    /// re-running the shared conv frontend (cascade pools only)
+    fronts: Vec<Tensor>,
+    /// per-row block log-prob rows: the cascade defers greedy decode
+    /// past the escalation decision, so a rewind never has to undo
+    /// decode state (cascade pools only)
+    logps: Vec<Tensor>,
+    /// per-row raw-chunk copies (cascade with an unshared frontend only)
+    raws: Vec<Vec<f32>>,
+    /// batch-row selector of the current stack pass: all rows for the
+    /// low-rung pass, then the escalated subset for the high-rung pass
+    sel: Vec<usize>,
     high_water: usize,
     grow_events: u64,
 }
@@ -195,6 +279,10 @@ impl PoolScratch {
             gxs: (0..capacity).map(|_| Tensor::default()).collect(),
             outs: (0..capacity).map(|_| Tensor::default()).collect(),
             hmat: Tensor::default(),
+            fronts: (0..capacity).map(|_| Tensor::default()).collect(),
+            logps: (0..capacity).map(|_| Tensor::default()).collect(),
+            raws: (0..capacity).map(|_| Vec::new()).collect(),
+            sel: Vec::with_capacity(capacity),
             high_water: 0,
             grow_events: 0,
         }
@@ -206,10 +294,16 @@ impl PoolScratch {
             .iter()
             .chain(&self.gxs)
             .chain(&self.outs)
+            .chain(&self.fronts)
+            .chain(&self.logps)
             .chain([&self.hmat])
             .map(|t| t.capacity() * 4)
             .sum();
-        self.eng.footprint_bytes() + tensors + self.ready.capacity() * 8
+        let raws: usize = self.raws.iter().map(|r| r.capacity() * 4).sum();
+        self.eng.footprint_bytes()
+            + tensors
+            + raws
+            + (self.ready.capacity() + self.sel.capacity()) * 8
     }
 
     fn settle(&mut self) {
@@ -232,6 +326,12 @@ pub struct StreamPool {
     scratch: PoolScratch,
     next_id: u64,
     pub stats: PoolStats,
+    /// confidence-gated escalation to a higher rung (DESIGN.md §11);
+    /// `None` keeps the single-rung fast path byte-for-byte what it was
+    cascade: Option<CascadeCfg>,
+    /// sessions that escalated since the last [`Self::clear_escalations`]
+    /// — the shard worker drains this every tick into journal events
+    escalated: Vec<StreamId>,
 }
 
 impl StreamPool {
@@ -244,7 +344,75 @@ impl StreamPool {
             scratch: PoolScratch::with_capacity(capacity),
             next_id: 0,
             stats: PoolStats::default(),
+            cascade: None,
+            escalated: Vec::with_capacity(2 * capacity),
         }
+    }
+
+    /// Configure confidence-gated cascade decoding: this pool's own
+    /// engine becomes the low rung and `cfg.high` the escalation target.
+    /// Rejects rung pairs whose layer maps disagree (a hidden-state
+    /// checkpoint must mean the same thing on both rungs) and
+    /// non-finite-ordered thresholds (`NaN`, negative).
+    pub fn set_cascade(&mut self, cfg: CascadeCfg) -> Result<()> {
+        if !self.engine.state_compatible(&cfg.high) {
+            return Err(Error::Shape(
+                "cascade rungs have incompatible layer maps (hidden widths, conv stack, \
+                 time batch and head dims must all agree)"
+                    .into(),
+            ));
+        }
+        if cfg.threshold.is_nan() || cfg.threshold < 0.0 {
+            return Err(Error::Config(format!(
+                "cascade escalation threshold must be >= 0 (got {})",
+                cfg.threshold
+            )));
+        }
+        self.cascade = Some(cfg);
+        Ok(())
+    }
+
+    /// Builder form of [`Self::set_cascade`].
+    pub fn with_cascade(mut self, cfg: CascadeCfg) -> Result<StreamPool> {
+        self.set_cascade(cfg)?;
+        Ok(self)
+    }
+
+    /// The active cascade configuration, if any.
+    pub fn cascade(&self) -> Option<&CascadeCfg> {
+        self.cascade.as_ref()
+    }
+
+    /// Retune the escalation threshold of an active cascade — the
+    /// fidelity controller's knob under SLO pressure
+    /// ([`crate::controller`]): lowering it keeps more blocks on the
+    /// cheap rung.
+    pub fn set_escalation_threshold(&mut self, threshold: f64) -> Result<()> {
+        if threshold.is_nan() || threshold < 0.0 {
+            return Err(Error::Config(format!(
+                "cascade escalation threshold must be >= 0 (got {threshold})"
+            )));
+        }
+        match &mut self.cascade {
+            Some(cc) => {
+                cc.threshold = threshold;
+                Ok(())
+            }
+            None => Err(Error::other("set_escalation_threshold: pool has no cascade configured")),
+        }
+    }
+
+    /// Sessions that escalated at least one block since the last
+    /// [`Self::clear_escalations`] (one entry per escalated block, in
+    /// decode order).
+    pub fn escalations(&self) -> &[StreamId] {
+        &self.escalated
+    }
+
+    /// Reset the escalation queue (keeps its capacity — the shard worker
+    /// calls this every tick, so the queue never grows unbounded).
+    pub fn clear_escalations(&mut self) {
+        self.escalated.clear();
     }
 
     pub fn capacity(&self) -> usize {
@@ -398,6 +566,9 @@ impl StreamPool {
     /// come from the pool-level scratch arena; the per-timestep loop
     /// performs no heap allocations in steady state.
     fn pump_block(&mut self, bd: &mut Breakdown) -> Result<usize> {
+        if self.cascade.is_some() {
+            return self.pump_block_cascade(bd);
+        }
         let StreamPool { engine, slots, scratch: ps, stats, .. } = self;
         let block_raw = engine.block_raw_len();
         ps.ready.clear();
@@ -510,6 +681,202 @@ impl StreamPool {
         Ok(produced)
     }
 
+    /// The cascade variant of [`Self::pump_block`] (DESIGN.md §11):
+    /// decode the block on the low rung with per-row block-boundary
+    /// checkpoints and **deferred** greedy decode, then re-run only the
+    /// rows whose worst-frame confidence breached the threshold on the
+    /// high rung — the escalated subset forms its own batched GEMM, so
+    /// both rungs keep the one-pooled-call-per-layer-per-timestep shape.
+    /// Deferring decode past the escalation decision is what makes the
+    /// rewind a pure hidden-state memcpy: no greedy label, collapse
+    /// state or polled row ever has to be undone.
+    fn pump_block_cascade(&mut self, bd: &mut Breakdown) -> Result<usize> {
+        let StreamPool { engine, slots, scratch: ps, stats, cascade, escalated, .. } = self;
+        let cc = cascade.as_ref().unwrap();
+        let block_raw = engine.block_raw_len();
+        ps.ready.clear();
+        for (i, s) in slots.iter().enumerate() {
+            if s.as_ref().is_some_and(|s| s.state.buf.len() >= block_raw) {
+                ps.ready.push(i);
+            }
+        }
+        if ps.ready.is_empty() {
+            return Ok(0);
+        }
+        let m = ps.ready.len();
+        let feat = engine.feat_dim();
+
+        // frontend per stream, snapping each row's hidden checkpoint
+        // before any recurrent step can move it
+        for (row, &si) in ps.ready.iter().enumerate() {
+            let sess = slots[si].as_mut().unwrap();
+            sess.state.snap_checkpoint();
+            ps.eng.chunk.resize(block_raw, 0.0);
+            ps.eng.chunk.copy_from_slice(&sess.state.buf[..block_raw]);
+            sess.state.buf.drain(..block_raw);
+            bd.frames += (block_raw / feat) as u64;
+            if !cc.shared_frontend {
+                ps.raws[row].resize(block_raw, 0.0);
+                ps.raws[row].copy_from_slice(&ps.eng.chunk);
+            }
+            let Scratch { chunk, qs, mid, a, b, .. } = &mut ps.eng;
+            engine.frontend_into(chunk, qs, mid, a, b, bd);
+            let (fr, fc) = (a.rows(), a.cols());
+            ps.fronts[row].reset(&[fr, fc]);
+            ps.fronts[row].data_mut().copy_from_slice(ps.eng.a.data());
+        }
+
+        // low-rung pass over every row; log-probs land in ps.logps
+        let mut sel = std::mem::take(&mut ps.sel);
+        sel.clear();
+        sel.extend(0..m);
+        Self::stack_and_head(engine, slots, ps, &sel, bd, stats)?;
+
+        // escalation decision — strictly-below keeps threshold 0 ==
+        // pure low rung, and every finite confidence < ∞ keeps
+        // threshold ∞ == pure high rung
+        sel.clear();
+        for row in 0..m {
+            if block_confidence(&ps.logps[row]) < cc.threshold {
+                sel.push(row);
+            }
+        }
+        if !sel.is_empty() {
+            stats.escalated_blocks += sel.len() as u64;
+            for &row in &sel {
+                let si = ps.ready[row];
+                let sess = slots[si].as_mut().unwrap();
+                // rewind is a memcpy back to the block boundary
+                sess.state.rewind_to_checkpoint();
+                escalated.push(StreamId(sess.id));
+                if !cc.shared_frontend {
+                    // rungs with different frontend weights: recompute
+                    // this row's frontend on the high rung from the
+                    // saved raw chunk
+                    ps.eng.chunk.resize(block_raw, 0.0);
+                    ps.eng.chunk.copy_from_slice(&ps.raws[row]);
+                    let Scratch { chunk, qs, mid, a, b, .. } = &mut ps.eng;
+                    cc.high.frontend_into(chunk, qs, mid, a, b, bd);
+                    let (fr, fc) = (a.rows(), a.cols());
+                    ps.fronts[row].reset(&[fr, fc]);
+                    ps.fronts[row].data_mut().copy_from_slice(ps.eng.a.data());
+                }
+            }
+            // the escalated subset re-decodes as its own batched GEMM
+            Self::stack_and_head(&cc.high, slots, ps, &sel, bd, stats)?;
+        }
+        if obs::enabled() {
+            obs::counters::record_cascade(m as u64, sel.len() as u64);
+        }
+
+        // deferred decode: absorb every row's buffered block exactly once
+        let mut produced = 0;
+        for (row, &si) in ps.ready.iter().enumerate() {
+            let sess = slots[si].as_mut().unwrap();
+            produced += ps.logps[row].rows();
+            if obs::enabled() {
+                let t3 = std::time::Instant::now();
+                sess.absorb_block(&ps.logps[row]);
+                bd.spans.add(Stage::Decode, t3.elapsed().as_secs_f64());
+            } else {
+                sess.absorb_block(&ps.logps[row]);
+            }
+        }
+        stats.blocks += 1;
+        stats.stream_blocks += m as u64;
+        ps.sel = sel;
+        ps.settle();
+        Ok(produced)
+    }
+
+    /// One GRU-stack + head pass on `engine` over the batch rows named
+    /// by `sel` (indices into `ps.ready`), reading each row's frontend
+    /// activations from `ps.fronts` and leaving its block log-prob rows
+    /// in `ps.logps` — greedy decode is the caller's job, after the
+    /// escalation decision.  The recurrent steps of all selected rows
+    /// run as one batch-|sel| GEMM per layer per timestep, exactly like
+    /// the plain pooled path (per-row activation scales keep the result
+    /// independent of the batch composition, so the threshold-∞ endpoint
+    /// is bit-identical to a pure high-rung pool).
+    fn stack_and_head(
+        engine: &Engine,
+        slots: &mut [Option<Session>],
+        ps: &mut PoolScratch,
+        sel: &[usize],
+        bd: &mut Breakdown,
+        stats: &mut PoolStats,
+    ) -> Result<()> {
+        let m = sel.len();
+        let t = engine.time_batch;
+        for &row in sel {
+            let (fr, fc) = (ps.fronts[row].rows(), ps.fronts[row].cols());
+            ps.xs[row].reset(&[fr, fc]);
+            ps.xs[row].data_mut().copy_from_slice(ps.fronts[row].data());
+        }
+        for li in 0..engine.num_gru_layers() {
+            let h_dim = engine.gru_hidden(li);
+            for &row in sel {
+                engine.nonrec_block_into(
+                    li,
+                    &ps.xs[row],
+                    &mut ps.eng.qs,
+                    &mut ps.eng.mid,
+                    &mut ps.gxs[row],
+                    bd,
+                );
+                ps.outs[row].reset(&[t, h_dim]);
+            }
+            ps.hmat.reset(&[m, h_dim]);
+            for step in 0..t {
+                for (k, &row) in sel.iter().enumerate() {
+                    let si = ps.ready[row];
+                    ps.hmat
+                        .row_mut(k)
+                        .copy_from_slice(slots[si].as_ref().unwrap().state.h[li].data());
+                }
+                engine.rec_gates_into(
+                    li,
+                    &ps.hmat,
+                    &mut ps.eng.qs,
+                    &mut ps.eng.mid,
+                    &mut ps.eng.gh,
+                    bd,
+                );
+                stats.pooled_gemms += 1;
+                stats.pooled_rows += m as u64;
+
+                let t2 = std::time::Instant::now();
+                for (k, &row) in sel.iter().enumerate() {
+                    let si = ps.ready[row];
+                    let sess = slots[si].as_mut().unwrap();
+                    gru_cell(
+                        ps.gxs[row].row(step),
+                        ps.eng.gh.row(k),
+                        sess.state.h[li].data(),
+                        ps.outs[row].row_mut(step),
+                    );
+                    sess.state.h[li].data_mut().copy_from_slice(ps.outs[row].row(step));
+                }
+                let dt = t2.elapsed().as_secs_f64();
+                bd.gates += dt;
+                if obs::enabled() {
+                    bd.spans.add(Stage::GruCell, dt);
+                }
+            }
+            for &row in sel {
+                std::mem::swap(&mut ps.xs[row], &mut ps.outs[row]);
+            }
+        }
+        for &row in sel {
+            let Scratch { qs, mid, fc_y, logp, .. } = &mut ps.eng;
+            engine.head_into(&ps.xs[row], qs, mid, fc_y, logp, bd);
+            let (lr, lc) = (logp.rows(), logp.cols());
+            ps.logps[row].reset(&[lr, lc]);
+            ps.logps[row].data_mut().copy_from_slice(logp.data());
+        }
+        Ok(())
+    }
+
     /// Close **every** live session, in slot order, returning each
     /// session's final transcript — the graceful-drain path of the
     /// sharded runtime (DESIGN.md §9): when a shard worker is told to
@@ -536,14 +903,18 @@ impl StreamPool {
         // per drained block); count them here so Breakdown::frames matches
         // the sequential engine exactly
         bd.frames += (sess.state.buf.len() / self.engine.feat_dim()) as u64;
-        let mut rows = self.engine.stream(&mut sess.state, &[], bd)?;
-        rows.extend(self.engine.flush(&mut sess.state, bd)?);
-        if obs::enabled() {
-            let t0 = std::time::Instant::now();
-            sess.absorb(rows);
-            bd.spans.add(Stage::Decode, t0.elapsed().as_secs_f64());
+        if let Some(cc) = self.cascade.clone() {
+            self.close_cascade_session(&cc, &mut sess, bd)?;
         } else {
-            sess.absorb(rows);
+            let mut rows = self.engine.stream(&mut sess.state, &[], bd)?;
+            rows.extend(self.engine.flush(&mut sess.state, bd)?);
+            if obs::enabled() {
+                let t0 = std::time::Instant::now();
+                sess.absorb(rows);
+                bd.spans.add(Stage::Decode, t0.elapsed().as_secs_f64());
+            } else {
+                sess.absorb(rows);
+            }
         }
         self.stats.closed += 1;
         Ok(ClosedSession {
@@ -552,6 +923,80 @@ impl StreamPool {
             logprob_rows: sess.ready,
             steps: sess.steps,
         })
+    }
+
+    /// Drain a closing session's remaining full blocks and padded tail
+    /// through the cascade, single-stream: the same checkpoint → low
+    /// decode → confidence → rewind + high re-run contract as the pooled
+    /// path, so the threshold endpoints stay bit-identical through end
+    /// of stream.  Escalation re-runs the chunk still staged in the
+    /// session's own arena (`run_chunk` never touches it), so the high
+    /// rung restages nothing.
+    fn close_cascade_session(
+        &mut self,
+        cc: &CascadeCfg,
+        sess: &mut Session,
+        bd: &mut Breakdown,
+    ) -> Result<()> {
+        let block_raw = self.engine.block_raw_len();
+        // remaining full blocks (close can run ahead of pump)
+        while sess.state.buf.len() >= block_raw {
+            sess.state.snap_checkpoint();
+            {
+                let StreamState { h, buf, scratch } = &mut sess.state;
+                scratch.chunk.resize(block_raw, 0.0);
+                scratch.chunk.copy_from_slice(&buf[..block_raw]);
+                buf.drain(..block_raw);
+                self.engine.run_chunk(h, scratch, bd)?;
+            }
+            Self::maybe_escalate_staged(cc, sess, bd, &mut self.stats, &mut self.escalated)?;
+            absorb_own_block_timed(sess, bd);
+        }
+        // padded tail, exactly like Engine::flush but cascaded
+        if !sess.state.buf.is_empty() {
+            sess.state.snap_checkpoint();
+            {
+                let raw_per_step = self.engine.step_raw_len();
+                let StreamState { h, buf, scratch } = &mut sess.state;
+                let steps = buf.len().div_ceil(raw_per_step);
+                scratch.chunk.resize(buf.len(), 0.0);
+                scratch.chunk.copy_from_slice(buf);
+                scratch.chunk.resize(steps * raw_per_step, 0.0);
+                buf.clear();
+                self.engine.run_chunk(h, scratch, bd)?;
+            }
+            Self::maybe_escalate_staged(cc, sess, bd, &mut self.stats, &mut self.escalated)?;
+            absorb_own_block_timed(sess, bd);
+        }
+        Ok(())
+    }
+
+    /// Confidence-check the block `run_chunk` just left in the session's
+    /// arena; on breach, rewind the hidden state and re-run the
+    /// still-staged chunk on the high rung.  The single-stream path
+    /// recomputes the frontend on the high rung unconditionally — a
+    /// tail-only cost, and bit-safe whether or not the frontend is
+    /// shared.
+    fn maybe_escalate_staged(
+        cc: &CascadeCfg,
+        sess: &mut Session,
+        bd: &mut Breakdown,
+        stats: &mut PoolStats,
+        escalated: &mut Vec<StreamId>,
+    ) -> Result<()> {
+        stats.stream_blocks += 1;
+        let esc = block_confidence(sess.state.scratch.logp()) < cc.threshold;
+        if esc {
+            stats.escalated_blocks += 1;
+            escalated.push(StreamId(sess.id));
+            sess.state.rewind_to_checkpoint();
+            let StreamState { h, scratch, .. } = &mut sess.state;
+            cc.high.run_chunk(h, scratch, bd)?;
+        }
+        if obs::enabled() {
+            obs::counters::record_cascade(1, esc as u64);
+        }
+        Ok(())
     }
 }
 

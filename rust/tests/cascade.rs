@@ -1,0 +1,402 @@
+//! Confidence-gated cascade contracts (DESIGN.md §11): the threshold
+//! endpoints must be **bit-identical** to single-rung decoding — 0 to
+//! the pure low rung, ∞ to the pure high rung — on every backend and at
+//! any shard count; checkpoint-rewind must be deterministic at any
+//! threshold; escalation events must land in the merged journal in
+//! `journal::canonical_cmp` order; and `Registry::cascade_pair` must
+//! parse tags and tier indices while rejecting malformed pairs.
+//!
+//! Both rungs come from `synthetic_params` at the *same seed*, so the
+//! unfactored conv frontend is byte-identical across the pair — the
+//! configuration the shared-frontend fast path assumes.
+
+use std::cmp::Ordering;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tracenorm::controller::ControllerConfig;
+use tracenorm::data::Utterance;
+use tracenorm::infer::{Breakdown, Engine, Precision};
+use tracenorm::kernels::BackendSel;
+use tracenorm::obs;
+use tracenorm::obs::journal::canonical_cmp;
+use tracenorm::obs::EventKind;
+use tracenorm::prng::Pcg64;
+use tracenorm::registry::{ladder_build, Registry};
+use tracenorm::runtime::{ConvDims, ModelDims};
+use tracenorm::serve::{
+    ladder_serve, stream_serve_cascade, CascadePlan, LadderServeConfig, StreamServeConfig,
+};
+use tracenorm::stream::{synthetic_params, CascadeCfg, StreamId, StreamPool};
+use tracenorm::tensor::Tensor;
+
+/// Small dims so cascade cases stay fast in debug builds; conv + two
+/// GRU layers + factored fc still exercise every checkpointed stage.
+fn tiny_dims() -> ModelDims {
+    ModelDims {
+        feat_dim: 8,
+        conv: vec![ConvDims { context: 2, dim: 12 }],
+        gru_dims: vec![10, 12],
+        fc_dim: 14,
+        vocab: 29,
+        total_stride: 2,
+    }
+}
+
+/// A rung engine at `frac`, from the shared seed every rung of the pair
+/// uses (identical conv frontends).
+fn engine_at(frac: f64, backend: BackendSel, precision: Precision) -> Arc<Engine> {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, frac, 5);
+    Arc::new(
+        Engine::from_params(&dims, "partial", &params, precision, 4)
+            .unwrap()
+            .with_backend(backend)
+            .unwrap(),
+    )
+}
+
+fn cc(high: &Arc<Engine>, threshold: f64) -> CascadeCfg {
+    CascadeCfg { high: high.clone(), threshold, shared_frontend: true }
+}
+
+fn backends() -> Vec<BackendSel> {
+    #[allow(unused_mut)]
+    let mut v = vec![BackendSel::Scalar, BackendSel::Blocked];
+    #[cfg(feature = "simd")]
+    v.push(BackendSel::Simd);
+    v
+}
+
+fn ragged_utts(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n).map(|i| Tensor::randn(&[10 + 5 * i + rng.below(8), 8], 0.7, &mut rng)).collect()
+}
+
+/// Round-robin ragged-chunk decode of every utterance through one pool;
+/// returns per-utterance (transcript, logprob rows) plus the pool stats.
+fn pool_decode(
+    mut pool: StreamPool,
+    utts: &[Tensor],
+) -> (Vec<(String, Vec<Vec<f32>>)>, tracenorm::stream::PoolStats) {
+    let ids: Vec<StreamId> = utts.iter().map(|_| pool.open().unwrap()).collect();
+    let mut off = vec![0usize; utts.len()];
+    let mut got: Vec<Option<(String, Vec<Vec<f32>>)>> = vec![None; utts.len()];
+    let mut bd = Breakdown::default();
+    let mut done = 0;
+    let mut round = 0usize;
+    while done < utts.len() {
+        for i in 0..utts.len() {
+            if got[i].is_some() {
+                continue;
+            }
+            // per-stream chunk sizes drift round to round so block
+            // boundaries land mid-chunk as often as on the edge
+            let chunk = (2 + (i + round) % 5) * 8;
+            let data = utts[i].data();
+            let end = (off[i] + chunk).min(data.len());
+            if off[i] < end {
+                pool.push_frames(ids[i], &data[off[i]..end]).unwrap();
+                off[i] = end;
+            }
+            if off[i] >= data.len() {
+                let closed = pool.close(ids[i], &mut bd).unwrap();
+                got[i] = Some((closed.transcript, closed.logprob_rows));
+                done += 1;
+            }
+        }
+        pool.pump(&mut bd).unwrap();
+        round += 1;
+    }
+    let stats = pool.stats;
+    (got.into_iter().map(Option::unwrap).collect(), stats)
+}
+
+/// Threshold 0 never escalates and is bit-identical to the pure low
+/// rung; threshold ∞ always escalates and is bit-identical to the pure
+/// high rung — per backend, transcripts *and* log-prob rows.
+#[test]
+fn threshold_endpoints_bit_identical_to_single_rung_pools() {
+    let utts = ragged_utts(4, 3);
+    for backend in backends() {
+        for precision in [Precision::Int8, Precision::F32] {
+            let low = engine_at(0.25, backend, precision);
+            let high = engine_at(0.75, backend, precision);
+            let (ref_low, _) = pool_decode(StreamPool::new(low.clone(), 4), &utts);
+            let (ref_high, _) = pool_decode(StreamPool::new(high.clone(), 4), &utts);
+
+            let pool0 =
+                StreamPool::new(low.clone(), 4).with_cascade(cc(&high, 0.0)).unwrap();
+            let (got0, st0) = pool_decode(pool0, &utts);
+            assert_eq!(got0, ref_low, "threshold 0 diverged from pure low ({backend:?})");
+            assert!(st0.stream_blocks > 0, "no blocks crossed the gate");
+            assert_eq!(st0.escalated_blocks, 0, "threshold 0 must never escalate");
+
+            let pool_inf = StreamPool::new(low.clone(), 4)
+                .with_cascade(cc(&high, f64::INFINITY))
+                .unwrap();
+            let (got_inf, st_inf) = pool_decode(pool_inf, &utts);
+            assert_eq!(
+                got_inf, ref_high,
+                "threshold inf diverged from pure high ({backend:?})"
+            );
+            assert_eq!(
+                st_inf.escalated_blocks, st_inf.stream_blocks,
+                "threshold inf must escalate every block"
+            );
+            assert!(st_inf.stream_blocks > 0);
+        }
+    }
+}
+
+/// Checkpoint/rewind is deterministic: the same workload through the
+/// same cascade yields bit-identical output and identical gate counters
+/// at every threshold, escalate-none through escalate-all.
+#[test]
+fn cascade_decode_is_deterministic_at_any_threshold() {
+    let utts = ragged_utts(4, 11);
+    let low = engine_at(0.25, BackendSel::Scalar, Precision::Int8);
+    let high = engine_at(0.75, BackendSel::Scalar, Precision::Int8);
+    for threshold in [0.0, 1e-3, 0.05, 1.0, f64::INFINITY] {
+        let run = || {
+            let pool = StreamPool::new(low.clone(), 4)
+                .with_cascade(cc(&high, threshold))
+                .unwrap();
+            pool_decode(pool, &utts)
+        };
+        let (a, sa) = run();
+        let (b, sb) = run();
+        assert_eq!(a, b, "threshold {threshold}: reruns diverged");
+        assert_eq!(sa.stream_blocks, sb.stream_blocks);
+        assert_eq!(sa.escalated_blocks, sb.escalated_blocks);
+    }
+}
+
+/// Cascade rejects incompatible rung pairs and malformed thresholds.
+#[test]
+fn cascade_rejects_incompatible_rungs_and_bad_thresholds() {
+    let low = engine_at(0.25, BackendSel::Scalar, Precision::Int8);
+    let high = engine_at(0.75, BackendSel::Scalar, Precision::Int8);
+    assert!(StreamPool::new(low.clone(), 2).with_cascade(cc(&high, f64::NAN)).is_err());
+    assert!(StreamPool::new(low.clone(), 2).with_cascade(cc(&high, -0.5)).is_err());
+
+    let mut other = tiny_dims();
+    other.gru_dims = vec![10, 16];
+    let p = synthetic_params(&other, 0.75, 5);
+    let alien =
+        Arc::new(Engine::from_params(&other, "partial", &p, Precision::Int8, 4).unwrap());
+    assert!(
+        StreamPool::new(low.clone(), 2).with_cascade(cc(&alien, 1.0)).is_err(),
+        "mismatched hidden widths must be rejected"
+    );
+
+    let mut pool = StreamPool::new(low, 2).with_cascade(cc(&high, 1.0)).unwrap();
+    assert!(pool.set_escalation_threshold(f64::NAN).is_err());
+    assert!(pool.set_escalation_threshold(-1.0).is_err());
+    assert!(pool.set_escalation_threshold(0.25).is_ok());
+    assert_eq!(pool.cascade().unwrap().threshold, 0.25);
+}
+
+fn fixed_utterances(n: usize, frames: usize, feat: usize, seed: u64) -> Vec<Utterance> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| Utterance {
+            text: String::new(),
+            labels: Vec::new(),
+            feats: Tensor::randn(&[frames, feat], 0.6, &mut rng),
+        })
+        .collect()
+}
+
+/// The serve-level endpoints, at 1, 2 and 4 shards: a cascade serve at
+/// threshold 0 reproduces the plain low-rung serve transcript for
+/// transcript, threshold ∞ the plain high-rung serve — and the summary
+/// accounting matches the gate counters.
+#[test]
+fn serve_endpoints_bit_identical_across_shard_counts() {
+    let low = engine_at(0.25, BackendSel::Auto, Precision::Int8);
+    let high = engine_at(0.75, BackendSel::Auto, Precision::Int8);
+    let utts = fixed_utterances(8, 24, 8, 19);
+    for shards in [1usize, 2, 4] {
+        let cfg = StreamServeConfig {
+            arrival_rate: 40.0,
+            pool_size: 2,
+            chunk_frames: 8,
+            shards,
+            seed: 7,
+            ..Default::default()
+        };
+        let base_low = stream_serve_cascade(low.clone(), None, &utts, &cfg).unwrap();
+        assert!(base_low.cascade.is_none(), "no cascade requested, none reported");
+        let base_high = stream_serve_cascade(high.clone(), None, &utts, &cfg).unwrap();
+
+        let c0 =
+            stream_serve_cascade(low.clone(), Some(cc(&high, 0.0)), &utts, &cfg).unwrap();
+        assert_eq!(
+            c0.transcripts, base_low.transcripts,
+            "{shards} shard(s): threshold 0 diverged from pure low serve"
+        );
+        let s0 = c0.cascade.expect("cascade summary missing");
+        assert_eq!(s0.escalated_blocks, 0);
+        assert_eq!(s0.escalation_rate, 0.0);
+        assert!(s0.stream_blocks > 0);
+        assert_eq!(s0.gflops_effective, s0.gflops_low, "rate 0 serves at low-rung cost");
+
+        let cinf =
+            stream_serve_cascade(low.clone(), Some(cc(&high, f64::INFINITY)), &utts, &cfg)
+                .unwrap();
+        assert_eq!(
+            cinf.transcripts, base_high.transcripts,
+            "{shards} shard(s): threshold inf diverged from pure high serve"
+        );
+        let sinf = cinf.cascade.expect("cascade summary missing");
+        assert_eq!(sinf.escalated_blocks, sinf.stream_blocks);
+        assert_eq!(sinf.escalation_rate, 1.0);
+        assert!(sinf.gflops_high > sinf.gflops_low, "rung pair must differ in cost");
+        assert!(sinf.gflops_effective > sinf.gflops_low);
+    }
+}
+
+/// Escalation events land in the merged journal in canonical order,
+/// one per escalated block, shard-tagged — and under a fixed tick the
+/// whole journal is identical run to run.
+#[test]
+fn escalation_events_journal_in_canonical_order() {
+    let low = engine_at(0.25, BackendSel::Auto, Precision::Int8);
+    let high = engine_at(0.75, BackendSel::Auto, Precision::Int8);
+    let utts = fixed_utterances(6, 24, 8, 23);
+    let run = || {
+        obs::reset_process_metrics();
+        obs::set_enabled(true);
+        let cfg = StreamServeConfig {
+            arrival_rate: 40.0,
+            pool_size: 2,
+            chunk_frames: 8,
+            shards: 2,
+            seed: 9,
+            tick_secs: Some(0.002),
+            ..Default::default()
+        };
+        let r = stream_serve_cascade(low.clone(), Some(cc(&high, f64::INFINITY)), &utts, &cfg)
+            .unwrap();
+        obs::set_enabled(false);
+        r
+    };
+    let r = run();
+    let journal = r.obs.expect("obs report missing").journal;
+    assert!(
+        journal.windows(2).all(|w| canonical_cmp(&w[0], &w[1]) != Ordering::Greater),
+        "merged journal violates canonical_cmp order"
+    );
+    let esc: Vec<_> =
+        journal.iter().filter(|e| e.kind == EventKind::CascadeEscalate).collect();
+    let summary = r.cascade.expect("cascade summary missing");
+    assert_eq!(
+        esc.len() as u64,
+        summary.escalated_blocks,
+        "one journal event per escalated block"
+    );
+    assert!(!esc.is_empty(), "threshold inf with traffic must escalate");
+    for e in &esc {
+        assert_eq!(e.kind.name(), "cascade_escalate");
+        assert!(e.shard < 2, "escalation events are shard-tagged");
+        assert_eq!(e.tier, 0, "single-rung serve decodes on tier 0");
+        assert!(e.session < utts.len());
+    }
+
+    let j2 = run().obs.expect("obs report missing").journal;
+    let j3 = run().obs.expect("obs report missing").journal;
+    assert_eq!(j2, j3, "fixed-tick cascade journal must be identical run to run");
+}
+
+fn temp_ladder_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tncascade-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `cascade_pair` accepts rung tags and tier indices (whitespace
+/// tolerated), and rejects same-rung, swapped, unknown and out-of-range
+/// specs; rung metadata carries a positive, fidelity-ordered
+/// GFLOP/frame figure and same-bits rungs share a frontend.
+#[test]
+fn registry_cascade_pair_parses_tags_and_indices() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 5);
+    let dir = temp_ladder_dir("pair");
+    ladder_build(&params, &dims, &[0.5, 0.25], &dir).unwrap();
+    let reg = Registry::load(&dir, 4).unwrap();
+
+    assert_eq!(reg.cascade_pair("r0250:r0500").unwrap(), (1, 0));
+    assert_eq!(reg.cascade_pair("1:0").unwrap(), (1, 0));
+    assert_eq!(reg.cascade_pair(" 1 : r0500 ").unwrap(), (1, 0));
+
+    for bad in ["r0500:r0250", "0:0", "1:1", "zzz:0", "5:0", "1:9", "r0500", ""] {
+        assert!(reg.cascade_pair(bad).is_err(), "spec '{bad}' must be rejected");
+    }
+
+    let v = reg.variants();
+    assert!(v.iter().all(|v| v.info.gflops_per_frame > 0.0));
+    assert!(
+        v[0].info.gflops_per_frame > v[1].info.gflops_per_frame,
+        "tier 0 is the costlier rung"
+    );
+    assert!(reg.shared_frontend(0, 1), "same-bits rungs share the conv frontend");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Ladder serving with a cascade plan: low-tier sessions run the gate
+/// (threshold ∞ escalates every block), escalations are journaled on
+/// the low tier, and the ∞-threshold knob never blocks the ramp's
+/// fidelity downshift.
+#[test]
+fn ladder_cascade_escalates_and_journals_on_the_low_tier() {
+    let dims = tiny_dims();
+    let params = synthetic_params(&dims, 1.0, 8);
+    let dir = temp_ladder_dir("serve");
+    ladder_build(&params, &dims, &[0.5, 0.125], &dir).unwrap();
+    let reg = Registry::load(&dir, 2).unwrap();
+
+    // the occupancy-driven burst/trickle workload from the controller
+    // ramp test: the burst spills sessions onto tier 1 — the cascade's
+    // low rung — and the trickle drains back to tier 0
+    let utts = fixed_utterances(12, 16, 8, 9);
+    obs::reset_process_metrics();
+    obs::set_enabled(true);
+    let cfg = LadderServeConfig {
+        base_rate: 1e-3,
+        ramp_rate: 1e9,
+        ramp_range: (0, 8),
+        pool_size: 2,
+        chunk_frames: 2,
+        shards: 1,
+        seed: 3,
+        controller: ControllerConfig {
+            target_p99: 1e9,
+            high_water: 0.95,
+            low_water: 0.5,
+            breach_ticks: 2,
+            clear_ticks: 2,
+            window: 32,
+        },
+        cascade: Some(CascadePlan { low_tier: 1, high_tier: 0, threshold: f64::INFINITY }),
+        ..Default::default()
+    };
+    let r = ladder_serve(&reg, &utts, &cfg).unwrap();
+    obs::set_enabled(false);
+
+    assert!(r.downshifts >= 1, "an infinite knob must not absorb the ramp");
+    let c = r.cascade.expect("cascade summary missing from ladder report");
+    assert!(c.stream_blocks > 0, "tier-1 sessions must cross the gate");
+    assert_eq!(c.escalated_blocks, c.stream_blocks);
+    assert_eq!(c.escalation_rate, 1.0);
+    assert!(c.gflops_high > c.gflops_low);
+
+    let journal = r.obs.expect("obs report missing").journal;
+    assert!(journal.windows(2).all(|w| canonical_cmp(&w[0], &w[1]) != Ordering::Greater));
+    let esc: Vec<_> =
+        journal.iter().filter(|e| e.kind == EventKind::CascadeEscalate).collect();
+    assert_eq!(esc.len() as u64, c.escalated_blocks);
+    assert!(esc.iter().all(|e| e.tier == 1), "escalations journal on the low rung's tier");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

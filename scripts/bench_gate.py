@@ -1,13 +1,17 @@
 #!/usr/bin/env python3
-"""Tolerance gate for the GEMM bench sweep.
+"""Tolerance gate for the bench sweeps.
 
-Usage: bench_gate.py BASELINE.json BENCH_gemm.json [tolerance]
+Usage: bench_gate.py BASELINE.json CURRENT.json [tolerance]
 
-Compares every (backend, kind, m) row of the current sweep against the
-committed baseline.  Throughput rows (``gops``, higher is better) may not
-regress below ``(1 - tol) * baseline``; latency-style scalars whose key
-ends in ``_secs`` or ``_ms`` (lower is better) may not exceed
-``(1 + tol) * baseline``.  Improvements never fail the gate.
+Compares every row of the current sweep against the committed baseline.
+GEMM rows are keyed by (backend, kind, m); cascade rows (DESIGN.md §11)
+by (pair, threshold).  Higher-is-better row metrics (``gops``,
+``flops_reduction_vs_high``) may not regress below
+``(1 - tol) * baseline``; latency-style scalars whose key ends in
+``_secs`` or ``_ms`` (lower is better) may not exceed
+``(1 + tol) * baseline``, and top-level scalars ending in ``_reduction``
+(higher is better) may not fall below ``(1 - tol) * baseline``.
+Improvements never fail the gate.
 
 The baseline starts life as ``{"pending": true}`` (no toolchain on the
 machine that authored it); the gate then passes with a warning so CI
@@ -27,11 +31,25 @@ def load(path):
         return json.load(f)
 
 
+def row_key(r):
+    if "backend" in r and "kind" in r and "m" in r:
+        return (r["backend"], r["kind"], int(r["m"]))
+    if "pair" in r and "threshold" in r:
+        return (r["pair"], str(r["threshold"]))
+    return None
+
+
 def rows_by_key(report):
     out = {}
     for r in report.get("results", []):
-        out[(r["backend"], r["kind"], int(r["m"]))] = r
+        key = row_key(r)
+        if key is not None:
+            out[key] = r
     return out
+
+
+# per-row throughput-style metrics: higher is better
+ROW_METRICS = ("gops", "flops_reduction_vs_high")
 
 
 def main(argv):
@@ -62,25 +80,33 @@ def main(argv):
         if cur is None:
             failures.append(f"{key}: row missing from current sweep")
             continue
-        compared += 1
-        b, c = base["gops"], cur["gops"]
-        if b > 0 and c < (1.0 - tol) * b:
-            failures.append(f"{key}: gops {c:.3f} < {(1.0 - tol) * b:.3f} "
-                            f"(baseline {b:.3f}, tol {tol:.0%})")
+        for metric in ROW_METRICS:
+            if metric not in base:
+                continue
+            compared += 1
+            b, c = base[metric], cur.get(metric, 0.0)
+            if b > 0 and c < (1.0 - tol) * b:
+                failures.append(f"{key}: {metric} {c:.3f} < {(1.0 - tol) * b:.3f} "
+                                f"(baseline {b:.3f}, tol {tol:.0%})")
 
-    # top-level lower-is-better scalars (pack costs etc.)
+    # top-level scalars: *_secs / *_ms lower is better (pack costs etc.),
+    # *_reduction higher is better (the cascade matched-CER figure)
     for k, b in baseline.items():
         if not isinstance(b, (int, float)) or isinstance(b, bool):
-            continue
-        if not (k.endswith("_secs") or k.endswith("_ms")):
             continue
         c = current.get(k)
         if c is None:
             continue
-        compared += 1
-        if b > 0 and c > (1.0 + tol) * b:
-            failures.append(f"{k}: {c:.6f} > {(1.0 + tol) * b:.6f} "
-                            f"(baseline {b:.6f}, tol {tol:.0%})")
+        if k.endswith("_secs") or k.endswith("_ms"):
+            compared += 1
+            if b > 0 and c > (1.0 + tol) * b:
+                failures.append(f"{k}: {c:.6f} > {(1.0 + tol) * b:.6f} "
+                                f"(baseline {b:.6f}, tol {tol:.0%})")
+        elif k.endswith("_reduction"):
+            compared += 1
+            if b > 0 and c < (1.0 - tol) * b:
+                failures.append(f"{k}: {c:.3f} < {(1.0 - tol) * b:.3f} "
+                                f"(baseline {b:.3f}, tol {tol:.0%})")
 
     if failures:
         print(f"bench gate: {len(failures)} regression(s) past the {tol:.0%} band:")

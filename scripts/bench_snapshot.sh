@@ -26,6 +26,18 @@ cp "$tmp" "$out"
 echo "wrote baseline to $out"
 echo "commit it so scripts/bench_gate.py arms the CI tolerance gate"
 
+# Cascade CER-vs-effective-FLOPs curve (DESIGN.md §11): full iteration
+# counts, committed next to the baseline so the matched-CER FLOPs
+# reduction (acceptance floor 1.5x) is tracked across commits.
+cascade_out="$(cd .. && pwd)/BENCH_cascade.json"
+echo "==> cascade sweep (CER vs effective FLOPs per rung pair)"
+BENCH_CASCADE_JSON="$cascade_out" cargo bench --bench cascade "$@"
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m json.tool "$cascade_out" >/dev/null \
+    || { echo "cascade sweep emitted invalid JSON"; exit 1; }
+fi
+echo "wrote cascade curve to $cascade_out"
+
 # Alongside the kernel baseline, record a flight-recorder span snapshot:
 # a short obs-on serve whose JSONL metrics stream (stage self-time
 # breakdown + kernel counters, DESIGN.md §10) lands next to the baseline

@@ -150,6 +150,39 @@ echo "$report" | grep -q "tier 0" || { echo "ladder smoke: per-tier report missi
 echo "$report" | grep -q "tier 1" || { echo "ladder smoke: per-tier report missing tier 1"; exit 1; }
 echo "$report" | grep -q "fidelity shifts" || { echo "ladder smoke: shift summary missing"; exit 1; }
 
+echo "==> cascade smoke: 2-rung ladder + confidence-gated cascade serve"
+# The cascade decodes low-tier blocks on the cheap rung and escalates
+# low-confidence blocks to the high rung (DESIGN.md §11).  Both builds
+# must serve end to end, print the escalation-rate line, and emit a
+# valid --json report with the cascade summary; the plain (synthetic
+# rank-fraction pair) form must run too.
+cargo run --release -q -- ladder-build --out "$ldir-casc" --fracs 0.5,0.25 --seed 7
+for build in "" "--features simd"; do
+  crep="$(cargo run --release -q $build -- stream-serve --ladder "$ldir-casc" \
+    --cascade 1:0 --escalate-threshold inf --utts 8 --ramp-utts 6 --ramp-rate 1000000 \
+    --rate 0.001 --pool 2 --chunk 8 --seed 7)"
+  echo "$crep" | grep -q "escalation-rate" \
+    || { echo "cascade smoke: escalation-rate line missing (build='$build')"; exit 1; }
+  echo "$crep" | grep -q "GFLOP/frame" \
+    || { echo "cascade smoke: effective-FLOPs line missing (build='$build')"; exit 1; }
+  cjson="$(cargo run --release -q $build -- stream-serve --ladder "$ldir-casc" \
+    --cascade 1:0 --escalate-threshold inf --utts 8 --ramp-utts 6 --ramp-rate 1000000 \
+    --rate 0.001 --pool 2 --chunk 8 --seed 7 --json)"
+  echo "$cjson" | grep -q '"cascade"' \
+    || { echo "cascade smoke: --json report missing the cascade block (build='$build')"; exit 1; }
+  echo "$cjson" | grep -q '"escalation_rate"' \
+    || { echo "cascade smoke: --json cascade block missing escalation_rate (build='$build')"; exit 1; }
+  if command -v python3 >/dev/null 2>&1; then
+    echo "$cjson" | python3 -m json.tool >/dev/null \
+      || { echo "cascade smoke: --json output is not valid JSON (build='$build')"; exit 1; }
+  fi
+done
+pcrep="$(cargo run --release -q -- stream-serve --cascade 0.25:0.75 --escalate-threshold 0.1 \
+  --utts 6 --rate 1000 --pool 2 --chunk 8 --seed 7)"
+echo "$pcrep" | grep -q "escalation-rate" \
+  || { echo "cascade smoke: plain-path escalation-rate line missing"; exit 1; }
+rm -rf "$ldir-casc"
+
 echo "==> trace/SLO smoke: --trace-out + --slo-target + obs-report round trip"
 # A fixed-tick ladder serve writes both a Perfetto trace and a JSONL;
 # obs-report must replay the JSONL into the same summary tables and
@@ -176,8 +209,8 @@ cmp -s "$ndir/trace.json" "$ndir/trace2.json" \
 
 echo "==> bench smoke (1 iteration each)"
 # so the emit checks below cannot pass on stale files
-rm -f BENCH_gemm.json BENCH_train.json BENCH_shard.json
-for b in gemm linalg streaming stream_pool shard ladder coordinator train; do
+rm -f BENCH_gemm.json BENCH_train.json BENCH_shard.json BENCH_cascade.json
+for b in gemm linalg streaming stream_pool shard ladder coordinator train cascade; do
   echo "--- bench $b"
   BENCH_SMOKE=1 cargo bench --bench "$b"
 done
@@ -200,6 +233,15 @@ grep -q '"kind": "ctc"' BENCH_train.json \
 test -f BENCH_shard.json || { echo "shard bench did not emit BENCH_shard.json"; exit 1; }
 grep -q '"shards": 4' BENCH_shard.json \
   || { echo "BENCH_shard.json missing the 4-shard sweep row"; exit 1; }
+test -f BENCH_cascade.json || { echo "cascade bench did not emit BENCH_cascade.json"; exit 1; }
+grep -q '"matched_cer_flops_reduction"' BENCH_cascade.json \
+  || { echo "BENCH_cascade.json missing the matched-CER reduction figure"; exit 1; }
+grep -q '"gflops_effective"' BENCH_cascade.json \
+  || { echo "BENCH_cascade.json missing the effective-FLOPs curve rows"; exit 1; }
+if command -v python3 >/dev/null 2>&1; then
+  python3 -m json.tool BENCH_cascade.json >/dev/null \
+    || { echo "BENCH_cascade.json is not valid JSON"; exit 1; }
+fi
 
 echo "==> bench tolerance gate vs BENCH_BASELINE.json"
 # Smoke-mode numbers are noisy; the gate uses a wide tolerance and is
@@ -207,6 +249,10 @@ echo "==> bench tolerance gate vs BENCH_BASELINE.json"
 if command -v python3 >/dev/null 2>&1; then
   python3 ../scripts/bench_gate.py ../BENCH_BASELINE.json BENCH_gemm.json \
     || { echo "bench gate failed"; exit 1; }
+  # the cascade curve gates against its own committed snapshot (absent
+  # until bench_snapshot.sh runs on real hardware -> PASS with a note)
+  python3 ../scripts/bench_gate.py ../BENCH_cascade.json BENCH_cascade.json \
+    || { echo "cascade bench gate failed"; exit 1; }
 else
   echo "BENCH GATE UNARMED: python3 unavailable; skipping bench gate"
 fi
